@@ -1,0 +1,96 @@
+"""AOT pipeline: train (if needed) → lower to HLO text → artifacts/.
+
+Outputs (all consumed by the Rust runtime; none require Python at
+run time):
+
+* ``artifacts/dtree.txt``      — flattened tree (native Rust evaluator)
+* ``artifacts/mlp.txt``        — MLP weights (native evaluation / debug)
+* ``artifacts/dtree.hlo.txt``  — classifier XLA program, f32[16,4] → i32[16]
+* ``artifacts/decider.hlo.txt``— fused classify+regress program
+* ``artifacts/MANIFEST``       — shapes and provenance
+
+HLO *text*, not ``.serialize()`` — xla_extension 0.5.1 rejects jax≥0.5
+protos (64-bit instruction ids); the text parser reassigns ids.
+
+Usage: ``cd python && python -m compile.aot --out-dir ../artifacts``
+"""
+
+import argparse
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import tree_io
+from .model import ARTIFACT_BATCH, lower_to_hlo_text, make_classifier, make_decider
+
+
+def ensure_trained(out_dir, csv):
+    """Run the trainer if the model artifacts are missing."""
+    dtree = os.path.join(out_dir, "dtree.txt")
+    mlp = os.path.join(out_dir, "mlp.txt")
+    if not (os.path.exists(dtree) and os.path.exists(mlp)):
+        subprocess.run(
+            [sys.executable, "-m", "compile.train", "--csv", csv, "--out-dir", out_dir],
+            check=True,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        )
+    with open(dtree) as f:
+        tree = tree_io.FlatTree.from_text(f.read())
+    with open(mlp) as f:
+        mlp_params = tree_io.mlp_from_text(f.read())
+    return tree, mlp_params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--csv", default="../data/training.csv")
+    ap.add_argument("--batch", type=int, default=ARTIFACT_BATCH)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    tree, mlp_params = ensure_trained(args.out_dir, args.csv)
+    x_spec = jnp.zeros((args.batch, tree_io.N_FEATURES), dtype=jnp.float32)
+
+    classifier = make_classifier(tree)
+    hlo = lower_to_hlo_text(classifier, x_spec)
+    with open(os.path.join(args.out_dir, "dtree.hlo.txt"), "w") as f:
+        f.write(hlo)
+    print(f"dtree.hlo.txt: {len(hlo)} chars (batch={args.batch})")
+
+    decider = make_decider(tree, mlp_params)
+    hlo2 = lower_to_hlo_text(decider, x_spec)
+    with open(os.path.join(args.out_dir, "decider.hlo.txt"), "w") as f:
+        f.write(hlo2)
+    print(f"decider.hlo.txt: {len(hlo2)} chars")
+
+    # Quick numerical self-check against the flat-tree oracle before the
+    # artifact ships.
+    rng = np.random.default_rng(0)
+    x = tree_io.encode_features(
+        rng.integers(1, 65, args.batch),
+        10 ** rng.uniform(0, 7, args.batch),
+        10 ** rng.uniform(1, 8, args.batch),
+        rng.uniform(0, 100, args.batch),
+    )
+    got = np.asarray(classifier(jnp.asarray(x))[0])
+    want = tree.predict(x)
+    assert (got == want).all(), "classifier kernel disagrees with oracle"
+
+    with open(os.path.join(args.out_dir, "MANIFEST"), "w") as f:
+        f.write(
+            "smartpq artifacts v1\n"
+            f"batch {args.batch}\n"
+            f"features {tree_io.N_FEATURES}\n"
+            f"tree_nodes {tree.n_nodes}\n"
+            f"tree_depth {tree.depth()}\n"
+            "programs dtree.hlo.txt decider.hlo.txt\n"
+        )
+    print("artifacts OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""L1 Pallas kernel: batched decision-tree inference.
+
+The tree is flattened into five arrays (same layout as
+``artifacts/dtree.txt`` and the Rust ``classifier::tree`` module). The
+kernel unrolls ``depth`` gather/select steps — a branch-free formulation
+that maps to pure vector ops.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): there is no matmul
+here, so the MXU is irrelevant; the kernel is VPU-bound. The batch is
+tiled with a BlockSpec so each block's working set (block×F features +
+the whole node table, a few KB) fits VMEM; the node arrays are small
+enough to be replicated per block. ``interpret=True`` everywhere — the
+CPU PJRT plugin cannot execute Mosaic custom-calls (see
+/opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default batch tile. 128 rows × 4 features × 4 B = 2 KB per block of
+# input — comfortably inside VMEM next to the node table.
+BLOCK_B = 128
+
+
+def _dtree_kernel(x_ref, feat_ref, thr_ref, left_ref, right_ref, cls_ref, o_ref, *, depth):
+    x = x_ref[...]  # [Bb, F]
+    feature = feat_ref[...]  # [N]
+    threshold = thr_ref[...]
+    left = left_ref[...]
+    right = right_ref[...]
+    leaf_class = cls_ref[...]
+    b = x.shape[0]
+    idx = jnp.zeros((b,), dtype=jnp.int32)
+    for _ in range(depth):
+        f = feature[idx]
+        is_leaf = f < 0
+        t = threshold[idx]
+        fx = jnp.take_along_axis(x, jnp.maximum(f, 0)[:, None], axis=1)[:, 0]
+        go_left = fx <= t
+        nxt = jnp.where(go_left, left[idx], right[idx])
+        idx = jnp.where(is_leaf, idx, nxt)
+    o_ref[...] = leaf_class[idx].astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("depth", "block_b"))
+def dtree_predict(x, feature, threshold, left, right, leaf_class, depth=12, block_b=BLOCK_B):
+    """Predict classes for a batch of encoded feature vectors.
+
+    Pads the batch up to a multiple of ``block_b``, tiles it over a 1-D
+    grid, and replicates the (small) node table into every block.
+    """
+    b, f = x.shape
+    n = feature.shape[0]
+    padded = ((b + block_b - 1) // block_b) * block_b
+    if padded != b:
+        x = jnp.pad(x, ((0, padded - b), (0, 0)))
+    grid = (padded // block_b,)
+    out = pl.pallas_call(
+        functools.partial(_dtree_kernel, depth=depth),
+        out_shape=jax.ShapeDtypeStruct((padded,), jnp.int32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, f), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
+        interpret=True,
+    )(x, feature, threshold, left, right, leaf_class)
+    return out[:b]

@@ -1,0 +1,54 @@
+"""L1 Pallas kernel: fused 2-layer MLP (throughput regressor).
+
+Predicts per-mode log-throughput from the encoded workload features —
+used by SmartPQ's extended decision logic (DESIGN.md: the neutral band
+can be derived from predicted |throughput gap| instead of a fixed
+training-time threshold).
+
+Hardware adaptation: the two matmuls are fused into one kernel so the
+hidden activations never leave VMEM; on a real TPU the (F×H)·(H×O)
+weights would be padded to MXU tiles — at F=4, H=16 this is latency-,
+not throughput-bound, so the fusion (one HBM round-trip) is the win.
+``interpret=True`` for CPU-PJRT executability.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_B = 128
+
+
+def _mlp_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    x = x_ref[...]
+    h = jnp.tanh(x @ w1_ref[...] + b1_ref[...][None, :])
+    o_ref[...] = h @ w2_ref[...] + b2_ref[...][None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def mlp_predict(x, w1, b1, w2, b2, block_b=BLOCK_B):
+    """Fused forward pass over a batch, tiled on the batch dimension."""
+    b, f = x.shape
+    h = w1.shape[1]
+    o = w2.shape[1]
+    padded = ((b + block_b - 1) // block_b) * block_b
+    if padded != b:
+        x = jnp.pad(x, ((0, padded - b), (0, 0)))
+    grid = (padded // block_b,)
+    out = pl.pallas_call(
+        _mlp_kernel,
+        out_shape=jax.ShapeDtypeStruct((padded, o), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, f), lambda i: (i, 0)),
+            pl.BlockSpec((f, h), lambda i: (0, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+            pl.BlockSpec((h, o), lambda i: (0, 0)),
+            pl.BlockSpec((o,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_b, o), lambda i: (i, 0)),
+        interpret=True,
+    )(x, w1, b1, w2, b2)
+    return out[:b]

@@ -1,0 +1,52 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the ground truth the kernels are validated against in
+``python/tests`` (and transitively what the Rust native evaluator must
+agree with — the artifact embeds the same arrays).
+"""
+
+import jax.numpy as jnp
+
+
+def dtree_ref(x, feature, threshold, left, right, leaf_class, depth):
+    """Batched decision-tree inference, reference implementation.
+
+    Args:
+      x: f32[B, F] feature vectors (already encoded: threads,
+         log2(1+size), log2(1+key_range), insert_pct).
+      feature: i32[N] split feature per node, -1 at leaves.
+      threshold: f32[N] split thresholds.
+      left / right: i32[N] child indices (-1 at leaves).
+      leaf_class: i32[N] class at leaves (-1 internally).
+      depth: static int — number of descent steps to unroll (>= tree
+        depth; extra steps are no-ops at leaves).
+
+    Returns:
+      i32[B] predicted class per row (0 neutral / 1 oblivious / 2 aware).
+    """
+    b = x.shape[0]
+    idx = jnp.zeros((b,), dtype=jnp.int32)
+    for _ in range(depth):
+        f = feature[idx]  # i32[B]
+        is_leaf = f < 0
+        t = threshold[idx]
+        # Gather the split feature value; clamp leaf rows to feature 0.
+        fx = jnp.take_along_axis(x, jnp.maximum(f, 0)[:, None], axis=1)[:, 0]
+        go_left = fx <= t
+        nxt = jnp.where(go_left, left[idx], right[idx])
+        idx = jnp.where(is_leaf, idx, nxt)
+    return leaf_class[idx].astype(jnp.int32)
+
+
+def mlp_ref(x, w1, b1, w2, b2):
+    """Two-layer MLP (tanh hidden) predicting per-mode log-throughput.
+
+    Args:
+      x: f32[B, F] encoded features.
+      w1: f32[F, H]; b1: f32[H]; w2: f32[H, O]; b2: f32[O].
+
+    Returns:
+      f32[B, O] — O=2: predicted log2(Mops) for (oblivious, aware).
+    """
+    h = jnp.tanh(x @ w1 + b1)
+    return h @ w2 + b2

@@ -1,0 +1,85 @@
+"""L2: the decision model as a jax computation calling the L1 kernels.
+
+Two entry points, both AOT-lowered by ``aot.py``:
+
+* ``make_classifier(tree)`` — batched mode classification. The tree's
+  node arrays are *embedded as constants* (they are model weights, not
+  runtime inputs), so the Rust runtime only feeds feature batches.
+* ``make_decider(tree, mlp)`` — the full decision step: classify AND
+  regress per-mode throughput; returns (class, predicted log-mops) so
+  the coordinator can apply gap-based hysteresis (§Discussion).
+
+Python is build-time only: these functions exist to be lowered once to
+HLO text and executed from Rust through PJRT.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.dtree import dtree_predict
+from .kernels.mlp import mlp_predict
+
+# The fixed batch the artifact is compiled for; the Rust runtime pads.
+ARTIFACT_BATCH = 16
+
+
+def make_classifier(tree, depth=None):
+    """Build `f(x: f32[B,4]) -> i32[B]` with the tree baked in."""
+    feature = jnp.asarray(tree.feature)
+    threshold = jnp.asarray(tree.threshold)
+    left = jnp.asarray(tree.left)
+    right = jnp.asarray(tree.right)
+    leaf_class = jnp.asarray(tree.leaf_class)
+    d = depth or max(tree.depth(), 1)
+
+    def classify(x):
+        return (
+            dtree_predict(
+                x, feature, threshold, left, right, leaf_class, depth=d, block_b=x.shape[0]
+            ),
+        )
+
+    return classify
+
+
+def make_regressor(mlp_params):
+    """Build `f(x: f32[B,4]) -> f32[B,2]` (per-mode log2-Mops)."""
+    w1, b1, w2, b2 = (jnp.asarray(a) for a in mlp_params)
+
+    def regress(x):
+        return (mlp_predict(x, w1, b1, w2, b2, block_b=x.shape[0]),)
+
+    return regress
+
+
+def make_decider(tree, mlp_params, depth=None):
+    """Build the fused decision step: classes + throughput predictions."""
+    classify = make_classifier(tree, depth)
+    regress = make_regressor(mlp_params)
+
+    def decide(x):
+        (classes,) = classify(x)
+        (mops,) = regress(x)
+        return classes, mops
+
+    return decide
+
+
+def lower_to_hlo_text(fn, *example_args):
+    """Lower a jitted function to HLO *text* — the interchange format the
+    `xla` crate (xla_extension 0.5.1) can parse; jax ≥ 0.5 serialized
+    protos are rejected (64-bit instruction ids). See
+    /opt/xla-example/README.md."""
+    from jax._src.lib import xla_client as xc
+
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default printer elides big constant
+    # arrays as `{...}`, which the Rust-side HLO text parser would read as
+    # *empty* — the embedded tree/MLP weights must survive the round trip.
+    text = comp.as_hlo_text(print_large_constants=True)
+    assert "{...}" not in text, "HLO printer elided a constant"
+    return text

@@ -1,0 +1,128 @@
+"""Shared I/O for the flattened decision-tree / MLP artifact formats.
+
+The text formats are the interchange between the Python trainer, the
+Rust native evaluator (``classifier::tree``), and the AOT pipeline that
+embeds the same arrays into the HLO artifact — one model, three
+executors, bit-identical semantics.
+"""
+
+import numpy as np
+
+FEATURE_NAMES = ["threads", "log2_size", "log2_key_range", "insert_pct"]
+N_FEATURES = 4
+
+CLASS_NEUTRAL = 0
+CLASS_OBLIVIOUS = 1
+CLASS_AWARE = 2
+
+
+class FlatTree:
+    """Flattened decision tree (arrays-of-nodes layout)."""
+
+    def __init__(self, feature, threshold, left, right, leaf_class):
+        self.feature = np.asarray(feature, dtype=np.int32)
+        self.threshold = np.asarray(threshold, dtype=np.float32)
+        self.left = np.asarray(left, dtype=np.int32)
+        self.right = np.asarray(right, dtype=np.int32)
+        self.leaf_class = np.asarray(leaf_class, dtype=np.int32)
+
+    @property
+    def n_nodes(self):
+        return len(self.feature)
+
+    def depth(self, idx=0):
+        """Longest root-to-leaf path (root = 1)."""
+        if self.feature[idx] < 0:
+            return 1
+        return 1 + max(self.depth(self.left[idx]), self.depth(self.right[idx]))
+
+    def predict(self, x):
+        """NumPy inference, one row at a time (oracle for tests)."""
+        x = np.asarray(x, dtype=np.float32)
+        out = np.empty(len(x), dtype=np.int32)
+        for i, row in enumerate(x):
+            idx = 0
+            while self.feature[idx] >= 0:
+                if row[self.feature[idx]] <= self.threshold[idx]:
+                    idx = self.left[idx]
+                else:
+                    idx = self.right[idx]
+            out[i] = self.leaf_class[idx]
+        return out
+
+    def to_text(self):
+        lines = ["dtree-v1", f"nodes {self.n_nodes} depth {self.depth()}"]
+        for i in range(self.n_nodes):
+            lines.append(
+                f"{i} {self.feature[i]} {self.threshold[i]} "
+                f"{self.left[i]} {self.right[i]} {self.leaf_class[i]}"
+            )
+        return "\n".join(lines) + "\n"
+
+    @classmethod
+    def from_text(cls, text):
+        rows = [
+            ln.strip()
+            for ln in text.splitlines()
+            if ln.strip() and not ln.strip().startswith("#")
+        ]
+        assert rows[0] == "dtree-v1", f"bad magic {rows[0]!r}"
+        header = rows[1].split()
+        n = int(header[1])
+        feature = np.full(n, -1, dtype=np.int32)
+        threshold = np.zeros(n, dtype=np.float32)
+        left = np.full(n, -1, dtype=np.int32)
+        right = np.full(n, -1, dtype=np.int32)
+        leaf_class = np.zeros(n, dtype=np.int32)
+        for ln in rows[2:]:
+            f = ln.split()
+            i = int(f[0])
+            feature[i] = int(f[1])
+            threshold[i] = float(f[2])
+            left[i] = int(f[3])
+            right[i] = int(f[4])
+            leaf_class[i] = int(f[5])
+        return cls(feature, threshold, left, right, leaf_class)
+
+
+def encode_features(threads, size, key_range, insert_pct):
+    """The canonical encoding — must match `Features::encode` in Rust."""
+    threads = np.asarray(threads, dtype=np.float64)
+    size = np.asarray(size, dtype=np.float64)
+    key_range = np.asarray(key_range, dtype=np.float64)
+    insert_pct = np.asarray(insert_pct, dtype=np.float64)
+    return np.stack(
+        [
+            np.maximum(threads, 1.0),
+            np.log2(1.0 + np.maximum(size, 0.0)),
+            np.log2(1.0 + np.maximum(key_range, 1.0)),
+            np.clip(insert_pct, 0.0, 100.0),
+        ],
+        axis=-1,
+    ).astype(np.float32)
+
+
+def mlp_to_text(w1, b1, w2, b2):
+    """MLP artifact: header + row-major weight dumps."""
+    parts = ["mlp-v1", f"dims {w1.shape[0]} {w1.shape[1]} {w2.shape[1]}"]
+    for name, arr in [("w1", w1), ("b1", b1), ("w2", w2), ("b2", b2)]:
+        flat = " ".join(repr(float(v)) for v in np.asarray(arr, dtype=np.float32).ravel())
+        parts.append(f"{name} {flat}")
+    return "\n".join(parts) + "\n"
+
+
+def mlp_from_text(text):
+    rows = [ln for ln in text.splitlines() if ln.strip()]
+    assert rows[0] == "mlp-v1"
+    _, f, h, o = rows[1].split()
+    f, h, o = int(f), int(h), int(o)
+    vals = {}
+    for ln in rows[2:]:
+        name, *rest = ln.split()
+        vals[name] = np.array([float(v) for v in rest], dtype=np.float32)
+    return (
+        vals["w1"].reshape(f, h),
+        vals["b1"].reshape(h),
+        vals["w2"].reshape(h, o),
+        vals["b2"].reshape(o),
+    )

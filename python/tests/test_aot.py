@@ -1,0 +1,82 @@
+"""AOT pipeline tests: lowering emits parseable HLO text with the right
+entry signature, and the lowered computation matches the oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import tree_io
+from compile.model import lower_to_hlo_text, make_classifier, make_decider, make_regressor
+
+
+def tiny_tree():
+    #       x3 <= 45 ? aware : (x0 <= 8 ? neutral : oblivious)
+    return tree_io.FlatTree(
+        feature=[3, -1, 0, -1, -1],
+        threshold=[45.0, 0.0, 8.0, 0.0, 0.0],
+        left=[1, -1, 3, -1, -1],
+        right=[2, -1, 4, -1, -1],
+        leaf_class=[-1, 2, -1, 0, 1],
+    )
+
+
+def tiny_mlp():
+    rng = np.random.default_rng(0)
+    return (
+        rng.normal(0, 0.3, (4, 8)).astype(np.float32),
+        np.zeros(8, np.float32),
+        rng.normal(0, 0.3, (8, 2)).astype(np.float32),
+        np.zeros(2, np.float32),
+    )
+
+
+class TestLowering:
+    def test_classifier_hlo_text(self):
+        fn = make_classifier(tiny_tree())
+        x = jnp.zeros((16, 4), jnp.float32)
+        hlo = lower_to_hlo_text(fn, x)
+        assert "HloModule" in hlo
+        assert "f32[16,4]" in hlo
+        assert "s32[16]" in hlo
+
+    def test_decider_hlo_text(self):
+        fn = make_decider(tiny_tree(), tiny_mlp())
+        x = jnp.zeros((16, 4), jnp.float32)
+        hlo = lower_to_hlo_text(fn, x)
+        assert "HloModule" in hlo
+        assert "f32[16,2]" in hlo  # regression output
+
+    def test_classifier_matches_oracle(self):
+        tree = tiny_tree()
+        fn = make_classifier(tree)
+        x = tree_io.encode_features(
+            [4, 50, 50, 4], [100, 100, 1e6, 1e6], [200, 200, 1e7, 1e7], [30, 90, 30, 90]
+        )
+        got = np.asarray(fn(jnp.asarray(x))[0])
+        np.testing.assert_array_equal(got, tree.predict(x))
+
+    def test_regressor_shapes(self):
+        fn = make_regressor(tiny_mlp())
+        x = jnp.zeros((16, 4), jnp.float32)
+        (out,) = fn(x)
+        assert out.shape == (16, 2)
+
+    def test_trained_artifacts_if_present(self):
+        # When `make artifacts` has run, validate them end to end.
+        import os
+
+        base = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+        path = os.path.join(base, "dtree.txt")
+        if not os.path.exists(path):
+            return
+        with open(path) as f:
+            tree = tree_io.FlatTree.from_text(f.read())
+        fn = make_classifier(tree)
+        rng = np.random.default_rng(4)
+        x = tree_io.encode_features(
+            rng.integers(1, 65, 16),
+            10 ** rng.uniform(0, 7, 16),
+            10 ** rng.uniform(1, 8, 16),
+            rng.uniform(0, 100, 16),
+        )
+        got = np.asarray(fn(jnp.asarray(x))[0])
+        np.testing.assert_array_equal(got, tree.predict(x))

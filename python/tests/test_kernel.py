@@ -1,0 +1,139 @@
+"""Kernel-vs-reference correctness: the CORE L1 signal.
+
+The Pallas kernels (interpret mode) must agree exactly (dtree) /
+to float tolerance (mlp) with the pure-jnp oracles in ``ref.py`` and
+with the NumPy flat-tree oracle, across randomized shapes and values
+(hypothesis sweeps).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import tree_io
+from compile.kernels.dtree import dtree_predict
+from compile.kernels.mlp import mlp_predict
+from compile.kernels.ref import dtree_ref, mlp_ref
+from compile.train import synthetic_dataset, train_tree, label
+
+
+@pytest.fixture(scope="module")
+def trained_tree():
+    x, mops = synthetic_dataset(n=1500, seed=5)
+    y = label(mops[:, 0], mops[:, 1])
+    return train_tree(x, y)
+
+
+def random_features(rng, n):
+    return tree_io.encode_features(
+        rng.integers(1, 129, n),
+        10 ** rng.uniform(0, 7.5, n),
+        10 ** rng.uniform(0.3, 8.3, n),
+        rng.uniform(0, 100, n),
+    )
+
+
+def tree_args(tree):
+    return (
+        jnp.asarray(tree.feature),
+        jnp.asarray(tree.threshold),
+        jnp.asarray(tree.left),
+        jnp.asarray(tree.right),
+        jnp.asarray(tree.leaf_class),
+    )
+
+
+class TestDtreeKernel:
+    def test_matches_numpy_oracle(self, trained_tree):
+        rng = np.random.default_rng(1)
+        x = random_features(rng, 333)
+        got = np.asarray(
+            dtree_predict(jnp.asarray(x), *tree_args(trained_tree), depth=trained_tree.depth())
+        )
+        want = trained_tree.predict(x)
+        np.testing.assert_array_equal(got, want)
+
+    def test_matches_jnp_ref(self, trained_tree):
+        rng = np.random.default_rng(2)
+        x = jnp.asarray(random_features(rng, 64))
+        d = trained_tree.depth()
+        got = dtree_predict(x, *tree_args(trained_tree), depth=d)
+        want = dtree_ref(x, *tree_args(trained_tree), depth=d)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        batch=st.integers(1, 300),
+        seed=st.integers(0, 2**31 - 1),
+        block=st.sampled_from([8, 64, 128]),
+    )
+    def test_hypothesis_shapes_and_blocks(self, trained_tree, batch, seed, block):
+        rng = np.random.default_rng(seed)
+        x = random_features(rng, batch)
+        got = np.asarray(
+            dtree_predict(
+                jnp.asarray(x),
+                *tree_args(trained_tree),
+                depth=trained_tree.depth(),
+                block_b=block,
+            )
+        )
+        np.testing.assert_array_equal(got, trained_tree.predict(x))
+
+    def test_single_leaf_tree(self):
+        t = tree_io.FlatTree([-1], [0.0], [-1], [-1], [2])
+        x = jnp.zeros((5, 4), dtype=jnp.float32)
+        got = dtree_predict(x, *tree_args(t), depth=3)
+        np.testing.assert_array_equal(np.asarray(got), np.full(5, 2))
+
+    def test_depth_overshoot_is_harmless(self, trained_tree):
+        rng = np.random.default_rng(3)
+        x = jnp.asarray(random_features(rng, 32))
+        d = trained_tree.depth()
+        a = dtree_predict(x, *tree_args(trained_tree), depth=d)
+        b = dtree_predict(x, *tree_args(trained_tree), depth=d + 5)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_boundary_goes_left(self):
+        # x <= threshold goes left — exact boundary semantics must match
+        # Rust's `predict_encoded`.
+        t = tree_io.FlatTree(
+            [0, -1, -1], [10.0, 0.0, 0.0], [1, -1, -1], [2, -1, -1], [-1, 1, 2]
+        )
+        x = jnp.asarray([[10.0, 0, 0, 0], [10.0001, 0, 0, 0]], dtype=jnp.float32)
+        got = np.asarray(dtree_predict(x, *tree_args(t), depth=2))
+        np.testing.assert_array_equal(got, [1, 2])
+
+
+class TestMlpKernel:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        batch=st.integers(1, 200),
+        hidden=st.sampled_from([4, 16, 32]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, batch, hidden, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(0, 3, (batch, 4)).astype(np.float32))
+        w1 = jnp.asarray(rng.normal(0, 0.5, (4, hidden)).astype(np.float32))
+        b1 = jnp.asarray(rng.normal(0, 0.1, hidden).astype(np.float32))
+        w2 = jnp.asarray(rng.normal(0, 0.5, (hidden, 2)).astype(np.float32))
+        b2 = jnp.asarray(rng.normal(0, 0.1, 2).astype(np.float32))
+        got = mlp_predict(x, w1, b1, w2, b2)
+        want = mlp_ref(x, w1, b1, w2, b2)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+    def test_batch_padding_correct(self):
+        # batch not a multiple of the block: padding must not leak.
+        rng = np.random.default_rng(9)
+        x = jnp.asarray(rng.normal(0, 1, (130, 4)).astype(np.float32))
+        w1 = jnp.asarray(rng.normal(0, 1, (4, 8)).astype(np.float32))
+        b1 = jnp.zeros(8, jnp.float32)
+        w2 = jnp.asarray(rng.normal(0, 1, (8, 2)).astype(np.float32))
+        b2 = jnp.zeros(2, jnp.float32)
+        got = mlp_predict(x, w1, b1, w2, b2, block_b=128)
+        assert got.shape == (130, 2)
+        want = mlp_ref(x, w1, b1, w2, b2)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)

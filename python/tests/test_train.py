@@ -1,0 +1,122 @@
+"""Trainer correctness: CART learns separable rules; labeling follows the
+paper's tie threshold; the MLP regressor converges."""
+
+import numpy as np
+import pytest
+
+from compile import tree_io
+from compile.train import (
+    TIE_THRESHOLD_MOPS,
+    label,
+    synthetic_dataset,
+    train_mlp,
+    train_tree,
+)
+from compile.tree_io import CLASS_AWARE, CLASS_NEUTRAL, CLASS_OBLIVIOUS
+
+
+class TestLabeling:
+    def test_tie_threshold(self):
+        obv = np.array([10.0, 10.0, 10.0])
+        aware = np.array([10.5, 12.0, 8.0])
+        y = label(obv, aware)
+        assert list(y) == [CLASS_NEUTRAL, CLASS_AWARE, CLASS_OBLIVIOUS]
+
+    def test_threshold_value_matches_paper(self):
+        assert TIE_THRESHOLD_MOPS == 1.5
+
+
+class TestCart:
+    def test_learns_axis_aligned_rule(self):
+        rng = np.random.default_rng(0)
+        x = rng.uniform(0, 100, (2000, 4)).astype(np.float32)
+        y = np.where(x[:, 3] <= 45.0, CLASS_AWARE, CLASS_OBLIVIOUS).astype(np.int64)
+        tree = train_tree(x, y)
+        acc = (tree.predict(x) == y).mean()
+        assert acc > 0.98, acc
+
+    def test_learns_conjunction(self):
+        rng = np.random.default_rng(1)
+        x = rng.uniform(0, 100, (3000, 4)).astype(np.float32)
+        y = np.where(
+            (x[:, 0] > 20) & (x[:, 3] <= 45), CLASS_AWARE, CLASS_OBLIVIOUS
+        ).astype(np.int64)
+        tree = train_tree(x, y)
+        acc = (tree.predict(x) == y).mean()
+        assert acc > 0.95, acc
+
+    def test_depth_bounded(self):
+        x, mops = synthetic_dataset(n=3000, seed=2)
+        y = label(mops[:, 0], mops[:, 1])
+        tree = train_tree(x, y)
+        # MAX_DEPTH=8 internal levels -> flat depth ≤ 9 (root counts as 1).
+        assert tree.depth() <= 9
+        assert tree.n_nodes < 1000
+
+    def test_synthetic_accuracy_in_paper_band(self):
+        # The paper reports 87.9%; require a sane classifier (>80%) on a
+        # held-out split of the synthetic distribution.
+        x, mops = synthetic_dataset(n=5000, seed=3)
+        y = label(mops[:, 0], mops[:, 1])
+        tree = train_tree(x[:4000], y[:4000])
+        acc = (tree.predict(x[4000:]) == y[4000:]).mean()
+        assert acc > 0.80, acc
+
+    def test_three_classes_present(self):
+        x, mops = synthetic_dataset(n=5000, seed=4)
+        y = label(mops[:, 0], mops[:, 1])
+        assert set(np.unique(y)) == {CLASS_NEUTRAL, CLASS_OBLIVIOUS, CLASS_AWARE}
+
+
+class TestMlp:
+    def test_regresses_linear_target(self):
+        rng = np.random.default_rng(5)
+        x = rng.uniform(-1, 1, (2000, 4)).astype(np.float32)
+        target = np.stack([x @ np.array([1.0, -2, 0.5, 0]), x @ np.array([0.0, 1, 1, -1])], -1)
+        w1, b1, w2, b2 = train_mlp(x, target, epochs=200)
+        pred = np.tanh(x @ w1 + b1) @ w2 + b2
+        rmse = np.sqrt(((pred - target) ** 2).mean())
+        assert rmse < 0.15, rmse
+
+    def test_normalization_folding(self):
+        # Raw-feature evaluation must match: training normalizes inputs,
+        # but the returned weights consume raw features.
+        rng = np.random.default_rng(6)
+        x = np.abs(rng.normal(50, 20, (500, 4))).astype(np.float32)
+        target = np.stack([np.log2(1 + x[:, 0]), np.log2(1 + x[:, 1])], -1)
+        w1, b1, w2, b2 = train_mlp(x, target, epochs=300)
+        pred = np.tanh(x @ w1 + b1) @ w2 + b2
+        corr = np.corrcoef(pred[:, 0], target[:, 0])[0, 1]
+        assert corr > 0.9, corr
+
+
+class TestTreeIO:
+    def test_text_roundtrip(self):
+        x, mops = synthetic_dataset(n=1000, seed=7)
+        y = label(mops[:, 0], mops[:, 1])
+        tree = train_tree(x, y)
+        tree2 = tree_io.FlatTree.from_text(tree.to_text())
+        np.testing.assert_array_equal(tree.predict(x), tree2.predict(x))
+
+    def test_mlp_text_roundtrip(self):
+        rng = np.random.default_rng(8)
+        w1 = rng.normal(size=(4, 16)).astype(np.float32)
+        b1 = rng.normal(size=16).astype(np.float32)
+        w2 = rng.normal(size=(16, 2)).astype(np.float32)
+        b2 = rng.normal(size=2).astype(np.float32)
+        text = tree_io.mlp_to_text(w1, b1, w2, b2)
+        w1b, b1b, w2b, b2b = tree_io.mlp_from_text(text)
+        np.testing.assert_array_equal(w1, w1b)
+        np.testing.assert_array_equal(b1, b1b)
+        np.testing.assert_array_equal(w2, w2b)
+        np.testing.assert_array_equal(b2, b2b)
+
+    def test_encode_matches_rust_semantics(self):
+        x = tree_io.encode_features(16, 1023, 2047, 75)
+        np.testing.assert_allclose(np.atleast_2d(x), [[16.0, 10.0, 11.0, 75.0]], rtol=1e-6)
+
+    def test_encode_clamps(self):
+        x = np.atleast_2d(tree_io.encode_features(0, -5, 0, 150))
+        assert x[0, 0] == 1.0
+        assert x[0, 1] == 0.0
+        assert x[0, 3] == 100.0

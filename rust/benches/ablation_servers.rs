@@ -1,0 +1,10 @@
+//! Ablations beyond the paper: Nuddle server-count sensitivity and
+//! SmartPQ decision-interval sensitivity (DESIGN.md experiment index).
+use smartpq::harness::figures;
+use smartpq::harness::runner::BenchConfig;
+
+fn main() {
+    let cfg = BenchConfig::default();
+    figures::ablation_servers(&cfg);
+    figures::ablation_decision_interval(&cfg);
+}

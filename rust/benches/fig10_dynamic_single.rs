@@ -1,0 +1,8 @@
+//! Regenerates paper Figure 10 / Tables 2a-c: dynamic workloads varying a
+//! single contention feature, SmartPQ vs static baselines.
+use smartpq::harness::figures;
+use smartpq::harness::runner::BenchConfig;
+
+fn main() {
+    figures::fig10(&BenchConfig::default());
+}

@@ -1,0 +1,8 @@
+//! Regenerates paper Figure 11 / Table 3: the 15-phase dynamic benchmark
+//! behind the headline 1.87x / 1.38x result.
+use smartpq::harness::figures;
+use smartpq::harness::runner::BenchConfig;
+
+fn main() {
+    figures::fig11(&BenchConfig::default());
+}

@@ -1,0 +1,8 @@
+//! Regenerates paper Figure 1 (motivation: NUMA-oblivious vs NUMA-aware
+//! across operation mixes). `SMARTPQ_BENCH_QUICK=1` for a smoke run.
+use smartpq::harness::figures;
+use smartpq::harness::runner::BenchConfig;
+
+fn main() {
+    figures::fig1(&BenchConfig::default());
+}

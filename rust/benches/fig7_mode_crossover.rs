@@ -1,0 +1,10 @@
+//! Regenerates paper Figures 7a/7b (Nuddle vs alistarh_herlihy crossovers
+//! over thread count and key range).
+use smartpq::harness::figures;
+use smartpq::harness::runner::BenchConfig;
+
+fn main() {
+    let cfg = BenchConfig::default();
+    figures::fig7a(&cfg);
+    figures::fig7b(&cfg);
+}

@@ -1,0 +1,8 @@
+//! Regenerates paper Figure 9: the full throughput grid (sizes x op mixes
+//! x thread counts) for all five static queues.
+use smartpq::harness::figures;
+use smartpq::harness::runner::BenchConfig;
+
+fn main() {
+    figures::fig9(&BenchConfig::default());
+}

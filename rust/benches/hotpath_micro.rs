@@ -1,0 +1,189 @@
+//! Hot-path microbenchmarks — the §Perf instrument (EXPERIMENTS.md §Perf):
+//!
+//! * real-plane per-op latency of every queue (single-threaded; this is
+//!   the 1-core box's meaningful real measurement),
+//! * the ffwd/Nuddle delegation round-trip,
+//! * classifier inference (native tree vs XLA/PJRT),
+//! * simulator event throughput (what every figure bench costs).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use smartpq::classifier::features::Features;
+use smartpq::classifier::DecisionTree;
+use smartpq::harness::table::{fmt, Table};
+use smartpq::pq::traits::ConcurrentPQ;
+use smartpq::pq::{LotanShavitPQ, MutexHeapPQ, SprayList};
+use smartpq::sim::{run_workload, SimAlgo, Workload};
+use smartpq::util::rng::Rng;
+
+fn ops_latency<Q: ConcurrentPQ>(q: &Q, n: u64, range: u64, seed: u64) -> (f64, f64) {
+    let mut rng = Rng::new(seed);
+    // Pre-fill with half the range.
+    for _ in 0..range / 2 {
+        q.insert(1 + rng.gen_range(range), 0);
+    }
+    let t0 = Instant::now();
+    for i in 0..n {
+        q.insert(1 + rng.gen_range(range), i);
+    }
+    let ins_ns = t0.elapsed().as_nanos() as f64 / n as f64;
+    let t0 = Instant::now();
+    for _ in 0..n {
+        q.delete_min();
+    }
+    let del_ns = t0.elapsed().as_nanos() as f64 / n as f64;
+    (ins_ns, del_ns)
+}
+
+fn main() {
+    let quick = std::env::var("SMARTPQ_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let n: u64 = if quick { 20_000 } else { 200_000 };
+    let range = 1_000_000u64;
+
+    let mut t = Table::new(
+        "Hot path: real-plane single-thread op latency (ns/op)",
+        &["queue", "insert", "deleteMin"],
+    );
+    {
+        let q = LotanShavitPQ::new();
+        let (i, d) = ops_latency(&q, n, range, 1);
+        t.row(vec!["lotan_shavit".into(), fmt(i), fmt(d)]);
+    }
+    {
+        let q: SprayList<smartpq::pq::skiplist::fraser::FraserSkipList> = SprayList::new(1);
+        let (i, d) = ops_latency(&q, n, range, 2);
+        t.row(vec!["alistarh_fraser".into(), fmt(i), fmt(d)]);
+    }
+    {
+        let q: SprayList<smartpq::pq::skiplist::herlihy::HerlihySkipList> = SprayList::new(1);
+        let (i, d) = ops_latency(&q, n, range, 3);
+        t.row(vec!["alistarh_herlihy".into(), fmt(i), fmt(d)]);
+    }
+    {
+        let q = MutexHeapPQ::new();
+        let (i, d) = ops_latency(&q, n, range, 4);
+        t.row(vec!["mutex_heap".into(), fmt(i), fmt(d)]);
+    }
+    {
+        // ffwd round-trips cross threads; on a single-core host each is
+        // ~2 scheduler hops, so use a small prefill/op count.
+        let q = smartpq::delegation::FfwdPQ::new(8, 5);
+        let (i, d) = ops_latency(&q, (n / 40).max(500), 4_000, 5);
+        t.row(vec!["ffwd (round-trip)".into(), fmt(i), fmt(d)]);
+    }
+    t.print();
+    let _ = t.write_csv("target/reports/hotpath_ops.csv");
+
+    // Classifier inference.
+    let mut t = Table::new(
+        "Hot path: classifier inference",
+        &["path", "latency", "unit"],
+    );
+    let tree = DecisionTree::load("artifacts/dtree.txt")
+        .unwrap_or_else(|_| DecisionTree::builtin_fallback());
+    let f = Features::new(50.0, 1e6, 1e7, 60.0);
+    let t0 = Instant::now();
+    let iters = 1_000_000u64;
+    for _ in 0..iters {
+        std::hint::black_box(tree.predict_encoded(std::hint::black_box(&f.encode())));
+    }
+    let native = t0.elapsed().as_nanos() as f64 / iters as f64;
+    t.row(vec!["native tree".into(), fmt(native), "ns/inference".into()]);
+    if std::path::Path::new("artifacts/dtree.hlo.txt").exists() {
+        let xla = smartpq::runtime::XlaClassifier::load("artifacts").expect("load xla");
+        let enc: Vec<[f32; 4]> = (0..16).map(|_| f.encode()).collect();
+        let _ = xla.predict_batch(&enc); // warm
+        let t0 = Instant::now();
+        let iters = if quick { 50 } else { 500 };
+        for _ in 0..iters {
+            std::hint::black_box(xla.predict_batch(std::hint::black_box(&enc)).unwrap());
+        }
+        let us = t0.elapsed().as_micros() as f64 / iters as f64;
+        t.row(vec!["xla batch-16 (PJRT)".into(), fmt(us), "us/batch".into()]);
+        t.row(vec![
+            "xla per-row".into(),
+            fmt(us * 1000.0 / 16.0),
+            "ns/inference".into(),
+        ]);
+    }
+    t.print();
+    let _ = t.write_csv("target/reports/hotpath_classifier.csv");
+
+    // Simulator engine throughput (events/sec ~ ops/sec simulated).
+    let mut t = Table::new(
+        "Hot path: simulator throughput (simulated ops per wall-second)",
+        &["scenario", "sim ops/s"],
+    );
+    for (label, algo, threads, pct) in [
+        ("oblivious 64thr 50/50", SimAlgo::AlistarhHerlihy, 64usize, 50.0),
+        ("nuddle 64thr 50/50", SimAlgo::Nuddle { servers: 8 }, 64, 50.0),
+        (
+            "smartpq 64thr dynamic",
+            SimAlgo::SmartPQ {
+                servers: 8,
+                oracle: None,
+            },
+            64,
+            20.0,
+        ),
+    ] {
+        let w = Workload::single(100_000, 200_000, threads, pct, if quick { 2.0 } else { 10.0 }, 9);
+        let t0 = Instant::now();
+        let r = run_workload(&algo, &w);
+        let wall = t0.elapsed().as_secs_f64();
+        let ops: u64 = r.phases.iter().map(|p| p.ops).sum();
+        t.row(vec![label.into(), fmt(ops as f64 / wall)]);
+    }
+    t.print();
+    let _ = t.write_csv("target/reports/hotpath_sim.csv");
+
+    // Mode-switch cost on the real plane: ops around a forced flip.
+    let mut t = Table::new(
+        "Hot path: SmartPQ mode-switch latency (real plane)",
+        &["metric", "value", "unit"],
+    );
+    {
+        use smartpq::adaptive::{SmartPQ, SmartPQConfig};
+        use smartpq::delegation::nuddle::{mode, NuddleConfig};
+        let base: Arc<SprayList<smartpq::pq::skiplist::herlihy::HerlihySkipList>> =
+            Arc::new(SprayList::new(2));
+        let q = SmartPQ::new(
+            base,
+            Arc::new(smartpq::classifier::ThresholdOracle),
+            SmartPQConfig {
+                nuddle: NuddleConfig {
+                    servers: 1,
+                    max_clients: 8,
+                    idle_sleep_us: 20,
+                },
+                decision_interval: std::time::Duration::from_secs(3600),
+                initial_mode: mode::OBLIVIOUS,
+                auto_decide: false,
+            },
+        );
+        for k in 1..=1000u64 {
+            q.insert(k * 7, k);
+        }
+        let flips = if quick { 200 } else { 2000 };
+        let t0 = Instant::now();
+        for i in 0..flips {
+            q.force_mode(if i % 2 == 0 { mode::AWARE } else { mode::OBLIVIOUS });
+            q.insert(1_000_000 + i, i);
+            q.delete_min();
+        }
+        let ns = t0.elapsed().as_nanos() as f64 / flips as f64;
+        t.row(vec![
+            "flip + insert + deleteMin".into(),
+            fmt(ns),
+            "ns/cycle".into(),
+        ]);
+        t.row(vec![
+            "mode flips performed".into(),
+            flips.to_string(),
+            "".into(),
+        ]);
+    }
+    t.print();
+    let _ = t.write_csv("target/reports/hotpath_switch.csv");
+}

@@ -1,0 +1,10 @@
+//! Regenerates the paper's §4.2.1 classifier evaluation: accuracy and
+//! geomean misprediction cost over randomized contention workloads.
+use smartpq::harness::figures;
+use smartpq::harness::runner::BenchConfig;
+
+fn main() {
+    let cfg = BenchConfig::default();
+    let n = if cfg.quick { 60 } else { 400 };
+    figures::classifier_eval(&cfg, n);
+}

@@ -1,0 +1,34 @@
+//! The adaptive layer: [`smartpq::SmartPQ`] — the paper's second
+//! contribution (§3) — plus the trait glue that lets it read workload
+//! statistics out of any base queue.
+
+pub mod smartpq;
+
+pub use smartpq::{SmartPQ, SmartPQConfig};
+
+use crate::pq::traits::PqStats;
+
+/// Bases usable under SmartPQ must expose operation counters for the
+/// on-the-fly feature extraction (paper §5).
+pub trait HasStats {
+    /// The queue's counters.
+    fn pq_stats(&self) -> &PqStats;
+}
+
+impl<B: crate::pq::spraylist::SprayBase> HasStats for crate::pq::SprayList<B> {
+    fn pq_stats(&self) -> &PqStats {
+        self.stats()
+    }
+}
+
+impl HasStats for crate::pq::LotanShavitPQ {
+    fn pq_stats(&self) -> &PqStats {
+        self.stats()
+    }
+}
+
+impl HasStats for crate::pq::MutexHeapPQ {
+    fn pq_stats(&self) -> &PqStats {
+        self.stats()
+    }
+}

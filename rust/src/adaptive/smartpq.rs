@@ -1,0 +1,370 @@
+//! SmartPQ (paper §3): an adaptive concurrent priority queue that
+//! dynamically switches between a NUMA-oblivious mode (clients operate
+//! directly on the concurrent base) and a NUMA-aware mode (clients
+//! delegate to Nuddle's servers).
+//!
+//! The key property (paper §3, "no synchronization point"): both modes
+//! mutate the *same* concurrent structure with the same concurrency
+//! strategy, so flipping the shared `algo` cell is the entire transition —
+//! threads that still complete an operation under the old mode are
+//! harmless, and elements are never lost or duplicated (asserted by the
+//! crate's property tests).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::classifier::features::{Features, StatsSnapshot};
+use crate::classifier::{ModeClass, ModeOracle};
+use crate::delegation::nuddle::{mode, Nuddle, NuddleConfig};
+use crate::pq::traits::ConcurrentPQ;
+
+use super::HasStats;
+
+/// SmartPQ configuration.
+#[derive(Debug, Clone)]
+pub struct SmartPQConfig {
+    /// Delegation layout (servers, client capacity).
+    pub nuddle: NuddleConfig,
+    /// Decision interval (paper: one second).
+    pub decision_interval: Duration,
+    /// Starting mode (paper Fig. 8 default: NUMA-oblivious).
+    pub initial_mode: u8,
+    /// Spawn the background decision thread. Disable for manual control
+    /// (benchmarks drive `decide_now` themselves for determinism).
+    pub auto_decide: bool,
+}
+
+impl Default for SmartPQConfig {
+    fn default() -> Self {
+        SmartPQConfig {
+            nuddle: NuddleConfig::default(),
+            decision_interval: Duration::from_secs(1),
+            initial_mode: mode::OBLIVIOUS,
+            auto_decide: true,
+        }
+    }
+}
+
+/// The adaptive priority queue.
+pub struct SmartPQ<B: ConcurrentPQ + HasStats + 'static> {
+    nuddle: Nuddle<B>,
+    algo: Arc<AtomicU8>,
+    oracle: Arc<dyn ModeOracle>,
+    /// Active-thread feature (callers update it; the paper assumes it is
+    /// known a priori, §5 proposes tracking it — we let both work).
+    threads_hint: Arc<AtomicUsize>,
+    /// Mode-transition counter (observability / tests).
+    switches: Arc<AtomicU64>,
+    decisions: Arc<AtomicU64>,
+    stop: Arc<AtomicBool>,
+    decision_thread: Option<std::thread::JoinHandle<()>>,
+    snapshot: std::sync::Mutex<StatsSnapshot>,
+}
+
+impl<B: ConcurrentPQ + HasStats + 'static> SmartPQ<B> {
+    /// Build a SmartPQ over `base` with the given mode `oracle`.
+    pub fn new(base: Arc<B>, oracle: Arc<dyn ModeOracle>, cfg: SmartPQConfig) -> Self {
+        let algo = Arc::new(AtomicU8::new(cfg.initial_mode));
+        let nuddle = Nuddle::with_mode(base, cfg.nuddle.clone(), algo.clone());
+        let threads_hint = Arc::new(AtomicUsize::new(1));
+        let switches = Arc::new(AtomicU64::new(0));
+        let decisions = Arc::new(AtomicU64::new(0));
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut pq = SmartPQ {
+            nuddle,
+            algo,
+            oracle,
+            threads_hint,
+            switches,
+            decisions,
+            stop,
+            decision_thread: None,
+            snapshot: std::sync::Mutex::new(StatsSnapshot::default()),
+        };
+        if cfg.auto_decide {
+            pq.spawn_decision_thread(cfg.decision_interval);
+        }
+        pq
+    }
+
+    fn spawn_decision_thread(&mut self, interval: Duration) {
+        let base = self.nuddle.base().clone();
+        let algo = self.algo.clone();
+        let oracle = self.oracle.clone();
+        let threads_hint = self.threads_hint.clone();
+        let switches = self.switches.clone();
+        let decisions = self.decisions.clone();
+        let stop = self.stop.clone();
+        self.decision_thread = Some(
+            std::thread::Builder::new()
+                .name("smartpq-decision".into())
+                .spawn(move || {
+                    let mut snap = StatsSnapshot::default();
+                    while !stop.load(Ordering::Acquire) {
+                        std::thread::sleep(interval);
+                        if stop.load(Ordering::Acquire) {
+                            break;
+                        }
+                        let threads = threads_hint.load(Ordering::Relaxed);
+                        let (features, now) =
+                            Features::from_stats(base.pq_stats(), threads, &snap);
+                        snap = now;
+                        Self::apply_decision(
+                            &oracle, &features, &algo, &switches, &decisions,
+                        );
+                    }
+                })
+                .expect("spawn decision thread"),
+        );
+    }
+
+    fn apply_decision(
+        oracle: &Arc<dyn ModeOracle>,
+        features: &Features,
+        algo: &AtomicU8,
+        switches: &AtomicU64,
+        decisions: &AtomicU64,
+    ) -> ModeClass {
+        decisions.fetch_add(1, Ordering::Relaxed);
+        let class = oracle.predict(features);
+        // Paper Fig. 8 decisionTree(): neutral leaves `algo` untouched.
+        if class != ModeClass::Neutral {
+            let new = class as u8;
+            let old = algo.swap(new, Ordering::AcqRel);
+            if old != new {
+                switches.fetch_add(1, Ordering::Relaxed);
+                crate::log_debug!(
+                    "smartpq: mode switch {} -> {} ({:?})",
+                    old,
+                    new,
+                    features
+                );
+            }
+        }
+        class
+    }
+
+    /// Run one decision step from live counters (manual driving).
+    pub fn decide_now(&self) -> ModeClass {
+        let threads = self.threads_hint.load(Ordering::Relaxed);
+        let mut snap = self.snapshot.lock().expect("snapshot poisoned");
+        let (features, now) =
+            Features::from_stats(self.nuddle.base().pq_stats(), threads, &snap);
+        *snap = now;
+        Self::apply_decision(
+            &self.oracle,
+            &features,
+            &self.algo,
+            &self.switches,
+            &self.decisions,
+        )
+    }
+
+    /// Run one decision step with caller-supplied features (the paper's
+    /// `decisionTree(str, nthreads, size, key_range, mix)` entry point).
+    pub fn decide_with(&self, features: &Features) -> ModeClass {
+        Self::apply_decision(
+            &self.oracle,
+            features,
+            &self.algo,
+            &self.switches,
+            &self.decisions,
+        )
+    }
+
+    /// Force a mode (tests / ablations).
+    pub fn force_mode(&self, m: u8) {
+        self.algo.store(m, Ordering::Release);
+    }
+
+    /// Current mode (`mode::OBLIVIOUS` or `mode::AWARE`).
+    pub fn current_mode(&self) -> u8 {
+        self.algo.load(Ordering::Acquire)
+    }
+
+    /// Update the active-thread-count feature.
+    pub fn set_threads_hint(&self, n: usize) {
+        self.threads_hint.store(n, Ordering::Relaxed);
+    }
+
+    /// Number of mode transitions so far.
+    pub fn switch_count(&self) -> u64 {
+        self.switches.load(Ordering::Relaxed)
+    }
+
+    /// Number of decision-tree invocations so far.
+    pub fn decision_count(&self) -> u64 {
+        self.decisions.load(Ordering::Relaxed)
+    }
+
+    /// The underlying concurrent base.
+    pub fn base(&self) -> &Arc<B> {
+        self.nuddle.base()
+    }
+}
+
+impl<B: ConcurrentPQ + HasStats + 'static> ConcurrentPQ for SmartPQ<B> {
+    fn insert(&self, key: u64, value: u64) -> bool {
+        // Paper Fig. 8 insert_client(): direct in oblivious mode,
+        // delegated in aware mode. The mode read is a single relaxed load.
+        if self.algo.load(Ordering::Relaxed) == mode::OBLIVIOUS {
+            self.nuddle.base().insert(key, value)
+        } else {
+            self.nuddle.insert(key, value)
+        }
+    }
+
+    fn delete_min(&self) -> Option<(u64, u64)> {
+        if self.algo.load(Ordering::Relaxed) == mode::OBLIVIOUS {
+            self.nuddle.base().delete_min()
+        } else {
+            self.nuddle.delete_min()
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.nuddle.base().len()
+    }
+
+    fn name(&self) -> &'static str {
+        "smartpq"
+    }
+}
+
+impl<B: ConcurrentPQ + HasStats + 'static> Drop for SmartPQ<B> {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.decision_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::classifier::ThresholdOracle;
+    use crate::pq::spraylist::AlistarhHerlihy;
+    use crate::pq::SprayList;
+
+    fn make(auto: bool) -> SmartPQ<AlistarhHerlihy> {
+        let base = Arc::new(SprayList::new(8));
+        SmartPQ::new(
+            base,
+            Arc::new(ThresholdOracle),
+            SmartPQConfig {
+                nuddle: NuddleConfig {
+                    servers: 2,
+                    max_clients: 16,
+                    idle_sleep_us: 10,
+                },
+                decision_interval: Duration::from_millis(20),
+                initial_mode: mode::OBLIVIOUS,
+                auto_decide: auto,
+            },
+        )
+    }
+
+    #[test]
+    fn ops_work_in_both_modes() {
+        let q = make(false);
+        // Oblivious mode.
+        assert_eq!(q.current_mode(), mode::OBLIVIOUS);
+        assert!(q.insert(10, 1));
+        // Switch to aware; same structure must be visible.
+        q.force_mode(mode::AWARE);
+        assert!(q.insert(20, 2));
+        assert!(!q.insert(10, 9), "duplicate visible across modes");
+        let mut ks: Vec<u64> = std::iter::from_fn(|| q.delete_min().map(|(k, _)| k)).collect();
+        ks.sort_unstable();
+        assert_eq!(ks, vec![10, 20]);
+    }
+
+    #[test]
+    fn no_elements_lost_across_rapid_switches() {
+        let q = Arc::new(make(false));
+        let stop = Arc::new(AtomicBool::new(false));
+        // A switcher thread flips the mode continuously.
+        let (qs, ss) = (q.clone(), stop.clone());
+        let switcher = std::thread::spawn(move || {
+            let mut m = mode::OBLIVIOUS;
+            while !ss.load(Ordering::Acquire) {
+                m = if m == mode::OBLIVIOUS { mode::AWARE } else { mode::OBLIVIOUS };
+                qs.force_mode(m);
+                std::thread::yield_now();
+            }
+        });
+        let workers: Vec<_> = (0..4u64)
+            .map(|t| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    let mut net = 0i64;
+                    for i in 0..400u64 {
+                        if q.insert(1 + t + 4 * i, i) {
+                            net += 1;
+                        }
+                        if i % 2 == 0 && q.delete_min().is_some() {
+                            net -= 1;
+                        }
+                    }
+                    net
+                })
+            })
+            .collect();
+        let net: i64 = workers.into_iter().map(|h| h.join().unwrap()).sum();
+        stop.store(true, Ordering::Release);
+        switcher.join().unwrap();
+        assert_eq!(q.len() as i64, net, "elements lost or duplicated across switches");
+    }
+
+    #[test]
+    fn decide_with_switches_modes() {
+        let q = make(false);
+        q.set_threads_hint(50);
+        // deleteMin-dominated -> aware.
+        let c = q.decide_with(&Features::new(50.0, 1000.0, 2048.0, 20.0));
+        assert_eq!(c, ModeClass::Aware);
+        assert_eq!(q.current_mode(), mode::AWARE);
+        // insert-dominated huge range -> oblivious.
+        let c = q.decide_with(&Features::new(50.0, 1_000_000.0, 100_000_000.0, 100.0));
+        assert_eq!(c, ModeClass::Oblivious);
+        assert_eq!(q.current_mode(), mode::OBLIVIOUS);
+        assert_eq!(q.switch_count(), 2);
+        // Neutral keeps the current mode.
+        let c = q.decide_with(&Features::new(4.0, 100.0, 200.0, 50.0));
+        assert_eq!(c, ModeClass::Neutral);
+        assert_eq!(q.current_mode(), mode::OBLIVIOUS);
+        assert_eq!(q.switch_count(), 2);
+    }
+
+    #[test]
+    fn auto_decision_thread_runs() {
+        let q = make(true);
+        q.set_threads_hint(50);
+        // Generate deleteMin-heavy traffic so the oracle says "aware".
+        for k in 1..=50u64 {
+            q.insert(k, k);
+        }
+        for _ in 0..40 {
+            q.delete_min();
+        }
+        std::thread::sleep(Duration::from_millis(120));
+        assert!(q.decision_count() > 0, "decision thread never ran");
+    }
+
+    #[test]
+    fn decide_now_uses_live_stats() {
+        let q = make(false);
+        q.set_threads_hint(50);
+        for k in 1..=100u64 {
+            q.insert(k * 1000, k);
+        }
+        for _ in 0..90 {
+            q.delete_min();
+        }
+        // ~53% inserts, 50 threads, small size -> aware by threshold rules.
+        let c = q.decide_now();
+        assert_eq!(c, ModeClass::Aware);
+    }
+}

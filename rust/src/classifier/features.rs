@@ -1,0 +1,140 @@
+//! Contention-workload features (paper Table 1) and their canonical
+//! numeric encoding. The same four features, in the same order and with
+//! the same log transforms, are used by the Python trainer, the Pallas
+//! kernel, and the native Rust tree — the tree's thresholds only make
+//! sense if every consumer encodes identically.
+
+use crate::pq::traits::PqStats;
+use std::sync::atomic::Ordering;
+
+/// The four classification features of Table 1.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Features {
+    /// Active threads performing operations.
+    pub threads: f64,
+    /// Current size of the priority queue.
+    pub size: f64,
+    /// Range of keys used in the workload.
+    pub key_range: f64,
+    /// Percentage of insert operations (0..=100); deleteMin = 100 - this.
+    pub insert_pct: f64,
+}
+
+/// Number of features in the encoded vector.
+pub const N_FEATURES: usize = 4;
+
+impl Features {
+    /// Construct (values are clamped to sane ranges).
+    pub fn new(threads: f64, size: f64, key_range: f64, insert_pct: f64) -> Features {
+        Features {
+            threads: threads.max(1.0),
+            size: size.max(0.0),
+            key_range: key_range.max(1.0),
+            insert_pct: insert_pct.clamp(0.0, 100.0),
+        }
+    }
+
+    /// Canonical model-input encoding:
+    /// `[threads, log2(1+size), log2(1+key_range), insert_pct]` as f32.
+    /// Log transforms compress the size/key-range axes (which the paper
+    /// sweeps over 5+ orders of magnitude) so single-threshold splits
+    /// generalize.
+    pub fn encode(&self) -> [f32; N_FEATURES] {
+        [
+            self.threads as f32,
+            (1.0 + self.size).log2() as f32,
+            (1.0 + self.key_range).log2() as f32,
+            self.insert_pct as f32,
+        ]
+    }
+
+    /// On-the-fly extraction from a queue's operation counters (paper §5)
+    /// plus the caller-known thread count. `prev` is the counter snapshot
+    /// from the previous extraction; the op mix is computed from the delta
+    /// so it tracks the *current* phase, not the whole history.
+    pub fn from_stats(stats: &PqStats, threads: usize, prev: &StatsSnapshot) -> (Features, StatsSnapshot) {
+        let now = StatsSnapshot::take(stats);
+        let d_ins = now.inserts.saturating_sub(prev.inserts);
+        let d_del = now.delete_mins.saturating_sub(prev.delete_mins);
+        let insert_pct = if d_ins + d_del == 0 {
+            100.0
+        } else {
+            100.0 * d_ins as f64 / (d_ins + d_del) as f64
+        };
+        let f = Features::new(
+            threads as f64,
+            stats.size() as f64,
+            now.max_key as f64,
+            insert_pct,
+        );
+        (f, now)
+    }
+}
+
+/// Counter snapshot used for delta-based op-mix extraction.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StatsSnapshot {
+    /// Total inserts at snapshot time (incl. failed — they contend too).
+    pub inserts: u64,
+    /// Total deleteMins at snapshot time (incl. empty).
+    pub delete_mins: u64,
+    /// Max key seen.
+    pub max_key: u64,
+}
+
+impl StatsSnapshot {
+    /// Snapshot `stats` now.
+    pub fn take(stats: &PqStats) -> StatsSnapshot {
+        StatsSnapshot {
+            inserts: stats.inserts.load(Ordering::Relaxed)
+                + stats.failed_inserts.load(Ordering::Relaxed),
+            delete_mins: stats.delete_mins.load(Ordering::Relaxed)
+                + stats.empty_delete_mins.load(Ordering::Relaxed),
+            max_key: stats.max_key_seen.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_applies_log_transform() {
+        let f = Features::new(16.0, 1023.0, 2047.0, 75.0);
+        let v = f.encode();
+        assert_eq!(v[0], 16.0);
+        assert!((v[1] - 10.0).abs() < 1e-5);
+        assert!((v[2] - 11.0).abs() < 1e-5);
+        assert_eq!(v[3], 75.0);
+    }
+
+    #[test]
+    fn clamping() {
+        let f = Features::new(0.0, -5.0, 0.0, 150.0);
+        assert_eq!(f.threads, 1.0);
+        assert_eq!(f.size, 0.0);
+        assert_eq!(f.key_range, 1.0);
+        assert_eq!(f.insert_pct, 100.0);
+    }
+
+    #[test]
+    fn from_stats_delta_mix() {
+        let stats = PqStats::new();
+        for k in 1..=8u64 {
+            stats.record_insert(k * 100);
+        }
+        stats.record_delete_min();
+        stats.record_delete_min();
+        let (f1, snap) = Features::from_stats(&stats, 4, &StatsSnapshot::default());
+        assert!((f1.insert_pct - 80.0).abs() < 1e-9);
+        assert_eq!(f1.size, 6.0);
+        assert_eq!(f1.key_range, 800.0);
+        // New phase: only deletes.
+        stats.record_delete_min();
+        stats.record_delete_min();
+        stats.record_delete_min();
+        let (f2, _) = Features::from_stats(&stats, 4, &snap);
+        assert!((f2.insert_pct - 0.0).abs() < 1e-9, "{}", f2.insert_pct);
+    }
+}

@@ -1,0 +1,110 @@
+//! The SmartPQ decision infrastructure (paper §3.1): workload feature
+//! extraction, the decision-tree mode classifier, and the oracle trait the
+//! adaptive queue consults.
+//!
+//! The tree is *trained* offline (`python/compile/train.py`, a NumPy CART
+//! implementation — scikit-learn is unavailable offline) on throughput
+//! measurements from the NUMA simulator, and *executed* either natively
+//! ([`tree::DecisionTree`]) or through the AOT-compiled XLA artifact via
+//! PJRT ([`crate::runtime`]); integration tests assert both paths agree
+//! bit-for-bit on the predicted class.
+
+pub mod features;
+pub mod tree;
+
+pub use features::Features;
+pub use tree::DecisionTree;
+
+/// Prediction classes (paper §3.1.2). Values 1/2 intentionally coincide
+/// with [`crate::delegation::nuddle::mode`] so a prediction can be stored
+/// into the shared `algo` cell directly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum ModeClass {
+    /// Tie — keep the current mode (hysteresis against oscillation).
+    Neutral = 0,
+    /// NUMA-oblivious mode performs best.
+    Oblivious = 1,
+    /// NUMA-aware (Nuddle) mode performs best.
+    Aware = 2,
+}
+
+impl ModeClass {
+    /// Decode from a class id (clamps unknown ids to Neutral).
+    pub fn from_u8(x: u8) -> ModeClass {
+        match x {
+            1 => ModeClass::Oblivious,
+            2 => ModeClass::Aware,
+            _ => ModeClass::Neutral,
+        }
+    }
+}
+
+/// Anything that can predict the best-performing algorithmic mode for a
+/// contention workload.
+pub trait ModeOracle: Send + Sync {
+    /// Predict the best mode for `f`.
+    fn predict(&self, f: &Features) -> ModeClass;
+
+    /// Oracle label for reports.
+    fn oracle_name(&self) -> &'static str;
+}
+
+/// A hand-written threshold heuristic distilled from the paper's Figure 9
+/// discussion. Serves as (i) the fallback when no trained artifact exists
+/// and (ii) the ablation baseline the learned tree must beat.
+#[derive(Debug, Default)]
+pub struct ThresholdOracle;
+
+impl ModeOracle for ThresholdOracle {
+    fn predict(&self, f: &Features) -> ModeClass {
+        // One NUMA node (≤8 threads): modes tie (paper: neutral class).
+        if f.threads <= 8.0 {
+            return ModeClass::Neutral;
+        }
+        // deleteMin-dominated beyond one node: delegation wins.
+        if f.insert_pct <= 45.0 {
+            return ModeClass::Aware;
+        }
+        // Insert-dominated with a large key range: spraying scales.
+        if f.insert_pct >= 65.0 && f.key_range >= 2.0 * f.size.max(1.0) {
+            return ModeClass::Oblivious;
+        }
+        // Small structures stay contended even under inserts.
+        if f.size <= 3000.0 {
+            return ModeClass::Aware;
+        }
+        ModeClass::Neutral
+    }
+
+    fn oracle_name(&self) -> &'static str {
+        "threshold"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_class_roundtrip() {
+        assert_eq!(ModeClass::from_u8(0), ModeClass::Neutral);
+        assert_eq!(ModeClass::from_u8(1), ModeClass::Oblivious);
+        assert_eq!(ModeClass::from_u8(2), ModeClass::Aware);
+        assert_eq!(ModeClass::from_u8(99), ModeClass::Neutral);
+    }
+
+    #[test]
+    fn threshold_oracle_sane() {
+        let o = ThresholdOracle;
+        // deleteMin-dominated, many threads -> aware.
+        let f = Features::new(50.0, 1000.0, 2048.0, 25.0);
+        assert_eq!(o.predict(&f), ModeClass::Aware);
+        // insert-only, huge range -> oblivious.
+        let f = Features::new(50.0, 1_000_000.0, 50_000_000.0, 100.0);
+        assert_eq!(o.predict(&f), ModeClass::Oblivious);
+        // single node -> neutral.
+        let f = Features::new(4.0, 1000.0, 2048.0, 50.0);
+        assert_eq!(o.predict(&f), ModeClass::Neutral);
+    }
+}

@@ -1,0 +1,320 @@
+//! Native decision-tree inference over the flattened-array artifact
+//! format shared with the Python trainer and the XLA kernel.
+//!
+//! Artifact format (`artifacts/dtree.txt`, whitespace-separated):
+//! ```text
+//! # comments allowed
+//! dtree-v1
+//! nodes <N> depth <D>
+//! <idx> <feature> <threshold> <left> <right> <leaf_class>
+//! ...
+//! ```
+//! Internal nodes carry `feature >= 0` and `leaf_class == -1`; evaluation
+//! goes left when `x[feature] <= threshold`. Leaves carry `feature == -1`
+//! and a class in {0 neutral, 1 oblivious, 2 aware}. Node 0 is the root.
+
+use std::path::Path;
+
+use super::features::{Features, N_FEATURES};
+use super::{ModeClass, ModeOracle};
+use crate::util::error::{Error, Result};
+
+/// One flattened tree node.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TreeNode {
+    /// Split feature index, or -1 for a leaf.
+    pub feature: i32,
+    /// Split threshold (`x[feature] <= threshold` goes left).
+    pub threshold: f32,
+    /// Left child index (-1 at leaves).
+    pub left: i32,
+    /// Right child index (-1 at leaves).
+    pub right: i32,
+    /// Leaf class (-1 at internal nodes).
+    pub leaf_class: i32,
+}
+
+/// A validated decision tree.
+#[derive(Debug, Clone)]
+pub struct DecisionTree {
+    nodes: Vec<TreeNode>,
+    depth: usize,
+}
+
+impl DecisionTree {
+    /// Build from nodes, validating shape (bounds, acyclicity, leaf
+    /// consistency) and computing the depth.
+    pub fn from_nodes(nodes: Vec<TreeNode>) -> Result<DecisionTree> {
+        if nodes.is_empty() {
+            return Err(Error::Parse("empty decision tree".into()));
+        }
+        let n = nodes.len() as i32;
+        // Validate + depth via iterative DFS; detects cycles by visit cap.
+        let mut depth = 0usize;
+        let mut stack = vec![(0i32, 1usize)];
+        let mut visited = 0usize;
+        while let Some((idx, d)) = stack.pop() {
+            visited += 1;
+            if visited > nodes.len() {
+                return Err(Error::Parse("decision tree has a cycle or shared node".into()));
+            }
+            let node = &nodes[idx as usize];
+            depth = depth.max(d);
+            if node.feature < 0 {
+                if !(0..=2).contains(&node.leaf_class) {
+                    return Err(Error::Parse(format!(
+                        "leaf {idx} has invalid class {}",
+                        node.leaf_class
+                    )));
+                }
+            } else {
+                if node.feature as usize >= N_FEATURES {
+                    return Err(Error::Parse(format!(
+                        "node {idx} splits on invalid feature {}",
+                        node.feature
+                    )));
+                }
+                if node.left < 0 || node.left >= n || node.right < 0 || node.right >= n {
+                    return Err(Error::Parse(format!("node {idx} has out-of-range child")));
+                }
+                stack.push((node.left, d + 1));
+                stack.push((node.right, d + 1));
+            }
+        }
+        Ok(DecisionTree { nodes, depth })
+    }
+
+    /// Parse the text artifact.
+    pub fn parse(text: &str) -> Result<DecisionTree> {
+        let mut lines = text
+            .lines()
+            .map(str::trim)
+            .filter(|l| !l.is_empty() && !l.starts_with('#'));
+        let magic = lines.next().ok_or_else(|| Error::Parse("empty file".into()))?;
+        if magic != "dtree-v1" {
+            return Err(Error::Parse(format!("bad magic: {magic:?}")));
+        }
+        let header = lines.next().ok_or_else(|| Error::Parse("missing header".into()))?;
+        let h: Vec<&str> = header.split_whitespace().collect();
+        if h.len() != 4 || h[0] != "nodes" || h[2] != "depth" {
+            return Err(Error::Parse(format!("bad header: {header:?}")));
+        }
+        let n: usize = h[1]
+            .parse()
+            .map_err(|_| Error::Parse(format!("bad node count: {}", h[1])))?;
+        let mut nodes = vec![
+            TreeNode {
+                feature: -1,
+                threshold: 0.0,
+                left: -1,
+                right: -1,
+                leaf_class: 0
+            };
+            n
+        ];
+        let mut seen = vec![false; n];
+        for line in lines {
+            let f: Vec<&str> = line.split_whitespace().collect();
+            if f.len() != 6 {
+                return Err(Error::Parse(format!("bad node line: {line:?}")));
+            }
+            let idx: usize = f[0]
+                .parse()
+                .map_err(|_| Error::Parse(format!("bad idx: {}", f[0])))?;
+            if idx >= n {
+                return Err(Error::Parse(format!("node index {idx} >= {n}")));
+            }
+            if seen[idx] {
+                return Err(Error::Parse(format!("duplicate node {idx}")));
+            }
+            seen[idx] = true;
+            nodes[idx] = TreeNode {
+                feature: f[1].parse().map_err(|_| Error::Parse("bad feature".into()))?,
+                threshold: f[2].parse().map_err(|_| Error::Parse("bad threshold".into()))?,
+                left: f[3].parse().map_err(|_| Error::Parse("bad left".into()))?,
+                right: f[4].parse().map_err(|_| Error::Parse("bad right".into()))?,
+                leaf_class: f[5].parse().map_err(|_| Error::Parse("bad class".into()))?,
+            };
+        }
+        if !seen.iter().all(|&s| s) {
+            return Err(Error::Parse("missing node lines".into()));
+        }
+        Self::from_nodes(nodes)
+    }
+
+    /// Load from a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<DecisionTree> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        Self::parse(&text)
+    }
+
+    /// Serialize to the artifact format.
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        out.push_str("dtree-v1\n");
+        out.push_str(&format!("nodes {} depth {}\n", self.nodes.len(), self.depth));
+        for (i, n) in self.nodes.iter().enumerate() {
+            out.push_str(&format!(
+                "{} {} {} {} {} {}\n",
+                i, n.feature, n.threshold, n.left, n.right, n.leaf_class
+            ));
+        }
+        out
+    }
+
+    /// Predict a class from an encoded feature vector.
+    pub fn predict_encoded(&self, x: &[f32; N_FEATURES]) -> ModeClass {
+        let mut idx = 0usize;
+        loop {
+            let node = &self.nodes[idx];
+            if node.feature < 0 {
+                return ModeClass::from_u8(node.leaf_class as u8);
+            }
+            idx = if x[node.feature as usize] <= node.threshold {
+                node.left as usize
+            } else {
+                node.right as usize
+            };
+        }
+    }
+
+    /// Node count.
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Tree depth (root = depth 1).
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Raw node access (for the XLA-vs-native agreement test).
+    pub fn nodes(&self) -> &[TreeNode] {
+        &self.nodes
+    }
+
+    /// A tiny built-in tree mirroring [`super::ThresholdOracle`], used
+    /// when no trained artifact is available. Feature encoding per
+    /// [`Features::encode`]: x0 threads, x1 log2(1+size),
+    /// x2 log2(1+key_range), x3 insert_pct.
+    pub fn builtin_fallback() -> DecisionTree {
+        let leaf = |c: i32| TreeNode {
+            feature: -1,
+            threshold: 0.0,
+            left: -1,
+            right: -1,
+            leaf_class: c,
+        };
+        let split = |f: i32, t: f32, l: i32, r: i32| TreeNode {
+            feature: f,
+            threshold: t,
+            left: l,
+            right: r,
+            leaf_class: -1,
+        };
+        // 0: threads <= 8 -> neutral(1) else 2
+        // 2: insert_pct <= 45 -> aware(3) else 4
+        // 4: size <= ~3000 (log2 ~ 11.55) -> aware(5) else 6
+        // 6: insert_pct <= 65 -> neutral(7) else 8
+        // 8: key_range large (log2 > 13) -> oblivious else neutral
+        let nodes = vec![
+            split(0, 8.0, 1, 2),
+            leaf(0),
+            split(3, 45.0, 3, 4),
+            leaf(2),
+            split(1, 11.55, 5, 6),
+            leaf(2),
+            split(3, 65.0, 7, 8),
+            leaf(0),
+            split(2, 13.0, 9, 10),
+            leaf(0),
+            leaf(1),
+        ];
+        Self::from_nodes(nodes).expect("builtin tree is valid")
+    }
+}
+
+impl ModeOracle for DecisionTree {
+    fn predict(&self, f: &Features) -> ModeClass {
+        self.predict_encoded(&f.encode())
+    }
+
+    fn oracle_name(&self) -> &'static str {
+        "dtree-native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_tree_matches_threshold_oracle_spotchecks() {
+        let t = DecisionTree::builtin_fallback();
+        assert_eq!(
+            t.predict(&Features::new(50.0, 1000.0, 2048.0, 25.0)),
+            ModeClass::Aware
+        );
+        assert_eq!(
+            t.predict(&Features::new(50.0, 1_000_000.0, 50_000_000.0, 100.0)),
+            ModeClass::Oblivious
+        );
+        assert_eq!(
+            t.predict(&Features::new(4.0, 100.0, 200.0, 50.0)),
+            ModeClass::Neutral
+        );
+    }
+
+    #[test]
+    fn text_roundtrip() {
+        let t = DecisionTree::builtin_fallback();
+        let text = t.to_text();
+        let t2 = DecisionTree::parse(&text).unwrap();
+        assert_eq!(t.node_count(), t2.node_count());
+        assert_eq!(t.depth(), t2.depth());
+        // Predictions identical over a grid.
+        for threads in [1.0, 8.0, 16.0, 57.0] {
+            for size in [10.0, 3000.0, 1e6] {
+                for range in [100.0, 1e4, 1e8] {
+                    for pct in [0.0, 45.0, 80.0, 100.0] {
+                        let f = Features::new(threads, size, range, pct);
+                        assert_eq!(t.predict(&f), t2.predict(&f));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(DecisionTree::parse("").is_err());
+        assert!(DecisionTree::parse("wrong-magic\nnodes 1 depth 1\n0 -1 0 -1 -1 0").is_err());
+        // Cycle: node 0 points to itself.
+        let bad = "dtree-v1\nnodes 1 depth 1\n0 0 1.0 0 0 -1";
+        assert!(DecisionTree::parse(bad).is_err());
+        // Invalid leaf class.
+        let bad = "dtree-v1\nnodes 1 depth 1\n0 -1 0 -1 -1 7";
+        assert!(DecisionTree::parse(bad).is_err());
+        // Out-of-range child.
+        let bad = "dtree-v1\nnodes 2 depth 2\n0 0 1.0 1 5 -1\n1 -1 0 -1 -1 0";
+        assert!(DecisionTree::parse(bad).is_err());
+        // Missing node line.
+        let bad = "dtree-v1\nnodes 2 depth 2\n0 0 1.0 1 1 -1";
+        assert!(DecisionTree::parse(bad).is_err());
+    }
+
+    #[test]
+    fn depth_computed() {
+        let t = DecisionTree::builtin_fallback();
+        assert!(t.depth() >= 3 && t.depth() <= 8, "depth={}", t.depth());
+    }
+
+    #[test]
+    fn single_leaf_tree() {
+        let t = DecisionTree::parse("dtree-v1\nnodes 1 depth 1\n0 -1 0 -1 -1 2").unwrap();
+        assert_eq!(
+            t.predict(&Features::new(1.0, 1.0, 1.0, 50.0)),
+            ModeClass::Aware
+        );
+    }
+}

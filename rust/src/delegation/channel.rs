@@ -1,0 +1,282 @@
+//! The ffwd client↔server cache-line protocol [65], faithfully laid out:
+//!
+//! * **Request line** (one per client, 128 B, exclusively written by that
+//!   client): operation code, key, value, and a toggle whose flip
+//!   publishes a new request.
+//! * **Response line** (one per *group* of up to [`GROUP_SIZE`] clients,
+//!   exclusively written by the serving server): one 8-byte primary
+//!   return + one 8-byte secondary return per client, plus per-client
+//!   toggle bytes. Sharing one line among the group means one cache-line
+//!   transfer publishes up to 7 responses (the paper's key bandwidth
+//!   optimization; 7 = 64-byte line budget of their machine — we keep the
+//!   same grouping for comparability).
+//!
+//! Memory ordering: payload stores are `Relaxed`, the toggle flip is
+//! `Release`, and toggle polls are `Acquire` — the toggle is the only
+//! synchronization point, exactly like ffwd's fence placement.
+
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+
+/// Clients per response line (7 in the paper for 64-byte lines; one line
+/// carries seven 8-byte returns plus toggle bits).
+pub const GROUP_SIZE: usize = 7;
+
+/// Operation codes carried in a request line.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum OpCode {
+    /// No request.
+    Nop = 0,
+    /// `insert(key, value)`.
+    Insert = 1,
+    /// `deleteMin()`.
+    DeleteMin = 2,
+}
+
+impl OpCode {
+    /// Decode; unknown values map to `Nop` (robust against torn writes —
+    /// which cannot happen here, but defensive).
+    pub fn from_u8(x: u8) -> OpCode {
+        match x {
+            1 => OpCode::Insert,
+            2 => OpCode::DeleteMin,
+            _ => OpCode::Nop,
+        }
+    }
+}
+
+/// A client's dedicated request cache line.
+#[repr(C, align(128))]
+pub struct RequestLine {
+    /// Toggle: flipped (0↔1) by the client to publish a request.
+    pub toggle: AtomicU8,
+    /// Operation code.
+    pub op: AtomicU8,
+    _pad0: [u8; 6],
+    /// Key operand.
+    pub key: AtomicU64,
+    /// Value operand.
+    pub value: AtomicU64,
+}
+
+impl RequestLine {
+    /// Idle line.
+    pub fn new() -> Self {
+        RequestLine {
+            toggle: AtomicU8::new(0),
+            op: AtomicU8::new(OpCode::Nop as u8),
+            _pad0: [0; 6],
+            key: AtomicU64::new(0),
+            value: AtomicU64::new(0),
+        }
+    }
+
+    /// Client side: publish a request (payload relaxed, toggle release).
+    #[inline]
+    pub fn publish(&self, op: OpCode, key: u64, value: u64) {
+        self.key.store(key, Ordering::Relaxed);
+        self.value.store(value, Ordering::Relaxed);
+        self.op.store(op as u8, Ordering::Relaxed);
+        let t = self.toggle.load(Ordering::Relaxed);
+        self.toggle.store(t ^ 1, Ordering::Release);
+    }
+
+    /// Server side: poll for a new request given the last observed toggle.
+    /// Returns the decoded request and the new toggle, or `None`.
+    #[inline]
+    pub fn poll(&self, last_toggle: u8) -> Option<(OpCode, u64, u64, u8)> {
+        let t = self.toggle.load(Ordering::Acquire);
+        if t == last_toggle {
+            return None;
+        }
+        let op = OpCode::from_u8(self.op.load(Ordering::Relaxed));
+        let key = self.key.load(Ordering::Relaxed);
+        let value = self.value.load(Ordering::Relaxed);
+        Some((op, key, value, t))
+    }
+}
+
+impl Default for RequestLine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The response line shared by one client group.
+#[repr(C, align(128))]
+pub struct ResponseLine {
+    /// Per-client (primary, secondary) return values, interleaved.
+    pub rets: [AtomicU64; 2 * GROUP_SIZE],
+    /// Per-client toggles; flipped by the server after writing returns.
+    pub toggles: [AtomicU8; GROUP_SIZE],
+}
+
+impl ResponseLine {
+    /// Idle line.
+    pub fn new() -> Self {
+        const Z64: AtomicU64 = AtomicU64::new(0);
+        const Z8: AtomicU8 = AtomicU8::new(0);
+        ResponseLine {
+            rets: [Z64; 2 * GROUP_SIZE],
+            toggles: [Z8; GROUP_SIZE],
+        }
+    }
+
+    /// Server side: write a client's response and flip its toggle.
+    #[inline]
+    pub fn write(&self, pos: usize, primary: u64, secondary: u64) {
+        self.rets[2 * pos].store(primary, Ordering::Relaxed);
+        self.rets[2 * pos + 1].store(secondary, Ordering::Relaxed);
+        let t = self.toggles[pos].load(Ordering::Relaxed);
+        self.toggles[pos].store(t ^ 1, Ordering::Release);
+    }
+
+    /// Client side: spin until the toggle leaves `last`, then read returns.
+    /// Returns (primary, secondary, new_toggle).
+    #[inline]
+    pub fn wait(&self, pos: usize, last: u8) -> (u64, u64, u8) {
+        let mut backoff = crate::util::sync::Backoff::new();
+        loop {
+            let t = self.toggles[pos].load(Ordering::Acquire);
+            if t != last {
+                let p = self.rets[2 * pos].load(Ordering::Relaxed);
+                let s = self.rets[2 * pos + 1].load(Ordering::Relaxed);
+                return (p, s, t);
+            }
+            backoff.snooze();
+        }
+    }
+
+    /// Non-blocking response check (used by adaptive clients that also
+    /// need to watch for mode flips while waiting).
+    #[inline]
+    pub fn try_read(&self, pos: usize, last: u8) -> Option<(u64, u64, u8)> {
+        let t = self.toggles[pos].load(Ordering::Acquire);
+        if t == last {
+            return None;
+        }
+        let p = self.rets[2 * pos].load(Ordering::Relaxed);
+        let s = self.rets[2 * pos + 1].load(Ordering::Relaxed);
+        Some((p, s, t))
+    }
+}
+
+impl Default for ResponseLine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Encoding of `Option<(u64,u64)>` deleteMin results over the two return
+/// slots: primary = 0 means "empty queue" (user keys are never 0).
+pub mod encode {
+    /// Encode a deleteMin result.
+    #[inline]
+    pub fn delete_min(res: Option<(u64, u64)>) -> (u64, u64) {
+        match res {
+            Some((k, v)) => (k, v),
+            None => (0, 0),
+        }
+    }
+
+    /// Decode a deleteMin result.
+    #[inline]
+    pub fn decode_delete_min(primary: u64, secondary: u64) -> Option<(u64, u64)> {
+        if primary == 0 {
+            None
+        } else {
+            Some((primary, secondary))
+        }
+    }
+
+    /// Encode an insert result.
+    #[inline]
+    pub fn insert(ok: bool) -> (u64, u64) {
+        (ok as u64 + 1, 0) // 1 = false, 2 = true; 0 reserved for "no resp"
+    }
+
+    /// Decode an insert result.
+    #[inline]
+    pub fn decode_insert(primary: u64) -> bool {
+        primary == 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_sizes_and_alignment() {
+        assert_eq!(std::mem::align_of::<RequestLine>(), 128);
+        assert_eq!(std::mem::size_of::<RequestLine>(), 128);
+        assert_eq!(std::mem::align_of::<ResponseLine>(), 128);
+        // 14*8 + 7 = 119 -> padded to 128.
+        assert_eq!(std::mem::size_of::<ResponseLine>(), 128);
+    }
+
+    #[test]
+    fn request_roundtrip() {
+        let line = RequestLine::new();
+        assert!(line.poll(0).is_none());
+        line.publish(OpCode::Insert, 42, 7);
+        let (op, k, v, t) = line.poll(0).expect("request visible");
+        assert_eq!(op, OpCode::Insert);
+        assert_eq!((k, v), (42, 7));
+        assert_eq!(t, 1);
+        assert!(line.poll(1).is_none(), "same request seen twice");
+        line.publish(OpCode::DeleteMin, 0, 0);
+        let (op2, _, _, t2) = line.poll(1).unwrap();
+        assert_eq!(op2, OpCode::DeleteMin);
+        assert_eq!(t2, 0);
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let line = ResponseLine::new();
+        assert!(line.try_read(3, 0).is_none());
+        line.write(3, 11, 22);
+        let (p, s, t) = line.wait(3, 0);
+        assert_eq!((p, s, t), (11, 22, 1));
+        // Other slots untouched.
+        assert!(line.try_read(2, 0).is_none());
+    }
+
+    #[test]
+    fn cross_thread_handoff() {
+        use std::sync::Arc;
+        let req = Arc::new(RequestLine::new());
+        let resp = Arc::new(ResponseLine::new());
+        let (rq, rs) = (req.clone(), resp.clone());
+        let server = std::thread::spawn(move || {
+            let mut last = 0u8;
+            let mut served = 0;
+            while served < 100 {
+                if let Some((op, k, v, t)) = rq.poll(last) {
+                    last = t;
+                    assert_eq!(op, OpCode::Insert);
+                    rs.write(0, k + v, 0);
+                    served += 1;
+                }
+                std::hint::spin_loop();
+            }
+        });
+        let mut last_resp = 0u8;
+        for i in 0..100u64 {
+            req.publish(OpCode::Insert, i, 1);
+            let (p, _, t) = resp.wait(0, last_resp);
+            last_resp = t;
+            assert_eq!(p, i + 1);
+        }
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn encode_decode() {
+        use encode::*;
+        assert_eq!(decode_delete_min(0, 0), None);
+        assert_eq!(decode_delete_min(5, 9), Some((5, 9)));
+        assert!(decode_insert(insert(true).0));
+        assert!(!decode_insert(insert(false).0));
+    }
+}

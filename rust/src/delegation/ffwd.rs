@@ -1,0 +1,254 @@
+//! `ffwd` [65]: fast, fly-weight delegation. *One* dedicated server thread
+//! executes every operation on a **serial** priority queue on behalf of
+//! all clients, so the structure stays in one core's cache hierarchy and
+//! needs no synchronization. Its throughput is bounded by a single
+//! thread's — the paper's key observation motivating Nuddle.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::delegation::channel::{encode, OpCode, RequestLine, ResponseLine, GROUP_SIZE};
+use crate::pq::seq::SeqSkipListPQ;
+use crate::pq::traits::{ConcurrentPQ, PqStats};
+
+/// Globally unique ids for TLS client registration.
+static NEXT_QUEUE_ID: AtomicU64 = AtomicU64::new(1);
+
+struct Shared {
+    id: u64,
+    requests: Vec<RequestLine>,   // one per client slot
+    responses: Vec<ResponseLine>, // one per group
+    next_slot: AtomicUsize,
+    stop: AtomicBool,
+    stats: PqStats,
+}
+
+/// The ffwd priority queue. Spawns its server thread on construction;
+/// client threads are registered transparently on first use.
+pub struct FfwdPQ {
+    shared: Arc<Shared>,
+    server: Option<std::thread::JoinHandle<()>>,
+}
+
+struct ClientSlot {
+    shared: Arc<Shared>,
+    slot: usize,
+    resp_toggle: u8,
+}
+
+thread_local! {
+    static CLIENTS: RefCell<HashMap<u64, ClientSlot>> = RefCell::new(HashMap::new());
+}
+
+impl FfwdPQ {
+    /// Create an ffwd queue accepting up to `max_clients` client threads.
+    /// `seed` feeds the serial skip list's tower RNG.
+    pub fn new(max_clients: usize, seed: u64) -> Self {
+        let groups = max_clients.div_ceil(GROUP_SIZE);
+        let shared = Arc::new(Shared {
+            id: NEXT_QUEUE_ID.fetch_add(1, Ordering::Relaxed),
+            requests: (0..groups * GROUP_SIZE).map(|_| RequestLine::new()).collect(),
+            responses: (0..groups).map(|_| ResponseLine::new()).collect(),
+            next_slot: AtomicUsize::new(0),
+            stop: AtomicBool::new(false),
+            stats: PqStats::new(),
+        });
+        let srv_shared = shared.clone();
+        let server = std::thread::Builder::new()
+            .name("ffwd-server".into())
+            .spawn(move || Self::server_loop(srv_shared, seed))
+            .expect("spawn ffwd server");
+        FfwdPQ {
+            shared,
+            server: Some(server),
+        }
+    }
+
+    /// The server: polls every request line, executes on the serial queue,
+    /// and publishes responses group by group (buffered, as in the paper).
+    fn server_loop(shared: Arc<Shared>, seed: u64) {
+        let mut pq = SeqSkipListPQ::new(seed);
+        let n_slots = shared.requests.len();
+        let mut last_toggle = vec![0u8; n_slots];
+        while !shared.stop.load(Ordering::Acquire) {
+            for (g, resp_line) in shared.responses.iter().enumerate() {
+                // Process the whole group, buffering responses locally.
+                let mut buffered: [(usize, u64, u64); GROUP_SIZE] =
+                    [(usize::MAX, 0, 0); GROUP_SIZE];
+                let mut n_buf = 0;
+                for pos in 0..GROUP_SIZE {
+                    let slot = g * GROUP_SIZE + pos;
+                    if let Some((op, key, value, t)) =
+                        shared.requests[slot].poll(last_toggle[slot])
+                    {
+                        last_toggle[slot] = t;
+                        let (p, s) = match op {
+                            OpCode::Insert => {
+                                let ok = pq.insert(key, value);
+                                if ok {
+                                    shared.stats.record_insert(key);
+                                } else {
+                                    shared.stats.record_failed_insert();
+                                }
+                                encode::insert(ok)
+                            }
+                            OpCode::DeleteMin => {
+                                let r = pq.delete_min();
+                                match r {
+                                    Some(_) => shared.stats.record_delete_min(),
+                                    None => shared.stats.record_empty_delete_min(),
+                                }
+                                encode::delete_min(r)
+                            }
+                            OpCode::Nop => continue,
+                        };
+                        buffered[n_buf] = (pos, p, s);
+                        n_buf += 1;
+                    }
+                }
+                // Publish the group's responses back-to-back: one dirty
+                // line carries them all.
+                for &(pos, p, s) in &buffered[..n_buf] {
+                    resp_line.write(pos, p, s);
+                }
+            }
+            std::hint::spin_loop();
+        }
+    }
+
+    /// Operation counters (server-side view).
+    pub fn stats(&self) -> &PqStats {
+        &self.shared.stats
+    }
+
+    fn with_client<R>(&self, f: impl FnOnce(&mut ClientSlot) -> R) -> R {
+        CLIENTS.with(|m| {
+            let mut m = m.borrow_mut();
+            let entry = m.entry(self.shared.id).or_insert_with(|| {
+                let slot = self.shared.next_slot.fetch_add(1, Ordering::AcqRel);
+                assert!(
+                    slot < self.shared.requests.len(),
+                    "ffwd: more client threads than max_clients={}",
+                    self.shared.requests.len()
+                );
+                ClientSlot {
+                    shared: self.shared.clone(),
+                    slot,
+                    resp_toggle: 0,
+                }
+            });
+            f(entry)
+        })
+    }
+}
+
+impl ClientSlot {
+    fn call(&mut self, op: OpCode, key: u64, value: u64) -> (u64, u64) {
+        let group = self.slot / GROUP_SIZE;
+        let pos = self.slot % GROUP_SIZE;
+        self.shared.requests[self.slot].publish(op, key, value);
+        let (p, s, t) = self.shared.responses[group].wait(pos, self.resp_toggle);
+        self.resp_toggle = t;
+        (p, s)
+    }
+}
+
+impl ConcurrentPQ for FfwdPQ {
+    fn insert(&self, key: u64, value: u64) -> bool {
+        crate::pq::traits::check_user_key(key);
+        let (p, _) = self.with_client(|c| c.call(OpCode::Insert, key, value));
+        encode::decode_insert(p)
+    }
+
+    fn delete_min(&self) -> Option<(u64, u64)> {
+        let (p, s) = self.with_client(|c| c.call(OpCode::DeleteMin, 0, 0));
+        encode::decode_delete_min(p, s)
+    }
+
+    fn len(&self) -> usize {
+        self.shared.stats.size()
+    }
+
+    fn name(&self) -> &'static str {
+        "ffwd"
+    }
+}
+
+impl Drop for FfwdPQ {
+    fn drop(&mut self) {
+        self.shared.stop.store(true, Ordering::Release);
+        if let Some(h) = self.server.take() {
+            let _ = h.join();
+        }
+        // Drop this queue's TLS registration for the current thread (other
+        // threads' entries keep only an Arc<Shared>, which is harmless).
+        CLIENTS.with(|m| {
+            m.borrow_mut().remove(&self.shared.id);
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_client_ordered() {
+        let q = FfwdPQ::new(8, 42);
+        assert!(q.insert(5, 50));
+        assert!(q.insert(2, 20));
+        assert!(!q.insert(5, 51));
+        assert_eq!(q.delete_min(), Some((2, 20)));
+        assert_eq!(q.delete_min(), Some((5, 50)));
+        assert_eq!(q.delete_min(), None);
+        assert_eq!(q.name(), "ffwd");
+    }
+
+    #[test]
+    fn multi_client_conservation() {
+        let q = Arc::new(FfwdPQ::new(16, 7));
+        let hs: Vec<_> = (0..4u64)
+            .map(|t| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    let mut net = 0i64;
+                    for i in 0..300u64 {
+                        if q.insert(1 + t + 4 * i, i) {
+                            net += 1;
+                        }
+                        if i % 2 == 0 && q.delete_min().is_some() {
+                            net -= 1;
+                        }
+                    }
+                    net
+                })
+            })
+            .collect();
+        let net: i64 = hs.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(q.len() as i64, net);
+    }
+
+    #[test]
+    fn delete_min_is_globally_ordered_single_thread() {
+        // With one client, ffwd must behave exactly like the serial queue.
+        let q = FfwdPQ::new(8, 1);
+        for k in [9u64, 4, 6, 1, 8] {
+            q.insert(k, k);
+        }
+        let got: Vec<u64> = std::iter::from_fn(|| q.delete_min().map(|(k, _)| k)).collect();
+        assert_eq!(got, vec![1, 4, 6, 8, 9]);
+    }
+
+    #[test]
+    fn stats_reflect_ops() {
+        let q = FfwdPQ::new(8, 3);
+        q.insert(10, 0);
+        q.insert(11, 0);
+        q.delete_min();
+        assert_eq!(q.stats().inserts.load(Ordering::Relaxed), 2);
+        assert_eq!(q.stats().delete_mins.load(Ordering::Relaxed), 1);
+        assert_eq!(q.len(), 1);
+    }
+}

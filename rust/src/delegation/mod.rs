@@ -1,0 +1,17 @@
+//! Delegation-based NUMA-aware priority queues.
+//!
+//! - [`channel`] — the ffwd cache-line request/response protocol [65]:
+//!   one dedicated 128-byte request line per client, one shared response
+//!   line per group of up to 7 clients (8-byte returns + toggle bytes).
+//! - [`ffwd`] — single-server delegation over a *serial* queue (the
+//!   paper's `ffwd` baseline).
+//! - [`nuddle`] — the paper's first contribution: multi-server delegation
+//!   over a *concurrent* NUMA-oblivious base, keeping the structure in one
+//!   NUMA node's memory hierarchy while scaling to several servers.
+
+pub mod channel;
+pub mod ffwd;
+pub mod nuddle;
+
+pub use ffwd::FfwdPQ;
+pub use nuddle::{Nuddle, NuddleClient, NuddleServer};

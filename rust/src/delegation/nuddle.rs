@@ -1,0 +1,408 @@
+//! *NUMA Node Delegation* (Nuddle) — the paper's first contribution (§2).
+//!
+//! Nuddle generalizes ffwd: **multiple** server threads, all located on
+//! one NUMA node, execute operations on behalf of client threads grouped
+//! into client-thread groups (round-robin assigned to servers, paper
+//! Fig. 5). Because several servers mutate the shared structure
+//! concurrently, the base must be a *concurrent* NUMA-oblivious
+//! implementation — which is precisely what lets SmartPQ later switch
+//! modes without any synchronization point.
+//!
+//! Deviation from the paper's literal pseudo-code, documented in
+//! DESIGN.md: our servers also scan request lines (cheaply, with idle
+//! sleeping) while in NUMA-*oblivious* mode, so a request published
+//! exactly at a mode transition is never stranded. The paper's
+//! `serve_requests` simply returns in oblivious mode and leaves the
+//! transition race unaddressed.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::delegation::channel::{encode, OpCode, RequestLine, ResponseLine, GROUP_SIZE};
+use crate::pq::traits::ConcurrentPQ;
+
+/// Algorithmic-mode encoding shared with SmartPQ (paper Fig. 8: `algo`).
+pub mod mode {
+    /// Clients operate directly on the NUMA-oblivious base.
+    pub const OBLIVIOUS: u8 = 1;
+    /// Clients delegate to the servers (NUMA-aware).
+    pub const AWARE: u8 = 2;
+}
+
+static NEXT_QUEUE_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Configuration for a Nuddle instance.
+#[derive(Debug, Clone)]
+pub struct NuddleConfig {
+    /// Number of server threads (the paper evaluates 8).
+    pub servers: usize,
+    /// Maximum number of client threads.
+    pub max_clients: usize,
+    /// Idle sleep between sweeps when no requests arrive (µs). Keeps
+    /// oblivious-mode servers nearly free.
+    pub idle_sleep_us: u64,
+}
+
+impl Default for NuddleConfig {
+    fn default() -> Self {
+        NuddleConfig {
+            servers: 8,
+            max_clients: 64,
+            idle_sleep_us: 50,
+        }
+    }
+}
+
+pub(crate) struct NuddleShared<B: ConcurrentPQ> {
+    pub id: u64,
+    pub base: Arc<B>,
+    pub requests: Vec<RequestLine>,
+    pub responses: Vec<ResponseLine>,
+    pub next_slot: AtomicUsize,
+    pub stop: AtomicBool,
+    /// Shared algorithmic mode (always AWARE for a standalone Nuddle;
+    /// SmartPQ installs its own switchable cell).
+    pub mode: Arc<AtomicU8>,
+}
+
+/// The Nuddle NUMA-aware wrapper around a concurrent base `B`.
+pub struct Nuddle<B: ConcurrentPQ + 'static> {
+    shared: Arc<NuddleShared<B>>,
+    servers: Vec<std::thread::JoinHandle<()>>,
+    cfg: NuddleConfig,
+}
+
+/// A registered client's channel endpoints.
+struct ClientSlot<B: ConcurrentPQ> {
+    shared: Arc<NuddleShared<B>>,
+    slot: usize,
+    resp_toggle: u8,
+}
+
+/// A server's serving state over its assigned groups — usable standalone
+/// (paper §4: benchmark server threads interleave `serve_requests` with
+/// their own operations).
+pub struct NuddleServer<B: ConcurrentPQ> {
+    shared: Arc<NuddleShared<B>>,
+    my_groups: Vec<usize>,
+    last_toggle: Vec<[u8; GROUP_SIZE]>,
+}
+
+/// Public client handle (explicit alternative to the transparent TLS
+/// registration; used by the examples).
+pub struct NuddleClient<B: ConcurrentPQ> {
+    inner: ClientSlot<B>,
+}
+
+impl<B: ConcurrentPQ + 'static> Nuddle<B> {
+    /// Wrap `base` with `cfg.servers` dedicated server threads.
+    pub fn new(base: Arc<B>, cfg: NuddleConfig) -> Self {
+        Self::with_mode(base, cfg, Arc::new(AtomicU8::new(mode::AWARE)))
+    }
+
+    /// Like [`Nuddle::new`], with an externally controlled mode cell
+    /// (SmartPQ's constructor).
+    pub fn with_mode(base: Arc<B>, cfg: NuddleConfig, mode_cell: Arc<AtomicU8>) -> Self {
+        assert!(cfg.servers >= 1, "need at least one server");
+        let groups = cfg.max_clients.div_ceil(GROUP_SIZE).max(1);
+        let shared = Arc::new(NuddleShared {
+            id: NEXT_QUEUE_ID.fetch_add(1, Ordering::Relaxed),
+            base,
+            requests: (0..groups * GROUP_SIZE).map(|_| RequestLine::new()).collect(),
+            responses: (0..groups).map(|_| ResponseLine::new()).collect(),
+            next_slot: AtomicUsize::new(0),
+            stop: AtomicBool::new(false),
+            mode: mode_cell,
+        });
+        let mut servers = Vec::with_capacity(cfg.servers);
+        for s in 0..cfg.servers {
+            // Round-robin group assignment (paper Fig. 5, initServer).
+            let my_groups: Vec<usize> = (0..groups).filter(|g| g % cfg.servers == s).collect();
+            let sh = shared.clone();
+            let idle = cfg.idle_sleep_us;
+            servers.push(
+                std::thread::Builder::new()
+                    .name(format!("nuddle-server-{s}"))
+                    .spawn(move || {
+                        let mut srv = NuddleServer {
+                            last_toggle: vec![[0; GROUP_SIZE]; my_groups.len()],
+                            my_groups,
+                            shared: sh,
+                        };
+                        srv.run(idle);
+                    })
+                    .expect("spawn nuddle server"),
+            );
+        }
+        Nuddle {
+            shared,
+            servers,
+            cfg,
+        }
+    }
+
+    /// The shared concurrent base (SmartPQ's oblivious-mode target).
+    pub fn base(&self) -> &Arc<B> {
+        &self.shared.base
+    }
+
+    /// The shared mode cell.
+    pub fn mode_cell(&self) -> &Arc<AtomicU8> {
+        &self.shared.mode
+    }
+
+    /// Configured server count.
+    pub fn server_count(&self) -> usize {
+        self.cfg.servers
+    }
+
+    /// Register an explicit client handle.
+    pub fn client(&self) -> NuddleClient<B> {
+        NuddleClient {
+            inner: ClientSlot::register(&self.shared),
+        }
+    }
+
+    fn with_tls_client<R>(&self, f: impl FnOnce(&mut ClientSlot<B>) -> R) -> R {
+        ClientSlot::with_tls(&self.shared, f)
+    }
+}
+
+thread_local! {
+    /// queue-id → type-erased client slot.
+    static CLIENTS: RefCell<HashMap<u64, Box<dyn std::any::Any>>> = RefCell::new(HashMap::new());
+}
+
+impl<B: ConcurrentPQ + 'static> ClientSlot<B> {
+    fn register(shared: &Arc<NuddleShared<B>>) -> Self {
+        let slot = shared.next_slot.fetch_add(1, Ordering::AcqRel);
+        assert!(
+            slot < shared.requests.len(),
+            "nuddle: more client threads than max_clients={}",
+            shared.requests.len()
+        );
+        ClientSlot {
+            shared: shared.clone(),
+            slot,
+            resp_toggle: 0,
+        }
+    }
+
+    fn with_tls<R>(shared: &Arc<NuddleShared<B>>, f: impl FnOnce(&mut ClientSlot<B>) -> R) -> R {
+        CLIENTS.with(|m| {
+            let mut m = m.borrow_mut();
+            let any = m
+                .entry(shared.id)
+                .or_insert_with(|| Box::new(ClientSlot::register(shared)));
+            let slot = any
+                .downcast_mut::<ClientSlot<B>>()
+                .expect("queue id collision with different base type");
+            f(slot)
+        })
+    }
+
+    fn call(&mut self, op: OpCode, key: u64, value: u64) -> (u64, u64) {
+        let group = self.slot / GROUP_SIZE;
+        let pos = self.slot % GROUP_SIZE;
+        self.shared.requests[self.slot].publish(op, key, value);
+        let (p, s, t) = self.shared.responses[group].wait(pos, self.resp_toggle);
+        self.resp_toggle = t;
+        (p, s)
+    }
+}
+
+impl<B: ConcurrentPQ> NuddleServer<B> {
+    /// Serve all pending requests of this server's groups once.
+    /// Returns the number of requests served (paper: `serve_requests`).
+    pub fn serve_requests(&mut self) -> usize {
+        let mut served = 0;
+        for (gi, &g) in self.my_groups.iter().enumerate() {
+            let resp_line = &self.shared.responses[g];
+            let mut buffered: [(usize, u64, u64); GROUP_SIZE] = [(usize::MAX, 0, 0); GROUP_SIZE];
+            let mut n_buf = 0;
+            for pos in 0..GROUP_SIZE {
+                let slot = g * GROUP_SIZE + pos;
+                if let Some((op, key, value, t)) =
+                    self.shared.requests[slot].poll(self.last_toggle[gi][pos])
+                {
+                    self.last_toggle[gi][pos] = t;
+                    let (p, s) = match op {
+                        OpCode::Insert => encode::insert(self.shared.base.insert(key, value)),
+                        OpCode::DeleteMin => encode::delete_min(self.shared.base.delete_min()),
+                        OpCode::Nop => continue,
+                    };
+                    buffered[n_buf] = (pos, p, s);
+                    n_buf += 1;
+                }
+            }
+            for &(pos, p, s) in &buffered[..n_buf] {
+                resp_line.write(pos, p, s);
+            }
+            served += n_buf;
+        }
+        served
+    }
+
+    fn run(&mut self, idle_sleep_us: u64) {
+        while !self.shared.stop.load(Ordering::Acquire) {
+            let served = self.serve_requests();
+            if served == 0 {
+                // In aware mode under load this is rare; in oblivious mode
+                // it keeps the servers almost idle (see module docs).
+                if self.shared.mode.load(Ordering::Relaxed) == mode::OBLIVIOUS {
+                    std::thread::sleep(std::time::Duration::from_micros(idle_sleep_us));
+                } else {
+                    std::hint::spin_loop();
+                }
+            }
+        }
+    }
+}
+
+impl<B: ConcurrentPQ + 'static> NuddleClient<B> {
+    /// Delegated insert.
+    pub fn insert(&mut self, key: u64, value: u64) -> bool {
+        crate::pq::traits::check_user_key(key);
+        let (p, _) = self.inner.call(OpCode::Insert, key, value);
+        encode::decode_insert(p)
+    }
+
+    /// Delegated deleteMin.
+    pub fn delete_min(&mut self) -> Option<(u64, u64)> {
+        let (p, s) = self.inner.call(OpCode::DeleteMin, 0, 0);
+        encode::decode_delete_min(p, s)
+    }
+}
+
+impl<B: ConcurrentPQ + 'static> ConcurrentPQ for Nuddle<B> {
+    fn insert(&self, key: u64, value: u64) -> bool {
+        crate::pq::traits::check_user_key(key);
+        let (p, _) = self.with_tls_client(|c| c.call(OpCode::Insert, key, value));
+        encode::decode_insert(p)
+    }
+
+    fn delete_min(&self) -> Option<(u64, u64)> {
+        let (p, s) = self.with_tls_client(|c| c.call(OpCode::DeleteMin, 0, 0));
+        encode::decode_delete_min(p, s)
+    }
+
+    fn len(&self) -> usize {
+        self.shared.base.len()
+    }
+
+    fn name(&self) -> &'static str {
+        "nuddle"
+    }
+}
+
+impl<B: ConcurrentPQ + 'static> Drop for Nuddle<B> {
+    fn drop(&mut self) {
+        self.shared.stop.store(true, Ordering::Release);
+        for h in self.servers.drain(..) {
+            let _ = h.join();
+        }
+        CLIENTS.with(|m| {
+            m.borrow_mut().remove(&self.shared.id);
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pq::spraylist::AlistarhHerlihy;
+    use crate::pq::SprayList;
+
+    fn make(servers: usize, clients: usize) -> Nuddle<AlistarhHerlihy> {
+        let base = Arc::new(SprayList::new(servers));
+        Nuddle::new(
+            base,
+            NuddleConfig {
+                servers,
+                max_clients: clients,
+                idle_sleep_us: 10,
+            },
+        )
+    }
+
+    #[test]
+    fn basic_ops_single_thread() {
+        let q = make(2, 8);
+        assert!(q.insert(5, 50));
+        assert!(q.insert(3, 30));
+        assert!(!q.insert(5, 51));
+        assert_eq!(q.len(), 2);
+        let mut ks: Vec<u64> = std::iter::from_fn(|| q.delete_min().map(|(k, _)| k)).collect();
+        ks.sort_unstable();
+        assert_eq!(ks, vec![3, 5]);
+        assert_eq!(q.name(), "nuddle");
+    }
+
+    #[test]
+    fn shares_base_with_direct_access() {
+        // The defining Nuddle property: the base stays a concurrent
+        // structure that can also be accessed directly.
+        let q = make(1, 8);
+        q.insert(10, 1); // via delegation
+        assert!(q.base().insert(20, 2)); // direct
+        assert_eq!(q.len(), 2);
+        let mut ks: Vec<u64> = std::iter::from_fn(|| q.delete_min().map(|(k, _)| k)).collect();
+        ks.sort_unstable();
+        assert_eq!(ks, vec![10, 20]);
+    }
+
+    #[test]
+    fn many_clients_conservation() {
+        let q = Arc::new(make(2, 32));
+        let hs: Vec<_> = (0..6u64)
+            .map(|t| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    let mut net = 0i64;
+                    for i in 0..200u64 {
+                        if q.insert(1 + t + 6 * i, i) {
+                            net += 1;
+                        }
+                        if i % 2 == 1 && q.delete_min().is_some() {
+                            net -= 1;
+                        }
+                    }
+                    net
+                })
+            })
+            .collect();
+        let net: i64 = hs.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(q.len() as i64, net);
+    }
+
+    #[test]
+    fn explicit_client_handles() {
+        let q = make(1, 8);
+        let mut c = q.client();
+        assert!(c.insert(7, 70));
+        assert_eq!(c.delete_min(), Some((7, 70)));
+        assert_eq!(c.delete_min(), None);
+    }
+
+    #[test]
+    fn group_round_robin_assignment() {
+        // With 3 servers and 10 groups, groups g are owned by g % 3.
+        let base: Arc<AlistarhHerlihy> = Arc::new(SprayList::new(4));
+        let q = Nuddle::new(
+            base,
+            NuddleConfig {
+                servers: 3,
+                max_clients: 10 * GROUP_SIZE,
+                idle_sleep_us: 10,
+            },
+        );
+        assert_eq!(q.server_count(), 3);
+        // Sanity: operations still work with the partitioned assignment.
+        for k in 1..=20u64 {
+            assert!(q.insert(k, k));
+        }
+        assert_eq!(q.len(), 20);
+    }
+}

@@ -1,0 +1,570 @@
+//! One generator per paper figure/table. Each returns the [`Table`]s it
+//! prints, and writes CSVs under `target/reports/` for plotting.
+//!
+//! Absolute magnitudes come from the simulated testbed (see DESIGN.md §2;
+//! the simulator reproduces *relative* behavior — who wins, where the
+//! crossovers fall); every generator therefore also prints the shape
+//! checks the paper's claims rest on.
+
+use std::sync::Arc;
+
+use crate::classifier::{DecisionTree, ModeOracle};
+use crate::harness::runner::{measure, BenchConfig};
+use crate::harness::table::{fmt, Table};
+use crate::sim::{run_workload, SimAlgo, Workload, WorkloadPhase};
+use crate::util::stats::geomean;
+
+const REPORT_DIR: &str = "target/reports";
+
+/// Thread counts used for scaling sweeps (hyperthreading past 32,
+/// oversubscription past 64 — the paper's x-axes).
+pub fn thread_sweep(quick: bool) -> Vec<usize> {
+    if quick {
+        vec![1, 8, 29, 64]
+    } else {
+        vec![1, 8, 15, 22, 29, 36, 43, 50, 57, 64, 96]
+    }
+}
+
+fn phase_ms(ms: f64) -> f64 {
+    ms * 1e6
+}
+
+/// Default virtual measurement window per point (ms).
+const POINT_MS: f64 = 2.0;
+
+fn point(algo: &SimAlgo, threads: usize, size: u64, range: u64, pct: f64, seed: u64) -> f64 {
+    let w = Workload::single(size, range, threads, pct, POINT_MS, seed);
+    run_workload(algo, &w).overall_mops()
+}
+
+// ------------------------------------------------------------------ Fig. 1
+
+/// Figure 1: motivation — NUMA-oblivious vs NUMA-aware across op mixes at
+/// 64 threads (init 1024, range 2048).
+pub fn fig1(cfg: &BenchConfig) -> Vec<Table> {
+    let mixes = [100.0, 80.0, 60.0, 40.0, 20.0, 0.0];
+    let algos = [
+        SimAlgo::AlistarhHerlihy,
+        SimAlgo::Nuddle { servers: 8 },
+    ];
+    let mut t = Table::new(
+        "Figure 1: throughput (Mops/s), 64 threads, 1024 init keys, range 2048",
+        &["algo", "100/0", "80/20", "60/40", "40/60", "20/80", "0/100"],
+    );
+    for algo in &algos {
+        let mut row = vec![algo.name().to_string()];
+        for &pct in &mixes {
+            let m = measure(cfg, format!("{}@{pct}", algo.name()), "Mops", |s| {
+                point(algo, 64, 1024, 2048, pct, 42 + s as u64)
+            });
+            row.push(fmt(m.value()));
+        }
+        t.row(row);
+    }
+    t.print();
+    let _ = t.write_csv(format!("{REPORT_DIR}/fig1.csv"));
+    // Shape check (paper: oblivious wins insert-dominated; aware wins
+    // deleteMin-dominated).
+    let obv_ins = point(&algos[0], 64, 1024, 2048, 100.0, 1);
+    let ndl_ins = point(&algos[1], 64, 1024, 2048, 100.0, 1);
+    let obv_del = point(&algos[0], 64, 1024, 2048, 0.0, 1);
+    let ndl_del = point(&algos[1], 64, 1024, 2048, 0.0, 1);
+    println!(
+        "shape: insert-dominated oblivious/aware = {:.2}x (want > 1); \
+         deleteMin-dominated aware/oblivious = {:.2}x (want > 1)\n",
+        obv_ins / ndl_ins,
+        ndl_del / obv_del
+    );
+    vec![t]
+}
+
+// ------------------------------------------------------------------ Fig. 7
+
+/// Figure 7a: Nuddle vs its base vs thread count (80/20, large size).
+pub fn fig7a(cfg: &BenchConfig) -> Table {
+    let threads = thread_sweep(cfg.quick);
+    let mut t = Table::new(
+        "Figure 7a: Mops/s vs threads (80% insert, init 1M, range 8M)",
+        &std::iter::once("algo")
+            .chain(threads.iter().map(|s| Box::leak(format!("{s}thr").into_boxed_str()) as &str))
+            .collect::<Vec<_>>(),
+    );
+    for algo in [SimAlgo::AlistarhHerlihy, SimAlgo::Nuddle { servers: 8 }] {
+        let mut row = vec![algo.name().to_string()];
+        for &n in &threads {
+            let m = measure(cfg, format!("{}@{n}", algo.name()), "Mops", |s| {
+                point(&algo, n, 1_000_000, 8_000_000, 80.0, 7 + s as u64)
+            });
+            row.push(fmt(m.value()));
+        }
+        t.row(row);
+    }
+    t.print();
+    let _ = t.write_csv(format!("{REPORT_DIR}/fig7a.csv"));
+    t
+}
+
+/// Figure 7b: Nuddle vs its base vs key range (insert-dominated).
+pub fn fig7b(cfg: &BenchConfig) -> Table {
+    let ranges: &[u64] = if cfg.quick {
+        &[2_000, 1_000_000, 200_000_000]
+    } else {
+        &[2_000, 10_000, 100_000, 1_000_000, 10_000_000, 50_000_000, 200_000_000]
+    };
+    let mut t = Table::new(
+        "Figure 7b: Mops/s vs key range (36 threads, 80% insert, init 1M)",
+        &std::iter::once("algo")
+            .chain(ranges.iter().map(|r| Box::leak(format!("{r}").into_boxed_str()) as &str))
+            .collect::<Vec<_>>(),
+    );
+    for algo in [SimAlgo::AlistarhHerlihy, SimAlgo::Nuddle { servers: 8 }] {
+        let mut row = vec![algo.name().to_string()];
+        for &r in ranges {
+            let m = measure(cfg, format!("{}@{r}", algo.name()), "Mops", |s| {
+                point(&algo, 36, 1_000_000, r, 80.0, 11 + s as u64)
+            });
+            row.push(fmt(m.value()));
+        }
+        t.row(row);
+    }
+    t.print();
+    let _ = t.write_csv(format!("{REPORT_DIR}/fig7b.csv"));
+    t
+}
+
+// ------------------------------------------------------------------ Fig. 9
+
+/// Figure 9: the full grid — sizes × op mixes × thread counts × all five
+/// static queues.
+pub fn fig9(cfg: &BenchConfig) -> Vec<Table> {
+    let sizes: &[u64] = if cfg.quick {
+        &[100_000]
+    } else {
+        &[100_000, 1_000_000, 10_000_000]
+    };
+    let mixes = [(100.0, "100/0"), (50.0, "50/50"), (0.0, "0/100")];
+    let threads = thread_sweep(cfg.quick);
+    let mut out = Vec::new();
+    for &size in sizes {
+        for &(pct, mix_label) in &mixes {
+            let mut t = Table::new(
+                format!(
+                    "Figure 9 [{mix_label} ins/del, init {size}, range {}]: Mops/s vs threads",
+                    2 * size
+                ),
+                &std::iter::once("algo")
+                    .chain(threads.iter().map(|s| Box::leak(format!("{s}") .into_boxed_str()) as &str))
+                    .collect::<Vec<_>>(),
+            );
+            for algo in SimAlgo::fig9_set() {
+                let mut row = vec![algo.name().to_string()];
+                for &n in &threads {
+                    let m = measure(cfg, format!("{}@{n}", algo.name()), "Mops", |s| {
+                        point(&algo, n, size, 2 * size, pct, 100 + s as u64)
+                    });
+                    row.push(fmt(m.value()));
+                }
+                t.row(row);
+            }
+            t.print();
+            let _ = t.write_csv(format!(
+                "{REPORT_DIR}/fig9_{size}_{}.csv",
+                mix_label.replace('/', "-")
+            ));
+            out.push(t);
+        }
+    }
+    out
+}
+
+// ------------------------------------------- Fig. 10 / Tables 2a-c
+
+/// The three algorithms every dynamic benchmark compares (paper §4.2.2).
+fn dynamic_algos() -> Vec<SimAlgo> {
+    vec![
+        SimAlgo::SmartPQ {
+            servers: 8,
+            oracle: None,
+        },
+        SimAlgo::Nuddle { servers: 8 },
+        SimAlgo::AlistarhHerlihy,
+    ]
+}
+
+/// Phase table 2a: varying key range (50 threads, 75/25).
+pub fn table2a_phases(ms: f64) -> (u64, Vec<WorkloadPhase>) {
+    let ranges = [100_000u64, 2_000, 1_000_000, 10_000, 50_000_000];
+    (
+        1149,
+        ranges
+            .iter()
+            .map(|&r| WorkloadPhase {
+                duration_ns: phase_ms(ms),
+                threads: 50,
+                insert_pct: 75.0,
+                key_range: r,
+            })
+            .collect(),
+    )
+}
+
+/// Phase table 2b: varying thread count (65/35, range 20M).
+pub fn table2b_phases(ms: f64) -> (u64, Vec<WorkloadPhase>) {
+    let threads = [57usize, 29, 15, 43, 15];
+    (
+        1166,
+        threads
+            .iter()
+            .map(|&n| WorkloadPhase {
+                duration_ns: phase_ms(ms),
+                threads: n,
+                insert_pct: 65.0,
+                key_range: 20_000_000,
+            })
+            .collect(),
+    )
+}
+
+/// Phase table 2c: varying op mix (22 threads, range 5M).
+pub fn table2c_phases(ms: f64) -> (u64, Vec<WorkloadPhase>) {
+    let mixes = [50.0, 100.0, 30.0, 100.0, 0.0];
+    (
+        1_000_000,
+        mixes
+            .iter()
+            .map(|&p| WorkloadPhase {
+                duration_ns: phase_ms(ms),
+                threads: 22,
+                insert_pct: p,
+                key_range: 5_000_000,
+            })
+            .collect(),
+    )
+}
+
+/// Phase table 3 (Figure 11): everything varies.
+pub fn table3_phases(ms: f64) -> (u64, Vec<WorkloadPhase>) {
+    // (key_range, threads, insert_pct) per 25s phase of the paper.
+    let spec: [(u64, usize, f64); 15] = [
+        (10_000_000, 57, 50.0),
+        (10_000_000, 36, 70.0),
+        (20_000_000, 36, 50.0),
+        (20_000_000, 36, 80.0),
+        (20_000_000, 50, 80.0),
+        (100_000_000, 50, 50.0),
+        (100_000_000, 57, 50.0),
+        (100_000_000, 22, 100.0),
+        (100_000_000, 22, 50.0),
+        (100_000_000, 22, 50.0),
+        (200_000_000, 57, 0.0),
+        (200_000_000, 57, 100.0),
+        (20_000_000, 57, 0.0),
+        (20_000_000, 29, 80.0),
+        (20_000_000, 29, 50.0),
+    ];
+    (
+        1_000_000,
+        spec.iter()
+            .map(|&(r, n, p)| WorkloadPhase {
+                duration_ns: phase_ms(ms),
+                threads: n,
+                insert_pct: p,
+                key_range: r,
+            })
+            .collect(),
+    )
+}
+
+fn run_dynamic(title: &str, csv: &str, init: u64, phases: Vec<WorkloadPhase>) -> Table {
+    let mut header = vec!["algo".to_string()];
+    for (i, p) in phases.iter().enumerate() {
+        header.push(format!("ph{}({}t/{}%)", i, p.threads, p.insert_pct as u32));
+    }
+    header.push("overall".into());
+    header.push("switches".into());
+    let hdr: Vec<&str> = header.iter().map(String::as_str).collect();
+    let mut t = Table::new(title, &hdr);
+    let mut per_algo = Vec::new();
+    for algo in dynamic_algos() {
+        let w = Workload {
+            init_size: init,
+            phases: phases.clone(),
+            seed: 33,
+            topology: Default::default(),
+            cost: Default::default(),
+            params: Default::default(),
+        };
+        let r = run_workload(&algo, &w);
+        let mut row = vec![algo.name().to_string()];
+        for p in &r.phases {
+            row.push(fmt(p.mops));
+        }
+        row.push(fmt(r.overall_mops()));
+        row.push(r.total_switches().to_string());
+        t.row(row);
+        per_algo.push((algo.name(), r));
+    }
+    t.print();
+    let _ = t.write_csv(format!("{REPORT_DIR}/{csv}"));
+    // Headline ratios (paper: SmartPQ 1.87x over alistarh_herlihy, 1.38x
+    // over Nuddle on the Figure 11 workload).
+    let smart = per_algo[0].1.overall_mops();
+    let nuddle = per_algo[1].1.overall_mops();
+    let herlihy = per_algo[2].1.overall_mops();
+    println!(
+        "headline: smartpq/alistarh_herlihy = {:.2}x, smartpq/nuddle = {:.2}x, switches = {}\n",
+        smart / herlihy,
+        smart / nuddle,
+        per_algo[0].1.total_switches()
+    );
+    t
+}
+
+/// Figure 10a-c (Tables 2a-c): single-feature dynamic workloads.
+pub fn fig10(cfg: &BenchConfig) -> Vec<Table> {
+    let ms = if cfg.quick { 1.0 } else { 4.0 };
+    let (i_a, p_a) = table2a_phases(ms);
+    let (i_b, p_b) = table2b_phases(ms);
+    let (i_c, p_c) = table2c_phases(ms);
+    vec![
+        run_dynamic(
+            "Figure 10a / Table 2a: varying key range (50 thr, 75/25)",
+            "fig10a.csv",
+            i_a,
+            p_a,
+        ),
+        run_dynamic(
+            "Figure 10b / Table 2b: varying threads (65/35, range 20M)",
+            "fig10b.csv",
+            i_b,
+            p_b,
+        ),
+        run_dynamic(
+            "Figure 10c / Table 2c: varying op mix (22 thr, range 5M)",
+            "fig10c.csv",
+            i_c,
+            p_c,
+        ),
+    ]
+}
+
+/// Figure 11 / Table 3: all features vary (the headline benchmark).
+pub fn fig11(cfg: &BenchConfig) -> Table {
+    let ms = if cfg.quick { 1.0 } else { 4.0 };
+    let (init, phases) = table3_phases(ms);
+    run_dynamic(
+        "Figure 11 / Table 3: varying all contention features",
+        "fig11.csv",
+        init,
+        phases,
+    )
+}
+
+// ---------------------------------------------------- §4.2.1 classifier
+
+/// §4.2.1: classifier accuracy + misprediction cost over random
+/// workloads, ground truth measured on the simulator.
+pub fn classifier_eval(cfg: &BenchConfig, n_workloads: usize) -> Table {
+    use crate::classifier::features::Features;
+    use crate::classifier::ModeClass;
+    use crate::util::rng::Rng;
+
+    let oracle: Arc<dyn ModeOracle> = crate::sim::driver::default_oracle();
+    let tie = 1.5; // Mops, paper §3.1.2
+    let mut rng = Rng::new(0xC1A5);
+    let threads_choices = [1usize, 4, 8, 15, 22, 29, 36, 43, 50, 57, 64];
+    let n = if cfg.quick { n_workloads.min(60) } else { n_workloads };
+    let mut correct = 0usize;
+    let mut mispredicted = 0usize;
+    let mut costs = Vec::new();
+    for i in 0..n {
+        let threads = threads_choices[rng.gen_range(threads_choices.len() as u64) as usize];
+        let size = 10f64.powf(1.0 + rng.gen_f64() * 6.0) as u64;
+        let range = (size as f64 * 10f64.powf(0.1 + rng.gen_f64() * 2.5)) as u64;
+        let pct = rng.gen_f64() * 100.0;
+        let obv = point(&SimAlgo::AlistarhHerlihy, threads, size, range, pct, 900 + i as u64);
+        let ndl = point(&SimAlgo::Nuddle { servers: 8 }, threads, size, range, pct, 900 + i as u64);
+        let truth = if (obv - ndl).abs() < tie {
+            ModeClass::Neutral
+        } else if obv > ndl {
+            ModeClass::Oblivious
+        } else {
+            ModeClass::Aware
+        };
+        let f = Features::new(threads as f64, size as f64, range as f64, pct);
+        let pred = oracle.predict(&f);
+        let ok = pred == truth
+            || truth == ModeClass::Neutral // either mode acceptable in a tie
+            || (pred == ModeClass::Neutral && (obv - ndl).abs() < 2.0 * tie);
+        if ok {
+            correct += 1;
+        } else {
+            mispredicted += 1;
+            let (best, got) = if truth == ModeClass::Oblivious {
+                (obv, ndl)
+            } else {
+                (ndl, obv)
+            };
+            costs.push(((best - got) / got).max(1e-3) * 100.0);
+        }
+    }
+    let acc = 100.0 * correct as f64 / n as f64;
+    let cost = if costs.is_empty() { 0.0 } else { geomean(&costs) };
+    let mut t = Table::new(
+        "§4.2.1: classifier accuracy (paper: 87.9%, misprediction cost 30.2%)",
+        &["workloads", "accuracy_%", "mispredictions", "geomean_cost_%"],
+    );
+    t.row(vec![
+        n.to_string(),
+        format!("{acc:.1}"),
+        mispredicted.to_string(),
+        format!("{cost:.1}"),
+    ]);
+    t.print();
+    let _ = t.write_csv(format!("{REPORT_DIR}/classifier_eval.csv"));
+    t
+}
+
+// ------------------------------------------------------------- ablations
+
+/// Ablation: Nuddle server count (the paper fixes 8; how sensitive?).
+pub fn ablation_servers(cfg: &BenchConfig) -> Table {
+    let servers = [1usize, 2, 4, 8, 12, 16];
+    let scenarios = [
+        ("deleteMin-heavy 100K", 100_000u64, 200_000u64, 10.0),
+        ("balanced 1M", 1_000_000, 2_000_000, 50.0),
+    ];
+    let mut header = vec!["scenario".to_string()];
+    header.extend(servers.iter().map(|s| format!("{s} srv")));
+    let hdr: Vec<&str> = header.iter().map(String::as_str).collect();
+    let mut t = Table::new("Ablation: Nuddle server count (64 threads, Mops/s)", &hdr);
+    for (label, size, range, pct) in scenarios {
+        let mut row = vec![label.to_string()];
+        for &s in &servers {
+            let m = measure(cfg, format!("{label}@{s}"), "Mops", |i| {
+                point(&SimAlgo::Nuddle { servers: s }, 64, size, range, pct, 50 + i as u64)
+            });
+            row.push(fmt(m.value()));
+        }
+        t.row(row);
+    }
+    t.print();
+    let _ = t.write_csv(format!("{REPORT_DIR}/ablation_servers.csv"));
+    t
+}
+
+/// Ablation: decision interval sensitivity (paper uses 1 s / 25 s phases).
+pub fn ablation_decision_interval(cfg: &BenchConfig) -> Table {
+    let ms = if cfg.quick { 1.0 } else { 4.0 };
+    let (init, phases) = table3_phases(ms);
+    let dividers = [5.0, 25.0, 100.0];
+    let mut t = Table::new(
+        "Ablation: SmartPQ decision interval (fraction of phase length)",
+        &["interval (phase/x)", "overall Mops", "switches"],
+    );
+    for d in dividers {
+        let w = Workload {
+            init_size: init,
+            phases: phases.clone(),
+            seed: 33,
+            topology: Default::default(),
+            cost: Default::default(),
+            params: Default::default(),
+        };
+        // Reuse SmartPQ but scale the interval by patching the phase
+        // duration the driver derives from.
+        let algo = SimAlgo::SmartPQ {
+            servers: 8,
+            oracle: None,
+        };
+        let mut w2 = w;
+        // driver derives interval = first-phase duration / 25; emulate
+        // other dividers by scaling the first phase only for derivation.
+        let r = {
+            let interval = phases[0].duration_ns / d;
+            let oracle = crate::sim::driver::default_oracle();
+            let _ = (algo, interval, &oracle);
+            // Direct engine use for custom interval:
+            use crate::sim::engine::{Engine, EngineAlgo, PhaseCfg};
+            use crate::sim::models::oblivious::ObvKind;
+            use crate::sim::topology::PlacementPolicy;
+            let mut e = Engine::new(
+                EngineAlgo::Smart {
+                    servers: 8,
+                    base: ObvKind::AlistarhHerlihy,
+                    oracle,
+                    decision_interval: interval,
+                },
+                PlacementPolicy::paper(Default::default()),
+                w2.cost.clone(),
+                w2.params.clone(),
+                w2.init_size,
+                w2.phases[0].key_range,
+                w2.phases.iter().map(|p| p.threads).max().unwrap(),
+                w2.seed,
+            );
+            let mut ops = 0u64;
+            let mut dur = 0.0;
+            let mut switches = 0u64;
+            for p in std::mem::take(&mut w2.phases) {
+                let s = e.run_phase(PhaseCfg {
+                    duration: p.duration_ns,
+                    threads: p.threads,
+                    insert_pct: p.insert_pct,
+                    key_range: p.key_range,
+                });
+                ops += s.ops;
+                dur += s.duration;
+                switches += s.switches;
+            }
+            (ops as f64 / (dur / 1e9) / 1e6, switches)
+        };
+        t.row(vec![format!("1/{d}"), fmt(r.0), r.1.to_string()]);
+    }
+    t.print();
+    let _ = t.write_csv(format!("{REPORT_DIR}/ablation_interval.csv"));
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> BenchConfig {
+        BenchConfig {
+            warmup: 0,
+            samples: 1,
+            quick: true,
+        }
+    }
+
+    #[test]
+    fn fig1_runs() {
+        let t = fig1(&quick());
+        assert_eq!(t[0].len(), 2);
+    }
+
+    #[test]
+    fn fig10a_phases_match_table2a() {
+        let (init, phases) = table2a_phases(1.0);
+        assert_eq!(init, 1149);
+        assert_eq!(phases.len(), 5);
+        assert_eq!(phases[4].key_range, 50_000_000);
+        assert!(phases.iter().all(|p| p.threads == 50 && p.insert_pct == 75.0));
+    }
+
+    #[test]
+    fn table3_has_15_phases() {
+        let (_, phases) = table3_phases(1.0);
+        assert_eq!(phases.len(), 15);
+        assert_eq!(phases[10].insert_pct, 0.0);
+        assert_eq!(phases[11].insert_pct, 100.0);
+    }
+
+    #[test]
+    fn classifier_eval_runs() {
+        let t = classifier_eval(&quick(), 20);
+        assert_eq!(t.len(), 1);
+    }
+}

@@ -1,0 +1,14 @@
+//! Benchmark harness (criterion is unavailable offline, so the framework
+//! is in-tree): warmup, repeated samples, outlier-robust summaries, and
+//! aligned table/CSV reporting. The per-figure generators live in
+//! [`figures`]; both the `cargo bench` targets and the `smartpq bench`
+//! CLI call into them so there is exactly one implementation of each
+//! experiment.
+
+pub mod figures;
+pub mod real_bench;
+pub mod runner;
+pub mod table;
+
+pub use runner::{BenchConfig, Measurement};
+pub use table::Table;

@@ -1,0 +1,104 @@
+//! Real-plane benchmarks: drive the *actual* concurrent queues (atomics,
+//! OS threads) for a wall-clock window and report throughput. On a
+//! multi-core NUMA host these are the paper's real experiments; on this
+//! 1-core CI box they are functional/latency measurements (the scalability
+//! figures come from the simulator — DESIGN.md §2).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::pq::traits::ConcurrentPQ;
+use crate::util::rng::Rng;
+
+/// Result of one real run.
+#[derive(Debug, Clone)]
+pub struct RealRunResult {
+    /// Total completed operations.
+    pub ops: u64,
+    /// Wall-clock duration.
+    pub elapsed: Duration,
+    /// Mops/s.
+    pub mops: f64,
+    /// Final queue length.
+    pub final_len: usize,
+}
+
+/// Run `threads` workers against `q` for `dur`, each performing the given
+/// insert/deleteMin mix over `key_range` (the paper's microbenchmark loop,
+/// including the 25-pause delay between operations).
+pub fn run_real<Q: ConcurrentPQ + 'static>(
+    q: Arc<Q>,
+    threads: usize,
+    insert_pct: f64,
+    key_range: u64,
+    init_size: u64,
+    dur: Duration,
+    seed: u64,
+) -> RealRunResult {
+    // Pre-fill.
+    {
+        let mut rng = Rng::new(seed);
+        let mut inserted = 0;
+        while inserted < init_size {
+            if q.insert(1 + rng.gen_range(key_range), 0) {
+                inserted += 1;
+            }
+        }
+    }
+    let stop = Arc::new(AtomicBool::new(false));
+    let total_ops = Arc::new(AtomicU64::new(0));
+    let workers: Vec<_> = (0..threads)
+        .map(|t| {
+            let q = q.clone();
+            let stop = stop.clone();
+            let total = total_ops.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::stream(seed ^ 0xBEEF, t as u64);
+                let mut ops = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    if rng.gen_f64() * 100.0 < insert_pct {
+                        q.insert(1 + rng.gen_range(key_range), ops);
+                    } else {
+                        q.delete_min();
+                    }
+                    ops += 1;
+                    // The paper's inter-op delay loop: 25 pauses.
+                    for _ in 0..25 {
+                        std::hint::spin_loop();
+                    }
+                }
+                total.fetch_add(ops, Ordering::Relaxed);
+            })
+        })
+        .collect();
+    let t0 = Instant::now();
+    std::thread::sleep(dur);
+    stop.store(true, Ordering::Release);
+    for w in workers {
+        let _ = w.join();
+    }
+    let elapsed = t0.elapsed();
+    let ops = total_ops.load(Ordering::Relaxed);
+    RealRunResult {
+        ops,
+        elapsed,
+        mops: ops as f64 / elapsed.as_secs_f64() / 1e6,
+        final_len: q.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pq::spraylist::AlistarhHerlihy;
+    use crate::pq::SprayList;
+
+    #[test]
+    fn real_run_produces_ops() {
+        let q: Arc<AlistarhHerlihy> = Arc::new(SprayList::new(4));
+        let r = run_real(q, 2, 60.0, 10_000, 100, Duration::from_millis(80), 5);
+        assert!(r.ops > 100, "ops={}", r.ops);
+        assert!(r.mops > 0.0);
+    }
+}

@@ -1,0 +1,103 @@
+//! Measurement core: run a closure repeatedly, summarize robustly.
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    /// Warmup iterations (not measured).
+    pub warmup: u32,
+    /// Measured samples.
+    pub samples: u32,
+    /// Quick mode (override via `SMARTPQ_BENCH_QUICK=1`): fewer samples
+    /// for CI smoke runs.
+    pub quick: bool,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        let quick = std::env::var("SMARTPQ_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+        BenchConfig {
+            warmup: 0,
+            samples: if quick { 1 } else { 2 },
+            quick,
+        }
+    }
+}
+
+/// One measured quantity with its sample summary.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    /// Label (e.g. "alistarh_herlihy @ 64thr").
+    pub label: String,
+    /// Unit (e.g. "Mops/s", "ns/op").
+    pub unit: &'static str,
+    /// Sample summary.
+    pub summary: Summary,
+}
+
+impl Measurement {
+    /// Mean value.
+    pub fn value(&self) -> f64 {
+        self.summary.mean
+    }
+}
+
+/// Run `f` under the config; `f` returns the metric per invocation (e.g.
+/// Mops measured inside a simulated run).
+pub fn measure(cfg: &BenchConfig, label: impl Into<String>, unit: &'static str, mut f: impl FnMut(u32) -> f64) -> Measurement {
+    for i in 0..cfg.warmup {
+        std::hint::black_box(f(i));
+    }
+    let mut samples = Vec::with_capacity(cfg.samples as usize);
+    for i in 0..cfg.samples {
+        samples.push(f(cfg.warmup + i));
+    }
+    Measurement {
+        label: label.into(),
+        unit,
+        summary: Summary::of(&samples),
+    }
+}
+
+/// Wall-clock timing helper: ns per call of `f` over `iters` iterations.
+pub fn time_ns(iters: u64, mut f: impl FnMut()) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_nanos() as f64 / iters as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_collects_samples() {
+        let cfg = BenchConfig {
+            warmup: 2,
+            samples: 5,
+            quick: false,
+        };
+        let mut calls = 0u32;
+        let m = measure(&cfg, "x", "units", |i| {
+            calls += 1;
+            i as f64
+        });
+        assert_eq!(calls, 7);
+        assert_eq!(m.summary.n, 5);
+        // Samples are invocations 2..7 -> mean 4.
+        assert!((m.value() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_ns_positive() {
+        let ns = time_ns(100, || {
+            std::hint::black_box(42u64.wrapping_mul(7));
+        });
+        assert!(ns >= 0.0);
+    }
+}

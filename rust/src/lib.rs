@@ -1,0 +1,31 @@
+//! # SmartPQ — an adaptive concurrent priority queue for NUMA architectures
+//!
+//! Reproduction of *SmartPQ: An Adaptive Concurrent Priority Queue for NUMA
+//! Architectures* (Giannoula, Strati, Siakavaras, Goumas, Koziris, 2024).
+//!
+//! The crate is organised in three tiers:
+//!
+//! 1. **Concurrent library** ([`pq`], [`delegation`], [`adaptive`]) — real
+//!    lock-free / delegation-based priority queues runnable with OS threads.
+//! 2. **NUMA simulation substrate** ([`sim`]) — a deterministic
+//!    discrete-event simulator with a cache-coherence cost model that
+//!    reproduces the paper's 4-node / 64-hardware-context Sandy Bridge-EP
+//!    testbed on any host machine.
+//! 3. **Decision infrastructure** ([`classifier`], [`runtime`]) — the
+//!    decision-tree mode predictor; trained offline in Python/JAX and
+//!    executed either natively or through the AOT-compiled XLA artifact via
+//!    PJRT (never Python at runtime).
+//!
+//! See `DESIGN.md` for the full system inventory and experiment index.
+
+pub mod adaptive;
+pub mod classifier;
+pub mod delegation;
+pub mod harness;
+pub mod mem;
+pub mod pq;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+pub use util::error::{Error, Result};

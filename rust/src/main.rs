@@ -1,0 +1,359 @@
+//! `smartpq` — leader entrypoint.
+//!
+//! Subcommands:
+//!   bench        — regenerate paper figures/tables (see --figure)
+//!   train-data   — sweep the simulator to produce data/training.csv
+//!   point        — measure one simulated workload point
+//!   real         — run the real concurrent queues with OS threads
+//!   demo         — 30-second guided tour (SmartPQ adapting live)
+//!   classifier   — inspect / query the decision infrastructure
+
+use std::sync::Arc;
+
+use smartpq::classifier::features::Features;
+use smartpq::classifier::{DecisionTree, ModeOracle};
+use smartpq::harness::figures;
+use smartpq::harness::real_bench::run_real;
+use smartpq::harness::runner::BenchConfig;
+use smartpq::pq::traits::ConcurrentPQ;
+use smartpq::pq::SprayList;
+use smartpq::sim::{run_workload, SimAlgo, Workload};
+use smartpq::util::cli::Args;
+use smartpq::util::error::{Error, Result};
+use smartpq::util::rng::Rng;
+
+const USAGE: &str = "\
+smartpq — adaptive concurrent priority queue for NUMA architectures (paper reproduction)
+
+USAGE: smartpq <command> [options]
+
+COMMANDS
+  bench --figure <fig1|fig7|fig9|fig10|fig11|classifier|ablation|all>
+                          regenerate the paper's figures on the simulated
+                          4-node testbed (CSV copies under target/reports/)
+  train-data [--points N] [--out data/training.csv] [--duration-ms D]
+                          sweep (threads,size,range,mix) over the simulator
+                          and emit the classifier training set
+  point --algo A --threads N --size S --range R --insert-pct P
+                          one simulated measurement (algo: lotan_shavit,
+                          alistarh_fraser, alistarh_herlihy, ffwd, nuddle,
+                          smartpq)
+  real  --queue Q --threads N [--seconds S] [--insert-pct P] [--range R]
+                          drive the *real* concurrent queue with OS threads
+                          (queue: lotan_shavit, alistarh_fraser,
+                          alistarh_herlihy, ffwd, nuddle, smartpq, mutex_heap)
+  demo                    SmartPQ adapting across contention phases
+  classifier [--query \"threads,size,range,insert_pct\"]
+                          show model info; optionally classify one workload
+
+OPTIONS
+  --quick                 cut sample counts (CI smoke mode)
+  --seed <u64>            RNG seed (default 42)
+";
+
+fn parse_algo(name: &str) -> Result<SimAlgo> {
+    Ok(match name {
+        "lotan_shavit" => SimAlgo::LotanShavit,
+        "alistarh_fraser" => SimAlgo::AlistarhFraser,
+        "alistarh_herlihy" => SimAlgo::AlistarhHerlihy,
+        "ffwd" => SimAlgo::Ffwd,
+        "nuddle" => SimAlgo::Nuddle { servers: 8 },
+        "smartpq" => SimAlgo::SmartPQ {
+            servers: 8,
+            oracle: None,
+        },
+        other => return Err(Error::Config(format!("unknown algo {other:?}"))),
+    })
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let mut cfg = BenchConfig::default();
+    if args.flag("quick") {
+        cfg.quick = true;
+        cfg.warmup = 0;
+        cfg.samples = 1;
+    }
+    let fig = args.str_or("figure", "all");
+    let run_all = fig == "all";
+    if run_all || fig == "fig1" {
+        figures::fig1(&cfg);
+    }
+    if run_all || fig == "fig7" {
+        figures::fig7a(&cfg);
+        figures::fig7b(&cfg);
+    }
+    if run_all || fig == "fig9" {
+        figures::fig9(&cfg);
+    }
+    if run_all || fig == "fig10" {
+        figures::fig10(&cfg);
+    }
+    if run_all || fig == "fig11" {
+        figures::fig11(&cfg);
+    }
+    if run_all || fig == "classifier" {
+        figures::classifier_eval(&cfg, args.num_or("workloads", 400)?);
+    }
+    if run_all || fig == "ablation" {
+        figures::ablation_servers(&cfg);
+        figures::ablation_decision_interval(&cfg);
+    }
+    Ok(())
+}
+
+/// Sweep the simulator over the classifier feature grid and emit the
+/// training CSV (paper §3.1.2.3: 5525 workloads; configurable here).
+fn cmd_train_data(args: &Args) -> Result<()> {
+    let out = args.str_or("out", "data/training.csv");
+    let points: usize = args.num_or("points", 2000)?;
+    let dur_ms: f64 = args.num_or("duration-ms", 1.5)?;
+    let seed: u64 = args.num_or("seed", 42)?;
+    let mut rng = Rng::new(seed);
+    let threads_grid = [1usize, 4, 8, 15, 22, 29, 36, 43, 50, 57, 64];
+    let mut csv = String::from("threads,size,key_range,insert_pct,mops_oblivious,mops_aware\n");
+    for i in 0..points {
+        let threads = threads_grid[rng.gen_range(threads_grid.len() as u64) as usize];
+        let size = 10f64.powf(1.0 + rng.gen_f64() * 6.0) as u64;
+        let range = (size as f64 * 10f64.powf(0.1 + rng.gen_f64() * 2.5)) as u64;
+        let pct = (rng.gen_range(21) * 5) as f64; // 0,5,..,100
+        let w = |algo: &SimAlgo| {
+            run_workload(
+                algo,
+                &Workload::single(size, range, threads, pct, dur_ms, seed + i as u64),
+            )
+            .overall_mops()
+        };
+        let obv = w(&SimAlgo::AlistarhHerlihy);
+        let ndl = w(&SimAlgo::Nuddle { servers: 8 });
+        csv.push_str(&format!("{threads},{size},{range},{pct},{obv:.4},{ndl:.4}\n"));
+        if (i + 1) % 200 == 0 {
+            eprintln!("train-data: {}/{points}", i + 1);
+        }
+    }
+    if let Some(parent) = std::path::Path::new(&out).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(&out, csv)?;
+    println!("wrote {points} workloads to {out}");
+    println!("next: make retrain  (re-trains the classifier and rebuilds artifacts)");
+    Ok(())
+}
+
+fn cmd_point(args: &Args) -> Result<()> {
+    let algo = parse_algo(&args.str_or("algo", "alistarh_herlihy"))?;
+    let threads: usize = args.num_or("threads", 64)?;
+    let size: u64 = args.num_or("size", 1024)?;
+    let range: u64 = args.num_or("range", 2048)?;
+    let pct: f64 = args.num_or("insert-pct", 50.0)?;
+    let dur: f64 = args.num_or("duration-ms", 3.0)?;
+    let seed: u64 = args.num_or("seed", 42)?;
+    let r = run_workload(&algo, &Workload::single(size, range, threads, pct, dur, seed));
+    println!(
+        "{}: {:.3} Mops/s  (threads={threads} size={size} range={range} insert={pct}% \
+         virtual={dur}ms; dirty_transfers={} invalidations={})",
+        r.algo,
+        r.overall_mops(),
+        r.dirty_transfers,
+        r.invalidations
+    );
+    Ok(())
+}
+
+fn cmd_real(args: &Args) -> Result<()> {
+    let queue = args.str_or("queue", "alistarh_herlihy");
+    let threads: usize = args.num_or("threads", 4)?;
+    let secs: f64 = args.num_or("seconds", 1.0)?;
+    let pct: f64 = args.num_or("insert-pct", 50.0)?;
+    let range: u64 = args.num_or("range", 100_000)?;
+    let init: u64 = args.num_or("init", 1024)?;
+    let seed: u64 = args.num_or("seed", 42)?;
+    let dur = std::time::Duration::from_secs_f64(secs);
+    let r = match queue.as_str() {
+        "lotan_shavit" => run_real(
+            Arc::new(smartpq::pq::LotanShavitPQ::new()),
+            threads, pct, range, init, dur, seed,
+        ),
+        "alistarh_fraser" => run_real(
+            Arc::new(SprayList::<smartpq::pq::skiplist::fraser::FraserSkipList>::new(threads)),
+            threads, pct, range, init, dur, seed,
+        ),
+        "alistarh_herlihy" => run_real(
+            Arc::new(SprayList::<smartpq::pq::skiplist::herlihy::HerlihySkipList>::new(threads)),
+            threads, pct, range, init, dur, seed,
+        ),
+        "mutex_heap" => run_real(
+            Arc::new(smartpq::pq::MutexHeapPQ::new()),
+            threads, pct, range, init, dur, seed,
+        ),
+        "ffwd" => run_real(
+            Arc::new(smartpq::delegation::FfwdPQ::new(threads.max(8), seed)),
+            threads, pct, range, init, dur, seed,
+        ),
+        "nuddle" => {
+            let base = Arc::new(
+                SprayList::<smartpq::pq::skiplist::herlihy::HerlihySkipList>::new(threads),
+            );
+            run_real(
+                Arc::new(smartpq::delegation::Nuddle::new(
+                    base,
+                    smartpq::delegation::nuddle::NuddleConfig {
+                        servers: 2,
+                        max_clients: threads.max(8),
+                        idle_sleep_us: 50,
+                    },
+                )),
+                threads, pct, range, init, dur, seed,
+            )
+        }
+        "smartpq" => {
+            let base = Arc::new(
+                SprayList::<smartpq::pq::skiplist::herlihy::HerlihySkipList>::new(threads),
+            );
+            let oracle: Arc<dyn ModeOracle> = smartpq::sim::driver::default_oracle();
+            let q = smartpq::adaptive::SmartPQ::new(
+                base,
+                oracle,
+                smartpq::adaptive::SmartPQConfig {
+                    nuddle: smartpq::delegation::nuddle::NuddleConfig {
+                        servers: 2,
+                        max_clients: threads.max(8),
+                        idle_sleep_us: 50,
+                    },
+                    decision_interval: std::time::Duration::from_millis(200),
+                    initial_mode: smartpq::delegation::nuddle::mode::OBLIVIOUS,
+                    auto_decide: true,
+                },
+            );
+            q.set_threads_hint(threads);
+            run_real(Arc::new(q), threads, pct, range, init, dur, seed)
+        }
+        other => return Err(Error::Config(format!("unknown queue {other:?}"))),
+    };
+    println!(
+        "{queue}: {:.3} Mops/s over {:?} ({} ops, final len {})",
+        r.mops, r.elapsed, r.ops, r.final_len
+    );
+    Ok(())
+}
+
+fn cmd_demo(args: &Args) -> Result<()> {
+    let seed: u64 = args.num_or("seed", 42)?;
+    println!("SmartPQ demo: three contention phases on the simulated 4-node testbed\n");
+    let phases = vec![
+        smartpq::sim::WorkloadPhase {
+            duration_ns: 4e6,
+            threads: 64,
+            insert_pct: 20.0,
+            key_range: 200_000,
+        },
+        smartpq::sim::WorkloadPhase {
+            duration_ns: 4e6,
+            threads: 64,
+            insert_pct: 100.0,
+            key_range: 1 << 27,
+        },
+        smartpq::sim::WorkloadPhase {
+            duration_ns: 4e6,
+            threads: 64,
+            insert_pct: 30.0,
+            key_range: 100_000,
+        },
+    ];
+    for algo in [
+        SimAlgo::SmartPQ {
+            servers: 8,
+            oracle: None,
+        },
+        SimAlgo::Nuddle { servers: 8 },
+        SimAlgo::AlistarhHerlihy,
+    ] {
+        let w = Workload {
+            init_size: 100_000,
+            phases: phases.clone(),
+            seed,
+            topology: Default::default(),
+            cost: Default::default(),
+            params: Default::default(),
+        };
+        let r = run_workload(&algo, &w);
+        let per: Vec<String> = r.phases.iter().map(|p| format!("{:.2}", p.mops)).collect();
+        println!(
+            "{:>18}: phases [{}] Mops  overall {:.2}  switches {}",
+            r.algo,
+            per.join(", "),
+            r.overall_mops(),
+            r.total_switches()
+        );
+    }
+    println!("\nSmartPQ should track the per-phase winner. Run `smartpq bench --figure fig11`\nfor the paper's full dynamic benchmark.");
+    Ok(())
+}
+
+fn cmd_classifier(args: &Args) -> Result<()> {
+    let dir = args.str_or("artifacts", "artifacts");
+    let tree_path = format!("{dir}/dtree.txt");
+    let tree = if std::path::Path::new(&tree_path).exists() {
+        DecisionTree::load(&tree_path)?
+    } else {
+        println!("(no trained artifact at {tree_path}; using builtin fallback tree)");
+        DecisionTree::builtin_fallback()
+    };
+    println!(
+        "decision tree: {} nodes, depth {} (paper: 180 nodes, depth 8)",
+        tree.node_count(),
+        tree.depth()
+    );
+    if let Some(q) = args.get("query") {
+        let parts: Vec<f64> = q
+            .split(',')
+            .map(|s| s.trim().parse::<f64>())
+            .collect::<std::result::Result<_, _>>()
+            .map_err(|_| Error::Config(format!("bad --query {q:?}")))?;
+        if parts.len() != 4 {
+            return Err(Error::Config("--query needs threads,size,range,insert_pct".into()));
+        }
+        let f = Features::new(parts[0], parts[1], parts[2], parts[3]);
+        println!("native tree   → {:?}", tree.predict(&f));
+        if std::path::Path::new(&format!("{dir}/dtree.hlo.txt")).exists() {
+            let xla = smartpq::runtime::XlaClassifier::load(&dir)?;
+            println!("xla (PJRT)    → {:?}", xla.predict(&f));
+        }
+        if std::path::Path::new(&format!("{dir}/mlp.txt")).exists() {
+            let mlp = smartpq::runtime::MlpRegressor::load(format!("{dir}/mlp.txt"))?;
+            let (o, a) = mlp.predict(&f);
+            println!(
+                "mlp regressor → oblivious 2^{o:.2} = {:.2} Mops, aware 2^{a:.2} = {:.2} Mops",
+                2f32.powf(o),
+                2f32.powf(a)
+            );
+        }
+    }
+    Ok(())
+}
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.command.as_deref() {
+        Some("bench") => cmd_bench(&args),
+        Some("train-data") => cmd_train_data(&args),
+        Some("point") => cmd_point(&args),
+        Some("real") => cmd_real(&args),
+        Some("demo") => cmd_demo(&args),
+        Some("classifier") => cmd_classifier(&args),
+        Some("help") | None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => Err(Error::Config(format!("unknown command {other:?}"))),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,5 @@
+//! Memory-management substrate: epoch-based reclamation for the lock-free
+//! data structures (the ASCYLIB baselines the paper builds on use the
+//! equivalent `ssmem` allocator).
+
+pub mod epoch;

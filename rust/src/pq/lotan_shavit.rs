@@ -1,0 +1,129 @@
+//! lotan_shavit priority queue [47]: a skip-list-based concurrent PQ whose
+//! `deleteMin` separates logical deletion (claiming the leftmost live node
+//! with a CAS) from physical removal — exactly the ASCYLIB variant the
+//! paper benchmarks. Built on the Fraser lock-free skip list.
+
+use std::cell::RefCell;
+
+use crate::pq::skiplist::fraser::FraserSkipList;
+use crate::pq::traits::{ConcurrentPQ, PqStats};
+use crate::util::rng::Rng;
+
+thread_local! {
+    static TLS_RNG: RefCell<Rng> = RefCell::new(Rng::new({
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        use std::hash::{Hash, Hasher};
+        std::thread::current().id().hash(&mut h);
+        h.finish() ^ 0x107A_45AF
+    }));
+}
+
+/// The lotan_shavit queue.
+pub struct LotanShavitPQ {
+    list: FraserSkipList,
+    stats: PqStats,
+}
+
+impl LotanShavitPQ {
+    /// Empty queue.
+    pub fn new() -> Self {
+        LotanShavitPQ {
+            list: FraserSkipList::new(),
+            stats: PqStats::new(),
+        }
+    }
+
+    /// Operation counters.
+    pub fn stats(&self) -> &PqStats {
+        &self.stats
+    }
+}
+
+impl Default for LotanShavitPQ {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ConcurrentPQ for LotanShavitPQ {
+    fn insert(&self, key: u64, value: u64) -> bool {
+        let ok = TLS_RNG.with(|r| self.list.insert(key, value, &mut r.borrow_mut()));
+        if ok {
+            self.stats.record_insert(key);
+        } else {
+            self.stats.record_failed_insert();
+        }
+        ok
+    }
+
+    fn delete_min(&self) -> Option<(u64, u64)> {
+        let out = self.list.claim_leftmost();
+        match out {
+            Some(_) => self.stats.record_delete_min(),
+            None => self.stats.record_empty_delete_min(),
+        }
+        out
+    }
+
+    fn len(&self) -> usize {
+        self.stats.size()
+    }
+
+    fn name(&self) -> &'static str {
+        "lotan_shavit"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn exact_priority_order() {
+        let q = LotanShavitPQ::new();
+        for k in [50u64, 20, 90, 10, 60] {
+            assert!(q.insert(k, k + 1));
+        }
+        let order: Vec<u64> = std::iter::from_fn(|| q.delete_min().map(|(k, _)| k)).collect();
+        assert_eq!(order, vec![10, 20, 50, 60, 90]);
+        assert_eq!(q.name(), "lotan_shavit");
+    }
+
+    #[test]
+    fn values_travel_with_keys() {
+        let q = LotanShavitPQ::new();
+        q.insert(4, 44);
+        q.insert(2, 22);
+        assert_eq!(q.delete_min(), Some((2, 22)));
+        assert_eq!(q.delete_min(), Some((4, 44)));
+    }
+
+    #[test]
+    fn concurrent_delete_min_unique_winners() {
+        let q = Arc::new(LotanShavitPQ::new());
+        for k in 1..=2000u64 {
+            q.insert(k, k);
+        }
+        let hs: Vec<std::thread::JoinHandle<Vec<u64>>> = (0..4)
+            .map(|_| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    let mut mine = Vec::new();
+                    for _ in 0..500 {
+                        if let Some((k, _)) = q.delete_min() {
+                            mine.push(k);
+                        }
+                    }
+                    mine
+                })
+            })
+            .collect();
+        let mut all: Vec<u64> = hs.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        all.sort_unstable();
+        let n = all.len();
+        all.dedup();
+        assert_eq!(n, all.len(), "duplicate deleteMin result");
+        assert_eq!(n, 2000);
+    }
+}

@@ -1,0 +1,27 @@
+//! Concurrent priority queues — every algorithm evaluated in the paper.
+//!
+//! | Paper name (§4)     | Type here                                        |
+//! |---------------------|--------------------------------------------------|
+//! | `lotan_shavit`      | [`lotan_shavit::LotanShavitPQ`]                  |
+//! | `alistarh_fraser`   | [`spraylist::SprayList`] over [`skiplist::fraser`]|
+//! | `alistarh_herlihy`  | [`spraylist::SprayList`] over [`skiplist::herlihy`]|
+//! | `ffwd`              | [`crate::delegation::ffwd`]                      |
+//! | `Nuddle`            | [`crate::delegation::nuddle`]                    |
+//! | `SmartPQ`           | [`crate::adaptive::smartpq`]                     |
+//!
+//! All queues store `(u64 key, u64 value)` pairs with set semantics on the
+//! key (as in the ASCYLIB benchmarks the paper uses); smaller key = higher
+//! priority.
+
+pub mod lotan_shavit;
+pub mod mutex_heap;
+pub mod seq;
+pub mod skiplist;
+pub mod spraylist;
+pub mod traits;
+
+pub use lotan_shavit::LotanShavitPQ;
+pub use mutex_heap::MutexHeapPQ;
+pub use seq::SeqSkipListPQ;
+pub use spraylist::{SprayList, SprayParams};
+pub use traits::{ConcurrentPQ, PqStats};

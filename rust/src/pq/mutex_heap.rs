@@ -1,0 +1,135 @@
+//! Coarse-grained baseline: a binary min-heap behind one mutex. Not in the
+//! paper's evaluated set, but the natural lower bound every concurrent PQ
+//! must beat; used in sanity benches and differential tests.
+
+use std::collections::BinaryHeap;
+use std::sync::Mutex;
+
+use crate::pq::traits::{ConcurrentPQ, PqStats};
+
+#[derive(PartialEq, Eq)]
+struct Entry(u64, u64);
+
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Reverse: BinaryHeap is a max-heap.
+        other.0.cmp(&self.0).then(other.1.cmp(&self.1))
+    }
+}
+
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Mutex-protected binary heap with set semantics on keys.
+pub struct MutexHeapPQ {
+    inner: Mutex<(BinaryHeap<Entry>, std::collections::HashSet<u64>)>,
+    stats: PqStats,
+}
+
+impl MutexHeapPQ {
+    /// Empty queue.
+    pub fn new() -> Self {
+        MutexHeapPQ {
+            inner: Mutex::new((BinaryHeap::new(), std::collections::HashSet::new())),
+            stats: PqStats::new(),
+        }
+    }
+
+    /// Operation counters.
+    pub fn stats(&self) -> &PqStats {
+        &self.stats
+    }
+}
+
+impl Default for MutexHeapPQ {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ConcurrentPQ for MutexHeapPQ {
+    fn insert(&self, key: u64, value: u64) -> bool {
+        crate::pq::traits::check_user_key(key);
+        let mut g = self.inner.lock().expect("poisoned heap");
+        if !g.1.insert(key) {
+            drop(g);
+            self.stats.record_failed_insert();
+            return false;
+        }
+        g.0.push(Entry(key, value));
+        drop(g);
+        self.stats.record_insert(key);
+        true
+    }
+
+    fn delete_min(&self) -> Option<(u64, u64)> {
+        let mut g = self.inner.lock().expect("poisoned heap");
+        match g.0.pop() {
+            Some(Entry(k, v)) => {
+                g.1.remove(&k);
+                drop(g);
+                self.stats.record_delete_min();
+                Some((k, v))
+            }
+            None => {
+                drop(g);
+                self.stats.record_empty_delete_min();
+                None
+            }
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.inner.lock().expect("poisoned heap").0.len()
+    }
+
+    fn name(&self) -> &'static str {
+        "mutex_heap"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn ordered() {
+        let q = MutexHeapPQ::new();
+        for k in [5u64, 2, 8] {
+            assert!(q.insert(k, k));
+        }
+        assert!(!q.insert(2, 0));
+        assert_eq!(q.delete_min(), Some((2, 2)));
+        assert_eq!(q.delete_min(), Some((5, 5)));
+        assert_eq!(q.delete_min(), Some((8, 8)));
+        assert_eq!(q.delete_min(), None);
+    }
+
+    #[test]
+    fn concurrent_conservation() {
+        let q = Arc::new(MutexHeapPQ::new());
+        let hs: Vec<_> = (0..4u64)
+            .map(|t| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    let mut n = 0i64;
+                    for i in 0..500u64 {
+                        if q.insert(1 + t + 4 * i, i) {
+                            n += 1;
+                        }
+                        if i % 3 == 0 && q.delete_min().is_some() {
+                            n -= 1;
+                        }
+                    }
+                    n
+                })
+            })
+            .collect();
+        let net: i64 = hs.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(q.len() as i64, net);
+    }
+}

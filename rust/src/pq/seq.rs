@@ -1,0 +1,209 @@
+//! Sequential (single-owner) skip-list priority queue — the serial
+//! backbone an `ffwd` server thread mutates on behalf of all clients
+//! (ffwd deliberately uses an *asynchronized* implementation [65]).
+
+use crate::util::rng::Rng;
+
+const MAX_HEIGHT: usize = 24;
+
+struct Node {
+    key: u64,
+    value: u64,
+    next: Vec<*mut Node>,
+}
+
+/// Sequential skip list with PQ operations. All methods take `&mut self`;
+/// delegation (ffwd) provides the serialization.
+pub struct SeqSkipListPQ {
+    head: *mut Node,
+    len: usize,
+    rng: Rng,
+}
+
+// SAFETY: ownership may move between threads; concurrent access is ruled
+// out because all methods require &mut self.
+unsafe impl Send for SeqSkipListPQ {}
+
+impl SeqSkipListPQ {
+    /// Empty queue with a deterministic tower RNG.
+    pub fn new(seed: u64) -> Self {
+        let head = Box::into_raw(Box::new(Node {
+            key: 0,
+            value: 0,
+            next: vec![std::ptr::null_mut(); MAX_HEIGHT],
+        }));
+        SeqSkipListPQ {
+            head,
+            len: 0,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Insert; false on duplicate.
+    pub fn insert(&mut self, key: u64, value: u64) -> bool {
+        crate::pq::traits::check_user_key(key);
+        let mut preds = [std::ptr::null_mut::<Node>(); MAX_HEIGHT];
+        let mut pred = self.head;
+        for lvl in (0..MAX_HEIGHT).rev() {
+            loop {
+                let cur = unsafe { &*pred }.next[lvl];
+                if cur.is_null() || unsafe { &*cur }.key >= key {
+                    break;
+                }
+                pred = cur;
+            }
+            preds[lvl] = pred;
+        }
+        let at = unsafe { &*preds[0] }.next[0];
+        if !at.is_null() && unsafe { &*at }.key == key {
+            return false;
+        }
+        let height = self.rng.gen_level(MAX_HEIGHT - 1) + 1;
+        let node = Box::into_raw(Box::new(Node {
+            key,
+            value,
+            next: vec![std::ptr::null_mut(); height],
+        }));
+        for lvl in 0..height {
+            let pred_next = &mut unsafe { &mut *preds[lvl] }.next;
+            unsafe { &mut *node }.next[lvl] = pred_next[lvl];
+            pred_next[lvl] = node;
+        }
+        self.len += 1;
+        true
+    }
+
+    /// Exact deleteMin.
+    pub fn delete_min(&mut self) -> Option<(u64, u64)> {
+        let first = unsafe { &*self.head }.next[0];
+        if first.is_null() {
+            return None;
+        }
+        let node = unsafe { Box::from_raw(first) };
+        // Unlink from every level where head points at it.
+        let head = unsafe { &mut *self.head };
+        for lvl in 0..MAX_HEIGHT {
+            if head.next[lvl] == first {
+                head.next[lvl] = if lvl < node.next.len() {
+                    node.next[lvl]
+                } else {
+                    std::ptr::null_mut()
+                };
+            }
+        }
+        self.len -= 1;
+        Some((node.key, node.value))
+    }
+
+    /// Membership test.
+    pub fn contains(&self, key: u64) -> bool {
+        let mut pred = self.head;
+        for lvl in (0..MAX_HEIGHT).rev() {
+            loop {
+                let cur = unsafe { &*pred }.next[lvl];
+                if cur.is_null() {
+                    break;
+                }
+                let cur_key = unsafe { &*cur }.key;
+                if cur_key < key {
+                    pred = cur;
+                } else {
+                    if cur_key == key {
+                        return true;
+                    }
+                    break;
+                }
+            }
+        }
+        false
+    }
+
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl Drop for SeqSkipListPQ {
+    fn drop(&mut self) {
+        let mut cur = self.head;
+        while !cur.is_null() {
+            let next = unsafe { &*cur }.next[0];
+            unsafe { drop(Box::from_raw(cur)) };
+            cur = next;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordered_drain() {
+        let mut q = SeqSkipListPQ::new(1);
+        for k in [5u64, 1, 9, 3, 7] {
+            assert!(q.insert(k, k * 10));
+        }
+        assert!(!q.insert(5, 0));
+        assert_eq!(q.len(), 5);
+        let mut out = Vec::new();
+        while let Some((k, v)) = q.delete_min() {
+            out.push((k, v));
+        }
+        assert_eq!(out, vec![(1, 10), (3, 30), (5, 50), (7, 70), (9, 90)]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn contains_works() {
+        let mut q = SeqSkipListPQ::new(2);
+        q.insert(10, 1);
+        assert!(q.contains(10));
+        assert!(!q.contains(11));
+        q.delete_min();
+        assert!(!q.contains(10));
+    }
+
+    #[test]
+    fn large_volume() {
+        let mut q = SeqSkipListPQ::new(3);
+        let mut r = Rng::new(9);
+        let mut keys: Vec<u64> = (1..5000).collect();
+        r.shuffle(&mut keys);
+        for &k in &keys {
+            q.insert(k, k);
+        }
+        assert_eq!(q.len(), 4999);
+        let mut prev = 0;
+        while let Some((k, _)) = q.delete_min() {
+            assert!(k > prev);
+            prev = k;
+        }
+    }
+
+    #[test]
+    fn empty_delete_min() {
+        let mut q = SeqSkipListPQ::new(4);
+        assert_eq!(q.delete_min(), None);
+        q.insert(1, 1);
+        q.delete_min();
+        assert_eq!(q.delete_min(), None);
+    }
+
+    #[test]
+    fn interleaved_insert_delete() {
+        let mut q = SeqSkipListPQ::new(5);
+        q.insert(10, 1);
+        q.insert(20, 2);
+        assert_eq!(q.delete_min(), Some((10, 1)));
+        q.insert(5, 3);
+        assert_eq!(q.delete_min(), Some((5, 3)));
+        assert_eq!(q.delete_min(), Some((20, 2)));
+    }
+}

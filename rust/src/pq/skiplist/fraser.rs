@@ -1,0 +1,640 @@
+//! Harris/Fraser lock-free skip list [24].
+//!
+//! Deletion tags live in the LSB of each `next` pointer (a tagged
+//! `node.next[i]` means *node* is logically deleted at level `i`).
+//! Traversals help unlink tagged nodes. Physical reclamation goes through
+//! the epoch domain ([`crate::mem::epoch`]): the unique claimer of a node
+//! marks every level, then re-traverses until a clean pass no longer
+//! encounters the node — at which point it is unreachable (links to a
+//! marked node are never created, only preserved) and can be retired.
+//!
+//! The list also exposes the two relaxed-deleteMin primitives the paper's
+//! queues need: [`FraserSkipList::claim_leftmost`] (lotan_shavit [47]) and
+//! [`FraserSkipList::spray_claim`] (SprayList [2]).
+
+use std::sync::atomic::{AtomicPtr, AtomicU8, Ordering};
+
+use super::{is_tagged, tagged, untagged, MAX_HEIGHT};
+use crate::mem::epoch;
+use crate::pq::spraylist::SprayParams;
+use crate::util::rng::Rng;
+
+/// Logical PQ state of a node.
+const LIVE: u8 = 0;
+/// Claimed by a deleteMin winner.
+const CLAIMED: u8 = 1;
+
+pub(crate) struct Node {
+    pub key: u64,
+    pub value: u64,
+    /// Highest valid level index; tower spans `0..=top`.
+    pub top: usize,
+    /// LIVE / CLAIMED — the relaxed-PQ logical-deletion flag.
+    pub state: AtomicU8,
+    next: [AtomicPtr<Node>; MAX_HEIGHT],
+}
+
+impl Node {
+    fn new(key: u64, value: u64, top: usize) -> *mut Node {
+        const NULL: AtomicPtr<Node> = AtomicPtr::new(std::ptr::null_mut());
+        Box::into_raw(Box::new(Node {
+            key,
+            value,
+            top,
+            state: AtomicU8::new(LIVE),
+            next: [NULL; MAX_HEIGHT],
+        }))
+    }
+
+    #[inline]
+    fn claim(&self) -> bool {
+        self.state
+            .compare_exchange(LIVE, CLAIMED, Ordering::AcqRel, Ordering::Relaxed)
+            .is_ok()
+    }
+
+    #[inline]
+    fn is_claimed(&self) -> bool {
+        self.state.load(Ordering::Acquire) == CLAIMED
+    }
+}
+
+/// Lock-free skip list keyed by `u64` (set semantics), with logical-claim
+/// support for relaxed priority-queue deletion.
+pub struct FraserSkipList {
+    head: *mut Node,
+    tail: *mut Node,
+}
+
+// SAFETY: all mutation is via atomics; nodes are reclaimed through EBR.
+unsafe impl Send for FraserSkipList {}
+unsafe impl Sync for FraserSkipList {}
+
+struct Search {
+    preds: [*mut Node; MAX_HEIGHT],
+    succs: [*mut Node; MAX_HEIGHT],
+    /// Pointer-equality hit of a specific node during the clean pass.
+    encountered: bool,
+}
+
+impl FraserSkipList {
+    /// Create an empty list (head/tail sentinels only).
+    pub fn new() -> Self {
+        let head = Node::new(u64::MIN, 0, MAX_HEIGHT - 1);
+        let tail = Node::new(u64::MAX, 0, MAX_HEIGHT - 1);
+        unsafe {
+            for lvl in 0..MAX_HEIGHT {
+                (*head).next[lvl].store(tail, Ordering::Relaxed);
+            }
+        }
+        FraserSkipList { head, tail }
+    }
+
+    /// Traverse towards `key`, unlinking every tagged node on the path.
+    /// If `watch` is non-null, report whether it was encountered during the
+    /// (restart-free suffix of the) pass.
+    fn search(&self, key: u64, watch: *mut Node) -> Search {
+        'retry: loop {
+            let mut out = Search {
+                preds: [std::ptr::null_mut(); MAX_HEIGHT],
+                succs: [std::ptr::null_mut(); MAX_HEIGHT],
+                encountered: false,
+            };
+            let mut pred = self.head;
+            for lvl in (0..MAX_HEIGHT).rev() {
+                let mut cur = untagged(unsafe { (*pred).next[lvl].load(Ordering::Acquire) });
+                loop {
+                    if cur == watch {
+                        out.encountered = true;
+                    }
+                    let succ = unsafe { (*cur).next[lvl].load(Ordering::Acquire) };
+                    if is_tagged(succ) {
+                        // `cur` is deleted at this level: help unlink it.
+                        let clean = untagged(succ);
+                        if unsafe {
+                            (*pred).next[lvl]
+                                .compare_exchange(cur, clean, Ordering::AcqRel, Ordering::Acquire)
+                                .is_err()
+                        } {
+                            continue 'retry;
+                        }
+                        cur = clean;
+                        continue;
+                    }
+                    if unsafe { (*cur).key } < key {
+                        pred = cur;
+                        cur = untagged(succ);
+                    } else {
+                        break;
+                    }
+                }
+                out.preds[lvl] = pred;
+                out.succs[lvl] = cur;
+            }
+            return out;
+        }
+    }
+
+    /// Insert `(key, value)`. Returns false if `key` is already present
+    /// (and not logically claimed). Keys must avoid the sentinels.
+    pub fn insert(&self, key: u64, value: u64, rng: &mut Rng) -> bool {
+        crate::pq::traits::check_user_key(key);
+        epoch::with_guard(|guard, handle| loop {
+            let s = self.search(key, std::ptr::null_mut());
+            let found = s.succs[0];
+            let _ = (guard, handle);
+            if unsafe { (*found).key } == key {
+                let f = unsafe { &*found };
+                if f.is_claimed() {
+                    // A claimed node is logically deleted. *Help* by
+                    // tagging its levels (the claim winner owns the
+                    // retirement — helping must never retire) and retry:
+                    // the next search unlinks tagged nodes on the path.
+                    Self::help_mark(f);
+                    continue;
+                }
+                return false;
+            }
+            let top = rng.gen_level(MAX_HEIGHT - 1);
+            let node = Node::new(key, value, top);
+            unsafe {
+                for lvl in 0..=top {
+                    (*node).next[lvl].store(s.succs[lvl], Ordering::Relaxed);
+                }
+            }
+            // Linearization point: link at the bottom level.
+            if unsafe {
+                (*s.preds[0]).next[0]
+                    .compare_exchange(found, node, Ordering::AcqRel, Ordering::Acquire)
+                    .is_err()
+            } {
+                unsafe { drop(Box::from_raw(node)) };
+                continue;
+            }
+            // Build the upper levels (best effort; abandoned if the node
+            // gets deleted concurrently).
+            let mut s = s;
+            for lvl in 1..=top {
+                loop {
+                    let cur_next = unsafe { (*node).next[lvl].load(Ordering::Acquire) };
+                    if is_tagged(cur_next) {
+                        return true; // node deleted mid-build
+                    }
+                    if cur_next != s.succs[lvl]
+                        && unsafe {
+                            (*node).next[lvl]
+                                .compare_exchange(
+                                    cur_next,
+                                    s.succs[lvl],
+                                    Ordering::AcqRel,
+                                    Ordering::Acquire,
+                                )
+                                .is_err()
+                        }
+                    {
+                        continue; // re-read (possibly now tagged)
+                    }
+                    if unsafe {
+                        (*s.preds[lvl]).next[lvl]
+                            .compare_exchange(
+                                s.succs[lvl],
+                                node,
+                                Ordering::AcqRel,
+                                Ordering::Acquire,
+                            )
+                            .is_ok()
+                    } {
+                        break;
+                    }
+                    // Refresh the search; stop if the node vanished.
+                    s = self.search(key, std::ptr::null_mut());
+                    if s.succs[0] != node {
+                        return true;
+                    }
+                }
+            }
+            return true;
+        })
+    }
+
+    /// True if `key` is present and not claimed.
+    pub fn contains(&self, key: u64) -> bool {
+        epoch::with_guard(|_, _| {
+            let s = self.search(key, std::ptr::null_mut());
+            let found = s.succs[0];
+            unsafe { (*found).key == key && !(*found).is_claimed() }
+        })
+    }
+
+    /// Remove `key` exactly (claims it, then removes). Returns its value.
+    pub fn remove(&self, key: u64) -> Option<u64> {
+        epoch::with_guard(|guard, handle| {
+            let s = self.search(key, std::ptr::null_mut());
+            let found = s.succs[0];
+            if unsafe { (*found).key } != key {
+                return None;
+            }
+            let node = unsafe { &*found };
+            if !node.claim() {
+                return None;
+            }
+            let value = node.value;
+            self.finish_removal(found, guard, handle);
+            Some(value)
+        })
+    }
+
+    /// Tag every level of a claimed node (idempotent; safe for helpers).
+    fn help_mark(n: &Node) {
+        for lvl in (0..=n.top).rev() {
+            loop {
+                let next = n.next[lvl].load(Ordering::Acquire);
+                if is_tagged(next) {
+                    break;
+                }
+                if n.next[lvl]
+                    .compare_exchange(next, tagged(next), Ordering::AcqRel, Ordering::Acquire)
+                    .is_ok()
+                {
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Mark every level of a *claimed* node, unlink it, and retire it once
+    /// a clean traversal no longer encounters it.
+    fn finish_removal(
+        &self,
+        node: *mut Node,
+        guard: &epoch::Guard<'_>,
+        handle: &epoch::Handle,
+    ) {
+        let n = unsafe { &*node };
+        debug_assert!(n.is_claimed());
+        // Tag next pointers top-down; bottom-level tag = logical removal.
+        Self::help_mark(n);
+        // Was the bottom-level tag ours? Only one thread reaches here per
+        // node (the claim winner), so we always own the retirement.
+        loop {
+            let s = self.search(n.key, node);
+            if !s.encountered {
+                break;
+            }
+        }
+        // Unreachable: links to marked nodes are never created anew.
+        unsafe { guard.retire(handle, node) };
+    }
+
+    /// lotan_shavit deleteMin [47]: walk the bottom level from the head and
+    /// claim the first live node; the claimer then removes it physically.
+    pub fn claim_leftmost(&self) -> Option<(u64, u64)> {
+        epoch::with_guard(|guard, handle| {
+            let mut cur = untagged(unsafe { (*self.head).next[0].load(Ordering::Acquire) });
+            loop {
+                if cur == self.tail {
+                    return None;
+                }
+                let node = unsafe { &*cur };
+                let next = node.next[0].load(Ordering::Acquire);
+                // Skip logically-deleted (tagged) and already-claimed nodes.
+                if !is_tagged(next) && node.claim() {
+                    let out = (node.key, node.value);
+                    self.finish_removal(cur, guard, handle);
+                    return Some(out);
+                }
+                cur = untagged(next);
+            }
+        })
+    }
+
+    /// SprayList deleteMin [2]: random descending walk ("spray") over the
+    /// first O(p·log³p) elements, then claim at/after the landing point.
+    pub fn spray_claim(&self, params: &SprayParams, rng: &mut Rng) -> Option<(u64, u64)> {
+        // A small fraction of sprayers act as cleaners (lotan-style),
+        // compacting the claimed prefix — as in the SprayList paper.
+        if params.cleaner_prob > 0.0 && rng.gen_bool(params.cleaner_prob) {
+            return self.claim_leftmost();
+        }
+        epoch::with_guard(|guard, handle| {
+            'respray: for _attempt in 0..params.max_retries {
+                let start = params.start_height.min(MAX_HEIGHT - 1);
+                let mut cur = self.head;
+                let mut lvl = start;
+                loop {
+                    // Jump a uniformly random number of steps at this level.
+                    let jump = rng.gen_range(params.max_jump + 1);
+                    for _ in 0..jump {
+                        let l = lvl.min(unsafe { (*cur).top });
+                        let next = untagged(unsafe { (*cur).next[l].load(Ordering::Acquire) });
+                        if next == self.tail || next.is_null() {
+                            break;
+                        }
+                        cur = next;
+                    }
+                    if lvl == 0 {
+                        break;
+                    }
+                    lvl -= 1; // descend one level (D = 1)
+                }
+                // Walk forward at the bottom for a live node to claim.
+                let mut hops = 0usize;
+                let mut c = cur;
+                while hops < params.max_local_scan {
+                    if c == self.tail {
+                        // Spray overshot an (almost) empty prefix: fall back
+                        // to an exact scan so emptiness is decided correctly.
+                        return self.claim_leftmost_inner(guard, handle);
+                    }
+                    if c == self.head {
+                        c = untagged(unsafe { (*c).next[0].load(Ordering::Acquire) });
+                        continue;
+                    }
+                    let node = unsafe { &*c };
+                    let next = node.next[0].load(Ordering::Acquire);
+                    if !is_tagged(next) && node.claim() {
+                        let out = (node.key, node.value);
+                        self.finish_removal(c, guard, handle);
+                        return Some(out);
+                    }
+                    c = untagged(next);
+                    hops += 1;
+                }
+                continue 'respray;
+            }
+            // Too many collisions: degrade to the exact path.
+            self.claim_leftmost_inner(guard, handle)
+        })
+    }
+
+    fn claim_leftmost_inner(
+        &self,
+        guard: &epoch::Guard<'_>,
+        handle: &epoch::Handle,
+    ) -> Option<(u64, u64)> {
+        let mut cur = untagged(unsafe { (*self.head).next[0].load(Ordering::Acquire) });
+        loop {
+            if cur == self.tail {
+                return None;
+            }
+            let node = unsafe { &*cur };
+            let next = node.next[0].load(Ordering::Acquire);
+            if !is_tagged(next) && node.claim() {
+                let out = (node.key, node.value);
+                self.finish_removal(cur, guard, handle);
+                return Some(out);
+            }
+            cur = untagged(next);
+        }
+    }
+
+    /// Exact count by bottom-level walk (O(n); tests/diagnostics only).
+    pub fn count_exact(&self) -> usize {
+        epoch::with_guard(|_, _| {
+            let mut n = 0;
+            let mut cur = untagged(unsafe { (*self.head).next[0].load(Ordering::Acquire) });
+            while cur != self.tail {
+                let node = unsafe { &*cur };
+                let next = node.next[0].load(Ordering::Acquire);
+                if !is_tagged(next) && !node.is_claimed() {
+                    n += 1;
+                }
+                cur = untagged(next);
+            }
+            n
+        })
+    }
+
+    /// Keys in order (tests only).
+    pub fn keys(&self) -> Vec<u64> {
+        epoch::with_guard(|_, _| {
+            let mut out = Vec::new();
+            let mut cur = untagged(unsafe { (*self.head).next[0].load(Ordering::Acquire) });
+            while cur != self.tail {
+                let node = unsafe { &*cur };
+                let next = node.next[0].load(Ordering::Acquire);
+                if !is_tagged(next) && !node.is_claimed() {
+                    out.push(node.key);
+                }
+                cur = untagged(next);
+            }
+            out
+        })
+    }
+}
+
+impl Default for FraserSkipList {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Drop for FraserSkipList {
+    fn drop(&mut self) {
+        // Exclusive access: free the whole bottom-level chain.
+        let mut cur = self.head;
+        while !cur.is_null() {
+            let next = untagged(unsafe { (*cur).next[0].load(Ordering::Relaxed) });
+            unsafe { drop(Box::from_raw(cur)) };
+            if cur == self.tail {
+                break;
+            }
+            cur = if cur == self.tail { std::ptr::null_mut() } else { next };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn rng() -> Rng {
+        Rng::new(0xF2A5E2)
+    }
+
+    #[test]
+    fn insert_contains_remove() {
+        let l = FraserSkipList::new();
+        let mut r = rng();
+        assert!(l.insert(10, 100, &mut r));
+        assert!(l.insert(5, 50, &mut r));
+        assert!(!l.insert(10, 999, &mut r), "duplicate accepted");
+        assert!(l.contains(10));
+        assert!(l.contains(5));
+        assert!(!l.contains(7));
+        assert_eq!(l.remove(10), Some(100));
+        assert!(!l.contains(10));
+        assert_eq!(l.remove(10), None);
+        assert_eq!(l.keys(), vec![5]);
+    }
+
+    #[test]
+    fn sorted_order_maintained() {
+        let l = FraserSkipList::new();
+        let mut r = rng();
+        let mut keys: Vec<u64> = (1..200).collect();
+        r.shuffle(&mut keys);
+        for &k in &keys {
+            assert!(l.insert(k, k * 2, &mut r));
+        }
+        assert_eq!(l.keys(), (1..200).collect::<Vec<_>>());
+        assert_eq!(l.count_exact(), 199);
+    }
+
+    #[test]
+    fn claim_leftmost_is_min() {
+        let l = FraserSkipList::new();
+        let mut r = rng();
+        for k in [30u64, 10, 20, 40] {
+            l.insert(k, k, &mut r);
+        }
+        assert_eq!(l.claim_leftmost(), Some((10, 10)));
+        assert_eq!(l.claim_leftmost(), Some((20, 20)));
+        assert_eq!(l.claim_leftmost(), Some((30, 30)));
+        assert_eq!(l.claim_leftmost(), Some((40, 40)));
+        assert_eq!(l.claim_leftmost(), None);
+    }
+
+    #[test]
+    fn reinsert_after_claim() {
+        let l = FraserSkipList::new();
+        let mut r = rng();
+        l.insert(7, 70, &mut r);
+        assert_eq!(l.claim_leftmost(), Some((7, 70)));
+        // Key 7 must be insertable again.
+        assert!(l.insert(7, 71, &mut r));
+        assert_eq!(l.claim_leftmost(), Some((7, 71)));
+    }
+
+    #[test]
+    fn spray_claim_drains_everything() {
+        let l = FraserSkipList::new();
+        let mut r = rng();
+        let n = 500u64;
+        for k in 1..=n {
+            l.insert(k, k, &mut r);
+        }
+        let params = SprayParams::for_threads(8);
+        let mut got = Vec::new();
+        while let Some((k, _)) = l.spray_claim(&params, &mut r) {
+            got.push(k);
+        }
+        got.sort_unstable();
+        assert_eq!(got, (1..=n).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn spray_returns_near_minimum() {
+        let l = FraserSkipList::new();
+        let mut r = rng();
+        let n = 10_000u64;
+        for k in 1..=n {
+            l.insert(k, k, &mut r);
+        }
+        let params = SprayParams::for_threads(8);
+        // Expect spray picks within the first O(p log^3 p) elements; be
+        // generous but meaningful: first 1500 of 10000.
+        for _ in 0..50 {
+            let (k, _) = l.spray_claim(&params, &mut r).unwrap();
+            assert!(k <= 1500, "spray landed too deep: {k}");
+        }
+    }
+
+    #[test]
+    fn concurrent_inserts_no_loss() {
+        let l = Arc::new(FraserSkipList::new());
+        let nthreads = 4u64;
+        let per = 500u64;
+        let handles: Vec<_> = (0..nthreads)
+            .map(|t| {
+                let l = l.clone();
+                std::thread::spawn(move || {
+                    let mut r = Rng::stream(99, t);
+                    for i in 0..per {
+                        let key = 1 + t + i * nthreads; // disjoint keys
+                        assert!(l.insert(key, key, &mut r));
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(l.count_exact() as u64, nthreads * per);
+        let keys = l.keys();
+        assert!(keys.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn concurrent_mixed_ops_conserve_elements() {
+        // inserts and deleteMins from many threads; at the end,
+        // (successful inserts) - (successful deletes) == remaining.
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let l = Arc::new(FraserSkipList::new());
+        let ins = Arc::new(AtomicU64::new(0));
+        let del = Arc::new(AtomicU64::new(0));
+        let handles: Vec<_> = (0..4u64)
+            .map(|t| {
+                let (l, ins, del) = (l.clone(), ins.clone(), del.clone());
+                std::thread::spawn(move || {
+                    let mut r = Rng::stream(123, t);
+                    for _ in 0..2000 {
+                        if r.gen_bool(0.6) {
+                            let k = 1 + r.gen_range(10_000);
+                            if l.insert(k, k, &mut r) {
+                                ins.fetch_add(1, Ordering::Relaxed);
+                            }
+                        } else if l.claim_leftmost().is_some() {
+                            del.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let remaining = l.count_exact() as u64;
+        assert_eq!(
+            ins.load(Ordering::Relaxed) - del.load(Ordering::Relaxed),
+            remaining
+        );
+    }
+
+    #[test]
+    fn concurrent_spray_distinct_results() {
+        // Each element must be claimed at most once across threads.
+        let l = Arc::new(FraserSkipList::new());
+        {
+            let mut r = rng();
+            for k in 1..=4000u64 {
+                l.insert(k, k, &mut r);
+            }
+        }
+        let results: Vec<std::thread::JoinHandle<Vec<u64>>> = (0..4u64)
+            .map(|t| {
+                let l = l.clone();
+                std::thread::spawn(move || {
+                    let mut r = Rng::stream(7, t);
+                    let params = SprayParams::for_threads(4);
+                    let mut mine = Vec::new();
+                    for _ in 0..500 {
+                        if let Some((k, _)) = l.spray_claim(&params, &mut r) {
+                            mine.push(k);
+                        }
+                    }
+                    mine
+                })
+            })
+            .collect();
+        let mut all: Vec<u64> = results
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect();
+        let before = all.len();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(before, all.len(), "an element was claimed twice");
+    }
+}

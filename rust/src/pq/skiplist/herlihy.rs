@@ -1,0 +1,566 @@
+//! Herlihy–Lev–Luchangco–Shavit optimistic ("lazy") skip list [34].
+//!
+//! Traversals are wait-free and lock-free; updates lock the affected
+//! predecessors, validate, and link/unlink. Deletion is lazy: a `marked`
+//! bit is set under the victim's lock before any physical unlinking, so
+//! readers never observe a half-removed node. This is the base of
+//! `alistarh_herlihy` — the paper's best-performing NUMA-oblivious queue.
+//!
+//! Lock order is descending key (victim first, then predecessors from the
+//! bottom level up, whose keys are non-increasing with level), which makes
+//! insert/remove mutually deadlock-free.
+
+use std::sync::atomic::{AtomicBool, AtomicPtr, AtomicU8, Ordering};
+
+use super::MAX_HEIGHT;
+use crate::mem::epoch;
+use crate::pq::spraylist::SprayParams;
+use crate::util::rng::Rng;
+use crate::util::sync::Backoff;
+
+const LIVE: u8 = 0;
+const CLAIMED: u8 = 1;
+
+pub(crate) struct Node {
+    pub key: u64,
+    pub value: u64,
+    pub top: usize,
+    lock: AtomicBool,
+    marked: AtomicBool,
+    fully_linked: AtomicBool,
+    state: AtomicU8,
+    next: [AtomicPtr<Node>; MAX_HEIGHT],
+}
+
+impl Node {
+    fn new(key: u64, value: u64, top: usize) -> *mut Node {
+        const NULL: AtomicPtr<Node> = AtomicPtr::new(std::ptr::null_mut());
+        Box::into_raw(Box::new(Node {
+            key,
+            value,
+            top,
+            lock: AtomicBool::new(false),
+            marked: AtomicBool::new(false),
+            fully_linked: AtomicBool::new(false),
+            state: AtomicU8::new(LIVE),
+            next: [NULL; MAX_HEIGHT],
+        }))
+    }
+
+    #[inline]
+    fn lock(&self) {
+        let mut b = Backoff::new();
+        loop {
+            while self.lock.load(Ordering::Relaxed) {
+                b.snooze();
+            }
+            if self
+                .lock
+                .compare_exchange_weak(false, true, Ordering::Acquire, Ordering::Relaxed)
+                .is_ok()
+            {
+                return;
+            }
+        }
+    }
+
+    #[inline]
+    fn unlock(&self) {
+        self.lock.store(false, Ordering::Release);
+    }
+
+    #[inline]
+    fn claim(&self) -> bool {
+        self.state
+            .compare_exchange(LIVE, CLAIMED, Ordering::AcqRel, Ordering::Relaxed)
+            .is_ok()
+    }
+
+    #[inline]
+    fn is_claimed(&self) -> bool {
+        self.state.load(Ordering::Acquire) == CLAIMED
+    }
+
+    #[inline]
+    fn is_removable(&self) -> bool {
+        self.fully_linked.load(Ordering::Acquire) && !self.marked.load(Ordering::Acquire)
+    }
+}
+
+/// Optimistic lazy skip list keyed by `u64` (set semantics) with
+/// logical-claim support for relaxed priority-queue deletion.
+pub struct HerlihySkipList {
+    head: *mut Node,
+    tail: *mut Node,
+}
+
+// SAFETY: mutation is lock-protected; reclamation through EBR.
+unsafe impl Send for HerlihySkipList {}
+unsafe impl Sync for HerlihySkipList {}
+
+impl HerlihySkipList {
+    /// Empty list.
+    pub fn new() -> Self {
+        let head = Node::new(u64::MIN, 0, MAX_HEIGHT - 1);
+        let tail = Node::new(u64::MAX, 0, MAX_HEIGHT - 1);
+        unsafe {
+            for lvl in 0..MAX_HEIGHT {
+                (*head).next[lvl].store(tail, Ordering::Relaxed);
+            }
+            (*head).fully_linked.store(true, Ordering::Relaxed);
+            (*tail).fully_linked.store(true, Ordering::Relaxed);
+        }
+        HerlihySkipList { head, tail }
+    }
+
+    /// Wait-free traversal. Returns (preds, succs, level-found-or-usize::MAX).
+    fn find(&self, key: u64) -> ([*mut Node; MAX_HEIGHT], [*mut Node; MAX_HEIGHT], usize) {
+        let mut preds = [std::ptr::null_mut(); MAX_HEIGHT];
+        let mut succs = [std::ptr::null_mut(); MAX_HEIGHT];
+        let mut lfound = usize::MAX;
+        let mut pred = self.head;
+        for lvl in (0..MAX_HEIGHT).rev() {
+            let mut cur = unsafe { (*pred).next[lvl].load(Ordering::Acquire) };
+            while unsafe { (*cur).key } < key {
+                pred = cur;
+                cur = unsafe { (*cur).next[lvl].load(Ordering::Acquire) };
+            }
+            if lfound == usize::MAX && unsafe { (*cur).key } == key {
+                lfound = lvl;
+            }
+            preds[lvl] = pred;
+            succs[lvl] = cur;
+        }
+        (preds, succs, lfound)
+    }
+
+    /// Lock a deduplicated prefix of `preds[0..=top]`, validating that each
+    /// still points at `succs[lvl]` and nothing is marked. On success the
+    /// locked set is returned; on failure everything is unlocked.
+    fn lock_preds(
+        &self,
+        preds: &[*mut Node; MAX_HEIGHT],
+        succs: &[*mut Node; MAX_HEIGHT],
+        top: usize,
+    ) -> Option<Vec<*mut Node>> {
+        let mut locked: Vec<*mut Node> = Vec::with_capacity(top + 1);
+        let mut valid = true;
+        for lvl in 0..=top {
+            let pred = preds[lvl];
+            if !locked.contains(&pred) {
+                unsafe { (*pred).lock() };
+                locked.push(pred);
+            }
+            let p = unsafe { &*pred };
+            let succ = succs[lvl];
+            if p.marked.load(Ordering::Acquire)
+                || p.next[lvl].load(Ordering::Acquire) != succ
+                || unsafe { (*succ).marked.load(Ordering::Acquire) }
+            {
+                valid = false;
+                break;
+            }
+        }
+        if valid {
+            Some(locked)
+        } else {
+            for n in locked {
+                unsafe { (*n).unlock() };
+            }
+            None
+        }
+    }
+
+    /// Insert `(key, value)`; false on (live) duplicate.
+    pub fn insert(&self, key: u64, value: u64, rng: &mut Rng) -> bool {
+        crate::pq::traits::check_user_key(key);
+        let top = rng.gen_level(MAX_HEIGHT - 1);
+        epoch::with_guard(|_, _| {
+            let mut backoff = Backoff::new();
+            loop {
+                let (preds, succs, lfound) = self.find(key);
+                if lfound != usize::MAX {
+                    let f = unsafe { &*succs[lfound] };
+                    if !f.marked.load(Ordering::Acquire) {
+                        if f.is_claimed() {
+                            // Logically deleted by a deleteMin winner that
+                            // has not finished the physical removal yet:
+                            // wait for it, then retry.
+                            backoff.snooze();
+                            continue;
+                        }
+                        // Wait for a concurrent insert of the same key to
+                        // finish linking, then report the duplicate.
+                        while !f.fully_linked.load(Ordering::Acquire) {
+                            backoff.snooze();
+                        }
+                        return false;
+                    }
+                    // Marked: it is being unlinked; retry.
+                    backoff.snooze();
+                    continue;
+                }
+                let locked = match self.lock_preds(&preds, &succs, top) {
+                    Some(l) => l,
+                    None => {
+                        backoff.snooze();
+                        continue;
+                    }
+                };
+                let node = Node::new(key, value, top);
+                unsafe {
+                    for lvl in 0..=top {
+                        (*node).next[lvl].store(succs[lvl], Ordering::Relaxed);
+                    }
+                    for lvl in 0..=top {
+                        (*preds[lvl]).next[lvl].store(node, Ordering::Release);
+                    }
+                    (*node).fully_linked.store(true, Ordering::Release);
+                }
+                for n in locked {
+                    unsafe { (*n).unlock() };
+                }
+                return true;
+            }
+        })
+    }
+
+    /// True if `key` present, fully linked, unmarked and unclaimed.
+    pub fn contains(&self, key: u64) -> bool {
+        epoch::with_guard(|_, _| {
+            let (_, succs, lfound) = self.find(key);
+            if lfound == usize::MAX {
+                return false;
+            }
+            let f = unsafe { &*succs[lfound] };
+            f.fully_linked.load(Ordering::Acquire)
+                && !f.marked.load(Ordering::Acquire)
+                && !f.is_claimed()
+        })
+    }
+
+    /// Physically remove a node this thread has claimed.
+    fn remove_claimed(&self, node: *mut Node, guard: &epoch::Guard<'_>, handle: &epoch::Handle) {
+        let n = unsafe { &*node };
+        debug_assert!(n.is_claimed());
+        let top = n.top;
+        let key = n.key;
+        // Mark under the victim's lock (only the claimer reaches here, so
+        // the marked flag can only be set by us).
+        n.lock();
+        n.marked.store(true, Ordering::Release);
+        n.unlock();
+        let mut backoff = Backoff::new();
+        loop {
+            let (preds, _, _) = self.find(key);
+            // Validate that preds still point at `node` on every level it
+            // occupies, under locks.
+            let mut locked: Vec<*mut Node> = Vec::with_capacity(top + 1);
+            let mut valid = true;
+            for lvl in 0..=top {
+                let pred = preds[lvl];
+                if !locked.contains(&pred) {
+                    unsafe { (*pred).lock() };
+                    locked.push(pred);
+                }
+                let p = unsafe { &*pred };
+                if p.marked.load(Ordering::Acquire) || p.next[lvl].load(Ordering::Acquire) != node
+                {
+                    valid = false;
+                    break;
+                }
+            }
+            if valid {
+                for lvl in (0..=top).rev() {
+                    let succ = n.next[lvl].load(Ordering::Acquire);
+                    unsafe { (*preds[lvl]).next[lvl].store(succ, Ordering::Release) };
+                }
+                for l in locked {
+                    unsafe { (*l).unlock() };
+                }
+                unsafe { guard.retire(handle, node) };
+                return;
+            }
+            for l in locked {
+                unsafe { (*l).unlock() };
+            }
+            backoff.snooze();
+        }
+    }
+
+    /// Remove `key` exactly. Returns its value.
+    pub fn remove(&self, key: u64) -> Option<u64> {
+        epoch::with_guard(|guard, handle| {
+            let (_, succs, lfound) = self.find(key);
+            if lfound == usize::MAX {
+                return None;
+            }
+            let node = succs[lfound];
+            let n = unsafe { &*node };
+            if !n.is_removable() || !n.claim() {
+                return None;
+            }
+            let v = n.value;
+            self.remove_claimed(node, guard, handle);
+            Some(v)
+        })
+    }
+
+    /// lotan_shavit-style exact deleteMin.
+    pub fn claim_leftmost(&self) -> Option<(u64, u64)> {
+        epoch::with_guard(|guard, handle| self.claim_leftmost_inner(guard, handle))
+    }
+
+    fn claim_leftmost_inner(
+        &self,
+        guard: &epoch::Guard<'_>,
+        handle: &epoch::Handle,
+    ) -> Option<(u64, u64)> {
+        let mut cur = unsafe { (*self.head).next[0].load(Ordering::Acquire) };
+        loop {
+            if cur == self.tail {
+                return None;
+            }
+            let n = unsafe { &*cur };
+            if n.is_removable() && n.claim() {
+                let out = (n.key, n.value);
+                self.remove_claimed(cur, guard, handle);
+                return Some(out);
+            }
+            cur = n.next[0].load(Ordering::Acquire);
+        }
+    }
+
+    /// SprayList deleteMin over this base.
+    pub fn spray_claim(&self, params: &SprayParams, rng: &mut Rng) -> Option<(u64, u64)> {
+        if params.cleaner_prob > 0.0 && rng.gen_bool(params.cleaner_prob) {
+            return self.claim_leftmost();
+        }
+        epoch::with_guard(|guard, handle| {
+            for _attempt in 0..params.max_retries {
+                let start = params.start_height.min(MAX_HEIGHT - 1);
+                let mut cur = self.head;
+                let mut lvl = start;
+                loop {
+                    let jump = rng.gen_range(params.max_jump + 1);
+                    for _ in 0..jump {
+                        let l = lvl.min(unsafe { (*cur).top });
+                        let next = unsafe { (*cur).next[l].load(Ordering::Acquire) };
+                        if next == self.tail || next.is_null() {
+                            break;
+                        }
+                        cur = next;
+                    }
+                    if lvl == 0 {
+                        break;
+                    }
+                    lvl -= 1;
+                }
+                let mut hops = 0usize;
+                let mut c = cur;
+                while hops < params.max_local_scan {
+                    if c == self.tail {
+                        return self.claim_leftmost_inner(guard, handle);
+                    }
+                    if c == self.head {
+                        c = unsafe { (*c).next[0].load(Ordering::Acquire) };
+                        continue;
+                    }
+                    let n = unsafe { &*c };
+                    if n.is_removable() && n.claim() {
+                        let out = (n.key, n.value);
+                        self.remove_claimed(c, guard, handle);
+                        return Some(out);
+                    }
+                    c = n.next[0].load(Ordering::Acquire);
+                    hops += 1;
+                }
+            }
+            self.claim_leftmost_inner(guard, handle)
+        })
+    }
+
+    /// Exact live count (tests/diagnostics only).
+    pub fn count_exact(&self) -> usize {
+        epoch::with_guard(|_, _| {
+            let mut n = 0;
+            let mut cur = unsafe { (*self.head).next[0].load(Ordering::Acquire) };
+            while cur != self.tail {
+                let node = unsafe { &*cur };
+                if node.is_removable() && !node.is_claimed() {
+                    n += 1;
+                }
+                cur = node.next[0].load(Ordering::Acquire);
+            }
+            n
+        })
+    }
+
+    /// Live keys in order (tests only).
+    pub fn keys(&self) -> Vec<u64> {
+        epoch::with_guard(|_, _| {
+            let mut out = Vec::new();
+            let mut cur = unsafe { (*self.head).next[0].load(Ordering::Acquire) };
+            while cur != self.tail {
+                let node = unsafe { &*cur };
+                if node.is_removable() && !node.is_claimed() {
+                    out.push(node.key);
+                }
+                cur = node.next[0].load(Ordering::Acquire);
+            }
+            out
+        })
+    }
+}
+
+impl Default for HerlihySkipList {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Drop for HerlihySkipList {
+    fn drop(&mut self) {
+        let mut cur = self.head;
+        loop {
+            let is_tail = cur == self.tail;
+            let next = unsafe { (*cur).next[0].load(Ordering::Relaxed) };
+            unsafe { drop(Box::from_raw(cur)) };
+            if is_tail {
+                break;
+            }
+            cur = next;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn rng() -> Rng {
+        Rng::new(0x4E12)
+    }
+
+    #[test]
+    fn insert_contains_remove() {
+        let l = HerlihySkipList::new();
+        let mut r = rng();
+        assert!(l.insert(10, 100, &mut r));
+        assert!(l.insert(5, 50, &mut r));
+        assert!(!l.insert(10, 999, &mut r));
+        assert!(l.contains(10));
+        assert!(!l.contains(11));
+        assert_eq!(l.remove(10), Some(100));
+        assert!(!l.contains(10));
+        assert_eq!(l.remove(10), None);
+    }
+
+    #[test]
+    fn sorted_order() {
+        let l = HerlihySkipList::new();
+        let mut r = rng();
+        let mut keys: Vec<u64> = (1..300).collect();
+        r.shuffle(&mut keys);
+        for &k in &keys {
+            assert!(l.insert(k, k, &mut r));
+        }
+        assert_eq!(l.keys(), (1..300).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn claim_leftmost_ordered() {
+        let l = HerlihySkipList::new();
+        let mut r = rng();
+        for k in [9u64, 3, 7, 1] {
+            l.insert(k, k * 10, &mut r);
+        }
+        assert_eq!(l.claim_leftmost(), Some((1, 10)));
+        assert_eq!(l.claim_leftmost(), Some((3, 30)));
+        assert_eq!(l.claim_leftmost(), Some((7, 70)));
+        assert_eq!(l.claim_leftmost(), Some((9, 90)));
+        assert_eq!(l.claim_leftmost(), None);
+    }
+
+    #[test]
+    fn reinsert_after_claim() {
+        let l = HerlihySkipList::new();
+        let mut r = rng();
+        l.insert(7, 70, &mut r);
+        assert_eq!(l.claim_leftmost(), Some((7, 70)));
+        assert!(l.insert(7, 71, &mut r));
+        assert_eq!(l.claim_leftmost(), Some((7, 71)));
+    }
+
+    #[test]
+    fn spray_drains() {
+        let l = HerlihySkipList::new();
+        let mut r = rng();
+        for k in 1..=400u64 {
+            l.insert(k, k, &mut r);
+        }
+        let params = SprayParams::for_threads(8);
+        let mut got = Vec::new();
+        while let Some((k, _)) = l.spray_claim(&params, &mut r) {
+            got.push(k);
+        }
+        got.sort_unstable();
+        assert_eq!(got, (1..=400).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn concurrent_inserts_disjoint() {
+        let l = Arc::new(HerlihySkipList::new());
+        let nthreads = 4u64;
+        let per = 400u64;
+        let hs: Vec<_> = (0..nthreads)
+            .map(|t| {
+                let l = l.clone();
+                std::thread::spawn(move || {
+                    let mut r = Rng::stream(5, t);
+                    for i in 0..per {
+                        assert!(l.insert(1 + t + i * nthreads, i, &mut r));
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(l.count_exact() as u64, nthreads * per);
+    }
+
+    #[test]
+    fn concurrent_mixed_conservation() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let l = Arc::new(HerlihySkipList::new());
+        let ins = Arc::new(AtomicU64::new(0));
+        let del = Arc::new(AtomicU64::new(0));
+        let hs: Vec<_> = (0..4u64)
+            .map(|t| {
+                let (l, ins, del) = (l.clone(), ins.clone(), del.clone());
+                std::thread::spawn(move || {
+                    let mut r = Rng::stream(31, t);
+                    for _ in 0..1500 {
+                        if r.gen_bool(0.6) {
+                            let k = 1 + r.gen_range(5000);
+                            if l.insert(k, k, &mut r) {
+                                ins.fetch_add(1, Ordering::Relaxed);
+                            }
+                        } else if l.claim_leftmost().is_some() {
+                            del.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(
+            ins.load(Ordering::Relaxed) - del.load(Ordering::Relaxed),
+            l.count_exact() as u64
+        );
+    }
+}

@@ -1,0 +1,54 @@
+//! Skip-list substrates for the priority queues.
+//!
+//! - [`fraser`] — Harris/Fraser lock-free skip list (marked next pointers),
+//!   the base of `alistarh_fraser` and `lotan_shavit`.
+//! - [`herlihy`] — Herlihy-Lev-Luchangco-Shavit optimistic *lazy* skip list
+//!   (per-node locks, `marked`/`fully_linked` flags), the base of
+//!   `alistarh_herlihy` — the paper's best NUMA-oblivious performer.
+//!
+//! Both expose the node-level API the relaxed deleteMin algorithms need:
+//! bottom-level walks, logical claims, and physical removal of a claimed
+//! node.
+
+pub mod fraser;
+pub mod herlihy;
+
+/// Maximum tower height. 2^24 expected elements is far beyond the paper's
+/// largest (10M-element) runs.
+pub const MAX_HEIGHT: usize = 24;
+
+/// Tagged-pointer helpers: the LSB of a `next` pointer marks the *owning*
+/// node as logically deleted (Harris 2001). Node allocations are at least
+/// 8-byte aligned so the low bit is free.
+#[inline]
+pub(crate) fn tagged<T>(p: *mut T) -> *mut T {
+    (p as usize | 1) as *mut T
+}
+
+/// Strip the deletion tag.
+#[inline]
+pub(crate) fn untagged<T>(p: *mut T) -> *mut T {
+    (p as usize & !1) as *mut T
+}
+
+/// True if the deletion tag is set.
+#[inline]
+pub(crate) fn is_tagged<T>(p: *mut T) -> bool {
+    (p as usize & 1) == 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tag_roundtrip() {
+        let b = Box::into_raw(Box::new(7u64));
+        assert!(!is_tagged(b));
+        let t = tagged(b);
+        assert!(is_tagged(t));
+        assert_eq!(untagged(t), b);
+        assert_eq!(untagged(b), b);
+        unsafe { drop(Box::from_raw(b)) };
+    }
+}

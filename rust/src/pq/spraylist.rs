@@ -1,0 +1,259 @@
+//! SprayList relaxed priority queue (Alistarh, Kopinsky, Li, Shavit [2]).
+//!
+//! `deleteMin` performs a random descending walk (a *spray*) over the
+//! skip list and claims a node among the first O(p·log³p) elements, which
+//! removes the single-point contention of an exact deleteMin. The spray is
+//! parameterized exactly like the published implementation: starting
+//! height ⌊log₂p⌋+1, per-level jump length uniform in [0, ⌊log₂p⌋+1],
+//! descent D=1, and a 1/p chance of acting as a *cleaner* (an exact
+//! lotan_shavit-style deletion that compacts the claimed prefix).
+//!
+//! The queue is generic over its skip-list base — `alistarh_fraser` and
+//! `alistarh_herlihy` from the paper are the two instantiations
+//! ([`AlistarhFraser`], [`AlistarhHerlihy`]).
+
+use std::cell::RefCell;
+
+use crate::pq::skiplist::fraser::FraserSkipList;
+use crate::pq::skiplist::herlihy::HerlihySkipList;
+use crate::pq::traits::{ConcurrentPQ, PqStats};
+use crate::util::rng::Rng;
+
+/// Spray-walk parameters, derived from the expected thread count `p`.
+#[derive(Debug, Clone)]
+pub struct SprayParams {
+    /// Starting level of the spray (⌊log₂ p⌋ + 1).
+    pub start_height: usize,
+    /// Maximum forward jump per level (uniform in `[0, max_jump]`).
+    pub max_jump: u64,
+    /// Bottom-level forward scan limit before respraying.
+    pub max_local_scan: usize,
+    /// Number of resprays before degrading to an exact scan.
+    pub max_retries: usize,
+    /// Probability of acting as a cleaner (1/p in the paper).
+    pub cleaner_prob: f64,
+}
+
+impl SprayParams {
+    /// Parameters for an expected concurrency of `p` threads.
+    pub fn for_threads(p: usize) -> SprayParams {
+        let p = p.max(1);
+        let logp = (usize::BITS - p.leading_zeros()) as usize; // ⌈log2(p+1)⌉
+        SprayParams {
+            start_height: logp + 1,
+            max_jump: logp as u64 + 1,
+            max_local_scan: (logp + 1) * 2 + 8,
+            max_retries: 4,
+            cleaner_prob: 1.0 / p as f64,
+        }
+    }
+}
+
+/// Skip-list bases a SprayList can drive.
+pub trait SprayBase: Send + Sync + Default {
+    /// Insert `(key, value)`; false on duplicate.
+    fn base_insert(&self, key: u64, value: u64, rng: &mut Rng) -> bool;
+    /// Spray-claim an element near the minimum.
+    fn base_spray(&self, params: &SprayParams, rng: &mut Rng) -> Option<(u64, u64)>;
+    /// Exact leftmost claim (cleaner / fallback path).
+    fn base_claim_leftmost(&self) -> Option<(u64, u64)>;
+    /// Implementation label.
+    fn base_name() -> &'static str;
+}
+
+impl SprayBase for FraserSkipList {
+    fn base_insert(&self, key: u64, value: u64, rng: &mut Rng) -> bool {
+        self.insert(key, value, rng)
+    }
+    fn base_spray(&self, params: &SprayParams, rng: &mut Rng) -> Option<(u64, u64)> {
+        self.spray_claim(params, rng)
+    }
+    fn base_claim_leftmost(&self) -> Option<(u64, u64)> {
+        self.claim_leftmost()
+    }
+    fn base_name() -> &'static str {
+        "alistarh_fraser"
+    }
+}
+
+impl SprayBase for HerlihySkipList {
+    fn base_insert(&self, key: u64, value: u64, rng: &mut Rng) -> bool {
+        self.insert(key, value, rng)
+    }
+    fn base_spray(&self, params: &SprayParams, rng: &mut Rng) -> Option<(u64, u64)> {
+        self.spray_claim(params, rng)
+    }
+    fn base_claim_leftmost(&self) -> Option<(u64, u64)> {
+        self.claim_leftmost()
+    }
+    fn base_name() -> &'static str {
+        "alistarh_herlihy"
+    }
+}
+
+thread_local! {
+    static TLS_RNG: RefCell<Rng> = RefCell::new(Rng::new(
+        // Mix the thread id into the seed so each OS thread sprays its own
+        // stream even without explicit seeding.
+        0x5EED ^ {
+            let mut h = std::collections::hash_map::DefaultHasher::new();
+            use std::hash::{Hash, Hasher};
+            std::thread::current().id().hash(&mut h);
+            h.finish()
+        },
+    ));
+}
+
+/// The SprayList: a relaxed NUMA-oblivious priority queue.
+pub struct SprayList<B: SprayBase> {
+    base: B,
+    params: SprayParams,
+    stats: PqStats,
+}
+
+/// `alistarh_fraser` from the paper.
+pub type AlistarhFraser = SprayList<FraserSkipList>;
+/// `alistarh_herlihy` from the paper (best NUMA-oblivious performer).
+pub type AlistarhHerlihy = SprayList<HerlihySkipList>;
+
+impl<B: SprayBase> SprayList<B> {
+    /// Create a SprayList tuned for `p` expected threads.
+    pub fn new(p: usize) -> Self {
+        SprayList {
+            base: B::default(),
+            params: SprayParams::for_threads(p),
+            stats: PqStats::new(),
+        }
+    }
+
+    /// Operation counters (feeds SmartPQ feature extraction).
+    pub fn stats(&self) -> &PqStats {
+        &self.stats
+    }
+
+    /// Access the underlying skip list (used by SmartPQ's shared-base mode).
+    pub fn base(&self) -> &B {
+        &self.base
+    }
+
+    /// Retune spray parameters for a new thread count (cheap, lock-free
+    /// from the caller's perspective: only affects future sprays).
+    pub fn set_thread_hint(&mut self, p: usize) {
+        self.params = SprayParams::for_threads(p);
+    }
+}
+
+impl<B: SprayBase> ConcurrentPQ for SprayList<B> {
+    fn insert(&self, key: u64, value: u64) -> bool {
+        let ok = TLS_RNG.with(|r| self.base.base_insert(key, value, &mut r.borrow_mut()));
+        if ok {
+            self.stats.record_insert(key);
+        } else {
+            self.stats.record_failed_insert();
+        }
+        ok
+    }
+
+    fn delete_min(&self) -> Option<(u64, u64)> {
+        let out = TLS_RNG.with(|r| self.base.base_spray(&self.params, &mut r.borrow_mut()));
+        match out {
+            Some(_) => self.stats.record_delete_min(),
+            None => self.stats.record_empty_delete_min(),
+        }
+        out
+    }
+
+    fn len(&self) -> usize {
+        self.stats.size()
+    }
+
+    fn name(&self) -> &'static str {
+        B::base_name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn params_scale_with_threads() {
+        let p1 = SprayParams::for_threads(1);
+        let p64 = SprayParams::for_threads(64);
+        assert!(p64.start_height > p1.start_height);
+        assert!(p64.max_jump > p1.max_jump);
+        assert!((SprayParams::for_threads(8).cleaner_prob - 1.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spraylist_fraser_basic() {
+        let q: AlistarhFraser = SprayList::new(4);
+        assert!(q.insert(5, 50));
+        assert!(q.insert(3, 30));
+        assert!(!q.insert(5, 51));
+        assert_eq!(q.len(), 2);
+        let a = q.delete_min().unwrap();
+        let b = q.delete_min().unwrap();
+        let mut ks = [a.0, b.0];
+        ks.sort_unstable();
+        assert_eq!(ks, [3, 5]);
+        assert_eq!(q.delete_min(), None);
+        assert_eq!(q.name(), "alistarh_fraser");
+    }
+
+    #[test]
+    fn spraylist_herlihy_basic() {
+        let q: AlistarhHerlihy = SprayList::new(4);
+        for k in (1..100u64).rev() {
+            assert!(q.insert(k, k));
+        }
+        assert_eq!(q.len(), 99);
+        let mut got = Vec::new();
+        while let Some((k, _)) = q.delete_min() {
+            got.push(k);
+        }
+        got.sort_unstable();
+        assert_eq!(got, (1..100).collect::<Vec<_>>());
+        assert_eq!(q.name(), "alistarh_herlihy");
+    }
+
+    #[test]
+    fn concurrent_producer_consumer() {
+        let q: Arc<AlistarhFraser> = Arc::new(SprayList::new(4));
+        let producers: Vec<_> = (0..2u64)
+            .map(|t| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    for i in 0..1000u64 {
+                        q.insert(1 + t + 2 * i, i);
+                    }
+                })
+            })
+            .collect();
+        let consumers: Vec<_> = (0..2)
+            .map(|_| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    let mut n = 0u64;
+                    for _ in 0..1500 {
+                        if q.delete_min().is_some() {
+                            n += 1;
+                        }
+                    }
+                    n
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        let consumed: u64 = consumers.into_iter().map(|c| c.join().unwrap()).sum();
+        // Whatever was not consumed must still be in the queue.
+        let mut rest = 0u64;
+        while q.delete_min().is_some() {
+            rest += 1;
+        }
+        assert_eq!(consumed + rest, 2000);
+    }
+}

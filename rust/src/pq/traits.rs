@@ -1,0 +1,156 @@
+//! Core priority-queue interface shared by every implementation
+//! (NUMA-oblivious bases, delegation wrappers, and SmartPQ itself).
+
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+
+/// Reserved sentinel keys: user keys must lie strictly between these.
+pub const KEY_MIN_SENTINEL: u64 = 0;
+/// Upper sentinel (tail); user keys must be `< KEY_MAX_SENTINEL`.
+pub const KEY_MAX_SENTINEL: u64 = u64::MAX;
+
+/// A concurrent priority queue of `(key, value)` pairs with set semantics
+/// on the key. Smaller keys have higher priority.
+///
+/// `insert` returns `false` if the key was already present. `delete_min`
+/// returns the highest-priority pair, or `None` when the queue is
+/// (momentarily) empty. Relaxed implementations (SprayList) may return an
+/// element *near* the minimum — exactly the paper's semantics.
+pub trait ConcurrentPQ: Send + Sync {
+    /// Insert `(key, value)`. Returns false on duplicate key.
+    fn insert(&self, key: u64, value: u64) -> bool;
+
+    /// Remove and return a highest-priority element (possibly relaxed).
+    fn delete_min(&self) -> Option<(u64, u64)>;
+
+    /// Approximate number of elements (maintained with relaxed counters).
+    fn len(&self) -> usize;
+
+    /// True if `len() == 0`.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Implementation name used in reports (matches the paper's labels).
+    fn name(&self) -> &'static str;
+}
+
+/// Relaxed operation counters every queue carries; these feed the
+/// on-the-fly feature extraction of SmartPQ's classifier (paper §5).
+#[derive(Debug, Default)]
+pub struct PqStats {
+    /// Completed successful inserts.
+    pub inserts: AtomicU64,
+    /// Completed successful deleteMins.
+    pub delete_mins: AtomicU64,
+    /// Failed inserts (duplicate key).
+    pub failed_inserts: AtomicU64,
+    /// deleteMins that observed an empty queue.
+    pub empty_delete_mins: AtomicU64,
+    /// Current size (inserts - deleteMins), relaxed.
+    pub size: AtomicI64,
+    /// Maximum key observed in any insert (key-range tracking, §5).
+    pub max_key_seen: AtomicU64,
+}
+
+impl PqStats {
+    /// Fresh zeroed stats.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a successful insert of `key`.
+    #[inline]
+    pub fn record_insert(&self, key: u64) {
+        self.inserts.fetch_add(1, Ordering::Relaxed);
+        self.size.fetch_add(1, Ordering::Relaxed);
+        self.max_key_seen.fetch_max(key, Ordering::Relaxed);
+    }
+
+    /// Record a failed (duplicate) insert.
+    #[inline]
+    pub fn record_failed_insert(&self) {
+        self.failed_inserts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a successful deleteMin.
+    #[inline]
+    pub fn record_delete_min(&self) {
+        self.delete_mins.fetch_add(1, Ordering::Relaxed);
+        self.size.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Record a deleteMin on an empty queue.
+    #[inline]
+    pub fn record_empty_delete_min(&self) {
+        self.empty_delete_mins.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Current (non-negative) size estimate.
+    #[inline]
+    pub fn size(&self) -> usize {
+        self.size.load(Ordering::Relaxed).max(0) as usize
+    }
+
+    /// Total completed operations.
+    pub fn total_ops(&self) -> u64 {
+        self.inserts.load(Ordering::Relaxed)
+            + self.delete_mins.load(Ordering::Relaxed)
+            + self.failed_inserts.load(Ordering::Relaxed)
+            + self.empty_delete_mins.load(Ordering::Relaxed)
+    }
+
+    /// Fraction of insert ops among completed ops (1.0 when idle).
+    pub fn insert_fraction(&self) -> f64 {
+        let ins = self.inserts.load(Ordering::Relaxed) + self.failed_inserts.load(Ordering::Relaxed);
+        let del =
+            self.delete_mins.load(Ordering::Relaxed) + self.empty_delete_mins.load(Ordering::Relaxed);
+        let tot = ins + del;
+        if tot == 0 {
+            1.0
+        } else {
+            ins as f64 / tot as f64
+        }
+    }
+}
+
+/// Validate a user key against the sentinel range; panics in debug builds.
+#[inline]
+pub fn check_user_key(key: u64) {
+    debug_assert!(
+        key > KEY_MIN_SENTINEL && key < KEY_MAX_SENTINEL,
+        "user keys must be in (0, u64::MAX) exclusive; got {key}"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_roundtrip() {
+        let s = PqStats::new();
+        s.record_insert(10);
+        s.record_insert(30);
+        s.record_delete_min();
+        s.record_failed_insert();
+        s.record_empty_delete_min();
+        assert_eq!(s.size(), 1);
+        assert_eq!(s.total_ops(), 5);
+        assert_eq!(s.max_key_seen.load(Ordering::Relaxed), 30);
+        let f = s.insert_fraction();
+        assert!((f - 3.0 / 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn size_never_negative() {
+        let s = PqStats::new();
+        s.record_delete_min();
+        assert_eq!(s.size(), 0);
+    }
+
+    #[test]
+    fn idle_insert_fraction_is_one() {
+        let s = PqStats::new();
+        assert_eq!(s.insert_fraction(), 1.0);
+    }
+}

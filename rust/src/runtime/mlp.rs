@@ -1,0 +1,151 @@
+//! Native evaluator for the MLP throughput regressor (`artifacts/mlp.txt`)
+//! — used for parity checks against the XLA decider and as the
+//! allocation-free fallback.
+
+use std::path::Path;
+
+use crate::classifier::features::{Features, N_FEATURES};
+use crate::util::error::{Error, Result};
+
+/// A loaded 2-layer tanh MLP.
+#[derive(Debug, Clone)]
+pub struct MlpRegressor {
+    w1: Vec<f32>, // [F][H] row-major
+    b1: Vec<f32>,
+    w2: Vec<f32>, // [H][O]
+    b2: Vec<f32>,
+    hidden: usize,
+    out: usize,
+}
+
+impl MlpRegressor {
+    /// Parse the `mlp-v1` text format.
+    pub fn parse(text: &str) -> Result<MlpRegressor> {
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+        let magic = lines.next().ok_or_else(|| Error::Parse("empty mlp".into()))?;
+        if magic.trim() != "mlp-v1" {
+            return Err(Error::Parse(format!("bad mlp magic {magic:?}")));
+        }
+        let dims = lines.next().ok_or_else(|| Error::Parse("missing dims".into()))?;
+        let d: Vec<&str> = dims.split_whitespace().collect();
+        if d.len() != 4 || d[0] != "dims" {
+            return Err(Error::Parse(format!("bad dims line {dims:?}")));
+        }
+        let f: usize = d[1].parse().map_err(|_| Error::Parse("bad F".into()))?;
+        let h: usize = d[2].parse().map_err(|_| Error::Parse("bad H".into()))?;
+        let o: usize = d[3].parse().map_err(|_| Error::Parse("bad O".into()))?;
+        if f != N_FEATURES {
+            return Err(Error::Parse(format!("mlp expects {f} features, not {N_FEATURES}")));
+        }
+        let mut w1 = None;
+        let mut b1 = None;
+        let mut w2 = None;
+        let mut b2 = None;
+        for line in lines {
+            let mut it = line.split_whitespace();
+            let name = it.next().unwrap_or("");
+            let vals: std::result::Result<Vec<f32>, _> = it.map(str::parse).collect();
+            let vals = vals.map_err(|_| Error::Parse(format!("bad floats in {name}")))?;
+            match name {
+                "w1" => w1 = Some(vals),
+                "b1" => b1 = Some(vals),
+                "w2" => w2 = Some(vals),
+                "b2" => b2 = Some(vals),
+                other => return Err(Error::Parse(format!("unknown section {other:?}"))),
+            }
+        }
+        let (w1, b1, w2, b2) = (
+            w1.ok_or_else(|| Error::Parse("missing w1".into()))?,
+            b1.ok_or_else(|| Error::Parse("missing b1".into()))?,
+            w2.ok_or_else(|| Error::Parse("missing w2".into()))?,
+            b2.ok_or_else(|| Error::Parse("missing b2".into()))?,
+        );
+        if w1.len() != f * h || b1.len() != h || w2.len() != h * o || b2.len() != o {
+            return Err(Error::Parse("mlp weight shape mismatch".into()));
+        }
+        Ok(MlpRegressor {
+            w1,
+            b1,
+            w2,
+            b2,
+            hidden: h,
+            out: o,
+        })
+    }
+
+    /// Load from a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<MlpRegressor> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Forward pass for one encoded feature vector.
+    pub fn forward(&self, x: &[f32; N_FEATURES]) -> Vec<f32> {
+        let mut h = vec![0f32; self.hidden];
+        for (j, hj) in h.iter_mut().enumerate() {
+            let mut acc = self.b1[j];
+            for (i, &xi) in x.iter().enumerate() {
+                acc += xi * self.w1[i * self.hidden + j];
+            }
+            *hj = acc.tanh();
+        }
+        let mut out = vec![0f32; self.out];
+        for (k, ok) in out.iter_mut().enumerate() {
+            let mut acc = self.b2[k];
+            for (j, &hj) in h.iter().enumerate() {
+                acc += hj * self.w2[j * self.out + k];
+            }
+            *ok = acc;
+        }
+        out
+    }
+
+    /// Predicted (oblivious, aware) log2-Mops for a workload.
+    pub fn predict(&self, f: &Features) -> (f32, f32) {
+        let out = self.forward(&f.encode());
+        (out[0], out.get(1).copied().unwrap_or(out[0]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> String {
+        // F=4 H=2 O=2; w1 = identity-ish
+        let mut s = String::from("mlp-v1\ndims 4 2 2\n");
+        s += "w1 1 0 0 1 0 0 0 0\n"; // rows: x0->[1,0], x1->[0,1], x2,x3 -> 0
+        s += "b1 0 0\n";
+        s += "w2 1 0 0 1\n";
+        s += "b2 0.5 -0.5\n";
+        s
+    }
+
+    #[test]
+    fn parse_and_forward() {
+        let m = MlpRegressor::parse(&tiny()).unwrap();
+        let out = m.forward(&[1.0, 2.0, 3.0, 4.0]);
+        assert!((out[0] - (1f32.tanh() + 0.5)).abs() < 1e-6);
+        assert!((out[1] - (2f32.tanh() - 0.5)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(MlpRegressor::parse("nope").is_err());
+        assert!(MlpRegressor::parse("mlp-v1\ndims 4 2 2\nw1 1 2\n").is_err());
+        let missing = "mlp-v1\ndims 4 2 2\nw1 1 0 0 1 0 0 0 0\nb1 0 0\nw2 1 0 0 1\n";
+        assert!(MlpRegressor::parse(missing).is_err());
+    }
+
+    #[test]
+    fn loads_built_artifact_if_present() {
+        for p in ["artifacts/mlp.txt", "../artifacts/mlp.txt"] {
+            if std::path::Path::new(p).exists() {
+                let m = MlpRegressor::load(p).unwrap();
+                let f = crate::classifier::Features::new(32.0, 1e5, 2e5, 50.0);
+                let (o, a) = m.predict(&f);
+                assert!(o.is_finite() && a.is_finite());
+                return;
+            }
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! XLA/PJRT runtime: loads the AOT-compiled decision artifacts
+//! (`artifacts/*.hlo.txt`, produced once by `make artifacts`) and executes
+//! them from the Rust hot path. Python never runs at serve time.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 serialized protos carry 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+pub mod mlp;
+pub mod pjrt;
+
+pub use mlp::MlpRegressor;
+pub use pjrt::{XlaClassifier, XlaDecider};

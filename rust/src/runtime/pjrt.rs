@@ -1,0 +1,249 @@
+//! PJRT-backed executors for the decision artifacts.
+//!
+//! The `xla` crate's client/executable types are `!Send` (they hold
+//! `Rc`s), so each artifact runs on a dedicated *inference thread* that
+//! owns the PJRT objects; callers talk to it over channels. This also
+//! mirrors the deployment shape: one decision thread, off the request
+//! path (paper §4.2.2 — the classifier is consulted once per second).
+
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+use crate::classifier::features::{Features, N_FEATURES};
+use crate::classifier::{ModeClass, ModeOracle};
+use crate::util::error::{Error, Result};
+
+/// Batch size the artifacts were compiled for (aot.py ARTIFACT_BATCH).
+pub const ARTIFACT_BATCH: usize = 16;
+
+fn xla_err(e: xla::Error) -> Error {
+    Error::Xla(e.to_string())
+}
+
+/// Compile an HLO-text artifact on a PJRT CPU client.
+fn compile_artifact(path: &Path) -> Result<(xla::PjRtClient, xla::PjRtLoadedExecutable)> {
+    if !path.exists() {
+        return Err(Error::Config(format!(
+            "missing artifact {} — run `make artifacts` first",
+            path.display()
+        )));
+    }
+    let client = xla::PjRtClient::cpu().map_err(xla_err)?;
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str()
+            .ok_or_else(|| Error::Config(format!("non-utf8 artifact path {}", path.display())))?,
+    )
+    .map_err(xla_err)?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client.compile(&comp).map_err(xla_err)?;
+    Ok((client, exe))
+}
+
+fn batch_literal(xs: &[[f32; N_FEATURES]]) -> Result<xla::Literal> {
+    debug_assert!(xs.len() <= ARTIFACT_BATCH);
+    let mut flat = [0f32; ARTIFACT_BATCH * N_FEATURES];
+    for (i, row) in xs.iter().enumerate() {
+        flat[i * N_FEATURES..(i + 1) * N_FEATURES].copy_from_slice(row);
+    }
+    xla::Literal::vec1(&flat)
+        .reshape(&[ARTIFACT_BATCH as i64, N_FEATURES as i64])
+        .map_err(xla_err)
+}
+
+type ClassifyReply = Result<Vec<ModeClass>>;
+type DecideReply = Result<(Vec<ModeClass>, Vec<[f32; 2]>)>;
+
+enum Job {
+    Classify(Vec<[f32; N_FEATURES]>, mpsc::Sender<ClassifyReply>),
+    Decide(Vec<[f32; N_FEATURES]>, mpsc::Sender<DecideReply>),
+}
+
+/// Inference-thread main loop: owns the (!Send) PJRT state.
+fn worker(path: PathBuf, ready: mpsc::Sender<Result<()>>, rx: mpsc::Receiver<Job>) {
+    let exe = match compile_artifact(&path) {
+        Ok((_client, exe)) => {
+            let _ = ready.send(Ok(()));
+            exe
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    while let Ok(job) = rx.recv() {
+        match job {
+            Job::Classify(xs, reply) => {
+                let _ = reply.send(run_classify(&exe, &xs));
+            }
+            Job::Decide(xs, reply) => {
+                let _ = reply.send(run_decide(&exe, &xs));
+            }
+        }
+    }
+}
+
+fn run_classify(exe: &xla::PjRtLoadedExecutable, xs: &[[f32; N_FEATURES]]) -> ClassifyReply {
+    let lit = batch_literal(xs)?;
+    let result = exe.execute::<xla::Literal>(&[lit]).map_err(xla_err)?;
+    let out = result[0][0].to_literal_sync().map_err(xla_err)?;
+    let classes = out.to_tuple1().map_err(xla_err)?;
+    let v = classes.to_vec::<i32>().map_err(xla_err)?;
+    Ok(v[..xs.len()]
+        .iter()
+        .map(|&c| ModeClass::from_u8(c as u8))
+        .collect())
+}
+
+fn run_decide(exe: &xla::PjRtLoadedExecutable, xs: &[[f32; N_FEATURES]]) -> DecideReply {
+    let lit = batch_literal(xs)?;
+    let result = exe.execute::<xla::Literal>(&[lit]).map_err(xla_err)?;
+    let out = result[0][0].to_literal_sync().map_err(xla_err)?;
+    let (classes, mops) = out.to_tuple2().map_err(xla_err)?;
+    let cls = classes.to_vec::<i32>().map_err(xla_err)?;
+    let m = mops.to_vec::<f32>().map_err(xla_err)?;
+    Ok((
+        cls[..xs.len()]
+            .iter()
+            .map(|&c| ModeClass::from_u8(c as u8))
+            .collect(),
+        (0..xs.len()).map(|i| [m[2 * i], m[2 * i + 1]]).collect(),
+    ))
+}
+
+/// Handle to an artifact's inference thread.
+struct ExecHandle {
+    tx: Mutex<mpsc::Sender<Job>>,
+    _thread: std::thread::JoinHandle<()>,
+}
+
+impl ExecHandle {
+    fn spawn(path: PathBuf) -> Result<ExecHandle> {
+        let (tx, rx) = mpsc::channel();
+        let (ready_tx, ready_rx) = mpsc::channel();
+        let thread = std::thread::Builder::new()
+            .name("xla-inference".into())
+            .spawn(move || worker(path, ready_tx, rx))
+            .map_err(|e| Error::Config(format!("spawn inference thread: {e}")))?;
+        ready_rx
+            .recv()
+            .map_err(|_| Error::Xla("inference thread died during compile".into()))??;
+        Ok(ExecHandle {
+            tx: Mutex::new(tx),
+            _thread: thread,
+        })
+    }
+
+    fn submit_classify(&self, xs: Vec<[f32; N_FEATURES]>) -> ClassifyReply {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .lock()
+            .expect("inference tx poisoned")
+            .send(Job::Classify(xs, reply_tx))
+            .map_err(|_| Error::Xla("inference thread gone".into()))?;
+        reply_rx
+            .recv()
+            .map_err(|_| Error::Xla("inference thread dropped reply".into()))?
+    }
+
+    fn submit_decide(&self, xs: Vec<[f32; N_FEATURES]>) -> DecideReply {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .lock()
+            .expect("inference tx poisoned")
+            .send(Job::Decide(xs, reply_tx))
+            .map_err(|_| Error::Xla("inference thread gone".into()))?;
+        reply_rx
+            .recv()
+            .map_err(|_| Error::Xla("inference thread dropped reply".into()))?
+    }
+}
+
+/// The classifier artifact (`dtree.hlo.txt`): f32[B,4] → s32[B].
+pub struct XlaClassifier {
+    exec: ExecHandle,
+    /// Inference counter (observability).
+    pub invocations: std::sync::atomic::AtomicU64,
+}
+
+impl XlaClassifier {
+    /// Load `dtree.hlo.txt` from an artifact directory.
+    pub fn load(artifact_dir: impl AsRef<Path>) -> Result<XlaClassifier> {
+        Ok(XlaClassifier {
+            exec: ExecHandle::spawn(artifact_dir.as_ref().join("dtree.hlo.txt"))?,
+            invocations: std::sync::atomic::AtomicU64::new(0),
+        })
+    }
+
+    /// Classify up to [`ARTIFACT_BATCH`] encoded feature rows.
+    pub fn predict_batch(&self, xs: &[[f32; N_FEATURES]]) -> Result<Vec<ModeClass>> {
+        if xs.is_empty() {
+            return Ok(Vec::new());
+        }
+        if xs.len() > ARTIFACT_BATCH {
+            return Err(Error::Config(format!(
+                "batch {} exceeds artifact batch {ARTIFACT_BATCH}",
+                xs.len()
+            )));
+        }
+        self.invocations
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.exec.submit_classify(xs.to_vec())
+    }
+}
+
+impl ModeOracle for XlaClassifier {
+    fn predict(&self, f: &Features) -> ModeClass {
+        match self.predict_batch(&[f.encode()]) {
+            Ok(v) => v[0],
+            Err(e) => {
+                crate::log_warn!("xla classifier failed ({e}); returning Neutral");
+                ModeClass::Neutral
+            }
+        }
+    }
+
+    fn oracle_name(&self) -> &'static str {
+        "dtree-xla"
+    }
+}
+
+/// The fused decider artifact (`decider.hlo.txt`):
+/// f32[B,4] → (s32[B] classes, f32[B,2] per-mode log2-Mops).
+pub struct XlaDecider {
+    exec: ExecHandle,
+}
+
+impl XlaDecider {
+    /// Load `decider.hlo.txt` from an artifact directory.
+    pub fn load(artifact_dir: impl AsRef<Path>) -> Result<XlaDecider> {
+        Ok(XlaDecider {
+            exec: ExecHandle::spawn(artifact_dir.as_ref().join("decider.hlo.txt"))?,
+        })
+    }
+
+    /// Classify + regress a batch. Returns (classes, [oblivious, aware]
+    /// predicted log2-Mops per row).
+    pub fn decide_batch(
+        &self,
+        xs: &[[f32; N_FEATURES]],
+    ) -> Result<(Vec<ModeClass>, Vec<[f32; 2]>)> {
+        if xs.len() > ARTIFACT_BATCH {
+            return Err(Error::Config("batch exceeds artifact batch".into()));
+        }
+        self.exec.submit_decide(xs.to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_artifact_is_config_error() {
+        match XlaClassifier::load("/nonexistent-dir") {
+            Ok(_) => panic!("load of missing artifact succeeded"),
+            Err(err) => assert!(matches!(err, Error::Config(_)), "{err}"),
+        }
+    }
+}

@@ -1,0 +1,278 @@
+//! Node-granular cache-line directory.
+//!
+//! Tracks, for each explicitly modeled *hot* line (delegation request /
+//! response lines, queue-head lines), which socket last wrote it and which
+//! sockets hold copies — enough to price every access as an L1/LLC hit, a
+//! clean transfer, or a dirty cache-to-cache transfer, and to charge
+//! invalidation on writes. Cold interior lines of large structures are
+//! priced statistically by [`super::cost::CostModel::interior_visit`]
+//! (tracking millions of lines individually would add memory without
+//! changing the contention behavior the paper studies).
+
+use std::collections::HashMap;
+
+use super::cost::CostModel;
+
+/// Identifier of a modeled cache line.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct LineId(pub u64);
+
+/// Directory state of one line.
+#[derive(Debug, Clone, Copy, Default)]
+struct LineState {
+    /// Socket holding the line in modified state (None = clean).
+    dirty_on: Option<u8>,
+    /// Bitmask of sockets holding a copy.
+    sharers: u8,
+    /// Last hardware context to touch it (L1-hit detection).
+    last_ctx: u32,
+    /// A line's ownership transfers form a dependency *chain*: a core
+    /// cannot take ownership before the previous owner has received it.
+    /// This per-line serialization — not raw bandwidth — is what makes a
+    /// hot line a throughput ceiling (paper §4.1's "cache line
+    /// invalidation traffic"): N threads hammering one line complete at
+    /// most 1/transfer_latency ownership changes per second, total.
+    busy_until: f64,
+}
+
+/// The directory. One per simulation.
+#[derive(Debug, Default)]
+pub struct Directory {
+    lines: HashMap<LineId, LineState>,
+    /// Monotone counters for reports.
+    pub reads: u64,
+    /// Write accesses.
+    pub writes: u64,
+    /// Dirty cache-to-cache transfers observed (the coherence-traffic
+    /// proxy the paper's §4.1 discussion refers to).
+    pub dirty_transfers: u64,
+    /// Invalidation messages sent.
+    pub invalidations: u64,
+    /// Total per-line serialization wait accumulated (ns).
+    pub chain_wait: f64,
+}
+
+impl Directory {
+    /// Fresh directory.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Price a read of `line` at virtual time `now` by hardware context
+    /// `ctx` on socket `node`.
+    pub fn read(&mut self, cost: &CostModel, now: f64, line: LineId, node: u8, ctx: u32) -> f64 {
+        self.reads += 1;
+        let st = self.lines.entry(line).or_default();
+        let mut chained = false;
+        let base = match st.dirty_on {
+            Some(owner) if owner != node => {
+                self.dirty_transfers += 1;
+                st.dirty_on = None; // downgrade to shared
+                chained = true;
+                cost.remote_dirty
+            }
+            Some(_) => {
+                // Dirty on our socket.
+                if st.last_ctx == ctx {
+                    cost.l1_hit
+                } else {
+                    chained = true;
+                    cost.local_dirty
+                }
+            }
+            None => {
+                if st.sharers & (1 << node) != 0 {
+                    if st.last_ctx == ctx {
+                        cost.l1_hit
+                    } else {
+                        cost.llc_hit
+                    }
+                } else if st.sharers != 0 {
+                    cost.remote_clean
+                } else {
+                    cost.dram_local
+                }
+            }
+        };
+        let mut c = base;
+        if chained {
+            let wait = (st.busy_until - now).max(0.0);
+            self.chain_wait += wait;
+            c += wait;
+            st.busy_until = now + c;
+        }
+        st.sharers |= 1 << node;
+        st.last_ctx = ctx;
+        c
+    }
+
+    /// Price a write (or successful atomic RMW when `rmw`).
+    pub fn write(
+        &mut self,
+        cost: &CostModel,
+        now: f64,
+        line: LineId,
+        node: u8,
+        ctx: u32,
+        rmw: bool,
+    ) -> f64 {
+        self.writes += 1;
+        let st = self.lines.entry(line).or_default();
+        let others = st.sharers & !(1 << node);
+        let mut chained = true;
+        let base = match st.dirty_on {
+            Some(owner) if owner != node => {
+                self.dirty_transfers += 1;
+                cost.remote_dirty
+            }
+            Some(_) => {
+                if st.last_ctx == ctx {
+                    chained = false;
+                    cost.l1_hit
+                } else {
+                    cost.local_dirty
+                }
+            }
+            None if st.sharers & (1 << node) != 0 && others == 0 => {
+                chained = false;
+                cost.l2_hit
+            }
+            None if st.sharers & (1 << node) != 0 => cost.llc_hit,
+            None if st.sharers != 0 => cost.remote_clean,
+            None => {
+                chained = false;
+                cost.dram_local
+            }
+        };
+        let mut c = base;
+        if others != 0 {
+            let n_inval = others.count_ones() as u64;
+            self.invalidations += n_inval;
+            c += 10.0 * n_inval as f64; // snoop/invalidate per remote socket
+        }
+        if rmw {
+            c += cost.atomic_rmw;
+            if base >= cost.remote_dirty {
+                // Contended cross-socket RMW: the transfer serializes
+                // through the coherence engine at HitM-under-load service
+                // time, not the unloaded dirty-transfer latency.
+                c += cost.contended_rmw_extra;
+            }
+        }
+        if chained {
+            // Ownership must travel through the previous holder first.
+            let wait = (st.busy_until - now).max(0.0);
+            self.chain_wait += wait;
+            c += wait;
+            st.busy_until = now + c;
+        }
+        st.dirty_on = Some(node);
+        st.sharers = 1 << node;
+        st.last_ctx = ctx;
+        c
+    }
+
+    /// Number of tracked lines.
+    pub fn tracked(&self) -> usize {
+        self.lines.len()
+    }
+
+    /// Debug: a line's chain horizon (busy_until, ns).
+    pub fn line_busy_until(&self, line: LineId) -> f64 {
+        self.lines.get(&line).map(|s| s.busy_until).unwrap_or(0.0)
+    }
+}
+
+/// Deterministic line-id namespaces.
+pub mod lines {
+    use super::LineId;
+
+    /// Request line of client slot `i`.
+    pub fn request(i: usize) -> LineId {
+        LineId(0x1000_0000 + i as u64)
+    }
+
+    /// Response line of group `g`.
+    pub fn response(g: usize) -> LineId {
+        LineId(0x2000_0000 + g as u64)
+    }
+
+    /// The queue-head sentinel tower line `lvl`.
+    pub fn head(lvl: usize) -> LineId {
+        LineId(0x3000_0000 + lvl as u64)
+    }
+
+    /// The i-th line of the min region (leftmost live nodes).
+    pub fn min_region(i: usize) -> LineId {
+        LineId(0x4000_0000 + (i as u64 & 0xFF))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn c() -> CostModel {
+        CostModel::default()
+    }
+
+    #[test]
+    fn cold_read_is_dram() {
+        let mut d = Directory::new();
+        let cost = d.read(&c(), 0.0, LineId(1), 0, 0);
+        assert_eq!(cost, c().dram_local);
+    }
+
+    #[test]
+    fn repeat_read_same_ctx_is_l1() {
+        let mut d = Directory::new();
+        d.read(&c(), 0.0, LineId(1), 0, 0);
+        assert_eq!(d.read(&c(), 0.0, LineId(1), 0, 0), c().l1_hit);
+    }
+
+    #[test]
+    fn read_after_remote_write_is_dirty_transfer() {
+        let mut d = Directory::new();
+        d.write(&c(), 0.0, LineId(1), 0, 0, false);
+        let cost = d.read(&c(), 0.0, LineId(1), 1, 99);
+        assert_eq!(cost, c().remote_dirty);
+        assert_eq!(d.dirty_transfers, 1);
+        // Second read from node 1 is now a local hit.
+        assert!(d.read(&c(), 0.0, LineId(1), 1, 99) <= c().llc_hit);
+    }
+
+    #[test]
+    fn write_invalidates_sharers() {
+        let mut d = Directory::new();
+        d.read(&c(), 0.0, LineId(7), 0, 0);
+        d.read(&c(), 0.0, LineId(7), 1, 20);
+        d.read(&c(), 0.0, LineId(7), 2, 40);
+        let before = d.invalidations;
+        let cost = d.write(&c(), 0.0, LineId(7), 0, 0, true);
+        assert!(d.invalidations >= before + 2, "sharers not invalidated");
+        assert!(cost > c().atomic_rmw);
+    }
+
+    #[test]
+    fn ping_pong_is_expensive() {
+        // The deleteMin hot-spot pattern: two sockets CAS the same line.
+        let mut d = Directory::new();
+        let mut total = 0.0;
+        for i in 0..10 {
+            total += d.write(&c(), 0.0, LineId(9), (i % 2) as u8, i, true);
+        }
+        let avg = total / 10.0;
+        assert!(
+            avg > c().remote_dirty,
+            "ping-pong average {avg} should exceed a dirty transfer"
+        );
+    }
+
+    #[test]
+    fn same_socket_handoff_cheap() {
+        let mut d = Directory::new();
+        d.write(&c(), 0.0, LineId(3), 0, 0, false);
+        let cost = d.read(&c(), 0.0, LineId(3), 0, 1); // other core, same socket
+        assert_eq!(cost, c().local_dirty);
+    }
+}

@@ -1,0 +1,162 @@
+//! The latency / coherence cost model (nanoseconds).
+//!
+//! Constants follow published measurements for 4-socket Sandy Bridge-EP
+//! systems (Molka et al. [54], David et al. [15]): local L1/L2/LLC ≈
+//! 1.5/4/15 ns, local DRAM ≈ 60 ns, remote clean line ≈ 110 ns, remote
+//! *modified* line (dirty transfer, the deleteMin hot-spot pattern) ≈
+//! 210 ns, on-socket dirty transfer ≈ 25 ns. They are configuration, not
+//! code: every bench accepts a `CostModel` so sensitivity can be swept.
+
+/// All tunables of the simulated memory system.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostModel {
+    /// L1 hit (same hardware context re-reads its own line).
+    pub l1_hit: f64,
+    /// L2 hit.
+    pub l2_hit: f64,
+    /// Shared LLC hit on the local socket.
+    pub llc_hit: f64,
+    /// Local-socket DRAM access.
+    pub dram_local: f64,
+    /// Remote-socket clean-line transfer (1 hop).
+    pub remote_clean: f64,
+    /// Remote-socket modified-line transfer (cache-to-cache, dirty).
+    pub remote_dirty: f64,
+    /// On-socket modified-line transfer between cores.
+    pub local_dirty: f64,
+    /// Extra cost of an atomic RMW (CAS/FAA) over the underlying access.
+    pub atomic_rmw: f64,
+    /// Additional service time of a *cross-socket* RMW ownership transfer
+    /// under contention (queued snoops + HitM writeback; Sandy Bridge-EP
+    /// measurements put contended CAS at 400-700 ns end-to-end).
+    pub contended_rmw_extra: f64,
+    /// Cost charged per *failed* CAS retry (re-read + new attempt).
+    pub cas_retry: f64,
+    /// One `pause` instruction (the paper's inter-op delay loop is 25).
+    pub pause: f64,
+    /// Per-op fixed compute (branching, RNG, call overhead).
+    pub op_compute: f64,
+    /// Per-node-visit compute during a traversal (compare + branch).
+    pub visit_compute: f64,
+    /// Memory allocation (bump/slab) for a new node.
+    pub alloc: f64,
+    /// SMT slowdown multiplier when both contexts of a core are busy.
+    pub smt_factor: f64,
+    /// Context-switch penalty amortized per op when oversubscribed.
+    pub oversub_switch: f64,
+    /// LLC capacity per socket in bytes (16 MB on the testbed).
+    pub llc_bytes: f64,
+    /// Approximate bytes per skip-list element (node + tower).
+    pub node_bytes: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel {
+            l1_hit: 1.5,
+            l2_hit: 4.0,
+            llc_hit: 15.0,
+            dram_local: 60.0,
+            remote_clean: 110.0,
+            remote_dirty: 210.0,
+            local_dirty: 25.0,
+            atomic_rmw: 15.0,
+            contended_rmw_extra: 300.0,
+            cas_retry: 60.0,
+            pause: 4.0,
+            op_compute: 30.0,
+            visit_compute: 2.0,
+            alloc: 20.0,
+            smt_factor: 1.35,
+            oversub_switch: 150.0,
+            llc_bytes: 16.0 * 1024.0 * 1024.0,
+            node_bytes: 96.0,
+        }
+    }
+}
+
+impl CostModel {
+    /// The paper's inter-operation delay loop: 25 pause instructions.
+    pub fn delay_loop(&self) -> f64 {
+        25.0 * self.pause
+    }
+
+    /// Average cost of touching one *interior* line of a structure of
+    /// `bytes` total footprint, read from `reader_node`, where the
+    /// structure's lines are spread over `owner_nodes` sockets (1 for
+    /// delegation/NUMA-aware placement, `nodes` for first-touch oblivious
+    /// allocation). Models LLC capacity: footprints beyond the LLC spill
+    /// to DRAM proportionally.
+    pub fn interior_visit(&self, bytes: f64, reader_local_fraction: f64) -> f64 {
+        // Probability an interior line is cached in the reader's LLC.
+        let p_llc = (self.llc_bytes / bytes.max(1.0)).min(1.0);
+        let hit = self.llc_hit;
+        let miss_local = self.dram_local;
+        let miss_remote = self.remote_clean;
+        let miss = reader_local_fraction * miss_local + (1.0 - reader_local_fraction) * miss_remote;
+        p_llc * hit + (1.0 - p_llc) * miss
+    }
+
+    /// Cost of reading a line last *written* by another thread.
+    pub fn dirty_read(&self, same_node: bool) -> f64 {
+        if same_node {
+            self.local_dirty
+        } else {
+            self.remote_dirty
+        }
+    }
+
+    /// Cost of a successful CAS on a line in the given state.
+    pub fn cas(&self, line_dirty_elsewhere: bool, same_node: bool) -> f64 {
+        let base = if line_dirty_elsewhere {
+            self.dirty_read(same_node)
+        } else {
+            self.llc_hit
+        };
+        base + self.atomic_rmw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordering_of_latencies() {
+        let c = CostModel::default();
+        assert!(c.l1_hit < c.l2_hit);
+        assert!(c.l2_hit < c.llc_hit);
+        assert!(c.llc_hit < c.dram_local);
+        assert!(c.dram_local < c.remote_clean);
+        assert!(c.remote_clean < c.remote_dirty);
+        assert!(c.local_dirty < c.remote_dirty);
+    }
+
+    #[test]
+    fn interior_visit_scales_with_footprint() {
+        let c = CostModel::default();
+        // Small structure: everything LLC-resident.
+        let small = c.interior_visit(1024.0 * 96.0, 1.0);
+        assert!((small - c.llc_hit).abs() < 1.0, "small={small}");
+        // Huge structure: mostly DRAM.
+        let huge = c.interior_visit(10_000_000.0 * 96.0, 1.0);
+        assert!(huge > 0.9 * c.dram_local, "huge={huge}");
+        // Remote placement costs more.
+        let remote = c.interior_visit(10_000_000.0 * 96.0, 0.25);
+        assert!(remote > huge);
+    }
+
+    #[test]
+    fn dirty_reads() {
+        let c = CostModel::default();
+        assert_eq!(c.dirty_read(true), c.local_dirty);
+        assert_eq!(c.dirty_read(false), c.remote_dirty);
+        assert!(c.cas(true, false) > c.cas(false, true));
+    }
+
+    #[test]
+    fn delay_loop_is_25_pauses() {
+        let c = CostModel::default();
+        assert!((c.delay_loop() - 100.0).abs() < 1e-9);
+    }
+}

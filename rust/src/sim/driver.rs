@@ -1,0 +1,344 @@
+//! Workload specification and the simulator's public entry point — the
+//! figure benches, the training-data sweep, and the examples all come
+//! through here.
+
+use std::sync::Arc;
+
+use crate::classifier::{DecisionTree, ModeOracle};
+use crate::sim::cost::CostModel;
+use crate::sim::engine::{Engine, EngineAlgo, PhaseCfg, PhaseStats};
+use crate::sim::models::oblivious::{ObvKind, ObvParams};
+use crate::sim::topology::{PlacementPolicy, Topology};
+
+/// Simulated algorithm selection (paper §4 list).
+#[derive(Debug, Clone)]
+pub enum SimAlgo {
+    /// lotan_shavit [47].
+    LotanShavit,
+    /// alistarh_fraser [2,24].
+    AlistarhFraser,
+    /// alistarh_herlihy [2,34].
+    AlistarhHerlihy,
+    /// ffwd [65] (one server).
+    Ffwd,
+    /// Nuddle over alistarh_herlihy with this many servers (paper: 8).
+    Nuddle {
+        /// Server threads.
+        servers: usize,
+    },
+    /// SmartPQ: Nuddle + the decision-tree classifier. `oracle` defaults
+    /// to the trained artifact if present, else the builtin tree.
+    SmartPQ {
+        /// Server threads.
+        servers: usize,
+        /// Mode predictor; None = load artifact or fall back.
+        oracle: Option<Arc<dyn ModeOracle>>,
+    },
+}
+
+impl SimAlgo {
+    /// Paper label.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SimAlgo::LotanShavit => "lotan_shavit",
+            SimAlgo::AlistarhFraser => "alistarh_fraser",
+            SimAlgo::AlistarhHerlihy => "alistarh_herlihy",
+            SimAlgo::Ffwd => "ffwd",
+            SimAlgo::Nuddle { .. } => "nuddle",
+            SimAlgo::SmartPQ { .. } => "smartpq",
+        }
+    }
+
+    /// All static (non-adaptive) algorithms, as evaluated in Fig. 9.
+    pub fn fig9_set() -> Vec<SimAlgo> {
+        vec![
+            SimAlgo::LotanShavit,
+            SimAlgo::AlistarhFraser,
+            SimAlgo::AlistarhHerlihy,
+            SimAlgo::Ffwd,
+            SimAlgo::Nuddle { servers: 8 },
+        ]
+    }
+}
+
+/// One phase of a dynamic workload (paper Tables 2/3).
+#[derive(Debug, Clone)]
+pub struct WorkloadPhase {
+    /// Virtual duration in nanoseconds.
+    pub duration_ns: f64,
+    /// Active threads.
+    pub threads: usize,
+    /// Insert percentage.
+    pub insert_pct: f64,
+    /// Key range.
+    pub key_range: u64,
+}
+
+/// A complete workload.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    /// Initial queue fill.
+    pub init_size: u64,
+    /// Phases, run back to back (state carries over — sizes evolve as in
+    /// the paper's Tables 2/3).
+    pub phases: Vec<WorkloadPhase>,
+    /// RNG seed (runs are fully deterministic given the seed).
+    pub seed: u64,
+    /// Machine description.
+    pub topology: Topology,
+    /// Cost model.
+    pub cost: CostModel,
+    /// Per-algorithm coefficients.
+    pub params: ObvParams,
+}
+
+impl Workload {
+    /// Single-phase workload with the paper's default machine.
+    pub fn single(
+        init_size: u64,
+        key_range: u64,
+        threads: usize,
+        insert_pct: f64,
+        duration_ms: f64,
+        seed: u64,
+    ) -> Workload {
+        Workload {
+            init_size,
+            phases: vec![WorkloadPhase {
+                duration_ns: duration_ms * 1e6,
+                threads,
+                insert_pct,
+                key_range,
+            }],
+            seed,
+            topology: Topology::default(),
+            cost: CostModel::default(),
+            params: ObvParams::default(),
+        }
+    }
+}
+
+/// Per-phase result.
+pub type PhaseResult = PhaseStats;
+
+/// Full-run result.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Algorithm label.
+    pub algo: &'static str,
+    /// Per-phase stats.
+    pub phases: Vec<PhaseResult>,
+    /// Coherence traffic (dirty transfers, invalidations).
+    pub dirty_transfers: u64,
+    /// Invalidations.
+    pub invalidations: u64,
+}
+
+impl SimResult {
+    /// Ops-weighted overall throughput (Mops/s).
+    pub fn overall_mops(&self) -> f64 {
+        let ops: u64 = self.phases.iter().map(|p| p.ops).sum();
+        let dur: f64 = self.phases.iter().map(|p| p.duration).sum();
+        if dur == 0.0 {
+            0.0
+        } else {
+            ops as f64 / (dur / 1e9) / 1e6
+        }
+    }
+
+    /// Total SmartPQ mode switches.
+    pub fn total_switches(&self) -> u64 {
+        self.phases.iter().map(|p| p.switches).sum()
+    }
+}
+
+/// The default oracle: the trained artifact if present, else the builtin
+/// fallback tree (so the simulator works before `make artifacts`).
+pub fn default_oracle() -> Arc<dyn ModeOracle> {
+    for path in ["artifacts/dtree.txt", "../artifacts/dtree.txt"] {
+        if let Ok(t) = DecisionTree::load(path) {
+            return Arc::new(t);
+        }
+    }
+    Arc::new(DecisionTree::builtin_fallback())
+}
+
+/// SmartPQ's virtual decision interval. The paper uses 1 s against 25 s
+/// phases; scaled workloads keep the same 1:25 ratio.
+pub fn decision_interval_for(phase_ns: f64) -> f64 {
+    (phase_ns / 25.0).clamp(1e4, 1e9)
+}
+
+/// Run `algo` over `w`; deterministic for a given seed.
+pub fn run_workload(algo: &SimAlgo, w: &Workload) -> SimResult {
+    let max_threads = w.phases.iter().map(|p| p.threads).max().unwrap_or(1);
+    let key_range0 = w.phases.first().map(|p| p.key_range).unwrap_or(1024);
+    let engine_algo = match algo {
+        SimAlgo::LotanShavit => EngineAlgo::Oblivious(ObvKind::LotanShavit),
+        SimAlgo::AlistarhFraser => EngineAlgo::Oblivious(ObvKind::AlistarhFraser),
+        SimAlgo::AlistarhHerlihy => EngineAlgo::Oblivious(ObvKind::AlistarhHerlihy),
+        SimAlgo::Ffwd => EngineAlgo::Ffwd,
+        SimAlgo::Nuddle { servers } => EngineAlgo::Nuddle {
+            servers: *servers,
+            base: ObvKind::AlistarhHerlihy,
+        },
+        SimAlgo::SmartPQ { servers, oracle } => EngineAlgo::Smart {
+            servers: *servers,
+            base: ObvKind::AlistarhHerlihy,
+            oracle: oracle.clone().unwrap_or_else(default_oracle),
+            decision_interval: decision_interval_for(
+                w.phases.first().map(|p| p.duration_ns).unwrap_or(1e9),
+            ),
+        },
+    };
+    let mut engine = Engine::new(
+        engine_algo,
+        PlacementPolicy::paper(w.topology.clone()),
+        w.cost.clone(),
+        w.params.clone(),
+        w.init_size,
+        key_range0,
+        max_threads,
+        w.seed,
+    );
+    let mut phases = Vec::with_capacity(w.phases.len());
+    for p in &w.phases {
+        phases.push(engine.run_phase(PhaseCfg {
+            duration: p.duration_ns,
+            threads: p.threads,
+            insert_pct: p.insert_pct,
+            key_range: p.key_range,
+        }));
+    }
+    let (dirty, inval) = engine.coherence_stats();
+    SimResult {
+        algo: algo.name(),
+        phases,
+        dirty_transfers: dirty,
+        invalidations: inval,
+    }
+}
+
+/// Measure the throughput (Mops/s) of one `(algo, threads, size, range,
+/// mix)` point — the quantum of every figure and of classifier training.
+pub fn measure_point(
+    algo: &SimAlgo,
+    threads: usize,
+    init_size: u64,
+    key_range: u64,
+    insert_pct: f64,
+    duration_ms: f64,
+    seed: u64,
+) -> f64 {
+    let w = Workload::single(init_size, key_range, threads, insert_pct, duration_ms, seed);
+    run_workload(algo, &w).overall_mops()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure1_shape_holds() {
+        // Paper Fig. 1: 64 threads, 1024 init, range 2048. The oblivious
+        // queue wins at 100% inserts; the NUMA-aware side wins as the
+        // deleteMin share grows.
+        let obv100 = measure_point(&SimAlgo::AlistarhHerlihy, 64, 1024, 2048, 100.0, 2.0, 1);
+        let ndl100 = measure_point(&SimAlgo::Nuddle { servers: 8 }, 64, 1024, 2048, 100.0, 2.0, 1);
+        let obv0 = measure_point(&SimAlgo::AlistarhHerlihy, 64, 1024, 2048, 0.0, 2.0, 1);
+        let ndl0 = measure_point(&SimAlgo::Nuddle { servers: 8 }, 64, 1024, 2048, 0.0, 2.0, 1);
+        assert!(
+            ndl0 > obv0,
+            "deleteMin-only: nuddle {ndl0:.2} must beat oblivious {obv0:.2}"
+        );
+        // At 100% insert with range=2*size the paper's Fig.1 shows the
+        // oblivious queue ahead.
+        assert!(
+            obv100 > ndl100,
+            "insert-only: oblivious {obv100:.2} must beat nuddle {ndl100:.2}"
+        );
+    }
+
+    #[test]
+    fn multi_phase_carries_state() {
+        let w = Workload {
+            init_size: 10_000,
+            phases: vec![
+                WorkloadPhase {
+                    duration_ns: 1e6,
+                    threads: 16,
+                    insert_pct: 0.0,
+                    key_range: 20_000,
+                },
+                WorkloadPhase {
+                    duration_ns: 1e6,
+                    threads: 16,
+                    insert_pct: 100.0,
+                    key_range: 20_000,
+                },
+            ],
+            seed: 3,
+            topology: Topology::default(),
+            cost: CostModel::default(),
+            params: ObvParams::default(),
+        };
+        let r = run_workload(&SimAlgo::AlistarhHerlihy, &w);
+        assert_eq!(r.phases.len(), 2);
+        // Phase 0 drains; phase 1 refills.
+        assert!(r.phases[0].size_at_end < 10_000);
+        assert!(r.phases[1].size_at_end > r.phases[0].size_at_end);
+    }
+
+    #[test]
+    fn smartpq_tracks_best_mode() {
+        let phases = vec![
+            // deleteMin-heavy: aware should win.
+            WorkloadPhase {
+                duration_ns: 2e6,
+                threads: 64,
+                insert_pct: 20.0,
+                key_range: 200_000,
+            },
+            // insert-heavy, large range: oblivious should win.
+            WorkloadPhase {
+                duration_ns: 2e6,
+                threads: 64,
+                insert_pct: 100.0,
+                key_range: 1 << 27,
+            },
+        ];
+        let mk = |phases: Vec<WorkloadPhase>| Workload {
+            init_size: 100_000,
+            phases,
+            seed: 11,
+            topology: Topology::default(),
+            cost: CostModel::default(),
+            params: ObvParams::default(),
+        };
+        let smart = run_workload(
+            &SimAlgo::SmartPQ {
+                servers: 8,
+                oracle: None,
+            },
+            &mk(phases.clone()),
+        );
+        let obv = run_workload(&SimAlgo::AlistarhHerlihy, &mk(phases.clone()));
+        let ndl = run_workload(&SimAlgo::Nuddle { servers: 8 }, &mk(phases));
+        // SmartPQ must not lose badly to either static choice overall.
+        let best_static = obv.overall_mops().max(ndl.overall_mops());
+        assert!(
+            smart.overall_mops() > 0.8 * best_static,
+            "smart {:.2} vs best static {:.2}",
+            smart.overall_mops(),
+            best_static
+        );
+        assert!(smart.total_switches() >= 1, "never adapted");
+    }
+
+    #[test]
+    fn determinism() {
+        let a = measure_point(&SimAlgo::LotanShavit, 32, 1024, 2048, 50.0, 1.0, 9);
+        let b = measure_point(&SimAlgo::LotanShavit, 32, 1024, 2048, 50.0, 1.0, 9);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,826 @@
+//! The virtual-clock discrete-event engine.
+//!
+//! Every simulated thread owns a clock; the engine repeatedly wakes the
+//! earliest thread, executes its next action (an operation for direct
+//! threads, a serve-sweep for delegation servers, a publish for waiting
+//! clients), prices it through the cost model / directory, and advances
+//! that thread's clock. Delegation clients block until the owning server
+//! completes their request — exactly the real channel's behavior, in
+//! virtual time.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::Arc;
+
+use crate::classifier::features::Features;
+use crate::classifier::{ModeClass, ModeOracle};
+use crate::delegation::nuddle::mode;
+use crate::sim::cache::Directory;
+use crate::sim::cost::CostModel;
+use crate::sim::models::delegation::{
+    base_op, client_publish, client_read_response, server_serve_one, server_write_response,
+    DelegKind,
+};
+use crate::sim::models::oblivious::{delete_cost, insert_cost, ObvCtx, ObvKind, ObvParams};
+use crate::sim::queue_model::QueueModel;
+use crate::sim::topology::PlacementPolicy;
+use crate::util::rng::Rng;
+
+/// What a simulated thread is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    /// Operates directly on the structure.
+    Direct,
+    /// Delegation server with this server index.
+    Server(usize),
+    /// Delegation client: (slot, group, owning server index).
+    Client {
+        /// Request-line slot.
+        slot: usize,
+        /// Response-line group.
+        group: usize,
+        /// Owning server.
+        server: usize,
+    },
+}
+
+/// Engine-level algorithm selection.
+#[derive(Debug, Clone)]
+pub enum EngineAlgo {
+    /// A NUMA-oblivious queue.
+    Oblivious(ObvKind),
+    /// ffwd: one dedicated server, everyone else a client.
+    Ffwd,
+    /// Nuddle with `servers` server threads over `base`.
+    Nuddle {
+        /// Server-thread count (8 in the paper).
+        servers: usize,
+        /// Base algorithm.
+        base: ObvKind,
+    },
+    /// SmartPQ: Nuddle layout + a mode cell driven by `oracle`.
+    Smart {
+        /// Server-thread count.
+        servers: usize,
+        /// Base algorithm.
+        base: ObvKind,
+        /// Mode predictor (the real classifier).
+        oracle: Arc<dyn ModeOracle>,
+        /// Virtual decision interval in ns (paper: 1 s).
+        decision_interval: f64,
+    },
+}
+
+impl std::fmt::Debug for dyn ModeOracle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "ModeOracle({})", self.oracle_name())
+    }
+}
+
+/// One phase of a workload (paper Tables 2/3 rows).
+#[derive(Debug, Clone)]
+pub struct PhaseCfg {
+    /// Virtual duration (ns).
+    pub duration: f64,
+    /// Active thread count.
+    pub threads: usize,
+    /// Insert percentage (0..=100).
+    pub insert_pct: f64,
+    /// Key range.
+    pub key_range: u64,
+}
+
+/// Pending delegated request.
+#[derive(Debug, Clone, Copy)]
+struct Request {
+    client: usize,
+    slot: usize,
+    group: usize,
+    is_insert: bool,
+    ready: f64,
+}
+
+struct ThreadState {
+    role: Role,
+    node: u8,
+    ctx: u32,
+    /// Per-op slowdown (SMT sharing / oversubscription), recomputed per
+    /// phase.
+    factor: f64,
+    blocked: bool,
+    rng: Rng,
+}
+
+/// Phase measurement.
+#[derive(Debug, Clone)]
+pub struct PhaseStats {
+    /// Completed operations (successful + failed, as the paper counts).
+    pub ops: u64,
+    /// Virtual duration simulated (ns).
+    pub duration: f64,
+    /// Throughput in Mops/s.
+    pub mops: f64,
+    /// Mode at phase end (SmartPQ; `mode::OBLIVIOUS` for pure oblivious,
+    /// `mode::AWARE` for ffwd/Nuddle).
+    pub mode_at_end: u8,
+    /// SmartPQ mode switches during the phase.
+    pub switches: u64,
+    /// Queue size at phase end.
+    pub size_at_end: u64,
+}
+
+/// The engine itself.
+pub struct Engine {
+    algo: EngineAlgo,
+    placement: PlacementPolicy,
+    cost: CostModel,
+    params: ObvParams,
+    queue: QueueModel,
+    dir: Directory,
+    threads: Vec<ThreadState>,
+    inboxes: Vec<Vec<Request>>,
+    heap: BinaryHeap<Reverse<(u64, usize)>>,
+    now: f64,
+    mode: u8,
+    switches: u64,
+    ops_completed: u64,
+    rng: Rng,
+    // Feature-extraction snapshot for SmartPQ decisions.
+    snap_ins: u64,
+    snap_del: u64,
+    // Current phase parameters.
+    phase: PhaseCfg,
+    active_nodes: usize,
+    /// Maximum events per phase (runaway guard; 0 = unlimited).
+    pub max_events_per_phase: u64,
+}
+
+const DECISION_TID: usize = usize::MAX; // sentinel in the heap
+
+impl Engine {
+    /// Build an engine. `max_threads` sizes the thread table (phases may
+    /// activate any prefix of it).
+    pub fn new(
+        algo: EngineAlgo,
+        placement: PlacementPolicy,
+        cost: CostModel,
+        params: ObvParams,
+        init_size: u64,
+        key_range: u64,
+        max_threads: usize,
+        seed: u64,
+    ) -> Engine {
+        let n_servers = match &algo {
+            EngineAlgo::Oblivious(_) => 0,
+            EngineAlgo::Ffwd => 1,
+            EngineAlgo::Nuddle { servers, .. } | EngineAlgo::Smart { servers, .. } => *servers,
+        };
+        let initial_mode = match &algo {
+            EngineAlgo::Oblivious(_) => mode::OBLIVIOUS,
+            EngineAlgo::Ffwd | EngineAlgo::Nuddle { .. } => mode::AWARE,
+            EngineAlgo::Smart { .. } => mode::OBLIVIOUS,
+        };
+        let mut threads = Vec::with_capacity(max_threads);
+        for tid in 0..max_threads {
+            let role = if n_servers > 0 {
+                if tid < n_servers {
+                    Role::Server(tid)
+                } else {
+                    let c = tid - n_servers;
+                    let group = c / 7;
+                    Role::Client {
+                        slot: c,
+                        group,
+                        server: group % n_servers.max(1),
+                    }
+                }
+            } else {
+                Role::Direct
+            };
+            let p = placement.place(tid, max_threads);
+            threads.push(ThreadState {
+                role,
+                node: p.node as u8,
+                ctx: (p.node * 100 + p.core * 4 + p.smt_slot) as u32,
+                factor: 1.0,
+                blocked: false,
+                rng: Rng::stream(seed, tid as u64 + 1),
+            });
+        }
+        Engine {
+            algo,
+            placement,
+            cost,
+            params,
+            queue: QueueModel::new(init_size, key_range, seed),
+            dir: Directory::new(),
+            threads,
+            inboxes: vec![Vec::new(); n_servers.max(1)],
+            heap: BinaryHeap::new(),
+            now: 0.0,
+            mode: initial_mode,
+            switches: 0,
+            ops_completed: 0,
+            rng: Rng::new(seed ^ 0xD15C),
+            snap_ins: 0,
+            snap_del: 0,
+            phase: PhaseCfg {
+                duration: 0.0,
+                threads: 0,
+                insert_pct: 50.0,
+                key_range,
+            },
+            active_nodes: 1,
+            max_events_per_phase: 200_000_000,
+        }
+    }
+
+    /// Current queue size.
+    pub fn queue_size(&self) -> u64 {
+        self.queue.size()
+    }
+
+    /// Current SmartPQ mode.
+    pub fn current_mode(&self) -> u8 {
+        self.mode
+    }
+
+    /// Coherence-traffic counters (dirty transfers, invalidations).
+    pub fn coherence_stats(&self) -> (u64, u64) {
+        (self.dir.dirty_transfers, self.dir.invalidations)
+    }
+
+    /// Accumulated per-line serialization wait (ns) — the coherence-storm
+    /// signal.
+    pub fn chain_wait(&self) -> f64 {
+        self.dir.chain_wait
+    }
+
+    /// Debug: a line's busy horizon.
+    pub fn line_busy_until(&self, line: crate::sim::cache::LineId) -> f64 {
+        self.dir.line_busy_until(line)
+    }
+
+    fn recompute_factors(&mut self, n_threads: usize) {
+        let topo = self.placement.topology().clone();
+        let per_core = self.placement.active_contexts(n_threads);
+        let hw = topo.hw_contexts();
+        let mut nodes_seen = [false; 8];
+        for tid in 0..n_threads.min(self.threads.len()) {
+            let p = self.placement.place(tid, n_threads);
+            nodes_seen[p.node] = true;
+            let core_idx = p.node * topo.cores_per_node + p.core;
+            let on_core = per_core[core_idx].max(1);
+            let mut f = 1.0;
+            if on_core >= 2 {
+                f *= self.cost.smt_factor;
+            }
+            if n_threads > hw {
+                // Contexts timeshare: threads mapped to the same context
+                // each get a 1/m slice.
+                let m = (n_threads as f64 / hw as f64).ceil();
+                f *= m;
+            }
+            self.threads[tid].factor = f;
+        }
+        self.active_nodes = nodes_seen.iter().filter(|&&b| b).count().max(1);
+    }
+
+    fn pick_is_insert(&mut self, tid: usize) -> bool {
+        self.threads[tid].rng.gen_f64() * 100.0 < self.phase.insert_pct
+    }
+
+    fn obv_kind(&self) -> ObvKind {
+        match &self.algo {
+            EngineAlgo::Oblivious(k) => *k,
+            EngineAlgo::Nuddle { base, .. } | EngineAlgo::Smart { base, .. } => *base,
+            EngineAlgo::Ffwd => ObvKind::LotanShavit, // unused
+        }
+    }
+
+    fn deleg_kind(&self) -> DelegKind {
+        match &self.algo {
+            EngineAlgo::Ffwd => DelegKind::Ffwd,
+            EngineAlgo::Nuddle { base, .. } | EngineAlgo::Smart { base, .. } => {
+                DelegKind::Nuddle(*base)
+            }
+            EngineAlgo::Oblivious(_) => unreachable!("no delegation for oblivious"),
+        }
+    }
+
+    fn n_servers(&self) -> usize {
+        match &self.algo {
+            EngineAlgo::Oblivious(_) => 0,
+            EngineAlgo::Ffwd => 1,
+            EngineAlgo::Nuddle { servers, .. } | EngineAlgo::Smart { servers, .. } => *servers,
+        }
+    }
+
+    /// Execute a direct (oblivious) operation for `tid`; returns cost ns.
+    fn direct_op(&mut self, tid: usize, is_insert: bool) -> f64 {
+        let kind = self.obv_kind();
+        let t = &mut self.threads[tid];
+        let mut cx = ObvCtx {
+            cm: &self.cost,
+            q: &mut self.queue,
+            dir: &mut self.dir,
+            rng: &mut t.rng,
+            now: self.now,
+            node: t.node,
+            ctx: t.ctx,
+            threads: self.phase.threads,
+            active_nodes: self.active_nodes,
+            local_fraction: 1.0 / self.active_nodes as f64,
+        };
+        let (mut ns, _ok) = if is_insert {
+            insert_cost(kind, &self.params, &mut cx)
+        } else {
+            delete_cost(kind, &self.params, &mut cx)
+        };
+        // Lock-free helping churns under preemption: Fraser's list falls
+        // behind Herlihy's lazy list when oversubscribed (paper §4.1).
+        if kind == ObvKind::AlistarhFraser
+            && self.phase.threads > self.placement.topology().hw_contexts()
+        {
+            ns *= self.params.fraser_oversub_factor;
+        }
+        self.ops_completed += 1;
+        ns
+    }
+
+    /// One engine step. Returns false when the heap is empty.
+    fn step(&mut self, phase_end: f64) -> bool {
+        let Some(&Reverse((t_ns, tid))) = self.heap.peek() else {
+            return false;
+        };
+        let t = t_ns as f64;
+        if t >= phase_end {
+            return false;
+        }
+        self.heap.pop();
+        if std::env::var("SMARTPQ_SIM_TRACE").is_ok() {
+            eprintln!(
+                "evt t={:.0} tid={} role={:?} heap={}",
+                t,
+                tid as isize,
+                self.threads.get(tid).map(|th| th.role),
+                self.heap.len()
+            );
+        }
+        self.now = t;
+
+        if tid == DECISION_TID {
+            self.decision_event();
+            if let EngineAlgo::Smart {
+                decision_interval, ..
+            } = &self.algo
+            {
+                let next = self.now + decision_interval;
+                self.heap.push(Reverse((next as u64, DECISION_TID)));
+            }
+            return true;
+        }
+
+        if tid >= self.phase.threads {
+            // Deactivated this phase; park it at phase end (the runner
+            // re-seeds the heap each phase).
+            return true;
+        }
+
+        let role = self.threads[tid].role;
+        match role {
+            Role::Direct => {
+                let is_insert = self.pick_is_insert(tid);
+                let ns = self.direct_op(tid, is_insert);
+                let f = self.threads[tid].factor;
+                let next = self.now + ns * f + self.cost.delay_loop();
+                self.heap.push(Reverse((next as u64, tid)));
+            }
+            Role::Server(sid) => self.server_event(tid, sid),
+            Role::Client { slot, group, server } => {
+                if self.mode == mode::OBLIVIOUS {
+                    // SmartPQ oblivious mode: direct access.
+                    let is_insert = self.pick_is_insert(tid);
+                    let ns = self.direct_op(tid, is_insert);
+                    let f = self.threads[tid].factor;
+                    let next = self.now + ns * f + self.cost.delay_loop();
+                    self.heap.push(Reverse((next as u64, tid)));
+                } else {
+                    // Publish a request and block until served.
+                    let is_insert = self.pick_is_insert(tid);
+                    let t = &mut self.threads[tid];
+                    let pub_ns =
+                        client_publish(&self.cost, &mut self.dir, self.now, slot, t.node, t.ctx) * t.factor;
+                    self.inboxes[server].push(Request {
+                        client: tid,
+                        slot,
+                        group,
+                        is_insert,
+                        ready: self.now + pub_ns,
+                    });
+                    self.threads[tid].blocked = true;
+                }
+            }
+        }
+        true
+    }
+
+    /// A server wakes: serve ready requests, then (Nuddle/Smart servers)
+    /// perform one own operation, then re-arm.
+    fn server_event(&mut self, tid: usize, sid: usize) {
+        let kind = self.deleg_kind();
+        let n_servers = self.n_servers();
+        let mut busy = 0.0;
+        let (node, ctx, factor) = {
+            let t = &self.threads[tid];
+            (t.node, t.ctx, t.factor)
+        };
+        // Drain requests that are visible by now, group by group so one
+        // response-line write publishes a whole group's returns (ffwd's
+        // bandwidth trick). All accesses of one sweep are priced at the
+        // sweep's start time: pricing at `now + busy` would reserve lines
+        // into the future and retroactively stall other threads (a
+        // compounding runaway, not a physical effect).
+        let mut pending = std::mem::take(&mut self.inboxes[sid]);
+        let mut served = 0usize;
+        let mut batch: Vec<Request> = Vec::new();
+        pending.retain(|req| {
+            if req.ready <= self.now && req.client < self.phase.threads {
+                batch.push(*req);
+                false
+            } else {
+                true // not yet visible (or owner inactive): keep
+            }
+        });
+        self.inboxes[sid] = pending;
+        batch.sort_by_key(|r| r.group);
+        let mut i = 0;
+        while i < batch.len() {
+            let group = batch[i].group;
+            let mut wakes: Vec<(usize, usize)> = Vec::new(); // (client, group)
+            while i < batch.len() && batch[i].group == group {
+                let req = batch[i];
+                let (ns, _ok) = server_serve_one(
+                    kind,
+                    &self.params,
+                    &self.cost,
+                    &mut self.queue,
+                    &mut self.dir,
+                    &mut self.threads[tid].rng,
+                    self.now,
+                    node,
+                    ctx,
+                    req.slot,
+                    req.is_insert,
+                    n_servers,
+                );
+                busy += ns * factor;
+                self.ops_completed += 1;
+                served += 1;
+                wakes.push((req.client, req.group));
+                i += 1;
+            }
+            // One buffered response write for the whole group.
+            busy += server_write_response(&self.cost, &mut self.dir, self.now, group, node, ctx)
+                * factor;
+            for (client, group) in wakes {
+                let t_client = &mut self.threads[client];
+                let read_ns = client_read_response(
+                    &self.cost,
+                    &mut self.dir,
+                    self.now,
+                    group,
+                    t_client.node,
+                    t_client.ctx,
+                ) * t_client.factor;
+                t_client.blocked = false;
+                let wake = self.now + busy + read_ns + self.cost.delay_loop();
+                self.heap.push(Reverse((wake as u64, client)));
+            }
+        }
+
+        // Nuddle/Smart servers interleave one own op (paper §4). In
+        // SmartPQ oblivious mode servers only do their own ops.
+        let own_op = !matches!(self.algo, EngineAlgo::Ffwd);
+        if own_op {
+            let is_insert = self.pick_is_insert(tid);
+            let (ns, _ok) = base_op(
+                kind,
+                &self.params,
+                &self.cost,
+                &mut self.queue,
+                &mut self.dir,
+                &mut self.threads[tid].rng,
+                self.now,
+                node,
+                ctx,
+                is_insert,
+                n_servers,
+            );
+            busy += ns * factor;
+            self.ops_completed += 1;
+        }
+        if std::env::var("SMARTPQ_SIM_TRACE").is_ok() && busy > 20_000.0 {
+            eprintln!(
+                "server {sid} busy={busy:.0} served={served} chain_wait_total={:.0}",
+                self.dir.chain_wait
+            );
+        }
+        // Re-arm: servers poll continuously. In oblivious mode the sweep
+        // degenerates to a cheap toggle scan and the server keeps
+        // executing its own operations at full rate (paper §4: servers
+        // remain benchmark participants; `serve_requests` just returns).
+        let poll = if served == 0 && busy == 0.0 {
+            200.0 // empty poll sweep
+        } else {
+            0.0
+        };
+        let next = self.now + busy + self.cost.delay_loop() + poll;
+        self.heap.push(Reverse((next as u64, tid)));
+    }
+
+    /// SmartPQ decision event: extract features from live counters and let
+    /// the *real* classifier pick the mode (paper Fig. 8 decisionTree()).
+    fn decision_event(&mut self) {
+        let EngineAlgo::Smart { oracle, .. } = &self.algo else {
+            return;
+        };
+        let ins = self.queue.total_inserts;
+        let del = self.queue.total_deletes;
+        let d_ins = ins - self.snap_ins;
+        let d_del = del - self.snap_del;
+        self.snap_ins = ins;
+        self.snap_del = del;
+        let insert_pct = if d_ins + d_del == 0 {
+            100.0
+        } else {
+            100.0 * d_ins as f64 / (d_ins + d_del) as f64
+        };
+        let f = Features::new(
+            self.phase.threads as f64,
+            self.queue.size() as f64,
+            self.phase.key_range as f64,
+            insert_pct,
+        );
+        let class = oracle.predict(&f);
+        if class != ModeClass::Neutral {
+            let new = class as u8;
+            if new != self.mode {
+                self.mode = new;
+                self.switches += 1;
+            }
+        }
+    }
+
+    /// Run one phase; returns its stats.
+    pub fn run_phase(&mut self, cfg: PhaseCfg) -> PhaseStats {
+        assert!(cfg.threads <= self.threads.len(), "phase exceeds max_threads");
+        self.phase = cfg.clone();
+        self.queue.set_key_range(cfg.key_range);
+        self.recompute_factors(cfg.threads);
+        let start = self.now;
+        let end = start + cfg.duration;
+        let ops_start = self.ops_completed;
+        let switches_start = self.switches;
+
+        // Seed the heap: all active, unblocked threads wake now (staggered
+        // a hair for determinism), plus the decision event.
+        self.heap.clear();
+        for tid in 0..cfg.threads {
+            if !self.threads[tid].blocked {
+                self.heap
+                    .push(Reverse(((start as u64).saturating_add(tid as u64), tid)));
+            }
+        }
+        if let EngineAlgo::Smart {
+            decision_interval, ..
+        } = &self.algo
+        {
+            self.heap
+                .push(Reverse(((start + decision_interval) as u64, DECISION_TID)));
+        }
+
+        let mut events = 0u64;
+        let mut truncated_at = None;
+        while self.step(end) {
+            events += 1;
+            if self.max_events_per_phase > 0 && events >= self.max_events_per_phase {
+                crate::log_warn!("sim: phase event cap hit at t={}", self.now);
+                truncated_at = Some(self.now);
+                break;
+            }
+            // A (near-)pure-deleteMin phase that fully drains the queue
+            // leaves only degenerate empty scans; stop measuring there
+            // (the paper sizes its runs to stay in the contended regime).
+            if cfg.insert_pct < 5.0 && self.queue.size() == 0 && events > cfg.threads as u64 * 4 {
+                truncated_at = Some(self.now);
+                break;
+            }
+        }
+        let measured = truncated_at.map(|t| (t - start).max(1.0)).unwrap_or(cfg.duration);
+        self.now = end;
+        // Unblock any clients stranded by phase-end truncation of their
+        // server's sweep (they re-publish next phase).
+        for sid in 0..self.inboxes.len() {
+            for req in std::mem::take(&mut self.inboxes[sid]) {
+                self.threads[req.client].blocked = false;
+            }
+        }
+
+        let ops = self.ops_completed - ops_start;
+        PhaseStats {
+            ops,
+            duration: measured,
+            mops: ops as f64 / (measured / 1e9) / 1e6,
+            mode_at_end: self.mode,
+            switches: self.switches - switches_start,
+            size_at_end: self.queue.size(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::topology::Topology;
+
+    fn mk(algo: EngineAlgo, init: u64, range: u64, max_threads: usize) -> Engine {
+        Engine::new(
+            algo,
+            PlacementPolicy::paper(Topology::default()),
+            CostModel::default(),
+            ObvParams::default(),
+            init,
+            range,
+            max_threads,
+            42,
+        )
+    }
+
+    fn phase(threads: usize, pct: f64, range: u64) -> PhaseCfg {
+        PhaseCfg {
+            duration: 2e6, // 2 ms virtual
+            threads,
+            insert_pct: pct,
+            key_range: range,
+        }
+    }
+
+    #[test]
+    fn oblivious_runs_and_produces_ops() {
+        let mut e = mk(EngineAlgo::Oblivious(ObvKind::AlistarhHerlihy), 1024, 2048, 8);
+        let s = e.run_phase(phase(8, 50.0, 2048));
+        assert!(s.ops > 100, "ops={}", s.ops);
+        assert!(s.mops > 0.0);
+    }
+
+    #[test]
+    fn oblivious_deletemin_collapses_across_nodes() {
+        // The paper's central observation (Fig. 9 bottom rows).
+        let t1 = {
+            let mut e = mk(EngineAlgo::Oblivious(ObvKind::LotanShavit), 100_000, 200_000, 8);
+            e.run_phase(phase(8, 0.0, 200_000)).mops
+        };
+        let t4 = {
+            let mut e = mk(EngineAlgo::Oblivious(ObvKind::LotanShavit), 100_000, 200_000, 64);
+            e.run_phase(phase(64, 0.0, 200_000)).mops
+        };
+        assert!(
+            t4 < t1 * 1.5,
+            "lotan_shavit deleteMin should not scale past one node: 8thr={t1:.2} 64thr={t4:.2}"
+        );
+    }
+
+    #[test]
+    fn relaxed_insert_scales() {
+        let t8 = {
+            let mut e = mk(EngineAlgo::Oblivious(ObvKind::AlistarhHerlihy), 100_000, 1 << 24, 8);
+            e.run_phase(phase(8, 100.0, 1 << 24)).mops
+        };
+        let t32 = {
+            let mut e = mk(EngineAlgo::Oblivious(ObvKind::AlistarhHerlihy), 100_000, 1 << 24, 32);
+            e.run_phase(phase(32, 100.0, 1 << 24)).mops
+        };
+        assert!(
+            t32 > 2.0 * t8,
+            "insert-dominated spraylist should scale: 8thr={t8:.2} 32thr={t32:.2}"
+        );
+    }
+
+    #[test]
+    fn ffwd_capped_at_single_server() {
+        let t8 = {
+            let mut e = mk(EngineAlgo::Ffwd, 1024, 2048, 9);
+            e.run_phase(phase(9, 50.0, 2048)).mops
+        };
+        let t32 = {
+            let mut e = mk(EngineAlgo::Ffwd, 1024, 2048, 33);
+            e.run_phase(phase(33, 50.0, 2048)).mops
+        };
+        // More clients must not increase ffwd throughput much.
+        assert!(t32 < 1.6 * t8, "ffwd scaled unexpectedly: {t8:.2} -> {t32:.2}");
+    }
+
+    #[test]
+    fn nuddle_beats_oblivious_in_deletemin_dominated() {
+        let obv = {
+            let mut e = mk(
+                EngineAlgo::Oblivious(ObvKind::AlistarhHerlihy),
+                100_000,
+                200_000,
+                64,
+            );
+            e.run_phase(phase(64, 10.0, 200_000)).mops
+        };
+        let ndl = {
+            let mut e = mk(
+                EngineAlgo::Nuddle {
+                    servers: 8,
+                    base: ObvKind::AlistarhHerlihy,
+                },
+                100_000,
+                200_000,
+                64,
+            );
+            e.run_phase(phase(64, 10.0, 200_000)).mops
+        };
+        assert!(
+            ndl > obv,
+            "Nuddle ({ndl:.2} Mops) should beat oblivious ({obv:.2} Mops) at 90% deleteMin"
+        );
+    }
+
+    #[test]
+    fn oblivious_beats_nuddle_in_insert_dominated_large() {
+        let obv = {
+            let mut e = mk(
+                EngineAlgo::Oblivious(ObvKind::AlistarhHerlihy),
+                1_000_000,
+                1 << 26,
+                64,
+            );
+            e.run_phase(phase(64, 100.0, 1 << 26)).mops
+        };
+        let ndl = {
+            let mut e = mk(
+                EngineAlgo::Nuddle {
+                    servers: 8,
+                    base: ObvKind::AlistarhHerlihy,
+                },
+                1_000_000,
+                1 << 26,
+                64,
+            );
+            e.run_phase(phase(64, 100.0, 1 << 26)).mops
+        };
+        assert!(
+            obv > ndl,
+            "oblivious ({obv:.2}) should beat Nuddle ({ndl:.2}) at 100% insert, large range"
+        );
+    }
+
+    #[test]
+    fn smartpq_switches_modes_with_phases() {
+        let oracle = Arc::new(crate::classifier::DecisionTree::builtin_fallback());
+        let mut e = Engine::new(
+            EngineAlgo::Smart {
+                servers: 8,
+                base: ObvKind::AlistarhHerlihy,
+                oracle,
+                decision_interval: 2e5, // 200 µs virtual
+            },
+            PlacementPolicy::paper(Topology::default()),
+            CostModel::default(),
+            ObvParams::default(),
+            100_000,
+            200_000,
+            64,
+            42,
+        );
+        // deleteMin-dominated phase: should settle in AWARE mode.
+        let s1 = e.run_phase(PhaseCfg {
+            duration: 2e6,
+            threads: 64,
+            insert_pct: 10.0,
+            key_range: 200_000,
+        });
+        assert_eq!(s1.mode_at_end, mode::AWARE, "switches={}", s1.switches);
+        // Insert-dominated huge-range phase: should flip to OBLIVIOUS.
+        let s2 = e.run_phase(PhaseCfg {
+            duration: 2e6,
+            threads: 64,
+            insert_pct: 100.0,
+            key_range: 1 << 27,
+        });
+        assert_eq!(s2.mode_at_end, mode::OBLIVIOUS, "switches={}", s2.switches);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = || {
+            let mut e = mk(EngineAlgo::Oblivious(ObvKind::AlistarhFraser), 1024, 4096, 16);
+            e.run_phase(phase(16, 60.0, 4096)).ops
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,37 @@
+//! Deterministic NUMA-architecture simulator.
+//!
+//! The paper's evaluation requires a 4-socket / 32-core / 64-context
+//! Sandy Bridge-EP machine; this environment has one core and no NUMA, so
+//! (per the documented substitution) the testbed itself is built as a
+//! virtual-time discrete-event simulator:
+//!
+//! * [`topology`] — sockets, cores, SMT and the paper's thread-placement
+//!   policy (first 8 threads on node 0, then 7-client groups round-robin).
+//! * [`cost`] — the coherence/latency cost model (calibrated against
+//!   published Sandy Bridge-EP measurements).
+//! * [`cache`] — a node-granular cache-line directory pricing individual
+//!   line accesses (hits, clean/dirty remote transfers, invalidations).
+//! * [`queue_model`] — statistical priority-queue state: size trajectory,
+//!   duplicate-key rates, claimed-prefix (logical-deletion) windows.
+//! * [`models`] — per-algorithm operation cost models: the NUMA-oblivious
+//!   queues, delegation (ffwd/Nuddle), and adaptive SmartPQ.
+//! * [`engine`] — the virtual-clock scheduler running N simulated threads.
+//! * [`driver`] — workload specs (op mix, key range, phases) and
+//!   throughput measurement; the figure benches call this.
+//!
+//! The simulator executes the *same protocols* as the real plane — spray
+//! walks, claimed-prefix scans, request/response cache-line hand-offs —
+//! but charges every memory access against the directory instead of the
+//! host's caches, so 64-thread scalability shapes are reproducible
+//! anywhere, deterministically (seeded).
+
+pub mod cache;
+pub mod cost;
+pub mod driver;
+pub mod engine;
+pub mod models;
+pub mod queue_model;
+pub mod topology;
+
+pub use driver::{run_workload, PhaseResult, SimAlgo, SimResult, Workload, WorkloadPhase};
+pub use topology::{Placement, Topology};

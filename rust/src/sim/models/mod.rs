@@ -1,0 +1,16 @@
+//! Per-algorithm operation cost models.
+//!
+//! Each model prices one `insert` / `deleteMin` as the sum of directory
+//! accesses (hot lines) and statistical interior traffic, faithful to the
+//! corresponding real implementation's access pattern:
+//!
+//! * [`oblivious`] — lotan_shavit and the two SprayList variants.
+//! * [`delegation`] — ffwd and Nuddle service costs (base operations are
+//!   executed by servers with node-local placement).
+//!
+//! SmartPQ in the simulator is not a separate cost model: it *is* the real
+//! [`crate::classifier::DecisionTree`] flipping between these two models
+//! inside the engine.
+
+pub mod delegation;
+pub mod oblivious;

@@ -1,0 +1,462 @@
+//! Cost models for the NUMA-oblivious queues (paper §4 baselines).
+//!
+//! Access patterns priced per operation:
+//!
+//! * **Traversal** — `~1.5·log2(size)` interior line visits; locality
+//!   follows first-touch allocation (lines spread over all active
+//!   sockets, so `1/active_nodes` of them are local to the reader).
+//! * **deleteMin head contention** — the claimed-prefix walk and CAS
+//!   retry storm, priced through the shared [`Directory`] so dirty
+//!   transfers between sockets emerge from the access history rather than
+//!   from a hardwired constant.
+//! * **Spray relaxation** — the SprayList walk spreads claims over
+//!   `O(p·log³p)` elements, collapsing the collision probability.
+
+use crate::sim::cache::{lines, Directory};
+use crate::sim::cost::CostModel;
+use crate::sim::queue_model::QueueModel;
+use crate::util::rng::Rng;
+
+/// Which oblivious algorithm to price.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ObvKind {
+    /// lotan_shavit [47]: exact deleteMin, lock-based skip list.
+    LotanShavit,
+    /// SprayList over Fraser's lock-free list [2,24].
+    AlistarhFraser,
+    /// SprayList over Herlihy's lazy list [2,34].
+    AlistarhHerlihy,
+}
+
+impl ObvKind {
+    /// Paper label.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ObvKind::LotanShavit => "lotan_shavit",
+            ObvKind::AlistarhFraser => "alistarh_fraser",
+            ObvKind::AlistarhHerlihy => "alistarh_herlihy",
+        }
+    }
+}
+
+/// Tunable per-algorithm coefficients (calibration knobs; defaults are
+/// justified in DESIGN.md §Calibration).
+#[derive(Debug, Clone)]
+pub struct ObvParams {
+    /// Virtual window (ns) in which two operations are "concurrent".
+    pub claim_window: f64,
+    /// Fraser's helping/validation overhead per successful update (extra
+    /// CAS-equivalents vs. the lazy list).
+    pub fraser_update_overhead: f64,
+    /// Herlihy's per-insert pred-lock cost (uncontended, node-local).
+    pub herlihy_lock_cost: f64,
+    /// lotan_shavit strict-ordering coherence penalty factor (multiplies a
+    /// dirty transfer when >1 socket is active; see DESIGN.md).
+    pub lotan_bounce: f64,
+    /// Extra per-op slowdown for lock-free helping when oversubscribed
+    /// (preempted lock *holders* are cheap to wait out, preempted CAS
+    /// winners force helping — the paper's fraser-vs-herlihy gap).
+    pub fraser_oversub_factor: f64,
+}
+
+impl Default for ObvParams {
+    fn default() -> Self {
+        ObvParams {
+            claim_window: 2_000.0,
+            fraser_update_overhead: 2.0,
+            herlihy_lock_cost: 12.0,
+            lotan_bounce: 0.9,
+            fraser_oversub_factor: 1.30,
+        }
+    }
+}
+
+/// Context handed to cost functions.
+pub struct ObvCtx<'a> {
+    /// Cost table.
+    pub cm: &'a CostModel,
+    /// Queue state.
+    pub q: &'a mut QueueModel,
+    /// Hot-line directory.
+    pub dir: &'a mut Directory,
+    /// RNG (spray jumps, collision draws).
+    pub rng: &'a mut Rng,
+    /// Virtual time now (ns).
+    pub now: f64,
+    /// Reader's socket.
+    pub node: u8,
+    /// Reader's hardware context id.
+    pub ctx: u32,
+    /// Active thread count.
+    pub threads: usize,
+    /// Number of sockets with active threads.
+    pub active_nodes: usize,
+    /// Fraction of structure lines local to this reader (1.0 when the
+    /// structure lives on the reader's socket, `1/active_nodes` for
+    /// first-touch oblivious allocation).
+    pub local_fraction: f64,
+}
+
+/// Price one insert; returns (cost_ns, succeeded).
+pub fn insert_cost(kind: ObvKind, p: &ObvParams, c: &mut ObvCtx<'_>) -> (f64, bool) {
+    let mut ns = c.cm.op_compute;
+    // The traversal descends *through* the head tower lines — the very
+    // lines concurrent removals keep dirtying (tower funnel). Under a
+    // deleteMin storm every insert pays a fresh dirty transfer here,
+    // which is how delete-heavy mixes drag insert throughput down too
+    // (paper §4.1: invalidation traffic hurts the whole workload).
+    ns += c.dir.read(c.cm, c.now, lines::head(2), c.node, c.ctx);
+    // Interior traversal.
+    let visits = c.q.traversal_visits();
+    let footprint = c.q.footprint_bytes(c.cm.node_bytes);
+    ns += visits * (c.cm.visit_compute + c.cm.interior_visit(footprint, c.local_fraction));
+    let ok = c.q.try_insert(c.now);
+    if !ok {
+        // Duplicate key: traversal only.
+        return (ns, false);
+    }
+    ns += c.cm.alloc;
+    // Small structures have no "cold interior": the link CAS lands in the
+    // globally hot region and participates in the line ping-pong.
+    if c.q.size() < 4096 {
+        let slots = hot_slots(c.q.size());
+        let slot = (c.rng.next_u64() % slots) as usize;
+        ns += c.dir.write(c.cm, c.now, lines::min_region(slot), c.node, c.ctx, true);
+    }
+    // Linking: bottom-level CAS/lock + expected one upper level.
+    let c_ins = c.q.concurrent_inserts(c.now, p.claim_window) as f64;
+    match kind {
+        ObvKind::LotanShavit => {
+            // Lock-based updates (Pugh-style): pred locks are *written* by
+            // every acquirer, and the shared high-level pred locks bounce
+            // through the same funnel the removals use — lotan_shavit
+            // degrades past one node even in insert-only runs (Fig. 9).
+            ns += 2.0 * p.herlihy_lock_cost + c.cm.cas(false, true);
+            if c.rng.gen_f64() < p.lotan_bounce * 0.33 {
+                ns += c.dir.write(c.cm, c.now, lines::head(2), c.node, c.ctx, true);
+            }
+        }
+        ObvKind::AlistarhFraser => {
+            ns += (1.0 + p.fraser_update_overhead) * c.cm.cas(false, true);
+        }
+        ObvKind::AlistarhHerlihy => {
+            ns += 2.0 * p.herlihy_lock_cost + c.cm.cas(false, true);
+        }
+    }
+    // Conflicting concurrent inserts next to the same predecessor.
+    let conflict_p = (c_ins / (c.q.size().max(64) as f64)).min(1.0);
+    ns += conflict_p * c.cm.cas_retry;
+    ns += tower_funnel_insert(c);
+    (ns, true)
+}
+
+/// Price one deleteMin; returns (cost_ns, succeeded).
+pub fn delete_cost(kind: ObvKind, p: &ObvParams, c: &mut ObvCtx<'_>) -> (f64, bool) {
+    match kind {
+        ObvKind::LotanShavit => delete_exact(p, c, true),
+        ObvKind::AlistarhFraser | ObvKind::AlistarhHerlihy => delete_spray(kind, p, c),
+    }
+}
+
+/// Exact leftmost claim (lotan_shavit; also Nuddle's servers when the
+/// base's cleaner path runs).
+fn delete_exact(p: &ObvParams, c: &mut ObvCtx<'_>, physical_remove: bool) -> (f64, bool) {
+    let mut ns = c.cm.op_compute;
+    // Read the head bottom-level line — the hottest line in the system.
+    ns += c.dir.read(c.cm, c.now, lines::head(0), c.node, c.ctx);
+    // Walk the claimed prefix: nodes logically deleted by concurrent
+    // deleteMins but not yet unlinked. Each was just *written* (claim CAS)
+    // by some other thread; the directory prices the dirty transfers.
+    let k = c.q.concurrent_claims(c.now, p.claim_window);
+    for i in 0..k.min(64) {
+        ns += c.dir.read(c.cm, c.now, lines::min_region(i), c.node, c.ctx);
+        ns += c.cm.visit_compute;
+    }
+    if !c.q.try_delete_min(c.now) {
+        return (ns, false); // empty: head scan only
+    }
+    // Claim CAS on the current minimum — the *narrow* (8-line) hot region
+    // every exact deleteMin fights over; competitors in the window force
+    // retries (each retry re-reads a freshly dirtied line). The retry
+    // chain grows with the number of concurrent claimers (up to half the
+    // thread count can win ahead of us) — the self-reinforcing storm.
+    let retries = (k as f64 * 0.5).min(c.threads as f64 * 0.5);
+    let claim_slots = hot_slots(c.q.size()).min(8) as usize;
+    ns += c.dir.write(c.cm, c.now, lines::min_region(k % claim_slots), c.node, c.ctx, true);
+    ns += retries * (c.cm.cas_retry + c.cm.remote_dirty * frac_remote(c));
+    if physical_remove {
+        // Unlink search: about half a traversal plus tower unlink CASes.
+        // The pred nodes being re-pointed sit in the same hot region, so
+        // the unlink writes go through the directory — this is the
+        // invalidation storm of paper §4.1.
+        let visits = 0.5 * c.q.traversal_visits();
+        let footprint = c.q.footprint_bytes(c.cm.node_bytes);
+        ns += visits * (c.cm.visit_compute + c.cm.interior_visit(footprint, c.local_fraction));
+        for _ in 0..2 {
+            let slot = (c.rng.next_u64() % hot_slots(c.q.size()).min(8)) as usize;
+            ns += c.dir.write(c.cm, c.now, lines::min_region(slot), c.node, c.ctx, true);
+        }
+        ns += tower_funnel_removal(c);
+    }
+    (ns, true)
+}
+
+/// Spray deleteMin (both SprayList variants).
+fn delete_spray(kind: ObvKind, p: &ObvParams, c: &mut ObvCtx<'_>) -> (f64, bool) {
+    // Cleaner path with probability 1/p (paper's SprayList).
+    let pth = c.threads.max(1) as f64;
+    if c.rng.gen_f64() < 1.0 / pth {
+        return delete_exact(p, c, true);
+    }
+    let logp = pth.log2().max(1.0);
+    // Sprays overshoot into the tail when the spray width O(p·log³p)
+    // exceeds the queue: those degrade to the exact scan — this is why
+    // SprayList collapses on small queues (paper Fig. 1, 1024 elements).
+    let width = (pth * logp * logp * logp).max(8.0);
+    let overshoot = (1.0 - c.q.size() as f64 / width).max(0.0);
+    if c.rng.gen_f64() < overshoot {
+        return delete_exact(p, c, true);
+    }
+    let mut ns = c.cm.op_compute;
+    // Spray walk: (log p + 1) levels × uniform jumps of mean (log p + 1)/2.
+    let walk_visits = (logp + 1.0) * (logp + 1.0) * 0.5;
+    let footprint = c.q.footprint_bytes(c.cm.node_bytes);
+    ns += walk_visits * (c.cm.visit_compute + c.cm.interior_visit(footprint, c.local_fraction));
+    if !c.q.try_delete_min(c.now) {
+        // Spray over an empty list degrades to the exact scan.
+        ns += c.dir.read(c.cm, c.now, lines::head(0), c.node, c.ctx);
+        return (ns, false);
+    }
+    // Collision probability: k concurrent claims spread over the spray
+    // width p·log³p (clamped by the queue size).
+    let k = c.q.concurrent_claims(c.now, p.claim_window) as f64;
+    let spread = (pth * logp * logp * logp).max(8.0).min(c.q.size().max(8) as f64);
+    let collide = (k / spread).min(1.0);
+    // Claim CAS lands on a random line in the (wider) min region — the
+    // spray's whole point is spreading this write; the region narrows as
+    // the queue shrinks.
+    let slot = (c.rng.next_u64() % hot_slots(c.q.size())) as usize;
+    ns += c.dir.write(c.cm, c.now, lines::min_region(slot), c.node, c.ctx, true);
+    ns += collide * (c.cm.cas_retry + c.cm.remote_dirty * frac_remote(c));
+    // Physical removal: unlink writes also spread over the wide region,
+    // but they still invalidate remote copies — the residual NUMA traffic
+    // that keeps SprayList from scaling in deleteMin-heavy runs (Fig. 1).
+    let visits = 0.5 * c.q.traversal_visits();
+    ns += visits * (c.cm.visit_compute + c.cm.interior_visit(footprint, c.local_fraction));
+    for _ in 0..2 {
+        let slot = (c.rng.next_u64() % hot_slots(c.q.size())) as usize;
+        ns += c.dir.write(c.cm, c.now, lines::min_region(slot), c.node, c.ctx, true);
+    }
+    ns += tower_funnel_removal(c);
+    ns += match kind {
+        ObvKind::AlistarhFraser => p.fraser_update_overhead * c.cm.cas(false, true),
+        _ => 2.0 * p.herlihy_lock_cost,
+    };
+    (ns, true)
+}
+
+/// Number of distinct hot lines in the min region: shrinks with the
+/// queue — at near-empty queues every operation touches the head's own
+/// line (inserts link directly after the head, deletes claim the first
+/// node), so the hot set collapses to a couple of lines.
+fn hot_slots(size: u64) -> u64 {
+    (size / 16).clamp(2, 64)
+}
+
+/// The tower funnel: nodes removed at the queue's minimum unlink their
+/// upper tower levels, whose predecessors at level ≥ 2 are the *same few
+/// tall nodes near the head* no matter how large the queue is. Every
+/// deleteMin therefore funnels 1–2 ownership transfers through a handful
+/// of lines — the per-line chain on these is what keeps exact *and*
+/// relaxed deleteMin from scaling across sockets, while Nuddle's servers
+/// pay only on-socket transfer latency for the very same writes.
+fn tower_funnel_removal(c: &mut ObvCtx<'_>) -> f64 {
+    // Two unlink writes through two head-adjacent tower lines: the
+    // per-line ownership chain on these is the binding capacity for
+    // *every* skip-list deleteMin flavor (≈ 2 lines / (2 transfers ×
+    // ~240 ns) ≈ 4M removals/s across sockets; an order of magnitude
+    // higher when the writers share one socket, as under Nuddle).
+    let mut ns = 0.0;
+    for _ in 0..5 {
+        ns += c.dir.write(c.cm, c.now, lines::head(2), c.node, c.ctx, true);
+    }
+    ns
+}
+
+/// Inserts hit the tower funnel only when they land near the head — i.e.
+/// with probability shrinking in the structure size (tall towers deep in
+/// a large queue have their own, uncontended predecessors).
+fn tower_funnel_insert(c: &mut ObvCtx<'_>) -> f64 {
+    let p = (256.0 / c.q.size().max(64) as f64).min(0.25);
+    if c.rng.gen_f64() < p {
+        c.dir.write(c.cm, c.now, lines::head(2), c.node, c.ctx, true)
+    } else {
+        0.0
+    }
+}
+
+/// Probability a competing claimer sits on another socket.
+fn frac_remote(c: &ObvCtx<'_>) -> f64 {
+    if c.active_nodes <= 1 {
+        0.0
+    } else {
+        1.0 - 1.0 / c.active_nodes as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::cache::Directory;
+
+    fn ctx<'a>(
+        cm: &'a CostModel,
+        q: &'a mut QueueModel,
+        dir: &'a mut Directory,
+        rng: &'a mut Rng,
+        threads: usize,
+        nodes: usize,
+    ) -> ObvCtx<'a> {
+        ObvCtx {
+            cm,
+            q,
+            dir,
+            rng,
+            now: 1e6,
+            node: 1,
+            ctx: 10,
+            threads,
+            active_nodes: nodes,
+            local_fraction: 1.0 / nodes as f64,
+        }
+    }
+
+    #[test]
+    fn delete_contention_raises_cost() {
+        let cm = CostModel::default();
+        let p = ObvParams::default();
+        // Low contention.
+        let mut q = QueueModel::new(100_000, 200_000, 1);
+        let mut dir = Directory::new();
+        let mut rng = Rng::new(2);
+        let (lo, ok) = delete_cost(
+            ObvKind::LotanShavit,
+            &p,
+            &mut ctx(&cm, &mut q, &mut dir, &mut rng, 4, 1),
+        );
+        assert!(ok);
+        // High contention: 40 claims in window from other sockets.
+        let mut q2 = QueueModel::new(100_000, 200_000, 1);
+        let mut dir2 = Directory::new();
+        for i in 0..40 {
+            // Other threads recently claimed (dirtied) min-region lines.
+            let t = 1e6 - 10.0 * i as f64;
+            q2.claims.push(t);
+            dir2.write(&cm, 0.0, lines::min_region(i), 3, 99, true);
+        }
+        let mut rng2 = Rng::new(2);
+        let (hi, ok2) = delete_cost(
+            ObvKind::LotanShavit,
+            &p,
+            &mut ctx(&cm, &mut q2, &mut dir2, &mut rng2, 64, 4),
+        );
+        assert!(ok2);
+        assert!(
+            hi > 3.0 * lo,
+            "contended deleteMin ({hi:.0}ns) should dwarf uncontended ({lo:.0}ns)"
+        );
+    }
+
+    #[test]
+    fn spray_beats_exact_under_contention() {
+        let cm = CostModel::default();
+        let p = ObvParams::default();
+        let mut exact_total = 0.0;
+        let mut spray_total = 0.0;
+        for pass in 0..2 {
+            let mut q = QueueModel::new(1_000_000, 2_000_000, 1);
+            let mut dir = Directory::new();
+            for i in 0..50 {
+                q.claims.push(1e6 - 5.0 * i as f64);
+                dir.write(&cm, 0.0, lines::min_region(i), (i % 4) as u8, i as u32, true);
+            }
+            let mut rng = Rng::new(77);
+            let mut cx = ctx(&cm, &mut q, &mut dir, &mut rng, 64, 4);
+            // Average over draws (spray has a 1/p cleaner branch).
+            let mut total = 0.0;
+            for _ in 0..50 {
+                cx.q.set_size(1_000_000);
+                let (ns, _) = if pass == 0 {
+                    delete_exact(&p, &mut cx, true)
+                } else {
+                    delete_spray(ObvKind::AlistarhHerlihy, &p, &mut cx)
+                };
+                total += ns;
+            }
+            if pass == 0 {
+                exact_total = total;
+            } else {
+                spray_total = total;
+            }
+        }
+        assert!(
+            spray_total < 0.7 * exact_total,
+            "spray {spray_total:.0} vs exact {exact_total:.0}"
+        );
+    }
+
+    #[test]
+    fn insert_cost_scales_with_size() {
+        let cm = CostModel::default();
+        let p = ObvParams::default();
+        let mut small_q = QueueModel::new(1_000, 1 << 30, 1);
+        let mut big_q = QueueModel::new(10_000_000, 1 << 40, 1);
+        let mut d1 = Directory::new();
+        let mut d2 = Directory::new();
+        let mut r1 = Rng::new(1);
+        let mut r2 = Rng::new(1);
+        let (small, _) = insert_cost(
+            ObvKind::AlistarhHerlihy,
+            &p,
+            &mut ctx(&cm, &mut small_q, &mut d1, &mut r1, 8, 1),
+        );
+        let (big, _) = insert_cost(
+            ObvKind::AlistarhHerlihy,
+            &p,
+            &mut ctx(&cm, &mut big_q, &mut d2, &mut r2, 8, 1),
+        );
+        assert!(big > 2.0 * small, "big={big:.0} small={small:.0}");
+    }
+
+    #[test]
+    fn duplicate_insert_cheaper() {
+        let cm = CostModel::default();
+        let p = ObvParams::default();
+        // Range == size: every insert is a duplicate.
+        let mut q = QueueModel::new(1000, 1000, 1);
+        let mut dir = Directory::new();
+        let mut rng = Rng::new(5);
+        let (ns, ok) = insert_cost(
+            ObvKind::AlistarhFraser,
+            &p,
+            &mut ctx(&cm, &mut q, &mut dir, &mut rng, 8, 1),
+        );
+        assert!(!ok);
+        assert!(ns < 1000.0);
+    }
+
+    #[test]
+    fn empty_delete_cheap_and_fails() {
+        let cm = CostModel::default();
+        let p = ObvParams::default();
+        let mut q = QueueModel::new(0, 1000, 1);
+        let mut dir = Directory::new();
+        let mut rng = Rng::new(5);
+        let (_, ok) = delete_cost(
+            ObvKind::LotanShavit,
+            &p,
+            &mut ctx(&cm, &mut q, &mut dir, &mut rng, 8, 1),
+        );
+        assert!(!ok);
+    }
+}

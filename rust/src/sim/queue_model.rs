@@ -1,0 +1,232 @@
+//! Statistical priority-queue state for the simulator.
+//!
+//! The simulator does not materialize millions of keys; what timing needs
+//! is (i) the size trajectory, (ii) duplicate-insert probability
+//! (`size / key_range` under the paper's uniform-random workloads),
+//! (iii) the traversal depth (`~1.5·log2(size)`), and (iv) the
+//! logical-deletion *claim window* — how many deleteMin claims are
+//! concurrently in flight, which prices the claimed-prefix walks and CAS
+//! retry storms at the head. All are tracked here, deterministically.
+
+use std::collections::VecDeque;
+
+use crate::util::rng::Rng;
+
+/// Sliding window of event timestamps (ns, virtual).
+#[derive(Debug, Default)]
+pub struct SlidingWindow {
+    times: VecDeque<f64>,
+}
+
+impl SlidingWindow {
+    /// Record an event at `t`.
+    pub fn push(&mut self, t: f64) {
+        self.times.push_back(t);
+        if self.times.len() > 4096 {
+            self.times.pop_front();
+        }
+    }
+
+    /// Events in `(t - window, t]`, pruning older entries.
+    pub fn count_recent(&mut self, t: f64, window: f64) -> usize {
+        while let Some(&front) = self.times.front() {
+            if front < t - window {
+                self.times.pop_front();
+            } else {
+                break;
+            }
+        }
+        // Entries can be out of order by a bounded amount (threads commit
+        // at their own clocks); count conservatively.
+        self.times.iter().filter(|&&x| x <= t && x > t - window).count()
+    }
+
+    /// Drop everything (phase reset).
+    pub fn clear(&mut self) {
+        self.times.clear();
+    }
+}
+
+/// Statistical queue state.
+#[derive(Debug)]
+pub struct QueueModel {
+    size: u64,
+    key_range: u64,
+    rng: Rng,
+    /// Completion times of recent deleteMin claims.
+    pub claims: SlidingWindow,
+    /// Completion times of recent inserts.
+    pub inserts: SlidingWindow,
+    /// Totals for feature extraction.
+    pub total_inserts: u64,
+    /// Total deleteMins.
+    pub total_deletes: u64,
+}
+
+impl QueueModel {
+    /// Initialize with `init_size` elements over `key_range` keys.
+    pub fn new(init_size: u64, key_range: u64, seed: u64) -> Self {
+        QueueModel {
+            size: init_size.min(key_range),
+            key_range: key_range.max(1),
+            rng: Rng::new(seed),
+            claims: SlidingWindow::default(),
+            inserts: SlidingWindow::default(),
+            total_inserts: 0,
+            total_deletes: 0,
+        }
+    }
+
+    /// Current size.
+    pub fn size(&self) -> u64 {
+        self.size
+    }
+
+    /// Configured key range.
+    pub fn key_range(&self) -> u64 {
+        self.key_range
+    }
+
+    /// Change the key range (phase transition).
+    pub fn set_key_range(&mut self, r: u64) {
+        self.key_range = r.max(1);
+    }
+
+    /// Structure footprint in bytes given per-node cost-model sizing.
+    pub fn footprint_bytes(&self, node_bytes: f64) -> f64 {
+        self.size as f64 * node_bytes
+    }
+
+    /// Expected bottom-up traversal visit count (skip list: ~1.5·log2 n).
+    pub fn traversal_visits(&self) -> f64 {
+        1.5 * (self.size.max(2) as f64).log2()
+    }
+
+    /// Attempt an insert with a uniform random key: success unless the key
+    /// is already present (probability ≈ size/key_range).
+    pub fn try_insert(&mut self, t: f64) -> bool {
+        let dup_p = self.size as f64 / self.key_range as f64;
+        if self.rng.gen_f64() < dup_p {
+            return false;
+        }
+        self.size += 1;
+        self.total_inserts += 1;
+        self.inserts.push(t);
+        true
+    }
+
+    /// Attempt a deleteMin: success unless empty.
+    pub fn try_delete_min(&mut self, t: f64) -> bool {
+        if self.size == 0 {
+            return false;
+        }
+        self.size -= 1;
+        self.total_deletes += 1;
+        self.claims.push(t);
+        true
+    }
+
+    /// Concurrent deleteMin claims within `window` ns of `t` — the
+    /// claimed-prefix length an arriving deleteMin must walk past.
+    pub fn concurrent_claims(&mut self, t: f64, window: f64) -> usize {
+        self.claims.count_recent(t, window)
+    }
+
+    /// Concurrent inserts within `window` ns of `t`.
+    pub fn concurrent_inserts(&mut self, t: f64, window: f64) -> usize {
+        self.inserts.count_recent(t, window)
+    }
+
+    /// Deterministic sampled "min key" for deleteMin return values: the
+    /// minimum of a `size`-element uniform sample over the range is
+    /// distributed ≈ range/size; jitter it.
+    pub fn sample_min_key(&mut self) -> u64 {
+        let expected_gap = (self.key_range / (self.size + 1)).max(1);
+        1 + self.rng.gen_range(2 * expected_gap)
+    }
+
+    /// Uniform random key over the range.
+    pub fn sample_key(&mut self) -> u64 {
+        1 + self.rng.gen_range(self.key_range)
+    }
+
+    /// Force size (phase re-initialization of Table 2/3 benchmarks).
+    pub fn set_size(&mut self, s: u64) {
+        self.size = s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sliding_window_counts() {
+        let mut w = SlidingWindow::default();
+        w.push(100.0);
+        w.push(200.0);
+        w.push(300.0);
+        assert_eq!(w.count_recent(300.0, 150.0), 2); // 200, 300
+        assert_eq!(w.count_recent(300.0, 1000.0), 2); // 100 was pruned above? no:
+                                                      // pruning removed 100 at window 150.
+        w.push(400.0);
+        assert_eq!(w.count_recent(400.0, 250.0), 3);
+    }
+
+    #[test]
+    fn insert_delete_size_trajectory() {
+        let mut q = QueueModel::new(0, 1_000_000, 7);
+        let mut t = 0.0;
+        for _ in 0..1000 {
+            q.try_insert(t);
+            t += 10.0;
+        }
+        // Nearly all succeed at low fill.
+        assert!(q.size() > 990, "size={}", q.size());
+        for _ in 0..500 {
+            assert!(q.try_delete_min(t));
+            t += 10.0;
+        }
+        assert!(q.size() > 490 && q.size() < 510);
+    }
+
+    #[test]
+    fn duplicates_at_high_fill() {
+        // Range 1000, size 900 -> ~90% duplicate rate.
+        let mut q = QueueModel::new(900, 1000, 9);
+        let mut fails = 0;
+        for i in 0..1000 {
+            if !q.try_insert(i as f64) {
+                fails += 1;
+            }
+            q.set_size(900); // hold fill constant for the estimate
+        }
+        assert!(
+            (fails as f64 / 1000.0 - 0.9).abs() < 0.05,
+            "duplicate rate {fails}/1000"
+        );
+    }
+
+    #[test]
+    fn empty_delete_fails() {
+        let mut q = QueueModel::new(0, 100, 1);
+        assert!(!q.try_delete_min(0.0));
+    }
+
+    #[test]
+    fn traversal_depth_grows_with_size() {
+        let small = QueueModel::new(1024, 1 << 20, 1).traversal_visits();
+        let big = QueueModel::new(1 << 20, 1 << 30, 1).traversal_visits();
+        assert!(big > small);
+        assert!((small - 15.0).abs() < 1.0); // 1.5 * 10
+    }
+
+    #[test]
+    fn min_key_sampling_reasonable() {
+        let mut q = QueueModel::new(1000, 1_000_000, 3);
+        for _ in 0..100 {
+            let k = q.sample_min_key();
+            assert!(k >= 1 && k <= 2 * (1_000_000 / 1001) + 1);
+        }
+    }
+}

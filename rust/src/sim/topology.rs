@@ -1,0 +1,273 @@
+//! Simulated machine topology and thread placement.
+//!
+//! Default: the paper's testbed — 4 NUMA nodes × 8 cores × 2 SMT contexts
+//! (Intel Xeon E5-4620, §4). Placement follows the paper's policy: the
+//! first 8 threads are pinned to node 0 (Nuddle's server node), and
+//! subsequent client-thread groups of 7 go to nodes round-robin. Software
+//! threads beyond the 64 hardware contexts are oversubscribed.
+
+/// Simulated machine description.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Topology {
+    /// NUMA sockets.
+    pub nodes: usize,
+    /// Physical cores per socket.
+    pub cores_per_node: usize,
+    /// SMT contexts per core.
+    pub smt: usize,
+}
+
+impl Default for Topology {
+    fn default() -> Self {
+        Topology {
+            nodes: 4,
+            cores_per_node: 8,
+            smt: 2,
+        }
+    }
+}
+
+impl Topology {
+    /// Total hardware contexts.
+    pub fn hw_contexts(&self) -> usize {
+        self.nodes * self.cores_per_node * self.smt
+    }
+
+    /// Physical cores.
+    pub fn physical_cores(&self) -> usize {
+        self.nodes * self.cores_per_node
+    }
+}
+
+/// Where a software thread lands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Placement {
+    /// NUMA node.
+    pub node: usize,
+    /// Core within the node.
+    pub core: usize,
+    /// SMT slot on that core (0 = primary).
+    pub smt_slot: usize,
+    /// True when more software threads than hardware contexts exist and
+    /// this thread timeshares its context.
+    pub oversubscribed: bool,
+}
+
+/// The paper's placement policy.
+#[derive(Debug, Clone)]
+pub struct PlacementPolicy {
+    topo: Topology,
+    /// Threads pinned to node 0 first (the server block; 8 in the paper).
+    pub leading_node0: usize,
+    /// Client group width (7 — one response line).
+    pub group_width: usize,
+}
+
+impl PlacementPolicy {
+    /// Paper policy over `topo`.
+    pub fn paper(topo: Topology) -> Self {
+        PlacementPolicy {
+            topo,
+            leading_node0: 8,
+            group_width: 7,
+        }
+    }
+
+    /// Flat round-robin over nodes (used for classifier-training sweeps,
+    /// §3.1.2: "pin software threads ... in a round-robin fashion").
+    pub fn round_robin(topo: Topology) -> Self {
+        PlacementPolicy {
+            topo,
+            leading_node0: 0,
+            group_width: 1,
+        }
+    }
+
+    /// Placement for software thread `tid` out of `n_threads` total.
+    pub fn place(&self, tid: usize, n_threads: usize) -> Placement {
+        self.layout(n_threads)[tid.min(n_threads.saturating_sub(1))]
+    }
+
+    /// Full layout for `n_threads` software threads.
+    ///
+    /// Policy (paper §4): the leading block goes to node 0; client groups
+    /// then go to nodes round-robin starting at node 1, taking primary
+    /// (non-SMT) contexts machine-wide before any SMT context — matching
+    /// "hyperthreading is enabled when using more than 32 software
+    /// threads". Beyond the hardware contexts, threads wrap (time-share).
+    pub fn layout(&self, n_threads: usize) -> Vec<Placement> {
+        let topo = &self.topo;
+        let cpn = topo.cores_per_node;
+        let hw = topo.hw_contexts();
+        // free[node][smt_slot] = next free core index, per slot tier.
+        let mut next_primary = vec![0usize; topo.nodes];
+        let mut next_smt = vec![0usize; topo.nodes];
+        let mut out = Vec::with_capacity(n_threads);
+        let mut take = |node: usize, oversub: bool| -> Option<Placement> {
+            if next_primary[node] < cpn {
+                let core = next_primary[node];
+                next_primary[node] += 1;
+                Some(Placement { node, core, smt_slot: 0, oversubscribed: oversub })
+            } else if topo.smt > 1 && next_smt[node] < cpn {
+                let core = next_smt[node];
+                next_smt[node] += 1;
+                Some(Placement { node, core, smt_slot: 1, oversubscribed: oversub })
+            } else {
+                None
+            }
+        };
+        let mut take_anywhere = |preferred: usize, oversub: bool,
+                                 next_primary: &mut Vec<usize>,
+                                 next_smt: &mut Vec<usize>| -> Placement {
+            // Preferred node primary -> any primary -> preferred SMT ->
+            // any SMT (keeps SMT unused until primaries are exhausted).
+            if next_primary[preferred] < cpn {
+                let core = next_primary[preferred];
+                next_primary[preferred] += 1;
+                return Placement { node: preferred, core, smt_slot: 0, oversubscribed: oversub };
+            }
+            for n in 0..next_primary.len() {
+                if next_primary[n] < cpn {
+                    let core = next_primary[n];
+                    next_primary[n] += 1;
+                    return Placement { node: n, core, smt_slot: 0, oversubscribed: oversub };
+                }
+            }
+            if topo.smt > 1 {
+                if next_smt[preferred] < cpn {
+                    let core = next_smt[preferred];
+                    next_smt[preferred] += 1;
+                    return Placement { node: preferred, core, smt_slot: 1, oversubscribed: oversub };
+                }
+                for n in 0..next_smt.len() {
+                    if next_smt[n] < cpn {
+                        let core = next_smt[n];
+                        next_smt[n] += 1;
+                        return Placement { node: n, core, smt_slot: 1, oversubscribed: oversub };
+                    }
+                }
+            }
+            unreachable!("caller wraps before exhausting contexts")
+        };
+        let _ = &mut take; // take_anywhere subsumes it below
+        for tid in 0..n_threads {
+            if tid >= hw {
+                // Oversubscribed: wrap onto the context of tid % hw.
+                let wrapped = out[tid % hw];
+                out.push(Placement { oversubscribed: true, ..wrapped });
+                continue;
+            }
+            let p = if tid < self.leading_node0 {
+                take_anywhere(0, false, &mut next_primary, &mut next_smt)
+            } else {
+                let rest = tid - self.leading_node0;
+                let group = rest / self.group_width.max(1);
+                // With a leading server block, groups rotate over the
+                // *client* nodes (1..); the flat round-robin policy
+                // rotates over all nodes.
+                let preferred = if self.leading_node0 > 0 && topo.nodes > 1 {
+                    1 + group % (topo.nodes - 1).max(1)
+                } else {
+                    group % topo.nodes.max(1)
+                };
+                take_anywhere(preferred, false, &mut next_primary, &mut next_smt)
+            };
+            out.push(p);
+        }
+        out
+    }
+
+    /// The simulated topology.
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    /// Count software threads sharing each core when `n_threads` run —
+    /// used by the engine for SMT/oversubscription slowdown factors.
+    pub fn active_contexts(&self, n_threads: usize) -> Vec<u32> {
+        let mut per_core = vec![0u32; self.topo.physical_cores()];
+        for tid in 0..n_threads {
+            let p = self.place(tid, n_threads);
+            per_core[p.node * self.topo.cores_per_node + p.core] += 1;
+        }
+        per_core
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_paper_machine() {
+        let t = Topology::default();
+        assert_eq!(t.hw_contexts(), 64);
+        assert_eq!(t.physical_cores(), 32);
+    }
+
+    #[test]
+    fn first_eight_threads_on_node0() {
+        let p = PlacementPolicy::paper(Topology::default());
+        for tid in 0..8 {
+            assert_eq!(p.place(tid, 64).node, 0, "thread {tid} not on node 0");
+        }
+    }
+
+    #[test]
+    fn client_groups_round_robin() {
+        let p = PlacementPolicy::paper(Topology::default());
+        // Groups of 7 after the first 8 rotate over the non-server nodes.
+        let g0_node = p.place(8, 64).node;
+        let g1_node = p.place(8 + 7, 64).node;
+        let g2_node = p.place(8 + 14, 64).node;
+        let g3_node = p.place(8 + 21, 64).node;
+        assert_eq!(
+            [g0_node, g1_node, g2_node, g3_node],
+            [1, 2, 3, 1],
+            "groups do not round-robin across client nodes"
+        );
+        // All members of one group land on the same node (response-line
+        // locality, paper §2.2) while primaries are available.
+        for i in 0..7 {
+            assert_eq!(p.place(15 + i, 64).node, g1_node);
+        }
+    }
+
+    #[test]
+    fn smt_engages_above_32_threads() {
+        let p = PlacementPolicy::paper(Topology::default());
+        let per_core = p.active_contexts(32);
+        assert!(per_core.iter().all(|&c| c <= 1), "SMT engaged too early");
+        let per_core = p.active_contexts(64);
+        assert!(per_core.iter().any(|&c| c == 2), "SMT never engaged at 64");
+    }
+
+    #[test]
+    fn oversubscription_flagged() {
+        let p = PlacementPolicy::paper(Topology::default());
+        assert!(!p.place(63, 64).oversubscribed);
+        assert!(p.place(100, 128).oversubscribed);
+        let per_core = p.active_contexts(128);
+        assert!(per_core.iter().any(|&c| c > 2));
+    }
+
+    #[test]
+    fn placement_within_bounds() {
+        let p = PlacementPolicy::paper(Topology::default());
+        for n in [1usize, 8, 15, 29, 43, 57, 64, 100, 128] {
+            for tid in 0..n {
+                let pl = p.place(tid, n);
+                assert!(pl.node < 4);
+                assert!(pl.core < 8);
+                assert!(pl.smt_slot < 2);
+            }
+        }
+    }
+
+    #[test]
+    fn round_robin_policy_spreads() {
+        let p = PlacementPolicy::round_robin(Topology::default());
+        let nodes: Vec<usize> = (0..4).map(|t| p.place(t, 4).node).collect();
+        assert_eq!(nodes, vec![0, 1, 2, 3]);
+    }
+}

@@ -1,0 +1,199 @@
+//! Minimal command-line argument parser (offline substitute for `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args and
+//! subcommands. Typed getters parse on access and produce uniform errors.
+
+use std::collections::BTreeMap;
+
+use crate::util::error::{Error, Result};
+
+/// Parsed arguments: a subcommand, options, and positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First non-option token (subcommand), if any.
+    pub command: Option<String>,
+    opts: BTreeMap<String, Vec<String>>,
+    positionals: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I, S>(tokens: I) -> Result<Args>
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut args = Args::default();
+        let toks: Vec<String> = tokens.into_iter().map(Into::into).collect();
+        let mut i = 0;
+        while i < toks.len() {
+            let t = &toks[i];
+            if let Some(stripped) = t.strip_prefix("--") {
+                if stripped.is_empty() {
+                    // `--` terminates option parsing.
+                    for rest in &toks[i + 1..] {
+                        args.positionals.push(rest.clone());
+                    }
+                    break;
+                }
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                if key.is_empty() {
+                    return Err(Error::Config(format!("malformed option: {t}")));
+                }
+                let value = if let Some(v) = inline_val {
+                    Some(v)
+                } else if i + 1 < toks.len() && !toks[i + 1].starts_with("--") {
+                    i += 1;
+                    Some(toks[i].clone())
+                } else {
+                    None
+                };
+                args.opts
+                    .entry(key)
+                    .or_default()
+                    .push(value.unwrap_or_else(|| "true".to_string()));
+            } else if args.command.is_none() && args.positionals.is_empty() {
+                args.command = Some(t.clone());
+            } else {
+                args.positionals.push(t.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    /// Parse from the process environment (skipping argv[0]).
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Raw string option (last occurrence wins).
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).and_then(|v| v.last()).map(String::as_str)
+    }
+
+    /// All occurrences of an option.
+    pub fn get_all(&self, key: &str) -> &[String] {
+        self.opts.get(key).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Boolean flag: present (with no value or `true`/`1`) => true.
+    pub fn flag(&self, key: &str) -> bool {
+        match self.get(key) {
+            Some("false") | Some("0") | None => false,
+            Some(_) => true,
+        }
+    }
+
+    /// String option with default.
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Typed option, with default.
+    pub fn num_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<T>()
+                .map_err(|_| Error::Config(format!("--{key}: cannot parse {s:?}"))),
+        }
+    }
+
+    /// Required typed option.
+    pub fn num<T: std::str::FromStr>(&self, key: &str) -> Result<T> {
+        let s = self
+            .get(key)
+            .ok_or_else(|| Error::Config(format!("missing required option --{key}")))?;
+        s.parse::<T>()
+            .map_err(|_| Error::Config(format!("--{key}: cannot parse {s:?}")))
+    }
+
+    /// Comma-separated list of typed values, with default.
+    pub fn list_or<T: std::str::FromStr>(&self, key: &str, default: &[T]) -> Result<Vec<T>>
+    where
+        T: Clone,
+    {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .filter(|p| !p.is_empty())
+                .map(|p| {
+                    p.trim()
+                        .parse::<T>()
+                        .map_err(|_| Error::Config(format!("--{key}: cannot parse {p:?}")))
+                })
+                .collect(),
+        }
+    }
+
+    /// Positional arguments (after the subcommand).
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(ts: &[&str]) -> Args {
+        Args::parse(ts.iter().copied()).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_opts() {
+        let a = parse(&["bench", "--threads", "8", "--mode=sim", "--verbose"]);
+        assert_eq!(a.command.as_deref(), Some("bench"));
+        assert_eq!(a.get("threads"), Some("8"));
+        assert_eq!(a.get("mode"), Some("sim"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse(&["run", "--n", "100", "--ratio", "0.5"]);
+        assert_eq!(a.num_or::<u64>("n", 0).unwrap(), 100);
+        assert_eq!(a.num_or::<f64>("ratio", 0.0).unwrap(), 0.5);
+        assert_eq!(a.num_or::<u64>("missing", 7).unwrap(), 7);
+        assert!(a.num::<u64>("absent").is_err());
+        assert!(a.num::<u64>("ratio").is_err());
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse(&["x", "--sizes", "1,2,3"]);
+        assert_eq!(a.list_or::<u64>("sizes", &[]).unwrap(), vec![1, 2, 3]);
+        assert_eq!(a.list_or::<u64>("other", &[9]).unwrap(), vec![9]);
+    }
+
+    #[test]
+    fn positionals_and_doubledash() {
+        let a = parse(&["cmd", "p1", "--k", "v", "p2", "--", "--notanopt"]);
+        assert_eq!(a.command.as_deref(), Some("cmd"));
+        assert_eq!(a.positionals(), &["p1", "p2", "--notanopt"]);
+    }
+
+    #[test]
+    fn last_occurrence_wins() {
+        let a = parse(&["c", "--k", "1", "--k", "2"]);
+        assert_eq!(a.get("k"), Some("2"));
+        assert_eq!(a.get_all("k").len(), 2);
+    }
+
+    #[test]
+    fn flag_false() {
+        let a = parse(&["c", "--f", "false"]);
+        assert!(!a.flag("f"));
+    }
+
+    #[test]
+    fn malformed_option_rejected() {
+        assert!(Args::parse(["--=v"]).is_err());
+    }
+}

@@ -1,0 +1,67 @@
+//! Crate-wide error type.
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Crate-wide error enum.
+#[derive(Debug)]
+pub enum Error {
+    /// I/O failure (artifact loading, report writing, ...).
+    Io(std::io::Error),
+    /// XLA / PJRT runtime failure.
+    Xla(String),
+    /// Malformed artifact / model file.
+    Parse(String),
+    /// Invalid configuration or CLI usage.
+    Config(String),
+    /// Invariant violation detected at runtime.
+    Invariant(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::Parse(m) => write!(f, "parse error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Invariant(m) => write!(f, "invariant violated: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_io() {
+        let e = Error::from(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        assert!(e.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn display_variants() {
+        assert!(Error::Xla("x".into()).to_string().contains("xla"));
+        assert!(Error::Parse("p".into()).to_string().contains("parse"));
+        assert!(Error::Config("c".into()).to_string().contains("config"));
+        assert!(Error::Invariant("i".into()).to_string().contains("invariant"));
+    }
+}

@@ -1,0 +1,12 @@
+//! Small self-contained substrates (PRNG, CLI parsing, stats, logging)
+//! implemented in-tree because the build environment is fully offline.
+
+pub mod cli;
+pub mod error;
+pub mod logging;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod sync;
+
+pub use error::{Error, Result};

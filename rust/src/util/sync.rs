@@ -1,0 +1,208 @@
+//! Low-level synchronization helpers: cache-line padding, exponential
+//! backoff, and a tiny test-and-test-and-set spinlock.
+//!
+//! The paper's communication protocol (ffwd §2) is built on dedicated
+//! cache lines; [`CacheLine`] reproduces the 128-byte alignment the paper
+//! uses (two 64-byte lines, covering adjacent-line prefetchers).
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Cache line size used for padding (bytes). The paper's code uses 128.
+pub const CACHE_LINE_SIZE: usize = 128;
+
+/// A value padded/aligned to a full cache line to prevent false sharing.
+#[repr(align(128))]
+#[derive(Debug, Default)]
+pub struct CacheLine<T>(pub T);
+
+impl<T> CacheLine<T> {
+    /// Wrap a value.
+    pub const fn new(t: T) -> Self {
+        CacheLine(t)
+    }
+}
+
+impl<T> std::ops::Deref for CacheLine<T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.0
+    }
+}
+
+impl<T> std::ops::DerefMut for CacheLine<T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.0
+    }
+}
+
+/// Exponential backoff for contended CAS loops (cf. crossbeam's Backoff).
+#[derive(Debug)]
+pub struct Backoff {
+    step: u32,
+}
+
+impl Backoff {
+    const SPIN_LIMIT: u32 = 6;
+    const YIELD_LIMIT: u32 = 10;
+
+    /// Fresh backoff.
+    pub fn new() -> Self {
+        Backoff { step: 0 }
+    }
+
+    /// Spin for ~2^step pause instructions; escalate to `yield_now` once
+    /// the spin budget is exhausted (important on oversubscribed hosts).
+    #[inline]
+    pub fn snooze(&mut self) {
+        if self.step <= Self::SPIN_LIMIT {
+            for _ in 0..(1u32 << self.step) {
+                std::hint::spin_loop();
+            }
+        } else {
+            std::thread::yield_now();
+        }
+        if self.step <= Self::YIELD_LIMIT {
+            self.step += 1;
+        }
+    }
+
+    /// Spin only (no yield) — for very short waits.
+    #[inline]
+    pub fn spin(&mut self) {
+        for _ in 0..(1u32 << self.step.min(Self::SPIN_LIMIT)) {
+            std::hint::spin_loop();
+        }
+        if self.step <= Self::SPIN_LIMIT {
+            self.step += 1;
+        }
+    }
+
+    /// Reset to the initial state.
+    pub fn reset(&mut self) {
+        self.step = 0;
+    }
+
+    /// True once backoff has escalated past pure spinning.
+    pub fn is_completed(&self) -> bool {
+        self.step > Self::SPIN_LIMIT
+    }
+}
+
+impl Default for Backoff {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Test-and-test-and-set spinlock with backoff. Used for the *global_lock*
+/// in Nuddle initialization (paper Fig. 5) — never on the hot path.
+#[derive(Debug, Default)]
+pub struct SpinLock<T> {
+    locked: AtomicBool,
+    value: UnsafeCell<T>,
+}
+
+// SAFETY: access to `value` is serialized by `locked`.
+unsafe impl<T: Send> Send for SpinLock<T> {}
+unsafe impl<T: Send> Sync for SpinLock<T> {}
+
+impl<T> SpinLock<T> {
+    /// New unlocked lock.
+    pub const fn new(value: T) -> Self {
+        SpinLock {
+            locked: AtomicBool::new(false),
+            value: UnsafeCell::new(value),
+        }
+    }
+
+    /// Acquire, run `f`, release.
+    pub fn with<R>(&self, f: impl FnOnce(&mut T) -> R) -> R {
+        let mut backoff = Backoff::new();
+        loop {
+            // Test-and-test-and-set: spin on a read before attempting CAS.
+            while self.locked.load(Ordering::Relaxed) {
+                backoff.snooze();
+            }
+            if self
+                .locked
+                .compare_exchange_weak(false, true, Ordering::Acquire, Ordering::Relaxed)
+                .is_ok()
+            {
+                break;
+            }
+        }
+        // SAFETY: we hold the lock.
+        let r = f(unsafe { &mut *self.value.get() });
+        self.locked.store(false, Ordering::Release);
+        r
+    }
+
+    /// Try to acquire without spinning; returns None if contended.
+    pub fn try_with<R>(&self, f: impl FnOnce(&mut T) -> R) -> Option<R> {
+        if self
+            .locked
+            .compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed)
+            .is_ok()
+        {
+            let r = f(unsafe { &mut *self.value.get() });
+            self.locked.store(false, Ordering::Release);
+            Some(r)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn cache_line_alignment() {
+        assert!(std::mem::align_of::<CacheLine<u64>>() >= CACHE_LINE_SIZE);
+        assert!(std::mem::size_of::<CacheLine<u8>>() >= CACHE_LINE_SIZE);
+        let array: [CacheLine<u64>; 2] = [CacheLine::new(1), CacheLine::new(2)];
+        let a0 = &array[0] as *const _ as usize;
+        let a1 = &array[1] as *const _ as usize;
+        assert!(a1 - a0 >= CACHE_LINE_SIZE);
+    }
+
+    #[test]
+    fn backoff_escalates() {
+        let mut b = Backoff::new();
+        assert!(!b.is_completed());
+        for _ in 0..16 {
+            b.snooze();
+        }
+        assert!(b.is_completed());
+        b.reset();
+        assert!(!b.is_completed());
+    }
+
+    #[test]
+    fn spinlock_mutual_exclusion() {
+        let lock = Arc::new(SpinLock::new(0u64));
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                let l = lock.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        l.with(|v| *v += 1);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(lock.with(|v| *v), 4000);
+    }
+
+    #[test]
+    fn spinlock_try() {
+        let lock = SpinLock::new(5);
+        assert_eq!(lock.try_with(|v| *v), Some(5));
+    }
+}

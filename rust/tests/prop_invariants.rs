@@ -1,0 +1,239 @@
+//! Property-based invariants (in-tree mini-proptest): randomized op
+//! sequences, thread interleavings, and mode-switch schedules must never
+//! lose, duplicate, or reorder-beyond-relaxation the queue's elements.
+
+use std::sync::Arc;
+
+use smartpq::pq::traits::ConcurrentPQ;
+use smartpq::pq::{LotanShavitPQ, SeqSkipListPQ, SprayList};
+use smartpq::util::proptest::{forall, Config};
+
+type Herlihy = SprayList<smartpq::pq::skiplist::herlihy::HerlihySkipList>;
+type Fraser = SprayList<smartpq::pq::skiplist::fraser::FraserSkipList>;
+
+/// Sequential: every concurrent queue agrees with the serial skip list on
+/// arbitrary unique-key op sequences.
+#[test]
+fn prop_sequential_equivalence_with_serial_oracle() {
+    forall(Config::default().cases(30), |g| {
+        let n_ops = g.usize(1..400);
+        let ops: Vec<(bool, u64)> = (0..n_ops)
+            .map(|i| (g.bool(0.6), 1 + i as u64))
+            .collect();
+        let mut oracle = SeqSkipListPQ::new(1);
+        let lotan = LotanShavitPQ::new();
+        let spray: Herlihy = SprayList::new(2);
+        for &(ins, key) in &ops {
+            if ins {
+                assert_eq!(oracle.insert(key, key), lotan.insert(key, key));
+                spray.insert(key, key);
+            } else {
+                let a = oracle.delete_min().is_some();
+                let b = lotan.delete_min().is_some();
+                let c = spray.delete_min().is_some();
+                assert_eq!(a, b, "lotan emptiness diverged");
+                assert_eq!(a, c, "spray emptiness diverged");
+            }
+        }
+        assert_eq!(oracle.len(), lotan.len());
+        assert_eq!(oracle.len(), spray.len());
+    });
+}
+
+/// lotan_shavit's deleteMin is *exact*: always the global minimum.
+#[test]
+fn prop_lotan_exact_min() {
+    forall(Config::default().cases(25), |g| {
+        let q = LotanShavitPQ::new();
+        let mut keys: Vec<u64> = (0..g.usize(1..200)).map(|_| g.u64(1..1_000_000)).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        let mut shuffled = keys.clone();
+        // Insert in generator-chosen order.
+        for i in (1..shuffled.len()).rev() {
+            let j = g.usize(0..i + 1);
+            shuffled.swap(i, j);
+        }
+        for &k in &shuffled {
+            q.insert(k, k);
+        }
+        for &expect in &keys {
+            assert_eq!(q.delete_min().map(|(k, _)| k), Some(expect));
+        }
+        assert_eq!(q.delete_min(), None);
+    });
+}
+
+/// SprayList relaxation bound: a spray lands within the structural
+/// O(p·log³p) window of the minimum.
+#[test]
+fn prop_spray_relaxation_window() {
+    forall(Config::default().cases(10), |g| {
+        let p = *g.choose(&[2usize, 8, 32]);
+        let q: Fraser = SprayList::new(p);
+        let n = 5000u64;
+        for k in 1..=n {
+            q.insert(k, k);
+        }
+        let logp = (usize::BITS - p.leading_zeros()) as f64;
+        let window = (p as f64 * logp * logp * logp).max(64.0) as u64 * 4;
+        for _ in 0..20 {
+            let (k, _) = q.delete_min().expect("nonempty");
+            assert!(
+                k <= window,
+                "spray for p={p} landed at {k}, beyond 4x the theoretical window {window}"
+            );
+        }
+    });
+}
+
+/// Concurrent conservation: random thread counts / mixes / ranges.
+#[test]
+fn prop_concurrent_conservation() {
+    forall(Config::default().cases(8), |g| {
+        let threads = g.usize(2..5);
+        let per = g.usize(100..600);
+        let range = g.u64(100..50_000);
+        let ins_pct = g.f64_unit();
+        let q: Arc<Herlihy> = Arc::new(SprayList::new(threads));
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    let mut rng = smartpq::util::rng::Rng::stream(42, t as u64);
+                    let mut net = 0i64;
+                    for _ in 0..per {
+                        if rng.gen_f64() < ins_pct {
+                            if q.insert(1 + rng.gen_range(range), 0) {
+                                net += 1;
+                            }
+                        } else if q.delete_min().is_some() {
+                            net -= 1;
+                        }
+                    }
+                    net
+                })
+            })
+            .collect();
+        let net: i64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        let mut drained = 0i64;
+        while q.delete_min().is_some() {
+            drained += 1;
+        }
+        assert_eq!(net, drained, "elements lost or duplicated");
+    });
+}
+
+/// Simulator invariants: deterministic, monotone-in-duration op counts,
+/// and size trajectories consistent with the op mix.
+#[test]
+fn prop_sim_invariants() {
+    use smartpq::sim::{run_workload, SimAlgo, Workload};
+    forall(Config::default().cases(12), |g| {
+        let threads = g.usize(1..65);
+        let size = g.u64(64..200_000);
+        let range = size * g.u64(2..20);
+        let pct = g.u64(0..101) as f64;
+        let seed = g.u64(0..1 << 32);
+        let algo = match g.usize(0..4) {
+            0 => SimAlgo::LotanShavit,
+            1 => SimAlgo::AlistarhHerlihy,
+            2 => SimAlgo::Ffwd,
+            _ => SimAlgo::Nuddle { servers: 4 },
+        };
+        let w = Workload::single(size, range, threads, pct, 1.0, seed);
+        let a = run_workload(&algo, &w);
+        let b = run_workload(&algo, &w);
+        // Determinism.
+        assert_eq!(a.phases[0].ops, b.phases[0].ops, "sim not deterministic");
+        assert_eq!(a.phases[0].size_at_end, b.phases[0].size_at_end);
+        // Sanity: ops happened; size stayed within [0, size + inserts].
+        assert!(a.phases[0].ops > 0);
+        if pct == 0.0 {
+            assert!(a.phases[0].size_at_end <= size, "size grew with no inserts");
+        }
+    });
+}
+
+/// The classifier text format round-trips arbitrary trained trees.
+#[test]
+fn prop_tree_text_roundtrip() {
+    use smartpq::classifier::features::Features;
+    use smartpq::classifier::tree::{DecisionTree, TreeNode};
+    use smartpq::classifier::ModeOracle;
+    forall(Config::default().cases(40), |g| {
+        // Generate a random valid tree: full binary, random depth 1..6.
+        fn gen(
+            g: &mut smartpq::util::proptest::Gen,
+            nodes: &mut Vec<TreeNode>,
+            depth: usize,
+        ) -> i32 {
+            let idx = nodes.len() as i32;
+            if depth == 0 || g.bool(0.35) {
+                nodes.push(TreeNode {
+                    feature: -1,
+                    threshold: 0.0,
+                    left: -1,
+                    right: -1,
+                    leaf_class: g.usize(0..3) as i32,
+                });
+                return idx;
+            }
+            nodes.push(TreeNode {
+                feature: g.usize(0..4) as i32,
+                threshold: (g.u64(0..2000) as f32) / 10.0,
+                left: -1,
+                right: -1,
+                leaf_class: -1,
+            });
+            let l = gen(g, nodes, depth - 1);
+            let r = gen(g, nodes, depth - 1);
+            nodes[idx as usize].left = l;
+            nodes[idx as usize].right = r;
+            idx
+        }
+        let mut nodes = Vec::new();
+        gen(g, &mut nodes, 5);
+        let t = DecisionTree::from_nodes(nodes).expect("generated tree valid");
+        let t2 = DecisionTree::parse(&t.to_text()).expect("roundtrip parse");
+        for _ in 0..20 {
+            let f = Features::new(
+                g.u64(1..129) as f64,
+                g.u64(0..10_000_000) as f64,
+                g.u64(1..100_000_000) as f64,
+                g.u64(0..101) as f64,
+            );
+            assert_eq!(t.predict(&f), t2.predict(&f));
+        }
+    });
+}
+
+/// Delegation channel protocol: random request interleavings preserve
+/// request/response pairing per client.
+#[test]
+fn prop_channel_pairing() {
+    use smartpq::delegation::channel::{encode, OpCode, RequestLine, ResponseLine};
+    forall(Config::default().cases(30), |g| {
+        let req = RequestLine::new();
+        let resp = ResponseLine::new();
+        let mut last_req_toggle = 0u8;
+        let mut last_resp_toggle = 0u8;
+        for i in 0..g.usize(1..60) {
+            let key = g.u64(1..1000);
+            let op = if g.bool(0.5) { OpCode::Insert } else { OpCode::DeleteMin };
+            req.publish(op, key, i as u64);
+            // Server side.
+            let (got_op, got_key, got_val, t) = req.poll(last_req_toggle).expect("visible");
+            last_req_toggle = t;
+            assert_eq!(got_op, op);
+            assert_eq!(got_key, key);
+            assert_eq!(got_val, i as u64);
+            let (p, s) = encode::insert(true);
+            resp.write(3, p + got_key, s);
+            // Client side.
+            let (rp, _, t) = resp.wait(3, last_resp_toggle);
+            last_resp_toggle = t;
+            assert_eq!(rp, p + key);
+        }
+    });
+}

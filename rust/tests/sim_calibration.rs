@@ -1,0 +1,39 @@
+//! Calibration snapshot: prints the Fig-1-style throughput matrix so cost
+//! model changes can be eyeballed quickly, and asserts the coarse
+//! paper-shape orderings the rest of the suite depends on.
+
+use smartpq::sim::{run_workload, SimAlgo, Workload};
+
+fn point(algo: &SimAlgo, threads: usize, size: u64, range: u64, pct: f64) -> f64 {
+    run_workload(algo, &Workload::single(size, range, threads, pct, 2.0, 7)).overall_mops()
+}
+
+#[test]
+fn calibration_matrix() {
+    eprintln!("{:>18} {:>7} {:>7} {:>7} {:>7} {:>7} {:>7}", "100K/64thr", "100/0", "80/20", "60/40", "40/60", "20/80", "0/100");
+    let mut table = std::collections::BTreeMap::new();
+    for algo in [
+        SimAlgo::LotanShavit,
+        SimAlgo::AlistarhFraser,
+        SimAlgo::AlistarhHerlihy,
+        SimAlgo::Ffwd,
+        SimAlgo::Nuddle { servers: 8 },
+    ] {
+        let mut row = format!("{:>18}", algo.name());
+        let mut vals = Vec::new();
+        for pct in [100.0, 80.0, 60.0, 40.0, 20.0, 0.0] {
+            let m = point(&algo, 64, 100_000, 200_000, pct);
+            vals.push(m);
+            row += &format!(" {:>7.2}", m);
+        }
+        eprintln!("{row}");
+        table.insert(algo.name(), vals);
+    }
+    // Coarse orderings (paper Figs. 1/9):
+    let h = &table["alistarh_herlihy"];
+    let n = &table["nuddle"];
+    let f = &table["ffwd"];
+    assert!(h[0] > n[0], "insert-dominated: oblivious must win");
+    assert!(n[5] > h[5], "deleteMin-dominated: nuddle must win");
+    assert!(f.iter().all(|&x| x < n[0] * 1.2), "ffwd must stay near single-thread rate");
+}

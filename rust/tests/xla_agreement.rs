@@ -1,0 +1,118 @@
+//! Cross-executor agreement: the XLA artifact (Pallas kernel -> HLO ->
+//! PJRT) and the native Rust tree evaluator must produce bit-identical
+//! classes for the same inputs — they embed the same flattened model.
+//!
+//! These tests are skipped (not failed) when `make artifacts` has not run
+//! yet, so `cargo test` works on a fresh checkout.
+
+use smartpq::classifier::features::Features;
+use smartpq::classifier::{DecisionTree, ModeOracle};
+use smartpq::runtime::{MlpRegressor, XlaClassifier, XlaDecider};
+use smartpq::util::rng::Rng;
+
+fn artifact_dir() -> Option<&'static str> {
+    for d in ["artifacts", "../artifacts"] {
+        if std::path::Path::new(d).join("dtree.hlo.txt").exists() {
+            return Some(d);
+        }
+    }
+    eprintln!("skipping: artifacts not built (run `make artifacts`)");
+    None
+}
+
+fn random_features(rng: &mut Rng, n: usize) -> Vec<Features> {
+    (0..n)
+        .map(|_| {
+            Features::new(
+                rng.gen_range_inclusive(1, 128) as f64,
+                10f64.powf(rng.gen_f64() * 7.0),
+                10f64.powf(0.3 + rng.gen_f64() * 8.0),
+                rng.gen_f64() * 100.0,
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn xla_classifier_matches_native_tree() {
+    let Some(dir) = artifact_dir() else { return };
+    let xla = XlaClassifier::load(dir).expect("load xla classifier");
+    let tree = DecisionTree::load(format!("{dir}/dtree.txt")).expect("load tree");
+    let mut rng = Rng::new(0xA9EE);
+    let feats = random_features(&mut rng, 400);
+    let mut mismatches = 0;
+    for chunk in feats.chunks(16) {
+        let encoded: Vec<[f32; 4]> = chunk.iter().map(|f| f.encode()).collect();
+        let got = xla.predict_batch(&encoded).expect("xla batch");
+        for (f, g) in chunk.iter().zip(got) {
+            let want = tree.predict(f);
+            if want != g {
+                mismatches += 1;
+                eprintln!("mismatch at {f:?}: native {want:?} xla {g:?}");
+            }
+        }
+    }
+    assert_eq!(mismatches, 0, "native and XLA classifiers disagree");
+}
+
+#[test]
+fn xla_decider_matches_native_tree_and_mlp() {
+    let Some(dir) = artifact_dir() else { return };
+    let decider = XlaDecider::load(dir).expect("load decider");
+    let tree = DecisionTree::load(format!("{dir}/dtree.txt")).expect("load tree");
+    let mlp = MlpRegressor::load(format!("{dir}/mlp.txt")).expect("load mlp");
+    let mut rng = Rng::new(0xB0B0);
+    let feats = random_features(&mut rng, 160);
+    for chunk in feats.chunks(16) {
+        let encoded: Vec<[f32; 4]> = chunk.iter().map(|f| f.encode()).collect();
+        let (classes, mops) = decider.decide_batch(&encoded).expect("decide");
+        for ((f, c), m) in chunk.iter().zip(&classes).zip(&mops) {
+            assert_eq!(tree.predict(f), *c, "class mismatch at {f:?}");
+            let (o, a) = mlp.predict(f);
+            assert!(
+                (o - m[0]).abs() < 1e-3 && (a - m[1]).abs() < 1e-3,
+                "mlp mismatch at {f:?}: native ({o},{a}) xla ({},{})",
+                m[0],
+                m[1]
+            );
+        }
+    }
+}
+
+#[test]
+fn xla_oracle_usable_as_mode_oracle() {
+    let Some(dir) = artifact_dir() else { return };
+    let xla = XlaClassifier::load(dir).expect("load");
+    let tree = DecisionTree::load(format!("{dir}/dtree.txt")).expect("tree");
+    let oracle: &dyn ModeOracle = &xla;
+    // Whatever the trained tree says, the XLA oracle must agree with it
+    // through the trait interface too.
+    let f = Features::new(64.0, 1000.0, 2048.0, 10.0);
+    assert_eq!(oracle.predict(&f), tree.predict(&f));
+}
+
+#[test]
+fn classifier_inference_latency_budget() {
+    // Paper §3.1.2: traversal cost 2-4 ms. Our native path must be far
+    // under that; the XLA path must at least meet it.
+    let Some(dir) = artifact_dir() else { return };
+    let tree = DecisionTree::load(format!("{dir}/dtree.txt")).unwrap();
+    let f = Features::new(50.0, 1e6, 1e7, 60.0);
+    let t0 = std::time::Instant::now();
+    for _ in 0..10_000 {
+        std::hint::black_box(tree.predict(std::hint::black_box(&f)));
+    }
+    let native_ns = t0.elapsed().as_nanos() as f64 / 10_000.0;
+    assert!(native_ns < 4_000_000.0, "native inference {native_ns} ns");
+
+    let xla = XlaClassifier::load(dir).unwrap();
+    let enc = [f.encode()];
+    xla.predict_batch(&enc).unwrap(); // warm
+    let t0 = std::time::Instant::now();
+    for _ in 0..50 {
+        std::hint::black_box(xla.predict_batch(std::hint::black_box(&enc)).unwrap());
+    }
+    let xla_us = t0.elapsed().as_micros() as f64 / 50.0;
+    assert!(xla_us < 4_000.0, "xla inference {xla_us} us exceeds paper budget");
+    eprintln!("native {native_ns:.0} ns/inference, xla {xla_us:.1} us/batch");
+}
