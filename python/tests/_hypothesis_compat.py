@@ -1,0 +1,94 @@
+"""Minimal stand-in for the `hypothesis` API surface these tests use.
+
+The offline test image does not ship hypothesis. Rather than skip the
+randomized kernel sweeps entirely, this shim replays a deterministic,
+seeded sample of each strategy space — weaker than real property testing
+(no shrinking, fixed seed) but it keeps the kernel-vs-oracle agreement
+checks exercising many shapes. When hypothesis is installed, the tests
+import it and this module is unused.
+"""
+
+import inspect
+
+import numpy as np
+
+
+class _Strategy:
+    def sample(self, rng):  # pragma: no cover - interface
+        raise NotImplementedError
+
+
+class _Integers(_Strategy):
+    def __init__(self, lo, hi):
+        self.lo, self.hi = lo, hi
+
+    def sample(self, rng):
+        return int(rng.integers(self.lo, self.hi + 1))
+
+
+class _SampledFrom(_Strategy):
+    def __init__(self, options):
+        self.options = list(options)
+
+    def sample(self, rng):
+        return self.options[int(rng.integers(0, len(self.options)))]
+
+
+class _Floats(_Strategy):
+    def __init__(self, lo, hi):
+        self.lo, self.hi = lo, hi
+
+    def sample(self, rng):
+        return float(rng.uniform(self.lo, self.hi))
+
+
+class strategies:
+    """Namespace mirroring `hypothesis.strategies`."""
+
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def sampled_from(options):
+        return _SampledFrom(options)
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Floats(min_value, max_value)
+
+
+_DEFAULT_EXAMPLES = 20
+
+
+def given(**strategy_kwargs):
+    """Decorator: run the test once per deterministically drawn example."""
+
+    def decorate(fn):
+        def runner(*args, **kwargs):
+            n = getattr(runner, "_max_examples", _DEFAULT_EXAMPLES)
+            rng = np.random.default_rng(0xC0FFEE)
+            for _ in range(n):
+                drawn = {k: s.sample(rng) for k, s in strategy_kwargs.items()}
+                fn(*args, **kwargs, **drawn)
+
+        # Hide the strategy-filled parameters from pytest's fixture
+        # resolution (hypothesis does the same via its own wrapper).
+        sig = inspect.signature(fn)
+        kept = [p for name, p in sig.parameters.items() if name not in strategy_kwargs]
+        runner.__signature__ = sig.replace(parameters=kept)
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        return runner
+
+    return decorate
+
+
+def settings(max_examples=_DEFAULT_EXAMPLES, **_ignored):
+    """Decorator: cap the example count (deadline etc. are ignored)."""
+
+    def decorate(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return decorate

@@ -9,8 +9,11 @@ with the NumPy flat-tree oracle, across randomized shapes and values
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # offline image: deterministic replay shim
+    from _hypothesis_compat import given, settings, strategies as st
 
 from compile import tree_io
 from compile.kernels.dtree import dtree_predict

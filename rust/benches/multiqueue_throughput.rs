@@ -1,0 +1,8 @@
+//! MultiQueue vs SprayList vs Nuddle: thread-scaling grids at both
+//! workload poles plus the heaps-per-thread (`c`) sensitivity sweep.
+use smartpq::harness::figures;
+use smartpq::harness::runner::BenchConfig;
+
+fn main() {
+    figures::multiqueue_grid(&BenchConfig::default());
+}

@@ -32,3 +32,9 @@ impl HasStats for crate::pq::MutexHeapPQ {
         self.stats()
     }
 }
+
+impl HasStats for crate::pq::MultiQueue {
+    fn pq_stats(&self) -> &PqStats {
+        self.stats()
+    }
+}

@@ -135,8 +135,8 @@ pub fn fig7b(cfg: &BenchConfig) -> Table {
 
 // ------------------------------------------------------------------ Fig. 9
 
-/// Figure 9: the full grid — sizes × op mixes × thread counts × all five
-/// static queues.
+/// Figure 9: the full grid — sizes × op mixes × thread counts × all six
+/// static queues (the paper's five plus the MultiQueue extension).
 pub fn fig9(cfg: &BenchConfig) -> Vec<Table> {
     let sizes: &[u64] = if cfg.quick {
         &[100_000]
@@ -361,6 +361,82 @@ pub fn fig11(cfg: &BenchConfig) -> Table {
     )
 }
 
+// ------------------------------------------------- MultiQueue extension
+
+/// MultiQueue vs the paper's queues: thread-scaling at the two workload
+/// poles (insert-dominated large-range, deleteMin-dominated contended),
+/// plus a `c` (heaps-per-thread) sensitivity row. Not a paper figure —
+/// this is the grid backing the ROADMAP's multi-backend axis.
+pub fn multiqueue_grid(cfg: &BenchConfig) -> Vec<Table> {
+    let threads = thread_sweep(cfg.quick);
+    let algos = [
+        SimAlgo::AlistarhHerlihy,
+        SimAlgo::MultiQueue { queues_per_thread: 4 },
+        SimAlgo::Nuddle { servers: 8 },
+    ];
+    let scenarios: [(&str, u64, u64, f64); 2] = [
+        ("insert-dominated 1M/8M", 1_000_000, 8_000_000, 80.0),
+        ("deleteMin-dominated 100K", 100_000, 200_000, 10.0),
+    ];
+    let mut out = Vec::new();
+    for (label, size, range, pct) in scenarios {
+        // Owned header cells (Table copies them; no need to leak).
+        let header: Vec<String> = std::iter::once("algo".to_string())
+            .chain(threads.iter().map(|s| format!("{s}thr")))
+            .collect();
+        let mut t = Table::new(
+            format!("MultiQueue grid [{label}]: Mops/s vs threads"),
+            &header.iter().map(String::as_str).collect::<Vec<_>>(),
+        );
+        for algo in &algos {
+            let mut row = vec![algo.name().to_string()];
+            for &n in &threads {
+                let m = measure(cfg, format!("{}@{n}", algo.name()), "Mops", |s| {
+                    point(algo, n, size, range, pct, 400 + s as u64)
+                });
+                row.push(fmt(m.value()));
+            }
+            t.row(row);
+        }
+        t.print();
+        let _ = t.write_csv(format!(
+            "{REPORT_DIR}/multiqueue_{}.csv",
+            label.split_whitespace().next().unwrap_or("grid")
+        ));
+        out.push(t);
+    }
+    // c-sensitivity: heaps-per-thread trades rank error for contention.
+    let cs = [1usize, 2, 4, 8];
+    let header: Vec<String> = std::iter::once("metric".to_string())
+        .chain(cs.iter().map(|c| format!("c={c}")))
+        .collect();
+    let mut t = Table::new(
+        "MultiQueue c-sensitivity (64 threads, 1M init, 2M range, 50/50)",
+        &header.iter().map(String::as_str).collect::<Vec<_>>(),
+    );
+    let mut row = vec!["Mops".to_string()];
+    for &c in &cs {
+        let m = measure(cfg, format!("mq-c{c}"), "Mops", |s| {
+            point(
+                &SimAlgo::MultiQueue { queues_per_thread: c },
+                64,
+                1_000_000,
+                2_000_000,
+                50.0,
+                410 + s as u64,
+            )
+        });
+        row.push(fmt(m.value()));
+    }
+    t.row(row);
+    t.print();
+    let _ = t.write_csv(format!("{REPORT_DIR}/multiqueue_c_sensitivity.csv"));
+    // (The 8→64-thread scaling shape is asserted, not just printed, by
+    // `sim::driver::tests::multiqueue_scales_where_exact_deletemin_collapses`.)
+    out.push(t);
+    out
+}
+
 // ---------------------------------------------------- §4.2.1 classifier
 
 /// §4.2.1: classifier accuracy + misprediction cost over random
@@ -566,5 +642,20 @@ mod tests {
     fn classifier_eval_runs() {
         let t = classifier_eval(&quick(), 20);
         assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn fig9_set_includes_multiqueue() {
+        let names: Vec<&str> = SimAlgo::fig9_set().iter().map(|a| a.name()).collect();
+        assert!(names.contains(&"multiqueue"), "{names:?}");
+        assert!(names.contains(&"alistarh_herlihy"));
+    }
+
+    #[test]
+    fn multiqueue_grid_runs() {
+        let tables = multiqueue_grid(&quick());
+        assert_eq!(tables.len(), 3);
+        // Each scenario table carries the three compared algorithms.
+        assert_eq!(tables[0].len(), 3);
     }
 }

@@ -6,7 +6,10 @@
 //! The crate is organised in three tiers:
 //!
 //! 1. **Concurrent library** ([`pq`], [`delegation`], [`adaptive`]) — real
-//!    lock-free / delegation-based priority queues runnable with OS threads.
+//!    lock-free / delegation-based priority queues runnable with OS
+//!    threads, including a relaxed MultiQueue with NUMA-grouped stealing
+//!    ([`pq::MultiQueue`]) usable as an alternative Nuddle/SmartPQ
+//!    backbone.
 //! 2. **NUMA simulation substrate** ([`sim`]) — a deterministic
 //!    discrete-event simulator with a cache-coherence cost model that
 //!    reproduces the paper's 4-node / 64-hardware-context Sandy Bridge-EP

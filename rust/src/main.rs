@@ -28,7 +28,7 @@ smartpq — adaptive concurrent priority queue for NUMA architectures (paper rep
 USAGE: smartpq <command> [options]
 
 COMMANDS
-  bench --figure <fig1|fig7|fig9|fig10|fig11|classifier|ablation|all>
+  bench --figure <fig1|fig7|fig9|fig10|fig11|multiqueue|classifier|ablation|all>
                           regenerate the paper's figures on the simulated
                           4-node testbed (CSV copies under target/reports/)
   train-data [--points N] [--out data/training.csv] [--duration-ms D]
@@ -36,12 +36,15 @@ COMMANDS
                           and emit the classifier training set
   point --algo A --threads N --size S --range R --insert-pct P
                           one simulated measurement (algo: lotan_shavit,
-                          alistarh_fraser, alistarh_herlihy, ffwd, nuddle,
-                          smartpq)
+                          alistarh_fraser, alistarh_herlihy, multiqueue,
+                          ffwd, nuddle, smartpq; --mq-c sets the MultiQueue
+                          heaps-per-thread factor, default 4)
   real  --queue Q --threads N [--seconds S] [--insert-pct P] [--range R]
                           drive the *real* concurrent queue with OS threads
                           (queue: lotan_shavit, alistarh_fraser,
-                          alistarh_herlihy, ffwd, nuddle, smartpq, mutex_heap)
+                          alistarh_herlihy, multiqueue, ffwd, nuddle,
+                          nuddle_multiqueue, smartpq, smartpq_multiqueue,
+                          mutex_heap)
   demo                    SmartPQ adapting across contention phases
   classifier [--query \"threads,size,range,insert_pct\"]
                           show model info; optionally classify one workload
@@ -51,11 +54,12 @@ OPTIONS
   --seed <u64>            RNG seed (default 42)
 ";
 
-fn parse_algo(name: &str) -> Result<SimAlgo> {
+fn parse_algo(name: &str, queues_per_thread: usize) -> Result<SimAlgo> {
     Ok(match name {
         "lotan_shavit" => SimAlgo::LotanShavit,
         "alistarh_fraser" => SimAlgo::AlistarhFraser,
         "alistarh_herlihy" => SimAlgo::AlistarhHerlihy,
+        "multiqueue" => SimAlgo::MultiQueue { queues_per_thread },
         "ffwd" => SimAlgo::Ffwd,
         "nuddle" => SimAlgo::Nuddle { servers: 8 },
         "smartpq" => SimAlgo::SmartPQ {
@@ -73,7 +77,21 @@ fn cmd_bench(args: &Args) -> Result<()> {
         cfg.warmup = 0;
         cfg.samples = 1;
     }
-    let fig = args.str_or("figure", "all");
+    let fig = args.choice(
+        "figure",
+        &[
+            "fig1",
+            "fig7",
+            "fig9",
+            "fig10",
+            "fig11",
+            "multiqueue",
+            "classifier",
+            "ablation",
+            "all",
+        ],
+        "all",
+    )?;
     let run_all = fig == "all";
     if run_all || fig == "fig1" {
         figures::fig1(&cfg);
@@ -90,6 +108,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
     }
     if run_all || fig == "fig11" {
         figures::fig11(&cfg);
+    }
+    if run_all || fig == "multiqueue" {
+        figures::multiqueue_grid(&cfg);
     }
     if run_all || fig == "classifier" {
         figures::classifier_eval(&cfg, args.num_or("workloads", 400)?);
@@ -140,7 +161,8 @@ fn cmd_train_data(args: &Args) -> Result<()> {
 }
 
 fn cmd_point(args: &Args) -> Result<()> {
-    let algo = parse_algo(&args.str_or("algo", "alistarh_herlihy"))?;
+    let mq_c: usize = args.num_or("mq-c", 4)?;
+    let algo = parse_algo(&args.str_or("algo", "alistarh_herlihy"), mq_c)?;
     let threads: usize = args.num_or("threads", 64)?;
     let size: u64 = args.num_or("size", 1024)?;
     let range: u64 = args.num_or("range", 2048)?;
@@ -185,6 +207,46 @@ fn cmd_real(args: &Args) -> Result<()> {
             Arc::new(smartpq::pq::MutexHeapPQ::new()),
             threads, pct, range, init, dur, seed,
         ),
+        "multiqueue" => run_real(
+            Arc::new(smartpq::pq::MultiQueue::new(threads)),
+            threads, pct, range, init, dur, seed,
+        ),
+        "nuddle_multiqueue" => {
+            // MultiQueue as the Nuddle backbone: the servers mutate a
+            // concurrent structure, so the generic wrapper just works.
+            let base = Arc::new(smartpq::pq::MultiQueue::new(threads));
+            run_real(
+                Arc::new(smartpq::delegation::Nuddle::new(
+                    base,
+                    smartpq::delegation::nuddle::NuddleConfig {
+                        servers: 2,
+                        max_clients: threads + 8, // workers + the pre-filling main thread
+                        idle_sleep_us: 50,
+                    },
+                )),
+                threads, pct, range, init, dur, seed,
+            )
+        }
+        "smartpq_multiqueue" => {
+            let base = Arc::new(smartpq::pq::MultiQueue::new(threads));
+            let oracle: Arc<dyn ModeOracle> = smartpq::sim::driver::default_oracle();
+            let q = smartpq::adaptive::SmartPQ::new(
+                base,
+                oracle,
+                smartpq::adaptive::SmartPQConfig {
+                    nuddle: smartpq::delegation::nuddle::NuddleConfig {
+                        servers: 2,
+                        max_clients: threads + 8, // workers + the pre-filling main thread
+                        idle_sleep_us: 50,
+                    },
+                    decision_interval: std::time::Duration::from_millis(200),
+                    initial_mode: smartpq::delegation::nuddle::mode::OBLIVIOUS,
+                    auto_decide: true,
+                },
+            );
+            q.set_threads_hint(threads);
+            run_real(Arc::new(q), threads, pct, range, init, dur, seed)
+        }
         "ffwd" => run_real(
             Arc::new(smartpq::delegation::FfwdPQ::new(threads.max(8), seed)),
             threads, pct, range, init, dur, seed,
@@ -198,7 +260,7 @@ fn cmd_real(args: &Args) -> Result<()> {
                     base,
                     smartpq::delegation::nuddle::NuddleConfig {
                         servers: 2,
-                        max_clients: threads.max(8),
+                        max_clients: threads + 8, // workers + the pre-filling main thread
                         idle_sleep_us: 50,
                     },
                 )),
@@ -216,7 +278,7 @@ fn cmd_real(args: &Args) -> Result<()> {
                 smartpq::adaptive::SmartPQConfig {
                     nuddle: smartpq::delegation::nuddle::NuddleConfig {
                         servers: 2,
-                        max_clients: threads.max(8),
+                        max_clients: threads + 8, // workers + the pre-filling main thread
                         idle_sleep_us: 50,
                     },
                     decision_interval: std::time::Duration::from_millis(200),

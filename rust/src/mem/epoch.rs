@@ -277,8 +277,8 @@ impl<'c> Drop for Guard<'c> {
 
 /// The global reclamation domain shared by all queues in this crate.
 pub fn global() -> &'static Collector {
-    static GLOBAL: once_cell::sync::Lazy<Collector> = once_cell::sync::Lazy::new(Collector::new);
-    &GLOBAL
+    static GLOBAL: std::sync::OnceLock<Collector> = std::sync::OnceLock::new();
+    GLOBAL.get_or_init(Collector::new)
 }
 
 thread_local! {

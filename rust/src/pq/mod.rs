@@ -9,11 +9,21 @@
 //! | `Nuddle`            | [`crate::delegation::nuddle`]                    |
 //! | `SmartPQ`           | [`crate::adaptive::smartpq`]                     |
 //!
+//! Beyond the paper's evaluated set, the crate ships two further
+//! NUMA-oblivious designs usable standalone or as Nuddle/SmartPQ
+//! backbones:
+//!
+//! | Extra algorithm     | Type here                                        |
+//! |---------------------|--------------------------------------------------|
+//! | `multiqueue`        | [`multiqueue::MultiQueue`] (c-way two-choice, NUMA-grouped stealing) |
+//! | `mutex_heap`        | [`mutex_heap::MutexHeapPQ`] (coarse-grained baseline) |
+//!
 //! All queues store `(u64 key, u64 value)` pairs with set semantics on the
 //! key (as in the ASCYLIB benchmarks the paper uses); smaller key = higher
 //! priority.
 
 pub mod lotan_shavit;
+pub mod multiqueue;
 pub mod mutex_heap;
 pub mod seq;
 pub mod skiplist;
@@ -21,6 +31,7 @@ pub mod spraylist;
 pub mod traits;
 
 pub use lotan_shavit::LotanShavitPQ;
+pub use multiqueue::{MultiQueue, MultiQueueParams};
 pub use mutex_heap::MutexHeapPQ;
 pub use seq::SeqSkipListPQ;
 pub use spraylist::{SprayList, SprayParams};

@@ -5,23 +5,7 @@
 use std::collections::BinaryHeap;
 use std::sync::Mutex;
 
-use crate::pq::traits::{ConcurrentPQ, PqStats};
-
-#[derive(PartialEq, Eq)]
-struct Entry(u64, u64);
-
-impl Ord for Entry {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        // Reverse: BinaryHeap is a max-heap.
-        other.0.cmp(&self.0).then(other.1.cmp(&self.1))
-    }
-}
-
-impl PartialOrd for Entry {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
+use crate::pq::traits::{ConcurrentPQ, MinHeapEntry as Entry, PqStats};
 
 /// Mutex-protected binary heap with set semantics on keys.
 pub struct MutexHeapPQ {

@@ -113,6 +113,24 @@ impl PqStats {
     }
 }
 
+/// A `(key, value)` pair ordered for use in a `std::collections::BinaryHeap`
+/// as a *min*-heap (reversed comparison), shared by the heap-backed queues.
+#[derive(Debug, PartialEq, Eq)]
+pub(crate) struct MinHeapEntry(pub u64, pub u64);
+
+impl Ord for MinHeapEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Reverse: BinaryHeap is a max-heap.
+        other.0.cmp(&self.0).then(other.1.cmp(&self.1))
+    }
+}
+
+impl PartialOrd for MinHeapEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
 /// Validate a user key against the sentinel range; panics in debug builds.
 #[inline]
 pub fn check_user_key(key: u64) {

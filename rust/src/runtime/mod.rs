@@ -7,6 +7,10 @@
 //! reassigns ids (see /opt/xla-example/README.md).
 
 pub mod mlp;
+#[cfg(feature = "xla")]
+pub mod pjrt;
+#[cfg(not(feature = "xla"))]
+#[path = "pjrt_stub.rs"]
 pub mod pjrt;
 
 pub use mlp::MlpRegressor;

@@ -1,0 +1,103 @@
+//! API-compatible stand-in for the PJRT executors, compiled when the
+//! `xla` feature is off (the default in the offline build, which has no
+//! `xla_extension` to link). Loads fail with a descriptive error instead
+//! of at link time, so everything that *optionally* consults the XLA
+//! artifacts — the `classifier` subcommand, the adaptive demo, the
+//! agreement tests — degrades to the native tree and keeps working.
+
+use std::path::Path;
+
+use crate::classifier::features::{Features, N_FEATURES};
+use crate::classifier::{ModeClass, ModeOracle};
+use crate::util::error::{Error, Result};
+
+/// Batch size the artifacts were compiled for (aot.py ARTIFACT_BATCH).
+pub const ARTIFACT_BATCH: usize = 16;
+
+fn unavailable(path: &Path) -> Error {
+    if !path.exists() {
+        // Same error class as the real runtime: callers probe for the
+        // artifact before loading, so a missing file is a config problem.
+        Error::Config(format!(
+            "missing artifact {} — run `make artifacts` first",
+            path.display()
+        ))
+    } else {
+        Error::Xla(format!(
+            "{} exists but this binary was built without the `xla` feature \
+             (rebuild with --features xla and a vendored xla crate)",
+            path.display()
+        ))
+    }
+}
+
+/// Stub for the classifier artifact executor (`dtree.hlo.txt`).
+pub struct XlaClassifier {
+    /// Inference counter (observability; always 0 in the stub).
+    pub invocations: std::sync::atomic::AtomicU64,
+}
+
+impl XlaClassifier {
+    /// Always fails: the stub cannot execute HLO.
+    pub fn load(artifact_dir: impl AsRef<Path>) -> Result<XlaClassifier> {
+        Err(unavailable(&artifact_dir.as_ref().join("dtree.hlo.txt")))
+    }
+
+    /// Unreachable in practice (`load` never succeeds); kept for API parity.
+    pub fn predict_batch(&self, _xs: &[[f32; N_FEATURES]]) -> Result<Vec<ModeClass>> {
+        Err(Error::Xla("built without the `xla` feature".into()))
+    }
+}
+
+impl ModeOracle for XlaClassifier {
+    fn predict(&self, _f: &Features) -> ModeClass {
+        ModeClass::Neutral
+    }
+
+    fn oracle_name(&self) -> &'static str {
+        "dtree-xla-stub"
+    }
+}
+
+/// Stub for the fused decider artifact executor (`decider.hlo.txt`).
+pub struct XlaDecider {}
+
+impl XlaDecider {
+    /// Always fails: the stub cannot execute HLO.
+    pub fn load(artifact_dir: impl AsRef<Path>) -> Result<XlaDecider> {
+        Err(unavailable(&artifact_dir.as_ref().join("decider.hlo.txt")))
+    }
+
+    /// Unreachable in practice (`load` never succeeds); kept for API parity.
+    pub fn decide_batch(
+        &self,
+        _xs: &[[f32; N_FEATURES]],
+    ) -> Result<(Vec<ModeClass>, Vec<[f32; 2]>)> {
+        Err(Error::Xla("built without the `xla` feature".into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_artifact_is_config_error() {
+        match XlaClassifier::load("/nonexistent-dir") {
+            Ok(_) => panic!("stub load succeeded"),
+            Err(err) => assert!(matches!(err, Error::Config(_)), "{err}"),
+        }
+    }
+
+    #[test]
+    fn present_artifact_reports_missing_feature() {
+        let dir = std::env::temp_dir().join("smartpq-pjrt-stub-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("dtree.hlo.txt"), "HloModule stub").unwrap();
+        match XlaClassifier::load(&dir) {
+            Ok(_) => panic!("stub load succeeded"),
+            Err(err) => assert!(matches!(err, Error::Xla(_)), "{err}"),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

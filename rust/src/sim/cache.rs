@@ -206,6 +206,13 @@ pub mod lines {
     pub fn min_region(i: usize) -> LineId {
         LineId(0x4000_0000 + (i as u64 & 0xFF))
     }
+
+    /// Head line of MultiQueue internal heap `i` (lock word + cached top).
+    /// Capped at 1024 modeled lines: beyond that the heaps are effectively
+    /// contention-free and aliasing is harmless.
+    pub fn mq(i: usize) -> LineId {
+        LineId(0x5000_0000 + (i as u64 & 0x3FF))
+    }
 }
 
 #[cfg(test)]

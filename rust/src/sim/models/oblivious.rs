@@ -26,6 +26,13 @@ pub enum ObvKind {
     AlistarhFraser,
     /// SprayList over Herlihy's lazy list [2,34].
     AlistarhHerlihy,
+    /// MultiQueue (Rihani et al.) with `queues_per_thread` heaps per
+    /// thread, per-node grouping and 1/8-probability batched stealing
+    /// (see [`crate::pq::MultiQueue`]).
+    MultiQueue {
+        /// Heaps per expected thread (`c`).
+        queues_per_thread: usize,
+    },
 }
 
 impl ObvKind {
@@ -35,6 +42,7 @@ impl ObvKind {
             ObvKind::LotanShavit => "lotan_shavit",
             ObvKind::AlistarhFraser => "alistarh_fraser",
             ObvKind::AlistarhHerlihy => "alistarh_herlihy",
+            ObvKind::MultiQueue { .. } => "multiqueue",
         }
     }
 }
@@ -99,6 +107,9 @@ pub struct ObvCtx<'a> {
 
 /// Price one insert; returns (cost_ns, succeeded).
 pub fn insert_cost(kind: ObvKind, p: &ObvParams, c: &mut ObvCtx<'_>) -> (f64, bool) {
+    if let ObvKind::MultiQueue { queues_per_thread } = kind {
+        return insert_mq(queues_per_thread, c);
+    }
     let mut ns = c.cm.op_compute;
     // The traversal descends *through* the head tower lines — the very
     // lines concurrent removals keep dirtying (tower funnel). Under a
@@ -142,6 +153,7 @@ pub fn insert_cost(kind: ObvKind, p: &ObvParams, c: &mut ObvCtx<'_>) -> (f64, bo
         ObvKind::AlistarhHerlihy => {
             ns += 2.0 * p.herlihy_lock_cost + c.cm.cas(false, true);
         }
+        ObvKind::MultiQueue { .. } => unreachable!("dispatched to insert_mq above"),
     }
     // Conflicting concurrent inserts next to the same predecessor.
     let conflict_p = (c_ins / (c.q.size().max(64) as f64)).min(1.0);
@@ -155,6 +167,7 @@ pub fn delete_cost(kind: ObvKind, p: &ObvParams, c: &mut ObvCtx<'_>) -> (f64, bo
     match kind {
         ObvKind::LotanShavit => delete_exact(p, c, true),
         ObvKind::AlistarhFraser | ObvKind::AlistarhHerlihy => delete_spray(kind, p, c),
+        ObvKind::MultiQueue { queues_per_thread } => delete_mq(queues_per_thread, c),
     }
 }
 
@@ -252,6 +265,115 @@ fn delete_spray(kind: ObvKind, p: &ObvParams, c: &mut ObvCtx<'_>) -> (f64, bool)
         ObvKind::AlistarhFraser => p.fraser_update_overhead * c.cm.cas(false, true),
         _ => 2.0 * p.herlihy_lock_cost,
     };
+    (ns, true)
+}
+
+// --------------------------------------------------------- MultiQueue
+//
+// MultiQueue pricing mirrors the real implementation in
+// `pq/multiqueue.rs`: `c·P` padded binary heaps partitioned into one
+// group per active socket; inserts and two-choice deleteMins touch only
+// the caller's group (node-local ownership transfers), and a
+// 1/`MQ_STEAL_PROB` fraction of deleteMins pays one remote dirty
+// transfer amortized over a `MQ_STEAL_BATCH`-element batch. There is no
+// globally hot line, which is exactly why the design scales where the
+// skip-list head does not.
+
+/// Steal probability denominator (matches `MultiQueueParams` default).
+const MQ_STEAL_PROB: f64 = 8.0;
+/// Elements moved per steal (matches `MultiQueueParams` default).
+const MQ_STEAL_BATCH: f64 = 8.0;
+
+/// Heap-grid geometry for the current phase: (total heaps, heaps per
+/// active node).
+fn mq_grid(queues_per_thread: usize, c: &ObvCtx<'_>) -> (usize, usize) {
+    let nodes = c.active_nodes.max(1);
+    let want = (queues_per_thread.max(1) * c.threads.max(1)).max(nodes);
+    let per_node = want.div_ceil(nodes);
+    (per_node * nodes, per_node)
+}
+
+/// Cost of one sift through a heap of `size/nq` elements (node-local).
+fn mq_sift(nq: usize, c: &mut ObvCtx<'_>) -> f64 {
+    let heap_size = (c.q.size() / nq as u64).max(1);
+    let levels = (heap_size as f64 + 2.0).log2();
+    let footprint = c.q.footprint_bytes(c.cm.node_bytes) / nq as f64;
+    levels * (c.cm.visit_compute + c.cm.interior_visit(footprint, 1.0))
+}
+
+/// Probability another thread is racing for the same heap's lock.
+fn mq_collision(nq: usize, c: &ObvCtx<'_>) -> f64 {
+    ((c.threads.saturating_sub(1)) as f64 / nq as f64).min(1.0)
+}
+
+/// The caller's heap group and a random heap index inside it.
+fn mq_local_pick(per_node: usize, c: &mut ObvCtx<'_>) -> usize {
+    let node_base = (c.node as usize % c.active_nodes.max(1)) * per_node;
+    node_base + (c.rng.next_u64() % per_node as u64) as usize
+}
+
+/// Price one MultiQueue insert.
+fn insert_mq(queues_per_thread: usize, c: &mut ObvCtx<'_>) -> (f64, bool) {
+    let (nq, per_node) = mq_grid(queues_per_thread, c);
+    let mut ns = c.cm.op_compute;
+    // Duplicate probe against the sharded key set: one mostly-local line.
+    ns += c.cm.llc_hit;
+    if !c.q.try_insert(c.now) {
+        return (ns, false);
+    }
+    ns += c.cm.alloc;
+    // Lock + push on a random heap of the local group. The lock word is
+    // the heap's head line: an RMW that at worst bounces between cores of
+    // the *same* socket (the directory prices exactly that).
+    let qi = mq_local_pick(per_node, c);
+    ns += c.dir.write(c.cm, c.now, lines::mq(qi), c.node, c.ctx, true);
+    ns += mq_sift(nq, c);
+    ns += mq_collision(nq, c) * c.cm.cas_retry;
+    (ns, true)
+}
+
+/// Price one MultiQueue deleteMin (two-choice + stealing).
+fn delete_mq(queues_per_thread: usize, c: &mut ObvCtx<'_>) -> (f64, bool) {
+    let (nq, per_node) = mq_grid(queues_per_thread, c);
+    let mut ns = c.cm.op_compute;
+    // Sample two cached tops from the local group (plain reads).
+    let qa = mq_local_pick(per_node, c);
+    let qb = mq_local_pick(per_node, c);
+    ns += c.dir.read(c.cm, c.now, lines::mq(qa), c.node, c.ctx);
+    ns += c.dir.read(c.cm, c.now, lines::mq(qb), c.node, c.ctx);
+    // The NUMA stealing path: one remote heap's line (usually dirty on
+    // its home socket) plus the batch re-insert, amortized over the
+    // batch. This is the *only* cross-socket traffic of the design.
+    if c.active_nodes > 1 && c.rng.gen_f64() < 1.0 / MQ_STEAL_PROB {
+        let victim = (c.rng.next_u64() % nq as u64) as usize;
+        ns += (c.dir.write(c.cm, c.now, lines::mq(victim), c.node, c.ctx, true)
+            + c.cm.op_compute)
+            / MQ_STEAL_BATCH.max(1.0);
+    }
+    if !c.q.try_delete_min(c.now) {
+        // Empty: the exact sweep scanned the local group's tops.
+        ns += per_node as f64 * c.cm.visit_compute;
+        return (ns, false);
+    }
+    // Near-empty degradation: when the queue holds fewer elements than
+    // heaps, most sampled tops are empty and the two-choice loop decays
+    // into repeated resampling plus steals — MultiQueues thrash on tiny
+    // queues just like sprays collapse there (Fig. 1 regime).
+    if c.q.size() < 2 * nq as u64 {
+        let empty_frac = 1.0 - (c.q.size() as f64 / (2 * nq) as f64);
+        let probe = mq_local_pick(per_node, c);
+        ns += empty_frac
+            * (per_node as f64 * c.cm.visit_compute
+                + c.dir.read(c.cm, c.now, lines::mq(probe), c.node, c.ctx));
+    }
+    // Lock + pop on the winning heap. The statistical model tracks no
+    // per-heap contents, so which of the two samples "won" is immaterial
+    // to the price — charge the lock RMW on the first.
+    ns += c.dir.write(c.cm, c.now, lines::mq(qa), c.node, c.ctx, true);
+    ns += mq_sift(nq, c);
+    ns += mq_collision(nq, c) * c.cm.cas_retry;
+    // Release the popped key from the sharded set.
+    ns += c.cm.llc_hit;
     (ns, true)
 }
 
@@ -443,6 +565,70 @@ mod tests {
         );
         assert!(!ok);
         assert!(ns < 1000.0);
+    }
+
+    #[test]
+    fn multiqueue_delete_shrugs_off_contention() {
+        // Same contended setup as `delete_contention_raises_cost`: the
+        // exact deleteMin pays the claimed-prefix storm, the MultiQueue
+        // only its node-local two-choice pop.
+        let cm = CostModel::default();
+        let p = ObvParams::default();
+        let mk = || {
+            let mut q = QueueModel::new(100_000, 200_000, 1);
+            let mut dir = Directory::new();
+            for i in 0..40 {
+                q.claims.push(1e6 - 10.0 * i as f64);
+                dir.write(&cm, 0.0, lines::min_region(i), 3, 99, true);
+            }
+            (q, dir)
+        };
+        let (mut q1, mut d1) = mk();
+        let mut r1 = Rng::new(2);
+        let (exact, ok1) = delete_cost(
+            ObvKind::LotanShavit,
+            &p,
+            &mut ctx(&cm, &mut q1, &mut d1, &mut r1, 64, 4),
+        );
+        let (mut q2, mut d2) = mk();
+        let mut r2 = Rng::new(2);
+        let (mq, ok2) = delete_cost(
+            ObvKind::MultiQueue { queues_per_thread: 4 },
+            &p,
+            &mut ctx(&cm, &mut q2, &mut d2, &mut r2, 64, 4),
+        );
+        assert!(ok1 && ok2);
+        assert!(
+            mq < 0.5 * exact,
+            "contended MultiQueue deleteMin ({mq:.0}ns) should be far below exact ({exact:.0}ns)"
+        );
+    }
+
+    #[test]
+    fn multiqueue_ops_succeed_and_fail_like_the_model() {
+        let cm = CostModel::default();
+        let p = ObvParams::default();
+        // Empty queue: deleteMin fails cheaply.
+        let mut q = QueueModel::new(0, 1000, 1);
+        let mut dir = Directory::new();
+        let mut rng = Rng::new(5);
+        let (_, ok) = delete_cost(
+            ObvKind::MultiQueue { queues_per_thread: 2 },
+            &p,
+            &mut ctx(&cm, &mut q, &mut dir, &mut rng, 8, 1),
+        );
+        assert!(!ok);
+        // Saturated key range: inserts are duplicates.
+        let mut q2 = QueueModel::new(1000, 1000, 1);
+        let mut d2 = Directory::new();
+        let mut r2 = Rng::new(5);
+        let (dup_ns, ok2) = insert_cost(
+            ObvKind::MultiQueue { queues_per_thread: 2 },
+            &p,
+            &mut ctx(&cm, &mut q2, &mut d2, &mut r2, 8, 1),
+        );
+        assert!(!ok2);
+        assert!(dup_ns < 500.0, "duplicate probe should be cheap: {dup_ns}");
     }
 
     #[test]

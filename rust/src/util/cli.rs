@@ -135,6 +135,22 @@ impl Args {
     pub fn positionals(&self) -> &[String] {
         &self.positionals
     }
+
+    /// String option constrained to a closed set of values. Unknown values
+    /// are a configuration error that names the alternatives (instead of
+    /// being silently ignored downstream).
+    pub fn choice(&self, key: &str, allowed: &[&str], default: &str) -> Result<String> {
+        debug_assert!(allowed.contains(&default), "default not in allowed set");
+        let v = self.get(key).unwrap_or(default);
+        if allowed.contains(&v) {
+            Ok(v.to_string())
+        } else {
+            Err(Error::Config(format!(
+                "--{key}: unknown value {v:?} (expected one of: {})",
+                allowed.join(", ")
+            )))
+        }
+    }
 }
 
 #[cfg(test)]
@@ -195,5 +211,21 @@ mod tests {
     #[test]
     fn malformed_option_rejected() {
         assert!(Args::parse(["--=v"]).is_err());
+    }
+
+    #[test]
+    fn choice_accepts_listed_values_and_default() {
+        let a = parse(&["bench", "--figure", "fig9"]);
+        assert_eq!(a.choice("figure", &["fig1", "fig9", "all"], "all").unwrap(), "fig9");
+        let b = parse(&["bench"]);
+        assert_eq!(b.choice("figure", &["fig1", "fig9", "all"], "all").unwrap(), "all");
+    }
+
+    #[test]
+    fn choice_rejects_unknown_value() {
+        let a = parse(&["bench", "--figure", "fig99"]);
+        let err = a.choice("figure", &["fig1", "fig9", "all"], "all").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("fig99") && msg.contains("fig9"), "{msg}");
     }
 }

@@ -5,9 +5,8 @@
 //! tables on stdout stay machine-parseable.
 
 use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
 use std::time::Instant;
-
-use once_cell::sync::Lazy;
 
 /// Log severity, ordered.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
@@ -49,7 +48,7 @@ impl Level {
 }
 
 static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX); // MAX = uninitialized
-static START: Lazy<Instant> = Lazy::new(Instant::now);
+static START: OnceLock<Instant> = OnceLock::new();
 
 fn init_from_env() -> u8 {
     let lvl = std::env::var("SMARTPQ_LOG")
@@ -87,7 +86,7 @@ pub fn enabled(l: Level) -> bool {
 /// Emit a record (used by the macros; call via `info!` etc.).
 pub fn emit(l: Level, module: &str, msg: std::fmt::Arguments<'_>) {
     if enabled(l) {
-        let t = START.elapsed();
+        let t = START.get_or_init(Instant::now).elapsed();
         eprintln!(
             "[{:>9.3}s {} {}] {}",
             t.as_secs_f64(),

@@ -11,7 +11,7 @@ use smartpq::delegation::nuddle::{mode, NuddleConfig};
 use smartpq::delegation::{FfwdPQ, Nuddle};
 use smartpq::pq::spraylist::AlistarhHerlihy;
 use smartpq::pq::traits::ConcurrentPQ;
-use smartpq::pq::{LotanShavitPQ, SprayList};
+use smartpq::pq::{LotanShavitPQ, MultiQueue, SprayList};
 use smartpq::sim::{run_workload, SimAlgo, Workload};
 
 // ---------------------------------------------------------- real plane
@@ -56,8 +56,41 @@ fn differential_queues_agree_on_op_sequences() {
     let (n_spray, _) = run(&spray);
     let ffwd = FfwdPQ::new(8, 1);
     let (n_ffwd, _) = run(&ffwd);
+    let mq = MultiQueue::new(2);
+    let (n_mq, _) = run(&mq);
     assert_eq!(n_ref, n_spray, "spray kept a different element count");
     assert_eq!(n_ref, n_ffwd, "ffwd kept a different element count");
+    assert_eq!(n_ref, n_mq, "multiqueue kept a different element count");
+}
+
+/// Drain-to-same-multiset: after an identical insert-only prefix, a full
+/// drain of every implementation must return exactly the inserted key
+/// multiset — relaxed ordering may differ, membership may not.
+#[test]
+fn differential_drain_returns_same_multiset() {
+    let mut rng = smartpq::util::rng::Rng::new(99);
+    let keys: Vec<u64> = (0..1500u64).map(|_| 1 + rng.gen_range(1 << 20)).collect();
+    let drain = |q: &dyn ConcurrentPQ| -> Vec<u64> {
+        let mut accepted: Vec<u64> = Vec::new();
+        for &k in &keys {
+            if q.insert(k, k) {
+                accepted.push(k);
+            }
+        }
+        accepted.sort_unstable();
+        let mut out: Vec<u64> = std::iter::from_fn(|| q.delete_min().map(|(k, _)| k)).collect();
+        out.sort_unstable();
+        assert_eq!(out, accepted, "{}: drain lost or invented elements", q.name());
+        out
+    };
+    let lotan = LotanShavitPQ::new();
+    let reference = drain(&lotan);
+    let spray: AlistarhHerlihy = SprayList::new(2);
+    assert_eq!(drain(&spray), reference);
+    let mq = MultiQueue::new(2);
+    assert_eq!(drain(&mq), reference);
+    let ffwd = FfwdPQ::new(8, 1);
+    assert_eq!(drain(&ffwd), reference);
 }
 
 /// Nuddle over each base: delegated and direct access observe one
@@ -89,6 +122,66 @@ fn nuddle_over_spraylist_composes() {
         }
     }
     assert_eq!(n, 100);
+}
+
+/// MultiQueue as the Nuddle backbone: delegated and direct access observe
+/// one structure — the property that makes it a valid SmartPQ base.
+#[test]
+fn nuddle_over_multiqueue_composes() {
+    let base = Arc::new(MultiQueue::new(4));
+    let q = Nuddle::new(
+        base.clone(),
+        NuddleConfig {
+            servers: 2,
+            max_clients: 16,
+            idle_sleep_us: 20,
+        },
+    );
+    for k in 1..=100u64 {
+        assert!(q.insert(k * 2, k));
+    }
+    // Direct view sees them all.
+    assert_eq!(base.len(), 100);
+    assert!(!q.insert(2, 0), "duplicate not visible through delegation");
+    // Mixed delegated + direct deletions drain exactly 100.
+    let mut n = 0;
+    loop {
+        let a = q.delete_min().is_some();
+        let b = base.delete_min().is_some();
+        n += a as usize + b as usize;
+        if !a && !b {
+            break;
+        }
+    }
+    assert_eq!(n, 100);
+}
+
+/// SmartPQ over a MultiQueue base: both modes mutate the same structure,
+/// elements survive a forced mode flip.
+#[test]
+fn smartpq_over_multiqueue_switches_modes() {
+    let base = Arc::new(MultiQueue::new(4));
+    let q = SmartPQ::new(
+        base,
+        Arc::new(ThresholdOracle),
+        SmartPQConfig {
+            nuddle: NuddleConfig {
+                servers: 1,
+                max_clients: 8,
+                idle_sleep_us: 10,
+            },
+            decision_interval: std::time::Duration::from_secs(3600),
+            initial_mode: mode::OBLIVIOUS,
+            auto_decide: false,
+        },
+    );
+    assert!(q.insert(10, 1));
+    q.force_mode(mode::AWARE);
+    assert!(q.insert(20, 2));
+    assert!(!q.insert(10, 9), "duplicate visible across modes");
+    let mut ks: Vec<u64> = std::iter::from_fn(|| q.delete_min().map(|(k, _)| k)).collect();
+    ks.sort_unstable();
+    assert_eq!(ks, vec![10, 20]);
 }
 
 /// SmartPQ with the *trained* oracle on the real plane: decisions flow,

@@ -5,7 +5,7 @@
 use std::sync::Arc;
 
 use smartpq::pq::traits::ConcurrentPQ;
-use smartpq::pq::{LotanShavitPQ, SeqSkipListPQ, SprayList};
+use smartpq::pq::{LotanShavitPQ, MultiQueue, MultiQueueParams, SeqSkipListPQ, SprayList};
 use smartpq::util::proptest::{forall, Config};
 
 type Herlihy = SprayList<smartpq::pq::skiplist::herlihy::HerlihySkipList>;
@@ -23,20 +23,25 @@ fn prop_sequential_equivalence_with_serial_oracle() {
         let mut oracle = SeqSkipListPQ::new(1);
         let lotan = LotanShavitPQ::new();
         let spray: Herlihy = SprayList::new(2);
+        let mq = MultiQueue::new(2);
         for &(ins, key) in &ops {
             if ins {
                 assert_eq!(oracle.insert(key, key), lotan.insert(key, key));
                 spray.insert(key, key);
+                assert!(mq.insert(key, key), "multiqueue rejected a fresh key");
             } else {
                 let a = oracle.delete_min().is_some();
                 let b = lotan.delete_min().is_some();
                 let c = spray.delete_min().is_some();
+                let d = mq.delete_min().is_some();
                 assert_eq!(a, b, "lotan emptiness diverged");
                 assert_eq!(a, c, "spray emptiness diverged");
+                assert_eq!(a, d, "multiqueue emptiness diverged");
             }
         }
         assert_eq!(oracle.len(), lotan.len());
         assert_eq!(oracle.len(), spray.len());
+        assert_eq!(oracle.len(), mq.len());
     });
 }
 
@@ -84,6 +89,97 @@ fn prop_spray_relaxation_window() {
                 "spray for p={p} landed at {k}, beyond 4x the theoretical window {window}"
             );
         }
+    });
+}
+
+/// MultiQueue conservation over randomized op sequences and randomized
+/// tuning (heaps-per-thread, node groups, steal knobs): no element is
+/// ever lost or duplicated, and a full drain returns exactly the live
+/// key set.
+#[test]
+fn prop_multiqueue_no_loss_no_duplication() {
+    forall(Config::default().cases(20), |g| {
+        let params = MultiQueueParams {
+            queues_per_thread: g.usize(1..6),
+            numa_nodes: g.usize(1..5),
+            steal_prob: g.u64(1..12) as u32,
+            steal_batch: g.usize(1..12),
+        };
+        let q = MultiQueue::with_params(g.usize(1..8), params);
+        let n_ops = g.usize(1..600);
+        let mut live = std::collections::BTreeSet::new();
+        for i in 0..n_ops {
+            // Small key domain so duplicate inserts genuinely occur.
+            let key = 1 + g.u64(0..200);
+            if g.bool(0.6) {
+                assert_eq!(
+                    q.insert(key, i as u64),
+                    live.insert(key),
+                    "set semantics diverged on key {key}"
+                );
+            } else {
+                match q.delete_min() {
+                    Some((k, _)) => assert!(live.remove(&k), "popped key {k} not live"),
+                    None => assert!(live.is_empty(), "queue claimed empty, {} live", live.len()),
+                }
+            }
+            assert_eq!(q.len(), live.len());
+        }
+        let mut drained: Vec<u64> =
+            std::iter::from_fn(|| q.delete_min().map(|(k, _)| k)).collect();
+        drained.sort_unstable();
+        assert_eq!(
+            drained,
+            live.iter().copied().collect::<Vec<u64>>(),
+            "drain disagrees with the live set"
+        );
+    });
+}
+
+/// MultiQueue rank relaxation: with a single node group (the pure
+/// two-choice regime) the sampled deleteMin stays within the expected
+/// O(P·c) window of the true minimum — the defining MultiQueue bound.
+#[test]
+fn prop_multiqueue_rank_relaxation_bound() {
+    forall(Config::default().cases(8), |g| {
+        let p = g.usize(1..9);
+        let c = *g.choose(&[2usize, 4, 8]);
+        let q = MultiQueue::with_params(
+            p,
+            MultiQueueParams {
+                queues_per_thread: c,
+                numa_nodes: 1,
+                steal_prob: 8,
+                steal_batch: 8,
+            },
+        );
+        let nq = q.queue_count() as u64;
+        let n = 4000u64;
+        for k in 1..=n {
+            assert!(q.insert(k, k));
+        }
+        let mut live: std::collections::BTreeSet<u64> = (1..=n).collect();
+        let mut total_rank = 0u64;
+        let deletes = 150u64;
+        for _ in 0..deletes {
+            let (k, _) = q.delete_min().expect("nonempty");
+            let rank = live.range(..k).count() as u64;
+            // Tail bound: the worst single draw sits well under ~10·nq
+            // empirically; 32·nq leaves a 3x margin while still being
+            // O(P·c) and vastly tighter than random popping (~n/2).
+            assert!(
+                rank <= 32 * nq,
+                "rank error {rank} beyond 32x the {nq}-queue window"
+            );
+            total_rank += rank;
+            assert!(live.remove(&k));
+        }
+        // Mean bound: expectation is ~1·nq; allow 4x.
+        let avg = total_rank as f64 / deletes as f64;
+        assert!(
+            avg <= 4.0 * nq as f64,
+            "average rank error {avg:.1} beyond 4x the {nq}-queue window"
+        );
     });
 }
 
@@ -135,10 +231,13 @@ fn prop_sim_invariants() {
         let range = size * g.u64(2..20);
         let pct = g.u64(0..101) as f64;
         let seed = g.u64(0..1 << 32);
-        let algo = match g.usize(0..4) {
+        let algo = match g.usize(0..5) {
             0 => SimAlgo::LotanShavit,
             1 => SimAlgo::AlistarhHerlihy,
             2 => SimAlgo::Ffwd,
+            3 => SimAlgo::MultiQueue {
+                queues_per_thread: g.usize(1..6),
+            },
             _ => SimAlgo::Nuddle { servers: 4 },
         };
         let w = Workload::single(size, range, threads, pct, 1.0, seed);

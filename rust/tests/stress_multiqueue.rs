@@ -1,0 +1,141 @@
+//! Multi-threaded stress: N OS threads hammer insert/deleteMin on the
+//! MultiQueue — bare and wrapped in Nuddle — and the element multiset
+//! must balance exactly under real interleavings:
+//!
+//!     inserted == deleted ∪ remaining      (and the union is disjoint)
+//!
+//! Per-thread key partitions make the multiset check exact: every thread
+//! inserts from its own residue class, so a lost wakeup, a double pop or
+//! a stranded steal-batch element shows up as a concrete missing/extra
+//! key rather than a count drift.
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
+
+use smartpq::delegation::nuddle::NuddleConfig;
+use smartpq::delegation::Nuddle;
+use smartpq::pq::traits::ConcurrentPQ;
+use smartpq::pq::{MultiQueue, MultiQueueParams};
+
+/// Run `threads` workers over `q`; return (inserted, deleted) key sets.
+fn hammer<Q: ConcurrentPQ + 'static>(
+    q: &Arc<Q>,
+    threads: usize,
+    ops_per_thread: usize,
+    seed: u64,
+) -> (BTreeSet<u64>, BTreeSet<u64>) {
+    let workers: Vec<_> = (0..threads as u64)
+        .map(|t| {
+            let q = q.clone();
+            let stride = threads as u64;
+            std::thread::spawn(move || {
+                let mut rng = smartpq::util::rng::Rng::stream(seed, t);
+                let mut inserted = BTreeSet::new();
+                let mut deleted = BTreeSet::new();
+                let mut next = 0u64;
+                for _ in 0..ops_per_thread {
+                    if rng.gen_bool(0.55) {
+                        // Unique per-thread key: 1 + t + stride*i.
+                        let key = 1 + t + stride * next;
+                        next += 1;
+                        if q.insert(key, t) {
+                            assert!(inserted.insert(key), "key {key} accepted twice");
+                        } else {
+                            panic!("fresh key {key} rejected");
+                        }
+                    } else if let Some((k, _)) = q.delete_min() {
+                        assert!(deleted.insert(k), "key {k} popped twice by one thread");
+                    }
+                }
+                (inserted, deleted)
+            })
+        })
+        .collect();
+    let mut inserted = BTreeSet::new();
+    let mut deleted = BTreeSet::new();
+    for w in workers {
+        let (i, d) = w.join().expect("worker panicked");
+        for k in i {
+            assert!(inserted.insert(k), "key {k} inserted by two threads");
+        }
+        for k in d {
+            assert!(deleted.insert(k), "key {k} popped by two threads");
+        }
+    }
+    (inserted, deleted)
+}
+
+fn check_conservation<Q: ConcurrentPQ + 'static>(q: Arc<Q>, threads: usize, ops: usize, seed: u64) {
+    let (inserted, deleted) = hammer(&q, threads, ops, seed);
+    let mut remaining = BTreeSet::new();
+    while let Some((k, _)) = q.delete_min() {
+        assert!(remaining.insert(k), "key {k} drained twice");
+    }
+    // deleted and remaining must partition inserted.
+    for k in &deleted {
+        assert!(inserted.contains(k), "popped key {k} never inserted");
+        assert!(!remaining.contains(k), "key {k} both popped and remaining");
+    }
+    for k in &remaining {
+        assert!(inserted.contains(k), "remaining key {k} never inserted");
+    }
+    assert_eq!(
+        deleted.len() + remaining.len(),
+        inserted.len(),
+        "conservation broken: {} inserted, {} deleted, {} remaining",
+        inserted.len(),
+        deleted.len(),
+        remaining.len()
+    );
+}
+
+#[test]
+fn multiqueue_conserves_under_contention() {
+    let q = Arc::new(MultiQueue::new(8));
+    check_conservation(q, 8, 2500, 0xA11CE);
+}
+
+#[test]
+fn multiqueue_single_node_layout_conserves() {
+    let q = Arc::new(MultiQueue::with_params(
+        6,
+        MultiQueueParams {
+            queues_per_thread: 2,
+            numa_nodes: 1,
+            steal_prob: 8,
+            steal_batch: 8,
+        },
+    ));
+    check_conservation(q, 6, 2000, 0xB0B);
+}
+
+#[test]
+fn multiqueue_aggressive_stealing_conserves() {
+    // Steal on (almost) every deleteMin with a large batch: the highest
+    // pressure on the batch re-insert path, where elements are briefly in
+    // flight between heaps.
+    let q = Arc::new(MultiQueue::with_params(
+        6,
+        MultiQueueParams {
+            queues_per_thread: 2,
+            numa_nodes: 3,
+            steal_prob: 1,
+            steal_batch: 16,
+        },
+    ));
+    check_conservation(q, 6, 2000, 0xCAFE);
+}
+
+#[test]
+fn nuddle_over_multiqueue_conserves_under_contention() {
+    let base = Arc::new(MultiQueue::new(8));
+    let q = Arc::new(Nuddle::new(
+        base,
+        NuddleConfig {
+            servers: 2,
+            max_clients: 16,
+            idle_sleep_us: 20,
+        },
+    ));
+    check_conservation(q, 6, 1500, 0xD00D);
+}
