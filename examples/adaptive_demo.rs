@@ -45,7 +45,7 @@ fn main() {
             servers: 8,
             oracle: Some(oracle.clone()),
         },
-        SimAlgo::Nuddle { servers: 8 },
+        SimAlgo::nuddle(8),
         SimAlgo::AlistarhHerlihy,
     ];
     let mut overall = Vec::new();

@@ -1,101 +1,42 @@
-//! Discrete-event simulation (pending event set) — the paper's other
-//! motivating workload (§1: "discrete event simulations [49,75]").
+//! Discrete-event simulation (PHOLD pending-event set) — the paper's
+//! other motivating workload (§1).
 //!
-//! A PHOLD-style model: M logical processes exchange timestamped events;
-//! the pending-event set is a concurrent priority queue keyed by event
-//! time. Worker threads repeatedly deleteMin, advance the LP, and insert
-//! follow-up events. With a relaxed queue this is speculative-but-safe
-//! here because handlers are independent (no rollback needed for PHOLD
-//! statistics).
+//! This is a thin wrapper over the `smartpq::workloads` subsystem. The
+//! subsystem's event keys are `(time << 32) | sequence` — globally unique
+//! — which fixes the event-loss bug this example used to have: the old
+//! `(time << 6) | (lp & 63)` packing collided for more than 64 LPs and
+//! silently dropped events under the queue's set semantics. Every run now
+//! checks conservation (events created == consumed + pending).
 //!
 //!     cargo run --release --example event_simulation
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
-use std::time::Instant;
+use std::time::Duration;
 
-use smartpq::pq::traits::ConcurrentPQ;
-use smartpq::pq::{LotanShavitPQ, SprayList};
-use smartpq::util::rng::Rng;
-
-fn phold<Q: ConcurrentPQ + 'static>(q: Arc<Q>, lps: usize, horizon: u64, threads: usize, seed: u64) -> (u64, u64) {
-    // Seed one initial event per LP. Key = (event_time << 6) | lp-hash so
-    // simultaneous events at different LPs stay distinct (set semantics).
-    {
-        let mut rng = Rng::new(seed);
-        for lp in 0..lps {
-            let t0 = 1 + rng.gen_range(1000);
-            q.insert((t0 << 6) | (lp as u64 & 63), lp as u64);
-        }
-    }
-    let processed = Arc::new(AtomicU64::new(0));
-    let max_time = Arc::new(AtomicU64::new(0));
-    let workers: Vec<_> = (0..threads)
-        .map(|t| {
-            let q = q.clone();
-            let processed = processed.clone();
-            let max_time = max_time.clone();
-            std::thread::spawn(move || {
-                let mut rng = Rng::stream(seed, t as u64 + 1);
-                let mut empty_polls = 0;
-                loop {
-                    match q.delete_min() {
-                        Some((key, lp)) => {
-                            empty_polls = 0;
-                            let time = key >> 6;
-                            processed.fetch_add(1, Ordering::Relaxed);
-                            max_time.fetch_max(time, Ordering::Relaxed);
-                            if time < horizon {
-                                // Schedule a follow-up at a random offset to
-                                // a random LP; LP hash keeps keys distinct.
-                                let dt = 1 + rng.gen_range(500);
-                                let next_lp = rng.gen_range(64) ^ lp;
-                                let key = ((time + dt) << 6) | (next_lp & 63);
-                                q.insert(key, next_lp);
-                            }
-                        }
-                        None => {
-                            empty_polls += 1;
-                            if empty_polls > 1000 {
-                                return;
-                            }
-                            std::thread::yield_now();
-                        }
-                    }
-                }
-            })
-        })
-        .collect();
-    for w in workers {
-        w.join().unwrap();
-    }
-    (processed.load(Ordering::Relaxed), max_time.load(Ordering::Relaxed))
-}
+use smartpq::workloads::{run_app, AppConfig, AppWorkload};
 
 fn main() {
-    let lps = 256;
-    let horizon = 40_000; // event-time horizon
     for threads in [1usize, 4] {
-        let q = LotanShavitPQ::new();
-        let t0 = Instant::now();
-        let (events, tmax) = phold(Arc::new(q), lps, horizon, threads, 3);
-        println!(
-            "lotan_shavit     x{threads}: {events} events to t={tmax} in {:?} ({:.2} Mev/s)",
-            t0.elapsed(),
-            events as f64 / t0.elapsed().as_secs_f64() / 1e6
-        );
+        let cfg = AppConfig {
+            workload: AppWorkload::Des {
+                lps: 256, // > 64 LPs: the old packing would lose events here
+                horizon: 40_000,
+                max_dt: 500,
+                max_events: 0,
+            },
+            threads,
+            seed: 3,
+            trace_interval: Duration::from_millis(20),
+        };
+        let results = run_app(&cfg, &["lotan_shavit", "alistarh_herlihy", "multiqueue"])
+            .expect("des run failed");
+        for r in &results {
+            println!(
+                "{:>18} x{threads}: {} ops in {:?} ({:.2} Mops/s, inversions {:.1}%) conserved={}",
+                r.backend, r.ops, r.elapsed, r.mops, r.inversion_pct, r.verified
+            );
+            assert!(r.verified, "{} lost or duplicated events", r.backend);
+        }
     }
-    for threads in [1usize, 4] {
-        let q: SprayList<smartpq::pq::skiplist::herlihy::HerlihySkipList> = SprayList::new(threads);
-        let t0 = Instant::now();
-        let (events, tmax) = phold(Arc::new(q), lps, horizon, threads, 3);
-        println!(
-            "alistarh_herlihy x{threads}: {events} events to t={tmax} in {:?} ({:.2} Mev/s)",
-            t0.elapsed(),
-            events as f64 / t0.elapsed().as_secs_f64() / 1e6
-        );
-    }
-    println!("\nNote: on a multi-core NUMA host the relaxed queue wins at high");
-    println!("thread counts until deleteMin dominates — exactly the regime");
-    println!("SmartPQ adapts to (see `smartpq bench --figure fig11`).");
+    println!("\nEvent conservation holds on every backend (no lost events).");
+    println!("Full comparison + CSV reports: smartpq app --workload des --queue all");
 }

@@ -1,142 +1,48 @@
-//! Single-source shortest paths (Dijkstra) over the concurrent priority
-//! queues — one of the paper's motivating applications (§1).
+//! Single-source shortest paths (parallel Dijkstra) over the concurrent
+//! priority queues — one of the paper's motivating applications (§1).
 //!
-//! Relaxed deleteMin (SprayList) still converges for SSSP: popping a
-//! near-minimum vertex merely reorders relaxations. We verify every queue
-//! against a sequential Dijkstra oracle on a random graph.
+//! This is a thin wrapper over the `smartpq::workloads` subsystem, which
+//! generates the graph, runs the backend-generic driver, verifies every
+//! result against the sequential Dijkstra oracle, and reports wasted work
+//! and relaxation error. Run the full ten-backend comparison with:
+//!
+//!     smartpq app --workload sssp --queue all
 //!
 //!     cargo run --release --example sssp
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
-use std::time::Instant;
+use std::time::Duration;
 
-use smartpq::pq::traits::ConcurrentPQ;
-use smartpq::pq::{LotanShavitPQ, SprayList};
-use smartpq::util::rng::Rng;
-
-struct Graph {
-    adj: Vec<Vec<(u32, u32)>>, // (neighbor, weight)
-}
-
-impl Graph {
-    fn random(n: usize, degree: usize, seed: u64) -> Graph {
-        let mut rng = Rng::new(seed);
-        let mut adj = vec![Vec::new(); n];
-        for u in 0..n {
-            for _ in 0..degree {
-                let v = rng.gen_range(n as u64) as usize;
-                let w = 1 + rng.gen_range(100) as u32;
-                adj[u].push((v as u32, w));
-            }
-        }
-        Graph { adj }
-    }
-
-    fn seq_dijkstra(&self, src: usize) -> Vec<u64> {
-        let n = self.adj.len();
-        let mut dist = vec![u64::MAX; n];
-        let mut heap = std::collections::BinaryHeap::new();
-        dist[src] = 0;
-        heap.push(std::cmp::Reverse((0u64, src)));
-        while let Some(std::cmp::Reverse((d, u))) = heap.pop() {
-            if d > dist[u] {
-                continue;
-            }
-            for &(v, w) in &self.adj[u] {
-                let nd = d + w as u64;
-                if nd < dist[v as usize] {
-                    dist[v as usize] = nd;
-                    heap.push(std::cmp::Reverse((nd, v as usize)));
-                }
-            }
-        }
-        dist
-    }
-
-    /// Concurrent Dijkstra: the PQ holds (dist*N + vertex) keys so equal
-    /// distances stay distinct (set semantics).
-    fn pq_dijkstra<Q: ConcurrentPQ + 'static>(&self, src: usize, q: Arc<Q>, threads: usize) -> Vec<u64> {
-        let n = self.adj.len();
-        let dist: Arc<Vec<AtomicU64>> = Arc::new((0..n).map(|_| AtomicU64::new(u64::MAX)).collect());
-        dist[src].store(0, Ordering::Relaxed);
-        let enc = move |d: u64, v: usize| 1 + d * n as u64 + v as u64;
-        q.insert(enc(0, src), src as u64);
-        let graph = Arc::new(self.adj.clone());
-        let idle = Arc::new(AtomicU64::new(0));
-        let workers: Vec<_> = (0..threads)
-            .map(|_| {
-                let q = Arc::clone(&q);
-                let dist = Arc::clone(&dist);
-                let graph = Arc::clone(&graph);
-                let idle = Arc::clone(&idle);
-                std::thread::spawn(move || loop {
-                    match q.delete_min() {
-                        Some((key, _)) => {
-                            idle.store(0, Ordering::Relaxed);
-                            let d = (key - 1) / n as u64;
-                            let u = ((key - 1) % n as u64) as usize;
-                            if d > dist[u].load(Ordering::Relaxed) {
-                                continue; // stale entry
-                            }
-                            for &(v, w) in &graph[u] {
-                                let nd = d + w as u64;
-                                let v = v as usize;
-                                let mut cur = dist[v].load(Ordering::Relaxed);
-                                while nd < cur {
-                                    match dist[v].compare_exchange_weak(
-                                        cur, nd, Ordering::Relaxed, Ordering::Relaxed,
-                                    ) {
-                                        Ok(_) => {
-                                            q.insert(enc(nd, v), v as u64);
-                                            break;
-                                        }
-                                        Err(c) => cur = c,
-                                    }
-                                }
-                            }
-                        }
-                        None => {
-                            // Terminate after repeated empty polls.
-                            if idle.fetch_add(1, Ordering::Relaxed) > 1000 {
-                                return;
-                            }
-                            std::thread::yield_now();
-                        }
-                    }
-                })
-            })
-            .collect();
-        for w in workers {
-            w.join().unwrap();
-        }
-        dist.iter().map(|d| d.load(Ordering::Relaxed)).collect()
-    }
-}
+use smartpq::workloads::{run_app, AppConfig, AppWorkload, GraphKind};
 
 fn main() {
-    let n = 20_000;
-    let g = Graph::random(n, 8, 7);
-    let t0 = Instant::now();
-    let want = g.seq_dijkstra(0);
-    println!("sequential Dijkstra: {:?}", t0.elapsed());
-
-    // lotan_shavit (exact deleteMin).
-    let t0 = Instant::now();
-    let got = g.pq_dijkstra(0, Arc::new(LotanShavitPQ::new()), 4);
-    let ok = got == want;
-    println!("lotan_shavit x4 threads: {:?} correct={ok}", t0.elapsed());
-    assert!(ok);
-
-    // alistarh_herlihy (relaxed deleteMin).
-    let q: Arc<SprayList<smartpq::pq::skiplist::herlihy::HerlihySkipList>> =
-        Arc::new(SprayList::new(4));
-    let t0 = Instant::now();
-    let got = g.pq_dijkstra(0, q, 4);
-    let ok = got == want;
-    println!("alistarh_herlihy x4 threads: {:?} correct={ok}", t0.elapsed());
-    assert!(ok);
-
-    let reachable = want.iter().filter(|&&d| d != u64::MAX).count();
-    println!("graph: {n} vertices, {reachable} reachable from source — all distances agree");
+    let cfg = AppConfig {
+        workload: AppWorkload::Sssp {
+            graph: GraphKind::Random { degree: 8 },
+            n: 20_000,
+            source: 0,
+        },
+        threads: 4,
+        seed: 7,
+        trace_interval: Duration::from_millis(20),
+    };
+    let results = run_app(
+        &cfg,
+        &["lotan_shavit", "alistarh_herlihy", "multiqueue", "smartpq"],
+    )
+    .expect("sssp run failed");
+    for r in &results {
+        println!(
+            "{:>18} x{} threads: {:?}  {:.2} Mops/s  wasted {:.1}%  inversions {:.1}%  correct={}",
+            r.backend,
+            r.threads,
+            r.elapsed,
+            r.mops,
+            r.wasted_pct,
+            r.inversion_pct,
+            r.verified
+        );
+        assert!(r.verified, "{} diverged from the sequential oracle", r.backend);
+    }
+    println!("\nAll distances agree with the sequential Dijkstra oracle.");
+    println!("Full comparison + CSV reports: smartpq app --workload sssp --queue all");
 }

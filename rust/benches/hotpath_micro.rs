@@ -117,7 +117,7 @@ fn main() {
     );
     for (label, algo, threads, pct) in [
         ("oblivious 64thr 50/50", SimAlgo::AlistarhHerlihy, 64usize, 50.0),
-        ("nuddle 64thr 50/50", SimAlgo::Nuddle { servers: 8 }, 64, 50.0),
+        ("nuddle 64thr 50/50", SimAlgo::nuddle(8), 64, 50.0),
         (
             "smartpq 64thr dynamic",
             SimAlgo::SmartPQ {

@@ -13,8 +13,9 @@ use crate::harness::runner::{measure, BenchConfig};
 use crate::harness::table::{fmt, Table};
 use crate::sim::{run_workload, SimAlgo, Workload, WorkloadPhase};
 use crate::util::stats::geomean;
-
-const REPORT_DIR: &str = "target/reports";
+// Single source of truth for the report directory (shared with the app
+// workload reports).
+use crate::workloads::report::REPORT_DIR;
 
 /// Thread counts used for scaling sweeps (hyperthreading past 32,
 /// oversubscription past 64 — the paper's x-axes).
@@ -46,7 +47,7 @@ pub fn fig1(cfg: &BenchConfig) -> Vec<Table> {
     let mixes = [100.0, 80.0, 60.0, 40.0, 20.0, 0.0];
     let algos = [
         SimAlgo::AlistarhHerlihy,
-        SimAlgo::Nuddle { servers: 8 },
+        SimAlgo::nuddle(8),
     ];
     let mut t = Table::new(
         "Figure 1: throughput (Mops/s), 64 threads, 1024 init keys, range 2048",
@@ -90,7 +91,7 @@ pub fn fig7a(cfg: &BenchConfig) -> Table {
             .chain(threads.iter().map(|s| Box::leak(format!("{s}thr").into_boxed_str()) as &str))
             .collect::<Vec<_>>(),
     );
-    for algo in [SimAlgo::AlistarhHerlihy, SimAlgo::Nuddle { servers: 8 }] {
+    for algo in [SimAlgo::AlistarhHerlihy, SimAlgo::nuddle(8)] {
         let mut row = vec![algo.name().to_string()];
         for &n in &threads {
             let m = measure(cfg, format!("{}@{n}", algo.name()), "Mops", |s| {
@@ -118,7 +119,7 @@ pub fn fig7b(cfg: &BenchConfig) -> Table {
             .chain(ranges.iter().map(|r| Box::leak(format!("{r}").into_boxed_str()) as &str))
             .collect::<Vec<_>>(),
     );
-    for algo in [SimAlgo::AlistarhHerlihy, SimAlgo::Nuddle { servers: 8 }] {
+    for algo in [SimAlgo::AlistarhHerlihy, SimAlgo::nuddle(8)] {
         let mut row = vec![algo.name().to_string()];
         for &r in ranges {
             let m = measure(cfg, format!("{}@{r}", algo.name()), "Mops", |s| {
@@ -187,7 +188,7 @@ fn dynamic_algos() -> Vec<SimAlgo> {
             servers: 8,
             oracle: None,
         },
-        SimAlgo::Nuddle { servers: 8 },
+        SimAlgo::nuddle(8),
         SimAlgo::AlistarhHerlihy,
     ]
 }
@@ -372,7 +373,7 @@ pub fn multiqueue_grid(cfg: &BenchConfig) -> Vec<Table> {
     let algos = [
         SimAlgo::AlistarhHerlihy,
         SimAlgo::MultiQueue { queues_per_thread: 4 },
-        SimAlgo::Nuddle { servers: 8 },
+        SimAlgo::nuddle(8),
     ];
     let scenarios: [(&str, u64, u64, f64); 2] = [
         ("insert-dominated 1M/8M", 1_000_000, 8_000_000, 80.0),
@@ -437,6 +438,54 @@ pub fn multiqueue_grid(cfg: &BenchConfig) -> Vec<Table> {
     out
 }
 
+// ------------------------------------------------ application workloads
+
+/// Application-workload figure: parallel SSSP and PHOLD DES (the paper's
+/// §1 motivating applications) over the *real* concurrent queues, via
+/// the [`crate::workloads`] subsystem. Unlike every other figure this one
+/// exercises the actual atomics with OS threads, so absolute numbers are
+/// host-dependent; the CSVs record throughput, wasted work, relaxation
+/// error and the SmartPQ mode-switch trace.
+pub fn app_workloads(cfg: &BenchConfig) -> crate::util::error::Result<Vec<Table>> {
+    use crate::workloads::{self, AppConfig, AppWorkload, GraphKind};
+
+    let (n, horizon, threads) = if cfg.quick {
+        (1_200, 1_200, 4)
+    } else {
+        (10_000, 8_000, 12)
+    };
+    let backends: Vec<&str> = if cfg.quick {
+        vec!["alistarh_herlihy", "multiqueue", "smartpq"]
+    } else {
+        workloads::ALL_BACKENDS.to_vec()
+    };
+    let mut out = Vec::new();
+    for workload in [
+        AppWorkload::Sssp {
+            graph: GraphKind::Random { degree: 8 },
+            n,
+            source: 0,
+        },
+        AppWorkload::Des {
+            lps: 128,
+            horizon,
+            max_dt: 200,
+            max_events: 0,
+        },
+    ] {
+        let app_cfg = AppConfig {
+            workload,
+            threads,
+            seed: 42,
+            trace_interval: std::time::Duration::from_millis(if cfg.quick { 10 } else { 25 }),
+        };
+        let results = workloads::run_app(&app_cfg, &backends)?;
+        workloads::print_and_write(&results, REPORT_DIR)?;
+        out.push(workloads::report::summary_table(&results));
+    }
+    Ok(out)
+}
+
 // ---------------------------------------------------- §4.2.1 classifier
 
 /// §4.2.1: classifier accuracy + misprediction cost over random
@@ -460,7 +509,7 @@ pub fn classifier_eval(cfg: &BenchConfig, n_workloads: usize) -> Table {
         let range = (size as f64 * 10f64.powf(0.1 + rng.gen_f64() * 2.5)) as u64;
         let pct = rng.gen_f64() * 100.0;
         let obv = point(&SimAlgo::AlistarhHerlihy, threads, size, range, pct, 900 + i as u64);
-        let ndl = point(&SimAlgo::Nuddle { servers: 8 }, threads, size, range, pct, 900 + i as u64);
+        let ndl = point(&SimAlgo::nuddle(8), threads, size, range, pct, 900 + i as u64);
         let truth = if (obv - ndl).abs() < tie {
             ModeClass::Neutral
         } else if obv > ndl {
@@ -519,7 +568,7 @@ pub fn ablation_servers(cfg: &BenchConfig) -> Table {
         let mut row = vec![label.to_string()];
         for &s in &servers {
             let m = measure(cfg, format!("{label}@{s}"), "Mops", |i| {
-                point(&SimAlgo::Nuddle { servers: s }, 64, size, range, pct, 50 + i as u64)
+                point(&SimAlgo::nuddle(s), 64, size, range, pct, 50 + i as u64)
             });
             row.push(fmt(m.value()));
         }
@@ -649,6 +698,15 @@ mod tests {
         let names: Vec<&str> = SimAlgo::fig9_set().iter().map(|a| a.name()).collect();
         assert!(names.contains(&"multiqueue"), "{names:?}");
         assert!(names.contains(&"alistarh_herlihy"));
+    }
+
+    #[test]
+    fn app_workloads_runs_quick() {
+        let tables = app_workloads(&quick()).unwrap();
+        assert_eq!(tables.len(), 2, "one summary table per workload");
+        // Quick mode compares three backends per workload.
+        assert_eq!(tables[0].len(), 3);
+        assert_eq!(tables[1].len(), 3);
     }
 
     #[test]

@@ -18,6 +18,10 @@
 //!    decision-tree mode predictor; trained offline in Python/JAX and
 //!    executed either natively or through the AOT-compiled XLA artifact via
 //!    PJRT (never Python at runtime).
+//! 4. **Application plane** ([`workloads`]) — parallel SSSP and PHOLD
+//!    discrete-event simulation as backend-generic benchmark drivers over
+//!    every real queue, verified against a sequential oracle
+//!    (`smartpq app`).
 //!
 //! See `DESIGN.md` for the full system inventory and experiment index.
 
@@ -30,5 +34,6 @@ pub mod pq;
 pub mod runtime;
 pub mod sim;
 pub mod util;
+pub mod workloads;
 
 pub use util::error::{Error, Result};

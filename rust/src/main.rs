@@ -5,6 +5,7 @@
 //!   train-data   — sweep the simulator to produce data/training.csv
 //!   point        — measure one simulated workload point
 //!   real         — run the real concurrent queues with OS threads
+//!   app          — application workloads (SSSP / DES) over every backend
 //!   demo         — 30-second guided tour (SmartPQ adapting live)
 //!   classifier   — inspect / query the decision infrastructure
 
@@ -28,7 +29,7 @@ smartpq — adaptive concurrent priority queue for NUMA architectures (paper rep
 USAGE: smartpq <command> [options]
 
 COMMANDS
-  bench --figure <fig1|fig7|fig9|fig10|fig11|multiqueue|classifier|ablation|all>
+  bench --figure <fig1|fig7|fig9|fig10|fig11|multiqueue|classifier|ablation|app|all>
                           regenerate the paper's figures on the simulated
                           4-node testbed (CSV copies under target/reports/)
   train-data [--points N] [--out data/training.csv] [--duration-ms D]
@@ -37,14 +38,23 @@ COMMANDS
   point --algo A --threads N --size S --range R --insert-pct P
                           one simulated measurement (algo: lotan_shavit,
                           alistarh_fraser, alistarh_herlihy, multiqueue,
-                          ffwd, nuddle, smartpq; --mq-c sets the MultiQueue
-                          heaps-per-thread factor, default 4)
+                          ffwd, nuddle, nuddle_multiqueue, smartpq; --mq-c
+                          sets the MultiQueue heaps-per-thread factor,
+                          default 4)
   real  --queue Q --threads N [--seconds S] [--insert-pct P] [--range R]
                           drive the *real* concurrent queue with OS threads
                           (queue: lotan_shavit, alistarh_fraser,
                           alistarh_herlihy, multiqueue, ffwd, nuddle,
                           nuddle_multiqueue, smartpq, smartpq_multiqueue,
                           mutex_heap)
+  app   --workload <sssp|des> [--queue Q|all] [--threads N]
+                          run a real application workload (parallel
+                          Dijkstra / PHOLD event simulation) over the real
+                          concurrent queues, verify against the sequential
+                          oracle, and write CSV reports incl. the SmartPQ
+                          mode-switch trace (options: --graph
+                          random|grid|powerlaw, --n, --lps, --horizon,
+                          --max-dt, --trace-ms, --source)
   demo                    SmartPQ adapting across contention phases
   classifier [--query \"threads,size,range,insert_pct\"]
                           show model info; optionally classify one workload
@@ -61,7 +71,8 @@ fn parse_algo(name: &str, queues_per_thread: usize) -> Result<SimAlgo> {
         "alistarh_herlihy" => SimAlgo::AlistarhHerlihy,
         "multiqueue" => SimAlgo::MultiQueue { queues_per_thread },
         "ffwd" => SimAlgo::Ffwd,
-        "nuddle" => SimAlgo::Nuddle { servers: 8 },
+        "nuddle" => SimAlgo::nuddle(8),
+        "nuddle_multiqueue" => SimAlgo::nuddle_multiqueue(8, queues_per_thread),
         "smartpq" => SimAlgo::SmartPQ {
             servers: 8,
             oracle: None,
@@ -88,6 +99,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
             "multiqueue",
             "classifier",
             "ablation",
+            "app",
             "all",
         ],
         "all",
@@ -119,6 +131,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
         figures::ablation_servers(&cfg);
         figures::ablation_decision_interval(&cfg);
     }
+    if run_all || fig == "app" {
+        figures::app_workloads(&cfg)?;
+    }
     Ok(())
 }
 
@@ -145,7 +160,7 @@ fn cmd_train_data(args: &Args) -> Result<()> {
             .overall_mops()
         };
         let obv = w(&SimAlgo::AlistarhHerlihy);
-        let ndl = w(&SimAlgo::Nuddle { servers: 8 });
+        let ndl = w(&SimAlgo::nuddle(8));
         csv.push_str(&format!("{threads},{size},{range},{pct},{obv:.4},{ndl:.4}\n"));
         if (i + 1) % 200 == 0 {
             eprintln!("train-data: {}/{points}", i + 1);
@@ -298,6 +313,93 @@ fn cmd_real(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Run a real application workload (parallel SSSP or PHOLD DES) over one
+/// or all queue backends, verify against the oracle, and write the
+/// `target/reports/app_*.csv` reports (see `workloads::report` for the
+/// column schema).
+fn cmd_app(args: &Args) -> Result<()> {
+    use smartpq::workloads::{self, AppConfig, AppWorkload, GraphKind};
+
+    let quick = args.flag("quick");
+    let workload_name = args.choice("workload", &["sssp", "des"], "sssp")?;
+    // Quick mode shrinks the instance for CI smoke runs; the non-quick
+    // defaults run >8 threads so SmartPQ's classifier is outside its
+    // single-node neutral zone and the phase structure shows up in the
+    // mode trace.
+    let threads: usize = args.num_or("threads", if quick { 4 } else { 12 })?;
+    let seed: u64 = args.num_or("seed", 42)?;
+    let trace_ms: u64 = args.num_or("trace-ms", if quick { 10 } else { 25 })?;
+    let workload = match workload_name.as_str() {
+        "sssp" => {
+            let n: usize = args.num_or("n", if quick { 2_000 } else { 50_000 })?;
+            let graph = match args
+                .choice("graph", &["random", "grid", "powerlaw"], "random")?
+                .as_str()
+            {
+                "grid" => GraphKind::Grid,
+                "powerlaw" => GraphKind::PowerLaw {
+                    min_degree: args.num_or("degree", 3)?,
+                },
+                _ => GraphKind::Random {
+                    degree: args.num_or("degree", 8)?,
+                },
+            };
+            AppWorkload::Sssp {
+                graph,
+                n,
+                source: args.num_or("source", 0)?,
+            }
+        }
+        _ => AppWorkload::Des {
+            lps: args.num_or("lps", 256)?,
+            horizon: args.num_or("horizon", if quick { 3_000 } else { 40_000 })?,
+            max_dt: args.num_or("max-dt", 500)?,
+            max_events: args.num_or("max-events", 0)?,
+        },
+    };
+    let cfg = AppConfig {
+        workload,
+        threads,
+        seed,
+        trace_interval: std::time::Duration::from_millis(trace_ms.max(1)),
+    };
+    let queue = args.str_or("queue", "all");
+    let names: Vec<&str> = if queue == "all" {
+        workloads::ALL_BACKENDS.to_vec()
+    } else {
+        let name = workloads::ALL_BACKENDS
+            .iter()
+            .find(|b| **b == queue)
+            .ok_or_else(|| {
+                Error::Config(format!(
+                    "unknown queue {queue:?} (expected all or one of: {})",
+                    workloads::ALL_BACKENDS.join(", ")
+                ))
+            })?;
+        vec![*name]
+    };
+    eprintln!(
+        "app: workload={workload_name} queues={} threads={threads} seed={seed}{}",
+        names.join(","),
+        if quick { " (quick)" } else { "" }
+    );
+    let results = workloads::run_app(&cfg, &names)?;
+    let csv = workloads::print_and_write(&results, smartpq::workloads::report::REPORT_DIR)?;
+    println!("reports written under {csv}");
+    let failed: Vec<&str> = results
+        .iter()
+        .filter(|r| !r.verified)
+        .map(|r| r.backend)
+        .collect();
+    if !failed.is_empty() {
+        return Err(Error::Invariant(format!(
+            "verification failed for: {}",
+            failed.join(", ")
+        )));
+    }
+    Ok(())
+}
+
 fn cmd_demo(args: &Args) -> Result<()> {
     let seed: u64 = args.num_or("seed", 42)?;
     println!("SmartPQ demo: three contention phases on the simulated 4-node testbed\n");
@@ -326,7 +428,7 @@ fn cmd_demo(args: &Args) -> Result<()> {
             servers: 8,
             oracle: None,
         },
-        SimAlgo::Nuddle { servers: 8 },
+        SimAlgo::nuddle(8),
         SimAlgo::AlistarhHerlihy,
     ] {
         let w = Workload {
@@ -406,6 +508,7 @@ fn main() {
         Some("train-data") => cmd_train_data(&args),
         Some("point") => cmd_point(&args),
         Some("real") => cmd_real(&args),
+        Some("app") => cmd_app(&args),
         Some("demo") => cmd_demo(&args),
         Some("classifier") => cmd_classifier(&args),
         Some("help") | None => {

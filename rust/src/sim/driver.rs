@@ -28,10 +28,15 @@ pub enum SimAlgo {
     },
     /// ffwd [65] (one server).
     Ffwd,
-    /// Nuddle over alistarh_herlihy with this many servers (paper: 8).
+    /// Nuddle with this many servers (paper: 8) over a NUMA-oblivious
+    /// backbone. The paper evaluates alistarh_herlihy
+    /// ([`SimAlgo::nuddle`]); the real plane also supports a MultiQueue
+    /// backbone, priced here as `base: ObvKind::MultiQueue { .. }`.
     Nuddle {
         /// Server threads.
         servers: usize,
+        /// Backbone the servers operate on.
+        base: ObvKind,
     },
     /// SmartPQ: Nuddle + the decision-tree classifier. `oracle` defaults
     /// to the trained artifact if present, else the builtin tree.
@@ -44,6 +49,23 @@ pub enum SimAlgo {
 }
 
 impl SimAlgo {
+    /// Nuddle over the paper's backbone (alistarh_herlihy).
+    pub fn nuddle(servers: usize) -> SimAlgo {
+        SimAlgo::Nuddle {
+            servers,
+            base: ObvKind::AlistarhHerlihy,
+        }
+    }
+
+    /// Nuddle over a MultiQueue backbone (matches the real plane's
+    /// `nuddle_multiqueue`).
+    pub fn nuddle_multiqueue(servers: usize, queues_per_thread: usize) -> SimAlgo {
+        SimAlgo::Nuddle {
+            servers,
+            base: ObvKind::MultiQueue { queues_per_thread },
+        }
+    }
+
     /// Paper label.
     pub fn name(&self) -> &'static str {
         match self {
@@ -52,6 +74,10 @@ impl SimAlgo {
             SimAlgo::AlistarhHerlihy => "alistarh_herlihy",
             SimAlgo::MultiQueue { .. } => "multiqueue",
             SimAlgo::Ffwd => "ffwd",
+            SimAlgo::Nuddle {
+                base: ObvKind::MultiQueue { .. },
+                ..
+            } => "nuddle_multiqueue",
             SimAlgo::Nuddle { .. } => "nuddle",
             SimAlgo::SmartPQ { .. } => "smartpq",
         }
@@ -67,7 +93,7 @@ impl SimAlgo {
             SimAlgo::AlistarhHerlihy,
             SimAlgo::MultiQueue { queues_per_thread: 4 },
             SimAlgo::Ffwd,
-            SimAlgo::Nuddle { servers: 8 },
+            SimAlgo::nuddle(8),
         ]
     }
 }
@@ -194,9 +220,9 @@ pub fn run_workload(algo: &SimAlgo, w: &Workload) -> SimResult {
             })
         }
         SimAlgo::Ffwd => EngineAlgo::Ffwd,
-        SimAlgo::Nuddle { servers } => EngineAlgo::Nuddle {
+        SimAlgo::Nuddle { servers, base } => EngineAlgo::Nuddle {
             servers: *servers,
-            base: ObvKind::AlistarhHerlihy,
+            base: *base,
         },
         SimAlgo::SmartPQ { servers, oracle } => EngineAlgo::Smart {
             servers: *servers,
@@ -260,9 +286,9 @@ mod tests {
         // queue wins at 100% inserts; the NUMA-aware side wins as the
         // deleteMin share grows.
         let obv100 = measure_point(&SimAlgo::AlistarhHerlihy, 64, 1024, 2048, 100.0, 2.0, 1);
-        let ndl100 = measure_point(&SimAlgo::Nuddle { servers: 8 }, 64, 1024, 2048, 100.0, 2.0, 1);
+        let ndl100 = measure_point(&SimAlgo::nuddle(8), 64, 1024, 2048, 100.0, 2.0, 1);
         let obv0 = measure_point(&SimAlgo::AlistarhHerlihy, 64, 1024, 2048, 0.0, 2.0, 1);
-        let ndl0 = measure_point(&SimAlgo::Nuddle { servers: 8 }, 64, 1024, 2048, 0.0, 2.0, 1);
+        let ndl0 = measure_point(&SimAlgo::nuddle(8), 64, 1024, 2048, 0.0, 2.0, 1);
         assert!(
             ndl0 > obv0,
             "deleteMin-only: nuddle {ndl0:.2} must beat oblivious {obv0:.2}"
@@ -339,7 +365,7 @@ mod tests {
             &mk(phases.clone()),
         );
         let obv = run_workload(&SimAlgo::AlistarhHerlihy, &mk(phases.clone()));
-        let ndl = run_workload(&SimAlgo::Nuddle { servers: 8 }, &mk(phases));
+        let ndl = run_workload(&SimAlgo::nuddle(8), &mk(phases));
         // SmartPQ must not lose badly to either static choice overall.
         let best_static = obv.overall_mops().max(ndl.overall_mops());
         assert!(
@@ -377,6 +403,22 @@ mod tests {
             m_del > lotan,
             "multiqueue deleteMin ({m_del:.2}) should beat lotan_shavit ({lotan:.2}) at 64 threads"
         );
+    }
+
+    #[test]
+    fn nuddle_backbone_knob_prices_multiqueue_base() {
+        let ndl_mq = SimAlgo::nuddle_multiqueue(8, 4);
+        assert_eq!(ndl_mq.name(), "nuddle_multiqueue");
+        assert_eq!(SimAlgo::nuddle(8).name(), "nuddle");
+        // Both backbones run and are deterministic.
+        let a = measure_point(&ndl_mq, 32, 100_000, 200_000, 50.0, 1.0, 19);
+        let b = measure_point(&ndl_mq, 32, 100_000, 200_000, 50.0, 1.0, 19);
+        assert_eq!(a, b);
+        assert!(a > 0.0);
+        // The backbone choice must actually reach the cost model: the two
+        // bases price differently on an identical workload.
+        let herlihy = measure_point(&SimAlgo::nuddle(8), 32, 100_000, 200_000, 50.0, 1.0, 19);
+        assert_ne!(a, herlihy, "backbone knob had no effect");
     }
 
     #[test]

@@ -1,0 +1,327 @@
+//! PHOLD-style parallel discrete-event simulation over any
+//! [`ConcurrentPQ`] — the paper's second motivating workload (§1).
+//!
+//! `lps` logical processes exchange timestamped events through a shared
+//! pending-event set (the priority queue). Workers repeatedly pop the
+//! (near-)earliest event, advance that LP, and — while the event time is
+//! below the horizon — schedule exactly one follow-up event at a random
+//! future time on a random LP. Handlers are independent, so a relaxed
+//! queue needs no rollback; out-of-order commits are *measured* (the
+//! `inversions` column) rather than corrected.
+//!
+//! ## Key packing (the event-loss fix)
+//!
+//! The old example packed events as `(time << 6) | (lp & 63)`, which
+//! collides whenever two simultaneous events land on LPs congruent mod
+//! 64 — under the queue's set semantics the second insert is silently
+//! *dropped*, losing events for any `lps > 64`. Here every event key is
+//! `(time << 32) | sequence`, with `sequence` drawn from a global atomic
+//! counter: keys order by event time first and are globally unique for
+//! up to 2^32 events per run, so inserts can never collide. The driver
+//! counts `failed_inserts` and the test suite asserts it stays zero.
+//!
+//! ## Conservation
+//!
+//! Every run checks the event-conservation invariant
+//! `created == consumed + drained`: events seeded plus events scheduled
+//! must equal events executed plus events still pending when the run
+//! stopped. A queue that loses or duplicates elements fails this
+//! immediately — it is the DES analogue of the SSSP oracle check.
+
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::pq::traits::ConcurrentPQ;
+use crate::util::rng::Rng;
+
+/// Bits reserved for the uniqueness sequence in an event key.
+const SEQ_BITS: u32 = 32;
+const SEQ_MASK: u64 = (1 << SEQ_BITS) - 1;
+
+/// Pack an event `(time, seq)` into a unique queue key (time-major).
+#[inline]
+pub fn pack_event(time: u64, seq: u64) -> u64 {
+    debug_assert!(time < 1 << (63 - SEQ_BITS), "event time overflows packing");
+    (time << SEQ_BITS) | (seq & SEQ_MASK)
+}
+
+/// Extract the event time from a packed key.
+#[inline]
+pub fn event_time(key: u64) -> u64 {
+    key >> SEQ_BITS
+}
+
+/// PHOLD configuration.
+#[derive(Debug, Clone)]
+pub struct DesConfig {
+    /// Logical processes (one seed event each).
+    pub lps: usize,
+    /// Event-time horizon: events at `time >= horizon` schedule no
+    /// follow-up, so the simulation drains and terminates.
+    pub horizon: u64,
+    /// Maximum follow-up offset (`dt` uniform in `1..=max_dt`).
+    pub max_dt: u64,
+    /// Worker threads.
+    pub threads: usize,
+    /// RNG seed.
+    pub seed: u64,
+    /// Stop after roughly this many consumed events (0 = run to the
+    /// horizon). Used by `--quick` and by the conservation tests to leave
+    /// events pending in the queue.
+    pub max_events: u64,
+}
+
+impl Default for DesConfig {
+    fn default() -> Self {
+        DesConfig {
+            lps: 256,
+            horizon: 40_000,
+            max_dt: 500,
+            threads: 4,
+            seed: 3,
+            max_events: 0,
+        }
+    }
+}
+
+/// Result of one PHOLD run.
+#[derive(Debug, Clone)]
+pub struct DesRun {
+    /// Events created (seeded + scheduled follow-ups).
+    pub created: u64,
+    /// Events executed by workers.
+    pub consumed: u64,
+    /// Events left pending when workers stopped, drained afterwards.
+    pub drained: u64,
+    /// Inserts rejected by the queue (must be 0 — keys are unique).
+    pub failed_inserts: u64,
+    /// Largest executed event time.
+    pub max_time: u64,
+    /// Events executed below the global commit watermark (out-of-order
+    /// commits — the relaxation-error measure for DES).
+    pub inversions: u64,
+    /// Wall-clock duration of the parallel phase (excludes the drain).
+    pub elapsed: Duration,
+}
+
+impl DesRun {
+    /// Events executed per second (Mev/s).
+    pub fn mevents_per_sec(&self) -> f64 {
+        self.consumed as f64 / self.elapsed.as_secs_f64().max(1e-9) / 1e6
+    }
+
+    /// Queue operations completed during the timed parallel phase: every
+    /// insert (`created`) plus every in-phase pop (`consumed`). Excludes
+    /// the post-run drain pops, which happen outside `elapsed` —
+    /// including them would inflate the throughput of capped runs that
+    /// strand many events.
+    pub fn ops(&self) -> u64 {
+        self.created + self.consumed
+    }
+
+    /// The conservation invariant: no event lost, none duplicated.
+    pub fn conserved(&self) -> bool {
+        self.created == self.consumed + self.drained
+    }
+
+    /// Out-of-order commit percentage.
+    pub fn inversion_pct(&self) -> f64 {
+        if self.consumed == 0 {
+            0.0
+        } else {
+            100.0 * self.inversions as f64 / self.consumed as f64
+        }
+    }
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+struct WorkerCounters {
+    consumed: u64,
+    created: u64,
+    failed_inserts: u64,
+    inversions: u64,
+}
+
+/// Run PHOLD over `q`; the queue must be empty on entry. Returns after
+/// the pending-event set is fully drained (see module docs).
+pub fn phold(q: Arc<dyn ConcurrentPQ>, cfg: &DesConfig) -> DesRun {
+    assert!(cfg.lps >= 1 && cfg.threads >= 1);
+    assert!(cfg.horizon >= 1 && cfg.max_dt >= 1);
+    let seq = AtomicU64::new(0);
+    let pending = AtomicI64::new(0);
+    let consumed_total = AtomicU64::new(0);
+    let max_time = AtomicU64::new(0);
+    let watermark = AtomicU64::new(0);
+
+    // Seed one initial event per LP at a random early time >= 1.
+    let mut seeded = 0u64;
+    {
+        let mut rng = Rng::new(cfg.seed);
+        for lp in 0..cfg.lps {
+            let t0 = 1 + rng.gen_range(cfg.max_dt);
+            pending.fetch_add(1, Ordering::AcqRel);
+            let key = pack_event(t0, seq.fetch_add(1, Ordering::Relaxed));
+            assert!(q.insert(key, lp as u64), "seed event collided (unique keys)");
+            seeded += 1;
+        }
+    }
+
+    let t0 = Instant::now();
+    let totals = std::thread::scope(|s| {
+        let workers: Vec<_> = (0..cfg.threads)
+            .map(|tid| {
+                let q = Arc::clone(&q);
+                let (seq, pending, consumed_total) = (&seq, &pending, &consumed_total);
+                let (max_time, watermark) = (&max_time, &watermark);
+                s.spawn(move || {
+                    let mut rng = Rng::stream(cfg.seed ^ 0x0DE5, tid as u64 + 1);
+                    let mut c = WorkerCounters::default();
+                    let mut misses = 0u64;
+                    loop {
+                        if cfg.max_events > 0
+                            && consumed_total.load(Ordering::Relaxed) >= cfg.max_events
+                        {
+                            return c;
+                        }
+                        match q.delete_min() {
+                            Some((key, _lp)) => {
+                                misses = 0;
+                                let time = event_time(key);
+                                c.consumed += 1;
+                                consumed_total.fetch_add(1, Ordering::Relaxed);
+                                if key < watermark.fetch_max(key, Ordering::Relaxed) {
+                                    c.inversions += 1;
+                                }
+                                max_time.fetch_max(time, Ordering::Relaxed);
+                                if time < cfg.horizon {
+                                    let dt = 1 + rng.gen_range(cfg.max_dt);
+                                    let next_lp = rng.gen_range(cfg.lps as u64);
+                                    let key = pack_event(
+                                        time + dt,
+                                        seq.fetch_add(1, Ordering::Relaxed),
+                                    );
+                                    pending.fetch_add(1, Ordering::AcqRel);
+                                    if q.insert(key, next_lp) {
+                                        c.created += 1;
+                                    } else {
+                                        c.failed_inserts += 1;
+                                        pending.fetch_sub(1, Ordering::AcqRel);
+                                    }
+                                }
+                                pending.fetch_sub(1, Ordering::AcqRel);
+                            }
+                            None => {
+                                if pending.load(Ordering::Acquire) <= 0 {
+                                    return c;
+                                }
+                                // Deadman: see workloads::sssp — fail
+                                // loudly if the queue stranded pending
+                                // events.
+                                misses += 1;
+                                assert!(
+                                    misses < 50_000_000,
+                                    "des stalled with pending={} — queue lost events?",
+                                    pending.load(Ordering::Acquire)
+                                );
+                                std::thread::yield_now();
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        let mut totals = WorkerCounters::default();
+        for w in workers {
+            let c = w.join().expect("des worker panicked");
+            totals.consumed += c.consumed;
+            totals.created += c.created;
+            totals.failed_inserts += c.failed_inserts;
+            totals.inversions += c.inversions;
+        }
+        totals
+    });
+    let elapsed = t0.elapsed();
+
+    // Drain whatever the (possibly capped) run left pending; with all
+    // workers joined this is single-threaded, so a bounded retry loop is
+    // enough to ride out any transiently-empty relaxed scan.
+    let mut drained = 0u64;
+    let mut misses = 0u32;
+    loop {
+        match q.delete_min() {
+            Some(_) => {
+                drained += 1;
+                misses = 0;
+            }
+            None => {
+                if q.is_empty() || misses > 10_000 {
+                    break;
+                }
+                misses += 1;
+                std::hint::spin_loop();
+            }
+        }
+    }
+
+    DesRun {
+        created: seeded + totals.created,
+        consumed: totals.consumed,
+        drained,
+        failed_inserts: totals.failed_inserts,
+        max_time: max_time.load(Ordering::Relaxed),
+        inversions: totals.inversions,
+        elapsed,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pq::{LotanShavitPQ, MultiQueue};
+
+    #[test]
+    fn packing_orders_by_time_and_never_collides() {
+        assert!(pack_event(5, 0) < pack_event(6, 0));
+        assert!(pack_event(5, u64::MAX) < pack_event(6, 0));
+        assert_ne!(pack_event(7, 1), pack_event(7, 2));
+        assert_eq!(event_time(pack_event(123, 456)), 123);
+    }
+
+    #[test]
+    fn conservation_holds_to_horizon() {
+        let q: Arc<dyn ConcurrentPQ> = Arc::new(LotanShavitPQ::new());
+        let cfg = DesConfig {
+            lps: 100, // > 64: the old packing would drop events here
+            horizon: 1_500,
+            max_dt: 100,
+            threads: 2,
+            seed: 9,
+            max_events: 0,
+        };
+        let run = phold(q.clone(), &cfg);
+        assert!(run.conserved(), "{run:?}");
+        assert_eq!(run.failed_inserts, 0);
+        assert_eq!(run.drained, 0, "horizon run must drain in-loop");
+        assert!(run.max_time >= cfg.horizon);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn capped_run_leaves_pending_events_and_still_conserves() {
+        let q: Arc<dyn ConcurrentPQ> = Arc::new(MultiQueue::new(4));
+        let cfg = DesConfig {
+            lps: 128,
+            horizon: 1 << 20, // effectively unbounded
+            max_dt: 50,
+            threads: 4,
+            seed: 5,
+            max_events: 2_000,
+        };
+        let run = phold(q, &cfg);
+        assert!(run.conserved(), "{run:?}");
+        assert_eq!(run.failed_inserts, 0);
+        assert!(run.consumed >= 2_000);
+        assert!(run.drained > 0, "cap should leave pending events");
+    }
+}

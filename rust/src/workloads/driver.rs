@@ -1,0 +1,518 @@
+//! Backend-generic application-benchmark driver.
+//!
+//! This is the registry layer that turns the SSSP and DES drivers into a
+//! ten-way comparison: [`build_queue`] constructs any of the real
+//! concurrent backends behind one `Arc<dyn ConcurrentPQ>`, [`run_app`]
+//! runs a workload over a list of them against the sequential oracle /
+//! conservation invariant, and adaptive backends (SmartPQ) additionally
+//! get a monitor thread that drives the decision tree at a fixed interval
+//! and records a mode-switch trace — the first place SmartPQ's classifier
+//! is exercised by contention that evolves organically (SSSP frontier
+//! growth and drain, the DES event horizon) instead of a scripted
+//! insert-percentage schedule.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::adaptive::{HasStats, SmartPQ, SmartPQConfig};
+use crate::classifier::{ModeClass, ModeOracle};
+use crate::delegation::nuddle::{mode, NuddleConfig};
+use crate::delegation::{FfwdPQ, Nuddle};
+use crate::pq::skiplist::fraser::FraserSkipList;
+use crate::pq::skiplist::herlihy::HerlihySkipList;
+use crate::pq::traits::ConcurrentPQ;
+use crate::pq::{LotanShavitPQ, MultiQueue, SprayList};
+use crate::util::error::{Error, Result};
+use crate::workloads::des::{phold, DesConfig, DesRun};
+use crate::workloads::graph::{Graph, GraphKind};
+use crate::workloads::sssp::{parallel_sssp, SsspConfig, SsspRun};
+
+/// Every queue backend the application plane runs over, in report order.
+/// `spraylist` is the canonical SprayList (Fraser base) under the name
+/// the paper's §1 uses colloquially; `alistarh_fraser`/`alistarh_herlihy`
+/// are the two evaluated variants.
+pub const ALL_BACKENDS: [&str; 10] = [
+    "lotan_shavit",
+    "alistarh_fraser",
+    "alistarh_herlihy",
+    "spraylist",
+    "multiqueue",
+    "ffwd",
+    "nuddle",
+    "nuddle_multiqueue",
+    "smartpq",
+    "smartpq_multiqueue",
+];
+
+/// Observation interface of an adaptive backend: lets the driver run
+/// decision steps and read the mode cell without knowing the base type.
+pub trait AdaptiveProbe: Send + Sync {
+    /// Run one decision step from live counters.
+    fn probe_decide(&self) -> ModeClass;
+    /// Current mode (`mode::OBLIVIOUS` / `mode::AWARE`).
+    fn probe_mode(&self) -> u8;
+    /// Mode transitions so far.
+    fn probe_switches(&self) -> u64;
+    /// Decision-tree invocations so far.
+    fn probe_decisions(&self) -> u64;
+}
+
+impl<B: ConcurrentPQ + HasStats + 'static> AdaptiveProbe for SmartPQ<B> {
+    fn probe_decide(&self) -> ModeClass {
+        self.decide_now()
+    }
+
+    fn probe_mode(&self) -> u8 {
+        self.current_mode()
+    }
+
+    fn probe_switches(&self) -> u64 {
+        self.switch_count()
+    }
+
+    fn probe_decisions(&self) -> u64 {
+        self.decision_count()
+    }
+}
+
+/// A constructed backend: the queue handle plus, for SmartPQ variants,
+/// the adaptive observation handle.
+pub struct BuiltQueue {
+    /// Canonical backend label (from [`ALL_BACKENDS`]).
+    pub label: &'static str,
+    /// The queue itself.
+    pub queue: Arc<dyn ConcurrentPQ>,
+    /// Present only for adaptive (SmartPQ) backends.
+    pub adaptive: Option<Arc<dyn AdaptiveProbe>>,
+}
+
+fn nuddle_cfg(threads: usize) -> NuddleConfig {
+    NuddleConfig {
+        servers: 2,
+        // Workers plus the prefill/drain main thread, with margin.
+        max_clients: threads + 8,
+        idle_sleep_us: 50,
+    }
+}
+
+fn smartpq_over<B: ConcurrentPQ + HasStats + 'static>(
+    base: Arc<B>,
+    threads: usize,
+) -> SmartPQ<B> {
+    let oracle: Arc<dyn ModeOracle> = crate::sim::driver::default_oracle();
+    let q = SmartPQ::new(
+        base,
+        oracle,
+        SmartPQConfig {
+            nuddle: nuddle_cfg(threads),
+            decision_interval: Duration::from_millis(200),
+            initial_mode: mode::OBLIVIOUS,
+            // The app driver's monitor thread calls `decide_now` itself so
+            // decisions and the trace share one clock.
+            auto_decide: false,
+        },
+    );
+    q.set_threads_hint(threads);
+    q
+}
+
+/// Construct backend `name` sized for `threads` workers.
+pub fn build_queue(name: &str, threads: usize, seed: u64) -> Result<BuiltQueue> {
+    let plain = |label: &'static str, queue: Arc<dyn ConcurrentPQ>| BuiltQueue {
+        label,
+        queue,
+        adaptive: None,
+    };
+    Ok(match name {
+        "lotan_shavit" => plain("lotan_shavit", Arc::new(LotanShavitPQ::new())),
+        "alistarh_fraser" => plain(
+            "alistarh_fraser",
+            Arc::new(SprayList::<FraserSkipList>::new(threads)),
+        ),
+        "alistarh_herlihy" => plain(
+            "alistarh_herlihy",
+            Arc::new(SprayList::<HerlihySkipList>::new(threads)),
+        ),
+        "spraylist" => plain(
+            "spraylist",
+            Arc::new(SprayList::<FraserSkipList>::new(threads)),
+        ),
+        "multiqueue" => plain("multiqueue", Arc::new(MultiQueue::new(threads))),
+        "ffwd" => plain("ffwd", Arc::new(FfwdPQ::new(threads + 8, seed))),
+        "nuddle" => {
+            let base = Arc::new(SprayList::<HerlihySkipList>::new(threads));
+            plain("nuddle", Arc::new(Nuddle::new(base, nuddle_cfg(threads))))
+        }
+        "nuddle_multiqueue" => {
+            let base = Arc::new(MultiQueue::new(threads));
+            plain(
+                "nuddle_multiqueue",
+                Arc::new(Nuddle::new(base, nuddle_cfg(threads))),
+            )
+        }
+        "smartpq" => {
+            let base = Arc::new(SprayList::<HerlihySkipList>::new(threads));
+            let q = Arc::new(smartpq_over(base, threads));
+            BuiltQueue {
+                label: "smartpq",
+                queue: q.clone(),
+                adaptive: Some(q),
+            }
+        }
+        "smartpq_multiqueue" => {
+            let base = Arc::new(MultiQueue::new(threads));
+            let q = Arc::new(smartpq_over(base, threads));
+            BuiltQueue {
+                label: "smartpq_multiqueue",
+                queue: q.clone(),
+                adaptive: Some(q),
+            }
+        }
+        other => {
+            return Err(Error::Config(format!(
+                "unknown queue {other:?} (expected one of: {})",
+                ALL_BACKENDS.join(", ")
+            )))
+        }
+    })
+}
+
+/// One sample of an adaptive backend's mode trace.
+#[derive(Debug, Clone, Copy)]
+pub struct TracePoint {
+    /// Milliseconds since the workload started.
+    pub t_ms: f64,
+    /// Mode at sample time.
+    pub mode: u8,
+    /// Cumulative mode switches at sample time.
+    pub switches: u64,
+}
+
+/// Which application workload to run.
+#[derive(Debug, Clone)]
+pub enum AppWorkload {
+    /// Parallel Dijkstra over a generated graph.
+    Sssp {
+        /// Generator family.
+        graph: GraphKind,
+        /// Vertex count.
+        n: usize,
+        /// Source vertex.
+        source: usize,
+    },
+    /// PHOLD discrete-event simulation.
+    Des {
+        /// Logical processes.
+        lps: usize,
+        /// Event-time horizon.
+        horizon: u64,
+        /// Max follow-up offset.
+        max_dt: u64,
+        /// Consumed-event cap (0 = run to horizon).
+        max_events: u64,
+    },
+}
+
+impl AppWorkload {
+    /// Report label.
+    pub fn name(&self) -> &'static str {
+        match self {
+            AppWorkload::Sssp { .. } => "sssp",
+            AppWorkload::Des { .. } => "des",
+        }
+    }
+}
+
+/// A full application-benchmark request.
+#[derive(Debug, Clone)]
+pub struct AppConfig {
+    /// The workload.
+    pub workload: AppWorkload,
+    /// Worker threads per backend run.
+    pub threads: usize,
+    /// RNG seed (graph generation, event scheduling).
+    pub seed: u64,
+    /// Mode-trace sampling / decision interval for adaptive backends.
+    pub trace_interval: Duration,
+}
+
+/// Per-backend application result (one CSV row).
+#[derive(Debug, Clone)]
+pub struct AppResult {
+    /// Backend label.
+    pub backend: &'static str,
+    /// Workload label ("sssp" / "des").
+    pub workload: &'static str,
+    /// Worker threads.
+    pub threads: usize,
+    /// Wall-clock duration of the parallel phase.
+    pub elapsed: Duration,
+    /// Completed queue operations.
+    pub ops: u64,
+    /// Throughput (Mops/s).
+    pub mops: f64,
+    /// SSSP: stale pops / pops. DES: drained (unconsumed) / created.
+    pub wasted_pct: f64,
+    /// Out-of-priority-order deliveries / pops.
+    pub inversion_pct: f64,
+    /// Oracle / conservation check passed.
+    pub verified: bool,
+    /// SmartPQ mode switches (0 for static backends).
+    pub switches: u64,
+    /// Mode at end of run (`mode::OBLIVIOUS` for static oblivious
+    /// backends, `mode::AWARE` for delegation backends).
+    pub final_mode: u8,
+    /// Mode trace (empty for static backends).
+    pub trace: Vec<TracePoint>,
+}
+
+/// Run `body` while a monitor thread drives `probe` every `interval`,
+/// recording the mode trace. Static backends skip the monitor entirely.
+fn run_traced<R>(
+    probe: Option<&Arc<dyn AdaptiveProbe>>,
+    interval: Duration,
+    body: impl FnOnce() -> R,
+) -> (R, Vec<TracePoint>) {
+    let Some(probe) = probe else {
+        return (body(), Vec::new());
+    };
+    let t0 = Instant::now();
+    let stop = Arc::new(AtomicBool::new(false));
+    let monitor = {
+        let probe = Arc::clone(probe);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut trace = Vec::new();
+            while !stop.load(Ordering::Acquire) {
+                std::thread::sleep(interval);
+                probe.probe_decide();
+                trace.push(TracePoint {
+                    t_ms: t0.elapsed().as_secs_f64() * 1e3,
+                    mode: probe.probe_mode(),
+                    switches: probe.probe_switches(),
+                });
+            }
+            trace
+        })
+    };
+    let r = body();
+    stop.store(true, Ordering::Release);
+    let mut trace = monitor.join().expect("mode monitor panicked");
+    // One final decision tick over the tail-of-run counter delta, then the
+    // end state — so even runs shorter than one monitor tick get a real
+    // decision and a trace point.
+    probe.probe_decide();
+    trace.push(TracePoint {
+        t_ms: t0.elapsed().as_secs_f64() * 1e3,
+        mode: probe.probe_mode(),
+        switches: probe.probe_switches(),
+    });
+    (r, trace)
+}
+
+fn sssp_result(
+    built: &BuiltQueue,
+    cfg: &AppConfig,
+    run: &SsspRun,
+    oracle: &[u64],
+    trace: Vec<TracePoint>,
+) -> AppResult {
+    AppResult {
+        backend: built.label,
+        workload: "sssp",
+        threads: cfg.threads,
+        elapsed: run.elapsed,
+        ops: run.ops(),
+        mops: run.mops(),
+        wasted_pct: run.wasted_pct(),
+        inversion_pct: run.inversion_pct(),
+        verified: run.matches(oracle) && run.failed_inserts == 0,
+        switches: trace.last().map(|t| t.switches).unwrap_or(0),
+        final_mode: trace
+            .last()
+            .map(|t| t.mode)
+            .unwrap_or_else(|| default_mode(built.label)),
+        trace,
+    }
+}
+
+fn des_result(built: &BuiltQueue, cfg: &AppConfig, run: &DesRun, trace: Vec<TracePoint>) -> AppResult {
+    AppResult {
+        backend: built.label,
+        workload: "des",
+        threads: cfg.threads,
+        elapsed: run.elapsed,
+        ops: run.ops(),
+        mops: run.ops() as f64 / run.elapsed.as_secs_f64().max(1e-9) / 1e6,
+        wasted_pct: if run.created == 0 {
+            0.0
+        } else {
+            100.0 * run.drained as f64 / run.created as f64
+        },
+        inversion_pct: run.inversion_pct(),
+        verified: run.conserved() && run.failed_inserts == 0,
+        switches: trace.last().map(|t| t.switches).unwrap_or(0),
+        final_mode: trace
+            .last()
+            .map(|t| t.mode)
+            .unwrap_or_else(|| default_mode(built.label)),
+        trace,
+    }
+}
+
+/// The fixed mode a static backend operates in (report column).
+fn default_mode(label: &str) -> u8 {
+    match label {
+        "ffwd" | "nuddle" | "nuddle_multiqueue" => mode::AWARE,
+        _ => mode::OBLIVIOUS,
+    }
+}
+
+/// Run one backend through the configured workload. For SSSP the caller
+/// supplies the shared graph and oracle (via [`run_app`]); DES needs
+/// neither.
+pub fn run_backend(
+    cfg: &AppConfig,
+    name: &str,
+    prepared: Option<&(Graph, Vec<u64>)>,
+) -> Result<AppResult> {
+    let built = build_queue(name, cfg.threads, cfg.seed)?;
+    match &cfg.workload {
+        AppWorkload::Sssp { graph, n, source } => {
+            let owned;
+            let (g, oracle) = match prepared {
+                Some((g, o)) => (g, o),
+                None => {
+                    let g = Graph::generate(*graph, *n, cfg.seed);
+                    let o = g.seq_dijkstra(*source);
+                    owned = (g, o);
+                    (&owned.0, &owned.1)
+                }
+            };
+            let scfg = SsspConfig {
+                threads: cfg.threads,
+                source: *source,
+            };
+            let queue = Arc::clone(&built.queue);
+            let (run, trace) =
+                run_traced(built.adaptive.as_ref(), cfg.trace_interval, move || {
+                    parallel_sssp(g, queue, &scfg)
+                });
+            Ok(sssp_result(&built, cfg, &run, oracle, trace))
+        }
+        AppWorkload::Des {
+            lps,
+            horizon,
+            max_dt,
+            max_events,
+        } => {
+            let dcfg = DesConfig {
+                lps: *lps,
+                horizon: *horizon,
+                max_dt: *max_dt,
+                threads: cfg.threads,
+                seed: cfg.seed,
+                max_events: *max_events,
+            };
+            let queue = Arc::clone(&built.queue);
+            let (run, trace) =
+                run_traced(built.adaptive.as_ref(), cfg.trace_interval, move || {
+                    phold(queue, &dcfg)
+                });
+            Ok(des_result(&built, cfg, &run, trace))
+        }
+    }
+}
+
+/// Run the workload over each named backend, sharing one generated graph
+/// and oracle across all of them (so every backend answers the *same*
+/// problem instance).
+pub fn run_app(cfg: &AppConfig, queues: &[&str]) -> Result<Vec<AppResult>> {
+    let prepared = match &cfg.workload {
+        AppWorkload::Sssp { graph, n, source } => {
+            let g = Graph::generate(*graph, *n, cfg.seed);
+            let oracle = g.seq_dijkstra(*source);
+            Some((g, oracle))
+        }
+        AppWorkload::Des { .. } => None,
+    };
+    let mut out = Vec::with_capacity(queues.len());
+    for name in queues {
+        out.push(run_backend(cfg, name, prepared.as_ref())?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_sssp() -> AppConfig {
+        AppConfig {
+            workload: AppWorkload::Sssp {
+                graph: GraphKind::Random { degree: 4 },
+                n: 400,
+                source: 0,
+            },
+            threads: 2,
+            seed: 13,
+            trace_interval: Duration::from_millis(5),
+        }
+    }
+
+    #[test]
+    fn build_queue_knows_all_backends() {
+        for name in ALL_BACKENDS {
+            let b = build_queue(name, 2, 1).expect(name);
+            assert_eq!(b.label, name);
+            assert!(b.queue.insert(10, 1));
+            assert_eq!(b.queue.delete_min().map(|(k, _)| k), Some(10));
+            assert_eq!(
+                b.adaptive.is_some(),
+                name.starts_with("smartpq"),
+                "{name}: adaptive handle presence"
+            );
+        }
+        assert!(build_queue("bogus", 2, 1).is_err());
+    }
+
+    #[test]
+    fn sssp_verifies_on_two_representative_backends() {
+        let cfg = quick_sssp();
+        for name in ["lotan_shavit", "multiqueue"] {
+            let r = run_backend(&cfg, name, None).unwrap();
+            assert!(r.verified, "{name}: {r:?}");
+            assert_eq!(r.workload, "sssp");
+            assert!(r.ops > 0);
+        }
+    }
+
+    #[test]
+    fn smartpq_backend_records_a_trace() {
+        let cfg = quick_sssp();
+        let r = run_backend(&cfg, "smartpq", None).unwrap();
+        assert!(r.verified, "{r:?}");
+        assert!(!r.trace.is_empty(), "adaptive run must record a trace");
+        let last = r.trace.last().unwrap();
+        assert!(last.mode == mode::OBLIVIOUS || last.mode == mode::AWARE);
+    }
+
+    #[test]
+    fn des_runs_and_conserves_on_ffwd() {
+        let cfg = AppConfig {
+            workload: AppWorkload::Des {
+                lps: 64,
+                horizon: 800,
+                max_dt: 100,
+                max_events: 0,
+            },
+            threads: 2,
+            seed: 7,
+            trace_interval: Duration::from_millis(5),
+        };
+        let r = run_backend(&cfg, "ffwd", None).unwrap();
+        assert!(r.verified, "{r:?}");
+        assert_eq!(r.final_mode, mode::AWARE);
+    }
+}

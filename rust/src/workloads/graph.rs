@@ -1,0 +1,291 @@
+//! Deterministic graph generation and the sequential Dijkstra oracle.
+//!
+//! Graphs are stored in CSR form (offset array + flat edge arrays) so the
+//! parallel SSSP driver shares one read-only [`Graph`] across worker
+//! threads without per-thread copies. Three generator families cover the
+//! contention shapes graph workloads expose:
+//!
+//! * [`Graph::random`] — uniform out-degree, uniform targets: a steadily
+//!   growing then draining frontier (the classic SSSP microload).
+//! * [`Graph::grid`] — 2D mesh: a narrow wavefront, so the queue stays
+//!   small and deleteMin-contended throughout.
+//! * [`Graph::power_law`] — Pareto out-degrees with hub-skewed targets:
+//!   bursty frontier growth when a hub settles, the closest shape to the
+//!   web/social graphs of "Engineering MultiQueues" (Williams & Sanders).
+//!
+//! Edge weights are uniform in `1..=MAX_WEIGHT` (never zero — zero-weight
+//! edges would let relaxed queues hide reordering behind ties).
+
+use crate::util::rng::Rng;
+
+/// Largest edge weight produced by any generator.
+pub const MAX_WEIGHT: u32 = 100;
+
+/// Generator family selection (CLI `--graph`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GraphKind {
+    /// Uniform out-degree, uniform random targets.
+    Random {
+        /// Out-degree of every vertex.
+        degree: usize,
+    },
+    /// 2D grid (near-square), 4-neighborhood.
+    Grid,
+    /// Pareto out-degrees (alpha ~= 2.2), targets skewed toward low ids.
+    PowerLaw {
+        /// Minimum out-degree (the Pareto scale parameter).
+        min_degree: usize,
+    },
+}
+
+impl GraphKind {
+    /// CLI label.
+    pub fn name(&self) -> &'static str {
+        match self {
+            GraphKind::Random { .. } => "random",
+            GraphKind::Grid => "grid",
+            GraphKind::PowerLaw { .. } => "powerlaw",
+        }
+    }
+}
+
+/// A directed graph with `u32` edge weights in CSR storage.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    /// CSR row offsets, length `n + 1`.
+    offsets: Vec<usize>,
+    /// Edge targets, length `m`.
+    targets: Vec<u32>,
+    /// Edge weights, parallel to `targets`.
+    weights: Vec<u32>,
+}
+
+impl Graph {
+    /// Build CSR storage from an adjacency list.
+    fn from_adj(adj: Vec<Vec<(u32, u32)>>) -> Graph {
+        let n = adj.len();
+        let m: usize = adj.iter().map(Vec::len).sum();
+        let mut offsets = Vec::with_capacity(n + 1);
+        let mut targets = Vec::with_capacity(m);
+        let mut weights = Vec::with_capacity(m);
+        offsets.push(0);
+        for row in &adj {
+            for &(v, w) in row {
+                targets.push(v);
+                weights.push(w);
+            }
+            offsets.push(targets.len());
+        }
+        Graph {
+            offsets,
+            targets,
+            weights,
+        }
+    }
+
+    /// Number of vertices.
+    pub fn vertices(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Number of directed edges.
+    pub fn edges(&self) -> usize {
+        self.targets.len()
+    }
+
+    /// Out-degree of `u`.
+    pub fn out_degree(&self, u: usize) -> usize {
+        self.offsets[u + 1] - self.offsets[u]
+    }
+
+    /// Iterate `(target, weight)` pairs of `u`'s out-edges.
+    pub fn neighbors(&self, u: usize) -> impl Iterator<Item = (u32, u32)> + '_ {
+        let (a, b) = (self.offsets[u], self.offsets[u + 1]);
+        self.targets[a..b]
+            .iter()
+            .copied()
+            .zip(self.weights[a..b].iter().copied())
+    }
+
+    /// Dispatch on a [`GraphKind`]; `n` is the (approximate, exact except
+    /// for `Grid` rounding) vertex count.
+    pub fn generate(kind: GraphKind, n: usize, seed: u64) -> Graph {
+        match kind {
+            GraphKind::Random { degree } => Graph::random(n, degree, seed),
+            GraphKind::Grid => {
+                let side = (n as f64).sqrt().ceil() as usize;
+                Graph::grid(side.max(2), side.max(2), seed)
+            }
+            GraphKind::PowerLaw { min_degree } => Graph::power_law(n, min_degree, seed),
+        }
+    }
+
+    /// Uniform random graph: every vertex gets exactly `degree` out-edges
+    /// with uniform targets (self-loops allowed; they are harmless for
+    /// SSSP since weights are positive).
+    pub fn random(n: usize, degree: usize, seed: u64) -> Graph {
+        assert!(n >= 2, "graph needs at least 2 vertices");
+        let mut rng = Rng::new(seed);
+        let mut adj = vec![Vec::with_capacity(degree); n];
+        for row in adj.iter_mut() {
+            for _ in 0..degree {
+                let v = rng.gen_range(n as u64) as u32;
+                let w = 1 + rng.gen_range(MAX_WEIGHT as u64) as u32;
+                row.push((v, w));
+            }
+        }
+        Graph::from_adj(adj)
+    }
+
+    /// 2D grid of `rows x cols` vertices, edges to the 4-neighborhood
+    /// (both directions), random weights.
+    pub fn grid(rows: usize, cols: usize, seed: u64) -> Graph {
+        assert!(rows >= 2 && cols >= 2, "grid needs at least 2x2");
+        let mut rng = Rng::new(seed);
+        let id = |r: usize, c: usize| (r * cols + c) as u32;
+        let mut adj = vec![Vec::with_capacity(4); rows * cols];
+        for r in 0..rows {
+            for c in 0..cols {
+                let u = id(r, c) as usize;
+                if c + 1 < cols {
+                    adj[u].push((id(r, c + 1), 1 + rng.gen_range(MAX_WEIGHT as u64) as u32));
+                }
+                if c > 0 {
+                    adj[u].push((id(r, c - 1), 1 + rng.gen_range(MAX_WEIGHT as u64) as u32));
+                }
+                if r + 1 < rows {
+                    adj[u].push((id(r + 1, c), 1 + rng.gen_range(MAX_WEIGHT as u64) as u32));
+                }
+                if r > 0 {
+                    adj[u].push((id(r - 1, c), 1 + rng.gen_range(MAX_WEIGHT as u64) as u32));
+                }
+            }
+        }
+        Graph::from_adj(adj)
+    }
+
+    /// Power-law graph: out-degrees drawn from a Pareto tail (alpha ~=
+    /// 2.2, scale `min_degree`, capped at 512), targets skewed toward low
+    /// vertex ids (`v = n * u^2` concentrates in-degree on the "hub"
+    /// prefix). Deterministic for a given seed.
+    pub fn power_law(n: usize, min_degree: usize, seed: u64) -> Graph {
+        assert!(n >= 2, "graph needs at least 2 vertices");
+        let min_degree = min_degree.max(1);
+        let mut rng = Rng::new(seed);
+        let alpha = 2.2f64;
+        let mut adj: Vec<Vec<(u32, u32)>> = vec![Vec::new(); n];
+        for row in adj.iter_mut() {
+            // Pareto(scale=min_degree, alpha): scale / U^(1/alpha).
+            let u = rng.gen_f64().max(1e-12);
+            let deg = ((min_degree as f64 / u.powf(1.0 / alpha)) as usize)
+                .clamp(min_degree, 512)
+                .min(n - 1);
+            for _ in 0..deg {
+                let r = rng.gen_f64();
+                let v = ((n as f64) * r * r) as usize % n;
+                let w = 1 + rng.gen_range(MAX_WEIGHT as u64) as u32;
+                row.push((v as u32, w));
+            }
+        }
+        Graph::from_adj(adj)
+    }
+
+    /// Sequential Dijkstra from `src` — the oracle every parallel run is
+    /// verified against. Unreachable vertices report `u64::MAX`.
+    pub fn seq_dijkstra(&self, src: usize) -> Vec<u64> {
+        let n = self.vertices();
+        let mut dist = vec![u64::MAX; n];
+        let mut heap = std::collections::BinaryHeap::new();
+        dist[src] = 0;
+        heap.push(std::cmp::Reverse((0u64, src)));
+        while let Some(std::cmp::Reverse((d, u))) = heap.pop() {
+            if d > dist[u] {
+                continue;
+            }
+            for (v, w) in self.neighbors(u) {
+                let nd = d + w as u64;
+                if nd < dist[v as usize] {
+                    dist[v as usize] = nd;
+                    heap.push(std::cmp::Reverse((nd, v as usize)));
+                }
+            }
+        }
+        dist
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_graph_shape() {
+        let g = Graph::random(100, 5, 7);
+        assert_eq!(g.vertices(), 100);
+        assert_eq!(g.edges(), 500);
+        for u in 0..100 {
+            assert_eq!(g.out_degree(u), 5);
+            for (v, w) in g.neighbors(u) {
+                assert!((v as usize) < 100);
+                assert!((1..=MAX_WEIGHT).contains(&w));
+            }
+        }
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        for kind in [
+            GraphKind::Random { degree: 4 },
+            GraphKind::Grid,
+            GraphKind::PowerLaw { min_degree: 3 },
+        ] {
+            let a = Graph::generate(kind, 200, 9);
+            let b = Graph::generate(kind, 200, 9);
+            assert_eq!(a.offsets, b.offsets, "{kind:?}");
+            assert_eq!(a.targets, b.targets, "{kind:?}");
+            assert_eq!(a.weights, b.weights, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn grid_shape_and_connectivity() {
+        let g = Graph::grid(5, 7, 3);
+        assert_eq!(g.vertices(), 35);
+        // Interior vertices have degree 4; the grid is strongly connected,
+        // so every vertex is reachable from the corner.
+        assert_eq!(g.out_degree(2 * 7 + 3), 4);
+        let dist = g.seq_dijkstra(0);
+        assert!(dist.iter().all(|&d| d != u64::MAX));
+    }
+
+    #[test]
+    fn power_law_has_heavy_tail() {
+        let g = Graph::power_law(2000, 3, 11);
+        let max_deg = (0..2000).map(|u| g.out_degree(u)).max().unwrap();
+        let min_deg = (0..2000).map(|u| g.out_degree(u)).min().unwrap();
+        assert!(min_deg >= 3);
+        assert!(max_deg >= 3 * min_deg, "no tail: max={max_deg} min={min_deg}");
+        // Hub skew: the low-id third receives more in-edges than the
+        // high-id third.
+        let mut in_deg = vec![0usize; 2000];
+        for u in 0..2000 {
+            for (v, _) in g.neighbors(u) {
+                in_deg[v as usize] += 1;
+            }
+        }
+        let lo: usize = in_deg[..666].iter().sum();
+        let hi: usize = in_deg[1334..].iter().sum();
+        assert!(lo > 2 * hi, "no hub skew: lo={lo} hi={hi}");
+    }
+
+    #[test]
+    fn oracle_matches_hand_checked_path() {
+        // 0 -> 1 (2), 0 -> 2 (10), 1 -> 2 (3): shortest 0->2 is 5.
+        let g = Graph::from_adj(vec![
+            vec![(1, 2), (2, 10)],
+            vec![(2, 3)],
+            vec![],
+        ]);
+        assert_eq!(g.seq_dijkstra(0), vec![0, 2, 5]);
+    }
+}

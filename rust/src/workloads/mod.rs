@@ -1,0 +1,59 @@
+//! Application workloads — graph and discrete-event benchmarks as
+//! first-class, backend-generic drivers (the workloads the paper uses to
+//! motivate SmartPQ in §1).
+//!
+//! The microbenchmark planes ([`crate::harness`], [`crate::sim`]) sweep
+//! *scripted* contention: fixed insert percentages, fixed key ranges.
+//! Real applications are different — their contention mix *emerges* from
+//! the algorithm. Parallel SSSP starts insert-heavy (the frontier grows),
+//! crosses over, and ends deleteMin-dominated (the frontier drains, most
+//! pops are stale); PHOLD holds a sliding event horizon whose pending set
+//! breathes with the random offsets. This module runs exactly those two
+//! applications over **every** registered queue backend and measures what
+//! the microbenchmarks cannot: whether SmartPQ's decision mechanism pays
+//! off when nobody tells it the phase schedule.
+//!
+//! Layout:
+//!
+//! * [`graph`] — deterministic generators (random / grid / power-law),
+//!   CSR storage, and the sequential Dijkstra oracle.
+//! * [`sssp`] — parallel Dijkstra over any [`crate::pq::ConcurrentPQ`],
+//!   with exact pending-work termination and wasted-work / relaxation
+//!   -error accounting.
+//! * [`des`] — the PHOLD driver with collision-free `(time << 32) | seq`
+//!   event keys (fixing the event-loss bug of the old example's
+//!   `(time << 6) | lp` packing) and the event-conservation invariant.
+//! * [`driver`] — the backend registry ([`driver::ALL_BACKENDS`]), the
+//!   [`driver::AdaptiveProbe`] observation trait, and [`driver::run_app`]
+//!   which runs a workload over each backend while tracing SmartPQ mode
+//!   switches.
+//! * [`report`] — stdout tables + `target/reports/app_*.csv` (schema
+//!   documented there).
+//!
+//! Entry points: the `smartpq app` CLI subcommand, the `app` figure in
+//! [`crate::harness::figures`], and the `sssp` / `event_simulation`
+//! examples (now thin wrappers over this module).
+//!
+//! ## Why relaxed queues stay correct here
+//!
+//! Both drivers are *self-healing* with respect to priority relaxation.
+//! SSSP re-inserts a vertex whenever its distance improves, so popping a
+//! non-minimal entry can only waste work (the pop is detected stale
+//! against the shared distance array), never corrupt a distance; the
+//! differential tests assert byte-equal distances against the sequential
+//! oracle for all ten backends. PHOLD event handlers are independent, so
+//! out-of-order execution affects only the *measured* inversion rate, and
+//! the conservation check (`created == consumed + pending`) proves no
+//! event is lost or duplicated regardless of ordering.
+
+pub mod des;
+pub mod driver;
+pub mod graph;
+pub mod report;
+pub mod sssp;
+
+pub use des::{phold, DesConfig, DesRun};
+pub use driver::{run_app, run_backend, AppConfig, AppResult, AppWorkload, ALL_BACKENDS};
+pub use graph::{Graph, GraphKind};
+pub use report::print_and_write;
+pub use sssp::{parallel_sssp, SsspConfig, SsspRun};

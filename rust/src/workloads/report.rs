@@ -1,0 +1,171 @@
+//! Report rendering for the application benchmarks: aligned stdout
+//! tables plus CSVs under `target/reports/`.
+//!
+//! ## CSV schema
+//!
+//! `app_<workload>.csv` — one row per backend:
+//!
+//! | column          | meaning                                                        |
+//! |-----------------|----------------------------------------------------------------|
+//! | `backend`       | queue name (see [`crate::workloads::driver::ALL_BACKENDS`])    |
+//! | `workload`      | `sssp` or `des`                                                |
+//! | `threads`       | worker threads                                                 |
+//! | `elapsed_s`     | wall-clock seconds of the parallel phase                       |
+//! | `ops`           | queue ops in the timed phase (DES excludes the post-run drain) |
+//! | `mops`          | `ops / elapsed_s / 1e6`                                        |
+//! | `wasted_pct`    | SSSP: stale pops / pops; DES: drained (unconsumed) / created   |
+//! | `inversion_pct` | pops delivered below the popped-key watermark / pops           |
+//! | `verified`      | oracle (SSSP) / conservation (DES) check result                |
+//! | `switches`      | SmartPQ mode switches (0 for static backends)                  |
+//! | `final_mode`    | `oblivious` or `aware` at run end                               |
+//!
+//! `app_<workload>_smartpq_trace.csv` — one row per decision tick of each
+//! adaptive backend: `backend,t_ms,mode,switches` (cumulative switches).
+
+use std::path::Path;
+
+use crate::delegation::nuddle::mode;
+use crate::harness::table::{fmt, Table};
+use crate::workloads::driver::AppResult;
+
+/// Default report directory (matches the figure generators).
+pub const REPORT_DIR: &str = "target/reports";
+
+fn mode_label(m: u8) -> &'static str {
+    if m == mode::AWARE {
+        "aware"
+    } else {
+        "oblivious"
+    }
+}
+
+/// Build the summary table for a batch of results (one workload).
+pub fn summary_table(results: &[AppResult]) -> Table {
+    let workload = results.first().map(|r| r.workload).unwrap_or("app");
+    let mut t = Table::new(
+        format!("Application benchmark [{workload}]"),
+        &[
+            "backend",
+            "workload",
+            "threads",
+            "elapsed_s",
+            "ops",
+            "mops",
+            "wasted_pct",
+            "inversion_pct",
+            "verified",
+            "switches",
+            "final_mode",
+        ],
+    );
+    for r in results {
+        t.row(vec![
+            r.backend.to_string(),
+            r.workload.to_string(),
+            r.threads.to_string(),
+            format!("{:.3}", r.elapsed.as_secs_f64()),
+            r.ops.to_string(),
+            fmt(r.mops),
+            format!("{:.2}", r.wasted_pct),
+            format!("{:.2}", r.inversion_pct),
+            r.verified.to_string(),
+            r.switches.to_string(),
+            mode_label(r.final_mode).to_string(),
+        ]);
+    }
+    t
+}
+
+/// Build the mode-switch trace table (adaptive backends only).
+pub fn trace_table(results: &[AppResult]) -> Table {
+    let workload = results.first().map(|r| r.workload).unwrap_or("app");
+    let mut t = Table::new(
+        format!("SmartPQ mode-switch trace [{workload}]"),
+        &["backend", "t_ms", "mode", "switches"],
+    );
+    for r in results {
+        for p in &r.trace {
+            t.row(vec![
+                r.backend.to_string(),
+                format!("{:.1}", p.t_ms),
+                mode_label(p.mode).to_string(),
+                p.switches.to_string(),
+            ]);
+        }
+    }
+    t
+}
+
+/// Print both tables and write the CSVs under `dir`. Returns the summary
+/// CSV path.
+pub fn print_and_write(results: &[AppResult], dir: impl AsRef<Path>) -> std::io::Result<String> {
+    let workload = results.first().map(|r| r.workload).unwrap_or("app");
+    let summary = summary_table(results);
+    summary.print();
+    let trace = trace_table(results);
+    if !trace.is_empty() {
+        trace.print();
+    }
+    let dir = dir.as_ref();
+    let summary_path = dir.join(format!("app_{workload}.csv"));
+    summary.write_csv(&summary_path)?;
+    let trace_path = dir.join(format!("app_{workload}_smartpq_trace.csv"));
+    trace.write_csv(&trace_path)?;
+    Ok(summary_path.display().to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::driver::TracePoint;
+    use std::time::Duration;
+
+    fn result(backend: &'static str, trace: Vec<TracePoint>) -> AppResult {
+        AppResult {
+            backend,
+            workload: "sssp",
+            threads: 4,
+            elapsed: Duration::from_millis(120),
+            ops: 10_000,
+            mops: 0.083,
+            wasted_pct: 12.5,
+            inversion_pct: 3.0,
+            verified: true,
+            switches: trace.last().map(|t| t.switches).unwrap_or(0),
+            final_mode: mode::OBLIVIOUS,
+            trace,
+        }
+    }
+
+    #[test]
+    fn tables_and_csvs_roundtrip() {
+        let results = vec![
+            result("lotan_shavit", Vec::new()),
+            result(
+                "smartpq",
+                vec![
+                    TracePoint {
+                        t_ms: 25.0,
+                        mode: mode::AWARE,
+                        switches: 1,
+                    },
+                    TracePoint {
+                        t_ms: 50.0,
+                        mode: mode::OBLIVIOUS,
+                        switches: 2,
+                    },
+                ],
+            ),
+        ];
+        let dir = std::env::temp_dir().join("smartpq_app_report_test");
+        let path = print_and_write(&results, &dir).unwrap();
+        let summary = std::fs::read_to_string(&path).unwrap();
+        assert!(summary.starts_with("backend,workload,threads"));
+        assert!(summary.contains("smartpq,sssp,4"));
+        let trace =
+            std::fs::read_to_string(dir.join("app_sssp_smartpq_trace.csv")).unwrap();
+        assert!(trace.contains("smartpq,25.0,aware,1"), "{trace}");
+        assert_eq!(trace.lines().count(), 3);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

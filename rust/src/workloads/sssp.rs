@@ -1,0 +1,303 @@
+//! Parallel single-source shortest paths over any [`ConcurrentPQ`].
+//!
+//! The driver is the textbook concurrent Dijkstra the paper motivates in
+//! §1: the queue holds `(encoded distance, vertex)` pairs, workers pop a
+//! (near-)minimum vertex, relax its out-edges with a CAS loop on the
+//! shared distance array, and push improvements back. Relaxed deleteMin
+//! (SprayList, MultiQueue) stays correct because popping a non-minimal
+//! vertex merely reorders relaxations — it can only produce *stale* pops
+//! (wasted work), never wrong distances.
+//!
+//! Termination uses an exact pending-work counter instead of the
+//! empty-poll heuristic the old example relied on: the counter is
+//! incremented *before* each insert and decremented only after a popped
+//! element is fully processed, so `pending == 0` proves both that the
+//! queue is empty and that no worker still holds work that could refill
+//! it. This is robust for delegation backends (Nuddle/SmartPQ in aware
+//! mode) whose `delete_min` can transiently report empty under load.
+//!
+//! Metrics reported per run (the CSV columns of `smartpq app`):
+//!
+//! * **wasted work** — stale pops (entry's distance already obsolete)
+//!   over total pops; the price of relaxation, and of concurrency itself.
+//! * **relaxation error** — pops whose key is below the maximum key
+//!   popped so far (a global watermark): an out-of-priority-order
+//!   delivery. Exact queues show a small residue from concurrent
+//!   interleaving; relaxed queues show their spray/two-choice spread.
+
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::pq::traits::ConcurrentPQ;
+use crate::workloads::graph::Graph;
+
+/// Parallel-SSSP configuration.
+#[derive(Debug, Clone)]
+pub struct SsspConfig {
+    /// Worker threads.
+    pub threads: usize,
+    /// Source vertex.
+    pub source: usize,
+}
+
+impl Default for SsspConfig {
+    fn default() -> Self {
+        SsspConfig {
+            threads: 4,
+            source: 0,
+        }
+    }
+}
+
+/// Result of one parallel SSSP run.
+#[derive(Debug, Clone)]
+pub struct SsspRun {
+    /// Final distance per vertex (`u64::MAX` = unreachable).
+    pub dist: Vec<u64>,
+    /// Successful deleteMins.
+    pub pops: u64,
+    /// Pops whose entry was already obsolete (wasted work).
+    pub stale_pops: u64,
+    /// Pops below the global popped-key watermark (relaxation error).
+    pub inversions: u64,
+    /// Successful inserts (including the initial source push).
+    pub inserts: u64,
+    /// Inserts rejected as duplicates (must be 0 — keys are unique).
+    pub failed_inserts: u64,
+    /// Wall-clock duration of the parallel phase.
+    pub elapsed: Duration,
+}
+
+impl SsspRun {
+    /// Completed queue operations (pops + inserts).
+    pub fn ops(&self) -> u64 {
+        self.pops + self.inserts
+    }
+
+    /// Throughput in Mops/s.
+    pub fn mops(&self) -> f64 {
+        self.ops() as f64 / self.elapsed.as_secs_f64().max(1e-9) / 1e6
+    }
+
+    /// Wasted-work percentage (stale pops / pops).
+    pub fn wasted_pct(&self) -> f64 {
+        if self.pops == 0 {
+            0.0
+        } else {
+            100.0 * self.stale_pops as f64 / self.pops as f64
+        }
+    }
+
+    /// Relaxation-error percentage (inverted pops / pops).
+    pub fn inversion_pct(&self) -> f64 {
+        if self.pops == 0 {
+            0.0
+        } else {
+            100.0 * self.inversions as f64 / self.pops as f64
+        }
+    }
+
+    /// True when every distance matches the sequential oracle.
+    pub fn matches(&self, oracle: &[u64]) -> bool {
+        self.dist == oracle
+    }
+}
+
+/// Encode `(distance, vertex)` into a unique nonzero queue key. Distances
+/// are monotone non-increasing per vertex, so every encoded key is
+/// inserted at most once — set semantics never reject a live relaxation.
+#[inline]
+fn encode(d: u64, v: usize, n: usize) -> u64 {
+    1 + d * n as u64 + v as u64
+}
+
+#[inline]
+fn decode(key: u64, n: usize) -> (u64, usize) {
+    ((key - 1) / n as u64, ((key - 1) % n as u64) as usize)
+}
+
+/// Per-worker counters, summed after join.
+#[derive(Debug, Default, Clone, Copy)]
+struct WorkerCounters {
+    pops: u64,
+    stale: u64,
+    inversions: u64,
+    inserts: u64,
+    failed_inserts: u64,
+}
+
+/// Run parallel Dijkstra over `q`; the queue must be empty on entry.
+pub fn parallel_sssp(g: &Graph, q: Arc<dyn ConcurrentPQ>, cfg: &SsspConfig) -> SsspRun {
+    let n = g.vertices();
+    assert!(cfg.source < n, "source out of range");
+    assert!(cfg.threads >= 1, "need at least one worker");
+    // Key-space sanity: max distance is bounded by (n-1) * MAX_WEIGHT.
+    let max_key = (n as u64 - 1)
+        .saturating_mul(crate::workloads::graph::MAX_WEIGHT as u64)
+        .saturating_mul(n as u64)
+        .saturating_add(n as u64);
+    assert!(max_key < u64::MAX - 1, "graph too large for key packing");
+
+    let dist: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(u64::MAX)).collect();
+    dist[cfg.source].store(0, Ordering::Relaxed);
+    // Exact outstanding-work counter; see module docs.
+    let pending = AtomicI64::new(1);
+    assert!(
+        q.insert(encode(0, cfg.source, n), cfg.source as u64),
+        "queue must be empty on entry"
+    );
+    let watermark = AtomicU64::new(0);
+
+    let t0 = Instant::now();
+    // Scoped workers borrow the graph and the shared atomics directly —
+    // no per-run deep copies of the CSR arrays.
+    let totals = std::thread::scope(|s| {
+        let workers: Vec<_> = (0..cfg.threads)
+            .map(|_| {
+                let q = Arc::clone(&q);
+                let (dist, pending, watermark) = (&dist, &pending, &watermark);
+                s.spawn(move || {
+                    let mut c = WorkerCounters::default();
+                    let mut misses = 0u64;
+                    loop {
+                        match q.delete_min() {
+                            Some((key, _)) => {
+                                misses = 0;
+                                c.pops += 1;
+                                if key < watermark.fetch_max(key, Ordering::Relaxed) {
+                                    c.inversions += 1;
+                                }
+                                let (d, u) = decode(key, n);
+                                if d > dist[u].load(Ordering::Relaxed) {
+                                    c.stale += 1;
+                                    pending.fetch_sub(1, Ordering::AcqRel);
+                                    continue;
+                                }
+                                for (v, w) in g.neighbors(u) {
+                                    let nd = d + w as u64;
+                                    let v = v as usize;
+                                    let mut cur = dist[v].load(Ordering::Relaxed);
+                                    while nd < cur {
+                                        match dist[v].compare_exchange_weak(
+                                            cur,
+                                            nd,
+                                            Ordering::Relaxed,
+                                            Ordering::Relaxed,
+                                        ) {
+                                            Ok(_) => {
+                                                // Count the work *before*
+                                                // the insert so no worker
+                                                // can see pending == 0
+                                                // while this element is in
+                                                // flight.
+                                                pending.fetch_add(1, Ordering::AcqRel);
+                                                if q.insert(encode(nd, v, n), v as u64) {
+                                                    c.inserts += 1;
+                                                } else {
+                                                    c.failed_inserts += 1;
+                                                    pending.fetch_sub(1, Ordering::AcqRel);
+                                                }
+                                                break;
+                                            }
+                                            Err(now) => cur = now,
+                                        }
+                                    }
+                                }
+                                pending.fetch_sub(1, Ordering::AcqRel);
+                            }
+                            None => {
+                                if pending.load(Ordering::Acquire) <= 0 {
+                                    return c;
+                                }
+                                // Deadman: a queue that loses elements
+                                // would strand `pending` above zero
+                                // forever; fail loudly instead of hanging
+                                // the suite.
+                                misses += 1;
+                                assert!(
+                                    misses < 50_000_000,
+                                    "sssp stalled with pending={} — queue lost elements?",
+                                    pending.load(Ordering::Acquire)
+                                );
+                                std::thread::yield_now();
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        let mut totals = WorkerCounters::default();
+        for w in workers {
+            let c = w.join().expect("sssp worker panicked");
+            totals.pops += c.pops;
+            totals.stale += c.stale;
+            totals.inversions += c.inversions;
+            totals.inserts += c.inserts;
+            totals.failed_inserts += c.failed_inserts;
+        }
+        totals
+    });
+    let elapsed = t0.elapsed();
+    SsspRun {
+        dist: dist.iter().map(|d| d.load(Ordering::Relaxed)).collect(),
+        pops: totals.pops,
+        stale_pops: totals.stale,
+        inversions: totals.inversions,
+        inserts: totals.inserts + 1, // + initial source push
+        failed_inserts: totals.failed_inserts,
+        elapsed,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pq::{LotanShavitPQ, MultiQueue};
+
+    fn graph() -> Graph {
+        Graph::random(600, 5, 21)
+    }
+
+    #[test]
+    fn exact_queue_matches_oracle() {
+        let g = graph();
+        let want = g.seq_dijkstra(0);
+        let q: Arc<dyn ConcurrentPQ> = Arc::new(LotanShavitPQ::new());
+        let run = parallel_sssp(&g, q, &SsspConfig { threads: 2, source: 0 });
+        assert!(run.matches(&want));
+        assert_eq!(run.failed_inserts, 0);
+        // Every inserted element is popped exactly once.
+        assert_eq!(run.pops, run.inserts);
+    }
+
+    #[test]
+    fn relaxed_queue_matches_oracle_with_wasted_work_counted() {
+        let g = graph();
+        let want = g.seq_dijkstra(0);
+        let q: Arc<dyn ConcurrentPQ> = Arc::new(MultiQueue::new(4));
+        let run = parallel_sssp(&g, q, &SsspConfig { threads: 4, source: 0 });
+        assert!(run.matches(&want));
+        assert_eq!(run.pops, run.inserts);
+        assert!(run.wasted_pct() <= 100.0);
+    }
+
+    #[test]
+    fn single_thread_has_no_inversions_on_exact_queue() {
+        let g = Graph::grid(12, 12, 5);
+        let want = g.seq_dijkstra(0);
+        let q: Arc<dyn ConcurrentPQ> = Arc::new(LotanShavitPQ::new());
+        let run = parallel_sssp(&g, q, &SsspConfig { threads: 1, source: 0 });
+        assert!(run.matches(&want));
+        assert_eq!(run.inversions, 0);
+    }
+
+    #[test]
+    fn key_encoding_roundtrips() {
+        let n = 1000;
+        for (d, v) in [(0u64, 0usize), (1, 999), (123_456, 500)] {
+            let (dd, vv) = decode(encode(d, v, n), n);
+            assert_eq!((dd, vv), (d, v));
+        }
+    }
+}

@@ -282,7 +282,7 @@ fn paper_shapes_hold_at_benchmark_scale() {
         run_workload(algo, &Workload::single(size, range, threads, pct, 3.0, 21)).overall_mops()
     };
     let herlihy = SimAlgo::AlistarhHerlihy;
-    let nuddle = SimAlgo::Nuddle { servers: 8 };
+    let nuddle = SimAlgo::nuddle(8);
     let ffwd = SimAlgo::Ffwd;
     let lotan = SimAlgo::LotanShavit;
 
@@ -320,7 +320,7 @@ fn smartpq_tracks_envelope_on_fig11_workload() {
         },
         &mk(phases.clone()),
     );
-    let ndl = run_workload(&SimAlgo::Nuddle { servers: 8 }, &mk(phases.clone()));
+    let ndl = run_workload(&SimAlgo::nuddle(8), &mk(phases.clone()));
     let obv = run_workload(&SimAlgo::AlistarhHerlihy, &mk(phases));
     // Per-phase: SmartPQ within 15% of the better static mode.
     let mut wins = 0;

@@ -238,7 +238,7 @@ fn prop_sim_invariants() {
             3 => SimAlgo::MultiQueue {
                 queues_per_thread: g.usize(1..6),
             },
-            _ => SimAlgo::Nuddle { servers: 4 },
+            _ => SimAlgo::nuddle(4),
         };
         let w = Workload::single(size, range, threads, pct, 1.0, seed);
         let a = run_workload(&algo, &w);

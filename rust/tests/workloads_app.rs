@@ -1,0 +1,102 @@
+//! Application-workload differential tests: every backend's parallel
+//! SSSP must reproduce the sequential Dijkstra oracle bit-for-bit, and
+//! PHOLD event conservation must hold across >= 4 threads — for all ten
+//! registered backends, relaxed and delegated alike.
+
+use std::time::Duration;
+
+use smartpq::workloads::driver::{build_queue, run_backend, ALL_BACKENDS};
+use smartpq::workloads::{
+    parallel_sssp, AppConfig, AppWorkload, Graph, GraphKind, SsspConfig,
+};
+
+fn sssp_cfg(threads: usize, n: usize) -> AppConfig {
+    AppConfig {
+        workload: AppWorkload::Sssp {
+            graph: GraphKind::Random { degree: 5 },
+            n,
+            source: 0,
+        },
+        threads,
+        seed: 31,
+        trace_interval: Duration::from_millis(5),
+    }
+}
+
+#[test]
+fn sssp_every_backend_matches_the_sequential_oracle() {
+    let cfg = sssp_cfg(4, 1_200);
+    for name in ALL_BACKENDS {
+        let r = run_backend(&cfg, name, None).expect(name);
+        assert!(r.verified, "{name} diverged from the oracle: {r:?}");
+        assert!(r.ops > 0, "{name} did no work");
+        // Wasted work is a fraction of pops by construction.
+        assert!(r.wasted_pct <= 100.0, "{name}");
+    }
+}
+
+#[test]
+fn sssp_grid_and_power_law_graphs_verify_on_relaxed_backends() {
+    for kind in [GraphKind::Grid, GraphKind::PowerLaw { min_degree: 3 }] {
+        let g = Graph::generate(kind, 900, 17);
+        let oracle = g.seq_dijkstra(0);
+        for name in ["multiqueue", "alistarh_fraser"] {
+            let built = build_queue(name, 4, 17).unwrap();
+            let run = parallel_sssp(
+                &g,
+                built.queue,
+                &SsspConfig {
+                    threads: 4,
+                    source: 0,
+                },
+            );
+            assert!(run.matches(&oracle), "{name} on {kind:?}");
+            assert_eq!(run.failed_inserts, 0, "{name} on {kind:?}");
+            assert_eq!(run.pops, run.inserts, "{name} on {kind:?}: element leak");
+        }
+    }
+}
+
+#[test]
+fn des_conservation_holds_on_every_backend_at_4_threads() {
+    let cfg = AppConfig {
+        workload: AppWorkload::Des {
+            lps: 96, // > 64 LPs: the regime the old key packing lost events in
+            horizon: 1_200,
+            max_dt: 100,
+            max_events: 0,
+        },
+        threads: 4,
+        seed: 11,
+        trace_interval: Duration::from_millis(5),
+    };
+    for name in ALL_BACKENDS {
+        let r = run_backend(&cfg, name, None).expect(name);
+        assert!(
+            r.verified,
+            "{name} lost or duplicated events (conservation / insert-failure): {r:?}"
+        );
+        assert!(r.ops > 96, "{name} did no simulation work");
+    }
+}
+
+/// The acceptance scenario: beyond one NUMA node's worth of threads, the
+/// organic SSSP phase structure (insert-heavy frontier growth, then a
+/// deleteMin-dominated drain) must drive SmartPQ's classifier through at
+/// least one mode switch — no scripted insert-percentage schedule
+/// involved.
+#[test]
+fn smartpq_sssp_switches_modes_beyond_one_node() {
+    let mut cfg = sssp_cfg(12, 12_000);
+    cfg.trace_interval = Duration::from_millis(2);
+    for name in ["smartpq", "smartpq_multiqueue"] {
+        let r = run_backend(&cfg, name, None).expect(name);
+        assert!(r.verified, "{name}: {r:?}");
+        assert!(
+            r.switches >= 1,
+            "{name} never adapted; trace: {:?}",
+            r.trace
+        );
+        assert!(!r.trace.is_empty(), "{name} recorded no mode trace");
+    }
+}
