@@ -30,6 +30,7 @@ fn main() {
                 servers: 2,
                 max_clients: 16,
                 idle_sleep_us: 50,
+                combine: true,
             },
             decision_interval: Duration::from_millis(100),
             initial_mode: mode::OBLIVIOUS,

@@ -156,6 +156,7 @@ fn main() {
                     servers: 1,
                     max_clients: 8,
                     idle_sleep_us: 20,
+                    combine: true,
                 },
                 decision_interval: std::time::Duration::from_secs(3600),
                 initial_mode: mode::OBLIVIOUS,

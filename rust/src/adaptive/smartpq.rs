@@ -223,6 +223,34 @@ impl<B: ConcurrentPQ + HasStats + 'static> ConcurrentPQ for SmartPQ<B> {
         }
     }
 
+    /// Batch ops read the mode once and dispatch the whole batch — an op
+    /// racing a mode flip lands entirely under one mode, which is exactly
+    /// the per-op guarantee (the paper's "no synchronization point")
+    /// lifted to batches.
+    fn insert_batch_each(&self, items: &[(u64, u64)], ok: &mut [bool]) -> usize {
+        if self.algo.load(Ordering::Relaxed) == mode::OBLIVIOUS {
+            self.nuddle.base().insert_batch_each(items, ok)
+        } else {
+            self.nuddle.insert_batch_each(items, ok)
+        }
+    }
+
+    fn delete_min_batch(&self, n: usize, out: &mut Vec<(u64, u64)>) -> usize {
+        if self.algo.load(Ordering::Relaxed) == mode::OBLIVIOUS {
+            self.nuddle.base().delete_min_batch(n, out)
+        } else {
+            self.nuddle.delete_min_batch(n, out)
+        }
+    }
+
+    fn peek_min_hint(&self) -> Option<u64> {
+        self.nuddle.base().peek_min_hint()
+    }
+
+    fn record_eliminated(&self, pairs: u64, max_key: u64) {
+        self.nuddle.base().record_eliminated(pairs, max_key);
+    }
+
     fn len(&self) -> usize {
         self.nuddle.base().len()
     }
@@ -258,6 +286,7 @@ mod tests {
                     servers: 2,
                     max_clients: 16,
                     idle_sleep_us: 10,
+                    combine: true,
                 },
                 decision_interval: Duration::from_millis(20),
                 initial_mode: mode::OBLIVIOUS,

@@ -167,6 +167,49 @@ impl ConcurrentPQ for FfwdPQ {
         encode::decode_delete_min(p, s)
     }
 
+    /// Client-side batch: the channel carries one op per request line, so
+    /// the only amortization available here is a single TLS registration
+    /// borrow for the whole batch (the server still serializes the ops).
+    fn insert_batch_each(&self, items: &[(u64, u64)], ok: &mut [bool]) -> usize {
+        debug_assert!(ok.len() >= items.len());
+        self.with_client(|c| {
+            let mut n = 0;
+            for (i, &(k, v)) in items.iter().enumerate() {
+                let r = if crate::pq::traits::is_valid_user_key(k) {
+                    let (p, _) = c.call(OpCode::Insert, k, v);
+                    encode::decode_insert(p)
+                } else {
+                    // Rejected client-side; keep the (server-maintained)
+                    // counters honest so batching does not skew the mix.
+                    c.shared.stats.record_failed_insert();
+                    false
+                };
+                ok[i] = r;
+                if r {
+                    n += 1;
+                }
+            }
+            n
+        })
+    }
+
+    fn delete_min_batch(&self, n: usize, out: &mut Vec<(u64, u64)>) -> usize {
+        self.with_client(|c| {
+            let mut got = 0;
+            while got < n {
+                let (p, s) = c.call(OpCode::DeleteMin, 0, 0);
+                match encode::decode_delete_min(p, s) {
+                    Some(kv) => {
+                        out.push(kv);
+                        got += 1;
+                    }
+                    None => break,
+                }
+            }
+            got
+        })
+    }
+
     fn len(&self) -> usize {
         self.shared.stats.size()
     }

@@ -14,6 +14,58 @@
 //! exactly at a mode transition is never stranded. The paper's
 //! `serve_requests` simply returns in oblivious mode and leaves the
 //! transition race unaddressed.
+//!
+//! # The combining server protocol
+//!
+//! With `NuddleConfig::combine` on (the default), a server does **not**
+//! execute its group's pending requests one-by-one. Each sweep of a group
+//! runs three phases (cf. Calciu et al., "Adaptive Priority Queue with
+//! Elimination and Combining", and PIPQ's insert-side batching):
+//!
+//! 1. **Collect** — poll all request lines of the group, buffering every
+//!    pending op.
+//! 2. **Eliminate** — pair pending inserts with pending deleteMins: when
+//!    an insert's key is strictly below the base's observed minimum
+//!    ([`crate::pq::traits::ConcurrentPQ::peek_min_hint`]), that insert
+//!    would immediately become the minimum, so the paired deleteMin is
+//!    served the insert's `(key, value)` directly and *neither op touches
+//!    the base*. The pair linearizes as insert-immediately-followed-by-
+//!    deleteMin. Why this respects the set semantics: strictness rules
+//!    out `key == min` (a possible live duplicate, which must fail), and
+//!    every `peek_min_hint` implementation returns a *lower bound* on the
+//!    live key set as of some point during the call — so a duplicate
+//!    that *completed* before our client even published its insert forces
+//!    `hint <= key` and disables elimination. A duplicate insert that
+//!    races the pair (or whose element is already claimed by an in-flight
+//!    deleteMin, i.e. logically deleted) may see both inserts report
+//!    success; that is the linearization `ins(k) → del→k → ins(k)` — no
+//!    duplicate is ever admitted into the structure. Ordering-wise an
+//!    eliminated pair is relaxed exactly the way SprayList's deleteMin
+//!    already is (a concurrent deleteMin elsewhere may observe a slightly
+//!    larger minimum than the just-eliminated key). Eliminated pairs are
+//!    folded into the base's operation counters
+//!    ([`crate::pq::traits::ConcurrentPQ::record_eliminated`]) so
+//!    SmartPQ's feature extraction still sees the true op mix.
+//! 3. **Combine the residue** — the remaining deleteMins execute as one
+//!    [`crate::pq::traits::ConcurrentPQ::delete_min_batch`] (a single
+//!    head traversal claims the whole prefix), popped elements assigned
+//!    to the waiting deleteMins in slot order; the remaining inserts
+//!    execute as one key-sorted
+//!    [`crate::pq::traits::ConcurrentPQ::insert_batch_each`] (a single
+//!    hinted predecessor walk). Sentinel keys inside a batch fail
+//!    per-item in every build profile — a bad key must not poison the
+//!    group's combined response write-back.
+//!
+//! **Response-ordering invariant:** every pending request of the sweep
+//! gets exactly one response, and all of a group's responses are written
+//! *after* all of the sweep's base work, back-to-back on the group's
+//! single response line — so one dirty-line transfer still publishes up
+//! to [`GROUP_SIZE`] responses (ffwd's bandwidth trick), and a client can
+//! never observe its response while its op is still in flight. Since
+//! each client has at most one outstanding request and its next request
+//! can only be published after it consumed the response toggle flip,
+//! per-client FIFO order is preserved by construction; the
+//! `tests/batch_ops.rs` stress test hammers this with 8+ threads.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -43,6 +95,10 @@ pub struct NuddleConfig {
     /// Idle sleep between sweeps when no requests arrive (µs). Keeps
     /// oblivious-mode servers nearly free.
     pub idle_sleep_us: u64,
+    /// Serve each group with the combining protocol (see module docs).
+    /// Off = the pre-combining one-op-per-request server, kept as the
+    /// baseline for `bench --figure batch`.
+    pub combine: bool,
 }
 
 impl Default for NuddleConfig {
@@ -51,6 +107,7 @@ impl Default for NuddleConfig {
             servers: 8,
             max_clients: 64,
             idle_sleep_us: 50,
+            combine: true,
         }
     }
 }
@@ -88,6 +145,10 @@ pub struct NuddleServer<B: ConcurrentPQ> {
     shared: Arc<NuddleShared<B>>,
     my_groups: Vec<usize>,
     last_toggle: Vec<[u8; GROUP_SIZE]>,
+    /// Combining protocol on/off (from [`NuddleConfig::combine`]).
+    combine: bool,
+    /// Reused buffer for the residual combined pop (no per-sweep allocs).
+    scratch_pop: Vec<(u64, u64)>,
 }
 
 /// Public client handle (explicit alternative to the transparent TLS
@@ -122,6 +183,7 @@ impl<B: ConcurrentPQ + 'static> Nuddle<B> {
             let my_groups: Vec<usize> = (0..groups).filter(|g| g % cfg.servers == s).collect();
             let sh = shared.clone();
             let idle = cfg.idle_sleep_us;
+            let combine = cfg.combine;
             servers.push(
                 std::thread::Builder::new()
                     .name(format!("nuddle-server-{s}"))
@@ -130,6 +192,8 @@ impl<B: ConcurrentPQ + 'static> Nuddle<B> {
                             last_toggle: vec![[0; GROUP_SIZE]; my_groups.len()],
                             my_groups,
                             shared: sh,
+                            combine,
+                            scratch_pop: Vec::with_capacity(GROUP_SIZE),
                         };
                         srv.run(idle);
                     })
@@ -156,6 +220,11 @@ impl<B: ConcurrentPQ + 'static> Nuddle<B> {
     /// Configured server count.
     pub fn server_count(&self) -> usize {
         self.cfg.servers
+    }
+
+    /// True when the servers run the combining protocol.
+    pub fn combining(&self) -> bool {
+        self.cfg.combine
     }
 
     /// Register an explicit client handle.
@@ -211,6 +280,57 @@ impl<B: ConcurrentPQ + 'static> ClientSlot<B> {
         self.resp_toggle = t;
         (p, s)
     }
+
+    /// Delegated insert. The single place the client-side key validation
+    /// happens — both [`Nuddle`]'s transparent path and
+    /// [`NuddleClient`]'s explicit path funnel through here, so the check
+    /// runs exactly once per op (the base's own `check_user_key` never
+    /// fires for delegated inserts: a debug-invalid key panics *here*, on
+    /// the client, not on a server thread holding a response line).
+    fn insert(&mut self, key: u64, value: u64) -> bool {
+        crate::pq::traits::check_user_key(key);
+        let (p, _) = self.call(OpCode::Insert, key, value);
+        encode::decode_insert(p)
+    }
+
+    /// Delegated deleteMin.
+    fn delete_min(&mut self) -> Option<(u64, u64)> {
+        let (p, s) = self.call(OpCode::DeleteMin, 0, 0);
+        encode::decode_delete_min(p, s)
+    }
+
+    /// Delegated batch insert: one channel-slot borrow for the batch;
+    /// sentinel keys fail client-side in every build profile.
+    fn insert_batch_each(&mut self, items: &[(u64, u64)], ok: &mut [bool]) -> usize {
+        debug_assert!(ok.len() >= items.len());
+        let mut n = 0;
+        for (i, &(k, v)) in items.iter().enumerate() {
+            let r = crate::pq::traits::is_valid_user_key(k) && {
+                let (p, _) = self.call(OpCode::Insert, k, v);
+                encode::decode_insert(p)
+            };
+            ok[i] = r;
+            if r {
+                n += 1;
+            }
+        }
+        n
+    }
+
+    /// Delegated batch deleteMin.
+    fn delete_min_batch(&mut self, n: usize, out: &mut Vec<(u64, u64)>) -> usize {
+        let mut got = 0;
+        while got < n {
+            match self.delete_min() {
+                Some(kv) => {
+                    out.push(kv);
+                    got += 1;
+                }
+                None => break,
+            }
+        }
+        got
+    }
 }
 
 impl<B: ConcurrentPQ> NuddleServer<B> {
@@ -218,31 +338,182 @@ impl<B: ConcurrentPQ> NuddleServer<B> {
     /// Returns the number of requests served (paper: `serve_requests`).
     pub fn serve_requests(&mut self) -> usize {
         let mut served = 0;
-        for (gi, &g) in self.my_groups.iter().enumerate() {
-            let resp_line = &self.shared.responses[g];
-            let mut buffered: [(usize, u64, u64); GROUP_SIZE] = [(usize::MAX, 0, 0); GROUP_SIZE];
-            let mut n_buf = 0;
-            for pos in 0..GROUP_SIZE {
-                let slot = g * GROUP_SIZE + pos;
-                if let Some((op, key, value, t)) =
-                    self.shared.requests[slot].poll(self.last_toggle[gi][pos])
-                {
-                    self.last_toggle[gi][pos] = t;
-                    let (p, s) = match op {
-                        OpCode::Insert => encode::insert(self.shared.base.insert(key, value)),
-                        OpCode::DeleteMin => encode::delete_min(self.shared.base.delete_min()),
-                        OpCode::Nop => continue,
-                    };
-                    buffered[n_buf] = (pos, p, s);
-                    n_buf += 1;
-                }
-            }
-            for &(pos, p, s) in &buffered[..n_buf] {
-                resp_line.write(pos, p, s);
-            }
-            served += n_buf;
+        for gi in 0..self.my_groups.len() {
+            served += if self.combine {
+                self.serve_group_combining(gi)
+            } else {
+                self.serve_group_sequential(gi)
+            };
         }
         served
+    }
+
+    /// The pre-combining server: execute each pending request against the
+    /// base one-by-one, then publish the group's buffered responses.
+    fn serve_group_sequential(&mut self, gi: usize) -> usize {
+        let g = self.my_groups[gi];
+        let resp_line = &self.shared.responses[g];
+        let mut buffered: [(usize, u64, u64); GROUP_SIZE] = [(usize::MAX, 0, 0); GROUP_SIZE];
+        let mut n_buf = 0;
+        for pos in 0..GROUP_SIZE {
+            let slot = g * GROUP_SIZE + pos;
+            if let Some((op, key, value, t)) =
+                self.shared.requests[slot].poll(self.last_toggle[gi][pos])
+            {
+                self.last_toggle[gi][pos] = t;
+                let (p, s) = match op {
+                    OpCode::Insert => encode::insert(self.shared.base.insert(key, value)),
+                    OpCode::DeleteMin => encode::delete_min(self.shared.base.delete_min()),
+                    OpCode::Nop => continue,
+                };
+                buffered[n_buf] = (pos, p, s);
+                n_buf += 1;
+            }
+        }
+        for &(pos, p, s) in &buffered[..n_buf] {
+            resp_line.write(pos, p, s);
+        }
+        n_buf
+    }
+
+    /// The combining server: collect → eliminate → combined residue →
+    /// publish (see module docs for the protocol and its invariants).
+    fn serve_group_combining(&mut self, gi: usize) -> usize {
+        let g = self.my_groups[gi];
+
+        // Phase 1: collect the group's pending ops.
+        let mut pend: [(usize, OpCode, u64, u64); GROUP_SIZE] =
+            [(usize::MAX, OpCode::Nop, 0, 0); GROUP_SIZE];
+        let mut n_pend = 0;
+        for pos in 0..GROUP_SIZE {
+            let slot = g * GROUP_SIZE + pos;
+            if let Some((op, key, value, t)) =
+                self.shared.requests[slot].poll(self.last_toggle[gi][pos])
+            {
+                self.last_toggle[gi][pos] = t;
+                if matches!(op, OpCode::Nop) {
+                    continue;
+                }
+                pend[n_pend] = (pos, op, key, value);
+                n_pend += 1;
+            }
+        }
+        if n_pend == 0 {
+            return 0;
+        }
+
+        let mut resp: [(usize, u64, u64); GROUP_SIZE] = [(usize::MAX, 0, 0); GROUP_SIZE];
+        let mut n_resp = 0;
+        let mut done = [false; GROUP_SIZE];
+
+        // Phase 2: insert→deleteMin elimination below the observed
+        // minimum (smallest candidate inserts first, so eliminated
+        // deleteMins receive the best available keys).
+        let n_del = pend[..n_pend]
+            .iter()
+            .filter(|p| p.1 == OpCode::DeleteMin)
+            .count();
+        if n_del > 0 && n_del < n_pend {
+            if let Some(min_hint) = self.shared.base.peek_min_hint() {
+                let mut cand: [usize; GROUP_SIZE] = [0; GROUP_SIZE];
+                let mut n_cand = 0;
+                for (i, p) in pend[..n_pend].iter().enumerate() {
+                    if p.1 == OpCode::Insert
+                        && p.2 < min_hint
+                        && crate::pq::traits::is_valid_user_key(p.2)
+                    {
+                        cand[n_cand] = i;
+                        n_cand += 1;
+                    }
+                }
+                cand[..n_cand].sort_unstable_by_key(|&i| pend[i].2);
+                let mut ci = 0;
+                let mut elim_max_key = 0u64;
+                for di in 0..n_pend {
+                    if pend[di].1 != OpCode::DeleteMin || ci >= n_cand {
+                        continue;
+                    }
+                    let ii = cand[ci];
+                    ci += 1;
+                    // The pair linearizes as insert-then-deleteMin;
+                    // neither op touches the base.
+                    let (ip, is) = encode::insert(true);
+                    resp[n_resp] = (pend[ii].0, ip, is);
+                    n_resp += 1;
+                    let (dp, ds) = encode::delete_min(Some((pend[ii].2, pend[ii].3)));
+                    resp[n_resp] = (pend[di].0, dp, ds);
+                    n_resp += 1;
+                    elim_max_key = elim_max_key.max(pend[ii].2);
+                    done[ii] = true;
+                    done[di] = true;
+                }
+                // The pairs never reached the base, but SmartPQ's
+                // feature extraction reads the base's counters — fold
+                // them in so the classifier sees the true op mix.
+                if ci > 0 {
+                    self.shared.base.record_eliminated(ci as u64, elim_max_key);
+                }
+            }
+        }
+
+        // Phase 3a: residual deleteMins as one combined pop; popped
+        // elements (ascending) are assigned in slot order.
+        let want = (0..n_pend)
+            .filter(|&i| !done[i] && pend[i].1 == OpCode::DeleteMin)
+            .count();
+        if want > 0 {
+            self.scratch_pop.clear();
+            self.shared.base.delete_min_batch(want, &mut self.scratch_pop);
+            let mut pi = 0;
+            for i in 0..n_pend {
+                if done[i] || pend[i].1 != OpCode::DeleteMin {
+                    continue;
+                }
+                let r = if pi < self.scratch_pop.len() {
+                    let kv = self.scratch_pop[pi];
+                    pi += 1;
+                    Some(kv)
+                } else {
+                    None
+                };
+                let (p, s) = encode::delete_min(r);
+                resp[n_resp] = (pend[i].0, p, s);
+                n_resp += 1;
+                done[i] = true;
+            }
+        }
+
+        // Phase 3b: residual inserts as one key-sorted bulk insert.
+        let mut ins_idx: [usize; GROUP_SIZE] = [0; GROUP_SIZE];
+        let mut n_ins = 0;
+        for i in 0..n_pend {
+            if !done[i] && pend[i].1 == OpCode::Insert {
+                ins_idx[n_ins] = i;
+                n_ins += 1;
+            }
+        }
+        if n_ins > 0 {
+            ins_idx[..n_ins].sort_unstable_by_key(|&i| pend[i].2);
+            let mut items: [(u64, u64); GROUP_SIZE] = [(0, 0); GROUP_SIZE];
+            for (j, &i) in ins_idx[..n_ins].iter().enumerate() {
+                items[j] = (pend[i].2, pend[i].3);
+            }
+            let mut ok = [false; GROUP_SIZE];
+            self.shared.base.insert_batch_each(&items[..n_ins], &mut ok[..n_ins]);
+            for (j, &i) in ins_idx[..n_ins].iter().enumerate() {
+                let (p, s) = encode::insert(ok[j]);
+                resp[n_resp] = (pend[i].0, p, s);
+                n_resp += 1;
+            }
+        }
+
+        // Phase 4: publish — all responses after all base work, on the
+        // group's single line.
+        debug_assert_eq!(n_resp, n_pend, "every pending op gets one response");
+        for &(pos, p, s) in &resp[..n_resp] {
+            self.shared.responses[g].write(pos, p, s);
+        }
+        n_pend
     }
 
     fn run(&mut self, idle_sleep_us: u64) {
@@ -262,30 +533,55 @@ impl<B: ConcurrentPQ> NuddleServer<B> {
 }
 
 impl<B: ConcurrentPQ + 'static> NuddleClient<B> {
-    /// Delegated insert.
+    /// Delegated insert (key validated once, in the shared client path).
     pub fn insert(&mut self, key: u64, value: u64) -> bool {
-        crate::pq::traits::check_user_key(key);
-        let (p, _) = self.inner.call(OpCode::Insert, key, value);
-        encode::decode_insert(p)
+        self.inner.insert(key, value)
     }
 
     /// Delegated deleteMin.
     pub fn delete_min(&mut self) -> Option<(u64, u64)> {
-        let (p, s) = self.inner.call(OpCode::DeleteMin, 0, 0);
-        encode::decode_delete_min(p, s)
+        self.inner.delete_min()
+    }
+
+    /// Delegated batch insert with per-item outcomes.
+    pub fn insert_batch_each(&mut self, items: &[(u64, u64)], ok: &mut [bool]) -> usize {
+        self.inner.insert_batch_each(items, ok)
+    }
+
+    /// Delegated batch deleteMin; appends to `out`, returns the count.
+    pub fn delete_min_batch(&mut self, n: usize, out: &mut Vec<(u64, u64)>) -> usize {
+        self.inner.delete_min_batch(n, out)
     }
 }
 
 impl<B: ConcurrentPQ + 'static> ConcurrentPQ for Nuddle<B> {
     fn insert(&self, key: u64, value: u64) -> bool {
-        crate::pq::traits::check_user_key(key);
-        let (p, _) = self.with_tls_client(|c| c.call(OpCode::Insert, key, value));
-        encode::decode_insert(p)
+        self.with_tls_client(|c| c.insert(key, value))
     }
 
     fn delete_min(&self) -> Option<(u64, u64)> {
-        let (p, s) = self.with_tls_client(|c| c.call(OpCode::DeleteMin, 0, 0));
-        encode::decode_delete_min(p, s)
+        self.with_tls_client(|c| c.delete_min())
+    }
+
+    /// One TLS-registration borrow for the whole batch — the only saving
+    /// available client-side: each `call` still blocks on its response
+    /// before the next request can be published, so a single client never
+    /// has two batch ops pending in one sweep. The server's combining
+    /// merges ops across *different* clients of a group.
+    fn insert_batch_each(&self, items: &[(u64, u64)], ok: &mut [bool]) -> usize {
+        self.with_tls_client(|c| c.insert_batch_each(items, ok))
+    }
+
+    fn delete_min_batch(&self, n: usize, out: &mut Vec<(u64, u64)>) -> usize {
+        self.with_tls_client(|c| c.delete_min_batch(n, out))
+    }
+
+    fn peek_min_hint(&self) -> Option<u64> {
+        self.shared.base.peek_min_hint()
+    }
+
+    fn record_eliminated(&self, pairs: u64, max_key: u64) {
+        self.shared.base.record_eliminated(pairs, max_key);
     }
 
     fn len(&self) -> usize {
@@ -315,7 +611,7 @@ mod tests {
     use crate::pq::spraylist::AlistarhHerlihy;
     use crate::pq::SprayList;
 
-    fn make(servers: usize, clients: usize) -> Nuddle<AlistarhHerlihy> {
+    fn make_cfg(servers: usize, clients: usize, combine: bool) -> Nuddle<AlistarhHerlihy> {
         let base = Arc::new(SprayList::new(servers));
         Nuddle::new(
             base,
@@ -323,8 +619,13 @@ mod tests {
                 servers,
                 max_clients: clients,
                 idle_sleep_us: 10,
+                combine,
             },
         )
+    }
+
+    fn make(servers: usize, clients: usize) -> Nuddle<AlistarhHerlihy> {
+        make_cfg(servers, clients, true)
     }
 
     #[test]
@@ -338,6 +639,48 @@ mod tests {
         ks.sort_unstable();
         assert_eq!(ks, vec![3, 5]);
         assert_eq!(q.name(), "nuddle");
+    }
+
+    #[test]
+    fn combining_and_sequential_servers_agree() {
+        for combine in [false, true] {
+            let q = make_cfg(2, 8, combine);
+            assert_eq!(q.combining(), combine);
+            for k in [9u64, 2, 7, 4] {
+                assert!(q.insert(k, k * 10), "combine={combine}");
+            }
+            assert!(!q.insert(7, 0), "combine={combine}: duplicate accepted");
+            let mut out = Vec::new();
+            assert_eq!(q.delete_min_batch(3, &mut out), 3, "combine={combine}");
+            if let Some(kv) = q.delete_min() {
+                out.push(kv);
+            }
+            // The spray base relaxes pop *order*, never membership: the
+            // four pops must return exactly the four inserted pairs.
+            let mut got: Vec<(u64, u64)> = out.clone();
+            got.sort_unstable();
+            assert_eq!(
+                got,
+                vec![(2, 20), (4, 40), (7, 70), (9, 90)],
+                "combine={combine}"
+            );
+            assert_eq!(q.delete_min(), None, "combine={combine}");
+        }
+    }
+
+    #[test]
+    fn client_batch_ops_roundtrip() {
+        let q = make(1, 8);
+        let mut c = q.client();
+        let mut ok = [false; 4];
+        // Sentinel keys are rejected client-side, release builds included.
+        assert_eq!(c.insert_batch_each(&[(6, 60), (0, 0), (2, 20), (6, 61)], &mut ok), 2);
+        assert_eq!(ok, [true, false, true, false]);
+        let mut out = Vec::new();
+        assert_eq!(c.delete_min_batch(5, &mut out), 2);
+        let mut ks: Vec<u64> = out.iter().map(|&(k, _)| k).collect();
+        ks.sort_unstable();
+        assert_eq!(ks, vec![2, 6]);
     }
 
     #[test]
@@ -396,6 +739,7 @@ mod tests {
                 servers: 3,
                 max_clients: 10 * GROUP_SIZE,
                 idle_sleep_us: 10,
+                combine: true,
             },
         );
         assert_eq!(q.server_count(), 3);

@@ -486,6 +486,16 @@ pub fn app_workloads(cfg: &BenchConfig) -> crate::util::error::Result<Vec<Table>
     Ok(out)
 }
 
+// ------------------------------------------------- batch/combining path
+
+/// The bulk-operation fast path on the real plane: per-backend batch
+/// sweep plus the Nuddle combining-server comparison, with
+/// machine-readable results in `BENCH_batch.json` (see
+/// [`crate::harness::batch_bench`]).
+pub fn batch(cfg: &BenchConfig) -> crate::util::error::Result<Vec<Table>> {
+    crate::harness::batch_bench::run_batch_figure(cfg)
+}
+
 // ---------------------------------------------------- §4.2.1 classifier
 
 /// §4.2.1: classifier accuracy + misprediction cost over random

@@ -5,6 +5,7 @@
 //! CLI call into them so there is exactly one implementation of each
 //! experiment.
 
+pub mod batch_bench;
 pub mod figures;
 pub mod real_bench;
 pub mod runner;

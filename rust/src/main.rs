@@ -29,9 +29,12 @@ smartpq — adaptive concurrent priority queue for NUMA architectures (paper rep
 USAGE: smartpq <command> [options]
 
 COMMANDS
-  bench --figure <fig1|fig7|fig9|fig10|fig11|multiqueue|classifier|ablation|app|all>
+  bench --figure <fig1|fig7|fig9|fig10|fig11|multiqueue|classifier|ablation|app|batch|all>
                           regenerate the paper's figures on the simulated
-                          4-node testbed (CSV copies under target/reports/)
+                          4-node testbed (CSV copies under target/reports/);
+                          `batch` runs the real-plane bulk-op sweep and the
+                          Nuddle combining-server comparison, recording
+                          machine-readable results in BENCH_batch.json
   train-data [--points N] [--out data/training.csv] [--duration-ms D]
                           sweep (threads,size,range,mix) over the simulator
                           and emit the classifier training set
@@ -100,6 +103,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
             "classifier",
             "ablation",
             "app",
+            "batch",
             "all",
         ],
         "all",
@@ -133,6 +137,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
     }
     if run_all || fig == "app" {
         figures::app_workloads(&cfg)?;
+    }
+    if run_all || fig == "batch" {
+        figures::batch(&cfg)?;
     }
     Ok(())
 }
@@ -237,6 +244,7 @@ fn cmd_real(args: &Args) -> Result<()> {
                         servers: 2,
                         max_clients: threads + 8, // workers + the pre-filling main thread
                         idle_sleep_us: 50,
+                        combine: true,
                     },
                 )),
                 threads, pct, range, init, dur, seed,
@@ -253,6 +261,7 @@ fn cmd_real(args: &Args) -> Result<()> {
                         servers: 2,
                         max_clients: threads + 8, // workers + the pre-filling main thread
                         idle_sleep_us: 50,
+                        combine: true,
                     },
                     decision_interval: std::time::Duration::from_millis(200),
                     initial_mode: smartpq::delegation::nuddle::mode::OBLIVIOUS,
@@ -277,6 +286,7 @@ fn cmd_real(args: &Args) -> Result<()> {
                         servers: 2,
                         max_clients: threads + 8, // workers + the pre-filling main thread
                         idle_sleep_us: 50,
+                        combine: true,
                     },
                 )),
                 threads, pct, range, init, dur, seed,
@@ -295,6 +305,7 @@ fn cmd_real(args: &Args) -> Result<()> {
                         servers: 2,
                         max_clients: threads + 8, // workers + the pre-filling main thread
                         idle_sleep_us: 50,
+                        combine: true,
                     },
                     decision_interval: std::time::Duration::from_millis(200),
                     initial_mode: smartpq::delegation::nuddle::mode::OBLIVIOUS,

@@ -42,8 +42,10 @@ struct Participant {
     /// 1 when a live thread owns this entry.
     owned: AtomicU64,
     /// Deferred garbage of this participant (accessed only by owner, or by
-    /// the global collector on Drop of [`Collector`]).
-    bag: crossbeam_utils::sync::ShardedLock<Vec<Garbage>>,
+    /// the global collector on Drop of [`Collector`]). A plain `RwLock`
+    /// suffices: writes are owner-only (plus the teardown drain) — the
+    /// offline build carries no external crates.
+    bag: std::sync::RwLock<Vec<Garbage>>,
     next: AtomicPtr<Participant>,
 }
 
@@ -52,7 +54,7 @@ impl Participant {
         Participant {
             state: AtomicU64::new(0),
             owned: AtomicU64::new(1),
-            bag: crossbeam_utils::sync::ShardedLock::new(Vec::new()),
+            bag: std::sync::RwLock::new(Vec::new()),
             next: AtomicPtr::new(std::ptr::null_mut()),
         }
     }

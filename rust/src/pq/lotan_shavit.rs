@@ -65,6 +65,47 @@ impl ConcurrentPQ for LotanShavitPQ {
         out
     }
 
+    /// Bulk insert via the shared sort/scatter wrapper
+    /// ([`crate::pq::traits::batched_insert_each`]): one hinted list walk
+    /// per batch, allocation-free for already-ascending input.
+    fn insert_batch_each(&self, items: &[(u64, u64)], ok: &mut [bool]) -> usize {
+        crate::pq::traits::batched_insert_each(
+            items,
+            ok,
+            &self.stats,
+            |k, v| self.insert(k, v),
+            |sorted, sorted_ok| {
+                TLS_RNG.with(|r| {
+                    self.list
+                        .insert_batch_sorted(sorted, &mut r.borrow_mut(), sorted_ok)
+                })
+            },
+        )
+    }
+
+    /// Combined exact deleteMin: the n smallest live elements in one
+    /// bottom-level walk.
+    fn delete_min_batch(&self, n: usize, out: &mut Vec<(u64, u64)>) -> usize {
+        if n == 0 {
+            return 0;
+        }
+        let got = self.list.claim_leftmost_batch(n, out);
+        self.stats.record_delete_min_batch(got as u64);
+        if got == 0 {
+            self.stats.record_empty_delete_min();
+        }
+        got
+    }
+
+    fn peek_min_hint(&self) -> Option<u64> {
+        Some(self.list.peek_leftmost())
+    }
+
+    fn record_eliminated(&self, pairs: u64, max_key: u64) {
+        self.stats.record_insert_batch(pairs, max_key);
+        self.stats.record_delete_min_batch(pairs);
+    }
+
     fn len(&self) -> usize {
         self.stats.size()
     }
@@ -97,6 +138,23 @@ mod tests {
         q.insert(2, 22);
         assert_eq!(q.delete_min(), Some((2, 22)));
         assert_eq!(q.delete_min(), Some((4, 44)));
+    }
+
+    #[test]
+    fn batch_ops_stay_exact() {
+        let q = LotanShavitPQ::new();
+        let mut ok = [false; 5];
+        assert_eq!(q.insert_batch_each(&[(50, 5), (20, 2), (90, 9), (20, 0), (10, 1)], &mut ok), 4);
+        assert_eq!(ok, [true, true, true, false, true]);
+        assert_eq!(q.peek_min_hint(), Some(10));
+        let mut out = Vec::new();
+        assert_eq!(q.delete_min_batch(3, &mut out), 3);
+        assert_eq!(out, vec![(10, 1), (20, 2), (50, 5)]);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.delete_min_batch(4, &mut out), 1);
+        assert_eq!(out.last(), Some(&(90, 9)));
+        assert_eq!(q.delete_min_batch(1, &mut out), 0);
+        assert_eq!(q.peek_min_hint(), Some(u64::MAX));
     }
 
     #[test]

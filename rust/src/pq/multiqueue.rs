@@ -379,6 +379,120 @@ impl ConcurrentPQ for MultiQueue {
         out
     }
 
+    /// Bulk insert: claim every key in the sharded set first (per-item
+    /// set semantics), then push the whole accepted batch into one local
+    /// heap under a single lock acquisition — one cached-top refresh and
+    /// one ownership transfer instead of one per element.
+    fn insert_batch_each(&self, items: &[(u64, u64)], ok: &mut [bool]) -> usize {
+        debug_assert!(ok.len() >= items.len());
+        let mut accepted: Vec<(u64, u64)> = Vec::with_capacity(items.len());
+        let mut max_key = 0u64;
+        for (i, &(k, v)) in items.iter().enumerate() {
+            let r = crate::pq::traits::is_valid_user_key(k) && self.register_key(k);
+            ok[i] = r;
+            if r {
+                accepted.push((k, v));
+                max_key = max_key.max(k);
+            }
+        }
+        if !accepted.is_empty() {
+            self.with_tls(|node, rng| {
+                let base = node * self.per_node;
+                let q = &self.queues[base + rng.gen_range(self.per_node as u64) as usize];
+                q.heap.with(|h| {
+                    for &(k, v) in &accepted {
+                        h.push(Entry(k, v));
+                    }
+                    q.refresh_top(h);
+                });
+            });
+        }
+        self.stats.record_insert_batch(accepted.len() as u64, max_key);
+        self.stats.record_failed_inserts((items.len() - accepted.len()) as u64);
+        accepted.len()
+    }
+
+    /// Combined deleteMin: drain up to `n` elements from the better of
+    /// two sampled local heaps under one lock, amortizing the two-choice
+    /// probe and the cached-top refresh over the whole batch; any
+    /// shortfall falls back to the per-op path (steals + exact sweep), so
+    /// fewer than `n` results still means the structure looked empty.
+    fn delete_min_batch(&self, n: usize, out: &mut Vec<(u64, u64)>) -> usize {
+        if n == 0 {
+            return 0;
+        }
+        let start = out.len();
+        self.with_tls(|node, rng| {
+            let base = node * self.per_node;
+            for _ in 0..POP_ATTEMPTS {
+                let have = out.len() - start;
+                if have >= n {
+                    break;
+                }
+                let want = n - have;
+                let a = base + rng.gen_range(self.per_node as u64) as usize;
+                let b = base + rng.gen_range(self.per_node as u64) as usize;
+                let (ta, tb) = (self.queues[a].top(), self.queues[b].top());
+                if ta == EMPTY_TOP && tb == EMPTY_TOP {
+                    break; // local group looks drained: per-op fallback
+                }
+                let pick = if ta <= tb { a } else { b };
+                let q = &self.queues[pick];
+                let drained = q.heap.try_with(|h| {
+                    let mut k = 0;
+                    while k < want {
+                        match h.pop() {
+                            Some(Entry(key, v)) => {
+                                out.push((key, v));
+                                k += 1;
+                            }
+                            None => break,
+                        }
+                    }
+                    q.refresh_top(h);
+                    k
+                });
+                match drained {
+                    Some(k) if k > 0 => {}
+                    _ => continue, // lock busy or raced to empty: resample
+                }
+            }
+            // Remainder one-by-one: the scalar path steals across node
+            // groups and ends in the exact sweep.
+            while out.len() - start < n {
+                match self.pop_any(node, rng) {
+                    Some(kv) => out.push(kv),
+                    None => break,
+                }
+            }
+        });
+        let got = out.len() - start;
+        for &(k, _) in &out[start..] {
+            self.unregister_key(k);
+        }
+        self.stats.record_delete_min_batch(got as u64);
+        if got == 0 {
+            self.stats.record_empty_delete_min();
+        }
+        got
+    }
+
+    /// No hint: the min over cached tops is *not* a lower bound on the
+    /// live key set — an element in flight through a steal (popped from
+    /// the victim, not yet re-pushed locally) or through insert's
+    /// register-then-push window lives in no heap, so the cached tops can
+    /// exceed a live key. The Nuddle combining server's elimination rule
+    /// requires a true lower bound (see `delegation/nuddle.rs`), so a
+    /// MultiQueue backbone gets residue combining without elimination.
+    fn peek_min_hint(&self) -> Option<u64> {
+        None
+    }
+
+    fn record_eliminated(&self, pairs: u64, max_key: u64) {
+        self.stats.record_insert_batch(pairs, max_key);
+        self.stats.record_delete_min_batch(pairs);
+    }
+
     fn len(&self) -> usize {
         self.stats.size()
     }
@@ -505,6 +619,61 @@ mod tests {
                 k <= i + 1 + 64 * nq,
                 "rank error blew past the relaxation window: popped {k} at step {i}"
             );
+        }
+    }
+
+    #[test]
+    fn batch_ops_conserve_and_respect_set_semantics() {
+        let q = MultiQueue::new(2);
+        let mut ok = [false; 6];
+        let n = q.insert_batch_each(&[(7, 1), (3, 2), (7, 3), (0, 4), (11, 5), (5, 6)], &mut ok);
+        assert_eq!(n, 4);
+        assert_eq!(ok, [true, true, false, false, true, true]);
+        assert_eq!(q.len(), 4);
+        // No elimination hint: cached tops are not a lower bound.
+        assert_eq!(q.peek_min_hint(), None);
+        let mut out = Vec::new();
+        assert_eq!(q.delete_min_batch(10, &mut out), 4, "batch pop must drain via fallback");
+        let mut keys: Vec<u64> = out.iter().map(|&(k, _)| k).collect();
+        keys.sort_unstable();
+        assert_eq!(keys, vec![3, 5, 7, 11]);
+        assert_eq!(q.delete_min_batch(1, &mut out), 0);
+        // Popped keys were released from the sharded set.
+        assert_eq!(q.insert_batch(&[(3, 0), (7, 0)]), 2);
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn batch_pop_stays_near_the_small_end() {
+        let q = MultiQueue::with_params(
+            4,
+            MultiQueueParams {
+                queues_per_thread: 4,
+                numa_nodes: 1,
+                steal_prob: 8,
+                steal_batch: 8,
+            },
+        );
+        let n = 4000u64;
+        for k in 1..=n {
+            q.insert(k, k);
+        }
+        let nq = q.queue_count() as u64;
+        let mut popped = 0u64;
+        let mut buf = Vec::new();
+        while popped < n / 2 {
+            buf.clear();
+            let got = q.delete_min_batch(8, &mut buf) as u64;
+            assert!(got > 0);
+            for &(k, _) in &buf {
+                // A drained batch comes from one heap: its j-th element
+                // ranks ~j*nq, so the window widens by the batch size.
+                assert!(
+                    k <= popped + 8 + 64 * nq + 8 * nq,
+                    "batch pop {k} far beyond the relaxation window at {popped}"
+                );
+                popped += 1;
+            }
         }
     }
 

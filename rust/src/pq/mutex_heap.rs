@@ -5,7 +5,7 @@
 use std::collections::BinaryHeap;
 use std::sync::Mutex;
 
-use crate::pq::traits::{ConcurrentPQ, MinHeapEntry as Entry, PqStats};
+use crate::pq::traits::{ConcurrentPQ, MinHeapEntry as Entry, PqStats, KEY_MAX_SENTINEL};
 
 /// Mutex-protected binary heap with set semantics on keys.
 pub struct MutexHeapPQ {
@@ -66,6 +66,65 @@ impl ConcurrentPQ for MutexHeapPQ {
         }
     }
 
+    /// Batched insert: one lock acquisition for the whole batch instead of
+    /// one per element — the coarse-grained queue's only real fast path.
+    fn insert_batch_each(&self, items: &[(u64, u64)], ok: &mut [bool]) -> usize {
+        debug_assert!(ok.len() >= items.len());
+        let mut n = 0u64;
+        let mut max_key = 0u64;
+        {
+            let mut g = self.inner.lock().expect("poisoned heap");
+            for (i, &(k, v)) in items.iter().enumerate() {
+                let r = crate::pq::traits::is_valid_user_key(k) && g.1.insert(k);
+                if r {
+                    g.0.push(Entry(k, v));
+                    n += 1;
+                    max_key = max_key.max(k);
+                }
+                ok[i] = r;
+            }
+        }
+        self.stats.record_insert_batch(n, max_key);
+        self.stats.record_failed_inserts(items.len() as u64 - n);
+        n as usize
+    }
+
+    /// Batched pop: the n smallest elements under a single lock.
+    fn delete_min_batch(&self, n: usize, out: &mut Vec<(u64, u64)>) -> usize {
+        if n == 0 {
+            return 0;
+        }
+        let start = out.len();
+        {
+            let mut g = self.inner.lock().expect("poisoned heap");
+            while out.len() - start < n {
+                match g.0.pop() {
+                    Some(Entry(k, v)) => {
+                        g.1.remove(&k);
+                        out.push((k, v));
+                    }
+                    None => break,
+                }
+            }
+        }
+        let got = out.len() - start;
+        self.stats.record_delete_min_batch(got as u64);
+        if got == 0 {
+            self.stats.record_empty_delete_min();
+        }
+        got
+    }
+
+    fn peek_min_hint(&self) -> Option<u64> {
+        let g = self.inner.lock().expect("poisoned heap");
+        Some(g.0.peek().map_or(KEY_MAX_SENTINEL, |e| e.0))
+    }
+
+    fn record_eliminated(&self, pairs: u64, max_key: u64) {
+        self.stats.record_insert_batch(pairs, max_key);
+        self.stats.record_delete_min_batch(pairs);
+    }
+
     fn len(&self) -> usize {
         self.inner.lock().expect("poisoned heap").0.len()
     }
@@ -91,6 +150,28 @@ mod tests {
         assert_eq!(q.delete_min(), Some((5, 5)));
         assert_eq!(q.delete_min(), Some((8, 8)));
         assert_eq!(q.delete_min(), None);
+    }
+
+    #[test]
+    fn batch_ops_single_lock_roundtrip() {
+        let q = MutexHeapPQ::new();
+        let mut ok = [false; 6];
+        // Duplicate (8) and sentinel (0) keys fail inside the batch
+        // without disturbing their neighbors.
+        let n = q.insert_batch_each(&[(8, 1), (3, 2), (8, 3), (0, 4), (12, 5), (1, 6)], &mut ok);
+        assert_eq!(n, 4);
+        assert_eq!(ok, [true, true, false, false, true, true]);
+        assert_eq!(q.peek_min_hint(), Some(1));
+        let mut out = Vec::new();
+        assert_eq!(q.delete_min_batch(3, &mut out), 3);
+        assert_eq!(out, vec![(1, 6), (3, 2), (8, 1)]);
+        assert_eq!(q.delete_min_batch(9, &mut out), 1);
+        assert_eq!(out.last(), Some(&(12, 5)));
+        assert_eq!(q.delete_min_batch(1, &mut out), 0);
+        assert_eq!(q.peek_min_hint(), Some(u64::MAX));
+        // Popped keys can be re-inserted (the set released them).
+        assert_eq!(q.insert_batch(&[(3, 9), (8, 9)]), 2);
+        assert_eq!(q.len(), 2);
     }
 
     #[test]

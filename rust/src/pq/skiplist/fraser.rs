@@ -94,6 +94,26 @@ impl FraserSkipList {
     /// If `watch` is non-null, report whether it was encountered during the
     /// (restart-free suffix of the) pass.
     fn search(&self, key: u64, watch: *mut Node) -> Search {
+        self.search_hinted(key, watch, None)
+    }
+
+    /// [`FraserSkipList::search`] with an optional predecessor hint from a
+    /// previous search for a smaller-or-equal key (the sorted-bulk-insert
+    /// fast path): each level starts from the hinted predecessor instead
+    /// of the head when the hint is still ahead of the walk. Hints may
+    /// point at logically deleted (or even retired-but-unfreed) nodes —
+    /// keys are immutable and the caller holds an epoch guard, so reading
+    /// them is safe, and a stale hint at worst wedges an unlink CAS, which
+    /// falls back to a cold restart from the head. Incompatible with
+    /// `watch` (a hinted walk may start past the watched node).
+    fn search_hinted(
+        &self,
+        key: u64,
+        watch: *mut Node,
+        hint: Option<&[*mut Node; MAX_HEIGHT]>,
+    ) -> Search {
+        debug_assert!(hint.is_none() || watch.is_null(), "hint would skip the watch region");
+        let mut use_hint = hint;
         'retry: loop {
             let mut out = Search {
                 preds: [std::ptr::null_mut(); MAX_HEIGHT],
@@ -102,6 +122,15 @@ impl FraserSkipList {
             };
             let mut pred = self.head;
             for lvl in (0..MAX_HEIGHT).rev() {
+                if let Some(h) = use_hint {
+                    let hp = h[lvl];
+                    if !hp.is_null()
+                        && unsafe { (*hp).key } < key
+                        && unsafe { (*hp).key } > unsafe { (*pred).key }
+                    {
+                        pred = hp;
+                    }
+                }
                 let mut cur = untagged(unsafe { (*pred).next[lvl].load(Ordering::Acquire) });
                 loop {
                     if cur == watch {
@@ -116,6 +145,9 @@ impl FraserSkipList {
                                 .compare_exchange(cur, clean, Ordering::AcqRel, Ordering::Acquire)
                                 .is_err()
                         } {
+                            // A deleted hint predecessor can wedge this CAS
+                            // forever (its own next is tagged); restart cold.
+                            use_hint = None;
                             continue 'retry;
                         }
                         cur = clean;
@@ -139,10 +171,61 @@ impl FraserSkipList {
     /// (and not logically claimed). Keys must avoid the sentinels.
     pub fn insert(&self, key: u64, value: u64, rng: &mut Rng) -> bool {
         crate::pq::traits::check_user_key(key);
-        epoch::with_guard(|guard, handle| loop {
-            let s = self.search(key, std::ptr::null_mut());
+        epoch::with_guard(|_, _| self.insert_inner(key, value, rng, None).0)
+    }
+
+    /// Insert an *ascending-sorted* batch, threading each item's final
+    /// predecessor snapshot into the next item's search as a hint — the
+    /// combining server's sorted bulk insert, paying the head-down
+    /// descent once per run of nearby keys instead of once per element.
+    /// `ok[i]` reports item `i`'s outcome; sentinel keys fail (release
+    /// builds included). Returns the number inserted. The whole batch
+    /// runs under one epoch guard, which is what makes the stale-hint
+    /// reads safe (retired nodes cannot be freed mid-batch).
+    pub fn insert_batch_sorted(
+        &self,
+        items: &[(u64, u64)],
+        rng: &mut Rng,
+        ok: &mut [bool],
+    ) -> usize {
+        debug_assert!(ok.len() >= items.len());
+        debug_assert!(
+            items.windows(2).all(|w| w[0].0 <= w[1].0),
+            "bulk insert requires ascending keys"
+        );
+        let mut n = 0;
+        epoch::with_guard(|_, _| {
+            let mut hint: Option<[*mut Node; MAX_HEIGHT]> = None;
+            for (i, &(key, value)) in items.iter().enumerate() {
+                if !crate::pq::traits::is_valid_user_key(key) {
+                    ok[i] = false;
+                    continue;
+                }
+                let (inserted, h) = self.insert_inner(key, value, rng, hint);
+                ok[i] = inserted;
+                hint = h;
+                if inserted {
+                    n += 1;
+                }
+            }
+        });
+        n
+    }
+
+    /// One insert attempt loop; must run under an epoch guard. Returns
+    /// (inserted, predecessor snapshot usable as the hint for the next
+    /// ascending key — `None` when the node was torn down mid-build and
+    /// no stable snapshot exists).
+    fn insert_inner(
+        &self,
+        key: u64,
+        value: u64,
+        rng: &mut Rng,
+        mut hint: Option<[*mut Node; MAX_HEIGHT]>,
+    ) -> (bool, Option<[*mut Node; MAX_HEIGHT]>) {
+        loop {
+            let s = self.search_hinted(key, std::ptr::null_mut(), hint.as_ref());
             let found = s.succs[0];
-            let _ = (guard, handle);
             if unsafe { (*found).key } == key {
                 let f = unsafe { &*found };
                 if f.is_claimed() {
@@ -151,9 +234,10 @@ impl FraserSkipList {
                     // retirement — helping must never retire) and retry:
                     // the next search unlinks tagged nodes on the path.
                     Self::help_mark(f);
+                    hint = None;
                     continue;
                 }
-                return false;
+                return (false, Some(s.preds));
             }
             let top = rng.gen_level(MAX_HEIGHT - 1);
             let node = Node::new(key, value, top);
@@ -169,6 +253,7 @@ impl FraserSkipList {
                     .is_err()
             } {
                 unsafe { drop(Box::from_raw(node)) };
+                hint = None;
                 continue;
             }
             // Build the upper levels (best effort; abandoned if the node
@@ -178,7 +263,7 @@ impl FraserSkipList {
                 loop {
                     let cur_next = unsafe { (*node).next[lvl].load(Ordering::Acquire) };
                     if is_tagged(cur_next) {
-                        return true; // node deleted mid-build
+                        return (true, None); // node deleted mid-build
                     }
                     if cur_next != s.succs[lvl]
                         && unsafe {
@@ -209,12 +294,18 @@ impl FraserSkipList {
                     // Refresh the search; stop if the node vanished.
                     s = self.search(key, std::ptr::null_mut());
                     if s.succs[0] != node {
-                        return true;
+                        return (true, None);
                     }
                 }
             }
-            return true;
-        })
+            // The freshly linked node is the best predecessor for the next
+            // ascending key at every level it occupies.
+            let mut h = s.preds;
+            for slot in h.iter_mut().take(top + 1) {
+                *slot = node;
+            }
+            return (true, Some(h));
+        }
     }
 
     /// True if `key` is present and not claimed.
@@ -302,6 +393,73 @@ impl FraserSkipList {
                     let out = (node.key, node.value);
                     self.finish_removal(cur, guard, handle);
                     return Some(out);
+                }
+                cur = untagged(next);
+            }
+        })
+    }
+
+    /// Combined deleteMin: claim up to `n` leftmost live nodes in a
+    /// *single* bottom-level walk (instead of `n` walks over the claimed
+    /// prefix — the contended part of an exact deleteMin), then finish
+    /// the physical removals. Appends the claimed `(key, value)` pairs to
+    /// `out` in ascending key order (near-ascending under concurrent
+    /// inserts); returns how many were claimed.
+    pub fn claim_leftmost_batch(&self, n: usize, out: &mut Vec<(u64, u64)>) -> usize {
+        if n == 0 {
+            return 0;
+        }
+        epoch::with_guard(|guard, handle| {
+            let mut total = 0usize;
+            loop {
+                let mut claimed: [*mut Node; 64] = [std::ptr::null_mut(); 64];
+                let mut n_claimed = 0usize;
+                let cap = (n - total).min(64);
+                let mut cur = untagged(unsafe { (*self.head).next[0].load(Ordering::Acquire) });
+                while n_claimed < cap {
+                    if cur == self.tail {
+                        break;
+                    }
+                    let node = unsafe { &*cur };
+                    let next = node.next[0].load(Ordering::Acquire);
+                    // Skip logically-deleted (tagged) and claimed nodes.
+                    if !is_tagged(next) && node.claim() {
+                        out.push((node.key, node.value));
+                        claimed[n_claimed] = cur;
+                        n_claimed += 1;
+                    }
+                    cur = untagged(next);
+                }
+                // Physical removal happens after the claim walk so
+                // competing deleteMins see the whole batch as claimed at
+                // once.
+                for &c in &claimed[..n_claimed] {
+                    self.finish_removal(c, guard, handle);
+                }
+                total += n_claimed;
+                // A short walk means the list ran out (or every survivor
+                // was claimed by a competitor): report what we got.
+                if total >= n || n_claimed < cap {
+                    return total;
+                }
+            }
+        })
+    }
+
+    /// Key of the first live node (`u64::MAX` when empty). A cheap,
+    /// possibly stale observation — the combining server's elimination
+    /// hint.
+    pub fn peek_leftmost(&self) -> u64 {
+        epoch::with_guard(|_, _| {
+            let mut cur = untagged(unsafe { (*self.head).next[0].load(Ordering::Acquire) });
+            loop {
+                if cur == self.tail {
+                    return u64::MAX;
+                }
+                let node = unsafe { &*cur };
+                let next = node.next[0].load(Ordering::Acquire);
+                if !is_tagged(next) && !node.is_claimed() {
+                    return node.key;
                 }
                 cur = untagged(next);
             }
@@ -539,6 +697,94 @@ mod tests {
             let (k, _) = l.spray_claim(&params, &mut r).unwrap();
             assert!(k <= 1500, "spray landed too deep: {k}");
         }
+    }
+
+    #[test]
+    fn claim_batch_is_exact_prefix() {
+        let l = FraserSkipList::new();
+        let mut r = rng();
+        for k in [30u64, 10, 20, 40, 5] {
+            l.insert(k, k * 2, &mut r);
+        }
+        assert_eq!(l.peek_leftmost(), 5);
+        let mut out = Vec::new();
+        assert_eq!(l.claim_leftmost_batch(3, &mut out), 3);
+        assert_eq!(out, vec![(5, 10), (10, 20), (20, 40)]);
+        assert_eq!(l.peek_leftmost(), 30);
+        // Over-asking drains the rest and reports the shortfall.
+        assert_eq!(l.claim_leftmost_batch(10, &mut out), 2);
+        assert_eq!(out.len(), 5);
+        assert_eq!(l.claim_leftmost_batch(1, &mut out), 0);
+        assert_eq!(l.peek_leftmost(), u64::MAX);
+        // Claimed keys are re-insertable.
+        assert!(l.insert(10, 1, &mut r));
+        assert_eq!(l.claim_leftmost(), Some((10, 1)));
+    }
+
+    #[test]
+    fn sorted_bulk_insert_reuses_predecessors() {
+        let l = FraserSkipList::new();
+        let mut r = rng();
+        // Seed some interleaving keys so hints cross existing towers.
+        for k in [100u64, 300, 500, 700] {
+            l.insert(k, k, &mut r);
+        }
+        let batch: Vec<(u64, u64)> = vec![(50, 1), (200, 2), (200, 3), (400, 4), (900, 5)];
+        let mut ok = [false; 5];
+        assert_eq!(l.insert_batch_sorted(&batch, &mut r, &mut ok), 4);
+        assert_eq!(ok, [true, true, false, true, true], "in-batch duplicate must fail");
+        assert_eq!(l.keys(), vec![50, 100, 200, 300, 400, 500, 700, 900]);
+        // Sentinel keys are rejected without panicking, release or debug.
+        let mut ok2 = [true; 2];
+        assert_eq!(l.insert_batch_sorted(&[(0, 0), (u64::MAX, 0)], &mut r, &mut ok2), 0);
+        assert_eq!(ok2, [false, false]);
+    }
+
+    #[test]
+    fn bulk_insert_large_ascending_run() {
+        let l = FraserSkipList::new();
+        let mut r = rng();
+        let items: Vec<(u64, u64)> = (1..=500u64).map(|k| (2 * k, k)).collect();
+        let mut ok = vec![false; items.len()];
+        assert_eq!(l.insert_batch_sorted(&items, &mut r, &mut ok), 500);
+        assert!(ok.iter().all(|&b| b));
+        assert_eq!(l.count_exact(), 500);
+        let keys = l.keys();
+        assert!(keys.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(keys[0], 2);
+        assert_eq!(*keys.last().unwrap(), 1000);
+    }
+
+    #[test]
+    fn concurrent_batch_claims_are_distinct() {
+        let l = Arc::new(FraserSkipList::new());
+        {
+            let mut r = rng();
+            for k in 1..=3000u64 {
+                l.insert(k, k, &mut r);
+            }
+        }
+        let hs: Vec<std::thread::JoinHandle<Vec<u64>>> = (0..4u64)
+            .map(|_| {
+                let l = l.clone();
+                std::thread::spawn(move || {
+                    let mut mine = Vec::new();
+                    let mut buf = Vec::new();
+                    for _ in 0..100 {
+                        buf.clear();
+                        l.claim_leftmost_batch(8, &mut buf);
+                        mine.extend(buf.iter().map(|&(k, _)| k));
+                    }
+                    mine
+                })
+            })
+            .collect();
+        let mut all: Vec<u64> = hs.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        let before = all.len();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(before, all.len(), "an element was claimed twice");
+        assert_eq!(before, 3000, "elements lost");
     }
 
     #[test]

@@ -115,11 +115,34 @@ impl HerlihySkipList {
 
     /// Wait-free traversal. Returns (preds, succs, level-found-or-usize::MAX).
     fn find(&self, key: u64) -> ([*mut Node; MAX_HEIGHT], [*mut Node; MAX_HEIGHT], usize) {
+        self.find_hinted(key, None)
+    }
+
+    /// [`HerlihySkipList::find`] with an optional predecessor hint from a
+    /// previous search for a smaller-or-equal key (the sorted-bulk-insert
+    /// fast path). A stale hint (marked or already unlinked predecessor)
+    /// is harmless: removed nodes keep their forward pointers, so the
+    /// walk re-enters the live list, and the insert-side lock validation
+    /// rejects any marked predecessor, falling back to a cold find.
+    fn find_hinted(
+        &self,
+        key: u64,
+        hint: Option<&[*mut Node; MAX_HEIGHT]>,
+    ) -> ([*mut Node; MAX_HEIGHT], [*mut Node; MAX_HEIGHT], usize) {
         let mut preds = [std::ptr::null_mut(); MAX_HEIGHT];
         let mut succs = [std::ptr::null_mut(); MAX_HEIGHT];
         let mut lfound = usize::MAX;
         let mut pred = self.head;
         for lvl in (0..MAX_HEIGHT).rev() {
+            if let Some(h) = hint {
+                let hp = h[lvl];
+                if !hp.is_null()
+                    && unsafe { (*hp).key } < key
+                    && unsafe { (*hp).key } > unsafe { (*pred).key }
+                {
+                    pred = hp;
+                }
+            }
             let mut cur = unsafe { (*pred).next[lvl].load(Ordering::Acquire) };
             while unsafe { (*cur).key } < key {
                 pred = cur;
@@ -174,55 +197,109 @@ impl HerlihySkipList {
     /// Insert `(key, value)`; false on (live) duplicate.
     pub fn insert(&self, key: u64, value: u64, rng: &mut Rng) -> bool {
         crate::pq::traits::check_user_key(key);
-        let top = rng.gen_level(MAX_HEIGHT - 1);
+        epoch::with_guard(|_, _| self.insert_inner(key, value, rng, None).0)
+    }
+
+    /// Insert an *ascending-sorted* batch under one epoch guard, reusing
+    /// each item's predecessor snapshot as the next item's search hint
+    /// (see [`HerlihySkipList::find_hinted`]). `ok[i]` reports item `i`'s
+    /// outcome; sentinel keys fail in all build profiles. Returns the
+    /// number inserted.
+    pub fn insert_batch_sorted(
+        &self,
+        items: &[(u64, u64)],
+        rng: &mut Rng,
+        ok: &mut [bool],
+    ) -> usize {
+        debug_assert!(ok.len() >= items.len());
+        debug_assert!(
+            items.windows(2).all(|w| w[0].0 <= w[1].0),
+            "bulk insert requires ascending keys"
+        );
+        let mut n = 0;
         epoch::with_guard(|_, _| {
-            let mut backoff = Backoff::new();
-            loop {
-                let (preds, succs, lfound) = self.find(key);
-                if lfound != usize::MAX {
-                    let f = unsafe { &*succs[lfound] };
-                    if !f.marked.load(Ordering::Acquire) {
-                        if f.is_claimed() {
-                            // Logically deleted by a deleteMin winner that
-                            // has not finished the physical removal yet:
-                            // wait for it, then retry.
-                            backoff.snooze();
-                            continue;
-                        }
-                        // Wait for a concurrent insert of the same key to
-                        // finish linking, then report the duplicate.
-                        while !f.fully_linked.load(Ordering::Acquire) {
-                            backoff.snooze();
-                        }
-                        return false;
-                    }
-                    // Marked: it is being unlinked; retry.
-                    backoff.snooze();
+            let mut hint: Option<[*mut Node; MAX_HEIGHT]> = None;
+            for (i, &(key, value)) in items.iter().enumerate() {
+                if !crate::pq::traits::is_valid_user_key(key) {
+                    ok[i] = false;
                     continue;
                 }
-                let locked = match self.lock_preds(&preds, &succs, top) {
-                    Some(l) => l,
-                    None => {
+                let (inserted, h) = self.insert_inner(key, value, rng, hint);
+                ok[i] = inserted;
+                hint = h;
+                if inserted {
+                    n += 1;
+                }
+            }
+        });
+        n
+    }
+
+    /// One insert attempt loop; must run under an epoch guard. Returns
+    /// (inserted, predecessor snapshot for the next ascending key).
+    fn insert_inner(
+        &self,
+        key: u64,
+        value: u64,
+        rng: &mut Rng,
+        mut hint: Option<[*mut Node; MAX_HEIGHT]>,
+    ) -> (bool, Option<[*mut Node; MAX_HEIGHT]>) {
+        let top = rng.gen_level(MAX_HEIGHT - 1);
+        let mut backoff = Backoff::new();
+        loop {
+            let (preds, succs, lfound) = self.find_hinted(key, hint.as_ref());
+            if lfound != usize::MAX {
+                let f = unsafe { &*succs[lfound] };
+                if !f.marked.load(Ordering::Acquire) {
+                    if f.is_claimed() {
+                        // Logically deleted by a deleteMin winner that
+                        // has not finished the physical removal yet:
+                        // wait for it, then retry.
                         backoff.snooze();
+                        hint = None;
                         continue;
                     }
-                };
-                let node = Node::new(key, value, top);
-                unsafe {
-                    for lvl in 0..=top {
-                        (*node).next[lvl].store(succs[lvl], Ordering::Relaxed);
+                    // Wait for a concurrent insert of the same key to
+                    // finish linking, then report the duplicate.
+                    while !f.fully_linked.load(Ordering::Acquire) {
+                        backoff.snooze();
                     }
-                    for lvl in 0..=top {
-                        (*preds[lvl]).next[lvl].store(node, Ordering::Release);
-                    }
-                    (*node).fully_linked.store(true, Ordering::Release);
+                    return (false, Some(preds));
                 }
-                for n in locked {
-                    unsafe { (*n).unlock() };
-                }
-                return true;
+                // Marked: it is being unlinked; retry.
+                backoff.snooze();
+                hint = None;
+                continue;
             }
-        })
+            let locked = match self.lock_preds(&preds, &succs, top) {
+                Some(l) => l,
+                None => {
+                    backoff.snooze();
+                    hint = None;
+                    continue;
+                }
+            };
+            let node = Node::new(key, value, top);
+            unsafe {
+                for lvl in 0..=top {
+                    (*node).next[lvl].store(succs[lvl], Ordering::Relaxed);
+                }
+                for lvl in 0..=top {
+                    (*preds[lvl]).next[lvl].store(node, Ordering::Release);
+                }
+                (*node).fully_linked.store(true, Ordering::Release);
+            }
+            for n in locked {
+                unsafe { (*n).unlock() };
+            }
+            // The freshly linked node is the best predecessor for the
+            // next ascending key at every level it occupies.
+            let mut h = preds;
+            for slot in h.iter_mut().take(top + 1) {
+                *slot = node;
+            }
+            return (true, Some(h));
+        }
     }
 
     /// True if `key` present, fully linked, unmarked and unclaimed.
@@ -329,6 +406,63 @@ impl HerlihySkipList {
             }
             cur = n.next[0].load(Ordering::Acquire);
         }
+    }
+
+    /// Combined deleteMin: claim up to `n` leftmost live nodes in one
+    /// bottom-level walk, then finish the physical removals (cf.
+    /// `FraserSkipList::claim_leftmost_batch`). Appends `(key, value)`
+    /// pairs to `out` in ascending key order (near-ascending under
+    /// concurrent inserts); returns how many were claimed.
+    pub fn claim_leftmost_batch(&self, n: usize, out: &mut Vec<(u64, u64)>) -> usize {
+        if n == 0 {
+            return 0;
+        }
+        epoch::with_guard(|guard, handle| {
+            let mut total = 0usize;
+            loop {
+                let mut claimed: [*mut Node; 64] = [std::ptr::null_mut(); 64];
+                let mut n_claimed = 0usize;
+                let cap = (n - total).min(64);
+                let mut cur = unsafe { (*self.head).next[0].load(Ordering::Acquire) };
+                while n_claimed < cap {
+                    if cur == self.tail {
+                        break;
+                    }
+                    let nd = unsafe { &*cur };
+                    if nd.is_removable() && nd.claim() {
+                        out.push((nd.key, nd.value));
+                        claimed[n_claimed] = cur;
+                        n_claimed += 1;
+                    }
+                    cur = nd.next[0].load(Ordering::Acquire);
+                }
+                for &c in &claimed[..n_claimed] {
+                    self.remove_claimed(c, guard, handle);
+                }
+                total += n_claimed;
+                if total >= n || n_claimed < cap {
+                    return total;
+                }
+            }
+        })
+    }
+
+    /// Key of the first live node (`u64::MAX` when empty); a cheap,
+    /// possibly stale observation for the combining server.
+    pub fn peek_leftmost(&self) -> u64 {
+        epoch::with_guard(|_, _| {
+            let mut cur = unsafe { (*self.head).next[0].load(Ordering::Acquire) };
+            loop {
+                if cur == self.tail {
+                    return u64::MAX;
+                }
+                let nd = unsafe { &*cur };
+                if nd.is_removable() && !nd.is_claimed() {
+                    return nd.key;
+                }
+                cur = nd.next[0].load(Ordering::Acquire);
+            }
+        })
     }
 
     /// SprayList deleteMin over this base.
@@ -507,6 +641,90 @@ mod tests {
         }
         got.sort_unstable();
         assert_eq!(got, (1..=400).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn claim_batch_is_exact_prefix() {
+        let l = HerlihySkipList::new();
+        let mut r = rng();
+        for k in [9u64, 3, 7, 1, 5] {
+            l.insert(k, k * 10, &mut r);
+        }
+        assert_eq!(l.peek_leftmost(), 1);
+        let mut out = Vec::new();
+        assert_eq!(l.claim_leftmost_batch(3, &mut out), 3);
+        assert_eq!(out, vec![(1, 10), (3, 30), (5, 50)]);
+        assert_eq!(l.peek_leftmost(), 7);
+        assert_eq!(l.claim_leftmost_batch(10, &mut out), 2);
+        assert_eq!(l.claim_leftmost_batch(1, &mut out), 0);
+        assert_eq!(l.peek_leftmost(), u64::MAX);
+        assert!(l.insert(3, 31, &mut r));
+        assert_eq!(l.claim_leftmost(), Some((3, 31)));
+    }
+
+    #[test]
+    fn sorted_bulk_insert_with_hints() {
+        let l = HerlihySkipList::new();
+        let mut r = rng();
+        for k in [100u64, 300, 500] {
+            l.insert(k, k, &mut r);
+        }
+        let mut ok = [false; 5];
+        let n = l.insert_batch_sorted(
+            &[(50, 1), (200, 2), (300, 3), (400, 4), (600, 5)],
+            &mut r,
+            &mut ok,
+        );
+        assert_eq!(n, 4);
+        assert_eq!(ok, [true, true, false, true, true]);
+        assert_eq!(l.keys(), vec![50, 100, 200, 300, 400, 500, 600]);
+        let mut ok2 = [true; 1];
+        assert_eq!(l.insert_batch_sorted(&[(0, 9)], &mut r, &mut ok2), 0);
+        assert!(!ok2[0], "sentinel key must fail in every build profile");
+    }
+
+    #[test]
+    fn bulk_insert_large_ascending_run() {
+        let l = HerlihySkipList::new();
+        let mut r = rng();
+        let items: Vec<(u64, u64)> = (1..=400u64).map(|k| (3 * k, k)).collect();
+        let mut ok = vec![false; items.len()];
+        assert_eq!(l.insert_batch_sorted(&items, &mut r, &mut ok), 400);
+        assert_eq!(l.count_exact(), 400);
+        let keys = l.keys();
+        assert!(keys.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn concurrent_batch_claims_are_distinct() {
+        let l = Arc::new(HerlihySkipList::new());
+        {
+            let mut r = rng();
+            for k in 1..=2000u64 {
+                l.insert(k, k, &mut r);
+            }
+        }
+        let hs: Vec<std::thread::JoinHandle<Vec<u64>>> = (0..4u64)
+            .map(|_| {
+                let l = l.clone();
+                std::thread::spawn(move || {
+                    let mut mine = Vec::new();
+                    let mut buf = Vec::new();
+                    for _ in 0..100 {
+                        buf.clear();
+                        l.claim_leftmost_batch(6, &mut buf);
+                        mine.extend(buf.iter().map(|&(k, _)| k));
+                    }
+                    mine
+                })
+            })
+            .collect();
+        let mut all: Vec<u64> = hs.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        let before = all.len();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(before, all.len(), "an element was claimed twice");
+        assert_eq!(before, 2000, "elements lost");
     }
 
     #[test]

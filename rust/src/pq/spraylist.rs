@@ -57,6 +57,17 @@ pub trait SprayBase: Send + Sync + Default {
     fn base_spray(&self, params: &SprayParams, rng: &mut Rng) -> Option<(u64, u64)>;
     /// Exact leftmost claim (cleaner / fallback path).
     fn base_claim_leftmost(&self) -> Option<(u64, u64)>;
+    /// Single-traversal multi-pop at the head (the combining fast path).
+    fn base_claim_batch(&self, n: usize, out: &mut Vec<(u64, u64)>) -> usize;
+    /// Ascending bulk insert reusing the predecessor search between items.
+    fn base_insert_batch_sorted(
+        &self,
+        items: &[(u64, u64)],
+        rng: &mut Rng,
+        ok: &mut [bool],
+    ) -> usize;
+    /// Cheap (possibly stale) minimum-key observation; `u64::MAX` = empty.
+    fn base_peek_min(&self) -> u64;
     /// Implementation label.
     fn base_name() -> &'static str;
 }
@@ -70,6 +81,20 @@ impl SprayBase for FraserSkipList {
     }
     fn base_claim_leftmost(&self) -> Option<(u64, u64)> {
         self.claim_leftmost()
+    }
+    fn base_claim_batch(&self, n: usize, out: &mut Vec<(u64, u64)>) -> usize {
+        self.claim_leftmost_batch(n, out)
+    }
+    fn base_insert_batch_sorted(
+        &self,
+        items: &[(u64, u64)],
+        rng: &mut Rng,
+        ok: &mut [bool],
+    ) -> usize {
+        self.insert_batch_sorted(items, rng, ok)
+    }
+    fn base_peek_min(&self) -> u64 {
+        self.peek_leftmost()
     }
     fn base_name() -> &'static str {
         "alistarh_fraser"
@@ -85,6 +110,20 @@ impl SprayBase for HerlihySkipList {
     }
     fn base_claim_leftmost(&self) -> Option<(u64, u64)> {
         self.claim_leftmost()
+    }
+    fn base_claim_batch(&self, n: usize, out: &mut Vec<(u64, u64)>) -> usize {
+        self.claim_leftmost_batch(n, out)
+    }
+    fn base_insert_batch_sorted(
+        &self,
+        items: &[(u64, u64)],
+        rng: &mut Rng,
+        ok: &mut [bool],
+    ) -> usize {
+        self.insert_batch_sorted(items, rng, ok)
+    }
+    fn base_peek_min(&self) -> u64 {
+        self.peek_leftmost()
     }
     fn base_name() -> &'static str {
         "alistarh_herlihy"
@@ -163,6 +202,59 @@ impl<B: SprayBase> ConcurrentPQ for SprayList<B> {
         out
     }
 
+    /// Bulk insert via the shared sort/scatter wrapper
+    /// ([`crate::pq::traits::batched_insert_each`]): one hinted list walk
+    /// per batch, allocation-free when the input is already ascending
+    /// (the combining server pre-sorts its residue).
+    fn insert_batch_each(&self, items: &[(u64, u64)], ok: &mut [bool]) -> usize {
+        crate::pq::traits::batched_insert_each(
+            items,
+            ok,
+            &self.stats,
+            |k, v| self.insert(k, v),
+            |sorted, sorted_ok| {
+                TLS_RNG.with(|r| {
+                    self.base
+                        .base_insert_batch_sorted(sorted, &mut r.borrow_mut(), sorted_ok)
+                })
+            },
+        )
+    }
+
+    /// Combined deleteMin: a singleton batch keeps the spray semantics;
+    /// larger batches claim the head prefix in a single traversal (the
+    /// amortization the Nuddle combining server relies on). A batched
+    /// pop is therefore *less* relaxed than n independent sprays.
+    fn delete_min_batch(&self, n: usize, out: &mut Vec<(u64, u64)>) -> usize {
+        match n {
+            0 => 0,
+            1 => match self.delete_min() {
+                Some(kv) => {
+                    out.push(kv);
+                    1
+                }
+                None => 0,
+            },
+            _ => {
+                let got = self.base.base_claim_batch(n, out);
+                self.stats.record_delete_min_batch(got as u64);
+                if got == 0 {
+                    self.stats.record_empty_delete_min();
+                }
+                got
+            }
+        }
+    }
+
+    fn peek_min_hint(&self) -> Option<u64> {
+        Some(self.base.base_peek_min())
+    }
+
+    fn record_eliminated(&self, pairs: u64, max_key: u64) {
+        self.stats.record_insert_batch(pairs, max_key);
+        self.stats.record_delete_min_batch(pairs);
+    }
+
     fn len(&self) -> usize {
         self.stats.size()
     }
@@ -216,6 +308,30 @@ mod tests {
         got.sort_unstable();
         assert_eq!(got, (1..100).collect::<Vec<_>>());
         assert_eq!(q.name(), "alistarh_herlihy");
+    }
+
+    #[test]
+    fn batch_ops_roundtrip_on_both_bases() {
+        fn run<B: SprayBase>() {
+            let q: SprayList<B> = SprayList::new(4);
+            // Unsorted input with a duplicate and a sentinel.
+            let items = [(40u64, 4u64), (10, 1), (40, 9), (0, 0), (30, 3), (20, 2)];
+            let mut ok = [false; 6];
+            assert_eq!(q.insert_batch_each(&items, &mut ok), 4, "{}", B::base_name());
+            assert_eq!(ok, [true, true, false, false, true, true], "{}", B::base_name());
+            assert_eq!(q.len(), 4);
+            assert_eq!(q.peek_min_hint(), Some(10));
+            let mut out = Vec::new();
+            assert_eq!(q.delete_min_batch(3, &mut out), 3);
+            assert_eq!(out, vec![(10, 1), (20, 2), (30, 3)], "{}", B::base_name());
+            assert_eq!(q.delete_min_batch(1, &mut out), 1);
+            assert_eq!(out.last(), Some(&(40, 4)));
+            assert_eq!(q.delete_min_batch(5, &mut out), 0);
+            assert_eq!(q.peek_min_hint(), Some(u64::MAX));
+            assert_eq!(q.len(), 0);
+        }
+        run::<FraserSkipList>();
+        run::<HerlihySkipList>();
     }
 
     #[test]

@@ -3,6 +3,8 @@
 
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 
+use crate::util::sync::CacheLine;
+
 /// Reserved sentinel keys: user keys must lie strictly between these.
 pub const KEY_MIN_SENTINEL: u64 = 0;
 /// Upper sentinel (tail); user keys must be `< KEY_MAX_SENTINEL`.
@@ -15,12 +17,99 @@ pub const KEY_MAX_SENTINEL: u64 = u64::MAX;
 /// returns the highest-priority pair, or `None` when the queue is
 /// (momentarily) empty. Relaxed implementations (SprayList) may return an
 /// element *near* the minimum — exactly the paper's semantics.
+///
+/// ## Bulk operations
+///
+/// The `*_batch` methods are the combining fast path: one traversal /
+/// lock acquisition / channel borrow amortized over a whole batch. The
+/// defaults degrade to op-by-op loops, so every implementation is
+/// batch-correct by construction; backends override them where a real
+/// amortization exists. Batched deletion may be *less* relaxed than the
+/// scalar op (e.g. SprayList pops the exact head prefix instead of
+/// spraying) — callers may not assume the two pop identical elements,
+/// only that conservation and the per-backend relaxation bound hold.
+///
+/// Unlike the scalar `insert` (which only `debug_assert`s the key range),
+/// batch entry points validate keys even in release builds: a sentinel
+/// key inside a batch is reported as a failed insert instead of
+/// poisoning the rest of the batch (crucial for the Nuddle combining
+/// server, which writes one response line for a whole client group).
 pub trait ConcurrentPQ: Send + Sync {
     /// Insert `(key, value)`. Returns false on duplicate key.
     fn insert(&self, key: u64, value: u64) -> bool;
 
     /// Remove and return a highest-priority element (possibly relaxed).
     fn delete_min(&self) -> Option<(u64, u64)>;
+
+    /// Insert a batch; returns how many items were inserted. Duplicate
+    /// and sentinel keys fail silently (see the trait docs).
+    fn insert_batch(&self, items: &[(u64, u64)]) -> usize {
+        const STACK: usize = 64;
+        if items.len() <= STACK {
+            let mut ok = [false; STACK];
+            self.insert_batch_each(items, &mut ok[..items.len()])
+        } else {
+            let mut ok = vec![false; items.len()];
+            self.insert_batch_each(items, &mut ok)
+        }
+    }
+
+    /// Like [`ConcurrentPQ::insert_batch`], reporting per-item outcomes
+    /// in `ok` (which must hold at least `items.len()` slots). This is
+    /// the entry point the combining server uses to build per-client
+    /// responses.
+    fn insert_batch_each(&self, items: &[(u64, u64)], ok: &mut [bool]) -> usize {
+        debug_assert!(ok.len() >= items.len());
+        let mut n = 0;
+        for (i, &(k, v)) in items.iter().enumerate() {
+            let r = is_valid_user_key(k) && self.insert(k, v);
+            ok[i] = r;
+            if r {
+                n += 1;
+            }
+        }
+        n
+    }
+
+    /// Pop up to `n` (near-)minimal elements, appending them to `out` in
+    /// the order popped; returns how many were appended. Fewer than `n`
+    /// results means the queue looked empty mid-batch.
+    fn delete_min_batch(&self, n: usize, out: &mut Vec<(u64, u64)>) -> usize {
+        let mut got = 0;
+        while got < n {
+            match self.delete_min() {
+                Some(kv) => {
+                    out.push(kv);
+                    got += 1;
+                }
+                None => break,
+            }
+        }
+        got
+    }
+
+    /// Cheap observation of the current minimum key: `None` when the
+    /// backend has no inexpensive way to look, `Some(KEY_MAX_SENTINEL)`
+    /// when the queue was observed empty. Used by the Nuddle combining
+    /// server's elimination rule (an insert whose key is strictly below
+    /// this hint can serve a paired deleteMin without touching the base),
+    /// so any `Some(k)` MUST be a lower bound on the live key set as of
+    /// some point during the call — return `None` if that cannot be
+    /// guaranteed cheaply.
+    fn peek_min_hint(&self) -> Option<u64> {
+        None
+    }
+
+    /// Account for `pairs` insert→deleteMin pairs a delegation layer
+    /// completed *without* touching the structure (the combining server's
+    /// elimination). Backends with operation counters fold them into the
+    /// stats — size is net zero, but SmartPQ's feature extraction must
+    /// still see the true op mix, not just the residue that reached the
+    /// base. `max_key` is the largest eliminated insert key (key-range
+    /// tracking). Default: no counters, nothing to do.
+    fn record_eliminated(&self, pairs: u64, max_key: u64) {
+        let _ = (pairs, max_key);
+    }
 
     /// Approximate number of elements (maintained with relaxed counters).
     fn len(&self) -> usize;
@@ -36,20 +125,27 @@ pub trait ConcurrentPQ: Send + Sync {
 
 /// Relaxed operation counters every queue carries; these feed the
 /// on-the-fly feature extraction of SmartPQ's classifier (paper §5).
+///
+/// Each counter lives on its own cache line: the six atomics used to
+/// share one line, so every backend's hot path bounced a single line
+/// between all sockets on every op — textbook false sharing. The padding
+/// costs 768 bytes per queue (there is one `PqStats` per queue, not per
+/// thread) and removes that coupling entirely; the
+/// `stats_line_sizes_and_alignment` test pins the layout.
 #[derive(Debug, Default)]
 pub struct PqStats {
     /// Completed successful inserts.
-    pub inserts: AtomicU64,
+    pub inserts: CacheLine<AtomicU64>,
     /// Completed successful deleteMins.
-    pub delete_mins: AtomicU64,
+    pub delete_mins: CacheLine<AtomicU64>,
     /// Failed inserts (duplicate key).
-    pub failed_inserts: AtomicU64,
+    pub failed_inserts: CacheLine<AtomicU64>,
     /// deleteMins that observed an empty queue.
-    pub empty_delete_mins: AtomicU64,
+    pub empty_delete_mins: CacheLine<AtomicU64>,
     /// Current size (inserts - deleteMins), relaxed.
-    pub size: AtomicI64,
+    pub size: CacheLine<AtomicI64>,
     /// Maximum key observed in any insert (key-range tracking, §5).
-    pub max_key_seen: AtomicU64,
+    pub max_key_seen: CacheLine<AtomicU64>,
 }
 
 impl PqStats {
@@ -66,10 +162,30 @@ impl PqStats {
         self.max_key_seen.fetch_max(key, Ordering::Relaxed);
     }
 
+    /// Record `n` successful inserts whose largest key was `max_key`
+    /// (one atomic round-trip per counter instead of per element).
+    #[inline]
+    pub fn record_insert_batch(&self, n: u64, max_key: u64) {
+        if n == 0 {
+            return;
+        }
+        self.inserts.fetch_add(n, Ordering::Relaxed);
+        self.size.fetch_add(n as i64, Ordering::Relaxed);
+        self.max_key_seen.fetch_max(max_key, Ordering::Relaxed);
+    }
+
     /// Record a failed (duplicate) insert.
     #[inline]
     pub fn record_failed_insert(&self) {
         self.failed_inserts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record `n` failed (duplicate / invalid-key) inserts.
+    #[inline]
+    pub fn record_failed_inserts(&self, n: u64) {
+        if n > 0 {
+            self.failed_inserts.fetch_add(n, Ordering::Relaxed);
+        }
     }
 
     /// Record a successful deleteMin.
@@ -77,6 +193,16 @@ impl PqStats {
     pub fn record_delete_min(&self) {
         self.delete_mins.fetch_add(1, Ordering::Relaxed);
         self.size.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Record `n` successful deleteMins (batched pop).
+    #[inline]
+    pub fn record_delete_min_batch(&self, n: u64) {
+        if n == 0 {
+            return;
+        }
+        self.delete_mins.fetch_add(n, Ordering::Relaxed);
+        self.size.fetch_sub(n as i64, Ordering::Relaxed);
     }
 
     /// Record a deleteMin on an empty queue.
@@ -131,11 +257,83 @@ impl PartialOrd for MinHeapEntry {
     }
 }
 
+/// True when `key` lies strictly inside the sentinel range. Batch entry
+/// points use this in *all* build profiles (see the trait docs); the
+/// scalar paths keep the debug-only [`check_user_key`].
+#[inline]
+pub fn is_valid_user_key(key: u64) -> bool {
+    key > KEY_MIN_SENTINEL && key < KEY_MAX_SENTINEL
+}
+
+/// Largest successfully inserted key of a batch (0 when none succeeded).
+pub(crate) fn batch_max_inserted(items: &[(u64, u64)], ok: &[bool]) -> u64 {
+    items
+        .iter()
+        .zip(ok.iter())
+        .filter(|(_, &o)| o)
+        .map(|(&(k, _), _)| k)
+        .max()
+        .unwrap_or(0)
+}
+
+/// Shared `insert_batch_each` implementation for backends whose bulk
+/// insert wants ascending keys (the skip-list queues): singleton batches
+/// go through `scalar` (which maintains its own counters), ascending
+/// batches go straight to `bulk` (allocation-free — the combining server
+/// pre-sorts its residue), and unsorted batches are sorted once with the
+/// per-item results scattered back to request order. Sentinel keys count
+/// as failed inserts on every path, so the classifier's `insert_fraction`
+/// does not depend on how ops were batched.
+pub(crate) fn batched_insert_each(
+    items: &[(u64, u64)],
+    ok: &mut [bool],
+    stats: &PqStats,
+    mut scalar: impl FnMut(u64, u64) -> bool,
+    bulk: impl Fn(&[(u64, u64)], &mut [bool]) -> usize,
+) -> usize {
+    debug_assert!(ok.len() >= items.len());
+    if items.len() <= 1 {
+        let mut n = 0;
+        for (i, &(k, v)) in items.iter().enumerate() {
+            let r = if is_valid_user_key(k) {
+                scalar(k, v) // records its own stats
+            } else {
+                stats.record_failed_insert();
+                false
+            };
+            ok[i] = r;
+            n += r as usize;
+        }
+        return n;
+    }
+    let (n, max_key) = if items.windows(2).all(|w| w[0].0 <= w[1].0) {
+        let n = bulk(items, ok);
+        (n, batch_max_inserted(items, ok))
+    } else {
+        let mut idx: Vec<usize> = (0..items.len()).collect();
+        idx.sort_by_key(|&i| items[i].0);
+        let sorted: Vec<(u64, u64)> = idx.iter().map(|&i| items[i]).collect();
+        let mut sorted_ok = vec![false; sorted.len()];
+        let n = bulk(&sorted, &mut sorted_ok);
+        let mut max_key = 0u64;
+        for (j, &i) in idx.iter().enumerate() {
+            ok[i] = sorted_ok[j];
+            if sorted_ok[j] {
+                max_key = max_key.max(items[i].0);
+            }
+        }
+        (n, max_key)
+    };
+    stats.record_insert_batch(n as u64, max_key);
+    stats.record_failed_inserts((items.len() - n) as u64);
+    n
+}
+
 /// Validate a user key against the sentinel range; panics in debug builds.
 #[inline]
 pub fn check_user_key(key: u64) {
     debug_assert!(
-        key > KEY_MIN_SENTINEL && key < KEY_MAX_SENTINEL,
+        is_valid_user_key(key),
         "user keys must be in (0, u64::MAX) exclusive; got {key}"
     );
 }
@@ -160,6 +358,54 @@ mod tests {
     }
 
     #[test]
+    fn stats_batch_recorders_match_scalar() {
+        let a = PqStats::new();
+        let b = PqStats::new();
+        for k in [5u64, 9, 2] {
+            a.record_insert(k);
+        }
+        a.record_delete_min();
+        a.record_delete_min();
+        a.record_failed_insert();
+        b.record_insert_batch(3, 9);
+        b.record_delete_min_batch(2);
+        b.record_failed_inserts(1);
+        // Zero-sized batches are no-ops.
+        b.record_insert_batch(0, u64::MAX);
+        b.record_delete_min_batch(0);
+        b.record_failed_inserts(0);
+        assert_eq!(a.size(), b.size());
+        assert_eq!(a.total_ops(), b.total_ops());
+        assert_eq!(
+            a.max_key_seen.load(Ordering::Relaxed),
+            b.max_key_seen.load(Ordering::Relaxed)
+        );
+    }
+
+    #[test]
+    fn stats_line_sizes_and_alignment() {
+        use crate::util::sync::CACHE_LINE_SIZE;
+        // One full line per hot counter (cf. channel.rs line layout test).
+        assert_eq!(std::mem::align_of::<PqStats>(), CACHE_LINE_SIZE);
+        assert_eq!(std::mem::size_of::<PqStats>(), 6 * CACHE_LINE_SIZE);
+        let s = PqStats::new();
+        let addrs = [
+            &*s.inserts as *const AtomicU64 as usize,
+            &*s.delete_mins as *const AtomicU64 as usize,
+            &*s.failed_inserts as *const AtomicU64 as usize,
+            &*s.empty_delete_mins as *const AtomicU64 as usize,
+            &*s.size as *const AtomicI64 as usize,
+            &*s.max_key_seen as *const AtomicU64 as usize,
+        ];
+        for w in addrs.windows(2) {
+            assert!(
+                w[1].abs_diff(w[0]) >= CACHE_LINE_SIZE,
+                "hot counters share a cache line"
+            );
+        }
+    }
+
+    #[test]
     fn size_never_negative() {
         let s = PqStats::new();
         s.record_delete_min();
@@ -170,5 +416,13 @@ mod tests {
     fn idle_insert_fraction_is_one() {
         let s = PqStats::new();
         assert_eq!(s.insert_fraction(), 1.0);
+    }
+
+    #[test]
+    fn key_validation() {
+        assert!(!is_valid_user_key(KEY_MIN_SENTINEL));
+        assert!(!is_valid_user_key(KEY_MAX_SENTINEL));
+        assert!(is_valid_user_key(1));
+        assert!(is_valid_user_key(u64::MAX - 1));
     }
 }

@@ -18,8 +18,8 @@ use crate::delegation::nuddle::mode;
 use crate::sim::cache::Directory;
 use crate::sim::cost::CostModel;
 use crate::sim::models::delegation::{
-    base_op, client_publish, client_read_response, server_serve_one, server_write_response,
-    DelegKind,
+    base_op, client_publish, client_read_response, server_serve_batch, server_serve_one,
+    server_write_response, DelegKind,
 };
 use crate::sim::models::oblivious::{delete_cost, insert_cost, ObvCtx, ObvKind, ObvParams};
 use crate::sim::queue_model::QueueModel;
@@ -458,9 +458,19 @@ impl Engine {
         while i < batch.len() {
             let group = batch[i].group;
             let mut wakes: Vec<(usize, usize)> = Vec::new(); // (client, group)
+            let mut reqs: Vec<(usize, bool)> = Vec::new();
             while i < batch.len() && batch[i].group == group {
                 let req = batch[i];
-                let (ns, _ok) = server_serve_one(
+                reqs.push((req.slot, req.is_insert));
+                wakes.push((req.client, req.group));
+                i += 1;
+            }
+            // Nuddle servers run the combining protocol: one group sweep
+            // shares a single head traversal across its deleteMins
+            // (priced in server_serve_batch). ffwd predates combining and
+            // keeps the one-op-at-a-time service.
+            let sweep_ns = match kind {
+                DelegKind::Nuddle(_) => server_serve_batch(
                     kind,
                     &self.params,
                     &self.cost,
@@ -470,16 +480,34 @@ impl Engine {
                     self.now,
                     node,
                     ctx,
-                    req.slot,
-                    req.is_insert,
+                    &reqs,
                     n_servers,
-                );
-                busy += ns * factor;
-                self.ops_completed += 1;
-                served += 1;
-                wakes.push((req.client, req.group));
-                i += 1;
-            }
+                ),
+                DelegKind::Ffwd => {
+                    let mut total = 0.0;
+                    for &(slot, is_insert) in &reqs {
+                        let (ns, _ok) = server_serve_one(
+                            kind,
+                            &self.params,
+                            &self.cost,
+                            &mut self.queue,
+                            &mut self.dir,
+                            &mut self.threads[tid].rng,
+                            self.now,
+                            node,
+                            ctx,
+                            slot,
+                            is_insert,
+                            n_servers,
+                        );
+                        total += ns;
+                    }
+                    total
+                }
+            };
+            busy += sweep_ns * factor;
+            self.ops_completed += reqs.len() as u64;
+            served += reqs.len();
             // One buffered response write for the whole group.
             busy += server_write_response(&self.cost, &mut self.dir, self.now, group, node, ctx)
                 * factor;

@@ -115,6 +115,62 @@ pub fn server_serve_one(
     (ns, ok)
 }
 
+/// Server-side cost of serving one *combined* group sweep (the Nuddle
+/// combining server): every request still pays its pipelined
+/// request-line read, but the deleteMins of the sweep share a single
+/// head traversal — the first pays the full [`base_op`] price and each
+/// further deleteMin only the `combine_marginal` fraction (claim CAS +
+/// unlink work), mirroring how `mq_steal_batch` amortizes the
+/// MultiQueue's remote transfer in
+/// [`crate::sim::models::oblivious`]. Inserts are not amortized (see
+/// `ObvParams::combine_marginal`). Excludes the per-group response
+/// write ([`server_write_response`]). Returns the sweep's cost in ns.
+#[allow(clippy::too_many_arguments)]
+pub fn server_serve_batch(
+    kind: DelegKind,
+    params: &ObvParams,
+    cm: &CostModel,
+    q: &mut QueueModel,
+    dir: &mut Directory,
+    rng: &mut Rng,
+    now: f64,
+    server_node: u8,
+    server_ctx: u32,
+    reqs: &[(usize, bool)],
+    servers_active: usize,
+) -> f64 {
+    let marginal = params.combine_marginal.clamp(0.0, 1.0);
+    let mut ns = 0.0;
+    let mut deletes_combined = 0usize;
+    for &(slot, is_insert) in reqs {
+        ns += server_read_request(cm, dir, now, slot, server_node, server_ctx);
+        let (op_ns, _ok) = base_op(
+            kind,
+            params,
+            cm,
+            q,
+            dir,
+            rng,
+            now,
+            server_node,
+            server_ctx,
+            is_insert,
+            servers_active,
+        );
+        if is_insert {
+            ns += op_ns;
+        } else {
+            ns += if deletes_combined == 0 {
+                op_ns
+            } else {
+                op_ns * marginal
+            };
+            deletes_combined += 1;
+        }
+    }
+    ns
+}
+
 /// A server's own operation (paper §4: servers interleave serving with
 /// their own randomly chosen operations) or an ffwd/Nuddle base op.
 #[allow(clippy::too_many_arguments)]
@@ -240,6 +296,52 @@ mod tests {
             ndl < 0.5 * obv,
             "nuddle server deleteMin {ndl:.0}ns should beat oblivious {obv:.0}ns"
         );
+    }
+
+    #[test]
+    fn combined_deletemin_sweep_amortizes_the_traversal() {
+        let cm = CostModel::default();
+        let p = ObvParams::default();
+        let kind = DelegKind::Nuddle(ObvKind::AlistarhHerlihy);
+        let mk = || (QueueModel::new(100_000, 200_000, 1), Directory::new());
+        let reqs: Vec<(usize, bool)> = (0..7).map(|s| (s, false)).collect();
+        // Combined sweep.
+        let (mut q1, mut d1) = mk();
+        let mut r1 = Rng::new(9);
+        let combined =
+            server_serve_batch(kind, &p, &cm, &mut q1, &mut d1, &mut r1, 1e6, 0, 0, &reqs, 8);
+        // One-op-at-a-time server on identical state.
+        let (mut q2, mut d2) = mk();
+        let mut r2 = Rng::new(9);
+        let mut sequential = 0.0;
+        for &(slot, is_insert) in &reqs {
+            let (ns, _) = server_serve_one(
+                kind, &p, &cm, &mut q2, &mut d2, &mut r2, 1e6, 0, 0, slot, is_insert, 8,
+            );
+            sequential += ns;
+        }
+        assert!(
+            combined < 0.75 * sequential,
+            "combined sweep {combined:.0}ns should amortize the per-op {sequential:.0}ns"
+        );
+        // Both sides completed the same queue mutations.
+        assert_eq!(q1.size(), q2.size());
+        // Insert-only sweeps are not amortized: same price both ways.
+        let ireqs: Vec<(usize, bool)> = (0..7).map(|s| (s, true)).collect();
+        let (mut q3, mut d3) = mk();
+        let mut r3 = Rng::new(9);
+        let comb_ins =
+            server_serve_batch(kind, &p, &cm, &mut q3, &mut d3, &mut r3, 1e6, 0, 0, &ireqs, 8);
+        let (mut q4, mut d4) = mk();
+        let mut r4 = Rng::new(9);
+        let mut seq_ins = 0.0;
+        for &(slot, is_insert) in &ireqs {
+            let (ns, _) = server_serve_one(
+                kind, &p, &cm, &mut q4, &mut d4, &mut r4, 1e6, 0, 0, slot, is_insert, 8,
+            );
+            seq_ins += ns;
+        }
+        assert!((comb_ins - seq_ins).abs() < 1e-6);
     }
 
     #[test]

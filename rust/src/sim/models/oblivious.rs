@@ -76,6 +76,15 @@ pub struct ObvParams {
     /// Elements moved per MultiQueue steal (remote transfer amortized
     /// over the batch; matches `MultiQueueParams`).
     pub mq_steal_batch: f64,
+    /// Fraction of a full deleteMin a Nuddle server pays for each
+    /// *additional* deleteMin it combines into one group sweep (the first
+    /// pays full price). Mirrors the `mq_steal_batch` amortization: the
+    /// real combining server claims a whole head prefix in one traversal
+    /// (`claim_leftmost_batch`), re-paying only the claim CAS and unlink
+    /// work per extra element. Inserts are deliberately *not* amortized —
+    /// random keys over a large range share little of the predecessor
+    /// search below the top levels.
+    pub combine_marginal: f64,
 }
 
 impl Default for ObvParams {
@@ -88,6 +97,7 @@ impl Default for ObvParams {
             fraser_oversub_factor: 1.30,
             mq_steal_prob: 8.0,
             mq_steal_batch: 8.0,
+            combine_marginal: 0.35,
         }
     }
 }

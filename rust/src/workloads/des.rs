@@ -70,6 +70,11 @@ pub struct DesConfig {
     /// horizon). Used by `--quick` and by the conservation tests to leave
     /// events pending in the queue.
     pub max_events: u64,
+    /// Events popped per `delete_min_batch` round-trip. 1 keeps the
+    /// classic loop; larger values amortize the queue's head traversal
+    /// (the combining win for delegation backends) at the cost of more
+    /// out-of-order commits while a worker drains its local batch.
+    pub pop_batch: usize,
 }
 
 impl Default for DesConfig {
@@ -81,6 +86,7 @@ impl Default for DesConfig {
             threads: 4,
             seed: 3,
             max_events: 0,
+            pop_batch: 4,
         }
     }
 }
@@ -178,14 +184,27 @@ pub fn phold(q: Arc<dyn ConcurrentPQ>, cfg: &DesConfig) -> DesRun {
                     let mut rng = Rng::stream(cfg.seed ^ 0x0DE5, tid as u64 + 1);
                     let mut c = WorkerCounters::default();
                     let mut misses = 0u64;
+                    let batch = cfg.pop_batch.max(1);
+                    // Popped-but-unexecuted events; they keep `pending`
+                    // above zero until executed, so batching cannot fool
+                    // the termination check (cf. workloads::sssp).
+                    let mut buf: Vec<(u64, u64)> = Vec::with_capacity(batch);
+                    let mut cursor = 0usize;
                     loop {
-                        if cfg.max_events > 0
+                        if cursor == buf.len()
+                            && cfg.max_events > 0
                             && consumed_total.load(Ordering::Relaxed) >= cfg.max_events
                         {
                             return c;
                         }
-                        match q.delete_min() {
+                        if cursor == buf.len() {
+                            buf.clear();
+                            cursor = 0;
+                            q.delete_min_batch(batch, &mut buf);
+                        }
+                        match buf.get(cursor).copied() {
                             Some((key, _lp)) => {
+                                cursor += 1;
                                 misses = 0;
                                 let time = event_time(key);
                                 c.consumed += 1;
@@ -245,21 +264,24 @@ pub fn phold(q: Arc<dyn ConcurrentPQ>, cfg: &DesConfig) -> DesRun {
 
     // Drain whatever the (possibly capped) run left pending; with all
     // workers joined this is single-threaded, so a bounded retry loop is
-    // enough to ride out any transiently-empty relaxed scan.
+    // enough to ride out any transiently-empty relaxed scan. Batched
+    // pops make the drain itself a combining consumer.
     let mut drained = 0u64;
     let mut misses = 0u32;
+    let mut drain_buf: Vec<(u64, u64)> = Vec::with_capacity(64);
     loop {
-        match q.delete_min() {
-            Some(_) => {
-                drained += 1;
-                misses = 0;
-            }
-            None => {
+        drain_buf.clear();
+        match q.delete_min_batch(64, &mut drain_buf) {
+            0 => {
                 if q.is_empty() || misses > 10_000 {
                     break;
                 }
                 misses += 1;
                 std::hint::spin_loop();
+            }
+            got => {
+                drained += got as u64;
+                misses = 0;
             }
         }
     }
@@ -298,6 +320,7 @@ mod tests {
             threads: 2,
             seed: 9,
             max_events: 0,
+            pop_batch: 4,
         };
         let run = phold(q.clone(), &cfg);
         assert!(run.conserved(), "{run:?}");
@@ -317,6 +340,7 @@ mod tests {
             threads: 4,
             seed: 5,
             max_events: 2_000,
+            pop_batch: 8,
         };
         let run = phold(q, &cfg);
         assert!(run.conserved(), "{run:?}");

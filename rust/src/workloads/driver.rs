@@ -28,6 +28,12 @@ use crate::workloads::des::{phold, DesConfig, DesRun};
 use crate::workloads::graph::{Graph, GraphKind};
 use crate::workloads::sssp::{parallel_sssp, SsspConfig, SsspRun};
 
+/// Frontier/event elements popped per queue round-trip by the app
+/// drivers (see `SsspConfig::pop_batch` / `DesConfig::pop_batch`): large
+/// enough to exercise every backend's combined pop, small enough to keep
+/// wasted work and inversions near the scalar loop's.
+pub const DEFAULT_POP_BATCH: usize = 4;
+
 /// Every queue backend the application plane runs over, in report order.
 /// `spraylist` is the canonical SprayList (Fraser base) under the name
 /// the paper's §1 uses colloquially; `alistarh_fraser`/`alistarh_herlihy`
@@ -93,6 +99,7 @@ fn nuddle_cfg(threads: usize) -> NuddleConfig {
         // Workers plus the prefill/drain main thread, with margin.
         max_clients: threads + 8,
         idle_sleep_us: 50,
+        combine: true,
     }
 }
 
@@ -393,6 +400,7 @@ pub fn run_backend(
             let scfg = SsspConfig {
                 threads: cfg.threads,
                 source: *source,
+                pop_batch: DEFAULT_POP_BATCH,
             };
             let queue = Arc::clone(&built.queue);
             let (run, trace) =
@@ -414,6 +422,7 @@ pub fn run_backend(
                 threads: cfg.threads,
                 seed: cfg.seed,
                 max_events: *max_events,
+                pop_batch: DEFAULT_POP_BATCH,
             };
             let queue = Arc::clone(&built.queue);
             let (run, trace) =

@@ -2,11 +2,13 @@
 //!
 //! The driver is the textbook concurrent Dijkstra the paper motivates in
 //! §1: the queue holds `(encoded distance, vertex)` pairs, workers pop a
-//! (near-)minimum vertex, relax its out-edges with a CAS loop on the
-//! shared distance array, and push improvements back. Relaxed deleteMin
-//! (SprayList, MultiQueue) stays correct because popping a non-minimal
-//! vertex merely reorders relaxations — it can only produce *stale* pops
-//! (wasted work), never wrong distances.
+//! *batch* of (near-)minimum vertices per queue round-trip
+//! (`delete_min_batch`, size [`SsspConfig::pop_batch`]), relax each
+//! vertex's out-edges with a CAS loop on the shared distance array, and
+//! push improvements back. Relaxed deleteMin (SprayList, MultiQueue) and
+//! batched popping stay correct for the same reason: popping a
+//! non-minimal vertex merely reorders relaxations — it can only produce
+//! *stale* pops (wasted work), never wrong distances.
 //!
 //! Termination uses an exact pending-work counter instead of the
 //! empty-poll heuristic the old example relied on: the counter is
@@ -39,6 +41,12 @@ pub struct SsspConfig {
     pub threads: usize,
     /// Source vertex.
     pub source: usize,
+    /// Frontier elements popped per `delete_min_batch` call. 1 keeps the
+    /// classic one-pop loop; larger values amortize the queue's head
+    /// traversal over the batch at the cost of slightly more stale pops
+    /// and inversions (a worker holds the tail of its batch while the
+    /// frontier moves on).
+    pub pop_batch: usize,
 }
 
 impl Default for SsspConfig {
@@ -46,6 +54,7 @@ impl Default for SsspConfig {
         SsspConfig {
             threads: 4,
             source: 0,
+            pop_batch: 4,
         }
     }
 }
@@ -157,12 +166,25 @@ pub fn parallel_sssp(g: &Graph, q: Arc<dyn ConcurrentPQ>, cfg: &SsspConfig) -> S
             .map(|_| {
                 let q = Arc::clone(&q);
                 let (dist, pending, watermark) = (&dist, &pending, &watermark);
+                let batch = cfg.pop_batch.max(1);
                 s.spawn(move || {
                     let mut c = WorkerCounters::default();
                     let mut misses = 0u64;
+                    // Popped-but-unprocessed frontier entries. Elements a
+                    // worker holds here keep `pending` above zero (it is
+                    // only decremented after processing), so batching
+                    // cannot fool the termination check.
+                    let mut buf: Vec<(u64, u64)> = Vec::with_capacity(batch);
+                    let mut cursor = 0usize;
                     loop {
-                        match q.delete_min() {
+                        if cursor == buf.len() {
+                            buf.clear();
+                            cursor = 0;
+                            q.delete_min_batch(batch, &mut buf);
+                        }
+                        match buf.get(cursor).copied() {
                             Some((key, _)) => {
+                                cursor += 1;
                                 misses = 0;
                                 c.pops += 1;
                                 if key < watermark.fetch_max(key, Ordering::Relaxed) {
@@ -264,7 +286,7 @@ mod tests {
         let g = graph();
         let want = g.seq_dijkstra(0);
         let q: Arc<dyn ConcurrentPQ> = Arc::new(LotanShavitPQ::new());
-        let run = parallel_sssp(&g, q, &SsspConfig { threads: 2, source: 0 });
+        let run = parallel_sssp(&g, q, &SsspConfig { threads: 2, source: 0, pop_batch: 4 });
         assert!(run.matches(&want));
         assert_eq!(run.failed_inserts, 0);
         // Every inserted element is popped exactly once.
@@ -276,7 +298,7 @@ mod tests {
         let g = graph();
         let want = g.seq_dijkstra(0);
         let q: Arc<dyn ConcurrentPQ> = Arc::new(MultiQueue::new(4));
-        let run = parallel_sssp(&g, q, &SsspConfig { threads: 4, source: 0 });
+        let run = parallel_sssp(&g, q, &SsspConfig { threads: 4, source: 0, pop_batch: 8 });
         assert!(run.matches(&want));
         assert_eq!(run.pops, run.inserts);
         assert!(run.wasted_pct() <= 100.0);
@@ -287,7 +309,7 @@ mod tests {
         let g = Graph::grid(12, 12, 5);
         let want = g.seq_dijkstra(0);
         let q: Arc<dyn ConcurrentPQ> = Arc::new(LotanShavitPQ::new());
-        let run = parallel_sssp(&g, q, &SsspConfig { threads: 1, source: 0 });
+        let run = parallel_sssp(&g, q, &SsspConfig { threads: 1, source: 0, pop_batch: 1 });
         assert!(run.matches(&want));
         assert_eq!(run.inversions, 0);
     }

@@ -1,0 +1,227 @@
+//! Batch-operation differential tests: for every backend in
+//! `driver::ALL_BACKENDS`, `insert_batch` / `delete_min_batch` must be
+//! observationally equivalent to the op-by-op loop — identical insert
+//! outcomes, identical pop *counts*, conservation of the surviving key
+//! set (popped ∪ remaining == inserted, no loss, no duplication), popped
+//! keys inside the backend's relaxation window, and — for exact backends
+//! — the identical popped sequence. Plus the Nuddle combining stress
+//! test: 8+ client threads hammering one combining server must preserve
+//! per-client request/response pairing (FIFO toggles) and global
+//! conservation.
+
+use std::sync::Arc;
+
+use smartpq::delegation::nuddle::{Nuddle, NuddleConfig};
+use smartpq::pq::traits::ConcurrentPQ;
+use smartpq::pq::SprayList;
+use smartpq::util::rng::Rng;
+use smartpq::workloads::driver::{build_queue, ALL_BACKENDS};
+
+type Herlihy = SprayList<smartpq::pq::skiplist::herlihy::HerlihySkipList>;
+
+/// Backends whose (single-threaded) deleteMin is exact, so batched and
+/// looped pops must return the identical sequence.
+const EXACT: [&str; 2] = ["lotan_shavit", "ffwd"];
+
+/// Deterministic unique keys in shuffled order (values tied to keys).
+fn test_keys(n: u64, seed: u64) -> Vec<(u64, u64)> {
+    let mut keys: Vec<u64> = (1..=n).collect();
+    Rng::new(seed).shuffle(&mut keys);
+    keys.into_iter().map(|k| (k, k ^ 0xA5A5)).collect()
+}
+
+fn drain(q: &dyn ConcurrentPQ) -> Vec<u64> {
+    let mut out = Vec::new();
+    let mut buf = Vec::new();
+    loop {
+        buf.clear();
+        if q.delete_min_batch(32, &mut buf) == 0 {
+            break;
+        }
+        out.extend(buf.iter().map(|&(k, _)| k));
+    }
+    out.sort_unstable();
+    out
+}
+
+#[test]
+fn batch_ops_equivalent_to_op_by_op_loops_on_every_backend() {
+    let n = 600u64;
+    let pops = 150usize;
+    for name in ALL_BACKENDS {
+        for batch in [4usize, 8, 16] {
+            let a = build_queue(name, 2, 7).expect(name); // batched
+            let b = build_queue(name, 2, 7).expect(name); // op-by-op
+            let keys = test_keys(n, 0xBA7C0 + batch as u64);
+
+            // Inserts: chunked batches vs the loop agree per chunk.
+            for chunk in keys.chunks(batch) {
+                let na = a.queue.insert_batch(chunk);
+                let nb = chunk.iter().filter(|&&(k, v)| b.queue.insert(k, v)).count();
+                assert_eq!(na, nb, "{name} b={batch}: insert count diverged");
+            }
+            // Re-inserting the same keys must fail everywhere.
+            assert_eq!(
+                a.queue.insert_batch(&keys[..batch]),
+                0,
+                "{name} b={batch}: duplicates accepted"
+            );
+            assert_eq!(a.queue.len(), b.queue.len(), "{name} b={batch}");
+
+            // Pops: batched vs looped return the same number of elements,
+            // all within the relaxation window of the small end.
+            let mut got_a: Vec<(u64, u64)> = Vec::new();
+            while got_a.len() < pops {
+                let before = got_a.len();
+                a.queue
+                    .delete_min_batch((pops - got_a.len()).min(batch), &mut got_a);
+                assert!(got_a.len() > before, "{name} b={batch}: queue ran dry early");
+            }
+            let mut got_b: Vec<(u64, u64)> = Vec::new();
+            for _ in 0..pops {
+                got_b.push(b.queue.delete_min().expect(name));
+            }
+            assert_eq!(got_a.len(), got_b.len());
+            // Generous but meaningful window: every backend here pops
+            // from the first quarter of a 600-element queue.
+            for &(k, v) in got_a.iter().chain(got_b.iter()) {
+                assert!(
+                    k <= pops as u64 + 300,
+                    "{name} b={batch}: popped {k} far from the minimum"
+                );
+                assert_eq!(v, k ^ 0xA5A5, "{name} b={batch}: value corrupted");
+            }
+            if EXACT.contains(&name) {
+                assert_eq!(got_a, got_b, "{name} b={batch}: exact pop order diverged");
+            }
+
+            // Conservation: popped ∪ surviving must be exactly the
+            // inserted key set on both sides.
+            let mut inserted: Vec<u64> = keys.iter().map(|&(k, _)| k).collect();
+            inserted.sort_unstable();
+            for (label, got, q) in [("batched", &got_a, &a.queue), ("looped", &got_b, &b.queue)] {
+                let mut all: Vec<u64> = got.iter().map(|&(k, _)| k).collect();
+                all.extend(drain(q.as_ref()));
+                all.sort_unstable();
+                assert_eq!(
+                    all, inserted,
+                    "{name} b={batch} ({label}): elements lost or duplicated"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn batch_entry_points_reject_sentinels_without_poisoning_the_batch() {
+    // Release builds included: a sentinel key inside a batch fails that
+    // item only (the combining server relies on this to keep a group's
+    // response write-back intact).
+    for name in ["lotan_shavit", "alistarh_herlihy", "multiqueue", "nuddle"] {
+        let q = build_queue(name, 2, 3).expect(name).queue;
+        let mut ok = [true; 5];
+        let n = q.insert_batch_each(
+            &[(10, 1), (0, 2), (20, 3), (u64::MAX, 4), (30, 5)],
+            &mut ok,
+        );
+        assert_eq!(n, 3, "{name}");
+        assert_eq!(ok, [true, false, true, false, true], "{name}");
+        assert_eq!(drain(q.as_ref()), vec![10, 20, 30], "{name}");
+    }
+}
+
+/// The combining-server acceptance stress: 8 client threads, mixed
+/// inserts and deleteMins over a narrow key range (so insert→deleteMin
+/// elimination actually triggers), verifying per-client response
+/// pairing — every deleteMin response must carry a (key, value) pair
+/// some client actually inserted (value = key ^ TAG), inserts report
+/// coherent set semantics, and the global count conserves.
+#[test]
+fn nuddle_combining_stress_preserves_fifo_pairing_and_conservation() {
+    const TAG: u64 = 0x5EED_F00D;
+    let base: Arc<Herlihy> = Arc::new(SprayList::new(8));
+    let q = Arc::new(Nuddle::new(
+        base,
+        NuddleConfig {
+            servers: 2,
+            max_clients: 16,
+            idle_sleep_us: 10,
+            combine: true,
+        },
+    ));
+    let workers: Vec<_> = (0..8u64)
+        .map(|t| {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || {
+                let mut rng = Rng::stream(0xF1F0, t);
+                let mut net = 0i64;
+                let mut popped = 0u64;
+                for i in 0..800u64 {
+                    // Narrow range: new inserts frequently undercut the
+                    // current minimum, exercising elimination.
+                    let key = 1 + rng.gen_range(512);
+                    if i % 3 != 0 {
+                        if q.insert(key, key ^ TAG) {
+                            net += 1;
+                        }
+                    } else if let Some((k, v)) = q.delete_min() {
+                        assert_eq!(v, k ^ TAG, "client {t}: response payload corrupted");
+                        net -= 1;
+                        popped += 1;
+                    }
+                }
+                (net, popped)
+            })
+        })
+        .collect();
+    let mut net = 0i64;
+    for w in workers {
+        let (n, _) = w.join().expect("worker panicked");
+        net += n;
+    }
+    assert_eq!(
+        q.len() as i64,
+        net,
+        "combining server lost or duplicated elements"
+    );
+    // Everything left must still carry coherent payloads.
+    while let Some((k, v)) = q.delete_min() {
+        assert_eq!(v, k ^ TAG, "surviving payload corrupted");
+    }
+}
+
+/// Batched client ops through the combining server behave like scalar
+/// ones under concurrency (the end-to-end path the workloads use).
+#[test]
+fn nuddle_combining_batched_clients_conserve() {
+    let base: Arc<Herlihy> = Arc::new(SprayList::new(8));
+    let q = Arc::new(Nuddle::new(
+        base,
+        NuddleConfig {
+            servers: 2,
+            max_clients: 16,
+            idle_sleep_us: 10,
+            combine: true,
+        },
+    ));
+    let workers: Vec<_> = (0..8u64)
+        .map(|t| {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || {
+                let mut net = 0i64;
+                let mut buf = Vec::new();
+                for i in 0..80u64 {
+                    let base_key = 1 + t * 100_000 + i * 8;
+                    let items: Vec<(u64, u64)> =
+                        (0..8).map(|j| (base_key + j, t)).collect();
+                    net += q.insert_batch(&items) as i64;
+                    buf.clear();
+                    net -= q.delete_min_batch(5, &mut buf) as i64;
+                }
+                net
+            })
+        })
+        .collect();
+    let net: i64 = workers.into_iter().map(|w| w.join().unwrap()).sum();
+    assert_eq!(q.len() as i64, net, "batched delegation lost elements");
+}

@@ -104,6 +104,7 @@ fn nuddle_over_spraylist_composes() {
             servers: 2,
             max_clients: 16,
             idle_sleep_us: 20,
+            combine: true,
         },
     );
     for k in 1..=100u64 {
@@ -135,6 +136,7 @@ fn nuddle_over_multiqueue_composes() {
             servers: 2,
             max_clients: 16,
             idle_sleep_us: 20,
+            combine: true,
         },
     );
     for k in 1..=100u64 {
@@ -169,6 +171,7 @@ fn smartpq_over_multiqueue_switches_modes() {
                 servers: 1,
                 max_clients: 8,
                 idle_sleep_us: 10,
+                combine: true,
             },
             decision_interval: std::time::Duration::from_secs(3600),
             initial_mode: mode::OBLIVIOUS,
@@ -198,6 +201,7 @@ fn smartpq_with_trained_oracle_end_to_end() {
                 servers: 2,
                 max_clients: 16,
                 idle_sleep_us: 20,
+                combine: true,
             },
             decision_interval: std::time::Duration::from_millis(10),
             initial_mode: mode::OBLIVIOUS,
@@ -242,6 +246,7 @@ fn mode_flip_storm_conserves_elements() {
                 servers: 1,
                 max_clients: 8,
                 idle_sleep_us: 10,
+                combine: true,
             },
             decision_interval: std::time::Duration::from_secs(3600),
             initial_mode: mode::AWARE,

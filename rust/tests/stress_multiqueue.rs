@@ -135,6 +135,7 @@ fn nuddle_over_multiqueue_conserves_under_contention() {
             servers: 2,
             max_clients: 16,
             idle_sleep_us: 20,
+            combine: true,
         },
     ));
     check_conservation(q, 6, 1500, 0xD00D);

@@ -48,6 +48,7 @@ fn sssp_grid_and_power_law_graphs_verify_on_relaxed_backends() {
                 &SsspConfig {
                     threads: 4,
                     source: 0,
+                    pop_batch: 4,
                 },
             );
             assert!(run.matches(&oracle), "{name} on {kind:?}");
