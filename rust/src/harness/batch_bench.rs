@@ -218,16 +218,10 @@ fn host_parallelism() -> usize {
     std::thread::available_parallelism().map_or(1, |n| n.get())
 }
 
-/// Where the machine-readable results live: the repository root when we
-/// can find it (the binary runs from either the repo root or `rust/`),
-/// else the current directory.
+/// Where the machine-readable results live (repo root; see
+/// [`crate::harness::repo_root_file`]).
 pub fn bench_json_path() -> std::path::PathBuf {
-    for dir in [".", ".."] {
-        if std::path::Path::new(dir).join("ROADMAP.md").exists() {
-            return std::path::Path::new(dir).join("BENCH_batch.json");
-        }
-    }
-    std::path::PathBuf::from("BENCH_batch.json")
+    crate::harness::repo_root_file("BENCH_batch.json")
 }
 
 /// Serialize results as JSON (hand-rolled: the build is dependency-free).

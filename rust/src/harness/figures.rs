@@ -496,6 +496,42 @@ pub fn batch(cfg: &BenchConfig) -> crate::util::error::Result<Vec<Table>> {
     crate::harness::batch_bench::run_batch_figure(cfg)
 }
 
+// ------------------------------------------------ trace-driven projection
+
+/// Trace-driven NUMA projection (`bench --figure projection`): record the
+/// deterministic SSSP and DES contention traces and replay them across
+/// simulated 1/2/4/8-node topologies for every simulated backend. The
+/// SSSP run writes the canonical `BENCH_projection.json`; DES writes its
+/// suffixed sibling (see [`crate::harness::projection_bench`]).
+pub fn projection(cfg: &BenchConfig) -> crate::util::error::Result<Vec<Table>> {
+    use crate::harness::projection_bench::{
+        report_tables, run_projection, write_outputs, ProjectionConfig,
+    };
+    use crate::workloads::{AppWorkload, GraphKind};
+
+    let mut out = Vec::new();
+    let workloads = [
+        AppWorkload::Sssp {
+            graph: GraphKind::Random { degree: 8 },
+            n: if cfg.quick { 2_000 } else { 20_000 },
+            source: 0,
+        },
+        AppWorkload::Des {
+            lps: 256,
+            horizon: if cfg.quick { 2_000 } else { 20_000 },
+            max_dt: 200,
+            max_events: 0,
+        },
+    ];
+    for workload in workloads {
+        let pcfg = ProjectionConfig::new(workload, cfg.quick, 42);
+        let report = run_projection(&pcfg)?;
+        out.extend(report_tables(&report));
+        write_outputs(&report)?;
+    }
+    Ok(out)
+}
+
 // ---------------------------------------------------- §4.2.1 classifier
 
 /// §4.2.1: classifier accuracy + misprediction cost over random

@@ -6,10 +6,24 @@
 //! experiment.
 
 pub mod batch_bench;
+pub mod check_bench;
 pub mod figures;
+pub mod projection_bench;
 pub mod real_bench;
 pub mod runner;
 pub mod table;
 
 pub use runner::{BenchConfig, Measurement};
 pub use table::Table;
+
+/// Resolve `name` at the repository root: the binary runs from either
+/// the repo root or `rust/`, so walk up one level looking for the
+/// ROADMAP marker; fall back to the current directory.
+pub fn repo_root_file(name: &str) -> std::path::PathBuf {
+    for dir in [".", ".."] {
+        if std::path::Path::new(dir).join("ROADMAP.md").exists() {
+            return std::path::Path::new(dir).join(name);
+        }
+    }
+    std::path::PathBuf::from(name)
+}

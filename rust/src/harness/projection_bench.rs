@@ -1,0 +1,515 @@
+//! `smartpq project` / `bench --figure projection` — trace-driven NUMA
+//! projection.
+//!
+//! The application workloads run on *this* host's topology; the paper
+//! evaluated a 4-node machine we do not have. This pipeline connects the
+//! two planes end to end:
+//!
+//! 1. **Record** — the deterministic recorder in
+//!    [`crate::workloads::trace`] replays the workload's algorithmic
+//!    schedule (lazy-deletion Dijkstra / sequential PHOLD) and buckets it
+//!    into per-phase insert fractions, queue sizes, and parallelism.
+//! 2. **Convert** — [`WorkloadTrace::to_schedule`] turns the trace into a
+//!    phase schedule with the queue-size trajectory pinned per phase.
+//! 3. **Replay** — [`crate::sim::replay_workload`] runs the schedule on
+//!    simulated 1/2/4/8-node topologies for every simulated backend
+//!    ([`SimAlgo::projection_set`]), using each topology's full hardware
+//!    context count as the thread target.
+//!
+//! The output reports, per (backend, node count), the projected per-phase
+//! throughput series — and, per node count, the *crossover* summary: the
+//! phases where SmartPQ's projection matches or beats the best fixed
+//! backend, which is the adaptivity win the paper predicts for machines
+//! bigger than the host. Results go to stdout tables,
+//! `target/reports/projection_*.csv`, the recorded trace CSV, and a
+//! machine-readable `BENCH_projection.json` at the repository root
+//! (gated in CI by `smartpq check-bench`).
+
+use std::path::PathBuf;
+
+use crate::harness::table::{fmt, Table};
+use crate::sim::cost::CostModel;
+use crate::sim::models::oblivious::ObvParams;
+use crate::sim::{replay_workload, SimAlgo, Topology, Workload};
+use crate::util::error::{Error, Result};
+use crate::workloads::report::REPORT_DIR;
+use crate::workloads::trace::{record_app_trace, WorkloadTrace};
+use crate::workloads::AppWorkload;
+
+/// Node counts the projection sweeps by default.
+pub const DEFAULT_NODE_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+/// Largest simulated node count the engine supports.
+pub const MAX_NODES: usize = 8;
+
+/// A projection request.
+#[derive(Debug, Clone)]
+pub struct ProjectionConfig {
+    /// The workload whose trace is projected.
+    pub workload: AppWorkload,
+    /// Simulated NUMA node counts (each 1..=[`MAX_NODES`]).
+    pub node_counts: Vec<usize>,
+    /// Trace buckets (= projected phases).
+    pub buckets: usize,
+    /// Virtual milliseconds per projected phase.
+    pub phase_ms: f64,
+    /// RNG seed (workload instance + sim).
+    pub seed: u64,
+    /// Quick (CI smoke) mode marker, recorded in the JSON.
+    pub quick: bool,
+}
+
+impl ProjectionConfig {
+    /// Defaults for a workload: the full 1/2/4/8 sweep; quick mode keeps
+    /// the bucket resolution (the crossover analysis needs the drain tail
+    /// resolved into several phases) but shortens each phase.
+    pub fn new(workload: AppWorkload, quick: bool, seed: u64) -> ProjectionConfig {
+        ProjectionConfig {
+            workload,
+            node_counts: DEFAULT_NODE_COUNTS.to_vec(),
+            buckets: if quick { 16 } else { 20 },
+            phase_ms: if quick { 0.4 } else { 2.0 },
+            seed,
+            quick,
+        }
+    }
+}
+
+/// One projected phase of one (backend, node count) series.
+#[derive(Debug, Clone)]
+pub struct PhasePoint {
+    /// Share of the recorded run's ops this phase carried.
+    pub share: f64,
+    /// Active threads (parallelism-capped).
+    pub threads: usize,
+    /// Insert percentage.
+    pub insert_pct: f64,
+    /// Key range.
+    pub key_range: u64,
+    /// Queue size pinned at phase entry.
+    pub queue_size: u64,
+    /// Projected throughput (Mops/s).
+    pub mops: f64,
+    /// Mode at phase end (`oblivious` / `aware`).
+    pub mode: &'static str,
+}
+
+/// One (backend, node count) projection series.
+#[derive(Debug, Clone)]
+pub struct ProjSeries {
+    /// Backend label.
+    pub backend: &'static str,
+    /// Simulated NUMA nodes.
+    pub nodes: usize,
+    /// Thread target (the topology's hardware contexts).
+    pub threads: usize,
+    /// Ops-weighted overall throughput.
+    pub overall_mops: f64,
+    /// SmartPQ mode switches over the whole replay (0 for fixed).
+    pub switches: u64,
+    /// Per-phase points.
+    pub phases: Vec<PhasePoint>,
+}
+
+/// Per-node-count SmartPQ-vs-best-fixed summary.
+#[derive(Debug, Clone)]
+pub struct Crossover {
+    /// Simulated NUMA nodes.
+    pub nodes: usize,
+    /// Phase indices where SmartPQ >= the best fixed backend.
+    pub smartpq_win_phases: Vec<usize>,
+    /// SmartPQ overall Mops/s.
+    pub smartpq_overall_mops: f64,
+    /// Best fixed backend by overall Mops/s.
+    pub best_fixed_backend: &'static str,
+    /// Its overall Mops/s.
+    pub best_fixed_overall_mops: f64,
+}
+
+/// A complete projection result.
+#[derive(Debug, Clone)]
+pub struct ProjectionReport {
+    /// Workload label ("sssp" / "des").
+    pub workload: &'static str,
+    /// Quick mode marker.
+    pub quick: bool,
+    /// Seed.
+    pub seed: u64,
+    /// Trace buckets.
+    pub buckets: usize,
+    /// Virtual ms per phase.
+    pub phase_ms: f64,
+    /// Node counts swept.
+    pub node_counts: Vec<usize>,
+    /// The recorded trace the schedules came from.
+    pub trace: WorkloadTrace,
+    /// All (backend, node count) series.
+    pub series: Vec<ProjSeries>,
+    /// Per-node-count crossover summaries.
+    pub crossover: Vec<Crossover>,
+}
+
+fn mode_label(mode: u8) -> &'static str {
+    if mode == crate::delegation::nuddle::mode::AWARE {
+        "aware"
+    } else {
+        "oblivious"
+    }
+}
+
+/// Run the full projection pipeline (pure: no files written).
+pub fn run_projection(cfg: &ProjectionConfig) -> Result<ProjectionReport> {
+    if cfg.node_counts.is_empty() {
+        return Err(Error::Config("projection needs at least one node count".into()));
+    }
+    for &n in &cfg.node_counts {
+        if n == 0 || n > MAX_NODES {
+            return Err(Error::Config(format!(
+                "node count {n} out of range (1..={MAX_NODES})"
+            )));
+        }
+    }
+    let trace = record_app_trace(&cfg.workload, cfg.seed, cfg.buckets);
+    let mut series = Vec::new();
+    let mut crossover = Vec::new();
+    for &nodes in &cfg.node_counts {
+        let topology = Topology {
+            nodes,
+            cores_per_node: 8,
+            smt: 2,
+        };
+        let target_threads = topology.hw_contexts();
+        let sched = trace.to_schedule(target_threads, cfg.phase_ms * 1e6);
+        let mut node_series: Vec<ProjSeries> = Vec::new();
+        for algo in SimAlgo::projection_set() {
+            let w = Workload {
+                init_size: sched.init_size,
+                phases: sched.phases.clone(),
+                seed: cfg.seed,
+                topology: topology.clone(),
+                cost: CostModel::default(),
+                params: ObvParams::default(),
+            };
+            let r = replay_workload(&algo, &w, &sched.sizes);
+            let phases: Vec<PhasePoint> = r
+                .phases
+                .iter()
+                .zip(sched.phases.iter())
+                .zip(sched.sizes.iter().zip(sched.shares.iter()))
+                .map(|((stats, phase), (size, share))| PhasePoint {
+                    share: *share,
+                    threads: phase.threads,
+                    insert_pct: phase.insert_pct,
+                    key_range: phase.key_range,
+                    queue_size: size.unwrap_or(0),
+                    mops: stats.mops,
+                    mode: mode_label(stats.mode_at_end),
+                })
+                .collect();
+            node_series.push(ProjSeries {
+                backend: r.algo,
+                nodes,
+                threads: target_threads,
+                overall_mops: r.overall_mops(),
+                switches: r.total_switches(),
+                phases,
+            });
+        }
+        crossover.push(crossover_for(nodes, &node_series)?);
+        series.extend(node_series);
+    }
+    Ok(ProjectionReport {
+        workload: cfg.workload.name(),
+        quick: cfg.quick,
+        seed: cfg.seed,
+        buckets: cfg.buckets,
+        phase_ms: cfg.phase_ms,
+        node_counts: cfg.node_counts.clone(),
+        trace,
+        series,
+        crossover,
+    })
+}
+
+/// Compute the SmartPQ-vs-best-fixed summary for one node count.
+fn crossover_for(nodes: usize, node_series: &[ProjSeries]) -> Result<Crossover> {
+    let smart = node_series
+        .iter()
+        .find(|s| s.backend == "smartpq")
+        .ok_or_else(|| Error::Invariant("projection set lost smartpq".into()))?;
+    let fixed: Vec<&ProjSeries> = node_series.iter().filter(|s| s.backend != "smartpq").collect();
+    let mut wins = Vec::new();
+    for i in 0..smart.phases.len() {
+        let best = fixed
+            .iter()
+            .map(|s| s.phases[i].mops)
+            .fold(f64::NEG_INFINITY, f64::max);
+        if smart.phases[i].mops >= best {
+            wins.push(i);
+        }
+    }
+    let best_overall = fixed
+        .iter()
+        .max_by(|a, b| a.overall_mops.total_cmp(&b.overall_mops))
+        .ok_or_else(|| Error::Invariant("projection set has no fixed backends".into()))?;
+    Ok(Crossover {
+        nodes,
+        smartpq_win_phases: wins,
+        smartpq_overall_mops: smart.overall_mops,
+        best_fixed_backend: best_overall.backend,
+        best_fixed_overall_mops: best_overall.overall_mops,
+    })
+}
+
+/// Render one table per node count (and print the crossover lines).
+pub fn report_tables(report: &ProjectionReport) -> Vec<Table> {
+    let mut out = Vec::new();
+    for &nodes in &report.node_counts {
+        let node_series: Vec<&ProjSeries> =
+            report.series.iter().filter(|s| s.nodes == nodes).collect();
+        let n_phases = node_series.first().map(|s| s.phases.len()).unwrap_or(0);
+        let mut header = vec!["backend".to_string()];
+        header.extend((0..n_phases).map(|i| format!("ph{i}")));
+        header.push("overall".into());
+        header.push("switches".into());
+        let hdr: Vec<&str> = header.iter().map(String::as_str).collect();
+        let threads = node_series.first().map(|s| s.threads).unwrap_or(0);
+        let title = format!(
+            "Projection [{} trace, {nodes} NUMA node(s), {threads} hw contexts]: Mops/s per phase",
+            report.workload
+        );
+        let mut t = Table::new(title, &hdr);
+        for s in &node_series {
+            let mut row = vec![s.backend.to_string()];
+            row.extend(s.phases.iter().map(|p| fmt(p.mops)));
+            row.push(fmt(s.overall_mops));
+            row.push(s.switches.to_string());
+            t.row(row);
+        }
+        t.print();
+        out.push(t);
+    }
+    for c in &report.crossover {
+        println!(
+            "crossover @{} node(s): smartpq {} of the recorded phases vs best fixed \
+             ({} at {} Mops overall; smartpq overall {} Mops)",
+            c.nodes,
+            if c.smartpq_win_phases.is_empty() {
+                "wins none".to_string()
+            } else {
+                format!("wins {:?}", c.smartpq_win_phases)
+            },
+            c.best_fixed_backend,
+            fmt(c.best_fixed_overall_mops),
+            fmt(c.smartpq_overall_mops),
+        );
+    }
+    println!();
+    out
+}
+
+/// Serialize the report as the `BENCH_projection` JSON schema.
+pub fn json_string(report: &ProjectionReport) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"generated_by\": \"smartpq project\",\n");
+    s.push_str("  \"placeholder\": false,\n");
+    s.push_str(&format!("  \"workload\": \"{}\",\n", report.workload));
+    s.push_str(&format!("  \"quick\": {},\n", report.quick));
+    s.push_str(&format!("  \"seed\": {},\n", report.seed));
+    s.push_str(&format!("  \"buckets\": {},\n", report.buckets));
+    s.push_str(&format!("  \"phase_ms\": {},\n", report.phase_ms));
+    let nodes: Vec<String> = report.node_counts.iter().map(|n| n.to_string()).collect();
+    s.push_str(&format!("  \"node_counts\": [{}],\n", nodes.join(", ")));
+    s.push_str("  \"series\": [\n");
+    for (i, ser) in report.series.iter().enumerate() {
+        s.push_str("    {\n");
+        s.push_str(&format!("      \"backend\": \"{}\",\n", ser.backend));
+        s.push_str(&format!("      \"nodes\": {},\n", ser.nodes));
+        s.push_str(&format!("      \"threads\": {},\n", ser.threads));
+        s.push_str(&format!("      \"overall_mops\": {:.6},\n", ser.overall_mops));
+        s.push_str(&format!("      \"switches\": {},\n", ser.switches));
+        s.push_str("      \"phases\": [\n");
+        for (j, p) in ser.phases.iter().enumerate() {
+            s.push_str(&format!(
+                "        {{\"share\": {:.6}, \"threads\": {}, \"insert_pct\": {:.2}, \
+                 \"key_range\": {}, \"queue_size\": {}, \"mops\": {:.6}, \"mode\": \"{}\"}}{}\n",
+                p.share,
+                p.threads,
+                p.insert_pct,
+                p.key_range,
+                p.queue_size,
+                p.mops,
+                p.mode,
+                if j + 1 < ser.phases.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("      ]\n");
+        s.push_str(&format!(
+            "    }}{}\n",
+            if i + 1 < report.series.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str("  \"crossover\": [\n");
+    for (i, c) in report.crossover.iter().enumerate() {
+        let wins: Vec<String> = c.smartpq_win_phases.iter().map(|w| w.to_string()).collect();
+        s.push_str(&format!(
+            "    {{\"nodes\": {}, \"smartpq_win_phases\": [{}], \"smartpq_overall_mops\": {:.6}, \
+             \"best_fixed_backend\": \"{}\", \"best_fixed_overall_mops\": {:.6}}}{}\n",
+            c.nodes,
+            wins.join(", "),
+            c.smartpq_overall_mops,
+            c.best_fixed_backend,
+            c.best_fixed_overall_mops,
+            if i + 1 < report.crossover.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]\n");
+    s.push_str("}\n");
+    s
+}
+
+/// The JSON artifact name for a workload: the SSSP projection is the
+/// canonical `BENCH_projection.json`; other workloads get a suffixed
+/// sibling so they never clobber it.
+pub fn projection_json_name(workload: &str) -> String {
+    if workload == "sssp" {
+        "BENCH_projection.json".to_string()
+    } else {
+        format!("BENCH_projection_{workload}.json")
+    }
+}
+
+/// Write the recorded trace CSV, the long-form projection CSV, and the
+/// JSON artifact; returns the JSON path.
+pub fn write_outputs(report: &ProjectionReport) -> Result<PathBuf> {
+    std::fs::create_dir_all(REPORT_DIR)?;
+    let trace_path = format!("{REPORT_DIR}/trace_{}.csv", report.workload);
+    std::fs::write(&trace_path, report.trace.to_csv())?;
+    let mut t = Table::new(
+        format!("projection_{}", report.workload),
+        &[
+            "workload",
+            "nodes",
+            "backend",
+            "phase",
+            "share",
+            "threads",
+            "insert_pct",
+            "key_range",
+            "queue_size",
+            "mops",
+            "mode",
+            "switches_total",
+        ],
+    );
+    for s in &report.series {
+        for (i, p) in s.phases.iter().enumerate() {
+            t.row(vec![
+                report.workload.to_string(),
+                s.nodes.to_string(),
+                s.backend.to_string(),
+                i.to_string(),
+                format!("{:.6}", p.share),
+                p.threads.to_string(),
+                format!("{:.2}", p.insert_pct),
+                p.key_range.to_string(),
+                p.queue_size.to_string(),
+                format!("{:.6}", p.mops),
+                p.mode.to_string(),
+                s.switches.to_string(),
+            ]);
+        }
+    }
+    t.write_csv(format!("{REPORT_DIR}/projection_{}.csv", report.workload))?;
+    let json_path = crate::harness::repo_root_file(&projection_json_name(report.workload));
+    std::fs::write(&json_path, json_string(report))?;
+    println!(
+        "projection results written to {} (trace: {trace_path})",
+        json_path.display()
+    );
+    Ok(json_path)
+}
+
+/// Run the pipeline, print the tables, write all outputs.
+pub fn run_and_write(cfg: &ProjectionConfig) -> Result<(ProjectionReport, PathBuf)> {
+    let report = run_projection(cfg)?;
+    report_tables(&report);
+    let json_path = write_outputs(&report)?;
+    Ok((report, json_path))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::GraphKind;
+
+    fn tiny_cfg() -> ProjectionConfig {
+        ProjectionConfig {
+            workload: AppWorkload::Sssp {
+                graph: GraphKind::Random { degree: 4 },
+                n: 300,
+                source: 0,
+            },
+            node_counts: vec![1, 2],
+            buckets: 4,
+            phase_ms: 0.05,
+            seed: 5,
+            quick: true,
+        }
+    }
+
+    #[test]
+    fn projection_produces_one_series_per_backend_and_node_count() {
+        let r = run_projection(&tiny_cfg()).unwrap();
+        let backends = SimAlgo::projection_set().len();
+        assert_eq!(r.series.len(), 2 * backends);
+        let n_phases = r.series[0].phases.len();
+        assert!(n_phases >= 2 && n_phases <= 4, "phases={n_phases}");
+        for s in &r.series {
+            assert_eq!(s.phases.len(), n_phases, "{}@{}", s.backend, s.nodes);
+            assert!(s.overall_mops > 0.0, "{}@{} idle", s.backend, s.nodes);
+        }
+        // Node counts use the full hardware context count as the target.
+        assert!(r.series.iter().any(|s| s.nodes == 1 && s.threads == 16));
+        assert!(r.series.iter().any(|s| s.nodes == 2 && s.threads == 32));
+        assert_eq!(r.crossover.len(), 2);
+    }
+
+    #[test]
+    fn projection_is_deterministic() {
+        let a = run_projection(&tiny_cfg()).unwrap();
+        let b = run_projection(&tiny_cfg()).unwrap();
+        assert_eq!(json_string(&a), json_string(&b));
+    }
+
+    #[test]
+    fn json_is_machine_readable() {
+        let r = run_projection(&tiny_cfg()).unwrap();
+        let s = json_string(&r);
+        let v = crate::util::json::Json::parse(&s).expect("projection JSON parses");
+        assert_eq!(v.get("workload").unwrap().as_str(), Some("sssp"));
+        assert_eq!(v.get("placeholder").unwrap().as_bool(), Some(false));
+        let series = v.get("series").unwrap().as_array().unwrap();
+        assert_eq!(series.len(), r.series.len());
+        assert!(v.get("crossover").unwrap().as_array().unwrap().len() == 2);
+    }
+
+    #[test]
+    fn rejects_bad_node_counts() {
+        let mut cfg = tiny_cfg();
+        cfg.node_counts = vec![0];
+        assert!(run_projection(&cfg).is_err());
+        cfg.node_counts = vec![9];
+        assert!(run_projection(&cfg).is_err());
+        cfg.node_counts = vec![];
+        assert!(run_projection(&cfg).is_err());
+    }
+
+    #[test]
+    fn json_names_keep_sssp_canonical() {
+        assert_eq!(projection_json_name("sssp"), "BENCH_projection.json");
+        assert_eq!(projection_json_name("des"), "BENCH_projection_des.json");
+    }
+}

@@ -6,6 +6,9 @@
 //!   point        — measure one simulated workload point
 //!   real         — run the real concurrent queues with OS threads
 //!   app          — application workloads (SSSP / DES) over every backend
+//!   project      — replay recorded SSSP/DES traces on simulated
+//!                  1/2/4/8-node topologies (trace-driven projection)
+//!   check-bench  — validate BENCH_*.json artifacts (CI gate)
 //!   demo         — 30-second guided tour (SmartPQ adapting live)
 //!   classifier   — inspect / query the decision infrastructure
 
@@ -29,12 +32,14 @@ smartpq — adaptive concurrent priority queue for NUMA architectures (paper rep
 USAGE: smartpq <command> [options]
 
 COMMANDS
-  bench --figure <fig1|fig7|fig9|fig10|fig11|multiqueue|classifier|ablation|app|batch|all>
+  bench --figure <fig1|fig7|fig9|fig10|fig11|multiqueue|classifier|ablation|app|batch|projection|all>
                           regenerate the paper's figures on the simulated
                           4-node testbed (CSV copies under target/reports/);
                           `batch` runs the real-plane bulk-op sweep and the
                           Nuddle combining-server comparison, recording
-                          machine-readable results in BENCH_batch.json
+                          machine-readable results in BENCH_batch.json;
+                          `projection` runs the trace-driven NUMA
+                          projection for both workloads
   train-data [--points N] [--out data/training.csv] [--duration-ms D]
                           sweep (threads,size,range,mix) over the simulator
                           and emit the classifier training set
@@ -58,6 +63,22 @@ COMMANDS
                           mode-switch trace (options: --graph
                           random|grid|powerlaw, --n, --lps, --horizon,
                           --max-dt, --trace-ms, --source)
+  project --workload <sssp|des> [--nodes 1,2,4,8] [--buckets N] [--phase-ms F]
+                          record the workload's deterministic contention
+                          trace (op mix, queue trajectory, parallelism)
+                          and replay it in the simulator across 1/2/4/8
+                          NUMA-node topologies for every backend — the
+                          projection of `smartpq app` results beyond this
+                          host. Writes BENCH_projection.json (sssp; des
+                          gets a suffixed sibling) and
+                          target/reports/projection_*.csv (workload
+                          options as for `app`)
+  check-bench <BENCH_*.json ...> [--min-combining-speedup X]
+                          validate bench artifacts: JSON schema, the
+                          combining speedup target (>= 1.3x on hosts with
+                          >= 8 parallel units), and the projection
+                          crossover/sanity invariants; nonzero exit on
+                          violation (the CI gate)
   demo                    SmartPQ adapting across contention phases
   classifier [--query \"threads,size,range,insert_pct\"]
                           show model info; optionally classify one workload
@@ -104,6 +125,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
             "ablation",
             "app",
             "batch",
+            "projection",
             "all",
         ],
         "all",
@@ -140,6 +162,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
     }
     if run_all || fig == "batch" {
         figures::batch(&cfg)?;
+    }
+    if run_all || fig == "projection" {
+        figures::projection(&cfg)?;
     }
     Ok(())
 }
@@ -411,6 +436,95 @@ fn cmd_app(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Trace-driven NUMA projection: record the workload's deterministic
+/// contention trace and replay it on simulated 1/2/4/8-node topologies
+/// for every simulated backend (see `harness::projection_bench`).
+fn cmd_project(args: &Args) -> Result<()> {
+    use smartpq::harness::projection_bench::{run_and_write, ProjectionConfig, DEFAULT_NODE_COUNTS};
+    use smartpq::workloads::{AppWorkload, GraphKind};
+
+    let quick = args.flag("quick");
+    let workload_name = args.choice("workload", &["sssp", "des"], "sssp")?;
+    let seed: u64 = args.num_or("seed", 42)?;
+    let workload = match workload_name.as_str() {
+        "sssp" => {
+            let graph = match args
+                .choice("graph", &["random", "grid", "powerlaw"], "random")?
+                .as_str()
+            {
+                "grid" => GraphKind::Grid,
+                "powerlaw" => GraphKind::PowerLaw {
+                    min_degree: args.num_or("degree", 3)?,
+                },
+                _ => GraphKind::Random {
+                    degree: args.num_or("degree", 8)?,
+                },
+            };
+            AppWorkload::Sssp {
+                graph,
+                n: args.num_or("n", if quick { 2_000 } else { 20_000 })?,
+                source: args.num_or("source", 0)?,
+            }
+        }
+        _ => AppWorkload::Des {
+            lps: args.num_or("lps", 256)?,
+            horizon: args.num_or("horizon", if quick { 2_000 } else { 20_000 })?,
+            max_dt: args.num_or("max-dt", 200)?,
+            max_events: args.num_or("max-events", 0)?,
+        },
+    };
+    let mut cfg = ProjectionConfig::new(workload, quick, seed);
+    cfg.node_counts = args.list_or("nodes", &DEFAULT_NODE_COUNTS)?;
+    cfg.buckets = args.num_or("buckets", cfg.buckets)?;
+    cfg.phase_ms = args.num_or("phase-ms", cfg.phase_ms)?;
+    eprintln!(
+        "project: workload={workload_name} nodes={:?} buckets={} phase_ms={} seed={seed}{}",
+        cfg.node_counts,
+        cfg.buckets,
+        cfg.phase_ms,
+        if quick { " (quick)" } else { "" }
+    );
+    let (report, json_path) = run_and_write(&cfg)?;
+    let adaptive_wins = report
+        .crossover
+        .iter()
+        .filter(|c| c.nodes > 1 && !c.smartpq_win_phases.is_empty())
+        .count();
+    println!(
+        "projection: {} of {} multi-node topologies show the SmartPQ adaptivity crossover \
+         ({} gates it in CI)",
+        adaptive_wins,
+        report.crossover.iter().filter(|c| c.nodes > 1).count(),
+        json_path.display()
+    );
+    Ok(())
+}
+
+/// Validate BENCH_*.json artifacts (schema + perf gates); nonzero exit on
+/// the first violation.
+fn cmd_check_bench(args: &Args) -> Result<()> {
+    use smartpq::harness::check_bench::{check_file, DEFAULT_MIN_COMBINING_SPEEDUP};
+
+    let min: f64 = args.num_or("min-combining-speedup", DEFAULT_MIN_COMBINING_SPEEDUP)?;
+    let paths = args.positionals();
+    if paths.is_empty() {
+        return Err(Error::Config(
+            "check-bench needs at least one BENCH_*.json path".into(),
+        ));
+    }
+    for p in paths {
+        let outcome = check_file(std::path::Path::new(p), min)?;
+        println!("check-bench: {p}: OK");
+        for fact in &outcome.facts {
+            println!("  ok   {fact}");
+        }
+        for warning in &outcome.warnings {
+            println!("  warn {warning}");
+        }
+    }
+    Ok(())
+}
+
 fn cmd_demo(args: &Args) -> Result<()> {
     let seed: u64 = args.num_or("seed", 42)?;
     println!("SmartPQ demo: three contention phases on the simulated 4-node testbed\n");
@@ -520,6 +634,8 @@ fn main() {
         Some("point") => cmd_point(&args),
         Some("real") => cmd_real(&args),
         Some("app") => cmd_app(&args),
+        Some("project") => cmd_project(&args),
+        Some("check-bench") => cmd_check_bench(&args),
         Some("demo") => cmd_demo(&args),
         Some("classifier") => cmd_classifier(&args),
         Some("help") | None => {

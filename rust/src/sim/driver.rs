@@ -96,6 +96,18 @@ impl SimAlgo {
             SimAlgo::nuddle(8),
         ]
     }
+
+    /// Every simulated backend the trace projection compares: the Fig. 9
+    /// static set plus the MultiQueue-backbone Nuddle and SmartPQ itself.
+    pub fn projection_set() -> Vec<SimAlgo> {
+        let mut v = SimAlgo::fig9_set();
+        v.push(SimAlgo::nuddle_multiqueue(8, 4));
+        v.push(SimAlgo::SmartPQ {
+            servers: 8,
+            oracle: None,
+        });
+        v
+    }
 }
 
 /// One phase of a dynamic workload (paper Tables 2/3).
@@ -206,8 +218,9 @@ pub fn decision_interval_for(phase_ns: f64) -> f64 {
     (phase_ns / 25.0).clamp(1e4, 1e9)
 }
 
-/// Run `algo` over `w`; deterministic for a given seed.
-pub fn run_workload(algo: &SimAlgo, w: &Workload) -> SimResult {
+/// Construct the engine for `algo` over `w` (shared by [`run_workload`]
+/// and [`replay_workload`]).
+fn engine_for(algo: &SimAlgo, w: &Workload) -> Engine {
     let max_threads = w.phases.iter().map(|p| p.threads).max().unwrap_or(1);
     let key_range0 = w.phases.first().map(|p| p.key_range).unwrap_or(1024);
     let engine_algo = match algo {
@@ -233,7 +246,7 @@ pub fn run_workload(algo: &SimAlgo, w: &Workload) -> SimResult {
             ),
         },
     };
-    let mut engine = Engine::new(
+    Engine::new(
         engine_algo,
         PlacementPolicy::paper(w.topology.clone()),
         w.cost.clone(),
@@ -242,15 +255,39 @@ pub fn run_workload(algo: &SimAlgo, w: &Workload) -> SimResult {
         key_range0,
         max_threads,
         w.seed,
+    )
+}
+
+/// Run `algo` over `w`; deterministic for a given seed.
+pub fn run_workload(algo: &SimAlgo, w: &Workload) -> SimResult {
+    replay_workload(algo, w, &[])
+}
+
+/// Run `algo` over `w`, pinning the modeled queue size per phase — the
+/// sim plane's trace-replay entry point (`smartpq project`). `sizes` is
+/// parallel to `w.phases`: a `Some(s)` phase starts at size `s` and is
+/// held in the `[s/2, 2s]` band for its whole duration (the recorded
+/// trajectory, not the stationary drift, is ground truth — see
+/// [`Engine::run_phase_pinned`]). An empty slice (or `None` entries)
+/// leaves the size to evolve freely, which is exactly [`run_workload`].
+pub fn replay_workload(algo: &SimAlgo, w: &Workload, sizes: &[Option<u64>]) -> SimResult {
+    assert!(
+        sizes.is_empty() || sizes.len() == w.phases.len(),
+        "sizes must be empty or match the phase count"
     );
+    let mut engine = engine_for(algo, w);
     let mut phases = Vec::with_capacity(w.phases.len());
-    for p in &w.phases {
-        phases.push(engine.run_phase(PhaseCfg {
-            duration: p.duration_ns,
-            threads: p.threads,
-            insert_pct: p.insert_pct,
-            key_range: p.key_range,
-        }));
+    for (i, p) in w.phases.iter().enumerate() {
+        let pin = sizes.get(i).copied().flatten();
+        phases.push(engine.run_phase_pinned(
+            PhaseCfg {
+                duration: p.duration_ns,
+                threads: p.threads,
+                insert_pct: p.insert_pct,
+                key_range: p.key_range,
+            },
+            pin,
+        ));
     }
     let (dirty, inval) = engine.coherence_stats();
     SimResult {

@@ -240,6 +240,14 @@ impl Engine {
         self.queue.size()
     }
 
+    /// Force the modeled queue size. Trace replay (`smartpq project`)
+    /// pins the recorded queue-size trajectory at each phase entry so the
+    /// simulated structure stays in the recorded contention regime
+    /// instead of drifting with the engine's own op balance.
+    pub fn set_queue_size(&mut self, size: u64) {
+        self.queue.set_size(size);
+    }
+
     /// Current SmartPQ mode.
     pub fn current_mode(&self) -> u8 {
         self.mode
@@ -602,9 +610,24 @@ impl Engine {
 
     /// Run one phase; returns its stats.
     pub fn run_phase(&mut self, cfg: PhaseCfg) -> PhaseStats {
+        self.run_phase_pinned(cfg, None)
+    }
+
+    /// Run one phase with the queue size pinned to `pin`: set at phase
+    /// entry and re-asserted whenever the size drifts outside
+    /// `[pin/2, 2*pin]`. Trace replay uses this because the recorded
+    /// trajectory — not the stationary microbenchmark drift — is ground
+    /// truth for the structure's size: a deleteMin-dominated phase of a
+    /// real drain keeps popping from a *populated* backlog for the whole
+    /// bucket, while an unpinned stationary mix would empty the modeled
+    /// queue and measure empty-poll throughput instead.
+    pub fn run_phase_pinned(&mut self, cfg: PhaseCfg, pin: Option<u64>) -> PhaseStats {
         assert!(cfg.threads <= self.threads.len(), "phase exceeds max_threads");
         self.phase = cfg.clone();
         self.queue.set_key_range(cfg.key_range);
+        if let Some(s0) = pin {
+            self.queue.set_size(s0);
+        }
         self.recompute_factors(cfg.threads);
         let start = self.now;
         let end = start + cfg.duration;
@@ -632,6 +655,12 @@ impl Engine {
         let mut truncated_at = None;
         while self.step(end) {
             events += 1;
+            if let Some(s0) = pin {
+                let s = self.queue.size();
+                if s < s0 / 2 || s > s0.saturating_mul(2) {
+                    self.queue.set_size(s0);
+                }
+            }
             if self.max_events_per_phase > 0 && events >= self.max_events_per_phase {
                 crate::log_warn!("sim: phase event cap hit at t={}", self.now);
                 truncated_at = Some(self.now);
@@ -841,6 +870,20 @@ mod tests {
             key_range: 1 << 27,
         });
         assert_eq!(s2.mode_at_end, mode::OBLIVIOUS, "switches={}", s2.switches);
+    }
+
+    #[test]
+    fn pinned_phase_stays_in_the_recorded_size_regime() {
+        let mut e = mk(EngineAlgo::Oblivious(ObvKind::AlistarhHerlihy), 1024, 2048, 8);
+        let s = e.run_phase_pinned(phase(8, 0.0, 2048), Some(512));
+        // Unpinned, a 0%-insert phase would drain the queue and stop
+        // measuring; pinned, the recorded backlog is re-asserted and the
+        // phase keeps popping real elements inside the [pin/2, 2*pin]
+        // band for its whole duration.
+        let size = e.queue_size();
+        assert!((256..=1024).contains(&size), "size={size}");
+        assert!(s.ops > 1_000, "ops={}", s.ops);
+        assert!((s.duration - 2e6).abs() < 1.0, "no truncation expected");
     }
 
     #[test]

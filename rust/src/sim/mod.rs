@@ -33,5 +33,7 @@ pub mod models;
 pub mod queue_model;
 pub mod topology;
 
-pub use driver::{run_workload, PhaseResult, SimAlgo, SimResult, Workload, WorkloadPhase};
+pub use driver::{
+    replay_workload, run_workload, PhaseResult, SimAlgo, SimResult, Workload, WorkloadPhase,
+};
 pub use topology::{Placement, Topology};

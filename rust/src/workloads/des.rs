@@ -34,6 +34,7 @@ use std::time::{Duration, Instant};
 
 use crate::pq::traits::ConcurrentPQ;
 use crate::util::rng::Rng;
+use crate::workloads::trace::LiveCounters;
 
 /// Bits reserved for the uniqueness sequence in an event key.
 const SEQ_BITS: u32 = 32;
@@ -75,6 +76,10 @@ pub struct DesConfig {
     /// (the combining win for delegation backends) at the cost of more
     /// out-of-order commits while a worker drains its local batch.
     pub pop_batch: usize,
+    /// Optional live contention counters (op mix, active workers) the
+    /// app driver's monitor thread samples per bucket (see
+    /// [`crate::workloads::trace`]). `None` skips all accounting.
+    pub counters: Option<Arc<LiveCounters>>,
 }
 
 impl Default for DesConfig {
@@ -87,6 +92,7 @@ impl Default for DesConfig {
             seed: 3,
             max_events: 0,
             pop_batch: 4,
+            counters: None,
         }
     }
 }
@@ -180,11 +186,17 @@ pub fn phold(q: Arc<dyn ConcurrentPQ>, cfg: &DesConfig) -> DesRun {
                 let q = Arc::clone(&q);
                 let (seq, pending, consumed_total) = (&seq, &pending, &consumed_total);
                 let (max_time, watermark) = (&max_time, &watermark);
+                let live = cfg.counters.clone();
                 s.spawn(move || {
                     let mut rng = Rng::stream(cfg.seed ^ 0x0DE5, tid as u64 + 1);
                     let mut c = WorkerCounters::default();
                     let mut misses = 0u64;
                     let batch = cfg.pop_batch.max(1);
+                    // Starvation tracking for the live `active` gauge.
+                    let mut starved = false;
+                    if let Some(live) = &live {
+                        live.worker_active();
+                    }
                     // Popped-but-unexecuted events; they keep `pending`
                     // above zero until executed, so batching cannot fool
                     // the termination check (cf. workloads::sssp).
@@ -195,6 +207,13 @@ pub fn phold(q: Arc<dyn ConcurrentPQ>, cfg: &DesConfig) -> DesRun {
                             && cfg.max_events > 0
                             && consumed_total.load(Ordering::Relaxed) >= cfg.max_events
                         {
+                            // Leaving via the cap: release the active
+                            // gauge so the final trace row reads 0.
+                            if let Some(live) = &live {
+                                if !starved {
+                                    live.worker_idle();
+                                }
+                            }
                             return c;
                         }
                         if cursor == buf.len() {
@@ -206,6 +225,13 @@ pub fn phold(q: Arc<dyn ConcurrentPQ>, cfg: &DesConfig) -> DesRun {
                             Some((key, _lp)) => {
                                 cursor += 1;
                                 misses = 0;
+                                if let Some(live) = &live {
+                                    if starved {
+                                        starved = false;
+                                        live.worker_active();
+                                    }
+                                    live.record_pop();
+                                }
                                 let time = event_time(key);
                                 c.consumed += 1;
                                 consumed_total.fetch_add(1, Ordering::Relaxed);
@@ -223,6 +249,9 @@ pub fn phold(q: Arc<dyn ConcurrentPQ>, cfg: &DesConfig) -> DesRun {
                                     pending.fetch_add(1, Ordering::AcqRel);
                                     if q.insert(key, next_lp) {
                                         c.created += 1;
+                                        if let Some(live) = &live {
+                                            live.record_insert();
+                                        }
                                     } else {
                                         c.failed_inserts += 1;
                                         pending.fetch_sub(1, Ordering::AcqRel);
@@ -231,6 +260,12 @@ pub fn phold(q: Arc<dyn ConcurrentPQ>, cfg: &DesConfig) -> DesRun {
                                 pending.fetch_sub(1, Ordering::AcqRel);
                             }
                             None => {
+                                if let Some(live) = &live {
+                                    if !starved {
+                                        starved = true;
+                                        live.worker_idle();
+                                    }
+                                }
                                 if pending.load(Ordering::Acquire) <= 0 {
                                     return c;
                                 }
@@ -319,8 +354,7 @@ mod tests {
             max_dt: 100,
             threads: 2,
             seed: 9,
-            max_events: 0,
-            pop_batch: 4,
+            ..Default::default()
         };
         let run = phold(q.clone(), &cfg);
         assert!(run.conserved(), "{run:?}");
@@ -341,6 +375,7 @@ mod tests {
             seed: 5,
             max_events: 2_000,
             pop_batch: 8,
+            counters: None,
         };
         let run = phold(q, &cfg);
         assert!(run.conserved(), "{run:?}");

@@ -27,6 +27,7 @@ use crate::util::error::{Error, Result};
 use crate::workloads::des::{phold, DesConfig, DesRun};
 use crate::workloads::graph::{Graph, GraphKind};
 use crate::workloads::sssp::{parallel_sssp, SsspConfig, SsspRun};
+use crate::workloads::trace::LiveCounters;
 
 /// Frontier/event elements popped per queue round-trip by the app
 /// drivers (see `SsspConfig::pop_batch` / `DesConfig::pop_batch`): large
@@ -185,15 +186,29 @@ pub fn build_queue(name: &str, threads: usize, seed: u64) -> Result<BuiltQueue> 
     })
 }
 
-/// One sample of an adaptive backend's mode trace.
+/// One sample of a backend's workload trace: the mode cell (for adaptive
+/// backends) plus the per-bucket contention snapshot every backend gets —
+/// insert fraction, queue size, and the live worker-activity gauge (the
+/// columns of `app_*_trace.csv`, and the raw material the projection
+/// pipeline's deterministic recorder mirrors; see
+/// [`crate::workloads::trace`]).
 #[derive(Debug, Clone, Copy)]
 pub struct TracePoint {
     /// Milliseconds since the workload started.
     pub t_ms: f64,
-    /// Mode at sample time.
+    /// Mode at sample time (static backends report their fixed mode).
     pub mode: u8,
-    /// Cumulative mode switches at sample time.
+    /// Cumulative mode switches at sample time (0 for static backends).
     pub switches: u64,
+    /// Inserts / (inserts + pops) since the previous sample (carries the
+    /// previous value through op-free buckets).
+    pub insert_frac: f64,
+    /// Queue size at sample time.
+    pub queue_len: u64,
+    /// Workers holding or processing work at sample time.
+    pub active_threads: usize,
+    /// Queue ops completed since the previous sample.
+    pub ops: u64,
 }
 
 /// Which application workload to run.
@@ -274,47 +289,111 @@ pub struct AppResult {
     pub trace: Vec<TracePoint>,
 }
 
-/// Run `body` while a monitor thread drives `probe` every `interval`,
-/// recording the mode trace. Static backends skip the monitor entirely.
+/// Cumulative counter state the sampler threads between ticks.
+#[derive(Debug, Clone, Copy)]
+struct SampleState {
+    inserts: u64,
+    pops: u64,
+    insert_frac: f64,
+}
+
+/// Take one trace sample: probe the adaptive mode cell (if any) and fold
+/// the live counter deltas into a contention snapshot.
+fn sample_point(
+    t_ms: f64,
+    probe: Option<&Arc<dyn AdaptiveProbe>>,
+    static_mode: u8,
+    queue: &dyn ConcurrentPQ,
+    counters: &LiveCounters,
+    prev: &mut SampleState,
+) -> TracePoint {
+    let (ins, pops, active) = counters.snapshot();
+    let d_ins = ins.saturating_sub(prev.inserts);
+    let d_pops = pops.saturating_sub(prev.pops);
+    let insert_frac = if d_ins + d_pops == 0 {
+        prev.insert_frac
+    } else {
+        d_ins as f64 / (d_ins + d_pops) as f64
+    };
+    *prev = SampleState {
+        inserts: ins,
+        pops,
+        insert_frac,
+    };
+    let (mode, switches) = match probe {
+        Some(p) => (p.probe_mode(), p.probe_switches()),
+        None => (static_mode, 0),
+    };
+    TracePoint {
+        t_ms,
+        mode,
+        switches,
+        insert_frac,
+        queue_len: queue.len() as u64,
+        active_threads: active,
+        ops: d_ins + d_pops,
+    }
+}
+
+/// Run `body` while a monitor thread samples the contention snapshot
+/// every `interval` — and, for adaptive backends, drives the decision
+/// tree on the same clock so decisions and the trace stay aligned.
 fn run_traced<R>(
     probe: Option<&Arc<dyn AdaptiveProbe>>,
+    static_mode: u8,
+    queue: &Arc<dyn ConcurrentPQ>,
+    counters: &Arc<LiveCounters>,
     interval: Duration,
     body: impl FnOnce() -> R,
 ) -> (R, Vec<TracePoint>) {
-    let Some(probe) = probe else {
-        return (body(), Vec::new());
-    };
     let t0 = Instant::now();
     let stop = Arc::new(AtomicBool::new(false));
     let monitor = {
-        let probe = Arc::clone(probe);
+        let probe = probe.cloned();
         let stop = Arc::clone(&stop);
+        let queue = Arc::clone(queue);
+        let counters = Arc::clone(counters);
         std::thread::spawn(move || {
             let mut trace = Vec::new();
+            let mut prev = SampleState {
+                inserts: 0,
+                pops: 0,
+                insert_frac: 1.0,
+            };
             while !stop.load(Ordering::Acquire) {
                 std::thread::sleep(interval);
-                probe.probe_decide();
-                trace.push(TracePoint {
-                    t_ms: t0.elapsed().as_secs_f64() * 1e3,
-                    mode: probe.probe_mode(),
-                    switches: probe.probe_switches(),
-                });
+                if let Some(p) = &probe {
+                    p.probe_decide();
+                }
+                trace.push(sample_point(
+                    t0.elapsed().as_secs_f64() * 1e3,
+                    probe.as_ref(),
+                    static_mode,
+                    queue.as_ref(),
+                    &counters,
+                    &mut prev,
+                ));
             }
-            trace
+            (trace, prev)
         })
     };
     let r = body();
     stop.store(true, Ordering::Release);
-    let mut trace = monitor.join().expect("mode monitor panicked");
-    // One final decision tick over the tail-of-run counter delta, then the
-    // end state — so even runs shorter than one monitor tick get a real
+    let (mut trace, mut prev) = monitor.join().expect("trace monitor panicked");
+    // One final tick over the tail-of-run counter delta, then the end
+    // state — so even runs shorter than one monitor tick get a real
     // decision and a trace point.
-    probe.probe_decide();
-    trace.push(TracePoint {
-        t_ms: t0.elapsed().as_secs_f64() * 1e3,
-        mode: probe.probe_mode(),
-        switches: probe.probe_switches(),
-    });
+    if let Some(p) = probe {
+        p.probe_decide();
+    }
+    trace.push(sample_point(
+        t0.elapsed().as_secs_f64() * 1e3,
+        probe,
+        static_mode,
+        queue.as_ref(),
+        counters,
+        &mut prev,
+    ));
     (r, trace)
 }
 
@@ -397,16 +476,22 @@ pub fn run_backend(
                     (&owned.0, &owned.1)
                 }
             };
+            let counters = LiveCounters::shared();
             let scfg = SsspConfig {
                 threads: cfg.threads,
                 source: *source,
                 pop_batch: DEFAULT_POP_BATCH,
+                counters: Some(Arc::clone(&counters)),
             };
             let queue = Arc::clone(&built.queue);
-            let (run, trace) =
-                run_traced(built.adaptive.as_ref(), cfg.trace_interval, move || {
-                    parallel_sssp(g, queue, &scfg)
-                });
+            let (run, trace) = run_traced(
+                built.adaptive.as_ref(),
+                default_mode(built.label),
+                &built.queue,
+                &counters,
+                cfg.trace_interval,
+                move || parallel_sssp(g, queue, &scfg),
+            );
             Ok(sssp_result(&built, cfg, &run, oracle, trace))
         }
         AppWorkload::Des {
@@ -415,6 +500,7 @@ pub fn run_backend(
             max_dt,
             max_events,
         } => {
+            let counters = LiveCounters::shared();
             let dcfg = DesConfig {
                 lps: *lps,
                 horizon: *horizon,
@@ -423,12 +509,17 @@ pub fn run_backend(
                 seed: cfg.seed,
                 max_events: *max_events,
                 pop_batch: DEFAULT_POP_BATCH,
+                counters: Some(Arc::clone(&counters)),
             };
             let queue = Arc::clone(&built.queue);
-            let (run, trace) =
-                run_traced(built.adaptive.as_ref(), cfg.trace_interval, move || {
-                    phold(queue, &dcfg)
-                });
+            let (run, trace) = run_traced(
+                built.adaptive.as_ref(),
+                default_mode(built.label),
+                &built.queue,
+                &counters,
+                cfg.trace_interval,
+                move || phold(queue, &dcfg),
+            );
             Ok(des_result(&built, cfg, &run, trace))
         }
     }

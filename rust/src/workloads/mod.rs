@@ -29,6 +29,11 @@
 //!   switches.
 //! * [`report`] — stdout tables + `target/reports/app_*.csv` (schema
 //!   documented there).
+//! * [`trace`] — workload traces: deterministic per-bucket contention
+//!   recordings (op mix, queue-size trajectory, parallelism) plus the
+//!   conversion into sim-replayable phase schedules — the bridge the
+//!   `smartpq project` command uses to project SSSP/DES scalability onto
+//!   1/2/4/8-node simulated topologies.
 //!
 //! Entry points: the `smartpq app` CLI subcommand, the `app` figure in
 //! [`crate::harness::figures`], and the `sssp` / `event_simulation`
@@ -51,9 +56,11 @@ pub mod driver;
 pub mod graph;
 pub mod report;
 pub mod sssp;
+pub mod trace;
 
 pub use des::{phold, DesConfig, DesRun};
 pub use driver::{run_app, run_backend, AppConfig, AppResult, AppWorkload, ALL_BACKENDS};
 pub use graph::{Graph, GraphKind};
 pub use report::print_and_write;
 pub use sssp::{parallel_sssp, SsspConfig, SsspRun};
+pub use trace::{record_app_trace, LiveCounters, ProjectedSchedule, WorkloadTrace};

@@ -19,8 +19,15 @@
 //! | `switches`      | SmartPQ mode switches (0 for static backends)                  |
 //! | `final_mode`    | `oblivious` or `aware` at run end                               |
 //!
-//! `app_<workload>_smartpq_trace.csv` — one row per decision tick of each
-//! adaptive backend: `backend,t_ms,mode,switches` (cumulative switches).
+//! `app_<workload>_trace.csv` — one row per monitor tick of *every*
+//! backend: `backend,t_ms,mode,switches` (the SmartPQ mode trace;
+//! static backends report their fixed mode and 0 switches) plus the
+//! per-bucket contention snapshot `insert_frac` (inserts over ops since
+//! the previous tick), `queue_len` (queue size at the tick),
+//! `active` (workers currently holding work), and `ops` (queue ops since
+//! the previous tick) — the columns that let the mode trace be
+//! correlated with the frontier shape, and the live counterpart of the
+//! deterministic traces `smartpq project` replays in the sim plane.
 
 use std::path::Path;
 
@@ -76,12 +83,13 @@ pub fn summary_table(results: &[AppResult]) -> Table {
     t
 }
 
-/// Build the mode-switch trace table (adaptive backends only).
+/// Build the per-backend trace table: the SmartPQ mode trace interleaved
+/// with every backend's per-bucket contention snapshot.
 pub fn trace_table(results: &[AppResult]) -> Table {
     let workload = results.first().map(|r| r.workload).unwrap_or("app");
     let mut t = Table::new(
-        format!("SmartPQ mode-switch trace [{workload}]"),
-        &["backend", "t_ms", "mode", "switches"],
+        format!("Mode + contention trace [{workload}]"),
+        &["backend", "t_ms", "mode", "switches", "insert_frac", "queue_len", "active", "ops"],
     );
     for r in results {
         for p in &r.trace {
@@ -90,6 +98,10 @@ pub fn trace_table(results: &[AppResult]) -> Table {
                 format!("{:.1}", p.t_ms),
                 mode_label(p.mode).to_string(),
                 p.switches.to_string(),
+                format!("{:.3}", p.insert_frac),
+                p.queue_len.to_string(),
+                p.active_threads.to_string(),
+                p.ops.to_string(),
             ]);
         }
     }
@@ -109,7 +121,7 @@ pub fn print_and_write(results: &[AppResult], dir: impl AsRef<Path>) -> std::io:
     let dir = dir.as_ref();
     let summary_path = dir.join(format!("app_{workload}.csv"));
     summary.write_csv(&summary_path)?;
-    let trace_path = dir.join(format!("app_{workload}_smartpq_trace.csv"));
+    let trace_path = dir.join(format!("app_{workload}_trace.csv"));
     trace.write_csv(&trace_path)?;
     Ok(summary_path.display().to_string())
 }
@@ -137,24 +149,25 @@ mod tests {
         }
     }
 
+    fn point(t_ms: f64, m: u8, switches: u64) -> TracePoint {
+        TracePoint {
+            t_ms,
+            mode: m,
+            switches,
+            insert_frac: 0.25,
+            queue_len: 120,
+            active_threads: 4,
+            ops: 200,
+        }
+    }
+
     #[test]
     fn tables_and_csvs_roundtrip() {
         let results = vec![
-            result("lotan_shavit", Vec::new()),
+            result("lotan_shavit", vec![point(25.0, mode::OBLIVIOUS, 0)]),
             result(
                 "smartpq",
-                vec![
-                    TracePoint {
-                        t_ms: 25.0,
-                        mode: mode::AWARE,
-                        switches: 1,
-                    },
-                    TracePoint {
-                        t_ms: 50.0,
-                        mode: mode::OBLIVIOUS,
-                        switches: 2,
-                    },
-                ],
+                vec![point(25.0, mode::AWARE, 1), point(50.0, mode::OBLIVIOUS, 2)],
             ),
         ];
         let dir = std::env::temp_dir().join("smartpq_app_report_test");
@@ -162,10 +175,11 @@ mod tests {
         let summary = std::fs::read_to_string(&path).unwrap();
         assert!(summary.starts_with("backend,workload,threads"));
         assert!(summary.contains("smartpq,sssp,4"));
-        let trace =
-            std::fs::read_to_string(dir.join("app_sssp_smartpq_trace.csv")).unwrap();
-        assert!(trace.contains("smartpq,25.0,aware,1"), "{trace}");
-        assert_eq!(trace.lines().count(), 3);
+        let trace = std::fs::read_to_string(dir.join("app_sssp_trace.csv")).unwrap();
+        // Mode trace and contention snapshot share one row per tick.
+        assert!(trace.contains("smartpq,25.0,aware,1,0.250,120,4,200"), "{trace}");
+        assert!(trace.contains("lotan_shavit,25.0,oblivious,0,0.250,120,4,200"), "{trace}");
+        assert_eq!(trace.lines().count(), 4);
         let _ = std::fs::remove_dir_all(dir);
     }
 }

@@ -33,6 +33,7 @@ use std::time::{Duration, Instant};
 
 use crate::pq::traits::ConcurrentPQ;
 use crate::workloads::graph::Graph;
+use crate::workloads::trace::LiveCounters;
 
 /// Parallel-SSSP configuration.
 #[derive(Debug, Clone)]
@@ -47,6 +48,10 @@ pub struct SsspConfig {
     /// and inversions (a worker holds the tail of its batch while the
     /// frontier moves on).
     pub pop_batch: usize,
+    /// Optional live contention counters (op mix, active workers) the
+    /// app driver's monitor thread samples per bucket (see
+    /// [`crate::workloads::trace`]). `None` skips all accounting.
+    pub counters: Option<Arc<LiveCounters>>,
 }
 
 impl Default for SsspConfig {
@@ -55,6 +60,7 @@ impl Default for SsspConfig {
             threads: 4,
             source: 0,
             pop_batch: 4,
+            counters: None,
         }
     }
 }
@@ -167,9 +173,15 @@ pub fn parallel_sssp(g: &Graph, q: Arc<dyn ConcurrentPQ>, cfg: &SsspConfig) -> S
                 let q = Arc::clone(&q);
                 let (dist, pending, watermark) = (&dist, &pending, &watermark);
                 let batch = cfg.pop_batch.max(1);
+                let live = cfg.counters.clone();
                 s.spawn(move || {
                     let mut c = WorkerCounters::default();
                     let mut misses = 0u64;
+                    // Starvation tracking for the live `active` gauge.
+                    let mut starved = false;
+                    if let Some(live) = &live {
+                        live.worker_active();
+                    }
                     // Popped-but-unprocessed frontier entries. Elements a
                     // worker holds here keep `pending` above zero (it is
                     // only decremented after processing), so batching
@@ -187,6 +199,13 @@ pub fn parallel_sssp(g: &Graph, q: Arc<dyn ConcurrentPQ>, cfg: &SsspConfig) -> S
                                 cursor += 1;
                                 misses = 0;
                                 c.pops += 1;
+                                if let Some(live) = &live {
+                                    if starved {
+                                        starved = false;
+                                        live.worker_active();
+                                    }
+                                    live.record_pop();
+                                }
                                 if key < watermark.fetch_max(key, Ordering::Relaxed) {
                                     c.inversions += 1;
                                 }
@@ -216,6 +235,9 @@ pub fn parallel_sssp(g: &Graph, q: Arc<dyn ConcurrentPQ>, cfg: &SsspConfig) -> S
                                                 pending.fetch_add(1, Ordering::AcqRel);
                                                 if q.insert(encode(nd, v, n), v as u64) {
                                                     c.inserts += 1;
+                                                    if let Some(live) = &live {
+                                                        live.record_insert();
+                                                    }
                                                 } else {
                                                     c.failed_inserts += 1;
                                                     pending.fetch_sub(1, Ordering::AcqRel);
@@ -229,6 +251,12 @@ pub fn parallel_sssp(g: &Graph, q: Arc<dyn ConcurrentPQ>, cfg: &SsspConfig) -> S
                                 pending.fetch_sub(1, Ordering::AcqRel);
                             }
                             None => {
+                                if let Some(live) = &live {
+                                    if !starved {
+                                        starved = true;
+                                        live.worker_idle();
+                                    }
+                                }
                                 if pending.load(Ordering::Acquire) <= 0 {
                                     return c;
                                 }
@@ -286,7 +314,7 @@ mod tests {
         let g = graph();
         let want = g.seq_dijkstra(0);
         let q: Arc<dyn ConcurrentPQ> = Arc::new(LotanShavitPQ::new());
-        let run = parallel_sssp(&g, q, &SsspConfig { threads: 2, source: 0, pop_batch: 4 });
+        let run = parallel_sssp(&g, q, &SsspConfig { threads: 2, ..Default::default() });
         assert!(run.matches(&want));
         assert_eq!(run.failed_inserts, 0);
         // Every inserted element is popped exactly once.
@@ -298,7 +326,8 @@ mod tests {
         let g = graph();
         let want = g.seq_dijkstra(0);
         let q: Arc<dyn ConcurrentPQ> = Arc::new(MultiQueue::new(4));
-        let run = parallel_sssp(&g, q, &SsspConfig { threads: 4, source: 0, pop_batch: 8 });
+        let cfg = SsspConfig { threads: 4, pop_batch: 8, ..Default::default() };
+        let run = parallel_sssp(&g, q, &cfg);
         assert!(run.matches(&want));
         assert_eq!(run.pops, run.inserts);
         assert!(run.wasted_pct() <= 100.0);
@@ -309,7 +338,8 @@ mod tests {
         let g = Graph::grid(12, 12, 5);
         let want = g.seq_dijkstra(0);
         let q: Arc<dyn ConcurrentPQ> = Arc::new(LotanShavitPQ::new());
-        let run = parallel_sssp(&g, q, &SsspConfig { threads: 1, source: 0, pop_batch: 1 });
+        let cfg = SsspConfig { threads: 1, pop_batch: 1, ..Default::default() };
+        let run = parallel_sssp(&g, q, &cfg);
         assert!(run.matches(&want));
         assert_eq!(run.inversions, 0);
     }

@@ -1,0 +1,517 @@
+//! Workload traces: the bridge from the real application plane to the
+//! simulation plane.
+//!
+//! A [`WorkloadTrace`] is a compact, deterministic description of how an
+//! application workload's contention evolves: per op-bucket insert/
+//! deleteMin fractions, the queue-size trajectory, and a parallelism
+//! estimate (how many workers the frontier / pending-event set can keep
+//! busy). Traces come from two places:
+//!
+//! * **Deterministic recorders** ([`record_sssp_trace`],
+//!   [`record_des_trace`]) replay the workload's *algorithmic* schedule
+//!   sequentially — lazy-deletion Dijkstra, sequential PHOLD — so the
+//!   recorded trace is a property of (workload, seed) alone, byte-stable
+//!   across hosts and runs. This is what the `smartpq project` pipeline
+//!   uses: the contention schedule of SSSP/DES is intrinsic to the
+//!   algorithm, not to the host's thread timing.
+//! * **Live counters** ([`LiveCounters`]) let the real drivers sample the
+//!   same quantities wall-clock-bucketed while OS threads run; the app
+//!   driver's monitor thread folds them into the per-backend
+//!   [`crate::workloads::driver::TracePoint`] trace (the contention
+//!   snapshot columns of `app_*_trace.csv`).
+//!
+//! [`WorkloadTrace::to_schedule`] converts a trace into a phase schedule
+//! the sim [`crate::sim::engine::Engine`] can replay on *any* simulated
+//! topology (1/2/4/8 NUMA nodes): each bucket becomes one phase whose
+//! insert percentage, active thread count (capped by the recorded
+//! parallelism), key range, and pinned queue size reproduce the recorded
+//! contention regime. That is how `smartpq app` results measured on this
+//! host are projected to machines bigger than the host.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::sim::WorkloadPhase;
+use crate::util::error::{Error, Result};
+use crate::util::rng::Rng;
+use crate::workloads::driver::AppWorkload;
+use crate::workloads::graph::Graph;
+
+/// Smallest queue size a projected phase is pinned to: phases recorded at
+/// a (near-)empty queue still need a live structure to measure.
+pub const MIN_PHASE_QUEUE: u64 = 16;
+
+/// Shared counters the application drivers update while running, sampled
+/// by the monitor thread for the per-bucket contention snapshots.
+#[derive(Debug, Default)]
+pub struct LiveCounters {
+    /// Successful inserts so far.
+    pub inserts: AtomicU64,
+    /// Pops (including stale ones — they contend too).
+    pub pops: AtomicU64,
+    /// Workers currently holding or processing work (not starved).
+    pub active: AtomicUsize,
+}
+
+impl LiveCounters {
+    /// Fresh shared counters.
+    pub fn shared() -> Arc<LiveCounters> {
+        Arc::new(LiveCounters::default())
+    }
+
+    /// Record one successful insert.
+    #[inline]
+    pub fn record_insert(&self) {
+        self.inserts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one pop.
+    #[inline]
+    pub fn record_pop(&self) {
+        self.pops.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A worker became active (has work).
+    #[inline]
+    pub fn worker_active(&self) {
+        self.active.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A worker went idle (queue looked empty).
+    #[inline]
+    pub fn worker_idle(&self) {
+        self.active.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Snapshot `(inserts, pops, active)`.
+    pub fn snapshot(&self) -> (u64, u64, usize) {
+        (
+            self.inserts.load(Ordering::Relaxed),
+            self.pops.load(Ordering::Relaxed),
+            self.active.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// One op-bucket of a recorded workload trace.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceSample {
+    /// Fraction of the run's total ops completed at bucket end (0..=1].
+    pub t_frac: f64,
+    /// Inserts / (inserts + pops) within the bucket.
+    pub insert_frac: f64,
+    /// Queue size at bucket end.
+    pub queue_len: u64,
+    /// Parallelism estimate for the bucket: the mean queue size, i.e. how
+    /// many workers the frontier / pending set could keep busy.
+    pub parallelism: u64,
+    /// Queue operations in the bucket.
+    pub ops: u64,
+}
+
+/// A recorded workload trace (see module docs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadTrace {
+    /// Workload label ("sssp" / "des").
+    pub workload: String,
+    /// Worker threads the trace was recorded with (1 for the
+    /// deterministic sequential recorders).
+    pub threads: usize,
+    /// RNG seed the workload instance was generated from.
+    pub seed: u64,
+    /// Queue size before the first bucket's ops.
+    pub init_queue_len: u64,
+    /// The op-bucket samples, in time order.
+    pub samples: Vec<TraceSample>,
+}
+
+/// A trace converted for sim replay: one [`WorkloadPhase`] per bucket
+/// plus the queue size each phase is pinned to (set at entry and held in
+/// a band for the phase's duration, so the simulated structure stays in
+/// the recorded contention regime instead of drifting with the engine's
+/// own op balance) and the ops share per phase.
+#[derive(Debug, Clone)]
+pub struct ProjectedSchedule {
+    /// Initial simulated queue fill.
+    pub init_size: u64,
+    /// One phase per trace bucket.
+    pub phases: Vec<WorkloadPhase>,
+    /// Queue size forced at each phase entry (parallel to `phases`).
+    pub sizes: Vec<Option<u64>>,
+    /// Fraction of the recorded run's ops each bucket carried.
+    pub shares: Vec<f64>,
+}
+
+impl WorkloadTrace {
+    /// Convert into a replayable phase schedule for a machine running
+    /// `target_threads` workers, with `phase_ns` virtual nanoseconds per
+    /// phase. Thread counts are capped by the recorded parallelism — a
+    /// 128-context machine cannot use more workers than the frontier
+    /// holds vertices — and each phase's key range follows the
+    /// `range = 2 * size` convention of the Fig. 9 grids.
+    pub fn to_schedule(&self, target_threads: usize, phase_ns: f64) -> ProjectedSchedule {
+        let total_ops: u64 = self.samples.iter().map(|s| s.ops).sum::<u64>().max(1);
+        let mut phases = Vec::with_capacity(self.samples.len());
+        let mut sizes = Vec::with_capacity(self.samples.len());
+        let mut shares = Vec::with_capacity(self.samples.len());
+        let mut start_len = self.init_queue_len;
+        for s in &self.samples {
+            let size = start_len.max(MIN_PHASE_QUEUE);
+            let threads = s.parallelism.clamp(1, target_threads.max(1) as u64) as usize;
+            phases.push(WorkloadPhase {
+                duration_ns: phase_ns,
+                threads,
+                insert_pct: (s.insert_frac * 100.0).clamp(0.0, 100.0),
+                key_range: (2 * size).max(2048),
+            });
+            sizes.push(Some(size));
+            shares.push(s.ops as f64 / total_ops as f64);
+            start_len = s.queue_len;
+        }
+        ProjectedSchedule {
+            init_size: self.init_queue_len.max(MIN_PHASE_QUEUE),
+            phases,
+            sizes,
+            shares,
+        }
+    }
+
+    /// Serialize to the `smartpq-trace v1` CSV dialect. Deterministic:
+    /// the same trace always renders byte-identically.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::new();
+        s.push_str("# smartpq-trace v1\n");
+        s.push_str(&format!("workload,{}\n", self.workload));
+        s.push_str(&format!("threads,{}\n", self.threads));
+        s.push_str(&format!("seed,{}\n", self.seed));
+        s.push_str(&format!("init_queue_len,{}\n", self.init_queue_len));
+        s.push_str("t_frac,insert_frac,queue_len,parallelism,ops\n");
+        for p in &self.samples {
+            s.push_str(&format!(
+                "{:.6},{:.6},{},{},{}\n",
+                p.t_frac, p.insert_frac, p.queue_len, p.parallelism, p.ops
+            ));
+        }
+        s
+    }
+
+    /// Parse the [`WorkloadTrace::to_csv`] dialect.
+    pub fn from_csv(text: &str) -> Result<WorkloadTrace> {
+        let mut lines = text.lines();
+        let magic = lines.next().unwrap_or("");
+        if magic.trim() != "# smartpq-trace v1" {
+            return Err(Error::Parse(format!("not a smartpq trace: {magic:?}")));
+        }
+        let mut workload = String::new();
+        let mut threads = 1usize;
+        let mut seed = 0u64;
+        let mut init_queue_len = 0u64;
+        let mut samples = Vec::new();
+        let mut in_samples = false;
+        for line in lines {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line == "t_frac,insert_frac,queue_len,parallelism,ops" {
+                in_samples = true;
+                continue;
+            }
+            let parts: Vec<&str> = line.split(',').collect();
+            if !in_samples {
+                if parts.len() != 2 {
+                    return Err(Error::Parse(format!("bad trace meta line: {line:?}")));
+                }
+                match parts[0] {
+                    "workload" => workload = parts[1].to_string(),
+                    "threads" => {
+                        threads = parts[1]
+                            .parse()
+                            .map_err(|_| Error::Parse(format!("bad threads: {line:?}")))?
+                    }
+                    "seed" => {
+                        seed = parts[1]
+                            .parse()
+                            .map_err(|_| Error::Parse(format!("bad seed: {line:?}")))?
+                    }
+                    "init_queue_len" => {
+                        init_queue_len = parts[1]
+                            .parse()
+                            .map_err(|_| Error::Parse(format!("bad init_queue_len: {line:?}")))?
+                    }
+                    other => return Err(Error::Parse(format!("unknown trace meta key {other:?}"))),
+                }
+            } else {
+                if parts.len() != 5 {
+                    return Err(Error::Parse(format!("bad trace sample line: {line:?}")));
+                }
+                let f = |i: usize| -> Result<f64> {
+                    parts[i]
+                        .parse()
+                        .map_err(|_| Error::Parse(format!("bad trace sample line: {line:?}")))
+                };
+                let u = |i: usize| -> Result<u64> {
+                    parts[i]
+                        .parse()
+                        .map_err(|_| Error::Parse(format!("bad trace sample line: {line:?}")))
+                };
+                samples.push(TraceSample {
+                    t_frac: f(0)?,
+                    insert_frac: f(1)?,
+                    queue_len: u(2)?,
+                    parallelism: u(3)?,
+                    ops: u(4)?,
+                });
+            }
+        }
+        if workload.is_empty() || samples.is_empty() {
+            return Err(Error::Parse("trace missing workload name or samples".into()));
+        }
+        Ok(WorkloadTrace {
+            workload,
+            threads,
+            seed,
+            init_queue_len,
+            samples,
+        })
+    }
+}
+
+/// Bucketize a sequentially recorded op log `(is_insert, queue_len_after)`
+/// into `buckets` equal-op-count trace samples.
+fn bucketize(
+    workload: &str,
+    seed: u64,
+    init_queue_len: u64,
+    events: &[(bool, u64)],
+    buckets: usize,
+) -> WorkloadTrace {
+    assert!(!events.is_empty(), "workload produced no ops to trace");
+    let buckets = buckets.clamp(1, events.len());
+    let per = events.len().div_ceil(buckets);
+    let total = events.len() as u64;
+    let mut samples = Vec::with_capacity(buckets);
+    let mut done = 0u64;
+    for chunk in events.chunks(per) {
+        let ins = chunk.iter().filter(|(is_insert, _)| *is_insert).count() as u64;
+        let ops = chunk.len() as u64;
+        let len_sum: u64 = chunk.iter().map(|&(_, len)| len).sum();
+        done += ops;
+        samples.push(TraceSample {
+            t_frac: done as f64 / total as f64,
+            insert_frac: ins as f64 / ops as f64,
+            queue_len: chunk.last().map(|&(_, len)| len).unwrap_or(0),
+            parallelism: (len_sum / ops).max(1),
+            ops,
+        });
+    }
+    WorkloadTrace {
+        workload: workload.to_string(),
+        threads: 1,
+        seed,
+        init_queue_len,
+        samples,
+    }
+}
+
+/// Record the deterministic SSSP contention trace: sequential
+/// lazy-deletion Dijkstra over the same generated graph the parallel
+/// driver would run, logging every queue op and the frontier size. The
+/// result depends only on `(kind, n, source, seed, buckets)`.
+pub fn record_sssp_trace(g: &Graph, source: usize, seed: u64, buckets: usize) -> WorkloadTrace {
+    let n = g.vertices();
+    assert!(source < n, "source out of range");
+    let mut dist = vec![u64::MAX; n];
+    let mut heap: BinaryHeap<Reverse<(u64, u32)>> = BinaryHeap::new();
+    let mut events: Vec<(bool, u64)> = Vec::new();
+    dist[source] = 0;
+    heap.push(Reverse((0, source as u32)));
+    events.push((true, heap.len() as u64));
+    while let Some(Reverse((d, u))) = heap.pop() {
+        events.push((false, heap.len() as u64));
+        if d > dist[u as usize] {
+            continue; // stale entry: wasted-work pop, no relaxations
+        }
+        for (v, w) in g.neighbors(u as usize) {
+            let nd = d + w as u64;
+            if nd < dist[v as usize] {
+                dist[v as usize] = nd;
+                heap.push(Reverse((nd, v)));
+                events.push((true, heap.len() as u64));
+            }
+        }
+    }
+    bucketize("sssp", seed, 0, &events, buckets)
+}
+
+/// Record the deterministic PHOLD contention trace: the sequential
+/// analogue of [`crate::workloads::des::phold`], popping the earliest
+/// pending event and scheduling one follow-up below the horizon.
+pub fn record_des_trace(
+    lps: usize,
+    horizon: u64,
+    max_dt: u64,
+    max_events: u64,
+    seed: u64,
+    buckets: usize,
+) -> WorkloadTrace {
+    assert!(lps >= 1 && horizon >= 1 && max_dt >= 1);
+    let mut rng = Rng::new(seed);
+    let mut heap: BinaryHeap<Reverse<(u64, u64)>> = BinaryHeap::new();
+    let mut events: Vec<(bool, u64)> = Vec::new();
+    let mut seq = 0u64;
+    for _lp in 0..lps {
+        let t0 = 1 + rng.gen_range(max_dt);
+        heap.push(Reverse((t0, seq)));
+        seq += 1;
+        events.push((true, heap.len() as u64));
+    }
+    let mut consumed = 0u64;
+    while let Some(Reverse((t, _))) = heap.pop() {
+        events.push((false, heap.len() as u64));
+        consumed += 1;
+        if max_events > 0 && consumed >= max_events {
+            break;
+        }
+        if t < horizon {
+            let dt = 1 + rng.gen_range(max_dt);
+            let _next_lp = rng.gen_range(lps as u64); // keep draw order aligned with phold
+            heap.push(Reverse((t + dt, seq)));
+            seq += 1;
+            events.push((true, heap.len() as u64));
+        }
+    }
+    bucketize("des", seed, 0, &events, buckets)
+}
+
+/// Record the deterministic trace for any [`AppWorkload`].
+pub fn record_app_trace(workload: &AppWorkload, seed: u64, buckets: usize) -> WorkloadTrace {
+    match workload {
+        AppWorkload::Sssp { graph, n, source } => {
+            let g = Graph::generate(*graph, *n, seed);
+            record_sssp_trace(&g, *source, seed, buckets)
+        }
+        AppWorkload::Des {
+            lps,
+            horizon,
+            max_dt,
+            max_events,
+        } => record_des_trace(*lps, *horizon, *max_dt, *max_events, seed, buckets),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::graph::GraphKind;
+
+    fn sssp_workload(n: usize) -> AppWorkload {
+        AppWorkload::Sssp {
+            graph: GraphKind::Random { degree: 5 },
+            n,
+            source: 0,
+        }
+    }
+
+    #[test]
+    fn sssp_trace_shape_grows_then_drains() {
+        let t = record_app_trace(&sssp_workload(800), 7, 10);
+        assert_eq!(t.workload, "sssp");
+        assert!(t.samples.len() >= 2 && t.samples.len() <= 10);
+        // The first bucket is insert-heavier than the last (frontier
+        // growth vs drain), and the queue ends empty.
+        let first = t.samples.first().unwrap();
+        let last = t.samples.last().unwrap();
+        assert!(first.insert_frac > last.insert_frac, "{t:?}");
+        assert_eq!(last.queue_len, 0);
+        assert!((last.t_frac - 1.0).abs() < 1e-12);
+        // Overall the op log balances: inserts == pops.
+        let ins: f64 = t.samples.iter().map(|s| s.insert_frac * s.ops as f64).sum();
+        let total: u64 = t.samples.iter().map(|s| s.ops).sum();
+        assert!((ins / total as f64 - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn des_trace_holds_a_breathing_pending_set() {
+        let t = record_des_trace(96, 1_500, 100, 0, 11, 8);
+        assert_eq!(t.workload, "des");
+        // Steady state: the pending set stays near the LP count until the
+        // horizon drains it.
+        let mid = t.samples[t.samples.len() / 2];
+        assert!(mid.parallelism >= 16, "{mid:?}");
+        assert_eq!(t.samples.last().unwrap().queue_len, 0);
+    }
+
+    #[test]
+    fn csv_render_is_idempotent_through_parse() {
+        let t = record_app_trace(&sssp_workload(400), 3, 6);
+        let csv = t.to_csv();
+        let t2 = WorkloadTrace::from_csv(&csv).unwrap();
+        assert_eq!(csv, t2.to_csv());
+        assert_eq!(t.samples.len(), t2.samples.len());
+        assert_eq!(t.init_queue_len, t2.init_queue_len);
+    }
+
+    #[test]
+    fn from_csv_rejects_garbage() {
+        assert!(WorkloadTrace::from_csv("").is_err());
+        assert!(WorkloadTrace::from_csv("nope\nworkload,sssp\n").is_err());
+        let missing_samples = "# smartpq-trace v1\nworkload,sssp\nthreads,1\nseed,1\n\
+             init_queue_len,0\nt_frac,insert_frac,queue_len,parallelism,ops\n";
+        assert!(WorkloadTrace::from_csv(missing_samples).is_err());
+    }
+
+    #[test]
+    fn schedule_maps_buckets_to_phases() {
+        let t = WorkloadTrace {
+            workload: "synthetic".into(),
+            threads: 1,
+            seed: 0,
+            init_queue_len: 500,
+            samples: vec![
+                TraceSample {
+                    t_frac: 0.5,
+                    insert_frac: 0.5,
+                    queue_len: 500,
+                    parallelism: 1_000,
+                    ops: 100,
+                },
+                TraceSample {
+                    t_frac: 1.0,
+                    insert_frac: 0.0,
+                    queue_len: 0,
+                    parallelism: 4,
+                    ops: 100,
+                },
+            ],
+        };
+        let s = t.to_schedule(64, 1e6);
+        assert_eq!(s.phases.len(), 2);
+        assert_eq!(s.init_size, 500);
+        // Phase 0: parallelism exceeds the machine -> capped at target.
+        assert_eq!(s.phases[0].threads, 64);
+        assert!((s.phases[0].insert_pct - 50.0).abs() < 1e-12);
+        assert_eq!(s.phases[0].key_range, 2048.max(2 * 500));
+        assert_eq!(s.sizes[0], Some(500));
+        // Phase 1: drain — threads capped by the recorded parallelism,
+        // size pinned to the recorded start-of-bucket queue length.
+        assert_eq!(s.phases[1].threads, 4);
+        assert_eq!(s.sizes[1], Some(500));
+        assert!((s.shares[0] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn live_counters_track_activity() {
+        let c = LiveCounters::shared();
+        c.worker_active();
+        c.worker_active();
+        c.record_insert();
+        c.record_pop();
+        c.record_pop();
+        c.worker_idle();
+        let (ins, pops, active) = c.snapshot();
+        assert_eq!((ins, pops, active), (1, 2, 1));
+    }
+}

@@ -1,0 +1,172 @@
+//! Trace-driven projection tests: recorder determinism, trace
+//! serialization, replay fidelity against hand-written phase schedules,
+//! and the `check-bench` artifact gate.
+
+use smartpq::harness::check_bench::check_str;
+use smartpq::harness::projection_bench::{json_string, run_projection, ProjectionConfig};
+use smartpq::sim::cost::CostModel;
+use smartpq::sim::models::oblivious::ObvParams;
+use smartpq::sim::{replay_workload, run_workload, SimAlgo, Topology, Workload, WorkloadPhase};
+use smartpq::workloads::trace::{record_app_trace, TraceSample, WorkloadTrace};
+use smartpq::workloads::{AppWorkload, GraphKind};
+
+fn sssp_workload(n: usize) -> AppWorkload {
+    AppWorkload::Sssp {
+        graph: GraphKind::Random { degree: 6 },
+        n,
+        source: 0,
+    }
+}
+
+fn des_workload() -> AppWorkload {
+    AppWorkload::Des {
+        lps: 96,
+        horizon: 1_200,
+        max_dt: 100,
+        max_events: 0,
+    }
+}
+
+#[test]
+fn same_seed_records_byte_identical_traces() {
+    for workload in [sssp_workload(900), des_workload()] {
+        let a = record_app_trace(&workload, 21, 10);
+        let b = record_app_trace(&workload, 21, 10);
+        assert_eq!(a.to_csv(), b.to_csv(), "{}", workload.name());
+        let c = record_app_trace(&workload, 22, 10);
+        assert_ne!(a.to_csv(), c.to_csv(), "{}: seed must matter", workload.name());
+    }
+}
+
+#[test]
+fn trace_csv_parses_back() {
+    let t = record_app_trace(&sssp_workload(600), 5, 8);
+    let parsed = WorkloadTrace::from_csv(&t.to_csv()).unwrap();
+    assert_eq!(parsed.to_csv(), t.to_csv());
+    assert_eq!(parsed.workload, "sssp");
+    assert_eq!(parsed.seed, 5);
+}
+
+/// A synthetic constant-mix trace must convert to exactly the
+/// hand-written `PhaseCfg` schedule it encodes...
+fn constant_trace(buckets: usize, queue_len: u64) -> WorkloadTrace {
+    // 60% inserts: with the `range = 2 * size` convention the simulated
+    // queue has a stable equilibrium near `range / 3`, so the pinned and
+    // unpinned runs stay in the same size regime (a 50/50 mix would
+    // drift toward empty as duplicate inserts fail).
+    let samples = (1..=buckets)
+        .map(|i| TraceSample {
+            t_frac: i as f64 / buckets as f64,
+            insert_frac: 0.6,
+            queue_len,
+            parallelism: 1 << 20, // no parallelism cap
+            ops: 1_000,
+        })
+        .collect();
+    WorkloadTrace {
+        workload: "synthetic".into(),
+        threads: 1,
+        seed: 0,
+        init_queue_len: queue_len,
+        samples,
+    }
+}
+
+#[test]
+fn constant_mix_trace_converts_to_the_handwritten_schedule() {
+    let trace = constant_trace(3, 4_096);
+    let sched = trace.to_schedule(32, 1e6);
+    let handwritten: Vec<WorkloadPhase> = (0..3)
+        .map(|_| WorkloadPhase {
+            duration_ns: 1e6,
+            threads: 32,
+            insert_pct: 60.0,
+            key_range: 8_192,
+        })
+        .collect();
+    assert_eq!(sched.phases.len(), handwritten.len());
+    for (got, want) in sched.phases.iter().zip(&handwritten) {
+        assert_eq!(got.duration_ns, want.duration_ns);
+        assert_eq!(got.threads, want.threads);
+        assert_eq!(got.insert_pct, want.insert_pct);
+        assert_eq!(got.key_range, want.key_range);
+    }
+    assert!(sched.sizes.iter().all(|s| *s == Some(4_096)));
+    assert_eq!(sched.init_size, 4_096);
+}
+
+/// ...and replaying the converted schedule must reproduce the
+/// hand-written schedule's `PhaseStats` — exactly with no size pinning
+/// (identical code path), and within tolerance with the recorded
+/// queue-size trajectory pinned (the pin only cancels stochastic drift).
+#[test]
+fn replaying_a_constant_mix_trace_matches_the_handwritten_run() {
+    let trace = constant_trace(3, 4_096);
+    let sched = trace.to_schedule(32, 1e6);
+    let w = Workload {
+        init_size: sched.init_size,
+        phases: sched.phases.clone(),
+        seed: 77,
+        topology: Topology::default(),
+        cost: CostModel::default(),
+        params: ObvParams::default(),
+    };
+    for algo in [SimAlgo::AlistarhHerlihy, SimAlgo::nuddle(8)] {
+        let baseline = run_workload(&algo, &w);
+        let unpinned = replay_workload(&algo, &w, &[]);
+        for (a, b) in baseline.phases.iter().zip(&unpinned.phases) {
+            assert_eq!(a.ops, b.ops, "{}: unpinned replay must be exact", algo.name());
+        }
+        let pinned = replay_workload(&algo, &w, &sched.sizes);
+        for (i, (a, b)) in baseline.phases.iter().zip(&pinned.phases).enumerate() {
+            let rel = (a.mops - b.mops).abs() / a.mops.max(1e-9);
+            assert!(
+                rel < 0.25,
+                "{} phase {i}: pinned {:.3} vs baseline {:.3} Mops ({}% off)",
+                algo.name(),
+                b.mops,
+                a.mops,
+                (rel * 100.0) as u32
+            );
+        }
+    }
+}
+
+#[test]
+fn pinned_replay_is_deterministic() {
+    let trace = constant_trace(2, 1_024);
+    let sched = trace.to_schedule(16, 5e5);
+    let w = Workload {
+        init_size: sched.init_size,
+        phases: sched.phases.clone(),
+        seed: 3,
+        topology: Topology::default(),
+        cost: CostModel::default(),
+        params: ObvParams::default(),
+    };
+    let algo = SimAlgo::MultiQueue { queues_per_thread: 4 };
+    let a = replay_workload(&algo, &w, &sched.sizes);
+    let b = replay_workload(&algo, &w, &sched.sizes);
+    for (x, y) in a.phases.iter().zip(&b.phases) {
+        assert_eq!(x.ops, y.ops);
+    }
+}
+
+#[test]
+fn generated_projection_json_passes_check_bench_schema() {
+    // One node count only: this exercises the schema and sanity layers of
+    // the gate on a tiny instance; the multi-node crossover gate runs in
+    // CI against the real `project --quick` output.
+    let cfg = ProjectionConfig {
+        workload: sssp_workload(300),
+        node_counts: vec![1],
+        buckets: 4,
+        phase_ms: 0.05,
+        seed: 5,
+        quick: true,
+    };
+    let report = run_projection(&cfg).unwrap();
+    let json = json_string(&report);
+    let outcome = check_str("BENCH_projection.json", &json, 1.3).unwrap();
+    assert!(!outcome.facts.is_empty(), "{outcome:?}");
+}

@@ -47,8 +47,7 @@ fn sssp_grid_and_power_law_graphs_verify_on_relaxed_backends() {
                 built.queue,
                 &SsspConfig {
                     threads: 4,
-                    source: 0,
-                    pop_batch: 4,
+                    ..Default::default()
                 },
             );
             assert!(run.matches(&oracle), "{name} on {kind:?}");
