@@ -251,6 +251,10 @@ impl<B: ConcurrentPQ + HasStats + 'static> ConcurrentPQ for SmartPQ<B> {
         self.nuddle.base().record_eliminated(pairs, max_key);
     }
 
+    fn record_rejected_inserts(&self, n: u64) {
+        self.nuddle.base().record_rejected_inserts(n);
+    }
+
     fn len(&self) -> usize {
         self.nuddle.base().len()
     }

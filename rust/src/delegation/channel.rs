@@ -31,6 +31,14 @@ pub enum OpCode {
     Insert = 1,
     /// `deleteMin()`.
     DeleteMin = 2,
+    /// An insert the client already rejected (sentinel key). The server
+    /// does no base work — it folds the failure into the base's
+    /// operation counters (so SmartPQ's classifier sees the true op mix
+    /// even under adversarial inputs) and acknowledges with a failed
+    /// insert. Routed through the channel rather than written directly
+    /// because in NUMA-aware mode clients must never touch the base's
+    /// cache lines — that is the entire point of delegation.
+    FailedInsert = 3,
 }
 
 impl OpCode {
@@ -40,6 +48,7 @@ impl OpCode {
         match x {
             1 => OpCode::Insert,
             2 => OpCode::DeleteMin,
+            3 => OpCode::FailedInsert,
             _ => OpCode::Nop,
         }
     }

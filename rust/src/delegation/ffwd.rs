@@ -102,6 +102,14 @@ impl FfwdPQ {
                                 }
                                 encode::delete_min(r)
                             }
+                            OpCode::FailedInsert => {
+                                // Ffwd clients count rejections locally
+                                // (the stats live with the wrapper), so
+                                // this opcode never arrives; answer it
+                                // consistently anyway.
+                                shared.stats.record_failed_insert();
+                                encode::insert(false)
+                            }
                             OpCode::Nop => continue,
                         };
                         buffered[n_buf] = (pos, p, s);

@@ -300,15 +300,22 @@ impl<B: ConcurrentPQ + 'static> ClientSlot<B> {
     }
 
     /// Delegated batch insert: one channel-slot borrow for the batch;
-    /// sentinel keys fail client-side in every build profile.
+    /// sentinel keys fail client-side in every build profile. The
+    /// rejection itself is still delegated (as [`OpCode::FailedInsert`])
+    /// so the base's failed-insert counter — and with it the SmartPQ
+    /// classifier's view of the op mix — stays honest without the client
+    /// ever writing a base cache line from a remote node.
     fn insert_batch_each(&mut self, items: &[(u64, u64)], ok: &mut [bool]) -> usize {
         debug_assert!(ok.len() >= items.len());
         let mut n = 0;
         for (i, &(k, v)) in items.iter().enumerate() {
-            let r = crate::pq::traits::is_valid_user_key(k) && {
-                let (p, _) = self.call(OpCode::Insert, k, v);
-                encode::decode_insert(p)
+            let op = if crate::pq::traits::is_valid_user_key(k) {
+                OpCode::Insert
+            } else {
+                OpCode::FailedInsert
             };
+            let (p, _) = self.call(op, k, v);
+            let r = encode::decode_insert(p);
             ok[i] = r;
             if r {
                 n += 1;
@@ -364,6 +371,10 @@ impl<B: ConcurrentPQ> NuddleServer<B> {
                 let (p, s) = match op {
                     OpCode::Insert => encode::insert(self.shared.base.insert(key, value)),
                     OpCode::DeleteMin => encode::delete_min(self.shared.base.delete_min()),
+                    OpCode::FailedInsert => {
+                        self.shared.base.record_rejected_inserts(1);
+                        encode::insert(false)
+                    }
                     OpCode::Nop => continue,
                 };
                 buffered[n_buf] = (pos, p, s);
@@ -381,10 +392,17 @@ impl<B: ConcurrentPQ> NuddleServer<B> {
     fn serve_group_combining(&mut self, gi: usize) -> usize {
         let g = self.my_groups[gi];
 
-        // Phase 1: collect the group's pending ops.
+        let mut resp: [(usize, u64, u64); GROUP_SIZE] = [(usize::MAX, 0, 0); GROUP_SIZE];
+        let mut n_resp = 0;
+
+        // Phase 1: collect the group's pending ops. Client-side-rejected
+        // inserts (`FailedInsert`) carry no base work: their failure is
+        // folded into the base's counters (classifier fidelity) and
+        // their response is buffered straight into the publish phase.
         let mut pend: [(usize, OpCode, u64, u64); GROUP_SIZE] =
             [(usize::MAX, OpCode::Nop, 0, 0); GROUP_SIZE];
         let mut n_pend = 0;
+        let mut n_rejected = 0u64;
         for pos in 0..GROUP_SIZE {
             let slot = g * GROUP_SIZE + pos;
             if let Some((op, key, value, t)) =
@@ -394,16 +412,24 @@ impl<B: ConcurrentPQ> NuddleServer<B> {
                 if matches!(op, OpCode::Nop) {
                     continue;
                 }
+                if matches!(op, OpCode::FailedInsert) {
+                    let (p, s) = encode::insert(false);
+                    resp[n_resp] = (pos, p, s);
+                    n_resp += 1;
+                    n_rejected += 1;
+                    continue;
+                }
                 pend[n_pend] = (pos, op, key, value);
                 n_pend += 1;
             }
         }
-        if n_pend == 0 {
+        if n_rejected > 0 {
+            self.shared.base.record_rejected_inserts(n_rejected);
+        }
+        if n_pend == 0 && n_rejected == 0 {
             return 0;
         }
 
-        let mut resp: [(usize, u64, u64); GROUP_SIZE] = [(usize::MAX, 0, 0); GROUP_SIZE];
-        let mut n_resp = 0;
         let mut done = [false; GROUP_SIZE];
 
         // Phase 2: insert→deleteMin elimination below the observed
@@ -509,11 +535,15 @@ impl<B: ConcurrentPQ> NuddleServer<B> {
 
         // Phase 4: publish — all responses after all base work, on the
         // group's single line.
-        debug_assert_eq!(n_resp, n_pend, "every pending op gets one response");
+        debug_assert_eq!(
+            n_resp as u64,
+            n_pend as u64 + n_rejected,
+            "every pending op gets one response"
+        );
         for &(pos, p, s) in &resp[..n_resp] {
             self.shared.responses[g].write(pos, p, s);
         }
-        n_pend
+        n_pend + n_rejected as usize
     }
 
     fn run(&mut self, idle_sleep_us: u64) {
@@ -582,6 +612,10 @@ impl<B: ConcurrentPQ + 'static> ConcurrentPQ for Nuddle<B> {
 
     fn record_eliminated(&self, pairs: u64, max_key: u64) {
         self.shared.base.record_eliminated(pairs, max_key);
+    }
+
+    fn record_rejected_inserts(&self, n: u64) {
+        self.shared.base.record_rejected_inserts(n);
     }
 
     fn len(&self) -> usize {
@@ -681,6 +715,30 @@ mod tests {
         let mut ks: Vec<u64> = out.iter().map(|&(k, _)| k).collect();
         ks.sort_unstable();
         assert_eq!(ks, vec![2, 6]);
+    }
+
+    #[test]
+    fn rejected_sentinel_inserts_reach_the_classifier_counters() {
+        use std::sync::atomic::Ordering;
+        // Both server variants must fold client-side sentinel rejections
+        // into the base's failed-insert counter: the classifier's
+        // insert_fraction may not depend on where an op was rejected.
+        for combine in [false, true] {
+            let q = make_cfg(2, 8, combine);
+            let mut ok = [false; 4];
+            let items = [(5u64, 50u64), (0, 0), (u64::MAX, 1), (9, 90)];
+            assert_eq!(q.insert_batch_each(&items, &mut ok), 2, "combine={combine}");
+            assert_eq!(ok, [true, false, false, true], "combine={combine}");
+            let stats = q.base().stats();
+            assert_eq!(
+                stats.failed_inserts.load(Ordering::Relaxed),
+                2,
+                "combine={combine}: rejected inserts not recorded"
+            );
+            assert_eq!(stats.inserts.load(Ordering::Relaxed), 2, "combine={combine}");
+            // The op mix reflects all four attempts.
+            assert_eq!(stats.insert_fraction(), 1.0, "combine={combine}");
+        }
     }
 
     #[test]

@@ -22,6 +22,7 @@ use std::time::{Duration, Instant};
 
 use crate::delegation::nuddle::NuddleConfig;
 use crate::delegation::Nuddle;
+use crate::harness::host_parallelism;
 use crate::harness::real_bench::run_real;
 use crate::harness::runner::BenchConfig;
 use crate::harness::table::{fmt, Table};
@@ -212,10 +213,6 @@ pub fn combining_comparison(cfg: &BenchConfig) -> (Table, CombineResult) {
     );
     let _ = t.write_csv(format!("{REPORT_DIR}/batch_combining.csv"));
     (t, r)
-}
-
-fn host_parallelism() -> usize {
-    std::thread::available_parallelism().map_or(1, |n| n.get())
 }
 
 /// Where the machine-readable results live (repo root; see

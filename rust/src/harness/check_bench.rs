@@ -21,6 +21,13 @@
 //!   exact-head `lotan_shavit` must not *gain* throughput from adding
 //!   sockets that fight over its head (<= 2x slack mirrors the engine's
 //!   own pinned collapse test).
+//! * **Service** (`BENCH_service.json`) — schema validation for the
+//!   backend × shard × mix sweep: positive throughput, finite and
+//!   ordered latency quantiles (p50 <= p99 <= p999, p99 > 0 — a TCP
+//!   round trip cannot take zero time), plus an *advisory*
+//!   throughput-monotone-in-shards check per (backend, mix): on a large
+//!   host adding shards should not lose throughput, but small CI runners
+//!   can't parallelize shards, so a violation only warns.
 //!
 //! Placeholder artifacts (the committed schema stubs) fail loudly: the
 //! point of the gate is that only measured output passes.
@@ -108,8 +115,13 @@ pub fn check_str(path: &str, text: &str, min_combining_speedup: f64) -> Result<C
         check_batch(&v, path, min_combining_speedup, &mut out)?;
     } else if v.get("series").is_some() {
         check_projection(&v, path, &mut out)?;
+    } else if v.get("sweeps").is_some() {
+        check_service(&v, path, &mut out)?;
     } else {
-        return Err(schema_err(path, "unknown artifact schema (no \"micro\" or \"series\")"));
+        return Err(schema_err(
+            path,
+            "unknown artifact schema (no \"micro\", \"series\" or \"sweeps\")",
+        ));
     }
     Ok(out)
 }
@@ -347,6 +359,129 @@ fn check_projection(v: &Json, path: &str, out: &mut CheckOutcome) -> Result<()> 
     Ok(())
 }
 
+/// One decoded service-sweep point (only what the checks need).
+struct Sweep {
+    backend: String,
+    mix: String,
+    shards: u64,
+    mops: f64,
+}
+
+fn check_service(v: &Json, path: &str, out: &mut CheckOutcome) -> Result<()> {
+    if v.get("placeholder").map_or(true, |p| p.as_bool() != Some(false)) {
+        return Err(schema_err(
+            path,
+            "placeholder artifact — regenerate with `smartpq bench --figure service`",
+        ));
+    }
+    let host = req_u64(v, "host_parallelism", path)?;
+    if host == 0 {
+        return Err(schema_err(path, "\"host_parallelism\" must be >= 1"));
+    }
+    req(v, "quick", path)?
+        .as_bool()
+        .ok_or_else(|| schema_err(path, "\"quick\" must be a boolean"))?;
+    if req_u64(v, "key_span", path)? == 0 {
+        return Err(schema_err(path, "\"key_span\" must be >= 1"));
+    }
+    let raw = req_arr(v, "sweeps", path)?;
+    if raw.is_empty() {
+        return Err(schema_err(path, "\"sweeps\" is empty"));
+    }
+    let mut sweeps = Vec::with_capacity(raw.len());
+    for (i, s) in raw.iter().enumerate() {
+        let backend = req_str(s, "backend", path)?.to_string();
+        let mix = req_str(s, "mix", path)?.to_string();
+        if backend.is_empty() || mix.is_empty() {
+            return Err(schema_err(path, &format!("sweeps[{i}]: empty backend or mix")));
+        }
+        let shards = req_u64(s, "shards", path)?;
+        if shards == 0 {
+            return Err(schema_err(path, &format!("sweeps[{i}] ({backend}): shards must be >= 1")));
+        }
+        if req_u64(s, "conns", path)? == 0 {
+            return Err(schema_err(path, &format!("sweeps[{i}] ({backend}): conns must be >= 1")));
+        }
+        if req_u64(s, "ops", path)? == 0 {
+            return Err(schema_err(path, &format!("sweeps[{i}] ({backend}): zero completed ops")));
+        }
+        let mops = req_f64(s, "mops", path)?;
+        if mops <= 0.0 {
+            return Err(schema_err(
+                path,
+                &format!("sweeps[{i}] ({backend}, {mix}): mops must be > 0, got {mops}"),
+            ));
+        }
+        let p50 = req_f64(s, "p50_us", path)?;
+        let p99 = req_f64(s, "p99_us", path)?;
+        let p999 = req_f64(s, "p999_us", path)?;
+        if p50 < 0.0 || p99 <= 0.0 || !(p50 <= p99 && p99 <= p999) {
+            return Err(schema_err(
+                path,
+                &format!(
+                    "sweeps[{i}] ({backend}, {mix}, {shards} shard(s)): latency quantiles must \
+                     satisfy 0 <= p50 <= p99 <= p999 with p99 > 0 \
+                     (got p50={p50}, p99={p99}, p999={p999})"
+                ),
+            ));
+        }
+        req_u64(s, "switches", path)?;
+        sweeps.push(Sweep {
+            backend,
+            mix,
+            shards,
+            mops,
+        });
+    }
+    out.facts.push(format!(
+        "service sweep: {} points, all with positive throughput and ordered latency quantiles",
+        sweeps.len()
+    ));
+    // Advisory: per (backend, mix), the best multi-shard throughput
+    // should not fall below the single-shard baseline.
+    let mut groups: Vec<(&str, &str)> = sweeps
+        .iter()
+        .map(|s| (s.backend.as_str(), s.mix.as_str()))
+        .collect();
+    groups.sort_unstable();
+    groups.dedup();
+    let mut monotone = 0usize;
+    for (backend, mix) in groups {
+        let here: Vec<&Sweep> = sweeps
+            .iter()
+            .filter(|s| s.backend == backend && s.mix == mix)
+            .collect();
+        let min_shards = here.iter().map(|s| s.shards).min().unwrap_or(1);
+        let base = here
+            .iter()
+            .filter(|s| s.shards == min_shards)
+            .map(|s| s.mops)
+            .fold(f64::NEG_INFINITY, f64::max);
+        let best_more = here
+            .iter()
+            .filter(|s| s.shards > min_shards)
+            .map(|s| s.mops)
+            .fold(f64::NEG_INFINITY, f64::max);
+        if best_more == f64::NEG_INFINITY {
+            continue; // single shard count: nothing to compare
+        }
+        if best_more < base {
+            out.warnings.push(format!(
+                "{backend}/{mix}: throughput not monotone in shards ({best_more:.3} Mops with \
+                 more shards vs {base:.3} at {min_shards}) — advisory on a {host}-way host"
+            ));
+        } else {
+            monotone += 1;
+        }
+    }
+    if monotone > 0 {
+        out.facts.push(format!(
+            "throughput monotone in shards for {monotone} (backend, mix) group(s)"
+        ));
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -478,5 +613,69 @@ mod tests {
     fn unknown_schema_fails() {
         let err = check_str("x.json", "{\"generated_by\": \"x\"}", 1.3).unwrap_err();
         assert!(err.to_string().contains("unknown artifact schema"), "{err}");
+    }
+
+    fn service_sweep(backend: &str, shards: u64, mix: &str, mops: f64, p99: f64) -> String {
+        format!(
+            "{{\"backend\": \"{backend}\", \"shards\": {shards}, \"mix\": \"{mix}\", \
+             \"conns\": 4, \"ops\": 1000, \"mops\": {mops:.4}, \"p50_us\": {:.3}, \
+             \"p99_us\": {p99:.3}, \"p999_us\": {:.3}, \"switches\": 0}}",
+            p99 / 4.0,
+            p99 * 3.0,
+        )
+    }
+
+    fn service_json(sweeps: &[String]) -> String {
+        format!(
+            "{{\"generated_by\": \"smartpq bench --figure service\", \"placeholder\": false, \
+             \"quick\": true, \"host_parallelism\": 8, \"key_span\": 1048576, \
+             \"sweeps\": [{}]}}",
+            sweeps.join(", ")
+        )
+    }
+
+    #[test]
+    fn measured_service_sweep_passes() {
+        let doc = service_json(&[
+            service_sweep("smartpq", 1, "balanced", 0.05, 120.0),
+            service_sweep("smartpq", 2, "balanced", 0.08, 100.0),
+        ]);
+        let ok = check_str("s.json", &doc, 1.3).unwrap();
+        assert!(ok.warnings.is_empty(), "{ok:?}");
+        assert!(ok.facts.iter().any(|f| f.contains("monotone")), "{ok:?}");
+    }
+
+    #[test]
+    fn service_shard_regression_is_advisory() {
+        let doc = service_json(&[
+            service_sweep("nuddle", 1, "delete_heavy", 0.10, 90.0),
+            service_sweep("nuddle", 4, "delete_heavy", 0.04, 300.0),
+        ]);
+        let ok = check_str("s.json", &doc, 1.3).unwrap();
+        assert_eq!(ok.warnings.len(), 1, "{ok:?}");
+        assert!(ok.warnings[0].contains("monotone"), "{ok:?}");
+    }
+
+    #[test]
+    fn service_latency_order_violation_fails() {
+        // p999 below p99: impossible.
+        let mut sweep = service_sweep("smartpq", 1, "balanced", 0.05, 120.0);
+        sweep = sweep.replace("\"p999_us\": 360.000", "\"p999_us\": 10.000");
+        let err = check_str("s.json", &service_json(&[sweep]), 1.3).unwrap_err();
+        assert!(err.to_string().contains("quantiles"), "{err}");
+        // Zero p99: a TCP round trip cannot take zero time.
+        let zero = service_sweep("smartpq", 1, "balanced", 0.05, 0.0);
+        assert!(check_str("s.json", &service_json(&[zero]), 1.3).is_err());
+    }
+
+    #[test]
+    fn service_placeholder_and_empty_fail() {
+        let stub = "{\"generated_by\": \"smartpq bench --figure service\", \
+                    \"placeholder\": true, \"sweeps\": []}";
+        let err = check_str("BENCH_service.json", stub, 1.3).unwrap_err();
+        assert!(err.to_string().contains("placeholder"), "{err}");
+        let empty = "{\"generated_by\": \"x\", \"placeholder\": false, \"quick\": true, \
+                     \"host_parallelism\": 4, \"key_span\": 10, \"sweeps\": []}";
+        assert!(check_str("s.json", empty, 1.3).is_err());
     }
 }

@@ -496,6 +496,16 @@ pub fn batch(cfg: &BenchConfig) -> crate::util::error::Result<Vec<Table>> {
     crate::harness::batch_bench::run_batch_figure(cfg)
 }
 
+// ------------------------------------------------------- service plane
+
+/// The TCP service sweep (`bench --figure service`): backend × shard
+/// count × op mix over a loopback service driven by the open-loop load
+/// generator, with tail-latency histograms and machine-readable results
+/// in `BENCH_service.json` (see [`crate::harness::service_bench`]).
+pub fn service(cfg: &BenchConfig) -> crate::util::error::Result<Vec<Table>> {
+    crate::harness::service_bench::run_service_figure(cfg)
+}
+
 // ------------------------------------------------ trace-driven projection
 
 /// Trace-driven NUMA projection (`bench --figure projection`): record the

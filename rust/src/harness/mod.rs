@@ -11,10 +11,18 @@ pub mod figures;
 pub mod projection_bench;
 pub mod real_bench;
 pub mod runner;
+pub mod service_bench;
 pub mod table;
 
 pub use runner::{BenchConfig, Measurement};
 pub use table::Table;
+
+/// The host's available parallelism (1 when unknown) — recorded next to
+/// every real-plane measurement so the artifact gates can scale their
+/// expectations to the machine that produced the numbers.
+pub fn host_parallelism() -> usize {
+    std::thread::available_parallelism().map_or(1, |n| n.get())
+}
 
 /// Resolve `name` at the repository root: the binary runs from either
 /// the repo root or `rust/`, so walk up one level looking for the

@@ -57,6 +57,12 @@ pub struct ProjectionConfig {
     pub seed: u64,
     /// Quick (CI smoke) mode marker, recorded in the JSON.
     pub quick: bool,
+    /// Software threads per simulated node. `None` targets each
+    /// topology's full hardware context count (nodes × 16); `Some(t)`
+    /// targets `t × nodes` instead, which past 16 oversubscribes each
+    /// topology — that is how the projection x-axis reaches beyond 64
+    /// contexts (the paper's oversubscribed tail).
+    pub threads_per_node: Option<usize>,
 }
 
 impl ProjectionConfig {
@@ -71,6 +77,7 @@ impl ProjectionConfig {
             phase_ms: if quick { 0.4 } else { 2.0 },
             seed,
             quick,
+            threads_per_node: None,
         }
     }
 }
@@ -141,6 +148,8 @@ pub struct ProjectionReport {
     pub phase_ms: f64,
     /// Node counts swept.
     pub node_counts: Vec<usize>,
+    /// Thread-target override (see [`ProjectionConfig::threads_per_node`]).
+    pub threads_per_node: Option<usize>,
     /// The recorded trace the schedules came from.
     pub trace: WorkloadTrace,
     /// All (backend, node count) series.
@@ -169,6 +178,9 @@ pub fn run_projection(cfg: &ProjectionConfig) -> Result<ProjectionReport> {
             )));
         }
     }
+    if cfg.threads_per_node == Some(0) {
+        return Err(Error::Config("--threads-per-node must be >= 1".into()));
+    }
     let trace = record_app_trace(&cfg.workload, cfg.seed, cfg.buckets);
     let mut series = Vec::new();
     let mut crossover = Vec::new();
@@ -178,7 +190,10 @@ pub fn run_projection(cfg: &ProjectionConfig) -> Result<ProjectionReport> {
             cores_per_node: 8,
             smt: 2,
         };
-        let target_threads = topology.hw_contexts();
+        let target_threads = match cfg.threads_per_node {
+            Some(t) => t * nodes,
+            None => topology.hw_contexts(),
+        };
         let sched = trace.to_schedule(target_threads, cfg.phase_ms * 1e6);
         let mut node_series: Vec<ProjSeries> = Vec::new();
         for algo in SimAlgo::projection_set() {
@@ -225,6 +240,7 @@ pub fn run_projection(cfg: &ProjectionConfig) -> Result<ProjectionReport> {
         buckets: cfg.buckets,
         phase_ms: cfg.phase_ms,
         node_counts: cfg.node_counts.clone(),
+        threads_per_node: cfg.threads_per_node,
         trace,
         series,
         crossover,
@@ -275,7 +291,8 @@ pub fn report_tables(report: &ProjectionReport) -> Vec<Table> {
         let hdr: Vec<&str> = header.iter().map(String::as_str).collect();
         let threads = node_series.first().map(|s| s.threads).unwrap_or(0);
         let title = format!(
-            "Projection [{} trace, {nodes} NUMA node(s), {threads} hw contexts]: Mops/s per phase",
+            "Projection [{} trace, {nodes} NUMA node(s), {threads} target threads]: \
+             Mops/s per phase",
             report.workload
         );
         let mut t = Table::new(title, &hdr);
@@ -321,6 +338,13 @@ pub fn json_string(report: &ProjectionReport) -> String {
     s.push_str(&format!("  \"phase_ms\": {},\n", report.phase_ms));
     let nodes: Vec<String> = report.node_counts.iter().map(|n| n.to_string()).collect();
     s.push_str(&format!("  \"node_counts\": [{}],\n", nodes.join(", ")));
+    s.push_str(&format!(
+        "  \"threads_per_node\": {},\n",
+        report
+            .threads_per_node
+            .map(|t| t.to_string())
+            .unwrap_or_else(|| "null".to_string())
+    ));
     s.push_str("  \"series\": [\n");
     for (i, ser) in report.series.iter().enumerate() {
         s.push_str("    {\n");
@@ -457,6 +481,7 @@ mod tests {
             phase_ms: 0.05,
             seed: 5,
             quick: true,
+            threads_per_node: None,
         }
     }
 
@@ -505,6 +530,28 @@ mod tests {
         assert!(run_projection(&cfg).is_err());
         cfg.node_counts = vec![];
         assert!(run_projection(&cfg).is_err());
+        let mut cfg = tiny_cfg();
+        cfg.threads_per_node = Some(0);
+        assert!(run_projection(&cfg).is_err());
+    }
+
+    #[test]
+    fn threads_per_node_overrides_the_thread_target() {
+        let mut cfg = tiny_cfg();
+        cfg.threads_per_node = Some(32);
+        let r = run_projection(&cfg).unwrap();
+        // 1 node: 32 threads = 2x its 16 hardware contexts
+        // (oversubscribed); 2 nodes: 64 threads vs 32 contexts.
+        assert!(r.series.iter().filter(|s| s.nodes == 1).all(|s| s.threads == 32));
+        assert!(r.series.iter().filter(|s| s.nodes == 2).all(|s| s.threads == 64));
+        for s in &r.series {
+            assert!(s.overall_mops > 0.0, "{}@{} idle", s.backend, s.nodes);
+        }
+        let json = json_string(&r);
+        assert!(json.contains("\"threads_per_node\": 32"), "{json}");
+        // The default target records null (auto).
+        let auto = run_projection(&tiny_cfg()).unwrap();
+        assert!(json_string(&auto).contains("\"threads_per_node\": null"));
     }
 
     #[test]

@@ -1,0 +1,521 @@
+//! `smartpq loadgen` / `bench --figure service` — the open-loop load
+//! generator and the service sweep.
+//!
+//! The generator is *open-loop*: every connection derives a fixed
+//! schedule of send times from its target rate and measures each op's
+//! latency **from its scheduled time**, not from the moment the socket
+//! write happened. A service that falls behind therefore accrues the
+//! backlog wait into its tail — the coordinated-omission-free measure a
+//! closed-loop "send, wait, send" loop cannot produce. Latencies land in
+//! a shared [`LatencyHist`] (log-bucketed, ~3% resolution) and are
+//! reported as p50/p99/p999.
+//!
+//! Op mixes: `insert` (80/20), `balanced` (50/50), `delete` (20/80), and
+//! `phases` — alternating 90/10 ↔ 10/90 windows, the network-shaped
+//! version of the paper's Table 2/3 dynamic workloads, there to make a
+//! SmartPQ-backed service actually exercise its mode switches under
+//! socket-driven contention.
+//!
+//! `bench --figure service` sweeps backend × shard count × mix over a
+//! loopback service and writes `target/reports/service_sweep.csv` plus
+//! the machine-readable `BENCH_service.json` (gated by
+//! `smartpq check-bench`).
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::harness::host_parallelism;
+use crate::harness::runner::BenchConfig;
+use crate::harness::table::{fmt, Table};
+use crate::service::{PqService, ServiceClient, ServiceConfig};
+use crate::util::error::{Error, Result};
+use crate::util::hist::{ns_to_us, LatencyHist};
+use crate::util::rng::Rng;
+use crate::workloads::report::REPORT_DIR;
+
+/// Alternating windows in the `phases` mix.
+pub const PHASE_WINDOWS: usize = 6;
+
+/// An op mix the generator can drive.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpMix {
+    /// 80% insert / 20% deleteMin.
+    InsertHeavy,
+    /// 50/50.
+    Balanced,
+    /// 20% insert / 80% deleteMin.
+    DeleteHeavy,
+    /// Alternating 90/10 ↔ 10/90 windows ([`PHASE_WINDOWS`] of them).
+    Phases,
+}
+
+impl OpMix {
+    /// All four mixes, report order.
+    pub fn all() -> [OpMix; 4] {
+        [OpMix::InsertHeavy, OpMix::Balanced, OpMix::DeleteHeavy, OpMix::Phases]
+    }
+
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Result<OpMix> {
+        Ok(match s {
+            "insert" => OpMix::InsertHeavy,
+            "balanced" => OpMix::Balanced,
+            "delete" => OpMix::DeleteHeavy,
+            "phases" => OpMix::Phases,
+            other => {
+                return Err(Error::Config(format!(
+                    "unknown mix {other:?} (expected insert, balanced, delete, phases or all)"
+                )))
+            }
+        })
+    }
+
+    /// Report label.
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpMix::InsertHeavy => "insert_heavy",
+            OpMix::Balanced => "balanced",
+            OpMix::DeleteHeavy => "delete_heavy",
+            OpMix::Phases => "phases",
+        }
+    }
+
+    /// Insert percentage at run fraction `frac` in `[0, 1]`.
+    fn insert_pct_at(&self, frac: f64) -> f64 {
+        match self {
+            OpMix::InsertHeavy => 80.0,
+            OpMix::Balanced => 50.0,
+            OpMix::DeleteHeavy => 20.0,
+            OpMix::Phases => {
+                let window = (frac.clamp(0.0, 1.0) * PHASE_WINDOWS as f64) as usize;
+                if window % 2 == 0 {
+                    90.0
+                } else {
+                    10.0
+                }
+            }
+        }
+    }
+}
+
+/// Load-generator knobs.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Concurrent connections.
+    pub conns: usize,
+    /// Target ops/s per connection (the open-loop schedule).
+    pub rate_per_conn: f64,
+    /// Run length per mix, seconds.
+    pub secs: f64,
+    /// Insert keys drawn uniformly from `1..=key_range`.
+    pub key_range: u64,
+    /// Elements inserted before the timed run (deleteMin material).
+    pub prefill: u64,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl LoadgenConfig {
+    /// Defaults; quick mode is CI-sized.
+    pub fn new(quick: bool) -> LoadgenConfig {
+        if quick {
+            LoadgenConfig {
+                conns: 2,
+                rate_per_conn: 1_500.0,
+                secs: 0.4,
+                key_range: 1 << 20,
+                prefill: 2_000,
+                seed: 42,
+            }
+        } else {
+            LoadgenConfig {
+                conns: 4,
+                rate_per_conn: 4_000.0,
+                secs: 1.5,
+                key_range: 1 << 20,
+                prefill: 20_000,
+                seed: 42,
+            }
+        }
+    }
+}
+
+/// Result of one mix against one service.
+#[derive(Debug, Clone)]
+pub struct MixOutcome {
+    /// Mix label.
+    pub mix: &'static str,
+    /// Connections used.
+    pub conns: usize,
+    /// Scheduled aggregate rate (ops/s).
+    pub target_rate: f64,
+    /// Completed operations.
+    pub ops: u64,
+    /// deleteMins that observed an empty queue.
+    pub empty_deletes: u64,
+    /// Wall-clock seconds of the run.
+    pub elapsed_s: f64,
+    /// Completed Mops/s.
+    pub mops: f64,
+    /// Median latency, µs (scheduled-time based).
+    pub p50_us: f64,
+    /// 99th-percentile latency, µs.
+    pub p99_us: f64,
+    /// 99.9th-percentile latency, µs.
+    pub p999_us: f64,
+    /// Largest observed latency, µs.
+    pub max_us: f64,
+}
+
+/// Drive one mix against the service at `addr` (open loop; see module
+/// docs). The queue is prefilled once per call.
+pub fn run_mix(addr: &str, mix: OpMix, cfg: &LoadgenConfig) -> Result<MixOutcome> {
+    if cfg.conns == 0 || cfg.rate_per_conn <= 0.0 || cfg.secs <= 0.0 || cfg.key_range == 0 {
+        return Err(Error::Config(
+            "loadgen needs conns >= 1, rate > 0, secs > 0, key-range >= 1".into(),
+        ));
+    }
+    // Prefill from one pipelined connection (batched inserts).
+    {
+        let mut c = ServiceClient::connect(addr)?;
+        let mut rng = Rng::new(cfg.seed ^ 0xF111);
+        let mut left = cfg.prefill;
+        while left > 0 {
+            let n = left.min(256) as usize;
+            let items: Vec<(u64, u64)> =
+                (0..n).map(|_| (1 + rng.gen_range(cfg.key_range), 7)).collect();
+            c.insert_batch(&items)?;
+            left -= n as u64;
+        }
+    }
+    let hist = Arc::new(LatencyHist::new());
+    let empty_deletes = Arc::new(std::sync::atomic::AtomicU64::new(0));
+    let t0 = Instant::now();
+    let ops: u64 = std::thread::scope(|s| -> Result<u64> {
+        let workers: Vec<_> = (0..cfg.conns)
+            .map(|conn_id| {
+                let hist = Arc::clone(&hist);
+                let empty_deletes = Arc::clone(&empty_deletes);
+                s.spawn(move || -> Result<u64> {
+                    let mut client = ServiceClient::connect(addr)?;
+                    let mut rng = Rng::stream(cfg.seed, conn_id as u64 + 1);
+                    let interval = Duration::from_secs_f64(1.0 / cfg.rate_per_conn);
+                    let run = Duration::from_secs_f64(cfg.secs);
+                    let start = Instant::now();
+                    let mut i = 0u64;
+                    loop {
+                        let sched = interval.mul_f64(i as f64);
+                        if sched >= run {
+                            return Ok(i);
+                        }
+                        let now = start.elapsed();
+                        if sched > now {
+                            std::thread::sleep(sched - now);
+                        }
+                        let frac = sched.as_secs_f64() / cfg.secs;
+                        let sched_at = start + sched;
+                        if rng.gen_f64() * 100.0 < mix.insert_pct_at(frac) {
+                            let key = 1 + rng.gen_range(cfg.key_range);
+                            client.insert(key, key)?;
+                        } else if client.delete_min()?.is_none() {
+                            empty_deletes.fetch_add(1, Ordering::Relaxed);
+                        }
+                        hist.record(sched_at.elapsed().as_nanos() as u64);
+                        i += 1;
+                    }
+                })
+            })
+            .collect();
+        let mut total = 0u64;
+        for w in workers {
+            total += w.join().expect("loadgen connection panicked")?;
+        }
+        Ok(total)
+    })?;
+    let elapsed_s = t0.elapsed().as_secs_f64().max(1e-9);
+    let snap = hist.snapshot();
+    Ok(MixOutcome {
+        mix: mix.name(),
+        conns: cfg.conns,
+        target_rate: cfg.rate_per_conn * cfg.conns as f64,
+        ops,
+        empty_deletes: empty_deletes.load(Ordering::Relaxed),
+        elapsed_s,
+        mops: ops as f64 / elapsed_s / 1e6,
+        p50_us: ns_to_us(snap.p50()),
+        p99_us: ns_to_us(snap.p99()),
+        p999_us: ns_to_us(snap.p999()),
+        max_us: ns_to_us(hist.max()),
+    })
+}
+
+/// Run several mixes back to back against one service; prints the
+/// summary table.
+pub fn run_loadgen(addr: &str, mixes: &[OpMix], cfg: &LoadgenConfig) -> Result<Vec<MixOutcome>> {
+    let mut out = Vec::with_capacity(mixes.len());
+    for &mix in mixes {
+        out.push(run_mix(addr, mix, cfg)?);
+    }
+    loadgen_table(addr, &out).print();
+    Ok(out)
+}
+
+/// Render the loadgen summary table.
+pub fn loadgen_table(addr: &str, outcomes: &[MixOutcome]) -> Table {
+    let mut t = Table::new(
+        format!("Open-loop load generator vs {addr} (latency from scheduled send time)"),
+        &[
+            "mix", "conns", "target_ops_s", "ops", "empty_del", "mops", "p50_us", "p99_us",
+            "p999_us", "max_us",
+        ],
+    );
+    for o in outcomes {
+        t.row(vec![
+            o.mix.to_string(),
+            o.conns.to_string(),
+            format!("{:.0}", o.target_rate),
+            o.ops.to_string(),
+            o.empty_deletes.to_string(),
+            fmt(o.mops),
+            fmt(o.p50_us),
+            fmt(o.p99_us),
+            fmt(o.p999_us),
+            fmt(o.max_us),
+        ]);
+    }
+    t
+}
+
+// ------------------------------------------------------- figure sweep
+
+/// One point of the service sweep.
+#[derive(Debug, Clone)]
+pub struct ServicePoint {
+    /// Backend label.
+    pub backend: String,
+    /// Shard count.
+    pub shards: usize,
+    /// Mix label.
+    pub mix: &'static str,
+    /// Connections.
+    pub conns: usize,
+    /// Completed ops.
+    pub ops: u64,
+    /// Throughput, Mops/s.
+    pub mops: f64,
+    /// Median latency, µs.
+    pub p50_us: f64,
+    /// Tail latency, µs.
+    pub p99_us: f64,
+    /// Far-tail latency, µs.
+    pub p999_us: f64,
+    /// SmartPQ mode switches during this mix (0 for static backends).
+    pub switches: u64,
+}
+
+/// Where the machine-readable service results live (repo root).
+pub fn service_json_path() -> std::path::PathBuf {
+    crate::harness::repo_root_file("BENCH_service.json")
+}
+
+/// Serialize the sweep as the `BENCH_service` JSON schema.
+pub fn results_to_json(quick: bool, key_span: u64, points: &[ServicePoint]) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"generated_by\": \"smartpq bench --figure service\",\n");
+    s.push_str("  \"placeholder\": false,\n");
+    s.push_str(&format!("  \"quick\": {quick},\n"));
+    s.push_str(&format!("  \"host_parallelism\": {},\n", host_parallelism()));
+    s.push_str(&format!("  \"key_span\": {key_span},\n"));
+    s.push_str("  \"sweeps\": [\n");
+    for (i, p) in points.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"backend\": \"{}\", \"shards\": {}, \"mix\": \"{}\", \"conns\": {}, \
+             \"ops\": {}, \"mops\": {:.6}, \"p50_us\": {:.3}, \"p99_us\": {:.3}, \
+             \"p999_us\": {:.3}, \"switches\": {}}}{}\n",
+            p.backend,
+            p.shards,
+            p.mix,
+            p.conns,
+            p.ops,
+            p.mops,
+            p.p50_us,
+            p.p99_us,
+            p.p999_us,
+            p.switches,
+            if i + 1 < points.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]\n");
+    s.push_str("}\n");
+    s
+}
+
+/// Backends the sweep covers (the acceptance trio, plus the strongest
+/// static oblivious competitor in full mode).
+pub fn sweep_backends(quick: bool) -> Vec<&'static str> {
+    if quick {
+        vec!["smartpq", "nuddle", "multiqueue"]
+    } else {
+        vec!["smartpq", "nuddle", "multiqueue", "alistarh_herlihy"]
+    }
+}
+
+/// Shard counts the sweep covers.
+pub fn sweep_shards(quick: bool) -> Vec<usize> {
+    if quick {
+        vec![1, 2]
+    } else {
+        vec![1, 2, 4]
+    }
+}
+
+/// The full `bench --figure service` sweep, writing JSON to `json_path`.
+pub fn run_service_figure_to(
+    cfg: &BenchConfig,
+    json_path: &std::path::Path,
+) -> Result<Vec<Table>> {
+    let lg = LoadgenConfig::new(cfg.quick);
+    let mut points: Vec<ServicePoint> = Vec::new();
+    for backend in sweep_backends(cfg.quick) {
+        for shards in sweep_shards(cfg.quick) {
+            let svc = PqService::start(ServiceConfig {
+                backend: backend.to_string(),
+                shards,
+                key_span: lg.key_range,
+                max_conns: lg.conns + 8,
+                ..Default::default()
+            })?;
+            let addr = svc.addr().to_string();
+            for mix in OpMix::all() {
+                let s0 = svc.adaptive_switches();
+                let o = run_mix(&addr, mix, &lg)?;
+                points.push(ServicePoint {
+                    backend: backend.to_string(),
+                    shards,
+                    mix: o.mix,
+                    conns: o.conns,
+                    ops: o.ops,
+                    mops: o.mops,
+                    p50_us: o.p50_us,
+                    p99_us: o.p99_us,
+                    p999_us: o.p999_us,
+                    switches: svc.adaptive_switches() - s0,
+                });
+            }
+            // End-to-end shutdown: a client Shutdown frame stops the
+            // service; wait() joins every thread.
+            ServiceClient::connect(&addr)?.shutdown()?;
+            svc.wait();
+        }
+    }
+    let mut t = Table::new(
+        "Service sweep (loopback TCP, open-loop loadgen): Mops/s and tail latency",
+        &[
+            "backend", "shards", "mix", "conns", "ops", "mops", "p50_us", "p99_us", "p999_us",
+            "switches",
+        ],
+    );
+    for p in &points {
+        t.row(vec![
+            p.backend.clone(),
+            p.shards.to_string(),
+            p.mix.to_string(),
+            p.conns.to_string(),
+            p.ops.to_string(),
+            fmt(p.mops),
+            fmt(p.p50_us),
+            fmt(p.p99_us),
+            fmt(p.p999_us),
+            p.switches.to_string(),
+        ]);
+    }
+    t.print();
+    let _ = t.write_csv(format!("{REPORT_DIR}/service_sweep.csv"));
+    std::fs::write(json_path, results_to_json(cfg.quick, lg.key_range, &points))?;
+    println!("service results written to {}", json_path.display());
+    Ok(vec![t])
+}
+
+/// The full figure with the default JSON location (repo root).
+pub fn run_service_figure(cfg: &BenchConfig) -> Result<Vec<Table>> {
+    run_service_figure_to(cfg, &service_json_path())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix_percentages_and_parsing() {
+        assert_eq!(OpMix::parse("insert").unwrap(), OpMix::InsertHeavy);
+        assert_eq!(OpMix::parse("balanced").unwrap(), OpMix::Balanced);
+        assert_eq!(OpMix::parse("delete").unwrap(), OpMix::DeleteHeavy);
+        assert_eq!(OpMix::parse("phases").unwrap(), OpMix::Phases);
+        assert!(OpMix::parse("bogus").is_err());
+        assert_eq!(OpMix::InsertHeavy.insert_pct_at(0.3), 80.0);
+        assert_eq!(OpMix::DeleteHeavy.insert_pct_at(0.9), 20.0);
+        // Phases alternate between windows.
+        let a = OpMix::Phases.insert_pct_at(0.01);
+        let b = OpMix::Phases.insert_pct_at(0.01 + 1.0 / PHASE_WINDOWS as f64);
+        assert_ne!(a, b);
+        assert_eq!(a, OpMix::Phases.insert_pct_at(0.02));
+    }
+
+    #[test]
+    fn loadgen_against_embedded_service_records_latencies() {
+        let svc = PqService::start(ServiceConfig {
+            backend: "multiqueue".to_string(),
+            shards: 2,
+            ..Default::default()
+        })
+        .unwrap();
+        let addr = svc.addr().to_string();
+        let cfg = LoadgenConfig {
+            conns: 2,
+            rate_per_conn: 2_000.0,
+            secs: 0.1,
+            key_range: 10_000,
+            prefill: 500,
+            seed: 7,
+        };
+        let o = run_mix(&addr, OpMix::Balanced, &cfg).unwrap();
+        assert!(o.ops > 0, "{o:?}");
+        assert!(o.mops > 0.0);
+        assert!(o.p50_us <= o.p99_us && o.p99_us <= o.p999_us, "{o:?}");
+        svc.shutdown();
+        svc.wait();
+    }
+
+    #[test]
+    fn service_json_is_machine_readable() {
+        let points = vec![
+            ServicePoint {
+                backend: "smartpq".into(),
+                shards: 2,
+                mix: "balanced",
+                conns: 4,
+                ops: 1000,
+                mops: 0.02,
+                p50_us: 55.0,
+                p99_us: 240.0,
+                p999_us: 900.0,
+                switches: 1,
+            },
+        ];
+        let s = results_to_json(true, 1 << 20, &points);
+        let v = crate::util::json::Json::parse(&s).expect("service JSON parses");
+        assert_eq!(v.get("placeholder").unwrap().as_bool(), Some(false));
+        let sweeps = v.get("sweeps").unwrap().as_array().unwrap();
+        assert_eq!(sweeps.len(), 1);
+        assert_eq!(sweeps[0].get("mix").unwrap().as_str(), Some("balanced"));
+    }
+
+    #[test]
+    fn rejects_degenerate_loadgen_configs() {
+        let mut cfg = LoadgenConfig::new(true);
+        cfg.conns = 0;
+        assert!(run_mix("127.0.0.1:1", OpMix::Balanced, &cfg).is_err());
+    }
+}

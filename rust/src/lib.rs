@@ -22,6 +22,10 @@
 //!    discrete-event simulation as backend-generic benchmark drivers over
 //!    every real queue, verified against a sequential oracle
 //!    (`smartpq app`).
+//! 5. **Service plane** ([`service`]) — the queues served over TCP: a
+//!    length-prefixed binary protocol, a multi-threaded server hosting
+//!    key-range shards of any registered backend, and the client library
+//!    behind the open-loop load generator (`smartpq serve` / `loadgen`).
 //!
 //! See `DESIGN.md` for the full system inventory and experiment index.
 
@@ -32,6 +36,7 @@ pub mod harness;
 pub mod mem;
 pub mod pq;
 pub mod runtime;
+pub mod service;
 pub mod sim;
 pub mod util;
 pub mod workloads;

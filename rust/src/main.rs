@@ -8,6 +8,8 @@
 //!   app          — application workloads (SSSP / DES) over every backend
 //!   project      — replay recorded SSSP/DES traces on simulated
 //!                  1/2/4/8-node topologies (trace-driven projection)
+//!   serve        — host sharded queues behind the TCP service
+//!   loadgen      — open-loop load generator with latency histograms
 //!   check-bench  — validate BENCH_*.json artifacts (CI gate)
 //!   demo         — 30-second guided tour (SmartPQ adapting live)
 //!   classifier   — inspect / query the decision infrastructure
@@ -32,14 +34,17 @@ smartpq — adaptive concurrent priority queue for NUMA architectures (paper rep
 USAGE: smartpq <command> [options]
 
 COMMANDS
-  bench --figure <fig1|fig7|fig9|fig10|fig11|multiqueue|classifier|ablation|app|batch|projection|all>
+  bench --figure <fig1|fig7|fig9|fig10|fig11|multiqueue|classifier|ablation|app|batch|projection|service|all>
                           regenerate the paper's figures on the simulated
                           4-node testbed (CSV copies under target/reports/);
                           `batch` runs the real-plane bulk-op sweep and the
                           Nuddle combining-server comparison, recording
                           machine-readable results in BENCH_batch.json;
                           `projection` runs the trace-driven NUMA
-                          projection for both workloads
+                          projection for both workloads; `service` sweeps
+                          backend x shard count x op mix over a loopback
+                          TCP service with the open-loop load generator,
+                          recording BENCH_service.json
   train-data [--points N] [--out data/training.csv] [--duration-ms D]
                           sweep (threads,size,range,mix) over the simulator
                           and emit the classifier training set
@@ -64,15 +69,34 @@ COMMANDS
                           random|grid|powerlaw, --n, --lps, --horizon,
                           --max-dt, --trace-ms, --source)
   project --workload <sssp|des> [--nodes 1,2,4,8] [--buckets N] [--phase-ms F]
+          [--threads-per-node T]
                           record the workload's deterministic contention
                           trace (op mix, queue trajectory, parallelism)
                           and replay it in the simulator across 1/2/4/8
                           NUMA-node topologies for every backend — the
                           projection of `smartpq app` results beyond this
-                          host. Writes BENCH_projection.json (sssp; des
-                          gets a suffixed sibling) and
+                          host. --threads-per-node overrides the thread
+                          target (default: each topology's full hardware
+                          context count); e.g. T=32 over --nodes 1,2,4,8
+                          sweeps 32..256 software threads, oversubscribing
+                          every topology's contexts — the paper's beyond-
+                          64-thread x-axes. Writes BENCH_projection.json
+                          (sssp; des gets a suffixed sibling) and
                           target/reports/projection_*.csv (workload
                           options as for `app`)
+  serve [--backend B] [--shards K] [--addr H:P] [--key-span N] [--max-conns N]
+                          host K key-range shards of any registered
+                          backend (default smartpq x2) behind the TCP
+                          service; runs until a client sends a Shutdown
+                          frame (e.g. `smartpq loadgen --shutdown`)
+  loadgen [--addr H:P] [--mix insert|balanced|delete|phases|all] [--conns C]
+          [--rate R] [--secs S] [--key-range N] [--shutdown]
+                          open-loop load generator: drives the service at
+                          a fixed schedule per connection and reports
+                          p50/p99/p999 latency measured from each op's
+                          *scheduled* time (no coordinated omission).
+                          Without --addr an embedded loopback service is
+                          spawned (--backend/--shards as for serve)
   check-bench <BENCH_*.json ...> [--min-combining-speedup X]
                           validate bench artifacts: JSON schema, the
                           combining speedup target (>= 1.3x on hosts with
@@ -126,6 +150,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
             "app",
             "batch",
             "projection",
+            "service",
             "all",
         ],
         "all",
@@ -165,6 +190,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
     }
     if run_all || fig == "projection" {
         figures::projection(&cfg)?;
+    }
+    if run_all || fig == "service" {
+        figures::service(&cfg)?;
     }
     Ok(())
 }
@@ -477,11 +505,17 @@ fn cmd_project(args: &Args) -> Result<()> {
     cfg.node_counts = args.list_or("nodes", &DEFAULT_NODE_COUNTS)?;
     cfg.buckets = args.num_or("buckets", cfg.buckets)?;
     cfg.phase_ms = args.num_or("phase-ms", cfg.phase_ms)?;
+    let tpn: usize = args.num_or("threads-per-node", 0)?;
+    cfg.threads_per_node = if tpn == 0 { None } else { Some(tpn) };
     eprintln!(
-        "project: workload={workload_name} nodes={:?} buckets={} phase_ms={} seed={seed}{}",
+        "project: workload={workload_name} nodes={:?} buckets={} phase_ms={} \
+         threads_per_node={} seed={seed}{}",
         cfg.node_counts,
         cfg.buckets,
         cfg.phase_ms,
+        cfg.threads_per_node
+            .map(|t| t.to_string())
+            .unwrap_or_else(|| "auto".to_string()),
         if quick { " (quick)" } else { "" }
     );
     let (report, json_path) = run_and_write(&cfg)?;
@@ -497,6 +531,81 @@ fn cmd_project(args: &Args) -> Result<()> {
         report.crossover.iter().filter(|c| c.nodes > 1).count(),
         json_path.display()
     );
+    Ok(())
+}
+
+/// Host sharded queues behind the TCP service; blocks until a client
+/// sends a Shutdown frame.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use smartpq::service::{server::DEFAULT_KEY_SPAN, PqService, ServiceConfig};
+
+    let cfg = ServiceConfig {
+        backend: args.str_or("backend", "smartpq"),
+        shards: args.num_or("shards", 2)?,
+        key_span: args.num_or("key-span", DEFAULT_KEY_SPAN)?,
+        max_conns: args.num_or("max-conns", 64)?,
+        addr: args.str_or("addr", "127.0.0.1:7171"),
+        seed: args.num_or("seed", 42)?,
+        decision_interval_ms: args.num_or("decision-ms", 50)?,
+    };
+    let backend = cfg.backend.clone();
+    let shards = cfg.shards;
+    let svc = PqService::start(cfg)?;
+    println!(
+        "serving {backend} across {shards} key-range shard(s) on {} \
+         (stop with `smartpq loadgen --addr {} --shutdown`)",
+        svc.addr(),
+        svc.addr()
+    );
+    svc.wait();
+    println!("service stopped");
+    Ok(())
+}
+
+/// Open-loop load generator; spawns an embedded loopback service when no
+/// --addr is given.
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    use smartpq::harness::service_bench::{run_loadgen, LoadgenConfig, OpMix};
+    use smartpq::service::{server::DEFAULT_KEY_SPAN, PqService, ServiceClient, ServiceConfig};
+
+    let quick = args.flag("quick");
+    let mut cfg = LoadgenConfig::new(quick);
+    cfg.conns = args.num_or("conns", cfg.conns)?;
+    cfg.rate_per_conn = args.num_or("rate", cfg.rate_per_conn)?;
+    cfg.secs = args.num_or("secs", cfg.secs)?;
+    cfg.key_range = args.num_or("key-range", cfg.key_range)?;
+    cfg.prefill = args.num_or("prefill", cfg.prefill)?;
+    cfg.seed = args.num_or("seed", cfg.seed)?;
+    let mix_name = args.choice("mix", &["insert", "balanced", "delete", "phases", "all"], "all")?;
+    let mixes: Vec<OpMix> = if mix_name == "all" {
+        OpMix::all().to_vec()
+    } else {
+        vec![OpMix::parse(&mix_name)?]
+    };
+    let (addr, embedded) = match args.get("addr") {
+        Some(a) => (a.to_string(), None),
+        None => {
+            let svc = PqService::start(ServiceConfig {
+                backend: args.str_or("backend", "smartpq"),
+                shards: args.num_or("shards", 2)?,
+                key_span: args.num_or("key-span", DEFAULT_KEY_SPAN)?,
+                max_conns: cfg.conns + 8,
+                ..Default::default()
+            })?;
+            let addr = svc.addr().to_string();
+            eprintln!("loadgen: spawned embedded loopback service on {addr}");
+            (addr, Some(svc))
+        }
+    };
+    let outcomes = run_loadgen(&addr, &mixes, &cfg)?;
+    if embedded.is_some() || args.flag("shutdown") {
+        ServiceClient::connect(addr.as_str())?.shutdown()?;
+    }
+    if let Some(svc) = embedded {
+        svc.wait();
+    }
+    let total: u64 = outcomes.iter().map(|o| o.ops).sum();
+    println!("loadgen: {total} ops over {} mix(es) against {addr}", outcomes.len());
     Ok(())
 }
 
@@ -635,6 +744,8 @@ fn main() {
         Some("real") => cmd_real(&args),
         Some("app") => cmd_app(&args),
         Some("project") => cmd_project(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("loadgen") => cmd_loadgen(&args),
         Some("check-bench") => cmd_check_bench(&args),
         Some("demo") => cmd_demo(&args),
         Some("classifier") => cmd_classifier(&args),

@@ -125,6 +125,10 @@ impl ConcurrentPQ for MutexHeapPQ {
         self.stats.record_delete_min_batch(pairs);
     }
 
+    fn record_rejected_inserts(&self, n: u64) {
+        self.stats.record_failed_inserts(n);
+    }
+
     fn len(&self) -> usize {
         self.inner.lock().expect("poisoned heap").0.len()
     }

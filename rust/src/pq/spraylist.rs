@@ -255,6 +255,10 @@ impl<B: SprayBase> ConcurrentPQ for SprayList<B> {
         self.stats.record_delete_min_batch(pairs);
     }
 
+    fn record_rejected_inserts(&self, n: u64) {
+        self.stats.record_failed_inserts(n);
+    }
+
     fn len(&self) -> usize {
         self.stats.size()
     }

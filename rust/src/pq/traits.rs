@@ -111,6 +111,16 @@ pub trait ConcurrentPQ: Send + Sync {
         let _ = (pairs, max_key);
     }
 
+    /// Account for `n` inserts a delegation layer rejected client-side
+    /// (sentinel keys) without reaching the structure. Backends with
+    /// operation counters fold them into `failed_inserts` so the
+    /// classifier's `insert_fraction` does not depend on *where* an op
+    /// was rejected — an adversarial sentinel-heavy stream must look
+    /// insert-heavy, not silent. Default: no counters, nothing to do.
+    fn record_rejected_inserts(&self, n: u64) {
+        let _ = n;
+    }
+
     /// Approximate number of elements (maintained with relaxed counters).
     fn len(&self) -> usize;
 

@@ -1,0 +1,197 @@
+//! Blocking client for the priority-queue service.
+//!
+//! One [`ServiceClient`] wraps one TCP connection. The scalar helpers
+//! (`insert`, `delete_min`, ...) issue one request and wait for its
+//! response; [`ServiceClient::send`] writes any number of request frames
+//! in one syscall and then reads exactly one response per request —
+//! pipelining, which is what lets the server fuse the backlog into the
+//! batch entry points (see [`crate::service::server`]).
+
+use std::io::{Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+
+use crate::service::proto::{self, Request, Response};
+use crate::util::error::{Error, Result};
+
+/// A connected service client.
+pub struct ServiceClient {
+    stream: TcpStream,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+}
+
+impl ServiceClient {
+    /// Connect to a running service.
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<ServiceClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(ServiceClient {
+            stream,
+            rbuf: Vec::with_capacity(4 * 1024),
+            wbuf: Vec::with_capacity(4 * 1024),
+        })
+    }
+
+    /// Write every request as one pipelined burst, then collect exactly
+    /// one response per request, in order. A server [`Response::Error`]
+    /// is returned in-place (the connection is dead afterwards).
+    pub fn send(&mut self, reqs: &[Request]) -> Result<Vec<Response>> {
+        self.wbuf.clear();
+        for r in reqs {
+            proto::encode_request(r, &mut self.wbuf);
+        }
+        self.stream.write_all(&self.wbuf)?;
+        let mut out = Vec::with_capacity(reqs.len());
+        let mut chunk = [0u8; 16 * 1024];
+        while out.len() < reqs.len() {
+            // Drain complete frames already buffered.
+            let mut off = 0;
+            while out.len() < reqs.len() {
+                match proto::decode_response(&self.rbuf[off..])? {
+                    Some((resp, used)) => {
+                        off += used;
+                        out.push(resp);
+                    }
+                    None => break,
+                }
+            }
+            self.rbuf.drain(..off);
+            if out.len() == reqs.len() {
+                break;
+            }
+            let n = self.stream.read(&mut chunk)?;
+            if n == 0 {
+                // The server closes right after an error frame; surface
+                // that frame instead of a generic truncation failure.
+                if let Some(Response::Error { code, message }) = out
+                    .iter()
+                    .find(|r| matches!(r, Response::Error { .. }))
+                {
+                    return Err(Error::Invariant(format!(
+                        "service error {code} closed the connection: {message}"
+                    )));
+                }
+                return Err(Error::Invariant(format!(
+                    "service closed the connection with {} of {} responses outstanding",
+                    reqs.len() - out.len(),
+                    reqs.len()
+                )));
+            }
+            self.rbuf.extend_from_slice(&chunk[..n]);
+        }
+        Ok(out)
+    }
+
+    /// [`ServiceClient::send`], with server [`Response::Error`] frames
+    /// turned into `Err` (the connection is dead after one anyway).
+    fn send_checked(&mut self, reqs: &[Request]) -> Result<Vec<Response>> {
+        let resps = self.send(reqs)?;
+        for r in &resps {
+            if let Response::Error { code, message } = r {
+                return Err(Error::Invariant(format!("service error {code}: {message}")));
+            }
+        }
+        Ok(resps)
+    }
+
+    fn call(&mut self, req: Request) -> Result<Response> {
+        let mut resps = self.send_checked(&[req])?;
+        Ok(resps.pop().expect("send returns one response per request"))
+    }
+
+    /// Insert `(key, value)`; false on duplicate or rejected key.
+    pub fn insert(&mut self, key: u64, value: u64) -> Result<bool> {
+        match self.call(Request::Insert { key, value })? {
+            Response::Insert(ok) => Ok(ok),
+            other => Err(unexpected("Insert", &other)),
+        }
+    }
+
+    /// Pop the (relaxed) minimum.
+    pub fn delete_min(&mut self) -> Result<Option<(u64, u64)>> {
+        match self.call(Request::DeleteMin)? {
+            Response::DeleteMin(r) => Ok(r),
+            other => Err(unexpected("DeleteMin", &other)),
+        }
+    }
+
+    /// Observe the (relaxed) minimum without removing it.
+    pub fn peek(&mut self) -> Result<Option<u64>> {
+        match self.call(Request::Peek)? {
+            Response::Peek(r) => Ok(r),
+            other => Err(unexpected("Peek", &other)),
+        }
+    }
+
+    /// Batched insert with per-item outcomes. Batches larger than
+    /// [`proto::MAX_BATCH`] are transparently split into one pipelined
+    /// burst of maximal frames (the server fuses consecutive insert
+    /// frames back into one combined sweep anyway).
+    pub fn insert_batch(&mut self, items: &[(u64, u64)]) -> Result<Vec<bool>> {
+        if items.is_empty() {
+            return Ok(Vec::new());
+        }
+        let reqs: Vec<Request> = items
+            .chunks(proto::MAX_BATCH)
+            .map(|c| Request::InsertBatch(c.to_vec()))
+            .collect();
+        let resps = self.send_checked(&reqs)?;
+        let mut oks = Vec::with_capacity(items.len());
+        for resp in resps {
+            match resp {
+                Response::InsertBatch(mut o) => oks.append(&mut o),
+                other => return Err(unexpected("InsertBatch", &other)),
+            }
+        }
+        Ok(oks)
+    }
+
+    /// Pop up to `n` (near-)minimal elements. Requests larger than
+    /// [`proto::MAX_BATCH`] are split like [`ServiceClient::insert_batch`].
+    pub fn delete_min_batch(&mut self, n: u32) -> Result<Vec<(u64, u64)>> {
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let mut reqs = Vec::new();
+        let mut left = n;
+        while left > 0 {
+            let take = left.min(proto::MAX_BATCH as u32);
+            reqs.push(Request::DeleteMinBatch(take));
+            left -= take;
+        }
+        let resps = self.send_checked(&reqs)?;
+        let mut out = Vec::new();
+        for resp in resps {
+            match resp {
+                Response::DeleteMinBatch(mut items) => out.append(&mut items),
+                other => return Err(unexpected("DeleteMinBatch", &other)),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Approximate element count across all shards.
+    pub fn len(&mut self) -> Result<u64> {
+        match self.call(Request::Len)? {
+            Response::Len(n) => Ok(n),
+            other => Err(unexpected("Len", &other)),
+        }
+    }
+
+    /// True when [`ServiceClient::len`] reports zero (same relaxation).
+    pub fn is_empty(&mut self) -> Result<bool> {
+        Ok(self.len()? == 0)
+    }
+
+    /// Ask the whole service to stop (acknowledged before it does).
+    pub fn shutdown(&mut self) -> Result<()> {
+        match self.call(Request::Shutdown)? {
+            Response::Shutdown => Ok(()),
+            other => Err(unexpected("Shutdown", &other)),
+        }
+    }
+}
+
+fn unexpected(wanted: &str, got: &Response) -> Error {
+    Error::Invariant(format!("protocol violation: expected {wanted} response, got {got:?}"))
+}

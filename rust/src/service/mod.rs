@@ -1,0 +1,28 @@
+//! The service plane: SmartPQ served over TCP.
+//!
+//! Everything built so far runs in-process; this module is the step the
+//! ROADMAP's "serves heavy traffic" north star actually requires — a
+//! network-facing scheduler whose shards are the existing concurrent
+//! queues:
+//!
+//! * [`proto`] — the versioned, length-prefixed binary wire protocol
+//!   (scalar + batched insert/deleteMin/peek, error frames, strict
+//!   decode).
+//! * [`server`] — a multi-threaded TCP server hosting K key-range shards
+//!   of any backend from the ten-backend registry (default SmartPQ),
+//!   with a relaxed min-of-shards deleteMin and per-connection request
+//!   fusing into the PR-3 batch entry points.
+//! * [`client`] — a blocking, pipelining client used by the open-loop
+//!   load generator (`smartpq loadgen`,
+//!   [`crate::harness::service_bench`]) and the differential tests.
+//!
+//! The whole plane is `std::net` only — no dependencies, same as the
+//! rest of the crate.
+
+pub mod client;
+pub mod proto;
+pub mod server;
+
+pub use client::ServiceClient;
+pub use proto::{Request, Response};
+pub use server::{PqService, ServiceConfig, ShardedPq};

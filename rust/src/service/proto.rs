@@ -1,0 +1,610 @@
+//! The service wire protocol: versioned, length-prefixed binary frames.
+//!
+//! Every frame is `u32 LE payload length || payload`, where the payload
+//! starts with a version byte ([`PROTO_VERSION`]) and an opcode byte.
+//! Integers are little-endian; batch counts are `u32`. The framing is
+//! deliberately trivial — the interesting property is *pipelining*: a
+//! client may write any number of request frames before reading, and the
+//! server answers every request with exactly one response frame, in
+//! request order. The server exploits the backlog: consecutive pipelined
+//! inserts (or deleteMins) that arrive in one socket read are fused into
+//! the PR-3 batch entry points (`insert_batch_each` / `delete_min_batch`)
+//! — the combining-server idea lifted onto the network.
+//!
+//! Decoding is strict: unknown versions/opcodes, oversized lengths,
+//! short payloads and trailing payload bytes are all hard errors (the
+//! server answers with one [`Response::Error`] frame and closes the
+//! connection). Incomplete frames are *not* errors — [`decode_request`]
+//! and [`decode_response`] return `Ok(None)` so a streaming reader can
+//! wait for more bytes.
+//!
+//! ## Frame payloads (version 1)
+//!
+//! | opcode | request            | payload after opcode                  |
+//! |--------|--------------------|---------------------------------------|
+//! | `0x01` | Insert             | key u64, value u64                    |
+//! | `0x02` | DeleteMin          | —                                     |
+//! | `0x03` | Peek               | —                                     |
+//! | `0x04` | InsertBatch        | count u32, count × (key u64, value u64) |
+//! | `0x05` | DeleteMinBatch     | n u32                                 |
+//! | `0x06` | Len                | —                                     |
+//! | `0x0F` | Shutdown           | —                                     |
+//!
+//! | opcode | response           | payload after opcode                  |
+//! |--------|--------------------|---------------------------------------|
+//! | `0x81` | Insert             | ok u8                                 |
+//! | `0x82` | DeleteMin          | present u8 [, key u64, value u64]     |
+//! | `0x83` | Peek               | present u8 [, key u64]                |
+//! | `0x84` | InsertBatch        | count u32, count × ok u8              |
+//! | `0x85` | DeleteMinBatch     | count u32, count × (key u64, value u64) |
+//! | `0x86` | Len                | len u64                               |
+//! | `0x8F` | Shutdown (ack)     | —                                     |
+//! | `0xFF` | Error              | code u16, msg_len u16, msg bytes      |
+
+use crate::util::error::{Error, Result};
+
+/// Protocol version carried in every frame.
+pub const PROTO_VERSION: u8 = 1;
+
+/// Maximum payload length a peer will accept (rejects garbage lengths
+/// before buffering them).
+pub const MAX_FRAME_LEN: usize = 1 << 20;
+
+/// Maximum batch element count (bounds allocation on decode, and keeps a
+/// maximal batched response comfortably below [`MAX_FRAME_LEN`]).
+pub const MAX_BATCH: usize = 1 << 12;
+
+/// Error codes carried in [`Response::Error`] frames.
+pub mod err {
+    /// Version byte did not match [`super::PROTO_VERSION`].
+    pub const BAD_VERSION: u16 = 1;
+    /// Unknown opcode.
+    pub const BAD_OPCODE: u16 = 2;
+    /// Structurally invalid payload (short, trailing bytes, bad count).
+    pub const MALFORMED: u16 = 3;
+    /// Frame or batch larger than the protocol limits.
+    pub const OVERSIZE: u16 = 4;
+}
+
+mod op {
+    pub const REQ_INSERT: u8 = 0x01;
+    pub const REQ_DELETE_MIN: u8 = 0x02;
+    pub const REQ_PEEK: u8 = 0x03;
+    pub const REQ_INSERT_BATCH: u8 = 0x04;
+    pub const REQ_DELETE_MIN_BATCH: u8 = 0x05;
+    pub const REQ_LEN: u8 = 0x06;
+    pub const REQ_SHUTDOWN: u8 = 0x0F;
+    pub const RESP_INSERT: u8 = 0x81;
+    pub const RESP_DELETE_MIN: u8 = 0x82;
+    pub const RESP_PEEK: u8 = 0x83;
+    pub const RESP_INSERT_BATCH: u8 = 0x84;
+    pub const RESP_DELETE_MIN_BATCH: u8 = 0x85;
+    pub const RESP_LEN: u8 = 0x86;
+    pub const RESP_SHUTDOWN: u8 = 0x8F;
+    pub const RESP_ERROR: u8 = 0xFF;
+}
+
+/// A decoded request frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Request {
+    /// `insert(key, value)`.
+    Insert {
+        /// Priority key.
+        key: u64,
+        /// Payload value.
+        value: u64,
+    },
+    /// `deleteMin()`.
+    DeleteMin,
+    /// Observe the (relaxed) minimum without removing it.
+    Peek,
+    /// Batched insert with per-item outcomes.
+    InsertBatch(Vec<(u64, u64)>),
+    /// Pop up to `n` (near-)minimal elements.
+    DeleteMinBatch(u32),
+    /// Approximate element count across all shards.
+    Len,
+    /// Stop the whole service after acknowledging.
+    Shutdown,
+}
+
+/// A decoded response frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Response {
+    /// Insert outcome (false = duplicate or rejected key).
+    Insert(bool),
+    /// deleteMin outcome.
+    DeleteMin(Option<(u64, u64)>),
+    /// Peek outcome (relaxed; `None` = empty or no cheap observation).
+    Peek(Option<u64>),
+    /// Per-item batched-insert outcomes.
+    InsertBatch(Vec<bool>),
+    /// Popped elements (possibly fewer than requested).
+    DeleteMinBatch(Vec<(u64, u64)>),
+    /// Approximate total element count.
+    Len(u64),
+    /// Shutdown acknowledged.
+    Shutdown,
+    /// Server-side protocol error; the connection closes after this.
+    Error {
+        /// One of the [`err`] codes.
+        code: u16,
+        /// Human-readable detail.
+        message: String,
+    },
+}
+
+// ------------------------------------------------------------- encoding
+
+fn begin_frame(out: &mut Vec<u8>) -> usize {
+    out.extend_from_slice(&[0u8; 4]);
+    let start = out.len();
+    out.push(PROTO_VERSION);
+    start
+}
+
+fn end_frame(out: &mut Vec<u8>, start: usize) {
+    let len = (out.len() - start) as u32;
+    out[start - 4..start].copy_from_slice(&len.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append one encoded request frame to `out`.
+pub fn encode_request(req: &Request, out: &mut Vec<u8>) {
+    let start = begin_frame(out);
+    match req {
+        Request::Insert { key, value } => {
+            out.push(op::REQ_INSERT);
+            put_u64(out, *key);
+            put_u64(out, *value);
+        }
+        Request::DeleteMin => out.push(op::REQ_DELETE_MIN),
+        Request::Peek => out.push(op::REQ_PEEK),
+        Request::InsertBatch(items) => {
+            out.push(op::REQ_INSERT_BATCH);
+            put_u32(out, items.len() as u32);
+            for &(k, v) in items {
+                put_u64(out, k);
+                put_u64(out, v);
+            }
+        }
+        Request::DeleteMinBatch(n) => {
+            out.push(op::REQ_DELETE_MIN_BATCH);
+            put_u32(out, *n);
+        }
+        Request::Len => out.push(op::REQ_LEN),
+        Request::Shutdown => out.push(op::REQ_SHUTDOWN),
+    }
+    end_frame(out, start);
+}
+
+/// Append one encoded response frame to `out`.
+pub fn encode_response(resp: &Response, out: &mut Vec<u8>) {
+    let start = begin_frame(out);
+    match resp {
+        Response::Insert(ok) => {
+            out.push(op::RESP_INSERT);
+            out.push(*ok as u8);
+        }
+        Response::DeleteMin(res) => {
+            out.push(op::RESP_DELETE_MIN);
+            match res {
+                Some((k, v)) => {
+                    out.push(1);
+                    put_u64(out, *k);
+                    put_u64(out, *v);
+                }
+                None => out.push(0),
+            }
+        }
+        Response::Peek(res) => {
+            out.push(op::RESP_PEEK);
+            match res {
+                Some(k) => {
+                    out.push(1);
+                    put_u64(out, *k);
+                }
+                None => out.push(0),
+            }
+        }
+        Response::InsertBatch(oks) => {
+            out.push(op::RESP_INSERT_BATCH);
+            put_u32(out, oks.len() as u32);
+            for &ok in oks {
+                out.push(ok as u8);
+            }
+        }
+        Response::DeleteMinBatch(items) => {
+            out.push(op::RESP_DELETE_MIN_BATCH);
+            put_u32(out, items.len() as u32);
+            for &(k, v) in items {
+                put_u64(out, k);
+                put_u64(out, v);
+            }
+        }
+        Response::Len(n) => {
+            out.push(op::RESP_LEN);
+            put_u64(out, *n);
+        }
+        Response::Shutdown => out.push(op::RESP_SHUTDOWN),
+        Response::Error { code, message } => {
+            out.push(op::RESP_ERROR);
+            put_u16(out, *code);
+            let msg = message.as_bytes();
+            let take = msg.len().min(u16::MAX as usize);
+            put_u16(out, take as u16);
+            out.extend_from_slice(&msg[..take]);
+        }
+    }
+    end_frame(out, start);
+}
+
+// ------------------------------------------------------------- decoding
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn u8(&mut self) -> Result<u8> {
+        let v = *self
+            .b
+            .get(self.i)
+            .ok_or_else(|| Error::Parse("frame payload truncated".into()))?;
+        self.i += 1;
+        Ok(v)
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        let end = self.i + 2;
+        let s = self
+            .b
+            .get(self.i..end)
+            .ok_or_else(|| Error::Parse("frame payload truncated".into()))?;
+        self.i = end;
+        Ok(u16::from_le_bytes([s[0], s[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let end = self.i + 4;
+        let s = self
+            .b
+            .get(self.i..end)
+            .ok_or_else(|| Error::Parse("frame payload truncated".into()))?;
+        self.i = end;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let end = self.i + 8;
+        let s = self
+            .b
+            .get(self.i..end)
+            .ok_or_else(|| Error::Parse("frame payload truncated".into()))?;
+        self.i = end;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(s);
+        Ok(u64::from_le_bytes(a))
+    }
+
+    fn finish(&self) -> Result<()> {
+        if self.i != self.b.len() {
+            return Err(Error::Parse(format!(
+                "frame has {} trailing payload byte(s)",
+                self.b.len() - self.i
+            )));
+        }
+        Ok(())
+    }
+
+    fn batch_count(&mut self) -> Result<usize> {
+        let n = self.u32()? as usize;
+        if n > MAX_BATCH {
+            return Err(Error::Parse(format!("batch of {n} exceeds MAX_BATCH ({MAX_BATCH})")));
+        }
+        Ok(n)
+    }
+}
+
+/// Split the next frame's payload off `buf`: `Ok(None)` when the buffer
+/// holds only part of a frame so far, `Err` on an impossible length.
+fn next_payload(buf: &[u8]) -> Result<Option<(&[u8], usize)>> {
+    if buf.len() < 4 {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]) as usize;
+    if len < 2 {
+        return Err(Error::Parse(format!("frame length {len} below version+opcode minimum")));
+    }
+    if len > MAX_FRAME_LEN {
+        return Err(Error::Parse(format!("frame length {len} exceeds MAX_FRAME_LEN")));
+    }
+    if buf.len() < 4 + len {
+        return Ok(None);
+    }
+    Ok(Some((&buf[4..4 + len], 4 + len)))
+}
+
+fn check_version(c: &mut Cursor<'_>) -> Result<u8> {
+    let version = c.u8()?;
+    if version != PROTO_VERSION {
+        return Err(Error::Parse(format!(
+            "unsupported protocol version {version} (expected {PROTO_VERSION})"
+        )));
+    }
+    c.u8()
+}
+
+/// Decode the next request frame from `buf`. Returns the request and the
+/// total bytes consumed (header + payload), or `Ok(None)` when the frame
+/// is not yet complete.
+pub fn decode_request(buf: &[u8]) -> Result<Option<(Request, usize)>> {
+    let (payload, used) = match next_payload(buf)? {
+        Some(x) => x,
+        None => return Ok(None),
+    };
+    let mut c = Cursor { b: payload, i: 0 };
+    let opcode = check_version(&mut c)?;
+    let req = match opcode {
+        op::REQ_INSERT => Request::Insert {
+            key: c.u64()?,
+            value: c.u64()?,
+        },
+        op::REQ_DELETE_MIN => Request::DeleteMin,
+        op::REQ_PEEK => Request::Peek,
+        op::REQ_INSERT_BATCH => {
+            let n = c.batch_count()?;
+            let mut items = Vec::with_capacity(n);
+            for _ in 0..n {
+                let k = c.u64()?;
+                let v = c.u64()?;
+                items.push((k, v));
+            }
+            Request::InsertBatch(items)
+        }
+        op::REQ_DELETE_MIN_BATCH => {
+            let n = c.u32()?;
+            if n as usize > MAX_BATCH {
+                return Err(Error::Parse(format!(
+                    "deleteMin batch of {n} exceeds MAX_BATCH ({MAX_BATCH})"
+                )));
+            }
+            Request::DeleteMinBatch(n)
+        }
+        op::REQ_LEN => Request::Len,
+        op::REQ_SHUTDOWN => Request::Shutdown,
+        other => return Err(Error::Parse(format!("unknown request opcode {other:#04x}"))),
+    };
+    c.finish()?;
+    Ok(Some((req, used)))
+}
+
+/// Decode the next response frame from `buf` (see [`decode_request`]).
+pub fn decode_response(buf: &[u8]) -> Result<Option<(Response, usize)>> {
+    let (payload, used) = match next_payload(buf)? {
+        Some(x) => x,
+        None => return Ok(None),
+    };
+    let mut c = Cursor { b: payload, i: 0 };
+    let opcode = check_version(&mut c)?;
+    let resp = match opcode {
+        op::RESP_INSERT => Response::Insert(c.u8()? != 0),
+        op::RESP_DELETE_MIN => {
+            if c.u8()? != 0 {
+                let k = c.u64()?;
+                let v = c.u64()?;
+                Response::DeleteMin(Some((k, v)))
+            } else {
+                Response::DeleteMin(None)
+            }
+        }
+        op::RESP_PEEK => {
+            if c.u8()? != 0 {
+                Response::Peek(Some(c.u64()?))
+            } else {
+                Response::Peek(None)
+            }
+        }
+        op::RESP_INSERT_BATCH => {
+            let n = c.batch_count()?;
+            let mut oks = Vec::with_capacity(n);
+            for _ in 0..n {
+                oks.push(c.u8()? != 0);
+            }
+            Response::InsertBatch(oks)
+        }
+        op::RESP_DELETE_MIN_BATCH => {
+            let n = c.batch_count()?;
+            let mut items = Vec::with_capacity(n);
+            for _ in 0..n {
+                let k = c.u64()?;
+                let v = c.u64()?;
+                items.push((k, v));
+            }
+            Response::DeleteMinBatch(items)
+        }
+        op::RESP_LEN => Response::Len(c.u64()?),
+        op::RESP_SHUTDOWN => Response::Shutdown,
+        op::RESP_ERROR => {
+            let code = c.u16()?;
+            let len = c.u16()? as usize;
+            let end = c.i + len;
+            let bytes = c
+                .b
+                .get(c.i..end)
+                .ok_or_else(|| Error::Parse("error frame truncated".into()))?;
+            c.i = end;
+            Response::Error {
+                code,
+                message: String::from_utf8_lossy(bytes).into_owned(),
+            }
+        }
+        other => return Err(Error::Parse(format!("unknown response opcode {other:#04x}"))),
+    };
+    c.finish()?;
+    Ok(Some((resp, used)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_requests() -> Vec<Request> {
+        vec![
+            Request::Insert { key: 7, value: 70 },
+            Request::DeleteMin,
+            Request::Peek,
+            Request::InsertBatch(vec![(1, 10), (2, 20), (u64::MAX - 1, 0)]),
+            Request::InsertBatch(Vec::new()),
+            Request::DeleteMinBatch(16),
+            Request::Len,
+            Request::Shutdown,
+        ]
+    }
+
+    fn all_responses() -> Vec<Response> {
+        vec![
+            Response::Insert(true),
+            Response::Insert(false),
+            Response::DeleteMin(Some((3, 30))),
+            Response::DeleteMin(None),
+            Response::Peek(Some(5)),
+            Response::Peek(None),
+            Response::InsertBatch(vec![true, false, true]),
+            Response::DeleteMinBatch(vec![(1, 10), (2, 20)]),
+            Response::DeleteMinBatch(Vec::new()),
+            Response::Len(42),
+            Response::Shutdown,
+            Response::Error {
+                code: err::MALFORMED,
+                message: "bad frame".into(),
+            },
+        ]
+    }
+
+    #[test]
+    fn request_roundtrip() {
+        for req in all_requests() {
+            let mut buf = Vec::new();
+            encode_request(&req, &mut buf);
+            let (back, used) = decode_request(&buf).unwrap().expect("complete frame");
+            assert_eq!(back, req);
+            assert_eq!(used, buf.len());
+        }
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        for resp in all_responses() {
+            let mut buf = Vec::new();
+            encode_response(&resp, &mut buf);
+            let (back, used) = decode_response(&buf).unwrap().expect("complete frame");
+            assert_eq!(back, resp);
+            assert_eq!(used, buf.len());
+        }
+    }
+
+    #[test]
+    fn pipelined_frames_decode_in_order() {
+        let reqs = all_requests();
+        let mut buf = Vec::new();
+        for r in &reqs {
+            encode_request(r, &mut buf);
+        }
+        let mut off = 0;
+        let mut decoded = Vec::new();
+        while let Some((r, used)) = decode_request(&buf[off..]).unwrap() {
+            decoded.push(r);
+            off += used;
+        }
+        assert_eq!(decoded, reqs);
+        assert_eq!(off, buf.len());
+    }
+
+    #[test]
+    fn every_truncation_is_incomplete_not_error() {
+        let mut buf = Vec::new();
+        encode_request(
+            &Request::InsertBatch(vec![(9, 90), (8, 80)]),
+            &mut buf,
+        );
+        for cut in 0..buf.len() {
+            assert!(
+                matches!(decode_request(&buf[..cut]), Ok(None)),
+                "prefix of {cut} bytes must be incomplete"
+            );
+        }
+    }
+
+    #[test]
+    fn garbage_rejected() {
+        // Impossible lengths.
+        assert!(decode_request(&0u32.to_le_bytes()).is_err());
+        assert!(decode_request(&((MAX_FRAME_LEN as u32 + 1).to_le_bytes())).is_err());
+        // Wrong version.
+        let mut buf = Vec::new();
+        encode_request(&Request::DeleteMin, &mut buf);
+        buf[4] = 99;
+        assert!(decode_request(&buf).is_err());
+        // Unknown opcode.
+        let mut buf = Vec::new();
+        encode_request(&Request::DeleteMin, &mut buf);
+        buf[5] = 0x7E;
+        assert!(decode_request(&buf).is_err());
+        // Trailing payload bytes.
+        let mut buf = Vec::new();
+        encode_request(&Request::DeleteMin, &mut buf);
+        let len = (buf.len() - 4 + 1) as u32;
+        buf[..4].copy_from_slice(&len.to_le_bytes());
+        buf.push(0xAB);
+        assert!(decode_request(&buf).is_err());
+        // Batch count pointing past the payload.
+        let mut buf = Vec::new();
+        encode_request(&Request::InsertBatch(vec![(1, 1)]), &mut buf);
+        buf[6..10].copy_from_slice(&5u32.to_le_bytes());
+        assert!(decode_request(&buf).is_err());
+        // Oversized batch count.
+        let mut buf = Vec::new();
+        encode_request(&Request::InsertBatch(vec![(1, 1)]), &mut buf);
+        buf[6..10].copy_from_slice(&((MAX_BATCH as u32) + 1).to_le_bytes());
+        assert!(decode_request(&buf).is_err());
+        // Responses reject garbage the same way.
+        let mut buf = Vec::new();
+        encode_response(&Response::Shutdown, &mut buf);
+        buf[5] = 0x22;
+        assert!(decode_response(&buf).is_err());
+    }
+
+    #[test]
+    fn error_message_truncates_at_u16() {
+        let long = "x".repeat(70_000);
+        let mut buf = Vec::new();
+        encode_response(
+            &Response::Error {
+                code: err::OVERSIZE,
+                message: long,
+            },
+            &mut buf,
+        );
+        let (back, _) = decode_response(&buf).unwrap().unwrap();
+        match back {
+            Response::Error { code, message } => {
+                assert_eq!(code, err::OVERSIZE);
+                assert_eq!(message.len(), u16::MAX as usize);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,700 @@
+//! The TCP priority-queue service: K key-range shards of any backend
+//! from the ten-backend registry, served by a fixed pool of handler
+//! threads.
+//!
+//! ## Sharding semantics
+//!
+//! Shard `i` owns the key interval `[1 + i * span, 1 + (i+1) * span)`
+//! where `span = key_span / shards`; the last shard is open-ended (keys
+//! at or above `key_span` all land there). Because the partition is
+//! *monotone in the key*, the global minimum always lives in the
+//! lowest-indexed non-empty shard — so deleteMin scans shards in index
+//! order and pops from the first one that yields an element. The
+//! guarantee is deliberately **relaxed min-of-shards**: a pop races
+//! concurrent inserts into lower shards exactly the way a SprayList pop
+//! races concurrent inserts below the spray window, and every returned
+//! element is a key that was live in *some* shard at the time of the
+//! scan. With a single quiesced client the scan is exact: elements drain
+//! in global key order (shard order ∘ per-shard order), which
+//! `tests/service.rs` pins for an exact backend.
+//!
+//! ## Connection handling = network combining
+//!
+//! Each handler reads whatever bytes are available, decodes *all*
+//! complete frames, and processes maximal runs of same-kind requests
+//! through the PR-3 batch entry points: pipelined inserts become one
+//! `insert_batch_each` per touched shard, pipelined deleteMins become
+//! one shard-ordered `delete_min_batch`. Responses are written back in
+//! request order as one vectored write. This is the Nuddle combining
+//! server's collect → combine → publish cycle with the request lines
+//! replaced by a socket buffer — and when the backend *is* Nuddle or
+//! SmartPQ-aware, the two combining layers stack.
+//!
+//! Connections are served by a **fixed pool** of `max_conns` handler
+//! threads (accepted sockets queue until a handler frees up), not a
+//! thread per connection. The pool is what makes delegation backends
+//! safe to serve: a Nuddle/SmartPQ client slot is consumed *per thread*
+//! for the life of the process (`ClientSlot::register` never recycles
+//! slots), so an unbounded handler-thread population would exhaust
+//! `max_clients` after enough connection churn — the pool caps slot
+//! usage at `max_conns` per shard, forever.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use crate::pq::traits::{ConcurrentPQ, KEY_MAX_SENTINEL};
+use crate::service::proto::{self, Request, Response};
+use crate::util::error::{Error, Result};
+use crate::workloads::driver::{build_queue, AdaptiveProbe, BuiltQueue};
+
+/// Default expected user-key upper bound for range sharding (keys above
+/// it are legal; they all land in the top shard).
+pub const DEFAULT_KEY_SPAN: u64 = 1 << 20;
+
+/// Service configuration.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Backend name (one of [`crate::workloads::ALL_BACKENDS`]).
+    pub backend: String,
+    /// Key-range shards (each its own backend instance).
+    pub shards: usize,
+    /// Expected user-key upper bound (shard-boundary scale).
+    pub key_span: u64,
+    /// Handler-pool size: at most this many connections are served
+    /// concurrently (accepted sockets beyond it wait for a free
+    /// handler). Also sizes delegation backends' client capacity — the
+    /// pool guarantees at most `max_conns` threads ever touch a shard,
+    /// so Nuddle/SmartPQ slot consumption stays bounded for the life of
+    /// the service (see the module docs).
+    pub max_conns: usize,
+    /// Bind address (`127.0.0.1:0` picks a free port).
+    pub addr: String,
+    /// Seed for backend construction.
+    pub seed: u64,
+    /// Decision tick for adaptive (SmartPQ) shards, milliseconds.
+    pub decision_interval_ms: u64,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            backend: "smartpq".to_string(),
+            shards: 2,
+            key_span: DEFAULT_KEY_SPAN,
+            max_conns: 64,
+            addr: "127.0.0.1:0".to_string(),
+            seed: 42,
+            decision_interval_ms: 50,
+        }
+    }
+}
+
+/// K backend instances composed into one key-range-sharded priority
+/// queue (see the module docs for the deleteMin guarantee).
+pub struct ShardedPq {
+    shards: Vec<BuiltQueue>,
+    /// Exclusive upper key bound per shard; the last entry is
+    /// `u64::MAX` (the top shard is open-ended).
+    bounds: Vec<u64>,
+}
+
+impl ShardedPq {
+    /// Build `cfg.shards` instances of `cfg.backend`.
+    pub fn new(cfg: &ServiceConfig) -> Result<ShardedPq> {
+        if cfg.shards == 0 {
+            return Err(Error::Config("service needs at least one shard".into()));
+        }
+        if cfg.key_span < cfg.shards as u64 {
+            return Err(Error::Config(format!(
+                "key_span {} smaller than shard count {}",
+                cfg.key_span, cfg.shards
+            )));
+        }
+        let mut shards = Vec::with_capacity(cfg.shards);
+        for i in 0..cfg.shards {
+            shards.push(build_queue(&cfg.backend, cfg.max_conns, cfg.seed + i as u64)?);
+        }
+        let span = cfg.key_span / cfg.shards as u64;
+        let bounds: Vec<u64> = (0..cfg.shards)
+            .map(|i| {
+                if i + 1 == cfg.shards {
+                    u64::MAX
+                } else {
+                    1 + (i as u64 + 1) * span
+                }
+            })
+            .collect();
+        Ok(ShardedPq { shards, bounds })
+    }
+
+    /// Shard count.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Which shard owns `key`.
+    pub fn shard_of(&self, key: u64) -> usize {
+        self.bounds
+            .iter()
+            .position(|&b| key < b)
+            .unwrap_or(self.shards.len() - 1)
+    }
+
+    /// Batched insert with per-item outcomes, grouped by shard so each
+    /// shard sees one `insert_batch_each` call per sweep.
+    pub fn insert_batch_each(&self, items: &[(u64, u64)], ok: &mut [bool]) -> usize {
+        debug_assert!(ok.len() >= items.len());
+        if self.shards.len() == 1 {
+            return self.shards[0].queue.insert_batch_each(items, ok);
+        }
+        let mut per: Vec<Vec<(usize, (u64, u64))>> = vec![Vec::new(); self.shards.len()];
+        for (i, &kv) in items.iter().enumerate() {
+            per[self.shard_of(kv.0)].push((i, kv));
+        }
+        let mut n = 0;
+        for (s, list) in per.iter().enumerate() {
+            if list.is_empty() {
+                continue;
+            }
+            let sub: Vec<(u64, u64)> = list.iter().map(|&(_, kv)| kv).collect();
+            let mut sub_ok = vec![false; sub.len()];
+            self.shards[s].queue.insert_batch_each(&sub, &mut sub_ok);
+            for (j, &(i, _)) in list.iter().enumerate() {
+                ok[i] = sub_ok[j];
+                if sub_ok[j] {
+                    n += 1;
+                }
+            }
+        }
+        n
+    }
+
+    /// Scalar insert (routes to the owning shard).
+    pub fn insert(&self, key: u64, value: u64) -> bool {
+        let mut ok = [false];
+        self.insert_batch_each(&[(key, value)], &mut ok) == 1
+    }
+
+    /// Relaxed min-of-shards deleteMin: scan shards in key order, pop
+    /// from the first that yields.
+    pub fn delete_min(&self) -> Option<(u64, u64)> {
+        for s in &self.shards {
+            if let Some(kv) = s.queue.delete_min() {
+                return Some(kv);
+            }
+        }
+        None
+    }
+
+    /// Batched relaxed deleteMin: one `delete_min_batch` per shard in
+    /// key order until `n` elements are collected (or every shard
+    /// reported empty).
+    pub fn delete_min_batch(&self, n: usize, out: &mut Vec<(u64, u64)>) -> usize {
+        let mut got = 0;
+        for s in &self.shards {
+            if got >= n {
+                break;
+            }
+            got += s.queue.delete_min_batch(n - got, out);
+        }
+        got
+    }
+
+    /// Relaxed peek: the smallest `peek_min_hint` any shard offers
+    /// (`None` when no shard has a cheap observation or all look empty).
+    pub fn peek_min(&self) -> Option<u64> {
+        let mut best: Option<u64> = None;
+        for s in &self.shards {
+            if let Some(k) = s.queue.peek_min_hint() {
+                if k != KEY_MAX_SENTINEL && best.map_or(true, |b| k < b) {
+                    best = Some(k);
+                }
+            }
+        }
+        best
+    }
+
+    /// Approximate total element count.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.queue.len()).sum()
+    }
+
+    /// True when every shard reports empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Adaptive observation handles of every SmartPQ shard (empty for
+    /// static backends).
+    pub fn adaptive_probes(&self) -> Vec<Arc<dyn AdaptiveProbe>> {
+        self.shards
+            .iter()
+            .filter_map(|s| s.adaptive.as_ref().map(Arc::clone))
+            .collect()
+    }
+}
+
+struct ServiceShared {
+    stop: AtomicBool,
+    addr: SocketAddr,
+}
+
+impl ServiceShared {
+    /// Flag the service stopped and poke the accept loop awake.
+    fn request_stop(&self) {
+        self.stop.store(true, Ordering::Release);
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+/// A running service: owns the shards, the accept loop, the fixed
+/// handler pool, and (for adaptive backends) the decision monitor.
+pub struct PqService {
+    addr: SocketAddr,
+    shared: Arc<ServiceShared>,
+    sharded: Arc<ShardedPq>,
+    probes: Vec<Arc<dyn AdaptiveProbe>>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    monitor: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl PqService {
+    /// Bind, spawn the accept loop, and return the running service.
+    pub fn start(cfg: ServiceConfig) -> Result<PqService> {
+        let sharded = Arc::new(ShardedPq::new(&cfg)?);
+        let listener = TcpListener::bind(&cfg.addr)?;
+        let addr = listener.local_addr()?;
+        let shared = Arc::new(ServiceShared {
+            stop: AtomicBool::new(false),
+            addr,
+        });
+        let probes = sharded.adaptive_probes();
+        let monitor = if probes.is_empty() {
+            None
+        } else {
+            let probes = probes.clone();
+            let shared = Arc::clone(&shared);
+            let tick = Duration::from_millis(cfg.decision_interval_ms.max(1));
+            Some(
+                std::thread::Builder::new()
+                    .name("pq-service-monitor".into())
+                    .spawn(move || {
+                        while !shared.stop.load(Ordering::Acquire) {
+                            std::thread::sleep(tick);
+                            for p in &probes {
+                                p.probe_decide();
+                            }
+                        }
+                    })
+                    .expect("spawn service monitor"),
+            )
+        };
+        // Fixed handler pool fed by the accept loop over a channel: the
+        // receiving end is shared behind a mutex, so exactly one idle
+        // worker waits on it at a time. When the accept loop exits the
+        // sender drops and every idle worker's recv errors out — the
+        // pool's shutdown signal.
+        let (conn_tx, conn_rx) = mpsc::channel::<TcpStream>();
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        let pool = cfg.max_conns.max(1);
+        let mut workers = Vec::with_capacity(pool);
+        for w in 0..pool {
+            let conn_rx = Arc::clone(&conn_rx);
+            let shared = Arc::clone(&shared);
+            let sharded = Arc::clone(&sharded);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("pq-service-worker-{w}"))
+                    .spawn(move || loop {
+                        let stream = {
+                            let rx = conn_rx.lock().expect("worker rx lock");
+                            rx.recv()
+                        };
+                        match stream {
+                            Ok(s) => handle_conn(s, &sharded, &shared),
+                            Err(_) => return, // accept loop gone: stopping
+                        }
+                    })
+                    .expect("spawn service worker"),
+            );
+        }
+        let accept = {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("pq-service-accept".into())
+                .spawn(move || {
+                    for stream in listener.incoming() {
+                        if shared.stop.load(Ordering::Acquire) {
+                            break;
+                        }
+                        if let Ok(s) = stream {
+                            let _ = conn_tx.send(s);
+                        }
+                    }
+                })
+                .expect("spawn accept loop")
+        };
+        Ok(PqService {
+            addr,
+            shared,
+            sharded,
+            probes,
+            accept: Some(accept),
+            monitor,
+            workers,
+        })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Approximate elements across all shards.
+    pub fn queue_len(&self) -> usize {
+        self.sharded.len()
+    }
+
+    /// Total SmartPQ mode switches across adaptive shards (0 for static
+    /// backends).
+    pub fn adaptive_switches(&self) -> u64 {
+        self.probes.iter().map(|p| p.probe_switches()).sum()
+    }
+
+    /// Ask the service to stop (idempotent; also triggered by a
+    /// [`Request::Shutdown`] frame from any client).
+    pub fn shutdown(&self) {
+        self.shared.request_stop();
+    }
+
+    /// Block until the service stops (a Shutdown frame arrives or
+    /// [`PqService::shutdown`] is called), then join every thread.
+    pub fn wait(mut self) {
+        self.join_all();
+    }
+
+    fn join_all(&mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.monitor.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for PqService {
+    fn drop(&mut self) {
+        self.shared.request_stop();
+        self.join_all();
+    }
+}
+
+/// Handler read granularity; also bounds the per-read request batch.
+const READ_CHUNK: usize = 16 * 1024;
+
+fn handle_conn(mut stream: TcpStream, sharded: &ShardedPq, shared: &ServiceShared) {
+    let _ = stream.set_nodelay(true);
+    // A finite read timeout keeps handlers responsive to shutdown even
+    // when their client holds the connection open silently.
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
+    let mut rbuf: Vec<u8> = Vec::with_capacity(READ_CHUNK);
+    let mut wbuf: Vec<u8> = Vec::with_capacity(READ_CHUNK);
+    let mut chunk = [0u8; READ_CHUNK];
+    let mut reqs: Vec<Request> = Vec::new();
+    loop {
+        if shared.stop.load(Ordering::Acquire) {
+            return;
+        }
+        let n = match stream.read(&mut chunk) {
+            Ok(0) => return,
+            Ok(n) => n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) =>
+            {
+                continue
+            }
+            Err(_) => return,
+        };
+        rbuf.extend_from_slice(&chunk[..n]);
+        reqs.clear();
+        let mut off = 0;
+        loop {
+            match proto::decode_request(&rbuf[off..]) {
+                Ok(Some((req, used))) => {
+                    reqs.push(req);
+                    off += used;
+                }
+                Ok(None) => break,
+                Err(e) => {
+                    // Garbage on the wire: answer with one error frame
+                    // and drop the connection.
+                    wbuf.clear();
+                    proto::encode_response(
+                        &Response::Error {
+                            code: proto::err::MALFORMED,
+                            message: e.to_string(),
+                        },
+                        &mut wbuf,
+                    );
+                    let _ = stream.write_all(&wbuf);
+                    return;
+                }
+            }
+        }
+        rbuf.drain(..off);
+        if reqs.is_empty() {
+            continue;
+        }
+        wbuf.clear();
+        let shutdown = process_requests(sharded, &reqs, &mut wbuf);
+        if stream.write_all(&wbuf).is_err() {
+            return;
+        }
+        if shutdown {
+            shared.request_stop();
+            return;
+        }
+    }
+}
+
+/// True when the request is insert-shaped (fusable into one batch).
+fn is_insert(r: &Request) -> bool {
+    matches!(r, Request::Insert { .. } | Request::InsertBatch(_))
+}
+
+/// True when the request is deleteMin-shaped.
+fn is_delete(r: &Request) -> bool {
+    matches!(r, Request::DeleteMin | Request::DeleteMinBatch(_))
+}
+
+/// Execute a decoded request batch in order, fusing same-kind runs
+/// through the bulk entry points; returns true when a Shutdown was
+/// served (the caller stops the service after writing the responses).
+pub fn process_requests(sharded: &ShardedPq, reqs: &[Request], out: &mut Vec<u8>) -> bool {
+    let mut shutdown = false;
+    let mut i = 0;
+    while i < reqs.len() {
+        if is_insert(&reqs[i]) {
+            i = serve_insert_run(sharded, reqs, i, out);
+        } else if is_delete(&reqs[i]) {
+            i = serve_delete_run(sharded, reqs, i, out);
+        } else {
+            match &reqs[i] {
+                Request::Peek => {
+                    proto::encode_response(&Response::Peek(sharded.peek_min()), out);
+                }
+                Request::Len => {
+                    proto::encode_response(&Response::Len(sharded.len() as u64), out);
+                }
+                Request::Shutdown => {
+                    proto::encode_response(&Response::Shutdown, out);
+                    shutdown = true;
+                }
+                // Insert/delete kinds are handled by the run servers.
+                _ => unreachable!("covered by the run dispatch"),
+            }
+            i += 1;
+        }
+    }
+    shutdown
+}
+
+/// Serve the maximal insert run starting at `start`; returns the index
+/// past the run.
+fn serve_insert_run(sharded: &ShardedPq, reqs: &[Request], start: usize, out: &mut Vec<u8>) -> usize {
+    let mut end = start;
+    let mut flat: Vec<(u64, u64)> = Vec::new();
+    // (is_batch, item_count) per request, to scatter outcomes back.
+    let mut spans: Vec<(bool, usize)> = Vec::new();
+    while end < reqs.len() {
+        match &reqs[end] {
+            Request::Insert { key, value } => {
+                flat.push((*key, *value));
+                spans.push((false, 1));
+            }
+            Request::InsertBatch(items) => {
+                flat.extend_from_slice(items);
+                spans.push((true, items.len()));
+            }
+            _ => break,
+        }
+        end += 1;
+    }
+    let mut ok = vec![false; flat.len()];
+    sharded.insert_batch_each(&flat, &mut ok);
+    let mut off = 0;
+    for (is_batch, len) in spans {
+        if is_batch {
+            proto::encode_response(&Response::InsertBatch(ok[off..off + len].to_vec()), out);
+        } else {
+            proto::encode_response(&Response::Insert(ok[off]), out);
+        }
+        off += len;
+    }
+    end
+}
+
+/// Serve the maximal deleteMin run starting at `start`: one combined
+/// shard-ordered pop covers every request of the run; popped elements
+/// are dealt to the requests in order (requests past the pop shortfall
+/// observe an empty queue, exactly like a scalar pop racing a drain).
+fn serve_delete_run(sharded: &ShardedPq, reqs: &[Request], start: usize, out: &mut Vec<u8>) -> usize {
+    let mut end = start;
+    let mut want_total = 0usize;
+    while end < reqs.len() {
+        match &reqs[end] {
+            Request::DeleteMin => want_total += 1,
+            Request::DeleteMinBatch(n) => want_total += *n as usize,
+            _ => break,
+        }
+        end += 1;
+    }
+    let mut popped: Vec<(u64, u64)> = Vec::with_capacity(want_total.min(proto::MAX_BATCH));
+    sharded.delete_min_batch(want_total, &mut popped);
+    let mut cursor = 0usize;
+    for req in &reqs[start..end] {
+        match req {
+            Request::DeleteMin => {
+                let r = popped.get(cursor).copied();
+                if r.is_some() {
+                    cursor += 1;
+                }
+                proto::encode_response(&Response::DeleteMin(r), out);
+            }
+            Request::DeleteMinBatch(n) => {
+                let take = (*n as usize).min(popped.len() - cursor);
+                let items = popped[cursor..cursor + take].to_vec();
+                cursor += take;
+                proto::encode_response(&Response::DeleteMinBatch(items), out);
+            }
+            _ => unreachable!("run bounded above"),
+        }
+    }
+    end
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(backend: &str, shards: usize) -> ServiceConfig {
+        ServiceConfig {
+            backend: backend.to_string(),
+            shards,
+            key_span: 1_000,
+            max_conns: 8,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn shard_routing_is_monotone_in_key() {
+        let s = ShardedPq::new(&cfg("lotan_shavit", 4)).unwrap();
+        assert_eq!(s.shard_count(), 4);
+        let mut prev = 0;
+        for key in [1u64, 249, 251, 499, 501, 749, 751, 999, 5_000, u64::MAX - 1] {
+            let shard = s.shard_of(key);
+            assert!(shard >= prev, "key {key}: shard {shard} < {prev}");
+            prev = shard;
+        }
+        // Keys beyond key_span land in the open-ended top shard.
+        assert_eq!(s.shard_of(1_000_000), 3);
+    }
+
+    #[test]
+    fn sharded_insert_and_min_of_shards_pop() {
+        let s = ShardedPq::new(&cfg("lotan_shavit", 4)).unwrap();
+        let keys = [800u64, 10, 400, 600, 300, 990, 2, 5_000];
+        for &k in &keys {
+            assert!(s.insert(k, k * 2), "insert {k}");
+        }
+        assert!(!s.insert(400, 0), "duplicate accepted");
+        assert_eq!(s.len(), keys.len());
+        // Exact backend + quiesced access: global key order across shards.
+        let mut got = Vec::new();
+        while let Some((k, v)) = s.delete_min() {
+            assert_eq!(v, k * 2);
+            got.push(k);
+        }
+        let mut want = keys.to_vec();
+        want.sort_unstable();
+        assert_eq!(got, want);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn sentinel_keys_fail_per_item() {
+        let s = ShardedPq::new(&cfg("multiqueue", 2)).unwrap();
+        let mut ok = [false; 3];
+        assert_eq!(s.insert_batch_each(&[(0, 0), (7, 70), (u64::MAX, 0)], &mut ok), 1);
+        assert_eq!(ok, [false, true, false]);
+    }
+
+    #[test]
+    fn process_requests_fuses_runs_and_preserves_order() {
+        let s = ShardedPq::new(&cfg("lotan_shavit", 2)).unwrap();
+        let reqs = vec![
+            Request::Insert { key: 5, value: 50 },
+            Request::InsertBatch(vec![(900, 1), (3, 30)]),
+            Request::Insert { key: 5, value: 51 }, // duplicate
+            Request::Peek,
+            Request::DeleteMin,
+            Request::DeleteMinBatch(10),
+            Request::DeleteMin, // drained by now
+            Request::Len,
+        ];
+        let mut wire = Vec::new();
+        assert!(!process_requests(&s, &reqs, &mut wire));
+        let mut resps = Vec::new();
+        let mut off = 0;
+        while let Some((r, used)) = proto::decode_response(&wire[off..]).unwrap() {
+            resps.push(r);
+            off += used;
+        }
+        assert_eq!(off, wire.len());
+        assert_eq!(
+            resps,
+            vec![
+                Response::Insert(true),
+                Response::InsertBatch(vec![true, true]),
+                Response::Insert(false),
+                Response::Peek(Some(3)),
+                Response::DeleteMin(Some((3, 30))),
+                Response::DeleteMinBatch(vec![(5, 50), (900, 1)]),
+                Response::DeleteMin(None),
+                Response::Len(0),
+            ]
+        );
+    }
+
+    #[test]
+    fn shutdown_request_flags_the_sweep() {
+        let s = ShardedPq::new(&cfg("lotan_shavit", 1)).unwrap();
+        let mut wire = Vec::new();
+        assert!(process_requests(&s, &[Request::Shutdown], &mut wire));
+        let (r, _) = proto::decode_response(&wire).unwrap().unwrap();
+        assert_eq!(r, Response::Shutdown);
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        assert!(ShardedPq::new(&cfg("lotan_shavit", 0)).is_err());
+        assert!(ShardedPq::new(&cfg("bogus", 2)).is_err());
+        let mut c = cfg("lotan_shavit", 4);
+        c.key_span = 2;
+        assert!(ShardedPq::new(&c).is_err());
+    }
+}

@@ -1,0 +1,266 @@
+//! Log-bucketed latency histogram (an offline, allocation-light HDR
+//! histogram substitute).
+//!
+//! Values (nanoseconds by convention) are binned into buckets whose width
+//! grows geometrically: exact below [`SUB_BUCKETS`], then `SUB_BUCKETS`
+//! sub-buckets per power of two, giving a worst-case relative error of
+//! `1 / SUB_BUCKETS` (~3%) at any magnitude — the classic trade that
+//! makes p50/p99/p999 cheap to maintain from hot paths. All counters are
+//! relaxed atomics, so one [`LatencyHist`] can be shared by every worker
+//! of a benchmark run (the service load generator, the SSSP/DES drivers)
+//! without locks; quantiles are computed from an immutable
+//! [`HistSnapshot`], and two snapshots can be differenced to get the
+//! distribution of a single monitoring interval (the `lat_p50`/`lat_p99`
+//! columns of `app_*_trace.csv`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Sub-buckets per power of two (resolution: ~1/32 relative error).
+pub const SUB_BUCKETS: usize = 32;
+const SUB_BITS: u32 = SUB_BUCKETS.trailing_zeros();
+/// Octaves above the exact range (values up to `u64::MAX` representable).
+const OCTAVES: usize = 64 - SUB_BITS as usize;
+/// Total bucket count.
+pub const N_BUCKETS: usize = SUB_BUCKETS + OCTAVES * SUB_BUCKETS;
+
+/// Bucket index for a value: exact below [`SUB_BUCKETS`], then
+/// `(octave, sub-bucket)` from the top `SUB_BITS + 1` significant bits.
+#[inline]
+fn bucket_of(v: u64) -> usize {
+    if v < SUB_BUCKETS as u64 {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros(); // >= SUB_BITS
+    let octave = (msb - SUB_BITS) as usize;
+    let sub = ((v >> (msb - SUB_BITS)) & (SUB_BUCKETS as u64 - 1)) as usize;
+    SUB_BUCKETS + octave * SUB_BUCKETS + sub
+}
+
+/// Smallest value mapping to bucket `idx` (the value quantiles report, so
+/// every reported quantile is a value that was actually recordable).
+#[inline]
+fn bucket_floor(idx: usize) -> u64 {
+    if idx < SUB_BUCKETS {
+        return idx as u64;
+    }
+    let octave = (idx - SUB_BUCKETS) / SUB_BUCKETS;
+    let sub = ((idx - SUB_BUCKETS) % SUB_BUCKETS) as u64;
+    (SUB_BUCKETS as u64 + sub) << octave
+}
+
+/// A concurrent log-bucketed histogram (see module docs).
+#[derive(Debug)]
+pub struct LatencyHist {
+    counts: Box<[AtomicU64]>,
+    total: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        LatencyHist::new()
+    }
+}
+
+impl LatencyHist {
+    /// Fresh empty histogram.
+    pub fn new() -> LatencyHist {
+        LatencyHist {
+            counts: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            total: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one value (nanoseconds by convention). Relaxed atomics:
+    /// safe from any thread, never a synchronization point.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.counts[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.total.fetch_add(1, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Recorded samples so far.
+    pub fn count(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    /// Largest recorded value.
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Immutable copy of the current counts (quantile queries and
+    /// interval differencing happen on snapshots).
+    pub fn snapshot(&self) -> HistSnapshot {
+        let counts: Vec<u64> = self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        let total = counts.iter().sum();
+        HistSnapshot { counts, total }
+    }
+
+    /// Convenience: quantile over the current contents.
+    pub fn quantile(&self, q: f64) -> u64 {
+        self.snapshot().quantile(q)
+    }
+}
+
+/// A point-in-time copy of a [`LatencyHist`]'s counts.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct HistSnapshot {
+    counts: Vec<u64>,
+    total: u64,
+}
+
+impl HistSnapshot {
+    /// Samples in the snapshot.
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Per-bucket difference `self - earlier` (saturating): the
+    /// distribution of everything recorded between the two snapshots.
+    pub fn diff(&self, earlier: &HistSnapshot) -> HistSnapshot {
+        let counts: Vec<u64> = self
+            .counts
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| c.saturating_sub(earlier.counts.get(i).copied().unwrap_or(0)))
+            .collect();
+        let total = counts.iter().sum();
+        HistSnapshot { counts, total }
+    }
+
+    /// Value at quantile `q` in `[0, 1]` (lower bucket bound, i.e. a
+    /// value `<=` the true quantile with at most ~3% relative error).
+    /// Returns 0 for an empty snapshot.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return bucket_floor(i);
+            }
+        }
+        bucket_floor(self.counts.len().saturating_sub(1))
+    }
+
+    /// Median.
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    /// 99th percentile.
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    /// 99.9th percentile.
+    pub fn p999(&self) -> u64 {
+        self.quantile(0.999)
+    }
+}
+
+/// Nanoseconds → microseconds for report columns.
+#[inline]
+pub fn ns_to_us(ns: u64) -> f64 {
+    ns as f64 / 1e3
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_mapping_is_monotone_and_exact_below_sub() {
+        for v in 0..SUB_BUCKETS as u64 {
+            assert_eq!(bucket_of(v), v as usize);
+            assert_eq!(bucket_floor(bucket_of(v)), v);
+        }
+        let mut prev = 0usize;
+        for shift in 0..60 {
+            let v = 37u64 << shift;
+            let b = bucket_of(v);
+            assert!(b >= prev, "bucket order broke at {v}");
+            prev = b;
+            assert!(bucket_floor(b) <= v, "floor above value at {v}");
+        }
+        assert!(bucket_of(u64::MAX) < N_BUCKETS);
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        for v in [100u64, 999, 12_345, 1 << 20, (1 << 40) + 12_345] {
+            let floor = bucket_floor(bucket_of(v));
+            assert!(floor <= v);
+            let err = (v - floor) as f64 / v as f64;
+            assert!(err <= 1.0 / SUB_BUCKETS as f64 + 1e-12, "{v}: err {err}");
+        }
+    }
+
+    #[test]
+    fn quantiles_of_known_distribution() {
+        let h = LatencyHist::new();
+        // 0..=29 (exact range): p50 over 30 uniform values = 14.
+        for v in 0..30u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 30);
+        assert_eq!(h.quantile(0.0), 0);
+        assert_eq!(h.quantile(0.5), 14);
+        assert_eq!(h.quantile(1.0), 29);
+        assert_eq!(h.max(), 29);
+    }
+
+    #[test]
+    fn empty_histogram_reports_zero() {
+        let h = LatencyHist::new();
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.snapshot().p99(), 0);
+        assert_eq!(h.count(), 0);
+    }
+
+    #[test]
+    fn tail_quantiles_order() {
+        let h = LatencyHist::new();
+        for i in 0..1000u64 {
+            h.record(i * 100); // 0 .. ~100us
+        }
+        let s = h.snapshot();
+        assert!(s.p50() <= s.p99());
+        assert!(s.p99() <= s.p999());
+        assert!(s.p999() <= h.max());
+        // p99 of a uniform 0..100_000 distribution sits near 99_000;
+        // allow one bucket (~3%) of slack.
+        assert!(s.p99() >= 94_000, "p99 = {}", s.p99());
+    }
+
+    #[test]
+    fn snapshot_diff_isolates_an_interval() {
+        let h = LatencyHist::new();
+        h.record(10);
+        h.record(20);
+        let a = h.snapshot();
+        h.record(1_000);
+        h.record(1_000);
+        h.record(1_000);
+        let b = h.snapshot();
+        let d = b.diff(&a);
+        assert_eq!(d.total(), 3);
+        // All interval samples live in the 1_000 bucket.
+        assert_eq!(d.p50(), bucket_floor(bucket_of(1_000)));
+        // Diff against an empty (default) snapshot is the identity.
+        let id = b.diff(&HistSnapshot::default());
+        assert_eq!(id.total(), b.total());
+        assert_eq!(id.p50(), b.p50());
+    }
+
+    #[test]
+    fn ns_to_us_scales() {
+        assert!((ns_to_us(1_500) - 1.5).abs() < 1e-12);
+    }
+}

@@ -3,6 +3,7 @@
 
 pub mod cli;
 pub mod error;
+pub mod hist;
 pub mod json;
 pub mod logging;
 pub mod proptest;

@@ -34,7 +34,7 @@ use std::time::{Duration, Instant};
 
 use crate::pq::traits::ConcurrentPQ;
 use crate::util::rng::Rng;
-use crate::workloads::trace::LiveCounters;
+use crate::workloads::trace::{timed_op, LiveCounters};
 
 /// Bits reserved for the uniqueness sequence in an event key.
 const SEQ_BITS: u32 = 32;
@@ -219,7 +219,7 @@ pub fn phold(q: Arc<dyn ConcurrentPQ>, cfg: &DesConfig) -> DesRun {
                         if cursor == buf.len() {
                             buf.clear();
                             cursor = 0;
-                            q.delete_min_batch(batch, &mut buf);
+                            timed_op(&live, || q.delete_min_batch(batch, &mut buf));
                         }
                         match buf.get(cursor).copied() {
                             Some((key, _lp)) => {
@@ -247,7 +247,8 @@ pub fn phold(q: Arc<dyn ConcurrentPQ>, cfg: &DesConfig) -> DesRun {
                                         seq.fetch_add(1, Ordering::Relaxed),
                                     );
                                     pending.fetch_add(1, Ordering::AcqRel);
-                                    if q.insert(key, next_lp) {
+                                    let ins_ok = timed_op(&live, || q.insert(key, next_lp));
+                                    if ins_ok {
                                         c.created += 1;
                                         if let Some(live) = &live {
                                             live.record_insert();

@@ -24,6 +24,7 @@ use crate::pq::skiplist::herlihy::HerlihySkipList;
 use crate::pq::traits::ConcurrentPQ;
 use crate::pq::{LotanShavitPQ, MultiQueue, SprayList};
 use crate::util::error::{Error, Result};
+use crate::util::hist::{ns_to_us, HistSnapshot};
 use crate::workloads::des::{phold, DesConfig, DesRun};
 use crate::workloads::graph::{Graph, GraphKind};
 use crate::workloads::sssp::{parallel_sssp, SsspConfig, SsspRun};
@@ -209,6 +210,11 @@ pub struct TracePoint {
     pub active_threads: usize,
     /// Queue ops completed since the previous sample.
     pub ops: u64,
+    /// Median queue-op round-trip latency over the bucket, µs (0 when
+    /// the bucket saw no ops).
+    pub lat_p50_us: f64,
+    /// 99th-percentile queue-op latency over the bucket, µs.
+    pub lat_p99_us: f64,
 }
 
 /// Which application workload to run.
@@ -278,6 +284,10 @@ pub struct AppResult {
     pub wasted_pct: f64,
     /// Out-of-priority-order deliveries / pops.
     pub inversion_pct: f64,
+    /// Median queue-op round-trip latency over the whole run, µs.
+    pub lat_p50_us: f64,
+    /// 99th-percentile queue-op latency over the whole run, µs.
+    pub lat_p99_us: f64,
     /// Oracle / conservation check passed.
     pub verified: bool,
     /// SmartPQ mode switches (0 for static backends).
@@ -290,11 +300,23 @@ pub struct AppResult {
 }
 
 /// Cumulative counter state the sampler threads between ticks.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 struct SampleState {
     inserts: u64,
     pops: u64,
     insert_frac: f64,
+    hist: HistSnapshot,
+}
+
+impl SampleState {
+    fn initial() -> SampleState {
+        SampleState {
+            inserts: 0,
+            pops: 0,
+            insert_frac: 1.0,
+            hist: HistSnapshot::default(),
+        }
+    }
 }
 
 /// Take one trace sample: probe the adaptive mode cell (if any) and fold
@@ -315,10 +337,13 @@ fn sample_point(
     } else {
         d_ins as f64 / (d_ins + d_pops) as f64
     };
+    let hist = counters.hist_snapshot();
+    let interval = hist.diff(&prev.hist);
     *prev = SampleState {
         inserts: ins,
         pops,
         insert_frac,
+        hist,
     };
     let (mode, switches) = match probe {
         Some(p) => (p.probe_mode(), p.probe_switches()),
@@ -332,6 +357,8 @@ fn sample_point(
         queue_len: queue.len() as u64,
         active_threads: active,
         ops: d_ins + d_pops,
+        lat_p50_us: ns_to_us(interval.p50()),
+        lat_p99_us: ns_to_us(interval.p99()),
     }
 }
 
@@ -355,11 +382,7 @@ fn run_traced<R>(
         let counters = Arc::clone(counters);
         std::thread::spawn(move || {
             let mut trace = Vec::new();
-            let mut prev = SampleState {
-                inserts: 0,
-                pops: 0,
-                insert_frac: 1.0,
-            };
+            let mut prev = SampleState::initial();
             while !stop.load(Ordering::Acquire) {
                 std::thread::sleep(interval);
                 if let Some(p) = &probe {
@@ -397,12 +420,20 @@ fn run_traced<R>(
     (r, trace)
 }
 
+/// Whole-run latency quantiles `(p50_us, p99_us)` from the live
+/// counters' histogram.
+fn run_latencies(counters: &LiveCounters) -> (f64, f64) {
+    let h = counters.hist_snapshot();
+    (ns_to_us(h.p50()), ns_to_us(h.p99()))
+}
+
 fn sssp_result(
     built: &BuiltQueue,
     cfg: &AppConfig,
     run: &SsspRun,
     oracle: &[u64],
     trace: Vec<TracePoint>,
+    lat: (f64, f64),
 ) -> AppResult {
     AppResult {
         backend: built.label,
@@ -413,6 +444,8 @@ fn sssp_result(
         mops: run.mops(),
         wasted_pct: run.wasted_pct(),
         inversion_pct: run.inversion_pct(),
+        lat_p50_us: lat.0,
+        lat_p99_us: lat.1,
         verified: run.matches(oracle) && run.failed_inserts == 0,
         switches: trace.last().map(|t| t.switches).unwrap_or(0),
         final_mode: trace
@@ -423,7 +456,13 @@ fn sssp_result(
     }
 }
 
-fn des_result(built: &BuiltQueue, cfg: &AppConfig, run: &DesRun, trace: Vec<TracePoint>) -> AppResult {
+fn des_result(
+    built: &BuiltQueue,
+    cfg: &AppConfig,
+    run: &DesRun,
+    trace: Vec<TracePoint>,
+    lat: (f64, f64),
+) -> AppResult {
     AppResult {
         backend: built.label,
         workload: "des",
@@ -437,6 +476,8 @@ fn des_result(built: &BuiltQueue, cfg: &AppConfig, run: &DesRun, trace: Vec<Trac
             100.0 * run.drained as f64 / run.created as f64
         },
         inversion_pct: run.inversion_pct(),
+        lat_p50_us: lat.0,
+        lat_p99_us: lat.1,
         verified: run.conserved() && run.failed_inserts == 0,
         switches: trace.last().map(|t| t.switches).unwrap_or(0),
         final_mode: trace
@@ -492,7 +533,8 @@ pub fn run_backend(
                 cfg.trace_interval,
                 move || parallel_sssp(g, queue, &scfg),
             );
-            Ok(sssp_result(&built, cfg, &run, oracle, trace))
+            let lat = run_latencies(&counters);
+            Ok(sssp_result(&built, cfg, &run, oracle, trace, lat))
         }
         AppWorkload::Des {
             lps,
@@ -520,7 +562,8 @@ pub fn run_backend(
                 cfg.trace_interval,
                 move || phold(queue, &dcfg),
             );
-            Ok(des_result(&built, cfg, &run, trace))
+            let lat = run_latencies(&counters);
+            Ok(des_result(&built, cfg, &run, trace, lat))
         }
     }
 }
@@ -585,6 +628,9 @@ mod tests {
             assert!(r.verified, "{name}: {r:?}");
             assert_eq!(r.workload, "sssp");
             assert!(r.ops > 0);
+            // The latency histogram feeds the summary columns.
+            assert!(r.lat_p99_us >= r.lat_p50_us, "{name}: {r:?}");
+            assert!(r.lat_p99_us > 0.0, "{name}: {r:?}");
         }
     }
 

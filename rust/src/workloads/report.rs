@@ -15,6 +15,8 @@
 //! | `mops`          | `ops / elapsed_s / 1e6`                                        |
 //! | `wasted_pct`    | SSSP: stale pops / pops; DES: drained (unconsumed) / created   |
 //! | `inversion_pct` | pops delivered below the popped-key watermark / pops           |
+//! | `lat_p50_us`    | median queue-op round-trip latency over the run, µs            |
+//! | `lat_p99_us`    | 99th-percentile queue-op latency over the run, µs              |
 //! | `verified`      | oracle (SSSP) / conservation (DES) check result                |
 //! | `switches`      | SmartPQ mode switches (0 for static backends)                  |
 //! | `final_mode`    | `oblivious` or `aware` at run end                               |
@@ -24,10 +26,13 @@
 //! static backends report their fixed mode and 0 switches) plus the
 //! per-bucket contention snapshot `insert_frac` (inserts over ops since
 //! the previous tick), `queue_len` (queue size at the tick),
-//! `active` (workers currently holding work), and `ops` (queue ops since
-//! the previous tick) — the columns that let the mode trace be
-//! correlated with the frontier shape, and the live counterpart of the
-//! deterministic traces `smartpq project` replays in the sim plane.
+//! `active` (workers currently holding work), `ops` (queue ops since
+//! the previous tick), and the per-tick latency quantiles
+//! `lat_p50_us`/`lat_p99_us` (log-bucketed histogram differenced per
+//! tick — see [`crate::util::hist`]) — the columns that let the mode
+//! trace be correlated with the frontier shape, and the live counterpart
+//! of the deterministic traces `smartpq project` replays in the sim
+//! plane.
 
 use std::path::Path;
 
@@ -37,6 +42,38 @@ use crate::workloads::driver::AppResult;
 
 /// Default report directory (matches the figure generators).
 pub const REPORT_DIR: &str = "target/reports";
+
+/// The `app_<workload>.csv` column schema, in order (pinned by the
+/// report-schema test).
+pub const SUMMARY_COLUMNS: [&str; 13] = [
+    "backend",
+    "workload",
+    "threads",
+    "elapsed_s",
+    "ops",
+    "mops",
+    "wasted_pct",
+    "inversion_pct",
+    "lat_p50_us",
+    "lat_p99_us",
+    "verified",
+    "switches",
+    "final_mode",
+];
+
+/// The `app_<workload>_trace.csv` column schema, in order.
+pub const TRACE_COLUMNS: [&str; 10] = [
+    "backend",
+    "t_ms",
+    "mode",
+    "switches",
+    "insert_frac",
+    "queue_len",
+    "active",
+    "ops",
+    "lat_p50_us",
+    "lat_p99_us",
+];
 
 fn mode_label(m: u8) -> &'static str {
     if m == mode::AWARE {
@@ -51,19 +88,7 @@ pub fn summary_table(results: &[AppResult]) -> Table {
     let workload = results.first().map(|r| r.workload).unwrap_or("app");
     let mut t = Table::new(
         format!("Application benchmark [{workload}]"),
-        &[
-            "backend",
-            "workload",
-            "threads",
-            "elapsed_s",
-            "ops",
-            "mops",
-            "wasted_pct",
-            "inversion_pct",
-            "verified",
-            "switches",
-            "final_mode",
-        ],
+        &SUMMARY_COLUMNS,
     );
     for r in results {
         t.row(vec![
@@ -75,6 +100,8 @@ pub fn summary_table(results: &[AppResult]) -> Table {
             fmt(r.mops),
             format!("{:.2}", r.wasted_pct),
             format!("{:.2}", r.inversion_pct),
+            format!("{:.2}", r.lat_p50_us),
+            format!("{:.2}", r.lat_p99_us),
             r.verified.to_string(),
             r.switches.to_string(),
             mode_label(r.final_mode).to_string(),
@@ -87,10 +114,7 @@ pub fn summary_table(results: &[AppResult]) -> Table {
 /// with every backend's per-bucket contention snapshot.
 pub fn trace_table(results: &[AppResult]) -> Table {
     let workload = results.first().map(|r| r.workload).unwrap_or("app");
-    let mut t = Table::new(
-        format!("Mode + contention trace [{workload}]"),
-        &["backend", "t_ms", "mode", "switches", "insert_frac", "queue_len", "active", "ops"],
-    );
+    let mut t = Table::new(format!("Mode + contention trace [{workload}]"), &TRACE_COLUMNS);
     for r in results {
         for p in &r.trace {
             t.row(vec![
@@ -102,6 +126,8 @@ pub fn trace_table(results: &[AppResult]) -> Table {
                 p.queue_len.to_string(),
                 p.active_threads.to_string(),
                 p.ops.to_string(),
+                format!("{:.2}", p.lat_p50_us),
+                format!("{:.2}", p.lat_p99_us),
             ]);
         }
     }
@@ -142,6 +168,8 @@ mod tests {
             mops: 0.083,
             wasted_pct: 12.5,
             inversion_pct: 3.0,
+            lat_p50_us: 1.5,
+            lat_p99_us: 12.25,
             verified: true,
             switches: trace.last().map(|t| t.switches).unwrap_or(0),
             final_mode: mode::OBLIVIOUS,
@@ -158,6 +186,8 @@ mod tests {
             queue_len: 120,
             active_threads: 4,
             ops: 200,
+            lat_p50_us: 1.25,
+            lat_p99_us: 9.5,
         }
     }
 
@@ -176,10 +206,40 @@ mod tests {
         assert!(summary.starts_with("backend,workload,threads"));
         assert!(summary.contains("smartpq,sssp,4"));
         let trace = std::fs::read_to_string(dir.join("app_sssp_trace.csv")).unwrap();
-        // Mode trace and contention snapshot share one row per tick.
-        assert!(trace.contains("smartpq,25.0,aware,1,0.250,120,4,200"), "{trace}");
-        assert!(trace.contains("lotan_shavit,25.0,oblivious,0,0.250,120,4,200"), "{trace}");
+        // Mode trace, contention snapshot and latency quantiles share one
+        // row per tick.
+        assert!(
+            trace.contains("smartpq,25.0,aware,1,0.250,120,4,200,1.25,9.50"),
+            "{trace}"
+        );
+        assert!(
+            trace.contains("lotan_shavit,25.0,oblivious,0,0.250,120,4,200,1.25,9.50"),
+            "{trace}"
+        );
         assert_eq!(trace.lines().count(), 4);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn report_schema_is_pinned() {
+        // The documented CSV schemas, byte for byte: downstream plotting
+        // and the projection tooling parse these headers.
+        let results = vec![result("smartpq", vec![point(25.0, mode::AWARE, 1)])];
+        let dir = std::env::temp_dir().join("smartpq_app_report_schema_test");
+        let path = print_and_write(&results, &dir).unwrap();
+        let summary = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(
+            summary.lines().next().unwrap(),
+            "backend,workload,threads,elapsed_s,ops,mops,wasted_pct,inversion_pct,\
+             lat_p50_us,lat_p99_us,verified,switches,final_mode"
+        );
+        assert_eq!(summary.lines().next().unwrap(), SUMMARY_COLUMNS.join(","));
+        let trace = std::fs::read_to_string(dir.join("app_sssp_trace.csv")).unwrap();
+        assert_eq!(
+            trace.lines().next().unwrap(),
+            "backend,t_ms,mode,switches,insert_frac,queue_len,active,ops,lat_p50_us,lat_p99_us"
+        );
+        assert_eq!(trace.lines().next().unwrap(), TRACE_COLUMNS.join(","));
         let _ = std::fs::remove_dir_all(dir);
     }
 }

@@ -33,7 +33,7 @@ use std::time::{Duration, Instant};
 
 use crate::pq::traits::ConcurrentPQ;
 use crate::workloads::graph::Graph;
-use crate::workloads::trace::LiveCounters;
+use crate::workloads::trace::{timed_op, LiveCounters};
 
 /// Parallel-SSSP configuration.
 #[derive(Debug, Clone)]
@@ -192,7 +192,7 @@ pub fn parallel_sssp(g: &Graph, q: Arc<dyn ConcurrentPQ>, cfg: &SsspConfig) -> S
                         if cursor == buf.len() {
                             buf.clear();
                             cursor = 0;
-                            q.delete_min_batch(batch, &mut buf);
+                            timed_op(&live, || q.delete_min_batch(batch, &mut buf));
                         }
                         match buf.get(cursor).copied() {
                             Some((key, _)) => {
@@ -233,7 +233,10 @@ pub fn parallel_sssp(g: &Graph, q: Arc<dyn ConcurrentPQ>, cfg: &SsspConfig) -> S
                                                 // while this element is in
                                                 // flight.
                                                 pending.fetch_add(1, Ordering::AcqRel);
-                                                if q.insert(encode(nd, v, n), v as u64) {
+                                                let ins_ok = timed_op(&live, || {
+                                                    q.insert(encode(nd, v, n), v as u64)
+                                                });
+                                                if ins_ok {
                                                     c.inserts += 1;
                                                     if let Some(live) = &live {
                                                         live.record_insert();

@@ -35,6 +35,7 @@ use std::sync::Arc;
 
 use crate::sim::WorkloadPhase;
 use crate::util::error::{Error, Result};
+use crate::util::hist::{HistSnapshot, LatencyHist};
 use crate::util::rng::Rng;
 use crate::workloads::driver::AppWorkload;
 use crate::workloads::graph::Graph;
@@ -53,6 +54,11 @@ pub struct LiveCounters {
     pub pops: AtomicU64,
     /// Workers currently holding or processing work (not starved).
     pub active: AtomicUsize,
+    /// Queue-op round-trip latencies (one sample per `insert` /
+    /// `delete_min_batch` call), log-bucketed. The monitor diffs
+    /// snapshots per tick for the `lat_p50_us`/`lat_p99_us` trace
+    /// columns; the end-of-run snapshot yields the summary columns.
+    pub hist: LatencyHist,
 }
 
 impl LiveCounters {
@@ -85,6 +91,12 @@ impl LiveCounters {
         self.active.fetch_sub(1, Ordering::Relaxed);
     }
 
+    /// Record one queue-op round-trip latency (nanoseconds).
+    #[inline]
+    pub fn record_op_latency(&self, ns: u64) {
+        self.hist.record(ns);
+    }
+
     /// Snapshot `(inserts, pops, active)`.
     pub fn snapshot(&self) -> (u64, u64, usize) {
         (
@@ -92,6 +104,27 @@ impl LiveCounters {
             self.pops.load(Ordering::Relaxed),
             self.active.load(Ordering::Relaxed),
         )
+    }
+
+    /// Snapshot the latency histogram (for per-tick differencing).
+    pub fn hist_snapshot(&self) -> HistSnapshot {
+        self.hist.snapshot()
+    }
+}
+
+/// Run one queue op `f`, recording its wall-clock duration into `live`'s
+/// latency histogram when counters are attached — the shared shell for
+/// the SSSP/DES workers' per-op timing (no accounting, no timing, when
+/// `live` is `None`).
+pub fn timed_op<R>(live: &Option<Arc<LiveCounters>>, f: impl FnOnce() -> R) -> R {
+    match live {
+        Some(c) => {
+            let t = std::time::Instant::now();
+            let r = f();
+            c.record_op_latency(t.elapsed().as_nanos() as u64);
+            r
+        }
+        None => f(),
     }
 }
 
@@ -513,5 +546,14 @@ mod tests {
         c.worker_idle();
         let (ins, pops, active) = c.snapshot();
         assert_eq!((ins, pops, active), (1, 2, 1));
+        // Latency samples accumulate in the shared histogram and can be
+        // isolated per monitoring interval by snapshot differencing.
+        c.record_op_latency(1_000);
+        let mid = c.hist_snapshot();
+        c.record_op_latency(5_000);
+        c.record_op_latency(5_000);
+        let end = c.hist_snapshot();
+        assert_eq!(end.total(), 3);
+        assert_eq!(end.diff(&mid).total(), 2);
     }
 }

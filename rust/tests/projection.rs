@@ -164,9 +164,52 @@ fn generated_projection_json_passes_check_bench_schema() {
         phase_ms: 0.05,
         seed: 5,
         quick: true,
+        threads_per_node: None,
     };
     let report = run_projection(&cfg).unwrap();
     let json = json_string(&report);
     let outcome = check_str("BENCH_projection.json", &json, 1.3).unwrap();
     assert!(!outcome.facts.is_empty(), "{outcome:?}");
+}
+
+/// `--threads-per-node` lets the projection x-axis exceed a topology's
+/// hardware contexts: 48 threads/node on 1 node targets 48 software
+/// threads against 16 contexts (3x oversubscribed), and the engine's
+/// placement wraps instead of rejecting. The DES trace keeps a pending
+/// set near the LP count, so the recorded parallelism actually sustains
+/// the oversubscribed thread target.
+#[test]
+fn threads_per_node_projects_oversubscribed_topologies() {
+    let cfg = ProjectionConfig {
+        workload: des_workload(),
+        node_counts: vec![1],
+        buckets: 4,
+        phase_ms: 0.05,
+        seed: 9,
+        quick: true,
+        threads_per_node: Some(48),
+    };
+    let report = run_projection(&cfg).unwrap();
+    for s in &report.series {
+        assert_eq!(s.threads, 48, "{}: thread target not overridden", s.backend);
+        assert!(s.overall_mops > 0.0, "{}: no throughput", s.backend);
+        // Phase thread counts stay within the (capped) target.
+        assert!(s.phases.iter().all(|p| p.threads <= 48), "{}", s.backend);
+    }
+    // The steady-state DES phases actually use more software threads
+    // than the 1-node topology's 16 hardware contexts.
+    assert!(
+        report
+            .series
+            .iter()
+            .any(|s| s.phases.iter().any(|p| p.threads > 16)),
+        "oversubscription never engaged: {:?}",
+        report
+            .series
+            .first()
+            .map(|s| s.phases.iter().map(|p| p.threads).collect::<Vec<_>>())
+    );
+    let json = json_string(&report);
+    assert!(json.contains("\"threads_per_node\": 48"), "{json}");
+    assert!(check_str("BENCH_projection.json", &json, 1.3).is_ok(), "{json}");
 }

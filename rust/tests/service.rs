@@ -1,0 +1,317 @@
+//! Service-plane integration tests: the protocol over a real socket,
+//! conservation under concurrent clients (vs the sequential SeqSkipListPQ
+//! oracle), shard ordering, and garbage-frame rejection.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+use smartpq::pq::SeqSkipListPQ;
+use smartpq::service::proto::{self, Request, Response};
+use smartpq::service::{PqService, ServiceClient, ServiceConfig};
+
+fn start(backend: &str, shards: usize, key_span: u64) -> PqService {
+    PqService::start(ServiceConfig {
+        backend: backend.to_string(),
+        shards,
+        key_span,
+        max_conns: 16,
+        ..Default::default()
+    })
+    .expect("service starts")
+}
+
+/// Drain the service from one client; a few empty confirmations ride out
+/// relaxed backends' transiently-empty scans (the system is quiesced).
+fn drain(client: &mut ServiceClient) -> Vec<(u64, u64)> {
+    let mut out = Vec::new();
+    let mut empties = 0;
+    while empties < 3 {
+        let got = client.delete_min_batch(64).expect("drain pop");
+        if got.is_empty() {
+            empties += 1;
+        } else {
+            empties = 0;
+            out.extend(got);
+        }
+    }
+    out
+}
+
+#[test]
+fn scalar_roundtrip_over_loopback() {
+    let svc = start("lotan_shavit", 2, 1_000);
+    let addr = svc.addr().to_string();
+    let mut c = ServiceClient::connect(addr.as_str()).unwrap();
+    assert_eq!(c.len().unwrap(), 0);
+    assert!(c.insert(700, 7).unwrap());
+    assert!(c.insert(10, 1).unwrap());
+    assert!(!c.insert(700, 8).unwrap(), "duplicate accepted");
+    assert_eq!(c.len().unwrap(), 2);
+    assert_eq!(c.peek().unwrap(), Some(10));
+    assert_eq!(c.delete_min().unwrap(), Some((10, 1)));
+    assert_eq!(c.delete_min().unwrap(), Some((700, 7)));
+    assert_eq!(c.delete_min().unwrap(), None);
+    // Sentinel keys are rejected as failed inserts, not errors.
+    assert!(!c.insert(0, 0).unwrap());
+    assert!(!c.insert(u64::MAX, 0).unwrap());
+    c.shutdown().unwrap();
+    svc.wait();
+}
+
+#[test]
+fn pipelined_mixed_burst_answers_in_request_order() {
+    let svc = start("lotan_shavit", 4, 1_000);
+    let addr = svc.addr().to_string();
+    let mut c = ServiceClient::connect(addr.as_str()).unwrap();
+    let resps = c
+        .send(&[
+            Request::InsertBatch(vec![(500, 5), (100, 1), (900, 9)]),
+            Request::Insert { key: 300, value: 3 },
+            Request::Peek,
+            Request::DeleteMin,
+            Request::DeleteMinBatch(2),
+            Request::Len,
+        ])
+        .unwrap();
+    assert_eq!(
+        resps,
+        vec![
+            Response::InsertBatch(vec![true, true, true]),
+            Response::Insert(true),
+            Response::Peek(Some(100)),
+            Response::DeleteMin(Some((100, 1))),
+            Response::DeleteMinBatch(vec![(300, 3), (500, 5)]),
+            Response::Len(1),
+        ]
+    );
+    c.shutdown().unwrap();
+    svc.wait();
+}
+
+/// The differential/conservation test the acceptance criteria name:
+/// concurrent clients hammer the service, then the union of everything
+/// popped and everything still in the shards must equal exactly the
+/// accepted inserts — replayed through the sequential SeqSkipListPQ
+/// oracle to also pin key order and value fidelity.
+#[test]
+fn differential_vs_seq_oracle_with_concurrent_clients() {
+    for backend in ["smartpq", "nuddle", "multiqueue"] {
+        let svc = start(backend, 2, 100_000);
+        let addr = svc.addr().to_string();
+        let n_clients = 4u64;
+        let ops_per_client = 250u64;
+        let results: Vec<(Vec<(u64, u64)>, Vec<(u64, u64)>)> = std::thread::scope(|s| {
+            let workers: Vec<_> = (0..n_clients)
+                .map(|t| {
+                    let addr = addr.clone();
+                    s.spawn(move || {
+                        let mut c = ServiceClient::connect(addr.as_str()).unwrap();
+                        let mut accepted = Vec::new();
+                        let mut popped = Vec::new();
+                        for i in 0..ops_per_client {
+                            // Unique keys per client, scaled so the key
+                            // range covers both shards; value tied to key.
+                            let key = 1 + (t + n_clients * i) * 97;
+                            if c.insert(key, key ^ 0xABCD).unwrap() {
+                                accepted.push((key, key ^ 0xABCD));
+                            }
+                            if i % 3 == 2 {
+                                if let Some(kv) = c.delete_min().unwrap() {
+                                    popped.push(kv);
+                                }
+                            }
+                            if i % 50 == 49 {
+                                let got = c.delete_min_batch(4).unwrap();
+                                popped.extend(got);
+                            }
+                        }
+                        (accepted, popped)
+                    })
+                })
+                .collect();
+            workers.into_iter().map(|w| w.join().unwrap()).collect()
+        });
+        let mut accepted: Vec<(u64, u64)> = Vec::new();
+        let mut popped: Vec<(u64, u64)> = Vec::new();
+        for (a, p) in results {
+            accepted.extend(a);
+            popped.extend(p);
+        }
+        let mut c = ServiceClient::connect(addr.as_str()).unwrap();
+        let leftover = drain(&mut c);
+        assert_eq!(c.len().unwrap(), 0, "{backend}: shards not empty after drain");
+
+        // Every pop returned a key some client successfully inserted,
+        // with its value intact, and nothing was popped twice.
+        let by_key: HashMap<u64, u64> = accepted.iter().copied().collect();
+        let mut seen = std::collections::HashSet::new();
+        for &(k, v) in popped.iter().chain(leftover.iter()) {
+            assert_eq!(by_key.get(&k), Some(&v), "{backend}: unknown or corrupted pop ({k},{v})");
+            assert!(seen.insert(k), "{backend}: key {k} popped twice");
+        }
+        // Conservation: accepted == popped ∪ leftover, as multisets.
+        let mut got: Vec<(u64, u64)> = popped.iter().chain(leftover.iter()).copied().collect();
+        got.sort_unstable();
+        let mut want = accepted.clone();
+        want.sort_unstable();
+        assert_eq!(got, want, "{backend}: accepted inserts lost or duplicated");
+
+        // Oracle replay: feeding the accepted set through the sequential
+        // queue must yield the same sorted key sequence the service's
+        // total history contains.
+        let mut oracle = SeqSkipListPQ::new(1);
+        for &(k, v) in &accepted {
+            assert!(oracle.insert(k, v), "{backend}: oracle rejected a unique key");
+        }
+        let mut oracle_drain = Vec::new();
+        while let Some(kv) = oracle.delete_min() {
+            oracle_drain.push(kv);
+        }
+        assert_eq!(oracle_drain, got, "{backend}: oracle order mismatch");
+        c.shutdown().unwrap();
+        svc.wait();
+    }
+}
+
+/// Shard semantics: the key-range partition keeps a quiesced drain in
+/// global key order for an exact backend, across shard counts — and
+/// re-sharding the same key set (the "rebalance" case) must preserve
+/// both the order and the set.
+#[test]
+fn shard_range_ordering_holds_across_shard_counts() {
+    let keys: Vec<u64> = {
+        // Deterministic shuffle of 1..=200 plus keys beyond key_span
+        // (they land in the open-ended top shard).
+        let mut ks: Vec<u64> = (1..=200u64).map(|i| (i * 97) % 211).filter(|&k| k > 0).collect();
+        ks.sort_unstable();
+        ks.dedup();
+        ks.push(5_000); // > key_span
+        ks.push(9_999);
+        ks
+    };
+    let mut drains: Vec<Vec<u64>> = Vec::new();
+    for shards in [1usize, 2, 4] {
+        let svc = start("lotan_shavit", shards, 1_000);
+        let addr = svc.addr().to_string();
+        let mut c = ServiceClient::connect(addr.as_str()).unwrap();
+        // Insert in scrambled order.
+        let mut scrambled = keys.clone();
+        scrambled.reverse();
+        for &k in &scrambled {
+            assert!(c.insert(k, k + 1).unwrap(), "{shards} shards: insert {k}");
+        }
+        let got: Vec<u64> = drain(&mut c).into_iter().map(|(k, _)| k).collect();
+        let mut want = keys.clone();
+        want.sort_unstable();
+        assert_eq!(got, want, "{shards} shard(s): drain not in global key order");
+        drains.push(got);
+        c.shutdown().unwrap();
+        svc.wait();
+    }
+    // Same key set, different shard counts: identical drain sequence.
+    assert_eq!(drains[0], drains[1]);
+    assert_eq!(drains[1], drains[2]);
+}
+
+/// Client batches above the protocol's per-frame cap split into one
+/// pipelined burst of maximal frames — callers never see MAX_BATCH.
+#[test]
+fn oversized_batches_are_chunked_transparently() {
+    let svc = start("multiqueue", 2, 100_000);
+    let addr = svc.addr().to_string();
+    let mut c = ServiceClient::connect(addr.as_str()).unwrap();
+    let n = proto::MAX_BATCH as u64 + 10;
+    let items: Vec<(u64, u64)> = (1..=n).map(|k| (k, k + 1)).collect();
+    let oks = c.insert_batch(&items).unwrap();
+    assert_eq!(oks.len(), items.len());
+    assert!(oks.iter().all(|&ok| ok), "unique keys must all insert");
+    assert_eq!(c.len().unwrap(), n);
+    let popped = c.delete_min_batch(n as u32 + 50).unwrap();
+    assert_eq!(popped.len(), n as usize);
+    let mut keys: Vec<u64> = popped.iter().map(|&(k, _)| k).collect();
+    keys.sort_unstable();
+    assert_eq!(keys, (1..=n).collect::<Vec<u64>>());
+    c.shutdown().unwrap();
+    svc.wait();
+}
+
+#[test]
+fn garbage_frames_get_an_error_frame_then_eof() {
+    let svc = start("multiqueue", 1, 1_000);
+    let addr = svc.addr();
+    // Valid header, unknown opcode.
+    let mut s = TcpStream::connect(addr).unwrap();
+    let mut frame = Vec::new();
+    proto::encode_request(&Request::DeleteMin, &mut frame);
+    frame[5] = 0x5A;
+    s.write_all(&frame).unwrap();
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf).unwrap(); // server closes after the error frame
+    let (resp, used) = proto::decode_response(&buf).unwrap().expect("error frame");
+    assert_eq!(used, buf.len());
+    match resp {
+        Response::Error { code, message } => {
+            assert_eq!(code, proto::err::MALFORMED);
+            assert!(message.contains("opcode"), "{message}");
+        }
+        other => panic!("expected an error frame, got {other:?}"),
+    }
+    // An impossible frame length is also rejected, not buffered.
+    let mut s2 = TcpStream::connect(addr).unwrap();
+    s2.write_all(&(u32::MAX).to_le_bytes()).unwrap();
+    let mut buf2 = Vec::new();
+    s2.read_to_end(&mut buf2).unwrap();
+    let (resp2, _) = proto::decode_response(&buf2).unwrap().expect("error frame");
+    assert!(matches!(resp2, Response::Error { .. }));
+    // The service survives both: a clean client still works.
+    let mut c = ServiceClient::connect(addr.to_string().as_str()).unwrap();
+    assert!(c.insert(5, 50).unwrap());
+    assert_eq!(c.delete_min().unwrap(), Some((5, 50)));
+    c.shutdown().unwrap();
+    svc.wait();
+}
+
+#[test]
+fn truncated_frames_wait_for_more_bytes() {
+    // Stream a request one byte at a time: the server must not answer
+    // (or error) until the frame completes.
+    let svc = start("lotan_shavit", 1, 1_000);
+    let addr = svc.addr();
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_nodelay(true).unwrap();
+    let mut frame = Vec::new();
+    proto::encode_request(&Request::Insert { key: 42, value: 4 }, &mut frame);
+    for &b in &frame {
+        s.write_all(&[b]).unwrap();
+    }
+    let mut buf = Vec::new();
+    let mut chunk = [0u8; 64];
+    let resp = loop {
+        let n = s.read(&mut chunk).unwrap();
+        assert!(n > 0, "server closed without answering");
+        buf.extend_from_slice(&chunk[..n]);
+        if let Some((resp, _)) = proto::decode_response(&buf).unwrap() {
+            break resp;
+        }
+    };
+    assert_eq!(resp, Response::Insert(true));
+    let mut c = ServiceClient::connect(addr.to_string().as_str()).unwrap();
+    c.shutdown().unwrap();
+    svc.wait();
+}
+
+#[test]
+fn shutdown_frame_stops_the_whole_service() {
+    let svc = start("multiqueue", 2, 1_000);
+    let addr = svc.addr().to_string();
+    let mut c = ServiceClient::connect(addr.as_str()).unwrap();
+    c.shutdown().unwrap();
+    svc.wait(); // returns only because the frame stopped the service
+    assert!(
+        ServiceClient::connect(addr.as_str())
+            .and_then(|mut c| c.len())
+            .is_err(),
+        "service still accepting after shutdown"
+    );
+}
