@@ -27,7 +27,13 @@
 //!   round trip cannot take zero time), plus an *advisory*
 //!   throughput-monotone-in-shards check per (backend, mix): on a large
 //!   host adding shards should not lose throughput, but small CI runners
-//!   can't parallelize shards, so a violation only warns.
+//!   can't parallelize shards, so a violation only warns. The artifact
+//!   must also carry the **skew comparison** (static vs elastic sharding
+//!   under Zipf keys): the elastic side must have rebalanced at least
+//!   once, the recorded `p99_ratio` must match `static/elastic`, and on
+//!   hosts with >= 8-way parallelism the ratio must be >= 1.0 — elastic
+//!   sharding must not lose to static under skew (advisory on smaller
+//!   hosts, where the shards serialize anyway).
 //!
 //! Placeholder artifacts (the committed schema stubs) fail loudly: the
 //! point of the gate is that only measured output passes.
@@ -45,6 +51,9 @@ pub const COMBINING_GATE_MIN_PARALLELISM: u64 = 8;
 
 /// Slack multiplier for the lotan_shavit contention-monotonicity check.
 pub const CONTENTION_SLACK: f64 = 2.0;
+
+/// Host parallelism below which the skew p99-ratio gate is advisory.
+pub const SKEW_GATE_MIN_PARALLELISM: u64 = 8;
 
 /// What a successful check reports.
 #[derive(Debug, Clone)]
@@ -479,6 +488,69 @@ fn check_service(v: &Json, path: &str, out: &mut CheckOutcome) -> Result<()> {
             "throughput monotone in shards for {monotone} (backend, mix) group(s)"
         ));
     }
+    // The skew comparison: static vs elastic sharding under Zipf keys.
+    let skew = req(v, "skew", path)?;
+    let backend = req_str(skew, "backend", path)?;
+    if backend.is_empty() {
+        return Err(schema_err(path, "skew: empty backend name"));
+    }
+    let shards = req_u64(skew, "shards", path)?;
+    if shards < 2 {
+        return Err(schema_err(path, "skew: the comparison needs shards >= 2"));
+    }
+    req_str(skew, "mix", path)?;
+    if req_str(skew, "dist", path)? != "zipf" {
+        return Err(schema_err(path, "skew: \"dist\" must be \"zipf\""));
+    }
+    let zipf_s = req_f64(skew, "zipf_s", path)?;
+    if zipf_s <= 0.0 {
+        return Err(schema_err(path, "skew: zipf_s must be > 0"));
+    }
+    let static_mops = req_f64(skew, "static_mops", path)?;
+    let elastic_mops = req_f64(skew, "elastic_mops", path)?;
+    let static_p99 = req_f64(skew, "static_p99_us", path)?;
+    let elastic_p99 = req_f64(skew, "elastic_p99_us", path)?;
+    if static_mops <= 0.0 || elastic_mops <= 0.0 || static_p99 <= 0.0 || elastic_p99 <= 0.0 {
+        return Err(schema_err(path, "skew: throughputs and p99s must be > 0"));
+    }
+    let rebalances = req_u64(skew, "rebalances", path)?;
+    if rebalances == 0 {
+        return Err(Error::Invariant(format!(
+            "{path}: skew: the elastic side never rebalanced — the comparison measured two \
+             static services"
+        )));
+    }
+    req_u64(skew, "epoch", path)?;
+    let ratio = req_f64(skew, "p99_ratio", path)?;
+    let expect = static_p99 / elastic_p99;
+    if (ratio - expect).abs() > 0.01 * expect.max(1e-9) {
+        return Err(schema_err(
+            path,
+            &format!("skew: recorded p99_ratio {ratio:.4} != static/elastic {expect:.4}"),
+        ));
+    }
+    if host >= SKEW_GATE_MIN_PARALLELISM {
+        if ratio < 1.0 {
+            return Err(Error::Invariant(format!(
+                "{path}: elastic sharding lost to static under zipf s={zipf_s} on a \
+                 {host}-way host (p99 ratio {ratio:.2} < 1.0)"
+            )));
+        }
+        out.facts.push(format!(
+            "skew: elastic p99 beats static ({ratio:.2}x, {rebalances} rebalance(s), \
+             {host}-way host)"
+        ));
+    } else if ratio < 1.0 {
+        out.warnings.push(format!(
+            "skew: elastic p99 ratio {ratio:.2} < 1.0, but the {host}-way host cannot \
+             parallelize {shards} shards — advisory only"
+        ));
+    } else {
+        out.facts.push(format!(
+            "skew: elastic p99 beats static ({ratio:.2}x, {rebalances} rebalance(s), \
+             small {host}-way host)"
+        ));
+    }
     Ok(())
 }
 
@@ -625,13 +697,28 @@ mod tests {
         )
     }
 
-    fn service_json(sweeps: &[String]) -> String {
+    fn service_skew(static_p99: f64, elastic_p99: f64, rebalances: u64) -> String {
+        format!(
+            "{{\"backend\": \"lotan_shavit\", \"shards\": 8, \"mix\": \"delete_heavy\", \
+             \"dist\": \"zipf\", \"zipf_s\": 1.2, \"static_mops\": 0.05, \
+             \"static_p99_us\": {static_p99:.3}, \"elastic_mops\": 0.06, \
+             \"elastic_p99_us\": {elastic_p99:.3}, \"rebalances\": {rebalances}, \
+             \"epoch\": {rebalances}, \"p99_ratio\": {:.6}}}",
+            static_p99 / elastic_p99
+        )
+    }
+
+    fn service_json_with(sweeps: &[String], skew: &str, host: u64) -> String {
         format!(
             "{{\"generated_by\": \"smartpq bench --figure service\", \"placeholder\": false, \
-             \"quick\": true, \"host_parallelism\": 8, \"key_span\": 1048576, \
-             \"sweeps\": [{}]}}",
+             \"quick\": true, \"host_parallelism\": {host}, \"key_span\": 1048576, \
+             \"skew\": {skew}, \"sweeps\": [{}]}}",
             sweeps.join(", ")
         )
+    }
+
+    fn service_json(sweeps: &[String]) -> String {
+        service_json_with(sweeps, &service_skew(400.0, 200.0, 2), 8)
     }
 
     #[test]
@@ -666,6 +753,48 @@ mod tests {
         // Zero p99: a TCP round trip cannot take zero time.
         let zero = service_sweep("smartpq", 1, "balanced", 0.05, 0.0);
         assert!(check_str("s.json", &service_json(&[zero]), 1.3).is_err());
+    }
+
+    #[test]
+    fn skew_regression_gates_on_big_hosts_only() {
+        let sweeps = vec![service_sweep("smartpq", 1, "balanced", 0.05, 120.0)];
+        // Elastic loses (ratio 0.5) on an 8-way host: hard failure.
+        let bad = service_json_with(&sweeps, &service_skew(100.0, 200.0, 2), 8);
+        let err = check_str("s.json", &bad, 1.3).unwrap_err();
+        assert!(err.to_string().contains("elastic sharding lost"), "{err}");
+        // Same loss on a 4-way host: advisory.
+        let small = service_json_with(&sweeps, &service_skew(100.0, 200.0, 2), 4);
+        let ok = check_str("s.json", &small, 1.3).unwrap();
+        assert!(ok.warnings.iter().any(|w| w.contains("skew")), "{ok:?}");
+        // A win passes and is recorded as a fact.
+        let win = service_json_with(&sweeps, &service_skew(300.0, 100.0, 1), 8);
+        let ok = check_str("s.json", &win, 1.3).unwrap();
+        assert!(ok.facts.iter().any(|f| f.contains("elastic p99 beats static")), "{ok:?}");
+    }
+
+    #[test]
+    fn skew_without_rebalances_fails() {
+        let sweeps = vec![service_sweep("smartpq", 1, "balanced", 0.05, 120.0)];
+        let doc = service_json_with(&sweeps, &service_skew(400.0, 200.0, 0), 8);
+        let err = check_str("s.json", &doc, 1.3).unwrap_err();
+        assert!(err.to_string().contains("never rebalanced"), "{err}");
+    }
+
+    #[test]
+    fn skew_ratio_mismatch_and_missing_skew_fail() {
+        let sweeps = vec![service_sweep("smartpq", 1, "balanced", 0.05, 120.0)];
+        let mut skew = service_skew(400.0, 200.0, 2);
+        skew = skew.replace("\"p99_ratio\": 2.000000", "\"p99_ratio\": 9.000000");
+        let err = check_str("s.json", &service_json_with(&sweeps, &skew, 8), 1.3).unwrap_err();
+        assert!(err.to_string().contains("p99_ratio"), "{err}");
+        // No skew object at all: the v2 schema requires it.
+        let legacy = format!(
+            "{{\"generated_by\": \"x\", \"placeholder\": false, \"quick\": true, \
+             \"host_parallelism\": 8, \"key_span\": 1048576, \"sweeps\": [{}]}}",
+            sweeps.join(", ")
+        );
+        let err = check_str("s.json", &legacy, 1.3).unwrap_err();
+        assert!(err.to_string().contains("skew"), "{err}");
     }
 
     #[test]

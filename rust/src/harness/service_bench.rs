@@ -16,6 +16,19 @@
 //! SmartPQ-backed service actually exercise its mode switches under
 //! socket-driven contention.
 //!
+//! ## Pluggable traffic shapes
+//!
+//! Key distributions ([`KeyDist`]) and arrival processes
+//! ([`ArrivalGen`]) are trait-object generators, so the same timed loop
+//! drives uniform or Zipf-skewed keys and steady, on/off-bursty or
+//! sinusoidally phase-modulated arrivals (`--dist` / `--arrival`).
+//! Zipf s=1.2 over the key range concentrates ~97% of the key mass in
+//! the lowest static shard of 8 — the pathology the elastic rebalancer
+//! exists to fix — and the figure's **skew comparison** measures
+//! exactly that: static vs elastic sharding under the Zipf
+//! deleteMin-heavy mix, reported as a p99 ratio in
+//! `BENCH_service.json` and gated by `smartpq check-bench`.
+//!
 //! `bench --figure service` sweeps backend × shard count × mix over a
 //! loopback service and writes `target/reports/service_sweep.csv` plus
 //! the machine-readable `BENCH_service.json` (gated by
@@ -28,10 +41,10 @@ use std::time::{Duration, Instant};
 use crate::harness::host_parallelism;
 use crate::harness::runner::BenchConfig;
 use crate::harness::table::{fmt, Table};
-use crate::service::{PqService, ServiceClient, ServiceConfig};
+use crate::service::{PqService, Request, Response, ServiceClient, ServiceConfig};
 use crate::util::error::{Error, Result};
 use crate::util::hist::{ns_to_us, LatencyHist};
-use crate::util::rng::Rng;
+use crate::util::rng::{Rng, Zipf};
 use crate::workloads::report::REPORT_DIR;
 
 /// Alternating windows in the `phases` mix.
@@ -99,6 +112,201 @@ impl OpMix {
     }
 }
 
+// ----------------------------------------------- traffic generators
+
+/// Key distribution a connection draws insert keys from.
+///
+/// Trait-object so `run_mix` is generic over traffic shape without
+/// monomorphizing the whole timed loop per distribution.
+pub trait KeyDist: Send {
+    /// Next insert key (always `>= 1`).
+    fn next_key(&mut self, rng: &mut Rng) -> u64;
+    /// Report label.
+    fn name(&self) -> &'static str;
+}
+
+struct UniformKeys {
+    range: u64,
+}
+
+impl KeyDist for UniformKeys {
+    fn next_key(&mut self, rng: &mut Rng) -> u64 {
+        1 + rng.gen_range(self.range)
+    }
+    fn name(&self) -> &'static str {
+        "uniform"
+    }
+}
+
+/// Zipf ranks used directly as keys: rank 1 (the hottest) is also the
+/// smallest key, so skewed traffic piles onto the *lowest* key range —
+/// the worst case for static range sharding.
+struct ZipfKeys {
+    zipf: Zipf,
+}
+
+impl KeyDist for ZipfKeys {
+    fn next_key(&mut self, rng: &mut Rng) -> u64 {
+        self.zipf.sample(rng)
+    }
+    fn name(&self) -> &'static str {
+        "zipf"
+    }
+}
+
+/// Key-distribution choice (`loadgen --dist`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum KeyDistKind {
+    /// Uniform over `1..=key_range`.
+    Uniform,
+    /// Zipf-skewed ranks over `1..=key_range` (rank 1 hottest).
+    Zipf {
+        /// Skew exponent (`s > 0`; 1.2 is the acceptance setting).
+        s: f64,
+    },
+}
+
+impl KeyDistKind {
+    /// Report/JSON label.
+    pub fn name(&self) -> &'static str {
+        match self {
+            KeyDistKind::Uniform => "uniform",
+            KeyDistKind::Zipf { .. } => "zipf",
+        }
+    }
+}
+
+/// Arrival process: the open-loop schedule of send offsets, one per op,
+/// monotone non-decreasing from run start.
+pub trait ArrivalGen: Send {
+    /// Scheduled offset of the next op from run start.
+    fn next_arrival(&mut self) -> Duration;
+    /// Report label.
+    fn name(&self) -> &'static str;
+}
+
+struct SteadyArrival {
+    interval: Duration,
+    i: u64,
+}
+
+impl ArrivalGen for SteadyArrival {
+    fn next_arrival(&mut self) -> Duration {
+        let at = self.interval.mul_f64(self.i as f64);
+        self.i += 1;
+        at
+    }
+    fn name(&self) -> &'static str {
+        "steady"
+    }
+}
+
+/// All arrivals compressed into the first `on` seconds of each
+/// `period`-second window, at `rate / duty` — the mean rate matches the
+/// steady schedule, but the queue sees idle troughs and bursts.
+struct OnOffArrival {
+    step: f64,
+    period: f64,
+    on: f64,
+    t: f64,
+}
+
+impl ArrivalGen for OnOffArrival {
+    fn next_arrival(&mut self) -> Duration {
+        let within = self.t % self.period;
+        if within >= self.on {
+            // Off window: jump to the start of the next burst.
+            self.t = self.t - within + self.period;
+        }
+        let at = self.t;
+        self.t += self.step;
+        Duration::from_secs_f64(at)
+    }
+    fn name(&self) -> &'static str {
+        "onoff"
+    }
+}
+
+/// Sinusoidally rate-modulated arrivals:
+/// `r(t) = base * (1 + depth * sin(2*pi*t / period))`.
+struct PhasedArrival {
+    base: f64,
+    depth: f64,
+    period: f64,
+    t: f64,
+}
+
+impl ArrivalGen for PhasedArrival {
+    fn next_arrival(&mut self) -> Duration {
+        let at = self.t;
+        let phase = 2.0 * std::f64::consts::PI * self.t / self.period;
+        let rate = self.base * (1.0 + self.depth * phase.sin());
+        // depth < 1 keeps rate > 0; the floor guards rounding anyway.
+        self.t += 1.0 / rate.max(self.base * 1e-3);
+        Duration::from_secs_f64(at)
+    }
+    fn name(&self) -> &'static str {
+        "phased"
+    }
+}
+
+/// Arrival-process choice (`loadgen --arrival`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalKind {
+    /// Fixed-interval open-loop schedule.
+    Steady,
+    /// On/off bursts (mean rate preserved).
+    OnOff {
+        /// Fraction of each period that is "on" (`0 < duty <= 1`).
+        duty: f64,
+        /// Burst period, milliseconds.
+        period_ms: f64,
+    },
+    /// Sinusoidally rate-modulated arrivals.
+    Phased {
+        /// Modulation depth (`0 <= depth < 1`).
+        depth: f64,
+        /// Modulation period, milliseconds.
+        period_ms: f64,
+    },
+}
+
+impl ArrivalKind {
+    /// Build the per-connection schedule generator.
+    pub fn build(&self, rate_per_conn: f64) -> Box<dyn ArrivalGen> {
+        match *self {
+            ArrivalKind::Steady => Box::new(SteadyArrival {
+                interval: Duration::from_secs_f64(1.0 / rate_per_conn),
+                i: 0,
+            }),
+            ArrivalKind::OnOff { duty, period_ms } => {
+                let period = period_ms / 1e3;
+                Box::new(OnOffArrival {
+                    step: duty / rate_per_conn,
+                    period,
+                    on: duty * period,
+                    t: 0.0,
+                })
+            }
+            ArrivalKind::Phased { depth, period_ms } => Box::new(PhasedArrival {
+                base: rate_per_conn,
+                depth,
+                period: period_ms / 1e3,
+                t: 0.0,
+            }),
+        }
+    }
+
+    /// Report/JSON label.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalKind::Steady => "steady",
+            ArrivalKind::OnOff { .. } => "onoff",
+            ArrivalKind::Phased { .. } => "phased",
+        }
+    }
+}
+
 /// Load-generator knobs.
 #[derive(Debug, Clone)]
 pub struct LoadgenConfig {
@@ -108,12 +316,20 @@ pub struct LoadgenConfig {
     pub rate_per_conn: f64,
     /// Run length per mix, seconds.
     pub secs: f64,
-    /// Insert keys drawn uniformly from `1..=key_range`.
+    /// Insert keys drawn from `1..=key_range` per `dist`.
     pub key_range: u64,
     /// Elements inserted before the timed run (deleteMin material).
     pub prefill: u64,
     /// RNG seed.
     pub seed: u64,
+    /// Insert-key distribution.
+    pub dist: KeyDistKind,
+    /// Arrival process shaping the open-loop schedule.
+    pub arrival: ArrivalKind,
+    /// Ops pipelined per burst (>= 1). The final partial burst — the
+    /// remainder when the schedule does not divide evenly — is still
+    /// sent and measured.
+    pub batch: usize,
 }
 
 impl LoadgenConfig {
@@ -127,6 +343,9 @@ impl LoadgenConfig {
                 key_range: 1 << 20,
                 prefill: 2_000,
                 seed: 42,
+                dist: KeyDistKind::Uniform,
+                arrival: ArrivalKind::Steady,
+                batch: 1,
             }
         } else {
             LoadgenConfig {
@@ -136,8 +355,57 @@ impl LoadgenConfig {
                 key_range: 1 << 20,
                 prefill: 20_000,
                 seed: 42,
+                dist: KeyDistKind::Uniform,
+                arrival: ArrivalKind::Steady,
+                batch: 1,
             }
         }
+    }
+
+    /// Build one key sampler (the Zipf table is `Arc`-shared, so
+    /// per-connection builds after the first are cheap).
+    fn build_dist(&self, shared_zipf: &Option<Zipf>) -> Box<dyn KeyDist> {
+        match (&self.dist, shared_zipf) {
+            (KeyDistKind::Zipf { .. }, Some(z)) => Box::new(ZipfKeys { zipf: z.clone() }),
+            _ => Box::new(UniformKeys { range: self.key_range }),
+        }
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.conns == 0 || self.rate_per_conn <= 0.0 || self.secs <= 0.0 || self.key_range == 0
+        {
+            return Err(Error::Config(
+                "loadgen needs conns >= 1, rate > 0, secs > 0, key-range >= 1".into(),
+            ));
+        }
+        if self.batch == 0 {
+            return Err(Error::Config("loadgen batch must be >= 1".into()));
+        }
+        if let KeyDistKind::Zipf { s } = self.dist {
+            if !(s > 0.0 && s.is_finite()) {
+                return Err(Error::Config(format!("zipf exponent must be finite and > 0, got {s}")));
+            }
+        }
+        match self.arrival {
+            ArrivalKind::Steady => {}
+            ArrivalKind::OnOff { duty, period_ms } => {
+                if !(duty > 0.0 && duty <= 1.0) || !(period_ms > 0.0) {
+                    return Err(Error::Config(format!(
+                        "onoff arrivals need 0 < duty <= 1 and period > 0, \
+                         got duty {duty}, period_ms {period_ms}"
+                    )));
+                }
+            }
+            ArrivalKind::Phased { depth, period_ms } => {
+                if !(0.0..1.0).contains(&depth) || !(period_ms > 0.0) {
+                    return Err(Error::Config(format!(
+                        "phased arrivals need 0 <= depth < 1 and period > 0, \
+                         got depth {depth}, period_ms {period_ms}"
+                    )));
+                }
+            }
+        }
+        Ok(())
     }
 }
 
@@ -152,6 +420,9 @@ pub struct MixOutcome {
     pub target_rate: f64,
     /// Completed operations.
     pub ops: u64,
+    /// Latency samples recorded (must equal `ops`: every scheduled op
+    /// that was sent — including the final partial burst — is measured).
+    pub samples: u64,
     /// deleteMins that observed an empty queue.
     pub empty_deletes: u64,
     /// Wall-clock seconds of the run.
@@ -171,20 +442,22 @@ pub struct MixOutcome {
 /// Drive one mix against the service at `addr` (open loop; see module
 /// docs). The queue is prefilled once per call.
 pub fn run_mix(addr: &str, mix: OpMix, cfg: &LoadgenConfig) -> Result<MixOutcome> {
-    if cfg.conns == 0 || cfg.rate_per_conn <= 0.0 || cfg.secs <= 0.0 || cfg.key_range == 0 {
-        return Err(Error::Config(
-            "loadgen needs conns >= 1, rate > 0, secs > 0, key-range >= 1".into(),
-        ));
-    }
-    // Prefill from one pipelined connection (batched inserts).
+    cfg.validate()?;
+    let shared_zipf = match cfg.dist {
+        KeyDistKind::Zipf { s } => Some(Zipf::new(cfg.key_range, s)),
+        KeyDistKind::Uniform => None,
+    };
+    // Prefill from one pipelined connection (batched inserts, drawn
+    // from the run's key distribution so residents match the traffic).
     {
         let mut c = ServiceClient::connect(addr)?;
         let mut rng = Rng::new(cfg.seed ^ 0xF111);
+        let mut dist = cfg.build_dist(&shared_zipf);
         let mut left = cfg.prefill;
         while left > 0 {
             let n = left.min(256) as usize;
             let items: Vec<(u64, u64)> =
-                (0..n).map(|_| (1 + rng.gen_range(cfg.key_range), 7)).collect();
+                (0..n).map(|_| (dist.next_key(&mut rng), 7)).collect();
             c.insert_batch(&items)?;
             left -= n as u64;
         }
@@ -197,33 +470,68 @@ pub fn run_mix(addr: &str, mix: OpMix, cfg: &LoadgenConfig) -> Result<MixOutcome
             .map(|conn_id| {
                 let hist = Arc::clone(&hist);
                 let empty_deletes = Arc::clone(&empty_deletes);
+                let mut dist = cfg.build_dist(&shared_zipf);
+                let mut arrival = cfg.arrival.build(cfg.rate_per_conn);
                 s.spawn(move || -> Result<u64> {
                     let mut client = ServiceClient::connect(addr)?;
                     let mut rng = Rng::stream(cfg.seed, conn_id as u64 + 1);
-                    let interval = Duration::from_secs_f64(1.0 / cfg.rate_per_conn);
                     let run = Duration::from_secs_f64(cfg.secs);
                     let start = Instant::now();
-                    let mut i = 0u64;
-                    loop {
-                        let sched = interval.mul_f64(i as f64);
-                        if sched >= run {
-                            return Ok(i);
+                    let mut ops = 0u64;
+                    let mut empty = 0u64;
+                    let mut scheds: Vec<Duration> = Vec::with_capacity(cfg.batch);
+                    let mut reqs: Vec<Request> = Vec::with_capacity(cfg.batch);
+                    let mut done = false;
+                    while !done {
+                        scheds.clear();
+                        reqs.clear();
+                        // Accumulate up to `batch` scheduled ops. When
+                        // the run ends mid-burst, the partial remainder
+                        // is kept — it still goes out below.
+                        while scheds.len() < cfg.batch {
+                            let sched = arrival.next_arrival();
+                            if sched >= run {
+                                done = true;
+                                break;
+                            }
+                            let frac = sched.as_secs_f64() / cfg.secs;
+                            if rng.gen_f64() * 100.0 < mix.insert_pct_at(frac) {
+                                let key = dist.next_key(&mut rng);
+                                reqs.push(Request::Insert { key, value: key });
+                            } else {
+                                reqs.push(Request::DeleteMin);
+                            }
+                            scheds.push(sched);
                         }
+                        if reqs.is_empty() {
+                            break;
+                        }
+                        // A pipelined burst goes out at its *last* op's
+                        // scheduled time, so no completion precedes its
+                        // own schedule.
+                        let last = *scheds.last().expect("burst is non-empty");
                         let now = start.elapsed();
-                        if sched > now {
-                            std::thread::sleep(sched - now);
+                        if last > now {
+                            std::thread::sleep(last - now);
                         }
-                        let frac = sched.as_secs_f64() / cfg.secs;
-                        let sched_at = start + sched;
-                        if rng.gen_f64() * 100.0 < mix.insert_pct_at(frac) {
-                            let key = 1 + rng.gen_range(cfg.key_range);
-                            client.insert(key, key)?;
-                        } else if client.delete_min()?.is_none() {
-                            empty_deletes.fetch_add(1, Ordering::Relaxed);
+                        let resps = client.send(&reqs)?;
+                        let completed = start.elapsed();
+                        for (resp, &sched) in resps.iter().zip(scheds.iter()) {
+                            if let Response::Error { code, message } = resp {
+                                return Err(Error::Invariant(format!(
+                                    "service error {code}: {message}"
+                                )));
+                            }
+                            if matches!(resp, Response::DeleteMin(None)) {
+                                empty += 1;
+                            }
+                            let lat = completed.checked_sub(sched).unwrap_or_default();
+                            hist.record(lat.as_nanos() as u64);
+                            ops += 1;
                         }
-                        hist.record(sched_at.elapsed().as_nanos() as u64);
-                        i += 1;
                     }
+                    empty_deletes.fetch_add(empty, Ordering::Relaxed);
+                    Ok(ops)
                 })
             })
             .collect();
@@ -240,6 +548,7 @@ pub fn run_mix(addr: &str, mix: OpMix, cfg: &LoadgenConfig) -> Result<MixOutcome
         conns: cfg.conns,
         target_rate: cfg.rate_per_conn * cfg.conns as f64,
         ops,
+        samples: hist.count(),
         empty_deletes: empty_deletes.load(Ordering::Relaxed),
         elapsed_s,
         mops: ops as f64 / elapsed_s / 1e6,
@@ -287,6 +596,118 @@ pub fn loadgen_table(addr: &str, outcomes: &[MixOutcome]) -> Table {
     t
 }
 
+// --------------------------------------------------- skew comparison
+
+/// Backend of the skew comparison: exact and thread-light, so the p99
+/// difference is attributable to sharding, not backend relaxation.
+pub const SKEW_BACKEND: &str = "lotan_shavit";
+/// Shard count of the skew comparison (the acceptance setting).
+pub const SKEW_SHARDS: usize = 8;
+/// Zipf exponent of the skew comparison.
+pub const SKEW_ZIPF_S: f64 = 1.2;
+
+/// Static-vs-elastic outcome under the Zipf deleteMin-heavy mix.
+#[derive(Debug, Clone)]
+pub struct SkewComparison {
+    /// Backend label.
+    pub backend: String,
+    /// Shard count (both sides).
+    pub shards: usize,
+    /// Mix label.
+    pub mix: &'static str,
+    /// Zipf exponent driving the key stream.
+    pub zipf_s: f64,
+    /// Static sharding throughput, Mops/s.
+    pub static_mops: f64,
+    /// Static sharding tail latency, µs.
+    pub static_p99_us: f64,
+    /// Elastic sharding throughput, Mops/s.
+    pub elastic_mops: f64,
+    /// Elastic sharding tail latency, µs.
+    pub elastic_p99_us: f64,
+    /// Rebalances the elastic side completed during the run.
+    pub rebalances: u64,
+    /// Final shard-map epoch of the elastic side.
+    pub epoch: u64,
+}
+
+impl SkewComparison {
+    /// Static-over-elastic p99 ratio (`> 1` means elastic wins).
+    pub fn p99_ratio(&self) -> f64 {
+        self.static_p99_us / self.elastic_p99_us.max(1e-9)
+    }
+}
+
+fn run_skew_side(lg: &LoadgenConfig, elastic: bool) -> Result<(MixOutcome, u64, u64)> {
+    let svc = PqService::start(ServiceConfig {
+        backend: SKEW_BACKEND.to_string(),
+        shards: SKEW_SHARDS,
+        key_span: lg.key_range,
+        max_conns: lg.conns + 8,
+        elastic,
+        rebalance_interval_ms: 20,
+        rebalance_min_ops: 200,
+        ..Default::default()
+    })?;
+    let addr = svc.addr().to_string();
+    let o = run_mix(&addr, OpMix::DeleteHeavy, lg)?;
+    let rebalances = svc.rebalances();
+    let epoch = svc.sharded().epoch();
+    ServiceClient::connect(&addr)?.shutdown()?;
+    svc.wait();
+    Ok((o, rebalances, epoch))
+}
+
+/// The figure's skew acceptance point: Zipf s=1.2 keys, deleteMin-heavy
+/// mix, bursty arrivals, [`SKEW_SHARDS`] shards — static sharding vs
+/// the elastic rebalancer, identical load otherwise.
+pub fn run_skew_comparison(quick: bool) -> Result<SkewComparison> {
+    let mut lg = LoadgenConfig::new(quick);
+    lg.dist = KeyDistKind::Zipf { s: SKEW_ZIPF_S };
+    lg.arrival = ArrivalKind::OnOff { duty: 0.5, period_ms: 50.0 };
+    lg.batch = 4;
+    let (st, _, _) = run_skew_side(&lg, false)?;
+    let (el, rebalances, epoch) = run_skew_side(&lg, true)?;
+    Ok(SkewComparison {
+        backend: SKEW_BACKEND.to_string(),
+        shards: SKEW_SHARDS,
+        mix: st.mix,
+        zipf_s: SKEW_ZIPF_S,
+        static_mops: st.mops,
+        static_p99_us: st.p99_us,
+        elastic_mops: el.mops,
+        elastic_p99_us: el.p99_us,
+        rebalances,
+        epoch,
+    })
+}
+
+/// Render the skew-comparison table.
+pub fn skew_table(skew: &SkewComparison) -> Table {
+    let mut t = Table::new(
+        format!(
+            "Skew comparison ({} x{}, zipf s={}, {}): static vs elastic sharding",
+            skew.backend, skew.shards, skew.zipf_s, skew.mix
+        ),
+        &["mode", "mops", "p99_us", "rebalances", "epoch"],
+    );
+    t.row(vec![
+        "static".to_string(),
+        fmt(skew.static_mops),
+        fmt(skew.static_p99_us),
+        "0".to_string(),
+        "0".to_string(),
+    ]);
+    t.row(vec![
+        "elastic".to_string(),
+        fmt(skew.elastic_mops),
+        fmt(skew.elastic_p99_us),
+        skew.rebalances.to_string(),
+        skew.epoch.to_string(),
+    ]);
+    t
+}
+
 // ------------------------------------------------------- figure sweep
 
 /// One point of the service sweep.
@@ -319,8 +740,14 @@ pub fn service_json_path() -> std::path::PathBuf {
     crate::harness::repo_root_file("BENCH_service.json")
 }
 
-/// Serialize the sweep as the `BENCH_service` JSON schema.
-pub fn results_to_json(quick: bool, key_span: u64, points: &[ServicePoint]) -> String {
+/// Serialize the sweep as the `BENCH_service` JSON schema (v2: with
+/// the static-vs-elastic `skew` object).
+pub fn results_to_json(
+    quick: bool,
+    key_span: u64,
+    points: &[ServicePoint],
+    skew: &SkewComparison,
+) -> String {
     let mut s = String::new();
     s.push_str("{\n");
     s.push_str("  \"generated_by\": \"smartpq bench --figure service\",\n");
@@ -328,6 +755,20 @@ pub fn results_to_json(quick: bool, key_span: u64, points: &[ServicePoint]) -> S
     s.push_str(&format!("  \"quick\": {quick},\n"));
     s.push_str(&format!("  \"host_parallelism\": {},\n", host_parallelism()));
     s.push_str(&format!("  \"key_span\": {key_span},\n"));
+    s.push_str("  \"skew\": {\n");
+    s.push_str(&format!("    \"backend\": \"{}\",\n", skew.backend));
+    s.push_str(&format!("    \"shards\": {},\n", skew.shards));
+    s.push_str(&format!("    \"mix\": \"{}\",\n", skew.mix));
+    s.push_str("    \"dist\": \"zipf\",\n");
+    s.push_str(&format!("    \"zipf_s\": {:.3},\n", skew.zipf_s));
+    s.push_str(&format!("    \"static_mops\": {:.6},\n", skew.static_mops));
+    s.push_str(&format!("    \"static_p99_us\": {:.3},\n", skew.static_p99_us));
+    s.push_str(&format!("    \"elastic_mops\": {:.6},\n", skew.elastic_mops));
+    s.push_str(&format!("    \"elastic_p99_us\": {:.3},\n", skew.elastic_p99_us));
+    s.push_str(&format!("    \"rebalances\": {},\n", skew.rebalances));
+    s.push_str(&format!("    \"epoch\": {},\n", skew.epoch));
+    s.push_str(&format!("    \"p99_ratio\": {:.6}\n", skew.p99_ratio()));
+    s.push_str("  },\n");
     s.push_str("  \"sweeps\": [\n");
     for (i, p) in points.iter().enumerate() {
         s.push_str(&format!(
@@ -433,9 +874,14 @@ pub fn run_service_figure_to(
     }
     t.print();
     let _ = t.write_csv(format!("{REPORT_DIR}/service_sweep.csv"));
-    std::fs::write(json_path, results_to_json(cfg.quick, lg.key_range, &points))?;
+    // The skew acceptance point: same loadgen, Zipf keys, bursty
+    // arrivals, static vs elastic sharding at SKEW_SHARDS.
+    let skew = run_skew_comparison(cfg.quick)?;
+    let st = skew_table(&skew);
+    st.print();
+    std::fs::write(json_path, results_to_json(cfg.quick, lg.key_range, &points, &skew))?;
     println!("service results written to {}", json_path.display());
-    Ok(vec![t])
+    Ok(vec![t, st])
 }
 
 /// The full figure with the default JSON location (repo root).
@@ -479,13 +925,76 @@ mod tests {
             key_range: 10_000,
             prefill: 500,
             seed: 7,
+            dist: KeyDistKind::Uniform,
+            arrival: ArrivalKind::Steady,
+            batch: 1,
         };
         let o = run_mix(&addr, OpMix::Balanced, &cfg).unwrap();
         assert!(o.ops > 0, "{o:?}");
+        assert_eq!(o.samples, o.ops, "every sent op must be measured: {o:?}");
         assert!(o.mops > 0.0);
         assert!(o.p50_us <= o.p99_us && o.p99_us <= o.p999_us, "{o:?}");
         svc.shutdown();
         svc.wait();
+    }
+
+    #[test]
+    fn batched_zipf_loadgen_measures_every_scheduled_op() {
+        let svc = PqService::start(ServiceConfig {
+            backend: "multiqueue".to_string(),
+            shards: 2,
+            ..Default::default()
+        })
+        .unwrap();
+        let addr = svc.addr().to_string();
+        let mut cfg = LoadgenConfig::new(true);
+        cfg.conns = 2;
+        cfg.rate_per_conn = 3_000.0;
+        cfg.secs = 0.1;
+        cfg.prefill = 300;
+        cfg.dist = KeyDistKind::Zipf { s: 1.2 };
+        cfg.arrival = ArrivalKind::OnOff { duty: 0.4, period_ms: 20.0 };
+        // A batch that will not divide the schedule evenly: the final
+        // partial burst must still be sent and recorded.
+        cfg.batch = 7;
+        let o = run_mix(&addr, OpMix::DeleteHeavy, &cfg).unwrap();
+        assert!(o.ops > 0, "{o:?}");
+        assert_eq!(o.samples, o.ops, "remainder burst dropped: {o:?}");
+        svc.shutdown();
+        svc.wait();
+    }
+
+    #[test]
+    fn arrival_generators_are_monotone() {
+        for kind in [
+            ArrivalKind::Steady,
+            ArrivalKind::OnOff { duty: 0.3, period_ms: 20.0 },
+            ArrivalKind::Phased { depth: 0.8, period_ms: 30.0 },
+        ] {
+            let mut g = kind.build(1_000.0);
+            let mut prev = Duration::ZERO;
+            for _ in 0..500 {
+                let t = g.next_arrival();
+                assert!(t >= prev, "{kind:?} scheduled {t:?} before {prev:?}");
+                prev = t;
+            }
+        }
+    }
+
+    #[test]
+    fn onoff_compresses_arrivals_into_the_duty_window() {
+        let mut g = ArrivalKind::OnOff { duty: 0.25, period_ms: 40.0 }.build(2_000.0);
+        for _ in 0..300 {
+            let t = g.next_arrival().as_secs_f64();
+            // An arrival at a period boundary (the start of a burst) can
+            // fmod to just *below* the period instead of 0, so accept
+            // both ends of the wraparound.
+            let within = t % 0.040;
+            assert!(
+                within < 0.010 + 1e-9 || within > 0.040 - 1e-9,
+                "arrival at {t}s falls outside the on window (within {within})"
+            );
+        }
     }
 
     #[test]
@@ -504,18 +1013,47 @@ mod tests {
                 switches: 1,
             },
         ];
-        let s = results_to_json(true, 1 << 20, &points);
+        let skew = SkewComparison {
+            backend: SKEW_BACKEND.to_string(),
+            shards: SKEW_SHARDS,
+            mix: "delete_heavy",
+            zipf_s: SKEW_ZIPF_S,
+            static_mops: 0.01,
+            static_p99_us: 800.0,
+            elastic_mops: 0.012,
+            elastic_p99_us: 400.0,
+            rebalances: 3,
+            epoch: 3,
+        };
+        let s = results_to_json(true, 1 << 20, &points, &skew);
         let v = crate::util::json::Json::parse(&s).expect("service JSON parses");
         assert_eq!(v.get("placeholder").unwrap().as_bool(), Some(false));
         let sweeps = v.get("sweeps").unwrap().as_array().unwrap();
         assert_eq!(sweeps.len(), 1);
         assert_eq!(sweeps[0].get("mix").unwrap().as_str(), Some("balanced"));
+        let sk = v.get("skew").expect("skew object present");
+        assert_eq!(sk.get("dist").unwrap().as_str(), Some("zipf"));
+        assert_eq!(sk.get("rebalances").unwrap().as_u64(), Some(3));
+        let ratio = sk.get("p99_ratio").unwrap().as_f64().unwrap();
+        assert!((ratio - 2.0).abs() < 1e-6, "ratio {ratio}");
     }
 
     #[test]
     fn rejects_degenerate_loadgen_configs() {
         let mut cfg = LoadgenConfig::new(true);
         cfg.conns = 0;
+        assert!(run_mix("127.0.0.1:1", OpMix::Balanced, &cfg).is_err());
+        let mut cfg = LoadgenConfig::new(true);
+        cfg.batch = 0;
+        assert!(run_mix("127.0.0.1:1", OpMix::Balanced, &cfg).is_err());
+        let mut cfg = LoadgenConfig::new(true);
+        cfg.dist = KeyDistKind::Zipf { s: 0.0 };
+        assert!(run_mix("127.0.0.1:1", OpMix::Balanced, &cfg).is_err());
+        let mut cfg = LoadgenConfig::new(true);
+        cfg.arrival = ArrivalKind::OnOff { duty: 1.5, period_ms: 10.0 };
+        assert!(run_mix("127.0.0.1:1", OpMix::Balanced, &cfg).is_err());
+        let mut cfg = LoadgenConfig::new(true);
+        cfg.arrival = ArrivalKind::Phased { depth: 1.0, period_ms: 10.0 };
         assert!(run_mix("127.0.0.1:1", OpMix::Balanced, &cfg).is_err());
     }
 }

@@ -85,18 +85,35 @@ COMMANDS
                           target/reports/projection_*.csv (workload
                           options as for `app`)
   serve [--backend B] [--shards K] [--addr H:P] [--key-span N] [--max-conns N]
+        [--static-shards] [--strict-span] [--rebalance-ms D] [--imbalance X]
+        [--rebalance-min-ops N]
                           host K key-range shards of any registered
                           backend (default smartpq x2) behind the TCP
                           service; runs until a client sends a Shutdown
-                          frame (e.g. `smartpq loadgen --shutdown`)
+                          frame (e.g. `smartpq loadgen --shutdown`).
+                          Shards are elastic by default: a load-triggered
+                          rebalancer re-cuts the key ranges under a brief
+                          epoch quiesce when the busiest shard exceeds
+                          --imbalance x the mean (--static-shards turns
+                          this off; --strict-span rejects out-of-span
+                          insert keys with an error frame instead of
+                          clamping them onto the top shard)
   loadgen [--addr H:P] [--mix insert|balanced|delete|phases|all] [--conns C]
-          [--rate R] [--secs S] [--key-range N] [--shutdown]
-                          open-loop load generator: drives the service at
-                          a fixed schedule per connection and reports
+          [--rate R] [--secs S] [--key-range N] [--batch B] [--shutdown]
+          [--dist uniform|zipf] [--zipf-s S]
+          [--arrival steady|onoff|phased] [--burst-duty F]
+          [--burst-period-ms D] [--phase-depth F] [--phase-period-ms D]
+                          open-loop load generator: drives the service on
+                          a per-connection arrival schedule and reports
                           p50/p99/p999 latency measured from each op's
                           *scheduled* time (no coordinated omission).
-                          Without --addr an embedded loopback service is
-                          spawned (--backend/--shards as for serve)
+                          --dist zipf sends Zipf(s)-skewed keys (hot keys
+                          lowest); --arrival onoff compresses arrivals
+                          into duty-cycle bursts, phased modulates the
+                          rate sinusoidally; --batch pipelines B ops per
+                          burst. Without --addr an embedded loopback
+                          service is spawned (--backend/--shards and the
+                          serve rebalancer knobs apply)
   check-bench <BENCH_*.json ...> [--min-combining-speedup X]
                           validate bench artifacts: JSON schema, the
                           combining speedup target (>= 1.3x on hosts with
@@ -547,6 +564,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         addr: args.str_or("addr", "127.0.0.1:7171"),
         seed: args.num_or("seed", 42)?,
         decision_interval_ms: args.num_or("decision-ms", 50)?,
+        elastic: !args.flag("static-shards"),
+        rebalance_interval_ms: args.num_or("rebalance-ms", 50)?,
+        rebalance_imbalance: args.num_or("imbalance", 3.0)?,
+        rebalance_min_ops: args.num_or("rebalance-min-ops", 1_000)?,
+        strict_span: args.flag("strict-span"),
     };
     let backend = cfg.backend.clone();
     let shards = cfg.shards;
@@ -565,7 +587,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// Open-loop load generator; spawns an embedded loopback service when no
 /// --addr is given.
 fn cmd_loadgen(args: &Args) -> Result<()> {
-    use smartpq::harness::service_bench::{run_loadgen, LoadgenConfig, OpMix};
+    use smartpq::harness::service_bench::{
+        run_loadgen, ArrivalKind, KeyDistKind, LoadgenConfig, OpMix,
+    };
     use smartpq::service::{server::DEFAULT_KEY_SPAN, PqService, ServiceClient, ServiceConfig};
 
     let quick = args.flag("quick");
@@ -576,6 +600,27 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     cfg.key_range = args.num_or("key-range", cfg.key_range)?;
     cfg.prefill = args.num_or("prefill", cfg.prefill)?;
     cfg.seed = args.num_or("seed", cfg.seed)?;
+    cfg.batch = args.num_or("batch", cfg.batch)?;
+    cfg.dist = match args.choice("dist", &["uniform", "zipf"], "uniform")?.as_str() {
+        "zipf" => KeyDistKind::Zipf {
+            s: args.num_or("zipf-s", 1.2)?,
+        },
+        _ => KeyDistKind::Uniform,
+    };
+    cfg.arrival = match args
+        .choice("arrival", &["steady", "onoff", "phased"], "steady")?
+        .as_str()
+    {
+        "onoff" => ArrivalKind::OnOff {
+            duty: args.num_or("burst-duty", 0.5)?,
+            period_ms: args.num_or("burst-period-ms", 50.0)?,
+        },
+        "phased" => ArrivalKind::Phased {
+            depth: args.num_or("phase-depth", 0.8)?,
+            period_ms: args.num_or("phase-period-ms", 200.0)?,
+        },
+        _ => ArrivalKind::Steady,
+    };
     let mix_name = args.choice("mix", &["insert", "balanced", "delete", "phases", "all"], "all")?;
     let mixes: Vec<OpMix> = if mix_name == "all" {
         OpMix::all().to_vec()
@@ -590,6 +635,11 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
                 shards: args.num_or("shards", 2)?,
                 key_span: args.num_or("key-span", DEFAULT_KEY_SPAN)?,
                 max_conns: cfg.conns + 8,
+                elastic: !args.flag("static-shards"),
+                rebalance_interval_ms: args.num_or("rebalance-ms", 50)?,
+                rebalance_imbalance: args.num_or("imbalance", 3.0)?,
+                rebalance_min_ops: args.num_or("rebalance-min-ops", 1_000)?,
+                strict_span: args.flag("strict-span"),
                 ..Default::default()
             })?;
             let addr = svc.addr().to_string();

@@ -121,6 +121,26 @@ pub trait ConcurrentPQ: Send + Sync {
         let _ = n;
     }
 
+    /// Drain every element into `out`, returning how many were appended.
+    /// This is the bulk-migration path the elastic service plane uses to
+    /// move residents between shards during an epoch rebalance: the caller
+    /// MUST have quiesced the queue (no concurrent mutators), because the
+    /// loop only rides out *transient* empties from relaxed backends — it
+    /// stops after several consecutive empty batches, mirroring the drain
+    /// idiom of the service tests.
+    fn drain_into(&self, out: &mut Vec<(u64, u64)>) -> usize {
+        let before = out.len();
+        let mut empties = 0;
+        while empties < 3 {
+            if self.delete_min_batch(256, out) == 0 {
+                empties += 1;
+            } else {
+                empties = 0;
+            }
+        }
+        out.len() - before
+    }
+
     /// Approximate number of elements (maintained with relaxed counters).
     fn len(&self) -> usize;
 

@@ -10,7 +10,7 @@
 use std::io::{Read, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 
-use crate::service::proto::{self, Request, Response};
+use crate::service::proto::{self, Request, Response, ServiceStats};
 use crate::util::error::{Error, Result};
 
 /// A connected service client.
@@ -172,9 +172,24 @@ impl ServiceClient {
 
     /// Approximate element count across all shards.
     pub fn len(&mut self) -> Result<u64> {
+        Ok(self.len_and_epoch()?.0)
+    }
+
+    /// Approximate element count plus the shard-map epoch it was
+    /// observed under (the epoch bumps once per completed rebalance).
+    pub fn len_and_epoch(&mut self) -> Result<(u64, u64)> {
         match self.call(Request::Len)? {
-            Response::Len(n) => Ok(n),
+            Response::Len { len, epoch } => Ok((len, epoch)),
             other => Err(unexpected("Len", &other)),
+        }
+    }
+
+    /// Shard-map observability snapshot (epoch, rebalances, per-shard
+    /// resident and op spreads).
+    pub fn stats(&mut self) -> Result<ServiceStats> {
+        match self.call(Request::Stats)? {
+            Response::Stats(stats) => Ok(stats),
+            other => Err(unexpected("Stats", &other)),
         }
     }
 

@@ -10,8 +10,12 @@
 //!   decode).
 //! * [`server`] — a multi-threaded TCP server hosting K key-range shards
 //!   of any backend from the ten-backend registry (default SmartPQ),
-//!   with a relaxed min-of-shards deleteMin and per-connection request
-//!   fusing into the PR-3 batch entry points.
+//!   behind an **elastic, epoch-versioned shard map**: a tournament tree
+//!   routes deleteMin to the lowest-minimum shard in ~O(1), and a
+//!   load-triggered rebalancer re-cuts the key ranges at resident-count
+//!   quantiles under a brief epoch quiesce when traffic skews (Zipf-
+//!   shaped key streams no longer collapse onto one shard). Requests
+//!   are fused per connection into the PR-3 batch entry points.
 //! * [`client`] — a blocking, pipelining client used by the open-loop
 //!   load generator (`smartpq loadgen`,
 //!   [`crate::harness::service_bench`]) and the differential tests.
@@ -24,5 +28,5 @@ pub mod proto;
 pub mod server;
 
 pub use client::ServiceClient;
-pub use proto::{Request, Response};
-pub use server::{PqService, ServiceConfig, ShardedPq};
+pub use proto::{Request, Response, ServiceStats};
+pub use server::{PqService, RebalanceOutcome, ServiceConfig, ShardedPq};

@@ -18,7 +18,12 @@
 //! and [`decode_response`] return `Ok(None)` so a streaming reader can
 //! wait for more bytes.
 //!
-//! ## Frame payloads (version 1)
+//! ## Frame payloads (version 2)
+//!
+//! Version 2 makes the elastic shard map observable: `Len` responses
+//! carry the current map epoch next to the count, and the new
+//! `Stats` pair exposes the epoch, the completed-rebalance count, and
+//! the per-shard resident/op spreads the skew tests assert on.
 //!
 //! | opcode | request            | payload after opcode                  |
 //! |--------|--------------------|---------------------------------------|
@@ -28,6 +33,7 @@
 //! | `0x04` | InsertBatch        | count u32, count × (key u64, value u64) |
 //! | `0x05` | DeleteMinBatch     | n u32                                 |
 //! | `0x06` | Len                | —                                     |
+//! | `0x07` | Stats              | —                                     |
 //! | `0x0F` | Shutdown           | —                                     |
 //!
 //! | opcode | response           | payload after opcode                  |
@@ -37,14 +43,15 @@
 //! | `0x83` | Peek               | present u8 [, key u64]                |
 //! | `0x84` | InsertBatch        | count u32, count × ok u8              |
 //! | `0x85` | DeleteMinBatch     | count u32, count × (key u64, value u64) |
-//! | `0x86` | Len                | len u64                               |
+//! | `0x86` | Len                | len u64, epoch u64                    |
+//! | `0x87` | Stats              | epoch u64, rebalances u64, shards u32, shards × (len u64, ops u64) |
 //! | `0x8F` | Shutdown (ack)     | —                                     |
 //! | `0xFF` | Error              | code u16, msg_len u16, msg bytes      |
 
 use crate::util::error::{Error, Result};
 
 /// Protocol version carried in every frame.
-pub const PROTO_VERSION: u8 = 1;
+pub const PROTO_VERSION: u8 = 2;
 
 /// Maximum payload length a peer will accept (rejects garbage lengths
 /// before buffering them).
@@ -64,6 +71,8 @@ pub mod err {
     pub const MALFORMED: u16 = 3;
     /// Frame or batch larger than the protocol limits.
     pub const OVERSIZE: u16 = 4;
+    /// Insert key at or above the span of a strict-span service.
+    pub const KEY_RANGE: u16 = 5;
 }
 
 mod op {
@@ -73,6 +82,7 @@ mod op {
     pub const REQ_INSERT_BATCH: u8 = 0x04;
     pub const REQ_DELETE_MIN_BATCH: u8 = 0x05;
     pub const REQ_LEN: u8 = 0x06;
+    pub const REQ_STATS: u8 = 0x07;
     pub const REQ_SHUTDOWN: u8 = 0x0F;
     pub const RESP_INSERT: u8 = 0x81;
     pub const RESP_DELETE_MIN: u8 = 0x82;
@@ -80,6 +90,7 @@ mod op {
     pub const RESP_INSERT_BATCH: u8 = 0x84;
     pub const RESP_DELETE_MIN_BATCH: u8 = 0x85;
     pub const RESP_LEN: u8 = 0x86;
+    pub const RESP_STATS: u8 = 0x87;
     pub const RESP_SHUTDOWN: u8 = 0x8F;
     pub const RESP_ERROR: u8 = 0xFF;
 }
@@ -104,8 +115,26 @@ pub enum Request {
     DeleteMinBatch(u32),
     /// Approximate element count across all shards.
     Len,
+    /// Shard-map / rebalancer observability snapshot.
+    Stats,
     /// Stop the whole service after acknowledging.
     Shutdown,
+}
+
+/// A coherent shard-map observability snapshot (the `Stats` response
+/// payload): which epoch the map is on, how many rebalances completed,
+/// and the per-shard resident/window-op spreads the skew tests and the
+/// load generator assert on.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ServiceStats {
+    /// Shard-map epoch (bumped once per completed rebalance).
+    pub epoch: u64,
+    /// Completed rebalances since the service started.
+    pub rebalances: u64,
+    /// Per-shard resident counts (relaxed).
+    pub shard_lens: Vec<u64>,
+    /// Per-shard window op counters (reset by each rebalance check).
+    pub shard_ops: Vec<u64>,
 }
 
 /// A decoded response frame.
@@ -121,8 +150,16 @@ pub enum Response {
     InsertBatch(Vec<bool>),
     /// Popped elements (possibly fewer than requested).
     DeleteMinBatch(Vec<(u64, u64)>),
-    /// Approximate total element count.
-    Len(u64),
+    /// Approximate total element count plus the shard-map epoch it was
+    /// observed under.
+    Len {
+        /// Approximate element count across all shards.
+        len: u64,
+        /// Shard-map epoch at observation time.
+        epoch: u64,
+    },
+    /// Shard-map observability snapshot.
+    Stats(ServiceStats),
     /// Shutdown acknowledged.
     Shutdown,
     /// Server-side protocol error; the connection closes after this.
@@ -184,6 +221,7 @@ pub fn encode_request(req: &Request, out: &mut Vec<u8>) {
             put_u32(out, *n);
         }
         Request::Len => out.push(op::REQ_LEN),
+        Request::Stats => out.push(op::REQ_STATS),
         Request::Shutdown => out.push(op::REQ_SHUTDOWN),
     }
     end_frame(out, start);
@@ -233,9 +271,21 @@ pub fn encode_response(resp: &Response, out: &mut Vec<u8>) {
                 put_u64(out, v);
             }
         }
-        Response::Len(n) => {
+        Response::Len { len, epoch } => {
             out.push(op::RESP_LEN);
-            put_u64(out, *n);
+            put_u64(out, *len);
+            put_u64(out, *epoch);
+        }
+        Response::Stats(stats) => {
+            out.push(op::RESP_STATS);
+            put_u64(out, stats.epoch);
+            put_u64(out, stats.rebalances);
+            debug_assert_eq!(stats.shard_lens.len(), stats.shard_ops.len());
+            put_u32(out, stats.shard_lens.len() as u32);
+            for (len, ops) in stats.shard_lens.iter().zip(stats.shard_ops.iter()) {
+                put_u64(out, *len);
+                put_u64(out, *ops);
+            }
         }
         Response::Shutdown => out.push(op::RESP_SHUTDOWN),
         Response::Error { code, message } => {
@@ -384,6 +434,7 @@ pub fn decode_request(buf: &[u8]) -> Result<Option<(Request, usize)>> {
             Request::DeleteMinBatch(n)
         }
         op::REQ_LEN => Request::Len,
+        op::REQ_STATS => Request::Stats,
         op::REQ_SHUTDOWN => Request::Shutdown,
         other => return Err(Error::Parse(format!("unknown request opcode {other:#04x}"))),
     };
@@ -435,7 +486,27 @@ pub fn decode_response(buf: &[u8]) -> Result<Option<(Response, usize)>> {
             }
             Response::DeleteMinBatch(items)
         }
-        op::RESP_LEN => Response::Len(c.u64()?),
+        op::RESP_LEN => Response::Len {
+            len: c.u64()?,
+            epoch: c.u64()?,
+        },
+        op::RESP_STATS => {
+            let epoch = c.u64()?;
+            let rebalances = c.u64()?;
+            let n = c.batch_count()?;
+            let mut shard_lens = Vec::with_capacity(n);
+            let mut shard_ops = Vec::with_capacity(n);
+            for _ in 0..n {
+                shard_lens.push(c.u64()?);
+                shard_ops.push(c.u64()?);
+            }
+            Response::Stats(ServiceStats {
+                epoch,
+                rebalances,
+                shard_lens,
+                shard_ops,
+            })
+        }
         op::RESP_SHUTDOWN => Response::Shutdown,
         op::RESP_ERROR => {
             let code = c.u16()?;
@@ -470,6 +541,7 @@ mod tests {
             Request::InsertBatch(Vec::new()),
             Request::DeleteMinBatch(16),
             Request::Len,
+            Request::Stats,
             Request::Shutdown,
         ]
     }
@@ -485,7 +557,14 @@ mod tests {
             Response::InsertBatch(vec![true, false, true]),
             Response::DeleteMinBatch(vec![(1, 10), (2, 20)]),
             Response::DeleteMinBatch(Vec::new()),
-            Response::Len(42),
+            Response::Len { len: 42, epoch: 3 },
+            Response::Stats(ServiceStats {
+                epoch: 2,
+                rebalances: 2,
+                shard_lens: vec![4, 0, 9],
+                shard_ops: vec![100, 0, 7],
+            }),
+            Response::Stats(ServiceStats::default()),
             Response::Shutdown,
             Response::Error {
                 code: err::MALFORMED,

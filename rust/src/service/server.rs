@@ -2,21 +2,45 @@
 //! from the ten-backend registry, served by a fixed pool of handler
 //! threads.
 //!
-//! ## Sharding semantics
+//! ## Sharding semantics: an epoch-versioned elastic map
 //!
-//! Shard `i` owns the key interval `[1 + i * span, 1 + (i+1) * span)`
-//! where `span = key_span / shards`; the last shard is open-ended (keys
-//! at or above `key_span` all land there). Because the partition is
-//! *monotone in the key*, the global minimum always lives in the
-//! lowest-indexed non-empty shard — so deleteMin scans shards in index
-//! order and pops from the first one that yields an element. The
-//! guarantee is deliberately **relaxed min-of-shards**: a pop races
-//! concurrent inserts into lower shards exactly the way a SprayList pop
-//! races concurrent inserts below the spray window, and every returned
+//! Shard `i` owns a contiguous key interval `[bounds[i-1], bounds[i])`;
+//! the last bound is always `u64::MAX`, so the top shard is open-ended
+//! and keys past the nominal `key_span` stay legal (services that want
+//! to reject them instead opt into `strict_span`, which answers such
+//! inserts with an [`proto::err::KEY_RANGE`] error frame at decode
+//! time). The map starts as the even `key_span / shards` cut, but it is
+//! **not fixed**: per-shard load counters (window ops + resident size)
+//! feed a rebalancer that re-cuts the bounds at resident-count
+//! quantiles whenever the hottest shard's load diverges beyond a
+//! configured multiple of the mean — the service-plane analogue of
+//! SmartPQ's runtime adaptation, aimed at Zipf-shaped key streams that
+//! would otherwise collapse onto one shard. Each rebalance drains every
+//! shard through the bulk pop path, re-deals the sorted residents
+//! through the sorted bulk-insert path, and bumps the map's **epoch**
+//! (visible in `Len`/`Stats` frames).
+//!
+//! Every queue operation holds the read side of the map's `RwLock`; the
+//! rebalancer's write acquisition is the *epoch quiesce* — a brief
+//! total order between the old map and the new one.
+//!
+//! ## The deleteMin relaxation contract
+//!
+//! Because the partition is *monotone in the key*, the global minimum
+//! always lives in the lowest-indexed non-empty shard. deleteMin routes
+//! through a cached tournament tree over per-shard minimum hints
+//! ([`MinTree`], ~O(1) instead of an O(K) scan) and the guarantee is
+//! deliberately **relaxed min-of-shards**: a pop races concurrent
+//! inserts into lower shards exactly the way a SprayList pop races
+//! concurrent inserts below the spray window, and every returned
 //! element is a key that was live in *some* shard at the time of the
-//! scan. With a single quiesced client the scan is exact: elements drain
-//! in global key order (shard order ∘ per-shard order), which
-//! `tests/service.rs` pins for an exact backend.
+//! routing decision. Across an epoch migration the contract is
+//! unchanged: ops serialize either before the quiesce (old map) or
+//! after it (new map), and the migration itself moves elements without
+//! ever dropping or duplicating one. With a single quiesced client the
+//! routing is exact even across a rebalance: elements drain in global
+//! key order (shard order ∘ per-shard order), which `tests/service.rs`
+//! pins for an exact backend.
 //!
 //! ## Connection handling = network combining
 //!
@@ -41,13 +65,14 @@
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex, RwLock};
 use std::time::Duration;
 
 use crate::pq::traits::{ConcurrentPQ, KEY_MAX_SENTINEL};
-use crate::service::proto::{self, Request, Response};
+use crate::service::proto::{self, Request, Response, ServiceStats};
 use crate::util::error::{Error, Result};
+use crate::util::sync::CacheLine;
 use crate::workloads::driver::{build_queue, AdaptiveProbe, BuiltQueue};
 
 /// Default expected user-key upper bound for range sharding (keys above
@@ -76,6 +101,22 @@ pub struct ServiceConfig {
     pub seed: u64,
     /// Decision tick for adaptive (SmartPQ) shards, milliseconds.
     pub decision_interval_ms: u64,
+    /// Enable the elastic rebalancer (meaningful for `shards > 1`).
+    pub elastic: bool,
+    /// Rebalance-check cadence, milliseconds.
+    pub rebalance_interval_ms: u64,
+    /// Imbalance trigger: rebalance when the hottest shard's load
+    /// (window ops + residents) exceeds this multiple of the mean shard
+    /// load. Note `max/mean <= shards` by construction, so the
+    /// threshold must sit below the shard count to ever fire (3.0 is
+    /// tuned for the 8-shard skew configurations).
+    pub rebalance_imbalance: f64,
+    /// Minimum window ops before the imbalance check may fire.
+    pub rebalance_min_ops: u64,
+    /// Reject inserts at or above `key_span` with a
+    /// [`proto::err::KEY_RANGE`] error frame instead of routing them to
+    /// the open-ended top shard.
+    pub strict_span: bool,
 }
 
 impl Default for ServiceConfig {
@@ -88,21 +129,161 @@ impl Default for ServiceConfig {
             addr: "127.0.0.1:0".to_string(),
             seed: 42,
             decision_interval_ms: 50,
+            elastic: true,
+            rebalance_interval_ms: 50,
+            rebalance_imbalance: 3.0,
+            rebalance_min_ops: 1_000,
+            strict_span: false,
         }
     }
 }
 
+/// What a completed epoch migration did (see
+/// [`ShardedPq::rebalance_now`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RebalanceOutcome {
+    /// The new map epoch.
+    pub epoch: u64,
+    /// Residents migrated through the drain + bulk-insert paths.
+    pub resident: usize,
+}
+
+/// Lock-free tournament tree over per-shard minimum hints: leaf `s`
+/// holds a relaxed **lower bound** on shard `s`'s live keys, internal
+/// nodes hold the min of their children, so the root names the shard
+/// most likely to own the global minimum in O(log K) instead of an
+/// O(K) hint scan per pop.
+///
+/// Leaf value domain: `0` means *unknown* (it sorts below every user
+/// key, so unprobed shards are examined first), [`KEY_MAX_SENTINEL`]
+/// means *observed empty*, anything else is a lower bound installed by
+/// an insert ([`MinTree::lower`]) or a pop-side [`MinTree::refresh`].
+/// Refreshes replace a leaf only via `compare_exchange` from the value
+/// the caller observed, so a racing insert's tighter bound is never
+/// clobbered by a stale reader.
+struct MinTree {
+    /// Heap layout: `nodes[1]` is the root, leaf `s` lives at
+    /// `nodes[width + s]`, padding leaves (`s >= shards`) are pinned at
+    /// [`KEY_MAX_SENTINEL`].
+    nodes: Vec<AtomicU64>,
+    width: usize,
+}
+
+impl MinTree {
+    fn new(shards: usize) -> MinTree {
+        let width = shards.next_power_of_two().max(1);
+        let nodes: Vec<AtomicU64> =
+            (0..2 * width).map(|_| AtomicU64::new(KEY_MAX_SENTINEL)).collect();
+        let tree = MinTree { nodes, width };
+        for s in 0..shards {
+            tree.set(s, 0); // unknown: probe before trusting
+        }
+        tree
+    }
+
+    #[inline]
+    fn leaf(&self, s: usize) -> &AtomicU64 {
+        &self.nodes[self.width + s]
+    }
+
+    #[inline]
+    fn leaf_value(&self, s: usize) -> u64 {
+        self.leaf(s).load(Ordering::Relaxed)
+    }
+
+    /// Recompute the internal mins on the path from leaf `s` to the
+    /// root (relaxed stores: the tree is a routing heuristic, every
+    /// consumer re-validates against the shard itself).
+    fn pull_up(&self, s: usize) {
+        let mut i = (self.width + s) / 2;
+        while i >= 1 {
+            let l = self.nodes[2 * i].load(Ordering::Relaxed);
+            let r = self.nodes[2 * i + 1].load(Ordering::Relaxed);
+            self.nodes[i].store(l.min(r), Ordering::Relaxed);
+            if i == 1 {
+                break;
+            }
+            i /= 2;
+        }
+    }
+
+    /// Unconditionally install `key` at leaf `s` (the rebalancer's
+    /// rebuild, under the map write lock).
+    fn set(&self, s: usize, key: u64) {
+        self.leaf(s).store(key, Ordering::Relaxed);
+        self.pull_up(s);
+    }
+
+    /// Lower leaf `s` to at most `key` (insert side): bounds only ever
+    /// tighten downward here, so concurrent lowers compose.
+    fn lower(&self, s: usize, key: u64) {
+        if self.leaf(s).fetch_min(key, Ordering::Relaxed) > key {
+            self.pull_up(s);
+        }
+    }
+
+    /// Replace leaf `s`'s `observed` value with `fresh` (pop side). The
+    /// CAS fails harmlessly when an insert lowered the leaf in between:
+    /// the tighter bound wins.
+    fn refresh(&self, s: usize, observed: u64, fresh: u64) {
+        let _ = self
+            .leaf(s)
+            .compare_exchange(observed, fresh, Ordering::Relaxed, Ordering::Relaxed);
+        self.pull_up(s);
+    }
+
+    /// Walk root → leaf picking the smaller child (ties to the left,
+    /// i.e. the lower shard index) and return `(shard, leaf value)`.
+    /// A [`KEY_MAX_SENTINEL`] value may name a padding leaf — callers
+    /// must check the value before indexing shards with it.
+    fn winner(&self) -> (usize, u64) {
+        let mut i = 1;
+        while i < self.width {
+            let l = self.nodes[2 * i].load(Ordering::Relaxed);
+            let r = self.nodes[2 * i + 1].load(Ordering::Relaxed);
+            i = if r < l { 2 * i + 1 } else { 2 * i };
+        }
+        (i - self.width, self.nodes[i].load(Ordering::Relaxed))
+    }
+}
+
+/// The epoch-versioned partition (see the module docs).
+struct ShardMap {
+    /// Exclusive upper key bound per shard, ascending; the last entry
+    /// is always `u64::MAX` (the top shard is open-ended).
+    bounds: Vec<u64>,
+    /// Bumped once per completed rebalance.
+    epoch: u64,
+}
+
+/// Which shard of `bounds` owns `key`.
+#[inline]
+fn shard_of_in(bounds: &[u64], key: u64) -> usize {
+    bounds.partition_point(|&b| b <= key).min(bounds.len() - 1)
+}
+
 /// K backend instances composed into one key-range-sharded priority
-/// queue (see the module docs for the deleteMin guarantee).
+/// queue behind an elastic shard map (see the module docs for the
+/// deleteMin guarantee and the epoch-quiesce protocol).
 pub struct ShardedPq {
     shards: Vec<BuiltQueue>,
-    /// Exclusive upper key bound per shard; the last entry is
-    /// `u64::MAX` (the top shard is open-ended).
-    bounds: Vec<u64>,
+    /// Every queue op holds the read side; the rebalancer's write
+    /// acquisition is the epoch quiesce.
+    map: RwLock<ShardMap>,
+    /// ~O(1) deleteMin routing (see [`MinTree`]).
+    tree: MinTree,
+    /// Per-shard window op counters feeding the imbalance trigger (one
+    /// cache line each — they are touched on every request sweep).
+    loads: Vec<CacheLine<AtomicU64>>,
+    /// Completed epoch migrations.
+    rebalances: AtomicU64,
+    rebalance_imbalance: f64,
+    rebalance_min_ops: u64,
 }
 
 impl ShardedPq {
-    /// Build `cfg.shards` instances of `cfg.backend`.
+    /// Build `cfg.shards` instances of `cfg.backend` behind the even
+    /// `key_span / shards` starting cut.
     pub fn new(cfg: &ServiceConfig) -> Result<ShardedPq> {
         if cfg.shards == 0 {
             return Err(Error::Config("service needs at least one shard".into()));
@@ -111,6 +292,12 @@ impl ShardedPq {
             return Err(Error::Config(format!(
                 "key_span {} smaller than shard count {}",
                 cfg.key_span, cfg.shards
+            )));
+        }
+        if !cfg.rebalance_imbalance.is_finite() || cfg.rebalance_imbalance < 1.0 {
+            return Err(Error::Config(format!(
+                "rebalance imbalance threshold must be >= 1.0, got {}",
+                cfg.rebalance_imbalance
             )));
         }
         let mut shards = Vec::with_capacity(cfg.shards);
@@ -127,7 +314,17 @@ impl ShardedPq {
                 }
             })
             .collect();
-        Ok(ShardedPq { shards, bounds })
+        let tree = MinTree::new(cfg.shards);
+        let loads = (0..cfg.shards).map(|_| CacheLine::new(AtomicU64::new(0))).collect();
+        Ok(ShardedPq {
+            shards,
+            map: RwLock::new(ShardMap { bounds, epoch: 0 }),
+            tree,
+            loads,
+            rebalances: AtomicU64::new(0),
+            rebalance_imbalance: cfg.rebalance_imbalance,
+            rebalance_min_ops: cfg.rebalance_min_ops,
+        })
     }
 
     /// Shard count.
@@ -135,24 +332,86 @@ impl ShardedPq {
         self.shards.len()
     }
 
-    /// Which shard owns `key`.
+    /// Which shard owns `key` under the current map.
     pub fn shard_of(&self, key: u64) -> usize {
-        self.bounds
+        let map = self.map.read().expect("shard map lock");
+        shard_of_in(&map.bounds, key)
+    }
+
+    /// Current map epoch (bumped once per completed rebalance).
+    pub fn epoch(&self) -> u64 {
+        self.map.read().expect("shard map lock").epoch
+    }
+
+    /// Completed rebalances since construction.
+    pub fn rebalances(&self) -> u64 {
+        self.rebalances.load(Ordering::Relaxed)
+    }
+
+    /// Per-shard resident counts (relaxed).
+    pub fn shard_lens(&self) -> Vec<u64> {
+        let _map = self.map.read().expect("shard map lock");
+        self.shards.iter().map(|s| s.queue.len() as u64).collect()
+    }
+
+    /// Per-shard window op counters (reset by each rebalance check).
+    pub fn shard_ops(&self) -> Vec<u64> {
+        self.loads.iter().map(|l| l.load(Ordering::Relaxed)).collect()
+    }
+
+    /// One coherent stats snapshot for the `Stats` frame.
+    pub fn stats(&self) -> ServiceStats {
+        let map = self.map.read().expect("shard map lock");
+        ServiceStats {
+            epoch: map.epoch,
+            rebalances: self.rebalances.load(Ordering::Relaxed),
+            shard_lens: self.shards.iter().map(|s| s.queue.len() as u64).collect(),
+            shard_ops: self.loads.iter().map(|l| l.load(Ordering::Relaxed)).collect(),
+        }
+    }
+
+    /// Post-pop leaf value for shard `s`: the backend's own hint when
+    /// it has one, else *observed empty* if the pop just failed or
+    /// *unknown* otherwise (hint-less backends degrade to the probing
+    /// index-order scan the static plane used).
+    fn fresh_hint(&self, s: usize, observed_empty: bool) -> u64 {
+        match self.shards[s].queue.peek_min_hint() {
+            Some(k) => k,
+            None if observed_empty => KEY_MAX_SENTINEL,
+            None => 0,
+        }
+    }
+
+    /// Record a completed per-shard insert sweep in the load window and
+    /// the routing tree. Only *successful* keys may lower the tree
+    /// (duplicates are already covered by an earlier lower bound;
+    /// sentinel rejects are not live at all).
+    fn note_insert_outcomes(&self, s: usize, items: &[(u64, u64)], ok: &[bool]) {
+        self.loads[s].fetch_add(items.len() as u64, Ordering::Relaxed);
+        let min_inserted = items
             .iter()
-            .position(|&b| key < b)
-            .unwrap_or(self.shards.len() - 1)
+            .zip(ok.iter())
+            .filter(|(_, &o)| o)
+            .map(|(&(k, _), _)| k)
+            .min();
+        if let Some(k) = min_inserted {
+            self.tree.lower(s, k);
+        }
     }
 
     /// Batched insert with per-item outcomes, grouped by shard so each
     /// shard sees one `insert_batch_each` call per sweep.
     pub fn insert_batch_each(&self, items: &[(u64, u64)], ok: &mut [bool]) -> usize {
         debug_assert!(ok.len() >= items.len());
+        let map = self.map.read().expect("shard map lock");
         if self.shards.len() == 1 {
-            return self.shards[0].queue.insert_batch_each(items, ok);
+            let n = self.shards[0].queue.insert_batch_each(items, ok);
+            self.note_insert_outcomes(0, items, &ok[..items.len()]);
+            return n;
         }
         let mut per: Vec<Vec<(usize, (u64, u64))>> = vec![Vec::new(); self.shards.len()];
         for (i, &kv) in items.iter().enumerate() {
-            per[self.shard_of(kv.0)].push((i, kv));
+            per[shard_of_in(&map.bounds, kv.0)].push((i, kv));
         }
         let mut n = 0;
         for (s, list) in per.iter().enumerate() {
@@ -168,6 +427,7 @@ impl ShardedPq {
                     n += 1;
                 }
             }
+            self.note_insert_outcomes(s, &sub, &sub_ok);
         }
         n
     }
@@ -178,34 +438,121 @@ impl ShardedPq {
         self.insert_batch_each(&[(key, value)], &mut ok) == 1
     }
 
-    /// Relaxed min-of-shards deleteMin: scan shards in key order, pop
-    /// from the first that yields.
+    /// Relaxed tree-routed deleteMin: probe the tournament-tree winner
+    /// (resolving *unknown* leaves through the shard hints), falling
+    /// back to the index-order scan when the tree cannot decide (e.g.
+    /// hint-less backends).
     pub fn delete_min(&self) -> Option<(u64, u64)> {
-        for s in &self.shards {
-            if let Some(kv) = s.queue.delete_min() {
+        let _map = self.map.read().expect("shard map lock");
+        let budget = 2 * self.shards.len() + 1;
+        for _ in 0..budget {
+            let (s, observed) = self.tree.winner();
+            if observed == KEY_MAX_SENTINEL {
+                break; // everything observed empty (or a padding leaf)
+            }
+            if observed == 0 {
+                let fresh = self.fresh_hint(s, false);
+                if fresh == 0 {
+                    break; // hint-less backend: index-order fallback
+                }
+                self.tree.refresh(s, 0, fresh);
+                continue;
+            }
+            if let Some(kv) = self.shards[s].queue.delete_min() {
+                self.loads[s].fetch_add(1, Ordering::Relaxed);
+                self.tree.refresh(s, observed, self.fresh_hint(s, false));
                 return Some(kv);
             }
+            self.tree.refresh(s, observed, self.fresh_hint(s, true));
+        }
+        // Fallback: the pre-elastic index-order scan. Never returns a
+        // false None — every shard is physically probed.
+        for (s, shard) in self.shards.iter().enumerate() {
+            let observed = self.tree.leaf_value(s);
+            if let Some(kv) = shard.queue.delete_min() {
+                self.loads[s].fetch_add(1, Ordering::Relaxed);
+                self.tree.refresh(s, observed, self.fresh_hint(s, false));
+                return Some(kv);
+            }
+            self.tree.refresh(s, observed, self.fresh_hint(s, true));
         }
         None
     }
 
-    /// Batched relaxed deleteMin: one `delete_min_batch` per shard in
-    /// key order until `n` elements are collected (or every shard
-    /// reported empty).
+    /// Batched relaxed deleteMin: repeatedly drain the tree winner (the
+    /// lowest non-empty shard under the monotone partition, so a full
+    /// drain stays globally sorted for exact backends) until `n`
+    /// elements are collected, with the same index-order fallback as
+    /// the scalar pop.
     pub fn delete_min_batch(&self, n: usize, out: &mut Vec<(u64, u64)>) -> usize {
+        let _map = self.map.read().expect("shard map lock");
+        let budget = 2 * self.shards.len() + 1;
         let mut got = 0;
-        for s in &self.shards {
+        let mut spins = 0;
+        while got < n && spins < budget {
+            spins += 1;
+            let (s, observed) = self.tree.winner();
+            if observed == KEY_MAX_SENTINEL {
+                return got; // everything observed empty
+            }
+            if observed == 0 {
+                let fresh = self.fresh_hint(s, false);
+                if fresh == 0 {
+                    break; // hint-less backend: index-order fallback
+                }
+                self.tree.refresh(s, 0, fresh);
+                continue;
+            }
+            let took = self.shards[s].queue.delete_min_batch(n - got, out);
+            if took > 0 {
+                got += took;
+                spins = 0; // progress resets the probe budget
+                self.loads[s].fetch_add(took as u64, Ordering::Relaxed);
+                self.tree.refresh(s, observed, self.fresh_hint(s, false));
+            } else {
+                self.tree.refresh(s, observed, self.fresh_hint(s, true));
+            }
+        }
+        for (s, shard) in self.shards.iter().enumerate() {
             if got >= n {
                 break;
             }
-            got += s.queue.delete_min_batch(n - got, out);
+            let observed = self.tree.leaf_value(s);
+            let took = shard.queue.delete_min_batch(n - got, out);
+            if took > 0 {
+                got += took;
+                self.loads[s].fetch_add(took as u64, Ordering::Relaxed);
+                self.tree.refresh(s, observed, self.fresh_hint(s, false));
+            } else {
+                self.tree.refresh(s, observed, self.fresh_hint(s, true));
+            }
         }
         got
     }
 
-    /// Relaxed peek: the smallest `peek_min_hint` any shard offers
-    /// (`None` when no shard has a cheap observation or all look empty).
+    /// Relaxed peek, routed through the tournament tree: the winner
+    /// leaf is a lower bound on the live key set as of its last
+    /// install, so — unlike the old min-over-racy-hints scan — a
+    /// concurrent pop can no longer surface a hint for an already-empty
+    /// shard while a smaller key sits elsewhere. `None` means every
+    /// shard was observed empty (possibly transiently, under races).
     pub fn peek_min(&self) -> Option<u64> {
+        let _map = self.map.read().expect("shard map lock");
+        let budget = 2 * self.shards.len() + 1;
+        for _ in 0..budget {
+            let (s, observed) = self.tree.winner();
+            if observed == KEY_MAX_SENTINEL {
+                return None;
+            }
+            if observed != 0 {
+                return Some(observed);
+            }
+            let fresh = self.fresh_hint(s, false);
+            if fresh == 0 {
+                break; // hint-less backend: min-over-hints fallback
+            }
+            self.tree.refresh(s, 0, fresh);
+        }
         let mut best: Option<u64> = None;
         for s in &self.shards {
             if let Some(k) = s.queue.peek_min_hint() {
@@ -217,14 +564,123 @@ impl ShardedPq {
         best
     }
 
+    /// Approximate total element count and the map epoch, in one
+    /// coherent read-lock acquisition (the `Len` frame carries both).
+    pub fn len_and_epoch(&self) -> (u64, u64) {
+        let map = self.map.read().expect("shard map lock");
+        let len = self.shards.iter().map(|s| s.queue.len() as u64).sum();
+        (len, map.epoch)
+    }
+
     /// Approximate total element count.
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.queue.len()).sum()
+        self.len_and_epoch().0 as usize
     }
 
     /// True when every shard reports empty.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Re-cut the shard map at resident-count quantiles under a full
+    /// write-lock quiesce, migrating every resident through the bulk
+    /// drain + sorted-insert paths and bumping the epoch. Returns
+    /// `None` for single-shard maps and empty queues (nothing to
+    /// migrate, no epoch bump).
+    pub fn rebalance_now(&self) -> Option<RebalanceOutcome> {
+        let k = self.shards.len();
+        if k < 2 {
+            return None;
+        }
+        let mut map = self.map.write().expect("shard map lock");
+        let mut all: Vec<(u64, u64)> = Vec::new();
+        for s in &self.shards {
+            s.queue.drain_into(&mut all);
+        }
+        let n = all.len();
+        if n == 0 {
+            for l in &self.loads {
+                l.store(0, Ordering::Relaxed);
+            }
+            return None;
+        }
+        all.sort_unstable();
+        // Quantile cuts: shard i's exclusive upper bound is the key at
+        // rank (i+1)·n/k, forced strictly ascending (saturating at the
+        // top) so every range stays sane; the top shard keeps the
+        // open-ended `u64::MAX` bound, so keys past the nominal span
+        // stay legal after any number of rebalances.
+        let mut bounds = Vec::with_capacity(k);
+        let mut prev = 0u64;
+        for i in 1..k {
+            let idx = i * n / k;
+            let target = if idx < n { all[idx].0 } else { u64::MAX };
+            let cut = target.max(prev.saturating_add(1));
+            bounds.push(cut);
+            prev = cut;
+        }
+        bounds.push(u64::MAX);
+        // Deal the sorted residents back out by the new map. Each slice
+        // is ascending, so the skip-list backends take their
+        // allocation-free bulk-build path; keys are globally unique
+        // (routing always agrees with the live map), so no reinsert can
+        // fail as a duplicate.
+        let mut start = 0usize;
+        for (s, shard) in self.shards.iter().enumerate() {
+            let end = if s + 1 == k {
+                n
+            } else {
+                start + all[start..].partition_point(|&(key, _)| key < bounds[s])
+            };
+            let slice = &all[start..end];
+            if !slice.is_empty() {
+                let mut ok = vec![false; slice.len()];
+                shard.queue.insert_batch_each(slice, &mut ok);
+            }
+            self.tree.set(s, if slice.is_empty() { KEY_MAX_SENTINEL } else { slice[0].0 });
+            self.loads[s].store(0, Ordering::Relaxed);
+            start = end;
+        }
+        map.bounds = bounds;
+        map.epoch += 1;
+        self.rebalances.fetch_add(1, Ordering::Relaxed);
+        Some(RebalanceOutcome { epoch: map.epoch, resident: n })
+    }
+
+    /// The monitor-side trigger: rebalance when the observation window
+    /// saw enough ops *and* the hottest shard's load (window ops +
+    /// residents) exceeds `rebalance_imbalance` times the mean. A
+    /// balanced check resets the window so the trigger tracks recent
+    /// traffic, not the whole run.
+    pub fn maybe_rebalance(&self) -> Option<RebalanceOutcome> {
+        let k = self.shards.len();
+        if k < 2 {
+            return None;
+        }
+        let mut ops_total = 0u64;
+        let mut total = 0u64;
+        let mut max_load = 0u64;
+        {
+            let _map = self.map.read().expect("shard map lock");
+            for (s, shard) in self.shards.iter().enumerate() {
+                let ops = self.loads[s].load(Ordering::Relaxed);
+                ops_total += ops;
+                let load = ops + shard.queue.len() as u64;
+                total += load;
+                max_load = max_load.max(load);
+            }
+        }
+        if ops_total < self.rebalance_min_ops {
+            return None; // keep accumulating the window
+        }
+        let mean = (total as f64 / k as f64).max(1.0);
+        if (max_load as f64) <= self.rebalance_imbalance * mean {
+            for l in &self.loads {
+                l.store(0, Ordering::Relaxed);
+            }
+            return None;
+        }
+        self.rebalance_now()
     }
 
     /// Adaptive observation handles of every SmartPQ shard (empty for
@@ -240,6 +696,9 @@ impl ShardedPq {
 struct ServiceShared {
     stop: AtomicBool,
     addr: SocketAddr,
+    /// `Some(key_span)` when the service rejects out-of-span inserts
+    /// with an error frame (`ServiceConfig::strict_span`).
+    strict_span: Option<u64>,
 }
 
 impl ServiceShared {
@@ -271,22 +730,38 @@ impl PqService {
         let shared = Arc::new(ServiceShared {
             stop: AtomicBool::new(false),
             addr,
+            strict_span: cfg.strict_span.then_some(cfg.key_span),
         });
         let probes = sharded.adaptive_probes();
-        let monitor = if probes.is_empty() {
+        let elastic = cfg.elastic && cfg.shards > 1;
+        let monitor = if probes.is_empty() && !elastic {
             None
         } else {
             let probes = probes.clone();
             let shared = Arc::clone(&shared);
-            let tick = Duration::from_millis(cfg.decision_interval_ms.max(1));
+            let queues = Arc::clone(&sharded);
+            let decide_tick = Duration::from_millis(cfg.decision_interval_ms.max(1));
+            let rebalance_tick = Duration::from_millis(cfg.rebalance_interval_ms.max(1));
+            let tick = decide_tick.min(rebalance_tick);
             Some(
                 std::thread::Builder::new()
                     .name("pq-service-monitor".into())
                     .spawn(move || {
+                        let mut since_decide = Duration::ZERO;
+                        let mut since_rebalance = Duration::ZERO;
                         while !shared.stop.load(Ordering::Acquire) {
                             std::thread::sleep(tick);
-                            for p in &probes {
-                                p.probe_decide();
+                            since_decide += tick;
+                            since_rebalance += tick;
+                            if since_decide >= decide_tick {
+                                since_decide = Duration::ZERO;
+                                for p in &probes {
+                                    p.probe_decide();
+                                }
+                            }
+                            if elastic && since_rebalance >= rebalance_tick {
+                                since_rebalance = Duration::ZERO;
+                                let _ = queues.maybe_rebalance();
                             }
                         }
                     })
@@ -363,6 +838,22 @@ impl PqService {
     /// backends).
     pub fn adaptive_switches(&self) -> u64 {
         self.probes.iter().map(|p| p.probe_switches()).sum()
+    }
+
+    /// Completed shard-map rebalances.
+    pub fn rebalances(&self) -> u64 {
+        self.sharded.rebalances()
+    }
+
+    /// The composed queue itself (tests force rebalances and inspect
+    /// shard spreads through this).
+    pub fn sharded(&self) -> &Arc<ShardedPq> {
+        &self.sharded
+    }
+
+    /// Force an epoch migration now, regardless of the load trigger.
+    pub fn rebalance_now(&self) -> Option<RebalanceOutcome> {
+        self.sharded.rebalance_now()
     }
 
     /// Ask the service to stop (idempotent; also triggered by a
@@ -458,6 +949,30 @@ fn handle_conn(mut stream: TcpStream, sharded: &ShardedPq, shared: &ServiceShare
         if reqs.is_empty() {
             continue;
         }
+        // Strict-span services reject out-of-range inserts at decode
+        // time: one error frame, then the connection closes (same
+        // lifecycle as a malformed frame).
+        if let Some(limit) = shared.strict_span {
+            let bad = reqs.iter().find_map(|r| match r {
+                Request::Insert { key, .. } if *key >= limit => Some(*key),
+                Request::InsertBatch(items) => {
+                    items.iter().find(|&&(k, _)| k >= limit).map(|&(k, _)| k)
+                }
+                _ => None,
+            });
+            if let Some(key) = bad {
+                wbuf.clear();
+                proto::encode_response(
+                    &Response::Error {
+                        code: proto::err::KEY_RANGE,
+                        message: format!("insert key {key} outside strict key span {limit}"),
+                    },
+                    &mut wbuf,
+                );
+                let _ = stream.write_all(&wbuf);
+                return;
+            }
+        }
         wbuf.clear();
         let shutdown = process_requests(sharded, &reqs, &mut wbuf);
         if stream.write_all(&wbuf).is_err() {
@@ -497,7 +1012,11 @@ pub fn process_requests(sharded: &ShardedPq, reqs: &[Request], out: &mut Vec<u8>
                     proto::encode_response(&Response::Peek(sharded.peek_min()), out);
                 }
                 Request::Len => {
-                    proto::encode_response(&Response::Len(sharded.len() as u64), out);
+                    let (len, epoch) = sharded.len_and_epoch();
+                    proto::encode_response(&Response::Len { len, epoch }, out);
+                }
+                Request::Stats => {
+                    proto::encode_response(&Response::Stats(sharded.stats()), out);
                 }
                 Request::Shutdown => {
                     proto::encode_response(&Response::Shutdown, out);
@@ -675,9 +1194,120 @@ mod tests {
                 Response::DeleteMin(Some((3, 30))),
                 Response::DeleteMinBatch(vec![(5, 50), (900, 1)]),
                 Response::DeleteMin(None),
-                Response::Len(0),
+                Response::Len { len: 0, epoch: 0 },
             ]
         );
+    }
+
+    #[test]
+    fn min_tree_tracks_the_lowest_shard() {
+        let t = MinTree::new(3);
+        t.set(0, KEY_MAX_SENTINEL);
+        t.set(1, 500);
+        t.set(2, 200);
+        assert_eq!(t.winner(), (2, 200));
+        t.lower(1, 100);
+        assert_eq!(t.winner(), (1, 100));
+        // lower() never raises a bound.
+        t.lower(1, 400);
+        assert_eq!(t.winner(), (1, 100));
+        t.refresh(1, 100, KEY_MAX_SENTINEL);
+        assert_eq!(t.winner(), (2, 200));
+        // A stale refresh loses to an interleaved lower().
+        t.lower(2, 50);
+        t.refresh(2, 200, KEY_MAX_SENTINEL);
+        assert_eq!(t.winner(), (2, 50));
+    }
+
+    #[test]
+    fn min_tree_ties_go_to_the_lowest_shard() {
+        let t = MinTree::new(4);
+        for s in 0..4 {
+            t.set(s, 7);
+        }
+        assert_eq!(t.winner(), (0, 7));
+        // Single-shard degenerate tree: root is the leaf.
+        let one = MinTree::new(1);
+        one.set(0, 9);
+        assert_eq!(one.winner(), (0, 9));
+    }
+
+    #[test]
+    fn rebalance_recuts_bounds_at_residency_quantiles() {
+        let s = ShardedPq::new(&cfg("lotan_shavit", 4)).unwrap();
+        // All residents land in shard 0 of the static cut.
+        let keys: Vec<u64> = (1..=64u64).collect();
+        for &k in &keys {
+            assert!(s.insert(k, k));
+        }
+        assert_eq!(s.shard_of(64), 0);
+        let out = s.rebalance_now().expect("non-empty rebalance");
+        assert_eq!(out.epoch, 1);
+        assert_eq!(out.resident, keys.len());
+        assert_eq!(s.epoch(), 1);
+        assert_eq!(s.rebalances(), 1);
+        // Residency now spreads evenly across the quantile cut.
+        assert_eq!(s.shard_lens(), vec![16, 16, 16, 16]);
+        // The quiesced drain stays exactly sorted across the migration.
+        let mut got = Vec::new();
+        while let Some((k, _)) = s.delete_min() {
+            got.push(k);
+        }
+        assert_eq!(got, keys);
+        // An empty rebalance neither bumps the epoch nor loses anything.
+        assert!(s.rebalance_now().is_none());
+        assert_eq!(s.epoch(), 1);
+    }
+
+    #[test]
+    fn rebalance_keeps_the_top_range_open_ended() {
+        let s = ShardedPq::new(&cfg("lotan_shavit", 2)).unwrap();
+        for k in [10u64, 20, 5_000, 1 << 40] {
+            assert!(s.insert(k, 1));
+        }
+        s.rebalance_now().unwrap();
+        // Keys far past key_span still route and stay retrievable.
+        assert!(s.insert(1 << 50, 1));
+        let mut got = Vec::new();
+        while let Some((k, _)) = s.delete_min() {
+            got.push(k);
+        }
+        assert_eq!(got, vec![10, 20, 5_000, 1 << 40, 1 << 50]);
+    }
+
+    #[test]
+    fn maybe_rebalance_waits_for_the_ops_window() {
+        let mut c = cfg("lotan_shavit", 2);
+        c.rebalance_min_ops = 1_000;
+        let s = ShardedPq::new(&c).unwrap();
+        for k in 1..=10u64 {
+            s.insert(k, k);
+        }
+        assert!(s.maybe_rebalance().is_none());
+        assert_eq!(s.epoch(), 0);
+        // Past the window, a fully skewed load trips the trigger.
+        let mut c2 = cfg("lotan_shavit", 2);
+        c2.rebalance_min_ops = 8;
+        c2.rebalance_imbalance = 1.5;
+        let s2 = ShardedPq::new(&c2).unwrap();
+        for k in 1..=32u64 {
+            s2.insert(k, k); // every op in shard 0: max = 2x mean
+        }
+        assert!(s2.maybe_rebalance().is_some());
+        assert_eq!(s2.epoch(), 1);
+    }
+
+    #[test]
+    fn stats_snapshot_reports_per_shard_state() {
+        let s = ShardedPq::new(&cfg("lotan_shavit", 2)).unwrap();
+        for k in [1u64, 2, 3, 900] {
+            assert!(s.insert(k, k));
+        }
+        let st = s.stats();
+        assert_eq!(st.epoch, 0);
+        assert_eq!(st.rebalances, 0);
+        assert_eq!(st.shard_lens, vec![3, 1]);
+        assert_eq!(st.shard_ops, vec![3, 1]);
     }
 
     #[test]
@@ -695,6 +1325,9 @@ mod tests {
         assert!(ShardedPq::new(&cfg("bogus", 2)).is_err());
         let mut c = cfg("lotan_shavit", 4);
         c.key_span = 2;
+        assert!(ShardedPq::new(&c).is_err());
+        let mut c = cfg("lotan_shavit", 2);
+        c.rebalance_imbalance = 0.5;
         assert!(ShardedPq::new(&c).is_err());
     }
 }

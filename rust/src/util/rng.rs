@@ -132,6 +132,56 @@ impl Rng {
     }
 }
 
+/// Cap on the Zipf rank-table size (8 MB of `f64` cumulative weights).
+/// Domains larger than this are clamped: the tail past the cap carries a
+/// vanishing fraction of the mass for any s > 1, and the load generators
+/// only need the head of the distribution to be faithful.
+const ZIPF_MAX_TABLE: u64 = 1 << 21;
+
+/// Zipf(s) sampler over ranks `1..=n` via an inverse-CDF table.
+///
+/// Precomputes the normalized cumulative weights `P(rank <= k)` once and
+/// samples with a binary search per draw. The table is behind an [`Arc`]
+/// so per-thread clones of a load-generator share one allocation.
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    cum: std::sync::Arc<Vec<f64>>,
+}
+
+impl Zipf {
+    /// Build a sampler over ranks `1..=n` with exponent `s > 0`.
+    /// `n` is clamped to [`ZIPF_MAX_TABLE`] (see the constant's docs).
+    pub fn new(n: u64, s: f64) -> Self {
+        assert!(n > 0, "Zipf domain must be non-empty");
+        assert!(s > 0.0 && s.is_finite(), "Zipf exponent must be positive");
+        let n = n.min(ZIPF_MAX_TABLE) as usize;
+        let mut cum = Vec::with_capacity(n);
+        let mut acc = 0.0f64;
+        for k in 1..=n {
+            acc += (k as f64).powf(-s);
+            cum.push(acc);
+        }
+        let norm = 1.0 / acc;
+        for c in cum.iter_mut() {
+            *c *= norm;
+        }
+        Zipf { cum: std::sync::Arc::new(cum) }
+    }
+
+    /// Number of ranks in the (possibly clamped) domain.
+    pub fn domain(&self) -> u64 {
+        self.cum.len() as u64
+    }
+
+    /// Draw a rank in `1..=domain()`; rank 1 is the most probable.
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        let u = rng.gen_f64();
+        let idx = self.cum.partition_point(|&c| c <= u);
+        (idx as u64 + 1).min(self.cum.len() as u64)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -229,6 +279,52 @@ mod tests {
         for _ in 0..100 {
             let x = r.gen_range_inclusive(10, 12);
             assert!((10..=12).contains(&x));
+        }
+    }
+
+    #[test]
+    fn zipf_is_deterministic_and_in_bounds() {
+        let z = Zipf::new(1000, 1.2);
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..1000 {
+            let x = z.sample(&mut a);
+            assert_eq!(x, z.sample(&mut b));
+            assert!((1..=1000).contains(&x));
+        }
+    }
+
+    #[test]
+    fn zipf_head_carries_the_mass() {
+        // For s = 1.2 over a large domain, P(rank = 1) = 1/zeta(1.2) ~ 0.18.
+        let z = Zipf::new(100_000, 1.2);
+        let mut r = Rng::new(7);
+        let n = 50_000;
+        let ones = (0..n).filter(|_| z.sample(&mut r) == 1).count();
+        let frac = ones as f64 / n as f64;
+        assert!((frac - 0.18).abs() < 0.02, "P(rank=1) = {frac}");
+    }
+
+    #[test]
+    fn zipf_more_skew_means_heavier_head() {
+        let mut r = Rng::new(11);
+        let n = 20_000;
+        let head = |s: f64, r: &mut Rng| {
+            let z = Zipf::new(10_000, s);
+            (0..n).filter(|_| z.sample(r) <= 10).count()
+        };
+        let mild = head(0.8, &mut r);
+        let steep = head(1.6, &mut r);
+        assert!(steep > mild, "head mass not monotone in s: {steep} <= {mild}");
+    }
+
+    #[test]
+    fn zipf_clamps_huge_domains() {
+        let z = Zipf::new(u64::MAX, 1.1);
+        assert_eq!(z.domain(), 1 << 21);
+        let mut r = Rng::new(3);
+        for _ in 0..100 {
+            assert!(z.sample(&mut r) <= z.domain());
         }
     }
 }

@@ -82,7 +82,7 @@ fn pipelined_mixed_burst_answers_in_request_order() {
             Response::Peek(Some(100)),
             Response::DeleteMin(Some((100, 1))),
             Response::DeleteMinBatch(vec![(300, 3), (500, 5)]),
-            Response::Len(1),
+            Response::Len { len: 1, epoch: 0 },
         ]
     );
     c.shutdown().unwrap();
@@ -234,6 +234,257 @@ fn oversized_batches_are_chunked_transparently() {
     assert_eq!(keys, (1..=n).collect::<Vec<u64>>());
     c.shutdown().unwrap();
     svc.wait();
+}
+
+/// Keys straddling `key_span`: by default they route to the open-ended
+/// top shard (and survive an epoch migration there); with `strict_span`
+/// the service answers a KEY_RANGE error frame at decode time instead of
+/// silently hot-spotting the top shard.
+#[test]
+fn keys_straddling_key_span_clamp_by_default_and_reject_in_strict_mode() {
+    let svc = start("lotan_shavit", 4, 1_000);
+    let addr = svc.addr().to_string();
+    let mut c = ServiceClient::connect(addr.as_str()).unwrap();
+    for &k in &[999u64, 1_000, 1_001, 50_000, u64::MAX - 1] {
+        assert!(c.insert(k, k ^ 1).unwrap(), "insert {k}");
+    }
+    assert!(svc.rebalance_now().is_some(), "forced migration with residents");
+    let drained: Vec<u64> = drain(&mut c).into_iter().map(|(k, _)| k).collect();
+    assert_eq!(drained, vec![999, 1_000, 1_001, 50_000, u64::MAX - 1]);
+    c.shutdown().unwrap();
+    svc.wait();
+
+    let svc = PqService::start(ServiceConfig {
+        backend: "lotan_shavit".to_string(),
+        shards: 2,
+        key_span: 1_000,
+        max_conns: 16,
+        strict_span: true,
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = svc.addr().to_string();
+    let mut c = ServiceClient::connect(addr.as_str()).unwrap();
+    assert!(c.insert(999, 9).unwrap(), "in-span key accepted");
+    let err = c.insert(1_000, 1).unwrap_err().to_string();
+    assert!(
+        err.contains(&format!("service error {}", proto::err::KEY_RANGE)),
+        "wrong error for out-of-span key: {err}"
+    );
+    // The offending connection is closed, but the service and its state
+    // survive.
+    let mut c2 = ServiceClient::connect(addr.as_str()).unwrap();
+    assert_eq!(c2.delete_min().unwrap(), Some((999, 9)));
+    c2.shutdown().unwrap();
+    svc.wait();
+}
+
+/// Peek routes through the shard-minimum tournament tree: racing a
+/// popper, it must only ever report keys that were actually inserted —
+/// never a stale hint fabricated from a partially-updated scan.
+#[test]
+fn concurrent_peek_never_invents_keys() {
+    let svc = start("lotan_shavit", 4, 100_000);
+    let addr = svc.addr().to_string();
+    let n = 2_000u64;
+    {
+        let mut c = ServiceClient::connect(addr.as_str()).unwrap();
+        let items: Vec<(u64, u64)> = (1..=n).map(|k| (k * 3, k)).collect();
+        assert!(c.insert_batch(&items).unwrap().iter().all(|&ok| ok));
+    }
+    std::thread::scope(|s| {
+        let popper = {
+            let addr = addr.clone();
+            s.spawn(move || {
+                let mut c = ServiceClient::connect(addr.as_str()).unwrap();
+                let mut last = 0u64;
+                for _ in 0..n {
+                    if let Some((k, _)) = c.delete_min().unwrap() {
+                        assert!(k >= last, "single popper on an exact backend went backwards");
+                        last = k;
+                    }
+                }
+            })
+        };
+        let peeker = {
+            let addr = addr.clone();
+            s.spawn(move || {
+                let mut c = ServiceClient::connect(addr.as_str()).unwrap();
+                for _ in 0..500 {
+                    if let Some(k) = c.peek().unwrap() {
+                        assert!(
+                            k % 3 == 0 && (3..=3 * n).contains(&k),
+                            "peek invented key {k}"
+                        );
+                    }
+                }
+            })
+        };
+        popper.join().unwrap();
+        peeker.join().unwrap();
+    });
+    let mut c = ServiceClient::connect(addr.as_str()).unwrap();
+    drain(&mut c);
+    c.shutdown().unwrap();
+    svc.wait();
+}
+
+/// The load generator must complete every scheduled op — including the
+/// final partial burst when the schedule is not a multiple of the batch
+/// size — and record exactly one latency sample per op.
+#[test]
+fn loadgen_batches_carry_the_remainder() {
+    use smartpq::harness::service_bench::{
+        run_mix, ArrivalKind, KeyDistKind, LoadgenConfig, OpMix,
+    };
+
+    let svc = start("multiqueue", 2, 100_000);
+    let addr = svc.addr().to_string();
+    let cfg = LoadgenConfig {
+        conns: 1,
+        rate_per_conn: 1_000.0,
+        secs: 0.1003,
+        key_range: 10_000,
+        prefill: 100,
+        seed: 3,
+        dist: KeyDistKind::Uniform,
+        arrival: ArrivalKind::Steady,
+        batch: 16,
+    };
+    // Replay the steady schedule with the generator's own Duration math
+    // to get the exact op count the run must complete.
+    let interval = std::time::Duration::from_secs_f64(1.0 / cfg.rate_per_conn);
+    let run = std::time::Duration::from_secs_f64(cfg.secs);
+    let mut expected = 0u64;
+    while interval.mul_f64(expected as f64) < run {
+        expected += 1;
+    }
+    assert_ne!(expected % cfg.batch as u64, 0, "pick secs so a remainder burst exists");
+    let o = run_mix(&addr, OpMix::Balanced, &cfg).unwrap();
+    assert_eq!(o.ops, expected, "scheduled ops dropped: {o:?}");
+    assert_eq!(o.samples, expected, "remainder burst not measured: {o:?}");
+    let mut c = ServiceClient::connect(addr.as_str()).unwrap();
+    c.shutdown().unwrap();
+    svc.wait();
+}
+
+/// Skew torture: concurrent Zipf-skewed clients across shard counts.
+/// Conservation and no-double-pop must hold through live rebalances; a
+/// forced post-run migration must leave quantile-balanced shards and an
+/// exactly sorted drain.
+#[test]
+fn zipf_skew_torture_conserves_across_rebalances() {
+    use smartpq::util::rng::{Rng, Zipf};
+
+    for shards in [1usize, 4, 8] {
+        let svc = PqService::start(ServiceConfig {
+            backend: "lotan_shavit".to_string(),
+            shards,
+            key_span: 100_000,
+            max_conns: 16,
+            rebalance_interval_ms: 5,
+            rebalance_min_ops: 50,
+            ..Default::default()
+        })
+        .unwrap();
+        let addr = svc.addr().to_string();
+        let n_clients = 4u64;
+        let ops = 400u64;
+        let zipf = Zipf::new(100_000, 1.2);
+        // Prefill keys ≡ n_clients (mod n_clients+1): disjoint from every
+        // client's key stream, guaranteeing the forced migration below
+        // always has residents.
+        let prefill: Vec<(u64, u64)> = (1..=500u64)
+            .map(|i| {
+                let key = i * (n_clients + 1) + n_clients;
+                (key, key ^ 0x5A5A)
+            })
+            .collect();
+        {
+            let mut c = ServiceClient::connect(addr.as_str()).unwrap();
+            assert!(c.insert_batch(&prefill).unwrap().iter().all(|&ok| ok));
+        }
+        let results: Vec<(Vec<(u64, u64)>, Vec<(u64, u64)>)> = std::thread::scope(|s| {
+            let workers: Vec<_> = (0..n_clients)
+                .map(|t| {
+                    let addr = addr.clone();
+                    let zipf = zipf.clone();
+                    s.spawn(move || {
+                        let mut rng = Rng::stream(9, t + 1);
+                        let mut c = ServiceClient::connect(addr.as_str()).unwrap();
+                        let mut accepted = Vec::new();
+                        let mut popped = Vec::new();
+                        for i in 0..ops {
+                            // Zipf ranks spread into per-client-unique keys.
+                            let key = zipf.sample(&mut rng) * (n_clients + 1) + t;
+                            if c.insert(key, key ^ 0x5A5A).unwrap() {
+                                accepted.push((key, key ^ 0x5A5A));
+                            }
+                            if i % 2 == 1 {
+                                if let Some(kv) = c.delete_min().unwrap() {
+                                    popped.push(kv);
+                                }
+                            }
+                        }
+                        (accepted, popped)
+                    })
+                })
+                .collect();
+            workers.into_iter().map(|w| w.join().unwrap()).collect()
+        });
+        let mut accepted: Vec<(u64, u64)> = prefill.clone();
+        let mut popped: Vec<(u64, u64)> = Vec::new();
+        for (a, p) in results {
+            accepted.extend(a);
+            popped.extend(p);
+        }
+        // The skewed stream must have engaged the rebalancer (tiny
+        // window, low min-ops, all hot keys on the lowest shard).
+        if shards > 1 {
+            assert!(svc.rebalances() >= 1, "{shards} shards: rebalancer never engaged");
+        }
+        // Quiesce, force one more migration, and check the shard spread
+        // the quantile cut promises.
+        let outcome = svc.rebalance_now();
+        let mut c = ServiceClient::connect(addr.as_str()).unwrap();
+        if shards > 1 {
+            let o = outcome.expect("forced rebalance with residents");
+            let stats = c.stats().unwrap();
+            // >= because an in-flight monitor rebalance may recut once
+            // more right after the forced one.
+            assert!(stats.epoch >= o.epoch, "stats epoch lags the migration: {stats:?}");
+            let max = stats.shard_lens.iter().max().copied().unwrap_or(0);
+            let min = stats.shard_lens.iter().min().copied().unwrap_or(0);
+            let bound = o.resident as u64 / shards as u64 + 1;
+            assert!(
+                max - min <= bound,
+                "{shards} shards: post-migration spread {max}-{min} exceeds {bound} \
+                 ({stats:?})"
+            );
+        }
+        let leftover = drain(&mut c);
+        let keys: Vec<u64> = leftover.iter().map(|&(k, _)| k).collect();
+        let mut sorted = keys.clone();
+        sorted.sort_unstable();
+        assert_eq!(keys, sorted, "{shards} shards: post-migration drain out of order");
+        // Conservation: accepted == popped ∪ leftover as *multisets*.
+        // A hot Zipf key can be popped and later re-inserted by its
+        // owning client, so the same key may legally appear twice on
+        // both sides; the multiset equality below still catches a
+        // double-pop of a single live copy (got > want for that key)
+        // and any lost insert (want > got).
+        let by_key: HashMap<u64, u64> = accepted.iter().copied().collect();
+        for &(k, v) in popped.iter().chain(leftover.iter()) {
+            assert_eq!(by_key.get(&k), Some(&v), "{shards} shards: unknown pop ({k},{v})");
+        }
+        let mut got: Vec<(u64, u64)> = popped.iter().chain(leftover.iter()).copied().collect();
+        got.sort_unstable();
+        let mut want = accepted.clone();
+        want.sort_unstable();
+        assert_eq!(got, want, "{shards} shards: inserts lost or duplicated");
+        c.shutdown().unwrap();
+        svc.wait();
+    }
 }
 
 #[test]
