@@ -126,14 +126,26 @@ impl<B: ConcurrentPQ + HasStats + 'static> SmartPQ<B> {
         switches: &AtomicU64,
         decisions: &AtomicU64,
     ) -> ModeClass {
-        decisions.fetch_add(1, Ordering::Relaxed);
+        let n_decisions = decisions.fetch_add(1, Ordering::Relaxed) + 1;
         let class = oracle.predict(features);
         // Paper Fig. 8 decisionTree(): neutral leaves `algo` untouched.
         if class != ModeClass::Neutral {
             let new = class as u8;
             let old = algo.swap(new, Ordering::AcqRel);
+            crate::trace::instant(
+                crate::trace::EventKind::ModeDecision,
+                old as u64,
+                new as u64,
+                (old != new) as u64,
+            );
             if old != new {
                 switches.fetch_add(1, Ordering::Relaxed);
+                crate::trace::instant(
+                    crate::trace::EventKind::ModeSwitch,
+                    old as u64,
+                    new as u64,
+                    n_decisions,
+                );
                 crate::log_debug!(
                     "smartpq: mode switch {} -> {} ({:?})",
                     old,
@@ -141,6 +153,9 @@ impl<B: ConcurrentPQ + HasStats + 'static> SmartPQ<B> {
                     features
                 );
             }
+        } else {
+            let cur = algo.load(Ordering::Relaxed) as u64;
+            crate::trace::instant(crate::trace::EventKind::ModeDecision, cur, cur, 0);
         }
         class
     }

@@ -431,6 +431,7 @@ impl<B: ConcurrentPQ> NuddleServer<B> {
         }
 
         let mut done = [false; GROUP_SIZE];
+        let mut n_elim = 0u64;
 
         // Phase 2: insert→deleteMin elimination below the observed
         // minimum (smallest candidate inserts first, so eliminated
@@ -478,6 +479,7 @@ impl<B: ConcurrentPQ> NuddleServer<B> {
                 // them in so the classifier sees the true op mix.
                 if ci > 0 {
                     self.shared.base.record_eliminated(ci as u64, elim_max_key);
+                    n_elim = ci as u64;
                 }
             }
         }
@@ -543,6 +545,12 @@ impl<B: ConcurrentPQ> NuddleServer<B> {
         for &(pos, p, s) in &resp[..n_resp] {
             self.shared.responses[g].write(pos, p, s);
         }
+        crate::trace::instant(
+            crate::trace::EventKind::Combine,
+            n_pend as u64,
+            n_elim, // insert→deleteMin pairs matched without touching the base
+            n_rejected,
+        );
         n_pend + n_rejected as usize
     }
 

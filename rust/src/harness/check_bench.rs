@@ -33,7 +33,13 @@
 //!   once, the recorded `p99_ratio` must match `static/elastic`, and on
 //!   hosts with >= 8-way parallelism the ratio must be >= 1.0 — elastic
 //!   sharding must not lose to static under skew (advisory on smaller
-//!   hosts, where the shards serialize anyway).
+//!   hosts, where the shards serialize anyway). Finally the **trace**
+//!   object (throughput with event capture paused vs active over the
+//!   identical mix) gates the PR-7 observability claim: events were
+//!   captured, `dropped == 0` in the smoke configuration (always hard
+//!   — a lossy smoke trace means the ring capacity is wrong), the
+//!   recorded `overhead_pct` matches the throughputs, and on >= 8-way
+//!   hosts the overhead is < 2% (advisory below).
 //!
 //! Placeholder artifacts (the committed schema stubs) fail loudly: the
 //! point of the gate is that only measured output passes.
@@ -54,6 +60,15 @@ pub const CONTENTION_SLACK: f64 = 2.0;
 
 /// Host parallelism below which the skew p99-ratio gate is advisory.
 pub const SKEW_GATE_MIN_PARALLELISM: u64 = 8;
+
+/// Maximum tracing throughput overhead (percent) — the PR-7 acceptance
+/// target, enforced at [`TRACE_GATE_MIN_PARALLELISM`].
+pub const MAX_TRACE_OVERHEAD_PCT: f64 = 2.0;
+
+/// Host parallelism below which the trace overhead gate is advisory
+/// (on tiny hosts the loadgen and service threads serialize, so the
+/// traced/untraced difference is scheduling noise).
+pub const TRACE_GATE_MIN_PARALLELISM: u64 = 8;
 
 /// What a successful check reports.
 #[derive(Debug, Clone)]
@@ -551,6 +566,64 @@ fn check_service(v: &Json, path: &str, out: &mut CheckOutcome) -> Result<()> {
              small {host}-way host)"
         ));
     }
+    // The tracing overhead measurement: capture must be effectively
+    // free and lossless in the smoke configuration.
+    let trace = req(v, "trace", path)?;
+    let untraced = req_f64(trace, "untraced_mops", path)?;
+    let traced = req_f64(trace, "traced_mops", path)?;
+    if untraced <= 0.0 || traced <= 0.0 {
+        return Err(schema_err(path, "trace: throughputs must be > 0"));
+    }
+    let emitted = req_u64(trace, "emitted", path)?;
+    if emitted == 0 {
+        return Err(schema_err(
+            path,
+            "trace: the traced run captured no events — the probes never fired",
+        ));
+    }
+    let dropped = req_u64(trace, "dropped", path)?;
+    if dropped > 0 {
+        return Err(Error::Invariant(format!(
+            "{path}: trace: {dropped} event(s) dropped in the smoke configuration — the \
+             per-thread ring capacity must cover the smoke run"
+        )));
+    }
+    let overhead = req_f64(trace, "overhead_pct", path)?;
+    let expect = (untraced - traced) / untraced * 100.0;
+    // Absolute tolerance (percentage points): the overhead is a small
+    // difference of noisy throughputs, so a relative check would blow
+    // up near zero.
+    if (overhead - expect).abs() > 0.05 {
+        return Err(schema_err(
+            path,
+            &format!(
+                "trace: recorded overhead_pct {overhead:.4} != \
+                 (untraced-traced)/untraced {expect:.4}"
+            ),
+        ));
+    }
+    if host >= TRACE_GATE_MIN_PARALLELISM {
+        if overhead >= MAX_TRACE_OVERHEAD_PCT {
+            return Err(Error::Invariant(format!(
+                "{path}: tracing overhead {overhead:.2}% >= {MAX_TRACE_OVERHEAD_PCT}% \
+                 on a {host}-way host"
+            )));
+        }
+        out.facts.push(format!(
+            "trace: overhead {overhead:.2}% < {MAX_TRACE_OVERHEAD_PCT}%, {emitted} events \
+             captured, 0 dropped ({host}-way host)"
+        ));
+    } else if overhead >= MAX_TRACE_OVERHEAD_PCT {
+        out.warnings.push(format!(
+            "trace: overhead {overhead:.2}% >= {MAX_TRACE_OVERHEAD_PCT}%, but the {host}-way \
+             host serializes the loadgen and service threads — advisory only"
+        ));
+    } else {
+        out.facts.push(format!(
+            "trace: overhead {overhead:.2}% < {MAX_TRACE_OVERHEAD_PCT}%, {emitted} events \
+             captured, 0 dropped (small {host}-way host)"
+        ));
+    }
     Ok(())
 }
 
@@ -708,13 +781,25 @@ mod tests {
         )
     }
 
-    fn service_json_with(sweeps: &[String], skew: &str, host: u64) -> String {
+    fn service_trace(untraced: f64, traced: f64, emitted: u64, dropped: u64) -> String {
+        format!(
+            "{{\"untraced_mops\": {untraced:.6}, \"traced_mops\": {traced:.6}, \
+             \"overhead_pct\": {:.6}, \"emitted\": {emitted}, \"dropped\": {dropped}}}",
+            (untraced - traced) / untraced * 100.0
+        )
+    }
+
+    fn service_json_full(sweeps: &[String], skew: &str, trace: &str, host: u64) -> String {
         format!(
             "{{\"generated_by\": \"smartpq bench --figure service\", \"placeholder\": false, \
              \"quick\": true, \"host_parallelism\": {host}, \"key_span\": 1048576, \
-             \"skew\": {skew}, \"sweeps\": [{}]}}",
+             \"skew\": {skew}, \"trace\": {trace}, \"sweeps\": [{}]}}",
             sweeps.join(", ")
         )
+    }
+
+    fn service_json_with(sweeps: &[String], skew: &str, host: u64) -> String {
+        service_json_full(sweeps, skew, &service_trace(0.05, 0.0499, 5000, 0), host)
     }
 
     fn service_json(sweeps: &[String]) -> String {
@@ -795,6 +880,62 @@ mod tests {
         );
         let err = check_str("s.json", &legacy, 1.3).unwrap_err();
         assert!(err.to_string().contains("skew"), "{err}");
+    }
+
+    #[test]
+    fn trace_overhead_gates_on_big_hosts_only() {
+        let sweeps = vec![service_sweep("smartpq", 1, "balanced", 0.05, 120.0)];
+        let skew = service_skew(400.0, 200.0, 2);
+        // 4% overhead on an 8-way host: hard failure.
+        let bad = service_json_full(&sweeps, &skew, &service_trace(0.05, 0.048, 5000, 0), 8);
+        let err = check_str("s.json", &bad, 1.3).unwrap_err();
+        assert!(err.to_string().contains("tracing overhead"), "{err}");
+        // Same overhead on a 4-way host: advisory.
+        let small = service_json_full(&sweeps, &skew, &service_trace(0.05, 0.048, 5000, 0), 4);
+        let ok = check_str("s.json", &small, 1.3).unwrap();
+        assert!(ok.warnings.iter().any(|w| w.contains("overhead")), "{ok:?}");
+        // Under the target (even negative, i.e. noise in tracing's
+        // favour) passes and is recorded as a fact.
+        let neg = service_json_full(&sweeps, &skew, &service_trace(0.05, 0.051, 5000, 0), 8);
+        let ok = check_str("s.json", &neg, 1.3).unwrap();
+        assert!(ok.facts.iter().any(|f| f.contains("trace: overhead")), "{ok:?}");
+    }
+
+    #[test]
+    fn trace_drops_fail_on_any_host() {
+        let sweeps = vec![service_sweep("smartpq", 1, "balanced", 0.05, 120.0)];
+        let skew = service_skew(400.0, 200.0, 2);
+        for host in [4, 8] {
+            let doc =
+                service_json_full(&sweeps, &skew, &service_trace(0.05, 0.0499, 5000, 7), host);
+            let err = check_str("s.json", &doc, 1.3).unwrap_err();
+            assert!(err.to_string().contains("dropped"), "{err}");
+        }
+    }
+
+    #[test]
+    fn trace_missing_empty_or_mismatched_fails() {
+        let sweeps = vec![service_sweep("smartpq", 1, "balanced", 0.05, 120.0)];
+        let skew = service_skew(400.0, 200.0, 2);
+        // No trace object at all: the v3 schema requires it.
+        let legacy = format!(
+            "{{\"generated_by\": \"x\", \"placeholder\": false, \"quick\": true, \
+             \"host_parallelism\": 8, \"key_span\": 1048576, \"skew\": {skew}, \
+             \"sweeps\": [{}]}}",
+            sweeps.join(", ")
+        );
+        let err = check_str("s.json", &legacy, 1.3).unwrap_err();
+        assert!(err.to_string().contains("trace"), "{err}");
+        // Zero events captured: the probes never fired.
+        let empty = service_json_full(&sweeps, &skew, &service_trace(0.05, 0.0499, 0, 0), 8);
+        let err = check_str("s.json", &empty, 1.3).unwrap_err();
+        assert!(err.to_string().contains("no events"), "{err}");
+        // Recorded overhead_pct disagrees with the throughputs.
+        let mut tr = service_trace(0.05, 0.0499, 5000, 0);
+        tr = tr.replace("\"overhead_pct\": 0.200000", "\"overhead_pct\": 1.900000");
+        let err = check_str("s.json", &service_json_full(&sweeps, &skew, &tr, 8), 1.3)
+            .unwrap_err();
+        assert!(err.to_string().contains("overhead_pct"), "{err}");
     }
 
     #[test]

@@ -514,7 +514,15 @@ pub fn run_mix(addr: &str, mix: OpMix, cfg: &LoadgenConfig) -> Result<MixOutcome
                         if last > now {
                             std::thread::sleep(last - now);
                         }
+                        let t_us = crate::trace::now_us();
                         let resps = client.send(&reqs)?;
+                        crate::trace::complete(
+                            crate::trace::EventKind::Request,
+                            t_us,
+                            reqs.len() as u64,
+                            conn_id as u64,
+                            0,
+                        );
                         let completed = start.elapsed();
                         for (resp, &sched) in resps.iter().zip(scheds.iter()) {
                             if let Response::Error { code, message } = resp {
@@ -708,6 +716,86 @@ pub fn skew_table(skew: &SkewComparison) -> Table {
     t
 }
 
+// --------------------------------------------------- trace overhead
+
+/// Throughput with tracing off vs on over the identical workload — the
+/// `check-bench` evidence for the "<2% overhead" claim (plus the
+/// capture counters proving the smoke configuration drops nothing).
+#[derive(Debug, Clone)]
+pub struct TraceOverhead {
+    /// Mops/s with the tracer installed but paused.
+    pub untraced_mops: f64,
+    /// Mops/s with capture active.
+    pub traced_mops: f64,
+    /// Events captured during the traced run.
+    pub emitted: u64,
+    /// Events dropped during the traced run (ring full).
+    pub dropped: u64,
+}
+
+impl TraceOverhead {
+    /// Throughput overhead of tracing, in percent (negative = noise in
+    /// tracing's favour; never clamped so the artifact stays honest).
+    pub fn overhead_pct(&self) -> f64 {
+        (self.untraced_mops - self.traced_mops) / self.untraced_mops.max(1e-9) * 100.0
+    }
+}
+
+/// Measure tracing overhead on a loopback service: install the global
+/// tracer, run one balanced mix with capture paused, then the identical
+/// mix with capture active, and compare throughput. Capture is left
+/// paused afterwards so the measurement doesn't leak events into a
+/// later `--trace` run.
+pub fn run_trace_overhead(quick: bool) -> Result<TraceOverhead> {
+    let lg = LoadgenConfig::new(quick);
+    let svc = PqService::start(ServiceConfig {
+        backend: "smartpq".to_string(),
+        shards: 2,
+        key_span: lg.key_range,
+        max_conns: lg.conns + 8,
+        ..Default::default()
+    })?;
+    let addr = svc.addr().to_string();
+    crate::trace::install(crate::trace::DEFAULT_BUF_EVENTS);
+    crate::trace::set_active(false);
+    let off = run_mix(&addr, OpMix::Balanced, &lg)?;
+    let (e0, d0) = crate::trace::totals();
+    crate::trace::set_active(true);
+    let on = run_mix(&addr, OpMix::Balanced, &lg)?;
+    crate::trace::set_active(false);
+    let (e1, d1) = crate::trace::totals();
+    ServiceClient::connect(&addr)?.shutdown()?;
+    svc.wait();
+    Ok(TraceOverhead {
+        untraced_mops: off.mops,
+        traced_mops: on.mops,
+        emitted: e1.saturating_sub(e0),
+        dropped: d1.saturating_sub(d0),
+    })
+}
+
+/// Render the trace-overhead table.
+pub fn trace_table(tr: &TraceOverhead) -> Table {
+    let mut t = Table::new(
+        "Tracing overhead (identical balanced mix, capture paused vs active)",
+        &["capture", "mops", "emitted", "dropped"],
+    );
+    t.row(vec!["off".to_string(), fmt(tr.untraced_mops), "0".to_string(), "0".to_string()]);
+    t.row(vec![
+        "on".to_string(),
+        fmt(tr.traced_mops),
+        tr.emitted.to_string(),
+        tr.dropped.to_string(),
+    ]);
+    t.row(vec![
+        "overhead_pct".to_string(),
+        fmt(tr.overhead_pct()),
+        String::new(),
+        String::new(),
+    ]);
+    t
+}
+
 // ------------------------------------------------------- figure sweep
 
 /// One point of the service sweep.
@@ -740,13 +828,15 @@ pub fn service_json_path() -> std::path::PathBuf {
     crate::harness::repo_root_file("BENCH_service.json")
 }
 
-/// Serialize the sweep as the `BENCH_service` JSON schema (v2: with
-/// the static-vs-elastic `skew` object).
+/// Serialize the sweep as the `BENCH_service` JSON schema (v3: with
+/// the static-vs-elastic `skew` object and the traced-vs-untraced
+/// `trace` overhead object).
 pub fn results_to_json(
     quick: bool,
     key_span: u64,
     points: &[ServicePoint],
     skew: &SkewComparison,
+    trace: &TraceOverhead,
 ) -> String {
     let mut s = String::new();
     s.push_str("{\n");
@@ -768,6 +858,13 @@ pub fn results_to_json(
     s.push_str(&format!("    \"rebalances\": {},\n", skew.rebalances));
     s.push_str(&format!("    \"epoch\": {},\n", skew.epoch));
     s.push_str(&format!("    \"p99_ratio\": {:.6}\n", skew.p99_ratio()));
+    s.push_str("  },\n");
+    s.push_str("  \"trace\": {\n");
+    s.push_str(&format!("    \"untraced_mops\": {:.6},\n", trace.untraced_mops));
+    s.push_str(&format!("    \"traced_mops\": {:.6},\n", trace.traced_mops));
+    s.push_str(&format!("    \"overhead_pct\": {:.6},\n", trace.overhead_pct()));
+    s.push_str(&format!("    \"emitted\": {},\n", trace.emitted));
+    s.push_str(&format!("    \"dropped\": {}\n", trace.dropped));
     s.push_str("  },\n");
     s.push_str("  \"sweeps\": [\n");
     for (i, p) in points.iter().enumerate() {
@@ -879,9 +976,18 @@ pub fn run_service_figure_to(
     let skew = run_skew_comparison(cfg.quick)?;
     let st = skew_table(&skew);
     st.print();
-    std::fs::write(json_path, results_to_json(cfg.quick, lg.key_range, &points, &skew))?;
+    // The tracing overhead acceptance point: the identical mix with
+    // capture paused vs active, gated <2% by check-bench on >=8-way
+    // hosts (and dropped == 0 always).
+    let trace = run_trace_overhead(cfg.quick)?;
+    let tt = trace_table(&trace);
+    tt.print();
+    std::fs::write(
+        json_path,
+        results_to_json(cfg.quick, lg.key_range, &points, &skew, &trace),
+    )?;
     println!("service results written to {}", json_path.display());
-    Ok(vec![t, st])
+    Ok(vec![t, st, tt])
 }
 
 /// The full figure with the default JSON location (repo root).
@@ -1025,7 +1131,13 @@ mod tests {
             rebalances: 3,
             epoch: 3,
         };
-        let s = results_to_json(true, 1 << 20, &points, &skew);
+        let trace = TraceOverhead {
+            untraced_mops: 0.020,
+            traced_mops: 0.0199,
+            emitted: 4321,
+            dropped: 0,
+        };
+        let s = results_to_json(true, 1 << 20, &points, &skew, &trace);
         let v = crate::util::json::Json::parse(&s).expect("service JSON parses");
         assert_eq!(v.get("placeholder").unwrap().as_bool(), Some(false));
         let sweeps = v.get("sweeps").unwrap().as_array().unwrap();
@@ -1036,6 +1148,11 @@ mod tests {
         assert_eq!(sk.get("rebalances").unwrap().as_u64(), Some(3));
         let ratio = sk.get("p99_ratio").unwrap().as_f64().unwrap();
         assert!((ratio - 2.0).abs() < 1e-6, "ratio {ratio}");
+        let tr = v.get("trace").expect("trace object present");
+        assert_eq!(tr.get("emitted").unwrap().as_u64(), Some(4321));
+        assert_eq!(tr.get("dropped").unwrap().as_u64(), Some(0));
+        let oh = tr.get("overhead_pct").unwrap().as_f64().unwrap();
+        assert!((oh - 0.5).abs() < 1e-6, "overhead {oh}");
     }
 
     #[test]

@@ -26,6 +26,10 @@
 //!    length-prefixed binary protocol, a multi-threaded server hosting
 //!    key-range shards of any registered backend, and the client library
 //!    behind the open-loop load generator (`smartpq serve` / `loadgen`).
+//! 6. **Tracing plane** ([`trace`]) — lock-free ring-buffered per-op
+//!    event capture (mode switches, rebalances, combining sweeps,
+//!    op/request spans) flushed as Chrome/Perfetto trace-event JSON
+//!    behind `--trace` on `serve` / `loadgen` / `app`.
 //!
 //! See `DESIGN.md` for the full system inventory and experiment index.
 
@@ -38,6 +42,7 @@ pub mod pq;
 pub mod runtime;
 pub mod service;
 pub mod sim;
+pub mod trace;
 pub mod util;
 pub mod workloads;
 

@@ -67,7 +67,8 @@ COMMANDS
                           oracle, and write CSV reports incl. the SmartPQ
                           mode-switch trace (options: --graph
                           random|grid|powerlaw, --n, --lps, --horizon,
-                          --max-dt, --trace-ms, --source)
+                          --max-dt, --trace-ms, --source; --trace FILE
+                          captures a Perfetto event trace)
   project --workload <sssp|des> [--nodes 1,2,4,8] [--buckets N] [--phase-ms F]
           [--threads-per-node T]
                           record the workload's deterministic contention
@@ -86,7 +87,7 @@ COMMANDS
                           options as for `app`)
   serve [--backend B] [--shards K] [--addr H:P] [--key-span N] [--max-conns N]
         [--static-shards] [--strict-span] [--rebalance-ms D] [--imbalance X]
-        [--rebalance-min-ops N]
+        [--rebalance-min-ops N] [--trace FILE] [--trace-buf N]
                           host K key-range shards of any registered
                           backend (default smartpq x2) behind the TCP
                           service; runs until a client sends a Shutdown
@@ -103,6 +104,7 @@ COMMANDS
           [--dist uniform|zipf] [--zipf-s S]
           [--arrival steady|onoff|phased] [--burst-duty F]
           [--burst-period-ms D] [--phase-depth F] [--phase-period-ms D]
+          [--trace FILE] [--trace-buf N]
                           open-loop load generator: drives the service on
                           a per-connection arrival schedule and reports
                           p50/p99/p999 latency measured from each op's
@@ -127,7 +129,42 @@ COMMANDS
 OPTIONS
   --quick                 cut sample counts (CI smoke mode)
   --seed <u64>            RNG seed (default 42)
+  --trace <FILE>          (serve/loadgen/app) capture a structured event
+                          trace — op spans, SmartPQ mode decisions/
+                          switches, shard rebalances, Nuddle combining
+                          sweeps — into per-thread lock-free ring
+                          buffers and flush FILE as Chrome trace-event
+                          JSON (open in https://ui.perfetto.dev or
+                          chrome://tracing)
+  --trace-buf <N>         per-thread trace ring capacity in events
+                          (default 65536; full rings drop new events
+                          and count them instead of blocking)
 ";
+
+/// `--trace <path>` / `--trace-buf <events>`: install the global ring
+/// tracer before the run; returns the path to flush after it.
+fn trace_setup(args: &Args) -> Result<Option<std::path::PathBuf>> {
+    let Some(path) = args.get("trace") else {
+        return Ok(None);
+    };
+    let buf: usize = args.num_or("trace-buf", smartpq::trace::DEFAULT_BUF_EVENTS)?;
+    smartpq::trace::install(buf);
+    Ok(Some(std::path::PathBuf::from(path)))
+}
+
+/// Flush the captured trace (if `--trace` was given) and report the
+/// capture counters.
+fn trace_finish(path: &Option<std::path::PathBuf>) -> Result<()> {
+    if let Some(p) = path {
+        let (emitted, dropped) = smartpq::trace::flush_to(p)?;
+        println!(
+            "trace: {emitted} events captured ({dropped} dropped) -> {} \
+             (load in https://ui.perfetto.dev or chrome://tracing)",
+            p.display()
+        );
+    }
+    Ok(())
+}
 
 fn parse_algo(name: &str, queues_per_thread: usize) -> Result<SimAlgo> {
     Ok(match name {
@@ -444,6 +481,7 @@ fn cmd_app(args: &Args) -> Result<()> {
         seed,
         trace_interval: std::time::Duration::from_millis(trace_ms.max(1)),
     };
+    let trace_path = trace_setup(args)?;
     let queue = args.str_or("queue", "all");
     let names: Vec<&str> = if queue == "all" {
         workloads::ALL_BACKENDS.to_vec()
@@ -465,6 +503,7 @@ fn cmd_app(args: &Args) -> Result<()> {
         if quick { " (quick)" } else { "" }
     );
     let results = workloads::run_app(&cfg, &names)?;
+    trace_finish(&trace_path)?;
     let csv = workloads::print_and_write(&results, smartpq::workloads::report::REPORT_DIR)?;
     println!("reports written under {csv}");
     let failed: Vec<&str> = results
@@ -572,6 +611,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let backend = cfg.backend.clone();
     let shards = cfg.shards;
+    let trace_path = trace_setup(args)?;
     let svc = PqService::start(cfg)?;
     println!(
         "serving {backend} across {shards} key-range shard(s) on {} \
@@ -580,6 +620,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         svc.addr()
     );
     svc.wait();
+    trace_finish(&trace_path)?;
     println!("service stopped");
     Ok(())
 }
@@ -627,6 +668,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     } else {
         vec![OpMix::parse(&mix_name)?]
     };
+    let trace_path = trace_setup(args)?;
     let (addr, embedded) = match args.get("addr") {
         Some(a) => (a.to_string(), None),
         None => {
@@ -654,6 +696,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     if let Some(svc) = embedded {
         svc.wait();
     }
+    trace_finish(&trace_path)?;
     let total: u64 = outcomes.iter().map(|o| o.ops).sum();
     println!("loadgen: {total} ops over {} mix(es) against {addr}", outcomes.len());
     Ok(())

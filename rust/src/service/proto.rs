@@ -22,8 +22,10 @@
 //!
 //! Version 2 makes the elastic shard map observable: `Len` responses
 //! carry the current map epoch next to the count, and the new
-//! `Stats` pair exposes the epoch, the completed-rebalance count, and
-//! the per-shard resident/op spreads the skew tests assert on.
+//! `Stats` pair exposes the epoch, the completed-rebalance count, the
+//! server-side trace capture counters (events emitted/dropped by the
+//! `--trace` ring buffers, both 0 when tracing is off), and the
+//! per-shard resident/op spreads the skew tests assert on.
 //!
 //! | opcode | request            | payload after opcode                  |
 //! |--------|--------------------|---------------------------------------|
@@ -44,7 +46,7 @@
 //! | `0x84` | InsertBatch        | count u32, count × ok u8              |
 //! | `0x85` | DeleteMinBatch     | count u32, count × (key u64, value u64) |
 //! | `0x86` | Len                | len u64, epoch u64                    |
-//! | `0x87` | Stats              | epoch u64, rebalances u64, shards u32, shards × (len u64, ops u64) |
+//! | `0x87` | Stats              | epoch u64, rebalances u64, trace_emitted u64, trace_dropped u64, shards u32, shards × (len u64, ops u64) |
 //! | `0x8F` | Shutdown (ack)     | —                                     |
 //! | `0xFF` | Error              | code u16, msg_len u16, msg bytes      |
 
@@ -131,6 +133,11 @@ pub struct ServiceStats {
     pub epoch: u64,
     /// Completed rebalances since the service started.
     pub rebalances: u64,
+    /// Trace events captured server-side so far (0 when `--trace` is
+    /// off) — lets clients observe capture health remotely.
+    pub trace_emitted: u64,
+    /// Trace events dropped server-side because a ring was full.
+    pub trace_dropped: u64,
     /// Per-shard resident counts (relaxed).
     pub shard_lens: Vec<u64>,
     /// Per-shard window op counters (reset by each rebalance check).
@@ -280,6 +287,8 @@ pub fn encode_response(resp: &Response, out: &mut Vec<u8>) {
             out.push(op::RESP_STATS);
             put_u64(out, stats.epoch);
             put_u64(out, stats.rebalances);
+            put_u64(out, stats.trace_emitted);
+            put_u64(out, stats.trace_dropped);
             debug_assert_eq!(stats.shard_lens.len(), stats.shard_ops.len());
             put_u32(out, stats.shard_lens.len() as u32);
             for (len, ops) in stats.shard_lens.iter().zip(stats.shard_ops.iter()) {
@@ -493,6 +502,8 @@ pub fn decode_response(buf: &[u8]) -> Result<Option<(Response, usize)>> {
         op::RESP_STATS => {
             let epoch = c.u64()?;
             let rebalances = c.u64()?;
+            let trace_emitted = c.u64()?;
+            let trace_dropped = c.u64()?;
             let n = c.batch_count()?;
             let mut shard_lens = Vec::with_capacity(n);
             let mut shard_ops = Vec::with_capacity(n);
@@ -503,6 +514,8 @@ pub fn decode_response(buf: &[u8]) -> Result<Option<(Response, usize)>> {
             Response::Stats(ServiceStats {
                 epoch,
                 rebalances,
+                trace_emitted,
+                trace_dropped,
                 shard_lens,
                 shard_ops,
             })
@@ -561,6 +574,8 @@ mod tests {
             Response::Stats(ServiceStats {
                 epoch: 2,
                 rebalances: 2,
+                trace_emitted: 1234,
+                trace_dropped: 1,
                 shard_lens: vec![4, 0, 9],
                 shard_ops: vec![100, 0, 7],
             }),

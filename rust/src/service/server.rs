@@ -362,9 +362,12 @@ impl ShardedPq {
     /// One coherent stats snapshot for the `Stats` frame.
     pub fn stats(&self) -> ServiceStats {
         let map = self.map.read().expect("shard map lock");
+        let (trace_emitted, trace_dropped) = crate::trace::totals();
         ServiceStats {
             epoch: map.epoch,
             rebalances: self.rebalances.load(Ordering::Relaxed),
+            trace_emitted,
+            trace_dropped,
             shard_lens: self.shards.iter().map(|s| s.queue.len() as u64).collect(),
             shard_ops: self.loads.iter().map(|l| l.load(Ordering::Relaxed)).collect(),
         }
@@ -644,6 +647,12 @@ impl ShardedPq {
         map.bounds = bounds;
         map.epoch += 1;
         self.rebalances.fetch_add(1, Ordering::Relaxed);
+        crate::trace::instant(
+            crate::trace::EventKind::Rebalance,
+            map.epoch,
+            n as u64,
+            k as u64,
+        );
         Some(RebalanceOutcome { epoch: map.epoch, resident: n })
     }
 
@@ -1053,7 +1062,11 @@ fn serve_insert_run(sharded: &ShardedPq, reqs: &[Request], start: usize, out: &m
         end += 1;
     }
     let mut ok = vec![false; flat.len()];
+    let t_us = crate::trace::now_us();
     sharded.insert_batch_each(&flat, &mut ok);
+    // op discriminant 0 = insert run; the handler thread's tid
+    // distinguishes connections in the trace.
+    crate::trace::complete(crate::trace::EventKind::ServiceOp, t_us, 0, flat.len() as u64, 0);
     let mut off = 0;
     for (is_batch, len) in spans {
         if is_batch {
@@ -1082,7 +1095,10 @@ fn serve_delete_run(sharded: &ShardedPq, reqs: &[Request], start: usize, out: &m
         end += 1;
     }
     let mut popped: Vec<(u64, u64)> = Vec::with_capacity(want_total.min(proto::MAX_BATCH));
+    let t_us = crate::trace::now_us();
     sharded.delete_min_batch(want_total, &mut popped);
+    // op discriminant 1 = deleteMin run.
+    crate::trace::complete(crate::trace::EventKind::ServiceOp, t_us, 1, want_total as u64, 0);
     let mut cursor = 0usize;
     for req in &reqs[start..end] {
         match req {

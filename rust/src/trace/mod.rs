@@ -1,0 +1,655 @@
+//! Structured per-op tracing plane: lock-free ring-buffered event
+//! capture with Chrome/Perfetto-loadable output.
+//!
+//! The aggregate histograms and CSV reports answer "how fast", but not
+//! "why was *that* op slow" — a p999 spike, a mis-timed SmartPQ mode
+//! switch, or a rebalance-induced stall is invisible after the fact.
+//! This module captures discrete events from the hot paths at a cost
+//! low enough to leave on in production smoke runs (`check-bench`
+//! gates the measured overhead at <2%):
+//!
+//! - A [`Tracer`] trait with a dev-null default ([`NullTracer`]): when
+//!   no tracer is installed, every probe is one relaxed atomic load.
+//! - Per-thread fixed-capacity rings ([`ThreadRing`]) written lock-free:
+//!   one relaxed atomic reservation plus a plain (non-atomic) slot
+//!   write per event. A full ring **drops new events** and counts them
+//!   in `dropped_events` instead of blocking or overwriting — dropping
+//!   newest keeps the committed prefix immutable, so a concurrent
+//!   flush can never observe a torn event (the alternative, overwrite-
+//!   oldest wraparound, would require per-slot seqlocks on the hot
+//!   path).
+//! - A flush path that merges every thread's ring into one JSON array
+//!   in the Chrome trace-event format (`ph`/`ts`/`pid`/`tid`), loadable
+//!   in Perfetto or chrome://tracing. String escaping reuses
+//!   [`crate::util::json`].
+//!
+//! Probes are process-global (`trace::instant`, `trace::complete`)
+//! because the hot paths — Nuddle server threads, service workers —
+//! have no configuration plumbing; `smartpq serve|loadgen|app` install
+//! the global tracer from `--trace <path>` / `--trace-buf <events>`.
+
+use std::cell::RefCell;
+use std::io::Write;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::error::Result;
+use crate::util::json::escape_json_into;
+
+/// Default per-thread ring capacity in events (`--trace-buf`).
+pub const DEFAULT_BUF_EVENTS: usize = 65_536;
+
+/// What a captured event describes. The discriminant is stored in the
+/// ring; names/phases/argument labels are applied at flush time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum EventKind {
+    /// Service-side span over one fused request run
+    /// (`args: {op: insert_run|delete_run|scalar, n}`).
+    ServiceOp = 0,
+    /// Loadgen-side span over one pipelined request burst
+    /// (`args: {reqs}`).
+    Request = 1,
+    /// SmartPQ classifier decision, emitted every decision interval
+    /// (`args: {old, new, switched}`).
+    ModeDecision = 2,
+    /// SmartPQ mode switch — the decisions where old != new
+    /// (`args: {old, new, decisions}`).
+    ModeSwitch = 3,
+    /// Elastic shard-map rebalance with the epoch it published
+    /// (`args: {epoch, resident, shards}`).
+    Rebalance = 4,
+    /// One Nuddle combining sweep (`args: {batch, eliminated,
+    /// rejected}`).
+    Combine = 5,
+}
+
+impl EventKind {
+    fn from_u8(v: u8) -> EventKind {
+        match v {
+            0 => EventKind::ServiceOp,
+            1 => EventKind::Request,
+            2 => EventKind::ModeDecision,
+            3 => EventKind::ModeSwitch,
+            4 => EventKind::Rebalance,
+            _ => EventKind::Combine,
+        }
+    }
+
+    /// Trace-event `name` field.
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::ServiceOp => "service op",
+            EventKind::Request => "loadgen request",
+            EventKind::ModeDecision => "smartpq mode decision",
+            EventKind::ModeSwitch => "smartpq mode switch",
+            EventKind::Rebalance => "shard rebalance",
+            EventKind::Combine => "nuddle combine",
+        }
+    }
+
+    /// Labels for the three payload words, in `a`/`b`/`c` order.
+    fn arg_names(self) -> [&'static str; 3] {
+        match self {
+            EventKind::ServiceOp => ["op", "n", "conn"],
+            EventKind::Request => ["reqs", "conn", "unused"],
+            EventKind::ModeDecision => ["old", "new", "switched"],
+            EventKind::ModeSwitch => ["old", "new", "decisions"],
+            EventKind::Rebalance => ["epoch", "resident", "shards"],
+            EventKind::Combine => ["batch", "eliminated", "rejected"],
+        }
+    }
+}
+
+/// One captured event: fixed-size and `Copy` so the hot-path store is
+/// a handful of plain word writes.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    /// [`EventKind`] discriminant.
+    pub kind: u8,
+    /// Microseconds since the tracer epoch (span start for spans).
+    pub ts_us: u64,
+    /// Span duration in µs; 0 means an instant event.
+    pub dur_us: u64,
+    /// First payload word (meaning per [`EventKind::arg_names`]).
+    pub a: u64,
+    /// Second payload word.
+    pub b: u64,
+    /// Third payload word.
+    pub c: u64,
+}
+
+const ZERO_EVENT: Event = Event {
+    kind: 0,
+    ts_us: 0,
+    dur_us: 0,
+    a: 0,
+    b: 0,
+    c: 0,
+};
+
+/// Event sink. [`NullTracer`] is the dev-null default; [`RingTracer`]
+/// is the ring-buffered capture installed by `--trace`.
+pub trait Tracer: Send + Sync {
+    /// Record one event (may drop; never blocks).
+    fn record(&self, ev: Event);
+    /// Events successfully captured so far.
+    fn emitted(&self) -> u64 {
+        0
+    }
+    /// Events dropped because a ring was full.
+    fn dropped(&self) -> u64 {
+        0
+    }
+}
+
+/// The dev-null default: every event is discarded for free.
+pub struct NullTracer;
+
+impl Tracer for NullTracer {
+    fn record(&self, _ev: Event) {}
+}
+
+/// A fixed-capacity single-writer ring. Exactly one thread writes
+/// (the registering thread); any thread may read the committed prefix
+/// via [`ThreadRing::committed_events`].
+///
+/// Write protocol: one relaxed `fetch_add` reserves a slot index, a
+/// plain write fills the slot, and a release store publishes the new
+/// committed length. Because drops happen only once the buffer is
+/// full (`reserved >= cap`), the committed prefix `[0, committed)` is
+/// immutable after publication — readers never race a writer on the
+/// same slot, so no event can be observed torn.
+pub struct ThreadRing {
+    tid: u64,
+    name: String,
+    cap: usize,
+    buf: Box<[std::cell::UnsafeCell<Event>]>,
+    reserved: AtomicU64,
+    committed: AtomicU64,
+    dropped: AtomicU64,
+}
+
+// SAFETY: the single-writer protocol above — slots are written at most
+// once, before the release store of `committed` that readers acquire.
+unsafe impl Sync for ThreadRing {}
+
+impl ThreadRing {
+    fn new(tid: u64, name: String, cap: usize) -> ThreadRing {
+        let cap = cap.max(1);
+        let buf: Vec<std::cell::UnsafeCell<Event>> =
+            (0..cap).map(|_| std::cell::UnsafeCell::new(ZERO_EVENT)).collect();
+        ThreadRing {
+            tid,
+            name,
+            cap,
+            buf: buf.into_boxed_slice(),
+            reserved: AtomicU64::new(0),
+            committed: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one event: one relaxed atomic reservation + a plain
+    /// write. Counts (never blocks) when the ring is full. Must only
+    /// be called from the registering thread.
+    pub fn push(&self, ev: Event) {
+        let i = self.reserved.fetch_add(1, Ordering::Relaxed);
+        if (i as usize) < self.cap {
+            // SAFETY: single writer; slot `i` is reserved exactly once
+            // and not yet published, so no reader looks at it.
+            unsafe { *self.buf[i as usize].get() = ev };
+            self.committed.store(i + 1, Ordering::Release);
+        } else {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Snapshot the committed prefix (safe concurrently with `push`).
+    pub fn committed_events(&self) -> Vec<Event> {
+        let n = (self.committed.load(Ordering::Acquire) as usize).min(self.cap);
+        (0..n)
+            // SAFETY: slots < committed were published by a release
+            // store after their plain write and are never rewritten.
+            .map(|i| unsafe { *self.buf[i].get() })
+            .collect()
+    }
+
+    /// Events dropped because the ring was full.
+    pub fn dropped_events(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
+
+/// Ring-buffered tracer: a registry of per-thread rings plus the
+/// flush path that merges them into a Chrome trace-event JSON array.
+pub struct RingTracer {
+    cap: usize,
+    epoch: Instant,
+    rings: Mutex<Vec<Arc<ThreadRing>>>,
+    next_tid: AtomicU64,
+}
+
+impl RingTracer {
+    /// New tracer; every registered ring holds `buf_events` events.
+    pub fn new(buf_events: usize) -> RingTracer {
+        RingTracer {
+            cap: buf_events.max(1),
+            epoch: Instant::now(),
+            rings: Mutex::new(Vec::new()),
+            next_tid: AtomicU64::new(1),
+        }
+    }
+
+    /// Microseconds since this tracer's epoch.
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Register a ring for the calling thread (named after it).
+    pub fn register_current(&self) -> Arc<ThreadRing> {
+        let tid = self.next_tid.fetch_add(1, Ordering::Relaxed);
+        let name = std::thread::current()
+            .name()
+            .map_or_else(|| format!("thread-{tid}"), str::to_owned);
+        let ring = Arc::new(ThreadRing::new(tid, name, self.cap));
+        self.rings.lock().expect("trace registry poisoned").push(ring.clone());
+        ring
+    }
+
+    /// Merge every ring into one Chrome trace-event JSON array:
+    /// per-thread `thread_name` metadata, then each thread's events
+    /// sorted by timestamp (so `ts` is monotone per `tid`), then one
+    /// `trace totals` instant carrying the emitted/dropped counters.
+    pub fn write_json(&self, w: &mut dyn Write) -> std::io::Result<()> {
+        let rings: Vec<Arc<ThreadRing>> =
+            self.rings.lock().expect("trace registry poisoned").clone();
+        let pid = std::process::id();
+        let mut out = String::from("[");
+        let mut first = true;
+        let mut sep = |out: &mut String, first: &mut bool| {
+            if !*first {
+                out.push_str(",\n");
+            }
+            *first = false;
+        };
+        for ring in &rings {
+            sep(&mut out, &mut first);
+            out.push_str(&format!(
+                "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{pid},\"tid\":{},\
+                 \"args\":{{\"name\":\"",
+                ring.tid
+            ));
+            escape_json_into(&ring.name, &mut out);
+            out.push_str("\"}}");
+        }
+        for ring in &rings {
+            let mut evs = ring.committed_events();
+            evs.sort_by_key(|e| e.ts_us);
+            for ev in evs {
+                let kind = EventKind::from_u8(ev.kind);
+                sep(&mut out, &mut first);
+                out.push_str(&format!(
+                    "{{\"name\":\"{}\",\"cat\":\"smartpq\",\"ph\":\"{}\",\"ts\":{},\
+                     \"pid\":{pid},\"tid\":{}",
+                    kind.name(),
+                    if ev.dur_us > 0 { "X" } else { "i" },
+                    ev.ts_us,
+                    ring.tid
+                ));
+                if ev.dur_us > 0 {
+                    out.push_str(&format!(",\"dur\":{}", ev.dur_us));
+                } else {
+                    out.push_str(",\"s\":\"t\"");
+                }
+                let names = kind.arg_names();
+                out.push_str(&format!(
+                    ",\"args\":{{\"{}\":{},\"{}\":{},\"{}\":{}}}}}",
+                    names[0], ev.a, names[1], ev.b, names[2], ev.c
+                ));
+            }
+        }
+        let (emitted, dropped) = (self.emitted(), self.dropped());
+        sep(&mut out, &mut first);
+        out.push_str(&format!(
+            "{{\"name\":\"trace totals\",\"cat\":\"smartpq\",\"ph\":\"i\",\"ts\":{},\
+             \"pid\":{pid},\"tid\":0,\"s\":\"g\",\
+             \"args\":{{\"emitted\":{emitted},\"dropped\":{dropped}}}}}",
+            self.now_us()
+        ));
+        out.push_str("]\n");
+        w.write_all(out.as_bytes())
+    }
+}
+
+impl Tracer for RingTracer {
+    fn record(&self, ev: Event) {
+        // Only meaningful for the globally installed tracer (the
+        // thread-local ring cache is keyed to it); unit tests drive
+        // `ThreadRing::push` / `register_current` directly.
+        record_global(ev);
+    }
+
+    fn emitted(&self) -> u64 {
+        let rings = self.rings.lock().expect("trace registry poisoned");
+        rings
+            .iter()
+            .map(|r| (r.committed.load(Ordering::Acquire)).min(r.cap as u64))
+            .sum()
+    }
+
+    fn dropped(&self) -> u64 {
+        let rings = self.rings.lock().expect("trace registry poisoned");
+        rings.iter().map(|r| r.dropped_events()).sum()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Process-global probe surface.
+
+static TRACER: OnceLock<RingTracer> = OnceLock::new();
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+
+thread_local! {
+    static RING: RefCell<Option<Arc<ThreadRing>>> = const { RefCell::new(None) };
+}
+
+/// Install the global ring tracer (idempotent: the first capacity
+/// wins) and activate it. Until this is called every probe behaves as
+/// [`NullTracer`] at the cost of one relaxed load.
+pub fn install(buf_events: usize) -> &'static RingTracer {
+    let t = TRACER.get_or_init(|| RingTracer::new(buf_events));
+    ACTIVE.store(true, Ordering::Relaxed);
+    t
+}
+
+/// Pause/resume capture without uninstalling (used by the overhead
+/// measurement to run the identical workload with tracing off).
+pub fn set_active(on: bool) {
+    if TRACER.get().is_some() {
+        ACTIVE.store(on, Ordering::Relaxed);
+    }
+}
+
+/// Cheap hot-path guard: is a tracer installed and capturing?
+#[inline]
+pub fn enabled() -> bool {
+    ACTIVE.load(Ordering::Relaxed)
+}
+
+/// Microseconds since the tracer epoch (0 when tracing is off) —
+/// capture before timed work, pass to [`complete`] after.
+#[inline]
+pub fn now_us() -> u64 {
+    match TRACER.get() {
+        Some(t) if enabled() => t.now_us(),
+        _ => 0,
+    }
+}
+
+fn record_global(ev: Event) {
+    let Some(tracer) = TRACER.get() else { return };
+    // `try_with` so probes during thread teardown drop the event
+    // instead of panicking on a destroyed thread-local.
+    let _ = RING.try_with(|cell| {
+        let mut slot = cell.borrow_mut();
+        if slot.is_none() {
+            *slot = Some(tracer.register_current());
+        }
+        slot.as_ref().expect("ring registered above").push(ev);
+    });
+}
+
+/// Record an instant event (no-op when tracing is off).
+#[inline]
+pub fn instant(kind: EventKind, a: u64, b: u64, c: u64) {
+    if !enabled() {
+        return;
+    }
+    let ts_us = TRACER.get().map_or(0, RingTracer::now_us);
+    record_global(Event {
+        kind: kind as u8,
+        ts_us,
+        dur_us: 0,
+        a,
+        b,
+        c,
+    });
+}
+
+/// Record a complete span that began at `start_us` (a [`now_us`]
+/// reading) and ends now. No-op when tracing is off; spans that
+/// straddle a [`set_active`] edge are dropped rather than emitted
+/// with a bogus duration.
+#[inline]
+pub fn complete(kind: EventKind, start_us: u64, a: u64, b: u64, c: u64) {
+    if !enabled() {
+        return;
+    }
+    let Some(t) = TRACER.get() else { return };
+    let end = t.now_us();
+    record_global(Event {
+        kind: kind as u8,
+        ts_us: start_us,
+        // Clamp to >= 1µs so the flush keeps classifying it as a span.
+        dur_us: end.saturating_sub(start_us).max(1),
+        a,
+        b,
+        c,
+    });
+}
+
+/// `(emitted, dropped)` so far — `(0, 0)` when no tracer is
+/// installed. Feeds the proto v2 `Stats` frame so clients can observe
+/// capture health remotely.
+pub fn totals() -> (u64, u64) {
+    match TRACER.get() {
+        Some(t) => (t.emitted(), t.dropped()),
+        None => (0, 0),
+    }
+}
+
+/// Flush the merged trace to `path` and deactivate capture. Returns
+/// `(emitted, dropped)`. An error when no tracer was ever installed.
+pub fn flush_to(path: &Path) -> Result<(u64, u64)> {
+    let Some(t) = TRACER.get() else {
+        return Err(crate::util::error::Error::Invariant(
+            "trace flush requested but no tracer installed".into(),
+        ));
+    };
+    ACTIVE.store(false, Ordering::Relaxed);
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    t.write_json(&mut f)?;
+    f.flush()?;
+    Ok((t.emitted(), t.dropped()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn ev(kind: EventKind, ts_us: u64, dur_us: u64, a: u64) -> Event {
+        Event {
+            kind: kind as u8,
+            ts_us,
+            dur_us,
+            a,
+            b: a + 1,
+            c: a + 2,
+        }
+    }
+
+    #[test]
+    fn ring_overflow_drops_newest_with_exact_accounting() {
+        let ring = ThreadRing::new(1, "t".into(), 8);
+        for i in 0..20u64 {
+            ring.push(ev(EventKind::Combine, i, 0, i));
+        }
+        let got = ring.committed_events();
+        assert_eq!(got.len(), 8, "capacity bounds the committed prefix");
+        assert_eq!(ring.dropped_events(), 12, "exactly n - cap events dropped");
+        // Drop-newest: the oldest `cap` events survive, in order.
+        for (i, e) in got.iter().enumerate() {
+            assert_eq!(e.a, i as u64);
+            assert_eq!(e.ts_us, i as u64);
+        }
+    }
+
+    #[test]
+    fn multi_thread_writers_no_torn_events() {
+        // Each writer gets its own ring (the production invariant) and
+        // stamps every payload word with a thread-unique signature; a
+        // racing reader polls committed prefixes throughout. Any torn
+        // event shows up as a signature mismatch.
+        let tracer = Arc::new(RingTracer::new(4096));
+        let stop = Arc::new(AtomicBool::new(false));
+        let writers: Vec<_> = (0..4u64)
+            .map(|t| {
+                let tracer = tracer.clone();
+                std::thread::Builder::new()
+                    .name(format!("trace-writer-{t}"))
+                    .spawn(move || {
+                        let ring = tracer.register_current();
+                        for i in 0..3000u64 {
+                            let sig = (t + 1) * 1_000_000 + i;
+                            ring.push(Event {
+                                kind: EventKind::ServiceOp as u8,
+                                ts_us: sig,
+                                dur_us: sig,
+                                a: sig,
+                                b: sig,
+                                c: sig,
+                            });
+                        }
+                    })
+                    .expect("spawn writer")
+            })
+            .collect();
+        let reader = {
+            let tracer = tracer.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut checked = 0usize;
+                while !stop.load(Ordering::Relaxed) {
+                    let rings = tracer.rings.lock().unwrap().clone();
+                    for ring in rings {
+                        for e in ring.committed_events() {
+                            assert!(
+                                e.ts_us == e.a && e.a == e.b && e.b == e.c && e.dur_us == e.ts_us,
+                                "torn event observed: {e:?}"
+                            );
+                            checked += 1;
+                        }
+                    }
+                }
+                checked
+            })
+        };
+        for w in writers {
+            w.join().expect("writer");
+        }
+        stop.store(true, Ordering::Relaxed);
+        let checked = reader.join().expect("reader");
+        assert!(checked > 0, "reader observed committed events");
+        assert_eq!(tracer.emitted(), 4 * 3000);
+        assert_eq!(tracer.dropped(), 0);
+    }
+
+    #[test]
+    fn flushed_json_is_valid_trace_event_format() {
+        let tracer = RingTracer::new(64);
+        let ring = tracer.register_current();
+        // Deliberately out of order: a span recorded at its end has an
+        // earlier start ts than an instant emitted mid-span. The flush
+        // must still emit ts monotone per thread.
+        ring.push(ev(EventKind::ModeSwitch, 50, 0, 1));
+        ring.push(ev(EventKind::ServiceOp, 10, 90, 2));
+        ring.push(ev(EventKind::Rebalance, 70, 0, 3));
+        ring.push(ev(EventKind::Combine, 60, 0, 4));
+        ring.push(ev(EventKind::Request, 20, 30, 5));
+        let mut buf = Vec::new();
+        tracer.write_json(&mut buf).expect("write");
+        let text = String::from_utf8(buf).expect("utf8");
+        let doc = Json::parse(&text).expect("trace output parses as JSON");
+        let events = doc.as_array().expect("trace-event format is an array");
+        assert!(!events.is_empty());
+        let mut last_ts_per_tid: std::collections::HashMap<u64, u64> = Default::default();
+        let mut names = std::collections::HashSet::new();
+        for e in events {
+            let ph = e.get("ph").and_then(Json::as_str).expect("ph present");
+            assert!(e.get("pid").and_then(Json::as_u64).is_some(), "pid present");
+            let tid = e.get("tid").and_then(Json::as_u64).expect("tid present");
+            names.insert(e.get("name").and_then(Json::as_str).expect("name").to_owned());
+            if ph == "M" {
+                continue; // metadata events carry no ts
+            }
+            let ts = e.get("ts").and_then(Json::as_u64).expect("ts present");
+            let last = last_ts_per_tid.entry(tid).or_insert(0);
+            assert!(ts >= *last, "ts monotone per tid {tid}: {ts} < {last}");
+            *last = ts;
+            if ph == "X" {
+                assert!(e.get("dur").and_then(Json::as_u64).unwrap_or(0) > 0);
+            } else {
+                assert_eq!(ph, "i", "only complete/instant/metadata phases emitted");
+            }
+        }
+        for want in [
+            "service op",
+            "loadgen request",
+            "smartpq mode switch",
+            "shard rebalance",
+            "nuddle combine",
+            "trace totals",
+            "thread_name",
+        ] {
+            assert!(names.contains(want), "missing {want:?} in {names:?}");
+        }
+        let totals = events
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("trace totals"))
+            .expect("totals event");
+        assert_eq!(totals.get("args").unwrap().get("emitted").unwrap().as_u64(), Some(5));
+        assert_eq!(totals.get("args").unwrap().get("dropped").unwrap().as_u64(), Some(0));
+    }
+
+    #[test]
+    fn emitted_counts_saturate_at_capacity() {
+        let tracer = RingTracer::new(4);
+        let ring = tracer.register_current();
+        for i in 0..10 {
+            ring.push(ev(EventKind::Request, i, 1, i));
+        }
+        assert_eq!(tracer.emitted(), 4);
+        assert_eq!(tracer.dropped(), 6);
+        let mut buf = Vec::new();
+        tracer.write_json(&mut buf).expect("write");
+        let doc = Json::parse(std::str::from_utf8(&buf).unwrap()).unwrap();
+        let totals = doc
+            .as_array()
+            .unwrap()
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("trace totals"))
+            .expect("totals event")
+            .get("args")
+            .unwrap()
+            .clone();
+        assert_eq!(totals.get("emitted").unwrap().as_u64(), Some(4));
+        assert_eq!(totals.get("dropped").unwrap().as_u64(), Some(6));
+    }
+
+    #[test]
+    fn null_tracer_is_a_sink() {
+        let t = NullTracer;
+        t.record(ev(EventKind::ServiceOp, 1, 1, 1));
+        assert_eq!(t.emitted(), 0);
+        assert_eq!(t.dropped(), 0);
+    }
+}

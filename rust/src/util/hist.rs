@@ -263,4 +263,76 @@ mod tests {
     fn ns_to_us_scales() {
         assert!((ns_to_us(1_500) - 1.5).abs() < 1e-12);
     }
+
+    #[test]
+    fn snapshot_diff_is_safe_under_concurrent_recording() {
+        // Snapshots read each bucket with an independent relaxed load
+        // while writers keep recording, so two snapshots taken
+        // mid-burst need not agree bucket-by-bucket with any single
+        // moment in time. The diff contract is that this can never
+        // manufacture impossible output: per-bucket counts saturate
+        // instead of underflowing, the total is recomputed from the
+        // diffed counts (so it always equals their sum), and the
+        // quantiles of an interval stay inside the recorded value
+        // range. This pins the PR-7 bug-check of `diff` — a
+        // wrapping subtraction here would turn a racy read into a
+        // ~u64::MAX bucket count and garbage p99s in the live trace
+        // columns.
+        use std::sync::atomic::AtomicBool;
+        use std::sync::Arc;
+
+        let h = Arc::new(LatencyHist::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        const VALUES: [u64; 4] = [10, 1_000, 50_000, 2_000_000];
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let h = Arc::clone(&h);
+                let stop = Arc::clone(&stop);
+                s.spawn(move || {
+                    let mut i = t;
+                    while !stop.load(Ordering::Relaxed) {
+                        h.record(VALUES[(i % VALUES.len() as u64) as usize]);
+                        i += 1;
+                    }
+                });
+            }
+            let lo = bucket_floor(bucket_of(VALUES[0]));
+            let hi = bucket_floor(bucket_of(VALUES[VALUES.len() - 1]));
+            let mut intervals = 0u64;
+            let mut prev = h.snapshot();
+            while intervals < 200 {
+                let next = h.snapshot();
+                for (later, earlier) in [(&next, &prev), (&prev, &next)] {
+                    // Forward diff is the interval; the deliberately
+                    // reversed diff is the worst case for underflow —
+                    // both must stay sane.
+                    let d = later.diff(earlier);
+                    let sum: u64 = d.counts.iter().sum();
+                    assert_eq!(d.total(), sum, "total must equal the diffed counts");
+                    assert!(
+                        d.counts.iter().all(|&c| c <= next.total().max(prev.total())),
+                        "a bucket count exceeds everything ever recorded: underflow"
+                    );
+                    if d.total() > 0 {
+                        for q in [d.p50(), d.p99(), d.p999()] {
+                            assert!(
+                                (lo..=hi).contains(&q),
+                                "interval quantile {q} outside recorded range {lo}..={hi}"
+                            );
+                        }
+                    }
+                }
+                if next.total() > prev.total() {
+                    intervals += 1;
+                }
+                prev = next;
+            }
+            stop.store(true, Ordering::Relaxed);
+        });
+        // The writers recorded only VALUES: the final distribution's
+        // extreme quantiles are the extreme values.
+        let fin = h.snapshot();
+        assert!(fin.total() > 0);
+        assert_eq!(fin.quantile(0.0), bucket_floor(bucket_of(VALUES[0])));
+    }
 }

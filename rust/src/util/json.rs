@@ -99,6 +99,27 @@ impl Json {
     }
 }
 
+/// Append `s` to `out` with JSON string escaping applied (quotes,
+/// backslashes, and control characters; everything else verbatim).
+/// The inverse of this parser's string unescaping — used by emitters
+/// (e.g. the trace flush) so their output round-trips through
+/// [`Json::parse`].
+pub fn escape_json_into(s: &str, out: &mut String) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+}
+
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
@@ -342,5 +363,22 @@ mod tests {
         let v = Json::parse(r#"{"a": 1}"#).unwrap();
         assert!(v.get("b").is_none());
         assert!(Json::Null.get("a").is_none());
+    }
+
+    #[test]
+    fn escape_roundtrips_through_parse() {
+        for s in [
+            "plain",
+            "quote \" backslash \\ newline \n tab \t cr \r",
+            "control \u{01}\u{1f} bytes",
+            "unicode héllo — ≥1.3× \u{1F600}",
+            "",
+        ] {
+            let mut out = String::from("\"");
+            escape_json_into(s, &mut out);
+            out.push('"');
+            let v = Json::parse(&out).unwrap_or_else(|e| panic!("{out:?}: {e}"));
+            assert_eq!(v.as_str(), Some(s), "escape of {s:?} must round-trip");
+        }
     }
 }
