@@ -39,7 +39,15 @@
 //!   captured, `dropped == 0` in the smoke configuration (always hard
 //!   — a lossy smoke trace means the ring capacity is wrong), the
 //!   recorded `overhead_pct` matches the throughputs, and on >= 8-way
-//!   hosts the overhead is < 2% (advisory below).
+//!   hosts the overhead is < 2% (advisory below). The v4 schema adds
+//!   the **chaos** object (a loadgen run routed through the
+//!   fault-injection proxy, then a quiesced ledger check and a graceful
+//!   drain): on *any* host the run must have completed ops, injected at
+//!   least one fault, conserved elements exactly
+//!   (`inserted - popped - resident == 0`, recomputed, not trusted),
+//!   kept every handler thread alive (`poisoned == 0`) and drained
+//!   cleanly; the error-rate and recovery-time ceilings gate only on
+//!   >= 8-way hosts (small runners starve the backoff timers).
 //!
 //! Placeholder artifacts (the committed schema stubs) fail loudly: the
 //! point of the gate is that only measured output passes.
@@ -69,6 +77,25 @@ pub const MAX_TRACE_OVERHEAD_PCT: f64 = 2.0;
 /// (on tiny hosts the loadgen and service threads serialize, so the
 /// traced/untraced difference is scheduling noise).
 pub const TRACE_GATE_MIN_PARALLELISM: u64 = 8;
+
+/// Host parallelism below which the chaos error-rate and recovery-time
+/// ceilings are advisory. The *conservation* and *liveness* checks of
+/// the chaos object (exact ledger balance, zero poisoned handlers,
+/// clean drain, >= 1 injected fault) are hard on every host — they are
+/// correctness claims, not performance claims.
+pub const CHAOS_GATE_MIN_PARALLELISM: u64 = 8;
+
+/// Maximum tolerated failed-op fraction in the chaos run (enforced at
+/// [`CHAOS_GATE_MIN_PARALLELISM`]). Half the scheduled ops may be
+/// written off to injected faults; more means the client's
+/// reconnect/backoff machinery is not actually recovering.
+pub const MAX_CHAOS_ERROR_RATE: f64 = 0.5;
+
+/// Maximum transport-outage recovery time, µs (enforced at
+/// [`CHAOS_GATE_MIN_PARALLELISM`]). The resilient client's backoff
+/// envelope (4 retries, 20 ms doubling capped at 500 ms, full jitter)
+/// worst-cases near 1.5 s; 2 s is that plus scheduling headroom.
+pub const MAX_CHAOS_RECOVERY_US: f64 = 2_000_000.0;
 
 /// What a successful check reports.
 #[derive(Debug, Clone)]
@@ -624,6 +651,136 @@ fn check_service(v: &Json, path: &str, out: &mut CheckOutcome) -> Result<()> {
              captured, 0 dropped (small {host}-way host)"
         ));
     }
+    check_chaos(v, path, host, out)
+}
+
+fn check_chaos(v: &Json, path: &str, host: u64, out: &mut CheckOutcome) -> Result<()> {
+    let chaos = req(v, "chaos", path)?;
+    req_u64(chaos, "seed", path)?;
+    let ops_ok = req_u64(chaos, "ops_ok", path)?;
+    if ops_ok == 0 {
+        return Err(Error::Invariant(format!(
+            "{path}: chaos: no op completed — the client never survived a single fault"
+        )));
+    }
+    let ops_failed = req_u64(chaos, "ops_failed", path)?;
+    let err_sum = req_u64(chaos, "err_refused", path)?
+        + req_u64(chaos, "err_reset", path)?
+        + req_u64(chaos, "err_timeout", path)?
+        + req_u64(chaos, "err_protocol", path)?;
+    req_u64(chaos, "reconnects", path)?;
+    if req_u64(chaos, "proxy_conns", path)? == 0 {
+        return Err(schema_err(
+            path,
+            "chaos: the proxy relayed no connection — the loadgen bypassed it",
+        ));
+    }
+    let injected = req_u64(chaos, "injected_severed", path)?
+        + req_u64(chaos, "injected_truncated", path)?
+        + req_u64(chaos, "injected_stalled", path)?
+        + req_u64(chaos, "injected_delayed", path)?
+        + req_u64(chaos, "injected_split_writes", path)?;
+    let injected_stored = req_u64(chaos, "injected_total", path)?;
+    if injected != injected_stored {
+        return Err(schema_err(
+            path,
+            &format!("chaos: injected_total {injected_stored} != sum of classes {injected}"),
+        ));
+    }
+    if injected == 0 {
+        return Err(Error::Invariant(format!(
+            "{path}: chaos: zero faults injected — the run exercised nothing"
+        )));
+    }
+    // Conservation is recomputed from the ledger, never trusted, and is
+    // exact on every host: faults may fail *requests*, never leak or
+    // mint *elements*.
+    let inserted = req_u64(chaos, "inserted", path)?;
+    let popped = req_u64(chaos, "popped", path)?;
+    let resident = req_u64(chaos, "resident", path)?;
+    let delta = inserted as i64 - popped as i64 - resident as i64;
+    let delta_stored = req_f64(chaos, "conservation_delta", path)?;
+    if (delta_stored - delta as f64).abs() > 0.5 {
+        return Err(schema_err(
+            path,
+            &format!(
+                "chaos: recorded conservation_delta {delta_stored} != \
+                 inserted - popped - resident = {delta}"
+            ),
+        ));
+    }
+    if delta != 0 {
+        return Err(Error::Invariant(format!(
+            "{path}: chaos: element conservation violated under faults: inserted {inserted} - \
+             popped {popped} - resident {resident} = {delta} (must be exactly 0)"
+        )));
+    }
+    let poisoned = req_u64(chaos, "poisoned", path)?;
+    if poisoned > 0 {
+        return Err(Error::Invariant(format!(
+            "{path}: chaos: {poisoned} handler thread(s) died to a panic — faults must be \
+             handled, not crash"
+        )));
+    }
+    req_u64(chaos, "drained", path)?;
+    if req(chaos, "drain_ok", path)?.as_bool() != Some(true) {
+        return Err(Error::Invariant(format!(
+            "{path}: chaos: the graceful drain failed — the service did not ack and quiesce"
+        )));
+    }
+    out.facts.push(format!(
+        "chaos: {ops_ok} ops survived {injected} injected fault(s) ({err_sum} transport \
+         error(s)); ledger exact (inserted {inserted} = popped {popped} + resident {resident}), \
+         0 poisoned handlers, clean drain"
+    ));
+    // Performance-shaped ceilings: host-gated like every other target.
+    let rate = req_f64(chaos, "error_rate", path)?;
+    let expect = ops_failed as f64 / ((ops_ok + ops_failed).max(1)) as f64;
+    if (rate - expect).abs() > 1e-3 {
+        return Err(schema_err(
+            path,
+            &format!("chaos: recorded error_rate {rate:.4} != failed/scheduled {expect:.4}"),
+        ));
+    }
+    let recovery_p50 = req_f64(chaos, "recovery_p50_us", path)?;
+    let recovery_max = req_f64(chaos, "recovery_max_us", path)?;
+    if recovery_p50 < 0.0 || recovery_max < recovery_p50 {
+        return Err(schema_err(
+            path,
+            &format!(
+                "chaos: recovery times must satisfy 0 <= p50 <= max \
+                 (got p50={recovery_p50}, max={recovery_max})"
+            ),
+        ));
+    }
+    if host >= CHAOS_GATE_MIN_PARALLELISM {
+        if rate > MAX_CHAOS_ERROR_RATE {
+            return Err(Error::Invariant(format!(
+                "{path}: chaos: error rate {rate:.2} > {MAX_CHAOS_ERROR_RATE} on a {host}-way \
+                 host — reconnect/backoff is not recovering"
+            )));
+        }
+        if recovery_max > MAX_CHAOS_RECOVERY_US {
+            return Err(Error::Invariant(format!(
+                "{path}: chaos: worst recovery {recovery_max:.0} µs > \
+                 {MAX_CHAOS_RECOVERY_US:.0} µs on a {host}-way host"
+            )));
+        }
+        out.facts.push(format!(
+            "chaos: error rate {rate:.2} <= {MAX_CHAOS_ERROR_RATE}, worst recovery \
+             {recovery_max:.0} µs ({host}-way host)"
+        ));
+    } else if rate > MAX_CHAOS_ERROR_RATE || recovery_max > MAX_CHAOS_RECOVERY_US {
+        out.warnings.push(format!(
+            "chaos: error rate {rate:.2} / worst recovery {recovery_max:.0} µs exceed the \
+             ceilings, but the {host}-way host starves the backoff timers — advisory only"
+        ));
+    } else {
+        out.facts.push(format!(
+            "chaos: error rate {rate:.2} <= {MAX_CHAOS_ERROR_RATE}, worst recovery \
+             {recovery_max:.0} µs (small {host}-way host)"
+        ));
+    }
     Ok(())
 }
 
@@ -789,13 +946,53 @@ mod tests {
         )
     }
 
-    fn service_json_full(sweeps: &[String], skew: &str, trace: &str, host: u64) -> String {
+    fn service_chaos_with(
+        injected: bool,
+        ops_failed: u64,
+        resident: u64,
+        poisoned: u64,
+        drain_ok: bool,
+    ) -> String {
+        let (inserted, popped, ops_ok) = (1000u64, 600u64, 900u64);
+        let delta = inserted as i64 - popped as i64 - resident as i64;
+        let (sev, tru, sta, del, spl) = if injected { (2, 1, 1, 200, 150) } else { (0, 0, 0, 0, 0) };
+        format!(
+            "{{\"seed\": 42, \"ops_ok\": {ops_ok}, \"ops_failed\": {ops_failed}, \
+             \"error_rate\": {:.6}, \"err_refused\": 0, \"err_reset\": {ops_failed}, \
+             \"err_timeout\": 0, \"err_protocol\": 0, \"reconnects\": 3, \"proxy_conns\": 4, \
+             \"injected_severed\": {sev}, \"injected_truncated\": {tru}, \
+             \"injected_stalled\": {sta}, \"injected_delayed\": {del}, \
+             \"injected_split_writes\": {spl}, \"injected_total\": {}, \
+             \"recovery_p50_us\": 1500.000, \"recovery_max_us\": 90000.000, \
+             \"inserted\": {inserted}, \"popped\": {popped}, \"resident\": {resident}, \
+             \"conservation_delta\": {delta}, \"poisoned\": {poisoned}, \"drained\": 1, \
+             \"drain_ok\": {drain_ok}}}",
+            ops_failed as f64 / (ops_ok + ops_failed).max(1) as f64,
+            sev + tru + sta + del + spl,
+        )
+    }
+
+    fn service_chaos_ok() -> String {
+        service_chaos_with(true, 40, 400, 0, true)
+    }
+
+    fn service_json_v4(
+        sweeps: &[String],
+        skew: &str,
+        trace: &str,
+        chaos: &str,
+        host: u64,
+    ) -> String {
         format!(
             "{{\"generated_by\": \"smartpq bench --figure service\", \"placeholder\": false, \
              \"quick\": true, \"host_parallelism\": {host}, \"key_span\": 1048576, \
-             \"skew\": {skew}, \"trace\": {trace}, \"sweeps\": [{}]}}",
+             \"skew\": {skew}, \"trace\": {trace}, \"chaos\": {chaos}, \"sweeps\": [{}]}}",
             sweeps.join(", ")
         )
+    }
+
+    fn service_json_full(sweeps: &[String], skew: &str, trace: &str, host: u64) -> String {
+        service_json_v4(sweeps, skew, trace, &service_chaos_ok(), host)
     }
 
     fn service_json_with(sweeps: &[String], skew: &str, host: u64) -> String {
@@ -936,6 +1133,84 @@ mod tests {
         let err = check_str("s.json", &service_json_full(&sweeps, &skew, &tr, 8), 1.3)
             .unwrap_err();
         assert!(err.to_string().contains("overhead_pct"), "{err}");
+    }
+
+    #[test]
+    fn chaos_conservation_and_liveness_gate_on_any_host() {
+        let sweeps = vec![service_sweep("smartpq", 1, "balanced", 0.05, 120.0)];
+        let skew = service_skew(400.0, 200.0, 2);
+        let trace = service_trace(0.05, 0.0499, 5000, 0);
+        for host in [2, 8] {
+            // The good object passes and is recorded as a fact.
+            let ok = check_str(
+                "s.json",
+                &service_json_v4(&sweeps, &skew, &trace, &service_chaos_ok(), host),
+                1.3,
+            )
+            .unwrap();
+            assert!(ok.facts.iter().any(|f| f.contains("ledger exact")), "{ok:?}");
+            // A leaked element (resident 390, not 400): hard failure.
+            let leak = service_chaos_with(true, 40, 390, 0, true);
+            let err = check_str("s.json", &service_json_v4(&sweeps, &skew, &trace, &leak, host), 1.3)
+                .unwrap_err();
+            assert!(err.to_string().contains("conservation violated"), "{err}");
+            // A dead handler thread: hard failure.
+            let dead = service_chaos_with(true, 40, 400, 1, true);
+            let err = check_str("s.json", &service_json_v4(&sweeps, &skew, &trace, &dead, host), 1.3)
+                .unwrap_err();
+            assert!(err.to_string().contains("panic"), "{err}");
+            // A failed drain: hard failure.
+            let stuck = service_chaos_with(true, 40, 400, 0, false);
+            let err =
+                check_str("s.json", &service_json_v4(&sweeps, &skew, &trace, &stuck, host), 1.3)
+                    .unwrap_err();
+            assert!(err.to_string().contains("drain"), "{err}");
+            // Zero injected faults: the run proved nothing.
+            let calm = service_chaos_with(false, 40, 400, 0, true);
+            let err = check_str("s.json", &service_json_v4(&sweeps, &skew, &trace, &calm, host), 1.3)
+                .unwrap_err();
+            assert!(err.to_string().contains("zero faults"), "{err}");
+        }
+        // The stored delta must be the recomputed one.
+        let mut lied = service_chaos_ok();
+        lied = lied.replace("\"conservation_delta\": 0", "\"conservation_delta\": 3");
+        let err = check_str("s.json", &service_json_v4(&sweeps, &skew, &trace, &lied, 8), 1.3)
+            .unwrap_err();
+        assert!(err.to_string().contains("conservation_delta"), "{err}");
+        // No chaos object at all: the v4 schema requires it.
+        let legacy = format!(
+            "{{\"generated_by\": \"x\", \"placeholder\": false, \"quick\": true, \
+             \"host_parallelism\": 8, \"key_span\": 1048576, \"skew\": {skew}, \
+             \"trace\": {trace}, \"sweeps\": [{}]}}",
+            sweeps.join(", ")
+        );
+        let err = check_str("s.json", &legacy, 1.3).unwrap_err();
+        assert!(err.to_string().contains("chaos"), "{err}");
+    }
+
+    #[test]
+    fn chaos_error_rate_and_recovery_gate_on_big_hosts_only() {
+        let sweeps = vec![service_sweep("smartpq", 1, "balanced", 0.05, 120.0)];
+        let skew = service_skew(400.0, 200.0, 2);
+        let trace = service_trace(0.05, 0.0499, 5000, 0);
+        // 2000 failed vs 900 ok: rate ~0.69 > 0.5. Hard on 8-way.
+        let lossy = service_chaos_with(true, 2000, 400, 0, true);
+        let err = check_str("s.json", &service_json_v4(&sweeps, &skew, &trace, &lossy, 8), 1.3)
+            .unwrap_err();
+        assert!(err.to_string().contains("error rate"), "{err}");
+        // Advisory on 4-way.
+        let ok = check_str("s.json", &service_json_v4(&sweeps, &skew, &trace, &lossy, 4), 1.3)
+            .unwrap();
+        assert!(ok.warnings.iter().any(|w| w.contains("backoff timers")), "{ok:?}");
+        // A 9-second worst recovery: hard on 8-way, advisory on 4-way.
+        let slow = service_chaos_ok()
+            .replace("\"recovery_max_us\": 90000.000", "\"recovery_max_us\": 9000000.000");
+        let err = check_str("s.json", &service_json_v4(&sweeps, &skew, &trace, &slow, 8), 1.3)
+            .unwrap_err();
+        assert!(err.to_string().contains("worst recovery"), "{err}");
+        let ok = check_str("s.json", &service_json_v4(&sweeps, &skew, &trace, &slow, 4), 1.3)
+            .unwrap();
+        assert!(ok.warnings.iter().any(|w| w.contains("recovery")), "{ok:?}");
     }
 
     #[test]

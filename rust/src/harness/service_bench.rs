@@ -34,14 +34,17 @@
 //! the machine-readable `BENCH_service.json` (gated by
 //! `smartpq check-bench`).
 
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::harness::host_parallelism;
 use crate::harness::runner::BenchConfig;
 use crate::harness::table::{fmt, Table};
-use crate::service::{PqService, Request, Response, ServiceClient, ServiceConfig};
+use crate::service::{
+    classify_error, ChaosProxy, ClientConfig, ErrorClass, FaultPlan, PqService, Request, Response,
+    ServiceClient, ServiceConfig,
+};
 use crate::util::error::{Error, Result};
 use crate::util::hist::{ns_to_us, LatencyHist};
 use crate::util::rng::{Rng, Zipf};
@@ -330,6 +333,10 @@ pub struct LoadgenConfig {
     /// remainder when the schedule does not divide evenly — is still
     /// sent and measured.
     pub batch: usize,
+    /// Use resilient clients (connect/IO deadlines, reconnect with
+    /// backoff). Chaos runs set this; plain benchmarks keep the
+    /// blocking fail-fast clients so a broken service is loud.
+    pub resilient: bool,
 }
 
 impl LoadgenConfig {
@@ -346,6 +353,7 @@ impl LoadgenConfig {
                 dist: KeyDistKind::Uniform,
                 arrival: ArrivalKind::Steady,
                 batch: 1,
+                resilient: false,
             }
         } else {
             LoadgenConfig {
@@ -358,6 +366,7 @@ impl LoadgenConfig {
                 dist: KeyDistKind::Uniform,
                 arrival: ArrivalKind::Steady,
                 batch: 1,
+                resilient: false,
             }
         }
     }
@@ -437,6 +446,78 @@ pub struct MixOutcome {
     pub p999_us: f64,
     /// Largest observed latency, µs.
     pub max_us: f64,
+    /// Connect failures (service unreachable).
+    pub err_refused: u64,
+    /// Transport deaths mid-exchange (reset, broken pipe, EOF).
+    pub err_reset: u64,
+    /// Socket-deadline expiries.
+    pub err_timeout: u64,
+    /// Protocol violations (decode failures, server error frames).
+    pub err_protocol: u64,
+    /// Successful re-dials after a transport failure.
+    pub reconnects: u64,
+    /// Scheduled ops whose burst failed (sent but never answered).
+    pub ops_failed: u64,
+    /// Median transport-outage recovery time, µs (0 with no outages).
+    pub recovery_p50_us: f64,
+    /// Largest transport-outage recovery time, µs.
+    pub recovery_max_us: f64,
+}
+
+impl MixOutcome {
+    /// Errors across all classes.
+    pub fn errors_total(&self) -> u64 {
+        self.err_refused + self.err_reset + self.err_timeout + self.err_protocol
+    }
+}
+
+/// Shared per-class error accounting for one loadgen run. Failures are
+/// *counted*, never propagated: a connection that hits a fault keeps
+/// its schedule and keeps measuring — exactly what a chaos run needs
+/// from its observer.
+#[derive(Default)]
+struct ErrCounters {
+    refused: AtomicU64,
+    reset: AtomicU64,
+    timeout: AtomicU64,
+    protocol: AtomicU64,
+    reconnects: AtomicU64,
+    failed_ops: AtomicU64,
+}
+
+impl ErrCounters {
+    fn bump(&self, class: ErrorClass) {
+        let c = match class {
+            ErrorClass::Refused => &self.refused,
+            ErrorClass::Reset => &self.reset,
+            ErrorClass::Timeout => &self.timeout,
+            ErrorClass::Protocol => &self.protocol,
+        };
+        c.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Prefill the service at `addr` from one pipelined connection (batched
+/// inserts, drawn from the run's key distribution so residents match
+/// the traffic). Chaos runs call this against the *direct* service
+/// address before routing traffic through the fault proxy — injected
+/// faults must not be able to kill the setup phase.
+pub fn prefill_service(addr: &str, cfg: &LoadgenConfig) -> Result<()> {
+    let shared_zipf = match cfg.dist {
+        KeyDistKind::Zipf { s } => Some(Zipf::new(cfg.key_range, s)),
+        KeyDistKind::Uniform => None,
+    };
+    let mut c = ServiceClient::connect(addr)?;
+    let mut rng = Rng::new(cfg.seed ^ 0xF111);
+    let mut dist = cfg.build_dist(&shared_zipf);
+    let mut left = cfg.prefill;
+    while left > 0 {
+        let n = left.min(256) as usize;
+        let items: Vec<(u64, u64)> = (0..n).map(|_| (dist.next_key(&mut rng), 7)).collect();
+        c.insert_batch(&items)?;
+        left -= n as u64;
+    }
+    Ok(())
 }
 
 /// Drive one mix against the service at `addr` (open loop; see module
@@ -447,33 +528,28 @@ pub fn run_mix(addr: &str, mix: OpMix, cfg: &LoadgenConfig) -> Result<MixOutcome
         KeyDistKind::Zipf { s } => Some(Zipf::new(cfg.key_range, s)),
         KeyDistKind::Uniform => None,
     };
-    // Prefill from one pipelined connection (batched inserts, drawn
-    // from the run's key distribution so residents match the traffic).
-    {
-        let mut c = ServiceClient::connect(addr)?;
-        let mut rng = Rng::new(cfg.seed ^ 0xF111);
-        let mut dist = cfg.build_dist(&shared_zipf);
-        let mut left = cfg.prefill;
-        while left > 0 {
-            let n = left.min(256) as usize;
-            let items: Vec<(u64, u64)> =
-                (0..n).map(|_| (dist.next_key(&mut rng), 7)).collect();
-            c.insert_batch(&items)?;
-            left -= n as u64;
-        }
-    }
+    prefill_service(addr, cfg)?;
     let hist = Arc::new(LatencyHist::new());
-    let empty_deletes = Arc::new(std::sync::atomic::AtomicU64::new(0));
+    let recovery = Arc::new(LatencyHist::new());
+    let errs = Arc::new(ErrCounters::default());
+    let empty_deletes = Arc::new(AtomicU64::new(0));
     let t0 = Instant::now();
     let ops: u64 = std::thread::scope(|s| -> Result<u64> {
         let workers: Vec<_> = (0..cfg.conns)
             .map(|conn_id| {
                 let hist = Arc::clone(&hist);
+                let recovery = Arc::clone(&recovery);
+                let errs = Arc::clone(&errs);
                 let empty_deletes = Arc::clone(&empty_deletes);
                 let mut dist = cfg.build_dist(&shared_zipf);
                 let mut arrival = cfg.arrival.build(cfg.rate_per_conn);
                 s.spawn(move || -> Result<u64> {
-                    let mut client = ServiceClient::connect(addr)?;
+                    let ccfg = if cfg.resilient {
+                        ClientConfig::resilient(cfg.seed ^ (conn_id as u64 + 1))
+                    } else {
+                        ClientConfig::default()
+                    };
+                    let mut client = ServiceClient::connect_with(addr, ccfg)?;
                     let mut rng = Rng::stream(cfg.seed, conn_id as u64 + 1);
                     let run = Duration::from_secs_f64(cfg.secs);
                     let start = Instant::now();
@@ -482,6 +558,10 @@ pub fn run_mix(addr: &str, mix: OpMix, cfg: &LoadgenConfig) -> Result<MixOutcome
                     let mut scheds: Vec<Duration> = Vec::with_capacity(cfg.batch);
                     let mut reqs: Vec<Request> = Vec::with_capacity(cfg.batch);
                     let mut done = false;
+                    // Start of the current transport outage, if any —
+                    // cleared (and measured) by the next successful
+                    // exchange.
+                    let mut down_since: Option<Instant> = None;
                     while !done {
                         scheds.clear();
                         reqs.clear();
@@ -515,7 +595,25 @@ pub fn run_mix(addr: &str, mix: OpMix, cfg: &LoadgenConfig) -> Result<MixOutcome
                             std::thread::sleep(last - now);
                         }
                         let t_us = crate::trace::now_us();
-                        let resps = client.send(&reqs)?;
+                        // Faults are counted, never propagated: the
+                        // burst is written off, the connection re-dials
+                        // (backoff inside reconnect), and the schedule
+                        // continues — surviving connections keep
+                        // measuring.
+                        let resps = match client.send(&reqs) {
+                            Ok(r) => r,
+                            Err(e) => {
+                                errs.bump(classify_error(&e));
+                                errs.failed_ops.fetch_add(reqs.len() as u64, Ordering::Relaxed);
+                                if down_since.is_none() {
+                                    down_since = Some(Instant::now());
+                                }
+                                if client.reconnect().is_ok() {
+                                    errs.reconnects.fetch_add(1, Ordering::Relaxed);
+                                }
+                                continue;
+                            }
+                        };
                         crate::trace::complete(
                             crate::trace::EventKind::Request,
                             t_us,
@@ -523,12 +621,20 @@ pub fn run_mix(addr: &str, mix: OpMix, cfg: &LoadgenConfig) -> Result<MixOutcome
                             conn_id as u64,
                             0,
                         );
+                        if let Some(t) = down_since.take() {
+                            recovery.record(t.elapsed().as_nanos() as u64);
+                        }
                         let completed = start.elapsed();
+                        let mut error_frames = 0u64;
                         for (resp, &sched) in resps.iter().zip(scheds.iter()) {
-                            if let Response::Error { code, message } = resp {
-                                return Err(Error::Invariant(format!(
-                                    "service error {code}: {message}"
-                                )));
+                            if matches!(resp, Response::Error { .. }) {
+                                // The server closes after an error
+                                // frame; the op failed, the rest of the
+                                // burst (if any) came back as frames
+                                // before it.
+                                errs.bump(ErrorClass::Protocol);
+                                error_frames += 1;
+                                continue;
                             }
                             if matches!(resp, Response::DeleteMin(None)) {
                                 empty += 1;
@@ -536,6 +642,12 @@ pub fn run_mix(addr: &str, mix: OpMix, cfg: &LoadgenConfig) -> Result<MixOutcome
                             let lat = completed.checked_sub(sched).unwrap_or_default();
                             hist.record(lat.as_nanos() as u64);
                             ops += 1;
+                        }
+                        if error_frames > 0 {
+                            errs.failed_ops.fetch_add(error_frames, Ordering::Relaxed);
+                            if client.reconnect().is_ok() {
+                                errs.reconnects.fetch_add(1, Ordering::Relaxed);
+                            }
                         }
                     }
                     empty_deletes.fetch_add(empty, Ordering::Relaxed);
@@ -551,6 +663,7 @@ pub fn run_mix(addr: &str, mix: OpMix, cfg: &LoadgenConfig) -> Result<MixOutcome
     })?;
     let elapsed_s = t0.elapsed().as_secs_f64().max(1e-9);
     let snap = hist.snapshot();
+    let rsnap = recovery.snapshot();
     Ok(MixOutcome {
         mix: mix.name(),
         conns: cfg.conns,
@@ -564,6 +677,14 @@ pub fn run_mix(addr: &str, mix: OpMix, cfg: &LoadgenConfig) -> Result<MixOutcome
         p99_us: ns_to_us(snap.p99()),
         p999_us: ns_to_us(snap.p999()),
         max_us: ns_to_us(hist.max()),
+        err_refused: errs.refused.load(Ordering::Relaxed),
+        err_reset: errs.reset.load(Ordering::Relaxed),
+        err_timeout: errs.timeout.load(Ordering::Relaxed),
+        err_protocol: errs.protocol.load(Ordering::Relaxed),
+        reconnects: errs.reconnects.load(Ordering::Relaxed),
+        ops_failed: errs.failed_ops.load(Ordering::Relaxed),
+        recovery_p50_us: ns_to_us(rsnap.p50()),
+        recovery_max_us: ns_to_us(recovery.max()),
     })
 }
 
@@ -584,7 +705,7 @@ pub fn loadgen_table(addr: &str, outcomes: &[MixOutcome]) -> Table {
         format!("Open-loop load generator vs {addr} (latency from scheduled send time)"),
         &[
             "mix", "conns", "target_ops_s", "ops", "empty_del", "mops", "p50_us", "p99_us",
-            "p999_us", "max_us",
+            "p999_us", "max_us", "errors", "reconn",
         ],
     );
     for o in outcomes {
@@ -599,6 +720,8 @@ pub fn loadgen_table(addr: &str, outcomes: &[MixOutcome]) -> Table {
             fmt(o.p99_us),
             fmt(o.p999_us),
             fmt(o.max_us),
+            o.errors_total().to_string(),
+            o.reconnects.to_string(),
         ]);
     }
     t
@@ -796,6 +919,198 @@ pub fn trace_table(tr: &TraceOverhead) -> Table {
     t
 }
 
+// ---------------------------------------------------------- chaos run
+
+/// Backend of the chaos run (the headline adaptive backend).
+pub const CHAOS_BACKEND: &str = "smartpq";
+/// Shard count of the chaos run.
+pub const CHAOS_SHARDS: usize = 2;
+
+/// Outcome of the chaos figure: an open-loop run through the
+/// fault-injection proxy, then a quiesced conservation check and a
+/// graceful drain of the service.
+#[derive(Debug, Clone)]
+pub struct ChaosOutcome {
+    /// Fault-plan seed (per-connection faults are deterministic in it).
+    pub seed: u64,
+    /// Ops that completed and were measured.
+    pub ops_ok: u64,
+    /// Scheduled ops written off to faults.
+    pub ops_failed: u64,
+    /// Connect failures.
+    pub err_refused: u64,
+    /// Transport deaths mid-exchange.
+    pub err_reset: u64,
+    /// Socket-deadline expiries.
+    pub err_timeout: u64,
+    /// Protocol violations (decode failures, error frames).
+    pub err_protocol: u64,
+    /// Successful re-dials after a failure.
+    pub reconnects: u64,
+    /// Connections the proxy relayed.
+    pub proxy_conns: u64,
+    /// Connections cut at a frame boundary.
+    pub injected_severed: u64,
+    /// Connections cut inside a frame.
+    pub injected_truncated: u64,
+    /// Stalls injected.
+    pub injected_stalled: u64,
+    /// Chunks delayed.
+    pub injected_delayed: u64,
+    /// Writes split into tiny chunks.
+    pub injected_split_writes: u64,
+    /// Median transport-outage recovery time, µs.
+    pub recovery_p50_us: f64,
+    /// Largest transport-outage recovery time, µs.
+    pub recovery_max_us: f64,
+    /// Service-side ledger: accepted inserts.
+    pub inserted: u64,
+    /// Service-side ledger: successful pops.
+    pub popped: u64,
+    /// Elements resident at quiesce.
+    pub resident: u64,
+    /// Handler panics (must stay 0 — no fault reaches a panic).
+    pub poisoned: u64,
+    /// Connections retired by the graceful drain.
+    pub drained: u64,
+    /// The drain was acknowledged and every service thread joined.
+    pub drain_ok: bool,
+}
+
+impl ChaosOutcome {
+    /// Faults of any kind the proxy injected.
+    pub fn injected_total(&self) -> u64 {
+        self.injected_severed
+            + self.injected_truncated
+            + self.injected_stalled
+            + self.injected_delayed
+            + self.injected_split_writes
+    }
+
+    /// `inserted − popped − resident`; exactly 0 at quiesce, whatever
+    /// faults the connections suffered.
+    pub fn conservation_delta(&self) -> i64 {
+        self.inserted as i64 - self.popped as i64 - self.resident as i64
+    }
+
+    /// Failed fraction of all scheduled ops that went out.
+    pub fn error_rate(&self) -> f64 {
+        self.ops_failed as f64 / (self.ops_ok + self.ops_failed).max(1) as f64
+    }
+}
+
+/// The chaos run with explicit loadgen knobs (`resilient` and a
+/// pipelined batch are forced — fault survival is the point).
+pub fn run_chaos_with(lg: &LoadgenConfig, seed: u64) -> Result<ChaosOutcome> {
+    let mut lg = lg.clone();
+    lg.resilient = true;
+    lg.batch = lg.batch.max(4);
+    let svc = PqService::start(ServiceConfig {
+        backend: CHAOS_BACKEND.to_string(),
+        shards: CHAOS_SHARDS,
+        key_span: lg.key_range,
+        max_conns: lg.conns + 8,
+        ..Default::default()
+    })?;
+    let upstream = svc.addr().to_string();
+    let sharded = Arc::clone(svc.sharded());
+    // Prefill on a *direct* connection: the proxy's destructive faults
+    // must not be able to kill the setup phase.
+    prefill_service(&upstream, &lg)?;
+    lg.prefill = 0;
+    // Shaping faults (delay + split) on every connection make the
+    // "faults were actually injected" gate deterministic; the
+    // destructive faults (sever / truncate / stall) stay probabilistic
+    // per connection ordinal.
+    let plan = FaultPlan {
+        delay: 1.0,
+        split: 1.0,
+        ..FaultPlan::chaos(seed)
+    };
+    let mut proxy = ChaosProxy::start(&upstream, plan)?;
+    let proxy_addr = proxy.addr().to_string();
+    let o = run_mix(&proxy_addr, OpMix::Balanced, &lg)?;
+    let chaos_stats = proxy.stats();
+    proxy.stop();
+    // Quiesced ledger check and the graceful drain, on a direct
+    // connection — no faults between the observer and the service.
+    let mut direct = ServiceClient::connect(&upstream)?;
+    let wire_stats = direct.stats()?;
+    let drain_ok = direct.drain().is_ok();
+    drop(direct); // EOF retires the observer connection under drain
+    svc.wait();
+    let (inserted, popped, resident) = sharded.conservation();
+    debug_assert_eq!(wire_stats.inserted, inserted, "ledger moved between stats and quiesce");
+    Ok(ChaosOutcome {
+        seed,
+        ops_ok: o.ops,
+        ops_failed: o.ops_failed,
+        err_refused: o.err_refused,
+        err_reset: o.err_reset,
+        err_timeout: o.err_timeout,
+        err_protocol: o.err_protocol,
+        reconnects: o.reconnects,
+        proxy_conns: chaos_stats.conns,
+        injected_severed: chaos_stats.severed,
+        injected_truncated: chaos_stats.truncated,
+        injected_stalled: chaos_stats.stalled,
+        injected_delayed: chaos_stats.delayed_chunks,
+        injected_split_writes: chaos_stats.split_writes,
+        recovery_p50_us: o.recovery_p50_us,
+        recovery_max_us: o.recovery_max_us,
+        inserted,
+        popped,
+        resident,
+        poisoned: sharded.poisoned(),
+        drained: sharded.drained(),
+        drain_ok,
+    })
+}
+
+/// The figure's chaos acceptance point with the CI-sized defaults.
+pub fn run_chaos(quick: bool, seed: u64) -> Result<ChaosOutcome> {
+    run_chaos_with(&LoadgenConfig::new(quick), seed)
+}
+
+/// Render the chaos-run table.
+pub fn chaos_table(c: &ChaosOutcome) -> Table {
+    let mut t = Table::new(
+        format!(
+            "Chaos run ({CHAOS_BACKEND} x{CHAOS_SHARDS}, seed {}): loadgen through the fault proxy",
+            c.seed
+        ),
+        &["metric", "value"],
+    );
+    t.row(vec!["ops_ok".into(), c.ops_ok.to_string()]);
+    t.row(vec!["ops_failed".into(), c.ops_failed.to_string()]);
+    t.row(vec![
+        "errors (refused/reset/timeout/protocol)".into(),
+        format!("{}/{}/{}/{}", c.err_refused, c.err_reset, c.err_timeout, c.err_protocol),
+    ]);
+    t.row(vec!["reconnects".into(), c.reconnects.to_string()]);
+    t.row(vec![
+        "injected (sever/trunc/stall/delay/split)".into(),
+        format!(
+            "{}/{}/{}/{}/{}",
+            c.injected_severed,
+            c.injected_truncated,
+            c.injected_stalled,
+            c.injected_delayed,
+            c.injected_split_writes
+        ),
+    ]);
+    t.row(vec!["recovery_p50_us".into(), fmt(c.recovery_p50_us)]);
+    t.row(vec!["recovery_max_us".into(), fmt(c.recovery_max_us)]);
+    t.row(vec![
+        "conservation (ins/pop/resident, delta)".into(),
+        format!("{}/{}/{} , {}", c.inserted, c.popped, c.resident, c.conservation_delta()),
+    ]);
+    t.row(vec!["poisoned".into(), c.poisoned.to_string()]);
+    t.row(vec!["drained".into(), c.drained.to_string()]);
+    t.row(vec!["drain_ok".into(), c.drain_ok.to_string()]);
+    t
+}
+
 // ------------------------------------------------------- figure sweep
 
 /// One point of the service sweep.
@@ -828,15 +1143,18 @@ pub fn service_json_path() -> std::path::PathBuf {
     crate::harness::repo_root_file("BENCH_service.json")
 }
 
-/// Serialize the sweep as the `BENCH_service` JSON schema (v3: with
-/// the static-vs-elastic `skew` object and the traced-vs-untraced
-/// `trace` overhead object).
+/// Serialize the sweep as the `BENCH_service` JSON schema (v4: v3's
+/// static-vs-elastic `skew` and trace-overhead `trace` objects, plus
+/// the fault-injection `chaos` object — error-class counts, injected
+/// faults, recovery quantiles, the conservation ledger, and the
+/// graceful-drain verdict — gated by `smartpq check-bench`).
 pub fn results_to_json(
     quick: bool,
     key_span: u64,
     points: &[ServicePoint],
     skew: &SkewComparison,
     trace: &TraceOverhead,
+    chaos: &ChaosOutcome,
 ) -> String {
     let mut s = String::new();
     s.push_str("{\n");
@@ -865,6 +1183,33 @@ pub fn results_to_json(
     s.push_str(&format!("    \"overhead_pct\": {:.6},\n", trace.overhead_pct()));
     s.push_str(&format!("    \"emitted\": {},\n", trace.emitted));
     s.push_str(&format!("    \"dropped\": {}\n", trace.dropped));
+    s.push_str("  },\n");
+    s.push_str("  \"chaos\": {\n");
+    s.push_str(&format!("    \"seed\": {},\n", chaos.seed));
+    s.push_str(&format!("    \"ops_ok\": {},\n", chaos.ops_ok));
+    s.push_str(&format!("    \"ops_failed\": {},\n", chaos.ops_failed));
+    s.push_str(&format!("    \"error_rate\": {:.6},\n", chaos.error_rate()));
+    s.push_str(&format!("    \"err_refused\": {},\n", chaos.err_refused));
+    s.push_str(&format!("    \"err_reset\": {},\n", chaos.err_reset));
+    s.push_str(&format!("    \"err_timeout\": {},\n", chaos.err_timeout));
+    s.push_str(&format!("    \"err_protocol\": {},\n", chaos.err_protocol));
+    s.push_str(&format!("    \"reconnects\": {},\n", chaos.reconnects));
+    s.push_str(&format!("    \"proxy_conns\": {},\n", chaos.proxy_conns));
+    s.push_str(&format!("    \"injected_severed\": {},\n", chaos.injected_severed));
+    s.push_str(&format!("    \"injected_truncated\": {},\n", chaos.injected_truncated));
+    s.push_str(&format!("    \"injected_stalled\": {},\n", chaos.injected_stalled));
+    s.push_str(&format!("    \"injected_delayed\": {},\n", chaos.injected_delayed));
+    s.push_str(&format!("    \"injected_split_writes\": {},\n", chaos.injected_split_writes));
+    s.push_str(&format!("    \"injected_total\": {},\n", chaos.injected_total()));
+    s.push_str(&format!("    \"recovery_p50_us\": {:.3},\n", chaos.recovery_p50_us));
+    s.push_str(&format!("    \"recovery_max_us\": {:.3},\n", chaos.recovery_max_us));
+    s.push_str(&format!("    \"inserted\": {},\n", chaos.inserted));
+    s.push_str(&format!("    \"popped\": {},\n", chaos.popped));
+    s.push_str(&format!("    \"resident\": {},\n", chaos.resident));
+    s.push_str(&format!("    \"conservation_delta\": {},\n", chaos.conservation_delta()));
+    s.push_str(&format!("    \"poisoned\": {},\n", chaos.poisoned));
+    s.push_str(&format!("    \"drained\": {},\n", chaos.drained));
+    s.push_str(&format!("    \"drain_ok\": {}\n", chaos.drain_ok));
     s.push_str("  },\n");
     s.push_str("  \"sweeps\": [\n");
     for (i, p) in points.iter().enumerate() {
@@ -982,12 +1327,19 @@ pub fn run_service_figure_to(
     let trace = run_trace_overhead(cfg.quick)?;
     let tt = trace_table(&trace);
     tt.print();
+    // The chaos acceptance point: loadgen through the fault-injection
+    // proxy (fixed seed), then the conservation check and a graceful
+    // drain — gated by check-bench (conservation and drain exact
+    // everywhere; error-rate/recovery thresholds on >=8-way hosts).
+    let chaos = run_chaos(cfg.quick, 42)?;
+    let ct = chaos_table(&chaos);
+    ct.print();
     std::fs::write(
         json_path,
-        results_to_json(cfg.quick, lg.key_range, &points, &skew, &trace),
+        results_to_json(cfg.quick, lg.key_range, &points, &skew, &trace, &chaos),
     )?;
     println!("service results written to {}", json_path.display());
-    Ok(vec![t, st, tt])
+    Ok(vec![t, st, tt, ct])
 }
 
 /// The full figure with the default JSON location (repo root).
@@ -1034,12 +1386,16 @@ mod tests {
             dist: KeyDistKind::Uniform,
             arrival: ArrivalKind::Steady,
             batch: 1,
+            resilient: false,
         };
         let o = run_mix(&addr, OpMix::Balanced, &cfg).unwrap();
         assert!(o.ops > 0, "{o:?}");
         assert_eq!(o.samples, o.ops, "every sent op must be measured: {o:?}");
         assert!(o.mops > 0.0);
         assert!(o.p50_us <= o.p99_us && o.p99_us <= o.p999_us, "{o:?}");
+        // A clean loopback run records no faults.
+        assert_eq!(o.errors_total(), 0, "{o:?}");
+        assert_eq!(o.ops_failed, 0, "{o:?}");
         svc.shutdown();
         svc.wait();
     }
@@ -1137,7 +1493,8 @@ mod tests {
             emitted: 4321,
             dropped: 0,
         };
-        let s = results_to_json(true, 1 << 20, &points, &skew, &trace);
+        let chaos = sample_chaos_outcome();
+        let s = results_to_json(true, 1 << 20, &points, &skew, &trace, &chaos);
         let v = crate::util::json::Json::parse(&s).expect("service JSON parses");
         assert_eq!(v.get("placeholder").unwrap().as_bool(), Some(false));
         let sweeps = v.get("sweeps").unwrap().as_array().unwrap();
@@ -1153,6 +1510,59 @@ mod tests {
         assert_eq!(tr.get("dropped").unwrap().as_u64(), Some(0));
         let oh = tr.get("overhead_pct").unwrap().as_f64().unwrap();
         assert!((oh - 0.5).abs() < 1e-6, "overhead {oh}");
+        let ch = v.get("chaos").expect("chaos object present");
+        assert_eq!(ch.get("seed").unwrap().as_u64(), Some(42));
+        assert_eq!(ch.get("injected_total").unwrap().as_u64(), Some(chaos.injected_total()));
+        assert_eq!(ch.get("conservation_delta").unwrap().as_u64(), Some(0));
+        assert_eq!(ch.get("poisoned").unwrap().as_u64(), Some(0));
+        assert_eq!(ch.get("drain_ok").unwrap().as_bool(), Some(true));
+        let er = ch.get("error_rate").unwrap().as_f64().unwrap();
+        assert!(er > 0.0 && er < 1.0, "error_rate {er}");
+    }
+
+    fn sample_chaos_outcome() -> ChaosOutcome {
+        ChaosOutcome {
+            seed: 42,
+            ops_ok: 900,
+            ops_failed: 40,
+            err_refused: 0,
+            err_reset: 9,
+            err_timeout: 1,
+            err_protocol: 2,
+            reconnects: 10,
+            proxy_conns: 6,
+            injected_severed: 2,
+            injected_truncated: 1,
+            injected_stalled: 1,
+            injected_delayed: 400,
+            injected_split_writes: 350,
+            recovery_p50_us: 1_500.0,
+            recovery_max_us: 90_000.0,
+            inserted: 1_000,
+            popped: 600,
+            resident: 400,
+            poisoned: 0,
+            drained: 1,
+            drain_ok: true,
+        }
+    }
+
+    #[test]
+    fn chaos_run_conserves_elements_and_drains_cleanly() {
+        let mut lg = LoadgenConfig::new(true);
+        lg.conns = 2;
+        lg.rate_per_conn = 2_000.0;
+        lg.secs = 0.15;
+        lg.key_range = 10_000;
+        lg.prefill = 400;
+        lg.seed = 11;
+        let c = run_chaos_with(&lg, 0xC4A0).unwrap();
+        assert!(c.ops_ok > 0, "{c:?}");
+        assert!(c.injected_total() >= 1, "no faults injected: {c:?}");
+        assert_eq!(c.conservation_delta(), 0, "element leak under faults: {c:?}");
+        assert_eq!(c.poisoned, 0, "handler died: {c:?}");
+        assert!(c.drain_ok, "{c:?}");
+        assert!(c.drained >= 1, "observer connection not retired by drain: {c:?}");
     }
 
     #[test]

@@ -87,7 +87,8 @@ COMMANDS
                           options as for `app`)
   serve [--backend B] [--shards K] [--addr H:P] [--key-span N] [--max-conns N]
         [--static-shards] [--strict-span] [--rebalance-ms D] [--imbalance X]
-        [--rebalance-min-ops N] [--trace FILE] [--trace-buf N]
+        [--rebalance-min-ops N] [--write-timeout-ms D] [--trace FILE]
+        [--trace-buf N]
                           host K key-range shards of any registered
                           backend (default smartpq x2) behind the TCP
                           service; runs until a client sends a Shutdown
@@ -98,12 +99,17 @@ COMMANDS
                           --imbalance x the mean (--static-shards turns
                           this off; --strict-span rejects out-of-span
                           insert keys with an error frame instead of
-                          clamping them onto the top shard)
+                          clamping them onto the top shard).
+                          --write-timeout-ms bounds how long one slow
+                          reader may pin a handler's response writes
   loadgen [--addr H:P] [--mix insert|balanced|delete|phases|all] [--conns C]
           [--rate R] [--secs S] [--key-range N] [--batch B] [--shutdown]
-          [--dist uniform|zipf] [--zipf-s S]
+          [--drain] [--resilient] [--dist uniform|zipf] [--zipf-s S]
           [--arrival steady|onoff|phased] [--burst-duty F]
           [--burst-period-ms D] [--phase-depth F] [--phase-period-ms D]
+          [--chaos] [--chaos-seed N] [--chaos-sever P] [--chaos-truncate P]
+          [--chaos-stall P] [--chaos-stall-ms D] [--chaos-delay P]
+          [--chaos-delay-us D] [--chaos-split P]
           [--trace FILE] [--trace-buf N]
                           open-loop load generator: drives the service on
                           a per-connection arrival schedule and reports
@@ -115,13 +121,26 @@ COMMANDS
                           rate sinusoidally; --batch pipelines B ops per
                           burst. Without --addr an embedded loopback
                           service is spawned (--backend/--shards and the
-                          serve rebalancer knobs apply)
+                          serve rebalancer knobs apply). --resilient
+                          gives clients timeouts + backoff reconnect and
+                          per-class error counters instead of fail-fast;
+                          --drain retires the service via the graceful
+                          drain handshake instead of the abrupt Shutdown.
+                          --chaos routes traffic through the deterministic
+                          fault-injection proxy (implies --resilient and
+                          a drain exit), verifies element conservation
+                          and zero handler panics afterwards, and fails
+                          if no fault was injected; the --chaos-* knobs
+                          override the default FaultPlan probabilities
   check-bench <BENCH_*.json ...> [--min-combining-speedup X]
                           validate bench artifacts: JSON schema, the
                           combining speedup target (>= 1.3x on hosts with
-                          >= 8 parallel units), and the projection
-                          crossover/sanity invariants; nonzero exit on
-                          violation (the CI gate)
+                          >= 8 parallel units), the projection
+                          crossover/sanity invariants, and the service
+                          chaos gate (exact element conservation, zero
+                          poisoned handlers, clean drain; error-rate and
+                          recovery ceilings on >= 8-way hosts); nonzero
+                          exit on violation (the CI gate)
   demo                    SmartPQ adapting across contention phases
   classifier [--query \"threads,size,range,insert_pct\"]
                           show model info; optionally classify one workload
@@ -608,6 +627,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         rebalance_imbalance: args.num_or("imbalance", 3.0)?,
         rebalance_min_ops: args.num_or("rebalance-min-ops", 1_000)?,
         strict_span: args.flag("strict-span"),
+        write_timeout_ms: args.num_or("write-timeout-ms", 2_000)?,
     };
     let backend = cfg.backend.clone();
     let shards = cfg.shards;
@@ -629,11 +649,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// --addr is given.
 fn cmd_loadgen(args: &Args) -> Result<()> {
     use smartpq::harness::service_bench::{
-        run_loadgen, ArrivalKind, KeyDistKind, LoadgenConfig, OpMix,
+        prefill_service, run_loadgen, ArrivalKind, KeyDistKind, LoadgenConfig, OpMix,
     };
-    use smartpq::service::{server::DEFAULT_KEY_SPAN, PqService, ServiceClient, ServiceConfig};
+    use smartpq::service::{
+        server::DEFAULT_KEY_SPAN, ChaosProxy, FaultPlan, PqService, ServiceClient, ServiceConfig,
+    };
 
     let quick = args.flag("quick");
+    let chaos = args.flag("chaos");
     let mut cfg = LoadgenConfig::new(quick);
     cfg.conns = args.num_or("conns", cfg.conns)?;
     cfg.rate_per_conn = args.num_or("rate", cfg.rate_per_conn)?;
@@ -642,6 +665,9 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     cfg.prefill = args.num_or("prefill", cfg.prefill)?;
     cfg.seed = args.num_or("seed", cfg.seed)?;
     cfg.batch = args.num_or("batch", cfg.batch)?;
+    // Chaos runs force resilient clients: surviving injected faults is
+    // the point, so the fail-fast profile would just abort the run.
+    cfg.resilient = args.flag("resilient") || chaos;
     cfg.dist = match args.choice("dist", &["uniform", "zipf"], "uniform")?.as_str() {
         "zipf" => KeyDistKind::Zipf {
             s: args.num_or("zipf-s", 1.2)?,
@@ -689,16 +715,97 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             (addr, Some(svc))
         }
     };
-    let outcomes = run_loadgen(&addr, &mixes, &cfg)?;
-    if embedded.is_some() || args.flag("shutdown") {
-        ServiceClient::connect(addr.as_str())?.shutdown()?;
+    // Under --chaos the traffic routes through the fault-injection
+    // proxy; prefill happens on a direct connection first so the
+    // injected faults cannot kill the setup phase.
+    let mut proxy = if chaos {
+        if cfg.prefill > 0 {
+            prefill_service(&addr, &cfg)?;
+            cfg.prefill = 0;
+        }
+        let mut plan = FaultPlan::chaos(args.num_or("chaos-seed", cfg.seed)?);
+        plan.sever = args.num_or("chaos-sever", plan.sever)?;
+        plan.truncate = args.num_or("chaos-truncate", plan.truncate)?;
+        plan.stall = args.num_or("chaos-stall", plan.stall)?;
+        plan.stall_ms = args.num_or("chaos-stall-ms", plan.stall_ms)?;
+        plan.delay = args.num_or("chaos-delay", plan.delay)?;
+        plan.delay_us = args.num_or("chaos-delay-us", plan.delay_us)?;
+        plan.split = args.num_or("chaos-split", plan.split)?;
+        Some(ChaosProxy::start(&addr, plan)?)
+    } else {
+        None
+    };
+    let target = match &proxy {
+        Some(p) => p.addr().to_string(),
+        None => addr.clone(),
+    };
+    let outcomes = run_loadgen(&target, &mixes, &cfg)?;
+    if let Some(p) = proxy.as_mut() {
+        let st = p.stats();
+        p.stop();
+        println!(
+            "chaos: {} conn(s) relayed, {} fault(s) injected \
+             (severed {}, truncated {}, stalled {}, delayed {}, split {})",
+            st.conns,
+            st.injected_total(),
+            st.severed,
+            st.truncated,
+            st.stalled,
+            st.delayed_chunks,
+            st.split_writes
+        );
+        if st.injected_total() == 0 {
+            return Err(Error::Invariant(
+                "chaos: the proxy injected no fault — the run measured a clean network".into(),
+            ));
+        }
+        // Quiesced conservation + liveness verdict on a direct
+        // connection: faults may fail requests, never leak elements or
+        // kill handler threads.
+        let mut c = ServiceClient::connect(addr.as_str())?;
+        let st = c.stats()?;
+        let resident: u64 = st.shard_lens.iter().sum();
+        let delta = st.inserted as i64 - st.popped as i64 - resident as i64;
+        println!(
+            "chaos: conservation inserted {} - popped {} - resident {resident} = {delta}, \
+             poisoned {}, drained {}",
+            st.inserted, st.popped, st.poisoned, st.drained
+        );
+        if delta != 0 {
+            return Err(Error::Invariant(format!(
+                "chaos: element conservation violated under faults (delta {delta} != 0)"
+            )));
+        }
+        if st.poisoned > 0 {
+            return Err(Error::Invariant(format!(
+                "chaos: {} handler(s) panicked — faults must be handled, not crash",
+                st.poisoned
+            )));
+        }
+    }
+    // Chaos runs always retire the service via the graceful drain so
+    // the exit itself proves the drain path; --drain forces the same
+    // against any service, --shutdown keeps the abrupt stop.
+    let graceful = args.flag("drain") || chaos;
+    if embedded.is_some() || graceful || args.flag("shutdown") {
+        let mut c = ServiceClient::connect(addr.as_str())?;
+        if graceful {
+            c.drain()?;
+            println!("loadgen: graceful drain acknowledged");
+        } else {
+            c.shutdown()?;
+        }
     }
     if let Some(svc) = embedded {
         svc.wait();
     }
     trace_finish(&trace_path)?;
     let total: u64 = outcomes.iter().map(|o| o.ops).sum();
-    println!("loadgen: {total} ops over {} mix(es) against {addr}", outcomes.len());
+    let failed: u64 = outcomes.iter().map(|o| o.ops_failed).sum();
+    println!(
+        "loadgen: {total} ops ({failed} written off to faults) over {} mix(es) against {addr}",
+        outcomes.len()
+    );
     Ok(())
 }
 

@@ -6,43 +6,228 @@
 //! in one syscall and then reads exactly one response per request —
 //! pipelining, which is what lets the server fuse the backlog into the
 //! batch entry points (see [`crate::service::server`]).
+//!
+//! ## Resilience
+//!
+//! [`ClientConfig`] adds connect/read/write deadlines and a reconnect
+//! path with exponential backoff + deterministic jitter
+//! ([`ServiceClient::reconnect`]). Retry policy follows idempotency:
+//! the read-only helpers (`peek`, `len`, `stats`) transparently
+//! reconnect and retry on transport failure, while mutations surface a
+//! typed [`Error::Disconnected`] carrying how many requests were in
+//! flight — a lost *response* does not say whether the mutation was
+//! applied, so only the caller can decide what a blind retry would
+//! mean. The receive buffer is hard-capped like the server's
+//! ([`proto::MAX_FRAME_LEN`] plus one read chunk): a corrupt length
+//! prefix from a faulty peer is rejected as
+//! [`proto::err::FRAME_TOO_LARGE`] before it can drive allocation.
 
 use std::io::{Read, Write};
-use std::net::{TcpStream, ToSocketAddrs};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::time::Duration;
 
 use crate::service::proto::{self, Request, Response, ServiceStats};
 use crate::util::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// Client read granularity; also bounds the buffered-response cap.
+const READ_CHUNK: usize = 16 * 1024;
+
+/// Hard cap on the client's receive buffer, mirroring the server's: a
+/// conforming peer never exceeds one incomplete frame plus one read
+/// chunk, so crossing it means the stream is garbage.
+const MAX_CLIENT_BUF: usize = proto::MAX_FRAME_LEN + 4 + READ_CHUNK;
+
+/// Connection and resilience knobs for [`ServiceClient`].
+#[derive(Debug, Clone)]
+pub struct ClientConfig {
+    /// Connect deadline (`None` = the OS default, effectively blocking).
+    pub connect_timeout: Option<Duration>,
+    /// Per-read and per-write socket deadline (`None` = blocking).
+    pub io_timeout: Option<Duration>,
+    /// Reconnect attempts and idempotent-read retries (0 disables both).
+    pub retries: u32,
+    /// First backoff delay between reconnect attempts, in milliseconds.
+    pub backoff_base_ms: u64,
+    /// Backoff ceiling in milliseconds (doubling stops here).
+    pub backoff_max_ms: u64,
+    /// Jitter seed — backoff schedules are deterministic per seed.
+    pub seed: u64,
+}
+
+impl Default for ClientConfig {
+    /// Behavior-compatible with the pre-resilience client: blocking
+    /// I/O, no reconnects, no retries.
+    fn default() -> Self {
+        ClientConfig {
+            connect_timeout: None,
+            io_timeout: None,
+            retries: 0,
+            backoff_base_ms: 20,
+            backoff_max_ms: 500,
+            seed: 1,
+        }
+    }
+}
+
+impl ClientConfig {
+    /// A resilient profile: bounded I/O, a few reconnect attempts with
+    /// exponential backoff + jitter. `seed` decorrelates the jitter
+    /// across clients so a mass disconnect does not re-dial in
+    /// lockstep.
+    pub fn resilient(seed: u64) -> Self {
+        ClientConfig {
+            connect_timeout: Some(Duration::from_millis(1_000)),
+            io_timeout: Some(Duration::from_millis(2_000)),
+            retries: 4,
+            backoff_base_ms: 20,
+            backoff_max_ms: 500,
+            seed,
+        }
+    }
+}
+
+/// Coarse failure classes for error accounting (loadgen per-class
+/// counters, chaos-gate assertions).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorClass {
+    /// The service is not there (connection refused / unreachable).
+    Refused,
+    /// The transport died mid-exchange (reset, broken pipe, EOF, ...).
+    Reset,
+    /// A socket deadline expired.
+    Timeout,
+    /// The peer spoke garbage, or answered with an error frame.
+    Protocol,
+}
+
+impl ErrorClass {
+    /// Stable lowercase label (JSON keys, log lines).
+    pub fn label(self) -> &'static str {
+        match self {
+            ErrorClass::Refused => "refused",
+            ErrorClass::Reset => "reset",
+            ErrorClass::Timeout => "timeout",
+            ErrorClass::Protocol => "protocol",
+        }
+    }
+}
+
+/// Classify any crate error into its coarse [`ErrorClass`].
+pub fn classify_error(e: &Error) -> ErrorClass {
+    match e {
+        Error::Io(io) => classify_kind(io.kind()),
+        Error::Disconnected { kind, .. } => classify_kind(*kind),
+        // Decode failures, error frames, and every other non-transport
+        // failure mean the *conversation* broke, not the wire.
+        _ => ErrorClass::Protocol,
+    }
+}
+
+fn classify_kind(kind: std::io::ErrorKind) -> ErrorClass {
+    use std::io::ErrorKind;
+    match kind {
+        ErrorKind::ConnectionRefused | ErrorKind::AddrNotAvailable | ErrorKind::NotConnected => {
+            ErrorClass::Refused
+        }
+        ErrorKind::WouldBlock | ErrorKind::TimedOut => ErrorClass::Timeout,
+        _ => ErrorClass::Reset,
+    }
+}
 
 /// A connected service client.
 pub struct ServiceClient {
     stream: TcpStream,
     rbuf: Vec<u8>,
     wbuf: Vec<u8>,
+    /// Resolved peer address, kept for reconnects.
+    peer: SocketAddr,
+    cfg: ClientConfig,
+    rng: Rng,
 }
 
 impl ServiceClient {
-    /// Connect to a running service.
+    /// Connect to a running service with the default (blocking,
+    /// non-retrying) profile.
     pub fn connect(addr: impl ToSocketAddrs) -> Result<ServiceClient> {
-        let stream = TcpStream::connect(addr)?;
-        stream.set_nodelay(true)?;
+        Self::connect_with(addr, ClientConfig::default())
+    }
+
+    /// Connect with explicit resilience knobs.
+    pub fn connect_with(addr: impl ToSocketAddrs, cfg: ClientConfig) -> Result<ServiceClient> {
+        let peer = addr
+            .to_socket_addrs()?
+            .next()
+            .ok_or_else(|| Error::Config("service address resolved to nothing".into()))?;
+        let rng = Rng::new(cfg.seed);
+        let stream = Self::dial(peer, &cfg)?;
         Ok(ServiceClient {
             stream,
             rbuf: Vec::with_capacity(4 * 1024),
             wbuf: Vec::with_capacity(4 * 1024),
+            peer,
+            cfg,
+            rng,
         })
+    }
+
+    fn dial(peer: SocketAddr, cfg: &ClientConfig) -> Result<TcpStream> {
+        let stream = match cfg.connect_timeout {
+            Some(t) => TcpStream::connect_timeout(&peer, t)?,
+            None => TcpStream::connect(peer)?,
+        };
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(cfg.io_timeout)?;
+        stream.set_write_timeout(cfg.io_timeout)?;
+        Ok(stream)
+    }
+
+    /// Drop the (dead) connection and dial the same peer again, with
+    /// exponential backoff + jitter between attempts (`retries`
+    /// attempts total; the first is immediate). Buffered partial
+    /// responses are discarded — they belonged to the dead connection.
+    pub fn reconnect(&mut self) -> Result<()> {
+        self.rbuf.clear();
+        let attempts = self.cfg.retries.max(1);
+        let mut delay_ms = self.cfg.backoff_base_ms.max(1);
+        let mut last: Option<Error> = None;
+        for attempt in 0..attempts {
+            if attempt > 0 {
+                // Full jitter: sleep U[0, delay), then double the
+                // window toward the cap.
+                let jit = self.rng.gen_range(delay_ms);
+                std::thread::sleep(Duration::from_millis(jit));
+                delay_ms = (delay_ms * 2).min(self.cfg.backoff_max_ms.max(1));
+            }
+            match Self::dial(self.peer, &self.cfg) {
+                Ok(s) => {
+                    self.stream = s;
+                    return Ok(());
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(last.expect("at least one dial attempt"))
     }
 
     /// Write every request as one pipelined burst, then collect exactly
     /// one response per request, in order. A server [`Response::Error`]
     /// is returned in-place (the connection is dead afterwards).
+    /// Transport failures surface as [`Error::Disconnected`] carrying
+    /// the count of requests written but unanswered.
     pub fn send(&mut self, reqs: &[Request]) -> Result<Vec<Response>> {
         self.wbuf.clear();
         for r in reqs {
             proto::encode_request(r, &mut self.wbuf);
         }
-        self.stream.write_all(&self.wbuf)?;
+        if let Err(e) = self.stream.write_all(&self.wbuf) {
+            return Err(Error::Disconnected {
+                in_flight: reqs.len(),
+                kind: e.kind(),
+            });
+        }
         let mut out = Vec::with_capacity(reqs.len());
-        let mut chunk = [0u8; 16 * 1024];
+        let mut chunk = [0u8; READ_CHUNK];
         while out.len() < reqs.len() {
             // Drain complete frames already buffered.
             let mut off = 0;
@@ -59,25 +244,39 @@ impl ServiceClient {
             if out.len() == reqs.len() {
                 break;
             }
-            let n = self.stream.read(&mut chunk)?;
+            let n = match self.stream.read(&mut chunk) {
+                Ok(n) => n,
+                Err(e) => {
+                    return Err(Error::Disconnected {
+                        in_flight: reqs.len() - out.len(),
+                        kind: e.kind(),
+                    })
+                }
+            };
             if n == 0 {
                 // The server closes right after an error frame; surface
                 // that frame instead of a generic truncation failure.
-                if let Some(Response::Error { code, message }) = out
-                    .iter()
-                    .find(|r| matches!(r, Response::Error { .. }))
+                if let Some(Response::Error { code, message }) =
+                    out.iter().find(|r| matches!(r, Response::Error { .. }))
                 {
                     return Err(Error::Invariant(format!(
                         "service error {code} closed the connection: {message}"
                     )));
                 }
-                return Err(Error::Invariant(format!(
-                    "service closed the connection with {} of {} responses outstanding",
-                    reqs.len() - out.len(),
-                    reqs.len()
-                )));
+                return Err(Error::Disconnected {
+                    in_flight: reqs.len() - out.len(),
+                    kind: std::io::ErrorKind::UnexpectedEof,
+                });
             }
             self.rbuf.extend_from_slice(&chunk[..n]);
+            if self.rbuf.len() > MAX_CLIENT_BUF {
+                return Err(Error::Proto {
+                    code: proto::err::FRAME_TOO_LARGE,
+                    message: format!(
+                        "response buffer exceeded {MAX_CLIENT_BUF} bytes without a decodable frame"
+                    ),
+                });
+            }
         }
         Ok(out)
     }
@@ -99,6 +298,28 @@ impl ServiceClient {
         Ok(resps.pop().expect("send returns one response per request"))
     }
 
+    /// One idempotent read, transparently reconnecting and retrying on
+    /// transport failure up to `retries` times. Mutations never take
+    /// this path — a lost response leaves the mutation's outcome
+    /// unknown, which only the caller can reason about.
+    fn call_idempotent(&mut self, req: Request) -> Result<Response> {
+        let mut attempt = 0;
+        loop {
+            match self.call(req.clone()) {
+                Ok(r) => return Ok(r),
+                Err(e) => {
+                    let transport =
+                        matches!(&e, Error::Disconnected { .. } | Error::Io(_));
+                    if !transport || attempt >= self.cfg.retries {
+                        return Err(e);
+                    }
+                    attempt += 1;
+                    self.reconnect()?;
+                }
+            }
+        }
+    }
+
     /// Insert `(key, value)`; false on duplicate or rejected key.
     pub fn insert(&mut self, key: u64, value: u64) -> Result<bool> {
         match self.call(Request::Insert { key, value })? {
@@ -115,9 +336,10 @@ impl ServiceClient {
         }
     }
 
-    /// Observe the (relaxed) minimum without removing it.
+    /// Observe the (relaxed) minimum without removing it. Idempotent:
+    /// auto-retries across reconnects under a resilient config.
     pub fn peek(&mut self) -> Result<Option<u64>> {
-        match self.call(Request::Peek)? {
+        match self.call_idempotent(Request::Peek)? {
             Response::Peek(r) => Ok(r),
             other => Err(unexpected("Peek", &other)),
         }
@@ -170,7 +392,8 @@ impl ServiceClient {
         Ok(out)
     }
 
-    /// Approximate element count across all shards.
+    /// Approximate element count across all shards. Idempotent:
+    /// auto-retries across reconnects under a resilient config.
     pub fn len(&mut self) -> Result<u64> {
         Ok(self.len_and_epoch()?.0)
     }
@@ -178,16 +401,18 @@ impl ServiceClient {
     /// Approximate element count plus the shard-map epoch it was
     /// observed under (the epoch bumps once per completed rebalance).
     pub fn len_and_epoch(&mut self) -> Result<(u64, u64)> {
-        match self.call(Request::Len)? {
+        match self.call_idempotent(Request::Len)? {
             Response::Len { len, epoch } => Ok((len, epoch)),
             other => Err(unexpected("Len", &other)),
         }
     }
 
-    /// Shard-map observability snapshot (epoch, rebalances, per-shard
-    /// resident and op spreads).
+    /// Shard-map observability snapshot (epoch, rebalances, the
+    /// conservation ledger, per-shard resident and op spreads).
+    /// Idempotent: auto-retries across reconnects under a resilient
+    /// config.
     pub fn stats(&mut self) -> Result<ServiceStats> {
-        match self.call(Request::Stats)? {
+        match self.call_idempotent(Request::Stats)? {
             Response::Stats(stats) => Ok(stats),
             other => Err(unexpected("Stats", &other)),
         }
@@ -205,8 +430,61 @@ impl ServiceClient {
             other => Err(unexpected("Shutdown", &other)),
         }
     }
+
+    /// Ask the service to drain gracefully: stop accepting, answer
+    /// every fully received request on every live connection, then
+    /// stop. Acknowledged before the drain begins; pair with
+    /// [`crate::service::PqService::wait`] (or watch for connection
+    /// refusal) to observe completion.
+    pub fn drain(&mut self) -> Result<()> {
+        match self.call(Request::Drain)? {
+            Response::Drain => Ok(()),
+            other => Err(unexpected("Drain", &other)),
+        }
+    }
 }
 
 fn unexpected(wanted: &str, got: &Response) -> Error {
     Error::Invariant(format!("protocol violation: expected {wanted} response, got {got:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_classes_cover_the_transport_taxonomy() {
+        use std::io::ErrorKind;
+        let io = |k: ErrorKind| Error::from(std::io::Error::new(k, "x"));
+        assert_eq!(classify_error(&io(ErrorKind::ConnectionRefused)), ErrorClass::Refused);
+        assert_eq!(classify_error(&io(ErrorKind::TimedOut)), ErrorClass::Timeout);
+        assert_eq!(classify_error(&io(ErrorKind::WouldBlock)), ErrorClass::Timeout);
+        assert_eq!(classify_error(&io(ErrorKind::ConnectionReset)), ErrorClass::Reset);
+        assert_eq!(classify_error(&io(ErrorKind::BrokenPipe)), ErrorClass::Reset);
+        let disc = Error::Disconnected {
+            in_flight: 2,
+            kind: ErrorKind::UnexpectedEof,
+        };
+        assert_eq!(classify_error(&disc), ErrorClass::Reset);
+        let proto_err = Error::Proto {
+            code: proto::err::FRAME_TOO_LARGE,
+            message: "big".into(),
+        };
+        assert_eq!(classify_error(&proto_err), ErrorClass::Protocol);
+        assert_eq!(classify_error(&Error::Invariant("frame".into())), ErrorClass::Protocol);
+        assert_eq!(ErrorClass::Refused.label(), "refused");
+        assert_eq!(ErrorClass::Protocol.label(), "protocol");
+    }
+
+    #[test]
+    fn default_config_is_behavior_compatible() {
+        let cfg = ClientConfig::default();
+        assert!(cfg.connect_timeout.is_none());
+        assert!(cfg.io_timeout.is_none());
+        assert_eq!(cfg.retries, 0);
+        let r = ClientConfig::resilient(7);
+        assert!(r.retries > 0);
+        assert!(r.io_timeout.is_some());
+        assert!(r.backoff_base_ms <= r.backoff_max_ms);
+    }
 }

@@ -18,15 +18,24 @@
 //!   are fused per connection into the PR-3 batch entry points.
 //! * [`client`] — a blocking, pipelining client used by the open-loop
 //!   load generator (`smartpq loadgen`,
-//!   [`crate::harness::service_bench`]) and the differential tests.
+//!   [`crate::harness::service_bench`]) and the differential tests,
+//!   with connect/read/write deadlines and reconnect-with-backoff
+//!   resilience ([`client::ClientConfig`]).
+//! * [`chaos`] — a deterministic, seed-driven fault-injection TCP proxy
+//!   ([`chaos::ChaosProxy`]): per-connection delays, stalls, mid-frame
+//!   truncation, frame-boundary severs, and tiny-write splits, driven
+//!   by a [`chaos::FaultPlan`]. The chaos figure, the CI smoke step,
+//!   and the frame-boundary sever tests all route traffic through it.
 //!
 //! The whole plane is `std::net` only — no dependencies, same as the
 //! rest of the crate.
 
+pub mod chaos;
 pub mod client;
 pub mod proto;
 pub mod server;
 
-pub use client::ServiceClient;
+pub use chaos::{ChaosProxy, ChaosStats, FaultPlan};
+pub use client::{classify_error, ClientConfig, ErrorClass, ServiceClient};
 pub use proto::{Request, Response, ServiceStats};
-pub use server::{PqService, RebalanceOutcome, ServiceConfig, ShardedPq};
+pub use server::{PqService, RebalanceOutcome, ServiceConfig, ShardedPq, SweepSignal};

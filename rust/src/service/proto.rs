@@ -18,14 +18,24 @@
 //! and [`decode_response`] return `Ok(None)` so a streaming reader can
 //! wait for more bytes.
 //!
-//! ## Frame payloads (version 2)
+//! ## Frame payloads (version 3)
 //!
-//! Version 2 makes the elastic shard map observable: `Len` responses
-//! carry the current map epoch next to the count, and the new
-//! `Stats` pair exposes the epoch, the completed-rebalance count, the
-//! server-side trace capture counters (events emitted/dropped by the
-//! `--trace` ring buffers, both 0 when tracing is off), and the
-//! per-shard resident/op spreads the skew tests assert on.
+//! Version 2 made the elastic shard map observable: `Len` responses
+//! carry the current map epoch next to the count, and the `Stats` pair
+//! exposes the epoch, the completed-rebalance count, the server-side
+//! trace capture counters (events emitted/dropped by the `--trace` ring
+//! buffers, both 0 when tracing is off), and the per-shard resident/op
+//! spreads the skew tests assert on.
+//!
+//! Version 3 adds the resilience plane: a `Drain` request (stop
+//! accepting, finish every fully received pipelined run, ack, then exit
+//! — the graceful sibling of `Shutdown`), a `FRAME_TOO_LARGE` error
+//! code for length prefixes beyond [`MAX_FRAME_LEN`] (answered before a
+//! single payload byte is buffered), and four lifetime counters in
+//! `Stats`: `inserted`/`popped` (the accepted-mutation ledger behind the
+//! chaos gate's conservation check `inserted − popped − resident == 0`)
+//! and `poisoned`/`drained` (connections whose handler panicked and was
+//! isolated, and connections retired by a graceful drain).
 //!
 //! | opcode | request            | payload after opcode                  |
 //! |--------|--------------------|---------------------------------------|
@@ -36,6 +46,7 @@
 //! | `0x05` | DeleteMinBatch     | n u32                                 |
 //! | `0x06` | Len                | —                                     |
 //! | `0x07` | Stats              | —                                     |
+//! | `0x0E` | Drain              | —                                     |
 //! | `0x0F` | Shutdown           | —                                     |
 //!
 //! | opcode | response           | payload after opcode                  |
@@ -46,14 +57,15 @@
 //! | `0x84` | InsertBatch        | count u32, count × ok u8              |
 //! | `0x85` | DeleteMinBatch     | count u32, count × (key u64, value u64) |
 //! | `0x86` | Len                | len u64, epoch u64                    |
-//! | `0x87` | Stats              | epoch u64, rebalances u64, trace_emitted u64, trace_dropped u64, shards u32, shards × (len u64, ops u64) |
+//! | `0x87` | Stats              | epoch u64, rebalances u64, trace_emitted u64, trace_dropped u64, inserted u64, popped u64, poisoned u64, drained u64, shards u32, shards × (len u64, ops u64) |
+//! | `0x8E` | Drain (ack)        | —                                     |
 //! | `0x8F` | Shutdown (ack)     | —                                     |
 //! | `0xFF` | Error              | code u16, msg_len u16, msg bytes      |
 
 use crate::util::error::{Error, Result};
 
 /// Protocol version carried in every frame.
-pub const PROTO_VERSION: u8 = 2;
+pub const PROTO_VERSION: u8 = 3;
 
 /// Maximum payload length a peer will accept (rejects garbage lengths
 /// before buffering them).
@@ -75,6 +87,21 @@ pub mod err {
     pub const OVERSIZE: u16 = 4;
     /// Insert key at or above the span of a strict-span service.
     pub const KEY_RANGE: u16 = 5;
+    /// Frame length prefix beyond [`super::MAX_FRAME_LEN`], or a
+    /// receive buffer pushed past its hard cap. Rejected before any
+    /// payload is buffered — a corrupt prefix must never drive
+    /// allocation.
+    pub const FRAME_TOO_LARGE: u16 = 6;
+}
+
+/// The on-wire error code a decode failure should be answered with:
+/// typed protocol errors carry their own code, everything else is a
+/// structural MALFORMED.
+pub fn wire_error_code(e: &Error) -> u16 {
+    match e {
+        Error::Proto { code, .. } => *code,
+        _ => err::MALFORMED,
+    }
 }
 
 mod op {
@@ -85,6 +112,7 @@ mod op {
     pub const REQ_DELETE_MIN_BATCH: u8 = 0x05;
     pub const REQ_LEN: u8 = 0x06;
     pub const REQ_STATS: u8 = 0x07;
+    pub const REQ_DRAIN: u8 = 0x0E;
     pub const REQ_SHUTDOWN: u8 = 0x0F;
     pub const RESP_INSERT: u8 = 0x81;
     pub const RESP_DELETE_MIN: u8 = 0x82;
@@ -93,6 +121,7 @@ mod op {
     pub const RESP_DELETE_MIN_BATCH: u8 = 0x85;
     pub const RESP_LEN: u8 = 0x86;
     pub const RESP_STATS: u8 = 0x87;
+    pub const RESP_DRAIN: u8 = 0x8E;
     pub const RESP_SHUTDOWN: u8 = 0x8F;
     pub const RESP_ERROR: u8 = 0xFF;
 }
@@ -119,6 +148,9 @@ pub enum Request {
     Len,
     /// Shard-map / rebalancer observability snapshot.
     Stats,
+    /// Graceful drain: stop accepting, finish every fully received
+    /// pipelined run on every live connection, ack, then exit.
+    Drain,
     /// Stop the whole service after acknowledging.
     Shutdown,
 }
@@ -138,6 +170,17 @@ pub struct ServiceStats {
     pub trace_emitted: u64,
     /// Trace events dropped server-side because a ring was full.
     pub trace_dropped: u64,
+    /// Lifetime accepted inserts across all shards (the conservation
+    /// ledger: `inserted − popped` must equal the resident total at
+    /// quiesce, whatever faults the connections suffered).
+    pub inserted: u64,
+    /// Lifetime successful pops across all shards.
+    pub popped: u64,
+    /// Connections whose handler panicked; the panic was isolated to
+    /// that connection and the worker kept serving.
+    pub poisoned: u64,
+    /// Connections retired cleanly by a graceful drain.
+    pub drained: u64,
     /// Per-shard resident counts (relaxed).
     pub shard_lens: Vec<u64>,
     /// Per-shard window op counters (reset by each rebalance check).
@@ -167,6 +210,9 @@ pub enum Response {
     },
     /// Shard-map observability snapshot.
     Stats(ServiceStats),
+    /// Drain acknowledged; the service exits once every live connection
+    /// finishes its fully received requests.
+    Drain,
     /// Shutdown acknowledged.
     Shutdown,
     /// Server-side protocol error; the connection closes after this.
@@ -229,6 +275,7 @@ pub fn encode_request(req: &Request, out: &mut Vec<u8>) {
         }
         Request::Len => out.push(op::REQ_LEN),
         Request::Stats => out.push(op::REQ_STATS),
+        Request::Drain => out.push(op::REQ_DRAIN),
         Request::Shutdown => out.push(op::REQ_SHUTDOWN),
     }
     end_frame(out, start);
@@ -289,6 +336,10 @@ pub fn encode_response(resp: &Response, out: &mut Vec<u8>) {
             put_u64(out, stats.rebalances);
             put_u64(out, stats.trace_emitted);
             put_u64(out, stats.trace_dropped);
+            put_u64(out, stats.inserted);
+            put_u64(out, stats.popped);
+            put_u64(out, stats.poisoned);
+            put_u64(out, stats.drained);
             debug_assert_eq!(stats.shard_lens.len(), stats.shard_ops.len());
             put_u32(out, stats.shard_lens.len() as u32);
             for (len, ops) in stats.shard_lens.iter().zip(stats.shard_ops.iter()) {
@@ -296,6 +347,7 @@ pub fn encode_response(resp: &Response, out: &mut Vec<u8>) {
                 put_u64(out, *ops);
             }
         }
+        Response::Drain => out.push(op::RESP_DRAIN),
         Response::Shutdown => out.push(op::RESP_SHUTDOWN),
         Response::Error { code, message } => {
             out.push(op::RESP_ERROR);
@@ -371,7 +423,10 @@ impl<'a> Cursor<'a> {
     fn batch_count(&mut self) -> Result<usize> {
         let n = self.u32()? as usize;
         if n > MAX_BATCH {
-            return Err(Error::Parse(format!("batch of {n} exceeds MAX_BATCH ({MAX_BATCH})")));
+            return Err(Error::Proto {
+                code: err::OVERSIZE,
+                message: format!("batch of {n} exceeds MAX_BATCH ({MAX_BATCH})"),
+            });
         }
         Ok(n)
     }
@@ -388,7 +443,12 @@ fn next_payload(buf: &[u8]) -> Result<Option<(&[u8], usize)>> {
         return Err(Error::Parse(format!("frame length {len} below version+opcode minimum")));
     }
     if len > MAX_FRAME_LEN {
-        return Err(Error::Parse(format!("frame length {len} exceeds MAX_FRAME_LEN")));
+        // Rejected before the payload is buffered: a corrupt prefix
+        // must never commit the peer to a multi-gigabyte read loop.
+        return Err(Error::Proto {
+            code: err::FRAME_TOO_LARGE,
+            message: format!("frame length {len} exceeds MAX_FRAME_LEN ({MAX_FRAME_LEN})"),
+        });
     }
     if buf.len() < 4 + len {
         return Ok(None);
@@ -399,9 +459,10 @@ fn next_payload(buf: &[u8]) -> Result<Option<(&[u8], usize)>> {
 fn check_version(c: &mut Cursor<'_>) -> Result<u8> {
     let version = c.u8()?;
     if version != PROTO_VERSION {
-        return Err(Error::Parse(format!(
-            "unsupported protocol version {version} (expected {PROTO_VERSION})"
-        )));
+        return Err(Error::Proto {
+            code: err::BAD_VERSION,
+            message: format!("unsupported protocol version {version} (expected {PROTO_VERSION})"),
+        });
     }
     c.u8()
 }
@@ -436,16 +497,23 @@ pub fn decode_request(buf: &[u8]) -> Result<Option<(Request, usize)>> {
         op::REQ_DELETE_MIN_BATCH => {
             let n = c.u32()?;
             if n as usize > MAX_BATCH {
-                return Err(Error::Parse(format!(
-                    "deleteMin batch of {n} exceeds MAX_BATCH ({MAX_BATCH})"
-                )));
+                return Err(Error::Proto {
+                    code: err::OVERSIZE,
+                    message: format!("deleteMin batch of {n} exceeds MAX_BATCH ({MAX_BATCH})"),
+                });
             }
             Request::DeleteMinBatch(n)
         }
         op::REQ_LEN => Request::Len,
         op::REQ_STATS => Request::Stats,
+        op::REQ_DRAIN => Request::Drain,
         op::REQ_SHUTDOWN => Request::Shutdown,
-        other => return Err(Error::Parse(format!("unknown request opcode {other:#04x}"))),
+        other => {
+            return Err(Error::Proto {
+                code: err::BAD_OPCODE,
+                message: format!("unknown request opcode {other:#04x}"),
+            })
+        }
     };
     c.finish()?;
     Ok(Some((req, used)))
@@ -504,6 +572,10 @@ pub fn decode_response(buf: &[u8]) -> Result<Option<(Response, usize)>> {
             let rebalances = c.u64()?;
             let trace_emitted = c.u64()?;
             let trace_dropped = c.u64()?;
+            let inserted = c.u64()?;
+            let popped = c.u64()?;
+            let poisoned = c.u64()?;
+            let drained = c.u64()?;
             let n = c.batch_count()?;
             let mut shard_lens = Vec::with_capacity(n);
             let mut shard_ops = Vec::with_capacity(n);
@@ -516,10 +588,15 @@ pub fn decode_response(buf: &[u8]) -> Result<Option<(Response, usize)>> {
                 rebalances,
                 trace_emitted,
                 trace_dropped,
+                inserted,
+                popped,
+                poisoned,
+                drained,
                 shard_lens,
                 shard_ops,
             })
         }
+        op::RESP_DRAIN => Response::Drain,
         op::RESP_SHUTDOWN => Response::Shutdown,
         op::RESP_ERROR => {
             let code = c.u16()?;
@@ -535,7 +612,12 @@ pub fn decode_response(buf: &[u8]) -> Result<Option<(Response, usize)>> {
                 message: String::from_utf8_lossy(bytes).into_owned(),
             }
         }
-        other => return Err(Error::Parse(format!("unknown response opcode {other:#04x}"))),
+        other => {
+            return Err(Error::Proto {
+                code: err::BAD_OPCODE,
+                message: format!("unknown response opcode {other:#04x}"),
+            })
+        }
     };
     c.finish()?;
     Ok(Some((resp, used)))
@@ -555,6 +637,7 @@ mod tests {
             Request::DeleteMinBatch(16),
             Request::Len,
             Request::Stats,
+            Request::Drain,
             Request::Shutdown,
         ]
     }
@@ -576,10 +659,15 @@ mod tests {
                 rebalances: 2,
                 trace_emitted: 1234,
                 trace_dropped: 1,
+                inserted: 5000,
+                popped: 4990,
+                poisoned: 1,
+                drained: 16,
                 shard_lens: vec![4, 0, 9],
                 shard_ops: vec![100, 0, 7],
             }),
             Response::Stats(ServiceStats::default()),
+            Response::Drain,
             Response::Shutdown,
             Response::Error {
                 code: err::MALFORMED,
@@ -679,6 +767,84 @@ mod tests {
         encode_response(&Response::Shutdown, &mut buf);
         buf[5] = 0x22;
         assert!(decode_response(&buf).is_err());
+    }
+
+    #[test]
+    fn decode_errors_carry_wire_codes() {
+        // Oversize length prefix → FRAME_TOO_LARGE, even though far
+        // fewer than `len` bytes have arrived.
+        let e = decode_request(&(MAX_FRAME_LEN as u32 + 1).to_le_bytes()).unwrap_err();
+        assert_eq!(wire_error_code(&e), err::FRAME_TOO_LARGE);
+        // Wrong version → BAD_VERSION.
+        let mut buf = Vec::new();
+        encode_request(&Request::DeleteMin, &mut buf);
+        buf[4] = 99;
+        assert_eq!(wire_error_code(&decode_request(&buf).unwrap_err()), err::BAD_VERSION);
+        // Unknown opcode → BAD_OPCODE.
+        let mut buf = Vec::new();
+        encode_request(&Request::DeleteMin, &mut buf);
+        buf[5] = 0x7E;
+        assert_eq!(wire_error_code(&decode_request(&buf).unwrap_err()), err::BAD_OPCODE);
+        // Oversized batch count → OVERSIZE.
+        let mut buf = Vec::new();
+        encode_request(&Request::InsertBatch(vec![(1, 1)]), &mut buf);
+        buf[6..10].copy_from_slice(&((MAX_BATCH as u32) + 1).to_le_bytes());
+        assert_eq!(wire_error_code(&decode_request(&buf).unwrap_err()), err::OVERSIZE);
+        // Structural damage (trailing bytes) falls back to MALFORMED.
+        let mut buf = Vec::new();
+        encode_request(&Request::DeleteMin, &mut buf);
+        let len = (buf.len() - 4 + 1) as u32;
+        buf[..4].copy_from_slice(&len.to_le_bytes());
+        buf.push(0xAB);
+        assert_eq!(wire_error_code(&decode_request(&buf).unwrap_err()), err::MALFORMED);
+    }
+
+    /// Decode corpus: deterministic random byte soup, plus every valid
+    /// frame under every single-byte mutation. Decoding must be total
+    /// (accept, reject, or wait — never panic, never consume past the
+    /// buffer), and an oversize length prefix must be rejected *before*
+    /// the claimed payload arrives, so a corrupt prefix can never drive
+    /// an unbounded buffering loop.
+    #[test]
+    fn decode_corpus_is_total_and_allocation_bounded() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xC0FFEE);
+        for _ in 0..2_000 {
+            let n = rng.gen_range(64) as usize;
+            let bytes: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+            let _ = decode_request(&bytes);
+            let _ = decode_response(&bytes);
+        }
+        let mut frames: Vec<(Vec<u8>, bool)> = Vec::new();
+        for r in all_requests() {
+            let mut b = Vec::new();
+            encode_request(&r, &mut b);
+            frames.push((b, true));
+        }
+        for r in all_responses() {
+            let mut b = Vec::new();
+            encode_response(&r, &mut b);
+            frames.push((b, false));
+        }
+        for (frame, is_req) in frames {
+            for i in 0..frame.len() {
+                let mut m = frame.clone();
+                m[i] ^= 0xFF;
+                let outcome = if is_req {
+                    decode_request(&m).map(|o| o.map(|(_, used)| used))
+                } else {
+                    decode_response(&m).map(|o| o.map(|(_, used)| used))
+                };
+                if let Ok(Some(used)) = outcome {
+                    assert!(used <= m.len(), "consumed {used} of a {} byte buffer", m.len());
+                }
+            }
+        }
+        // A prefix claiming 16 MiB with only 8 bytes on the wire: the
+        // error fires now, not after buffering the claimed length.
+        let mut huge = ((16u32) << 20).to_le_bytes().to_vec();
+        huge.extend_from_slice(&[PROTO_VERSION, 0x01, 0, 0]);
+        assert_eq!(wire_error_code(&decode_request(&huge).unwrap_err()), err::FRAME_TOO_LARGE);
     }
 
     #[test]

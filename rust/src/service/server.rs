@@ -62,6 +62,25 @@
 //! slots), so an unbounded handler-thread population would exhaust
 //! `max_clients` after enough connection churn — the pool caps slot
 //! usage at `max_conns` per shard, forever.
+//!
+//! ## Resilience
+//!
+//! One bad connection must never take the service with it. Each
+//! handler's receive buffer is hard-capped ([`proto::MAX_FRAME_LEN`]
+//! plus one read chunk — a corrupt length prefix is answered with a
+//! `FRAME_TOO_LARGE` error frame before it can drive allocation), each
+//! response write carries a deadline (`write_timeout_ms`; a reader that
+//! stops draining its socket gets severed instead of pinning a pool
+//! thread), and each handler runs under `catch_unwind`: a panic poisons
+//! only its own connection — counted in the `Stats` `poisoned` field
+//! and traced as a `Fault` event — while the worker thread survives.
+//! The `inserted`/`popped` ledger on [`ShardedPq`] makes element
+//! conservation checkable end-to-end (`inserted − popped − resident ==
+//! 0` at quiesce, whatever faults the connections suffered). Alongside
+//! the abrupt `Shutdown` frame there is a graceful **drain**
+//! ([`Request::Drain`]): stop accepting, answer every fully received
+//! pipelined run on every live connection, then exit — connections
+//! retired this way are counted in `drained`.
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -117,6 +136,10 @@ pub struct ServiceConfig {
     /// [`proto::err::KEY_RANGE`] error frame instead of routing them to
     /// the open-ended top shard.
     pub strict_span: bool,
+    /// Per-connection response-write deadline in milliseconds (0
+    /// disables it): a client that stops reading for this long is
+    /// severed instead of pinning its handler thread.
+    pub write_timeout_ms: u64,
 }
 
 impl Default for ServiceConfig {
@@ -134,8 +157,22 @@ impl Default for ServiceConfig {
             rebalance_imbalance: 3.0,
             rebalance_min_ops: 1_000,
             strict_span: false,
+            write_timeout_ms: 2_000,
         }
     }
+}
+
+/// Fault-event classes: the first payload word of a
+/// [`crate::trace::EventKind::Fault`] event.
+pub mod fault_class {
+    /// Handler panic isolated to its connection.
+    pub const PANIC: u64 = 0;
+    /// Protocol error frame sent (second word = the wire error code).
+    pub const PROTO: u64 = 1;
+    /// Response write failed or timed out.
+    pub const WRITE: u64 = 2;
+    /// Connection retired by a graceful drain.
+    pub const DRAIN: u64 = 3;
 }
 
 /// What a completed epoch migration did (see
@@ -279,6 +316,17 @@ pub struct ShardedPq {
     rebalances: AtomicU64,
     rebalance_imbalance: f64,
     rebalance_min_ops: u64,
+    /// Lifetime accepted inserts — one side of the conservation ledger
+    /// (`inserted − popped − resident == 0` at quiesce). Duplicate and
+    /// sentinel rejects are not counted; rebalance migration bypasses
+    /// the counting wrappers, so it cannot pollute the ledger.
+    inserted: AtomicU64,
+    /// Lifetime successful pops — the other side of the ledger.
+    popped: AtomicU64,
+    /// Connections whose handler panicked (isolated, thread survived).
+    poisoned: AtomicU64,
+    /// Connections retired by a graceful drain.
+    drained: AtomicU64,
 }
 
 impl ShardedPq {
@@ -324,6 +372,10 @@ impl ShardedPq {
             rebalances: AtomicU64::new(0),
             rebalance_imbalance: cfg.rebalance_imbalance,
             rebalance_min_ops: cfg.rebalance_min_ops,
+            inserted: AtomicU64::new(0),
+            popped: AtomicU64::new(0),
+            poisoned: AtomicU64::new(0),
+            drained: AtomicU64::new(0),
         })
     }
 
@@ -368,9 +420,48 @@ impl ShardedPq {
             rebalances: self.rebalances.load(Ordering::Relaxed),
             trace_emitted,
             trace_dropped,
+            inserted: self.inserted.load(Ordering::Relaxed),
+            popped: self.popped.load(Ordering::Relaxed),
+            poisoned: self.poisoned.load(Ordering::Relaxed),
+            drained: self.drained.load(Ordering::Relaxed),
             shard_lens: self.shards.iter().map(|s| s.queue.len() as u64).collect(),
             shard_ops: self.loads.iter().map(|l| l.load(Ordering::Relaxed)).collect(),
         }
+    }
+
+    /// Conservation snapshot: `(inserted, popped, resident)`. At
+    /// quiesce `inserted − popped == resident` exactly, whatever faults
+    /// the connections suffered — a severed connection can lose a
+    /// *response*, never an applied element.
+    pub fn conservation(&self) -> (u64, u64, u64) {
+        let _map = self.map.read().expect("shard map lock");
+        let resident: u64 = self.shards.iter().map(|s| s.queue.len() as u64).sum();
+        (
+            self.inserted.load(Ordering::Relaxed),
+            self.popped.load(Ordering::Relaxed),
+            resident,
+        )
+    }
+
+    /// Count one panic-poisoned connection (the handler died; the
+    /// worker thread and the shards survived).
+    pub fn note_poisoned(&self) {
+        self.poisoned.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one connection retired by a graceful drain.
+    pub fn note_drained(&self) {
+        self.drained.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Panic-poisoned connection count.
+    pub fn poisoned(&self) -> u64 {
+        self.poisoned.load(Ordering::Relaxed)
+    }
+
+    /// Drained connection count.
+    pub fn drained(&self) -> u64 {
+        self.drained.load(Ordering::Relaxed)
     }
 
     /// Post-pop leaf value for shard `s`: the backend's own hint when
@@ -391,6 +482,10 @@ impl ShardedPq {
     /// sentinel rejects are not live at all).
     fn note_insert_outcomes(&self, s: usize, items: &[(u64, u64)], ok: &[bool]) {
         self.loads[s].fetch_add(items.len() as u64, Ordering::Relaxed);
+        let accepted = ok.iter().filter(|&&o| o).count() as u64;
+        if accepted > 0 {
+            self.inserted.fetch_add(accepted, Ordering::Relaxed);
+        }
         let min_inserted = items
             .iter()
             .zip(ok.iter())
@@ -463,6 +558,7 @@ impl ShardedPq {
             }
             if let Some(kv) = self.shards[s].queue.delete_min() {
                 self.loads[s].fetch_add(1, Ordering::Relaxed);
+                self.popped.fetch_add(1, Ordering::Relaxed);
                 self.tree.refresh(s, observed, self.fresh_hint(s, false));
                 return Some(kv);
             }
@@ -474,6 +570,7 @@ impl ShardedPq {
             let observed = self.tree.leaf_value(s);
             if let Some(kv) = shard.queue.delete_min() {
                 self.loads[s].fetch_add(1, Ordering::Relaxed);
+                self.popped.fetch_add(1, Ordering::Relaxed);
                 self.tree.refresh(s, observed, self.fresh_hint(s, false));
                 return Some(kv);
             }
@@ -511,6 +608,7 @@ impl ShardedPq {
                 got += took;
                 spins = 0; // progress resets the probe budget
                 self.loads[s].fetch_add(took as u64, Ordering::Relaxed);
+                self.popped.fetch_add(took as u64, Ordering::Relaxed);
                 self.tree.refresh(s, observed, self.fresh_hint(s, false));
             } else {
                 self.tree.refresh(s, observed, self.fresh_hint(s, true));
@@ -525,6 +623,7 @@ impl ShardedPq {
             if took > 0 {
                 got += took;
                 self.loads[s].fetch_add(took as u64, Ordering::Relaxed);
+                self.popped.fetch_add(took as u64, Ordering::Relaxed);
                 self.tree.refresh(s, observed, self.fresh_hint(s, false));
             } else {
                 self.tree.refresh(s, observed, self.fresh_hint(s, true));
@@ -704,16 +803,30 @@ impl ShardedPq {
 
 struct ServiceShared {
     stop: AtomicBool,
+    /// Graceful-drain flag: accept stops, live handlers answer every
+    /// fully received request, then retire as their clients go quiet.
+    draining: AtomicBool,
     addr: SocketAddr,
     /// `Some(key_span)` when the service rejects out-of-span inserts
     /// with an error frame (`ServiceConfig::strict_span`).
     strict_span: Option<u64>,
+    /// Per-connection response-write deadline (`None` = unbounded).
+    write_timeout: Option<Duration>,
 }
 
 impl ServiceShared {
     /// Flag the service stopped and poke the accept loop awake.
     fn request_stop(&self) {
         self.stop.store(true, Ordering::Release);
+        let _ = TcpStream::connect(self.addr);
+    }
+
+    /// Flag the graceful drain and poke the accept loop awake. Unlike
+    /// `request_stop` this never abandons in-flight work: every fully
+    /// received pipelined run is still answered before its connection
+    /// retires.
+    fn request_drain(&self) {
+        self.draining.store(true, Ordering::Release);
         let _ = TcpStream::connect(self.addr);
     }
 }
@@ -738,8 +851,11 @@ impl PqService {
         let addr = listener.local_addr()?;
         let shared = Arc::new(ServiceShared {
             stop: AtomicBool::new(false),
+            draining: AtomicBool::new(false),
             addr,
             strict_span: cfg.strict_span.then_some(cfg.key_span),
+            write_timeout: (cfg.write_timeout_ms > 0)
+                .then(|| Duration::from_millis(cfg.write_timeout_ms)),
         });
         let probes = sharded.adaptive_probes();
         let elastic = cfg.elastic && cfg.shards > 1;
@@ -799,7 +915,12 @@ impl PqService {
                             rx.recv()
                         };
                         match stream {
-                            Ok(s) => handle_conn(s, &sharded, &shared),
+                            Ok(s) => {
+                                let conn = s.peer_addr().map(|a| a.port() as u64).unwrap_or(0);
+                                isolate_conn_panic(&sharded, conn, || {
+                                    handle_conn(s, &sharded, &shared)
+                                });
+                            }
                             Err(_) => return, // accept loop gone: stopping
                         }
                     })
@@ -812,7 +933,9 @@ impl PqService {
                 .name("pq-service-accept".into())
                 .spawn(move || {
                     for stream in listener.incoming() {
-                        if shared.stop.load(Ordering::Acquire) {
+                        if shared.stop.load(Ordering::Acquire)
+                            || shared.draining.load(Ordering::Acquire)
+                        {
                             break;
                         }
                         if let Ok(s) = stream {
@@ -871,6 +994,15 @@ impl PqService {
         self.shared.request_stop();
     }
 
+    /// Ask the service to drain gracefully (idempotent; also triggered
+    /// by a [`Request::Drain`] frame): stop accepting, answer every
+    /// fully received request on every live connection, then stop.
+    /// Follow with [`PqService::wait`] to block until the drain
+    /// completes.
+    pub fn drain(&self) {
+        self.shared.request_drain();
+    }
+
     /// Block until the service stops (a Shutdown frame arrives or
     /// [`PqService::shutdown`] is called), then join every thread.
     pub fn wait(mut self) {
@@ -878,13 +1010,21 @@ impl PqService {
     }
 
     fn join_all(&mut self) {
+        // Join order matters for the graceful drain: the accept loop
+        // exits first (poked by request_stop/request_drain, dropping
+        // the pool's sender), then the workers finish their live
+        // connections (under drain they keep serving until the clients
+        // go quiet). Only then is `stop` forced — joining the monitor
+        // before the workers would hang a drain forever, since draining
+        // alone never sets `stop`.
         if let Some(h) = self.accept.take() {
             let _ = h.join();
         }
-        if let Some(h) = self.monitor.take() {
+        for h in self.workers.drain(..) {
             let _ = h.join();
         }
-        for h in self.workers.drain(..) {
+        self.shared.stop.store(true, Ordering::Release);
+        if let Some(h) = self.monitor.take() {
             let _ = h.join();
         }
     }
@@ -900,11 +1040,34 @@ impl Drop for PqService {
 /// Handler read granularity; also bounds the per-read request batch.
 const READ_CHUNK: usize = 16 * 1024;
 
+/// Hard cap on a connection's receive buffer. A protocol-conforming
+/// stream never reaches it (the decoder drains every complete frame per
+/// sweep and rejects oversize length prefixes before their payloads
+/// arrive, so at most one incomplete frame plus one read chunk is ever
+/// resident); hitting the cap means the stream is garbage and the
+/// connection is answered with `FRAME_TOO_LARGE` and dropped.
+const MAX_CONN_BUF: usize = proto::MAX_FRAME_LEN + 4 + READ_CHUNK;
+
+/// Run one connection's handler with panic isolation: a panicking
+/// handler poisons only its own connection (the socket drops, the
+/// `poisoned` counter bumps, a `Fault` event is traced) while the
+/// worker thread survives to serve the next connection.
+fn isolate_conn_panic<F: FnOnce()>(sharded: &ShardedPq, conn: u64, f: F) {
+    if std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)).is_err() {
+        sharded.note_poisoned();
+        crate::trace::instant(crate::trace::EventKind::Fault, fault_class::PANIC, 0, conn);
+    }
+}
+
 fn handle_conn(mut stream: TcpStream, sharded: &ShardedPq, shared: &ServiceShared) {
+    let conn = stream.peer_addr().map(|a| a.port() as u64).unwrap_or(0);
     let _ = stream.set_nodelay(true);
-    // A finite read timeout keeps handlers responsive to shutdown even
-    // when their client holds the connection open silently.
+    // A finite read timeout keeps handlers responsive to shutdown (and
+    // drain) even when their client holds the connection open silently.
     let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
+    // A slow or dead reader cannot pin this handler forever: writes
+    // past the deadline fail and sever the connection instead.
+    let _ = stream.set_write_timeout(shared.write_timeout);
     let mut rbuf: Vec<u8> = Vec::with_capacity(READ_CHUNK);
     let mut wbuf: Vec<u8> = Vec::with_capacity(READ_CHUNK);
     let mut chunk = [0u8; READ_CHUNK];
@@ -914,7 +1077,20 @@ fn handle_conn(mut stream: TcpStream, sharded: &ShardedPq, shared: &ServiceShare
             return;
         }
         let n = match stream.read(&mut chunk) {
-            Ok(0) => return,
+            Ok(0) => {
+                // EOF with every complete frame already answered: under
+                // drain this is the connection retiring cleanly.
+                if shared.draining.load(Ordering::Acquire) {
+                    sharded.note_drained();
+                    crate::trace::instant(
+                        crate::trace::EventKind::Fault,
+                        fault_class::DRAIN,
+                        0,
+                        conn,
+                    );
+                }
+                return;
+            }
             Ok(n) => n,
             Err(e)
                 if matches!(
@@ -924,11 +1100,46 @@ fn handle_conn(mut stream: TcpStream, sharded: &ShardedPq, shared: &ServiceShare
                         | std::io::ErrorKind::Interrupted
                 ) =>
             {
-                continue
+                // Draining and the client has gone quiet with no
+                // partial frame pending: every fully received request
+                // has been answered — retire the connection.
+                if shared.draining.load(Ordering::Acquire) && rbuf.is_empty() {
+                    sharded.note_drained();
+                    crate::trace::instant(
+                        crate::trace::EventKind::Fault,
+                        fault_class::DRAIN,
+                        0,
+                        conn,
+                    );
+                    return;
+                }
+                continue;
             }
             Err(_) => return,
         };
         rbuf.extend_from_slice(&chunk[..n]);
+        if rbuf.len() > MAX_CONN_BUF {
+            // Unreachable for conforming streams (see MAX_CONN_BUF):
+            // answer with the oversize error class and drop.
+            wbuf.clear();
+            proto::encode_response(
+                &Response::Error {
+                    code: proto::err::FRAME_TOO_LARGE,
+                    message: format!(
+                        "connection buffer exceeded {MAX_CONN_BUF} bytes without a decodable frame"
+                    ),
+                },
+                &mut wbuf,
+            );
+            crate::trace::instant(
+                crate::trace::EventKind::Fault,
+                fault_class::PROTO,
+                proto::err::FRAME_TOO_LARGE as u64,
+                conn,
+            );
+            let _ = stream.write_all(&wbuf);
+            return;
+        }
         reqs.clear();
         let mut off = 0;
         loop {
@@ -939,15 +1150,22 @@ fn handle_conn(mut stream: TcpStream, sharded: &ShardedPq, shared: &ServiceShare
                 }
                 Ok(None) => break,
                 Err(e) => {
-                    // Garbage on the wire: answer with one error frame
-                    // and drop the connection.
+                    // Garbage on the wire: answer with one typed error
+                    // frame and drop the connection.
+                    let code = proto::wire_error_code(&e);
                     wbuf.clear();
                     proto::encode_response(
                         &Response::Error {
-                            code: proto::err::MALFORMED,
+                            code,
                             message: e.to_string(),
                         },
                         &mut wbuf,
+                    );
+                    crate::trace::instant(
+                        crate::trace::EventKind::Fault,
+                        fault_class::PROTO,
+                        code as u64,
+                        conn,
                     );
                     let _ = stream.write_all(&wbuf);
                     return;
@@ -978,18 +1196,34 @@ fn handle_conn(mut stream: TcpStream, sharded: &ShardedPq, shared: &ServiceShare
                     },
                     &mut wbuf,
                 );
+                crate::trace::instant(
+                    crate::trace::EventKind::Fault,
+                    fault_class::PROTO,
+                    proto::err::KEY_RANGE as u64,
+                    conn,
+                );
                 let _ = stream.write_all(&wbuf);
                 return;
             }
         }
         wbuf.clear();
-        let shutdown = process_requests(sharded, &reqs, &mut wbuf);
+        let signal = process_requests(sharded, &reqs, &mut wbuf);
         if stream.write_all(&wbuf).is_err() {
+            crate::trace::instant(crate::trace::EventKind::Fault, fault_class::WRITE, 0, conn);
             return;
         }
-        if shutdown {
-            shared.request_stop();
-            return;
+        match signal {
+            SweepSignal::Shutdown => {
+                shared.request_stop();
+                return;
+            }
+            SweepSignal::Drain => {
+                // The drain ack is already written; flip the flag and
+                // keep serving this connection until it goes quiet —
+                // the read path above retires it (counted drained).
+                shared.request_drain();
+            }
+            SweepSignal::None => {}
         }
     }
 }
@@ -1004,11 +1238,25 @@ fn is_delete(r: &Request) -> bool {
     matches!(r, Request::DeleteMin | Request::DeleteMinBatch(_))
 }
 
+/// What a request sweep asks the service lifecycle to do, beyond the
+/// responses already encoded into the write buffer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SweepSignal {
+    /// Keep serving.
+    None,
+    /// A Drain frame was served: stop accepting, finish every live
+    /// connection's fully received requests, then stop.
+    Drain,
+    /// A Shutdown frame was served: stop the whole service now.
+    /// Outranks `Drain` when both arrive in one sweep.
+    Shutdown,
+}
+
 /// Execute a decoded request batch in order, fusing same-kind runs
-/// through the bulk entry points; returns true when a Shutdown was
-/// served (the caller stops the service after writing the responses).
-pub fn process_requests(sharded: &ShardedPq, reqs: &[Request], out: &mut Vec<u8>) -> bool {
-    let mut shutdown = false;
+/// through the bulk entry points; the returned [`SweepSignal`] tells
+/// the caller whether a lifecycle frame (Drain/Shutdown) was served.
+pub fn process_requests(sharded: &ShardedPq, reqs: &[Request], out: &mut Vec<u8>) -> SweepSignal {
+    let mut signal = SweepSignal::None;
     let mut i = 0;
     while i < reqs.len() {
         if is_insert(&reqs[i]) {
@@ -1027,9 +1275,15 @@ pub fn process_requests(sharded: &ShardedPq, reqs: &[Request], out: &mut Vec<u8>
                 Request::Stats => {
                     proto::encode_response(&Response::Stats(sharded.stats()), out);
                 }
+                Request::Drain => {
+                    proto::encode_response(&Response::Drain, out);
+                    if signal != SweepSignal::Shutdown {
+                        signal = SweepSignal::Drain;
+                    }
+                }
                 Request::Shutdown => {
                     proto::encode_response(&Response::Shutdown, out);
-                    shutdown = true;
+                    signal = SweepSignal::Shutdown;
                 }
                 // Insert/delete kinds are handled by the run servers.
                 _ => unreachable!("covered by the run dispatch"),
@@ -1037,7 +1291,7 @@ pub fn process_requests(sharded: &ShardedPq, reqs: &[Request], out: &mut Vec<u8>
             i += 1;
         }
     }
-    shutdown
+    signal
 }
 
 /// Serve the maximal insert run starting at `start`; returns the index
@@ -1192,7 +1446,7 @@ mod tests {
             Request::Len,
         ];
         let mut wire = Vec::new();
-        assert!(!process_requests(&s, &reqs, &mut wire));
+        assert_eq!(process_requests(&s, &reqs, &mut wire), SweepSignal::None);
         let mut resps = Vec::new();
         let mut off = 0;
         while let Some((r, used)) = proto::decode_response(&wire[off..]).unwrap() {
@@ -1330,9 +1584,69 @@ mod tests {
     fn shutdown_request_flags_the_sweep() {
         let s = ShardedPq::new(&cfg("lotan_shavit", 1)).unwrap();
         let mut wire = Vec::new();
-        assert!(process_requests(&s, &[Request::Shutdown], &mut wire));
+        assert_eq!(
+            process_requests(&s, &[Request::Shutdown], &mut wire),
+            SweepSignal::Shutdown
+        );
         let (r, _) = proto::decode_response(&wire).unwrap().unwrap();
         assert_eq!(r, Response::Shutdown);
+    }
+
+    #[test]
+    fn drain_request_flags_the_sweep_and_shutdown_outranks_it() {
+        let s = ShardedPq::new(&cfg("lotan_shavit", 1)).unwrap();
+        let mut wire = Vec::new();
+        assert_eq!(
+            process_requests(&s, &[Request::Drain], &mut wire),
+            SweepSignal::Drain
+        );
+        let (r, _) = proto::decode_response(&wire).unwrap().unwrap();
+        assert_eq!(r, Response::Drain);
+        // Shutdown wins the sweep whichever order the frames arrive in.
+        wire.clear();
+        assert_eq!(
+            process_requests(&s, &[Request::Shutdown, Request::Drain], &mut wire),
+            SweepSignal::Shutdown
+        );
+        wire.clear();
+        assert_eq!(
+            process_requests(&s, &[Request::Drain, Request::Shutdown], &mut wire),
+            SweepSignal::Shutdown
+        );
+    }
+
+    #[test]
+    fn conservation_ledger_tracks_accepted_mutations() {
+        let s = ShardedPq::new(&cfg("lotan_shavit", 2)).unwrap();
+        for k in 1..=20u64 {
+            assert!(s.insert(k, k));
+        }
+        assert!(!s.insert(5, 0)); // duplicate: not counted
+        assert!(!s.insert(0, 0)); // sentinel reject: not counted
+        let mut out = Vec::new();
+        assert_eq!(s.delete_min_batch(7, &mut out), 7);
+        assert!(s.delete_min().is_some());
+        assert_eq!(s.conservation(), (20, 8, 12));
+        // Rebalance migration bypasses the ledger: nothing drifts.
+        s.rebalance_now().unwrap();
+        assert_eq!(s.conservation(), (20, 8, 12));
+        let st = s.stats();
+        assert_eq!(st.inserted, 20);
+        assert_eq!(st.popped, 8);
+        assert_eq!(st.poisoned, 0);
+        assert_eq!(st.drained, 0);
+    }
+
+    #[test]
+    fn handler_panics_are_isolated_and_counted() {
+        let s = ShardedPq::new(&cfg("multiqueue", 1)).unwrap();
+        isolate_conn_panic(&s, 7, || panic!("boom"));
+        assert_eq!(s.poisoned(), 1);
+        // A clean handler leaves the counter alone.
+        isolate_conn_panic(&s, 8, || {});
+        assert_eq!(s.poisoned(), 1);
+        s.note_drained();
+        assert_eq!(s.drained(), 1);
     }
 
     #[test]

@@ -64,6 +64,11 @@ pub enum EventKind {
     /// One Nuddle combining sweep (`args: {batch, eliminated,
     /// rejected}`).
     Combine = 5,
+    /// Service-plane fault handled without killing the worker
+    /// (`args: {class, code, conn}` — class per
+    /// `server::fault_class::*`: panic isolated, protocol error frame
+    /// sent, write failure, drained connection).
+    Fault = 6,
 }
 
 impl EventKind {
@@ -74,6 +79,7 @@ impl EventKind {
             2 => EventKind::ModeDecision,
             3 => EventKind::ModeSwitch,
             4 => EventKind::Rebalance,
+            6 => EventKind::Fault,
             _ => EventKind::Combine,
         }
     }
@@ -87,6 +93,7 @@ impl EventKind {
             EventKind::ModeSwitch => "smartpq mode switch",
             EventKind::Rebalance => "shard rebalance",
             EventKind::Combine => "nuddle combine",
+            EventKind::Fault => "service fault",
         }
     }
 
@@ -99,6 +106,7 @@ impl EventKind {
             EventKind::ModeSwitch => ["old", "new", "decisions"],
             EventKind::Rebalance => ["epoch", "resident", "shards"],
             EventKind::Combine => ["batch", "eliminated", "rejected"],
+            EventKind::Fault => ["class", "code", "conn"],
         }
     }
 }

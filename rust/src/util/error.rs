@@ -18,6 +18,24 @@ pub enum Error {
     Config(String),
     /// Invariant violation detected at runtime.
     Invariant(String),
+    /// Service wire-protocol violation, carrying the on-wire error code
+    /// (`service::proto::err::*`) so peers can answer with the exact
+    /// class instead of collapsing everything to MALFORMED.
+    Proto {
+        /// One of the `service::proto::err` codes.
+        code: u16,
+        /// Human-readable detail.
+        message: String,
+    },
+    /// The transport died mid-exchange. `in_flight` counts requests that
+    /// were written but never answered — a mutation among them may or may
+    /// not have been applied, so callers must not blind-retry.
+    Disconnected {
+        /// Requests written but unanswered when the connection died.
+        in_flight: usize,
+        /// The underlying I/O failure class.
+        kind: std::io::ErrorKind,
+    },
 }
 
 impl fmt::Display for Error {
@@ -28,6 +46,13 @@ impl fmt::Display for Error {
             Error::Parse(m) => write!(f, "parse error: {m}"),
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Invariant(m) => write!(f, "invariant violated: {m}"),
+            Error::Proto { code, message } => {
+                write!(f, "protocol error {code}: {message}")
+            }
+            Error::Disconnected { in_flight, kind } => write!(
+                f,
+                "connection lost ({kind:?}) with {in_flight} request(s) in flight"
+            ),
         }
     }
 }
@@ -63,5 +88,16 @@ mod tests {
         assert!(Error::Parse("p".into()).to_string().contains("parse"));
         assert!(Error::Config("c".into()).to_string().contains("config"));
         assert!(Error::Invariant("i".into()).to_string().contains("invariant"));
+        let e = Error::Proto {
+            code: 6,
+            message: "too big".into(),
+        };
+        assert!(e.to_string().contains("protocol error 6"));
+        let e = Error::Disconnected {
+            in_flight: 3,
+            kind: std::io::ErrorKind::ConnectionReset,
+        };
+        let s = e.to_string();
+        assert!(s.contains("3 request(s) in flight"), "{s}");
     }
 }

@@ -350,6 +350,7 @@ fn loadgen_batches_carry_the_remainder() {
         dist: KeyDistKind::Uniform,
         arrival: ArrivalKind::Steady,
         batch: 16,
+        resilient: false,
     };
     // Replay the steady schedule with the generator's own Duration math
     // to get the exact op count the run must complete.
@@ -503,7 +504,7 @@ fn garbage_frames_get_an_error_frame_then_eof() {
     assert_eq!(used, buf.len());
     match resp {
         Response::Error { code, message } => {
-            assert_eq!(code, proto::err::MALFORMED);
+            assert_eq!(code, proto::err::BAD_OPCODE);
             assert!(message.contains("opcode"), "{message}");
         }
         other => panic!("expected an error frame, got {other:?}"),
@@ -550,6 +551,133 @@ fn truncated_frames_wait_for_more_bytes() {
     let mut c = ServiceClient::connect(addr.to_string().as_str()).unwrap();
     c.shutdown().unwrap();
     svc.wait();
+}
+
+/// Mid-batch disconnect against the combining server: a pipelined
+/// insert+deleteMin run is severed at *every* frame boundary (and a few
+/// mid-frame offsets) through the fault proxy. Whatever prefix the
+/// server received, element conservation must hold exactly, no handler
+/// may die, and a quiesced drain must still come out exactly sorted —
+/// for the delegation backends (smartpq, nuddle) and the relaxed
+/// multiqueue alike.
+#[test]
+fn midbatch_disconnect_conserves_at_every_frame_boundary() {
+    use smartpq::service::{ChaosProxy, FaultPlan};
+    use std::time::Duration;
+
+    // The run whose frames we cut between. Frame sizes are key-value
+    // independent (fixed-width u64s), so boundaries computed once for
+    // base 0 hold for every per-cut key base.
+    let reqs_for = |base: u64| {
+        vec![
+            Request::Insert { key: base + 1, value: (base + 1) ^ 0xBEEF },
+            Request::InsertBatch(vec![
+                (base + 2, (base + 2) ^ 0xBEEF),
+                (base + 3, (base + 3) ^ 0xBEEF),
+                (base + 4, (base + 4) ^ 0xBEEF),
+            ]),
+            Request::DeleteMin,
+            Request::Insert { key: base + 5, value: (base + 5) ^ 0xBEEF },
+            Request::DeleteMinBatch(2),
+            Request::Insert { key: base + 6, value: (base + 6) ^ 0xBEEF },
+        ]
+    };
+    // Accepted-insert keys carried by each frame, in frame order.
+    let inserts_per_frame: [u64; 6] = [1, 3, 0, 1, 0, 1];
+    let boundaries: Vec<u64> = {
+        let mut buf = Vec::new();
+        let mut ends = Vec::new();
+        for r in reqs_for(0) {
+            proto::encode_request(&r, &mut buf);
+            ends.push(buf.len() as u64);
+        }
+        ends
+    };
+    // Every frame boundary, plus cuts 2 bytes into the following frame.
+    let cuts: Vec<u64> = boundaries
+        .iter()
+        .copied()
+        .chain(boundaries.iter().take(3).map(|&b| b + 2))
+        .collect();
+
+    for backend in ["smartpq", "nuddle", "multiqueue"] {
+        let svc = start(backend, 2, 100_000);
+        let addr = svc.addr().to_string();
+        let mut expected_inserted = 0u64;
+        let mut all_keys = std::collections::HashSet::new();
+        for (ci, &cut) in cuts.iter().enumerate() {
+            let base = 10_000 * (ci as u64 + 1);
+            let mut buf = Vec::new();
+            for r in reqs_for(base) {
+                proto::encode_request(&r, &mut buf);
+            }
+            for k in base + 1..=base + 6 {
+                all_keys.insert(k);
+            }
+            // Only frames delivered whole before the cut are applied.
+            expected_inserted += boundaries
+                .iter()
+                .zip(inserts_per_frame.iter())
+                .filter(|&(&end, _)| end <= cut)
+                .map(|(_, &n)| n)
+                .sum::<u64>();
+            let mut proxy =
+                ChaosProxy::start(&addr, FaultPlan::sever_exact(cut)).expect("proxy starts");
+            {
+                let mut s = TcpStream::connect(proxy.addr()).unwrap();
+                let _ = s.set_nodelay(true);
+                let _ = s.write_all(&buf); // the sever may race the write
+                let mut sunk = Vec::new();
+                let _ = s.read_to_end(&mut sunk); // EOF or reset, both fine
+            }
+            let st = proxy.stats();
+            assert_eq!(
+                st.severed + st.truncated,
+                1,
+                "{backend} cut {cut}: fault not injected: {st:?}"
+            );
+            proxy.stop();
+        }
+        // The sever can race the server still applying buffered frames:
+        // poll the ledger until it stops moving before judging it.
+        let mut c = ServiceClient::connect(addr.as_str()).unwrap();
+        let mut prev = c.stats().unwrap();
+        let stats = loop {
+            std::thread::sleep(Duration::from_millis(20));
+            let cur = c.stats().unwrap();
+            if cur.inserted == prev.inserted
+                && cur.popped == prev.popped
+                && cur.shard_lens == prev.shard_lens
+            {
+                break cur;
+            }
+            prev = cur;
+        };
+        let resident: u64 = stats.shard_lens.iter().sum();
+        assert_eq!(
+            stats.inserted as i64 - stats.popped as i64 - resident as i64,
+            0,
+            "{backend}: conservation violated across severed runs: {stats:?}"
+        );
+        assert_eq!(
+            stats.inserted, expected_inserted,
+            "{backend}: severed runs applied the wrong insert prefix: {stats:?}"
+        );
+        assert_eq!(stats.poisoned, 0, "{backend}: a handler died on a severed run");
+        // Quiesced drain: exactly sorted, and only keys we inserted.
+        let leftover = drain(&mut c);
+        let keys: Vec<u64> = leftover.iter().map(|&(k, _)| k).collect();
+        let mut sorted = keys.clone();
+        sorted.sort_unstable();
+        assert_eq!(keys, sorted, "{backend}: post-sever drain out of order");
+        for &(k, v) in &leftover {
+            assert!(all_keys.contains(&k), "{backend}: drained unknown key {k}");
+            assert_eq!(v, k ^ 0xBEEF, "{backend}: value corrupted for key {k}");
+        }
+        assert_eq!(c.len().unwrap(), 0, "{backend}: shards not empty after drain");
+        c.shutdown().unwrap();
+        svc.wait();
+    }
 }
 
 #[test]
