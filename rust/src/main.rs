@@ -86,9 +86,9 @@ COMMANDS
                           target/reports/projection_*.csv (workload
                           options as for `app`)
   serve [--backend B] [--shards K] [--addr H:P] [--key-span N] [--max-conns N]
-        [--static-shards] [--strict-span] [--rebalance-ms D] [--imbalance X]
-        [--rebalance-min-ops N] [--write-timeout-ms D] [--trace FILE]
-        [--trace-buf N]
+        [--workers W] [--static-shards] [--strict-span] [--rebalance-ms D]
+        [--imbalance X] [--rebalance-min-ops N] [--write-timeout-ms D]
+        [--trace FILE] [--trace-buf N]
                           host K key-range shards of any registered
                           backend (default smartpq x2) behind the TCP
                           service; runs until a client sends a Shutdown
@@ -100,8 +100,13 @@ COMMANDS
                           this off; --strict-span rejects out-of-span
                           insert keys with an error frame instead of
                           clamping them onto the top shard).
+                          Connections are served by an event-driven
+                          reactor: --max-conns is a pure fd budget
+                          (default 1024, thousands are fine) while
+                          --workers (default 4) caps the threads that
+                          actually execute requests against the queue.
                           --write-timeout-ms bounds how long one slow
-                          reader may pin a handler's response writes
+                          reader may pin a connection's response writes
   loadgen [--addr H:P] [--mix insert|balanced|delete|phases|all] [--conns C]
           [--rate R] [--secs S] [--key-range N] [--batch B] [--shutdown]
           [--drain] [--resilient] [--dist uniform|zipf] [--zipf-s S]
@@ -120,8 +125,9 @@ COMMANDS
                           into duty-cycle bursts, phased modulates the
                           rate sinusoidally; --batch pipelines B ops per
                           burst. Without --addr an embedded loopback
-                          service is spawned (--backend/--shards and the
-                          serve rebalancer knobs apply). --resilient
+                          service is spawned (--backend/--shards,
+                          --workers, and the serve rebalancer knobs
+                          apply). --resilient
                           gives clients timeouts + backoff reconnect and
                           per-class error counters instead of fail-fast;
                           --drain retires the service via the graceful
@@ -618,7 +624,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         backend: args.str_or("backend", "smartpq"),
         shards: args.num_or("shards", 2)?,
         key_span: args.num_or("key-span", DEFAULT_KEY_SPAN)?,
-        max_conns: args.num_or("max-conns", 64)?,
+        max_conns: args.num_or("max-conns", 1024)?,
+        workers: args.num_or("workers", 4)?,
         addr: args.str_or("addr", "127.0.0.1:7171"),
         seed: args.num_or("seed", 42)?,
         decision_interval_ms: args.num_or("decision-ms", 50)?,
@@ -703,6 +710,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
                 shards: args.num_or("shards", 2)?,
                 key_span: args.num_or("key-span", DEFAULT_KEY_SPAN)?,
                 max_conns: cfg.conns + 8,
+                workers: args.num_or("workers", 4)?,
                 elastic: !args.flag("static-shards"),
                 rebalance_interval_ms: args.num_or("rebalance-ms", 50)?,
                 rebalance_imbalance: args.num_or("imbalance", 3.0)?,

@@ -66,7 +66,7 @@ impl ConcurrentPQ for LotanShavitPQ {
     }
 
     /// Bulk insert via the shared sort/scatter wrapper
-    /// ([`crate::pq::traits::batched_insert_each`]): one hinted list walk
+    /// (`crate::pq::traits::batched_insert_each`): one hinted list walk
     /// per batch, allocation-free for already-ascending input.
     fn insert_batch_each(&self, items: &[(u64, u64)], ok: &mut [bool]) -> usize {
         crate::pq::traits::batched_insert_each(

@@ -202,7 +202,7 @@ impl HerlihySkipList {
 
     /// Insert an *ascending-sorted* batch under one epoch guard, reusing
     /// each item's predecessor snapshot as the next item's search hint
-    /// (see [`HerlihySkipList::find_hinted`]). `ok[i]` reports item `i`'s
+    /// (see `HerlihySkipList::find_hinted`). `ok[i]` reports item `i`'s
     /// outcome; sentinel keys fail in all build profiles. Returns the
     /// number inserted.
     pub fn insert_batch_sorted(

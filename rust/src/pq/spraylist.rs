@@ -203,7 +203,7 @@ impl<B: SprayBase> ConcurrentPQ for SprayList<B> {
     }
 
     /// Bulk insert via the shared sort/scatter wrapper
-    /// ([`crate::pq::traits::batched_insert_each`]): one hinted list walk
+    /// (`crate::pq::traits::batched_insert_each`): one hinted list walk
     /// per batch, allocation-free when the input is already ascending
     /// (the combining server pre-sorts its residue).
     fn insert_batch_each(&self, items: &[(u64, u64)], ok: &mut [bool]) -> usize {

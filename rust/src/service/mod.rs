@@ -8,14 +8,18 @@
 //! * [`proto`] — the versioned, length-prefixed binary wire protocol
 //!   (scalar + batched insert/deleteMin/peek, error frames, strict
 //!   decode).
-//! * [`server`] — a multi-threaded TCP server hosting K key-range shards
-//!   of any backend from the ten-backend registry (default SmartPQ),
-//!   behind an **elastic, epoch-versioned shard map**: a tournament tree
-//!   routes deleteMin to the lowest-minimum shard in ~O(1), and a
-//!   load-triggered rebalancer re-cuts the key ranges at resident-count
-//!   quantiles under a brief epoch quiesce when traffic skews (Zipf-
-//!   shaped key streams no longer collapse onto one shard). Requests
-//!   are fused per connection into the PR-3 batch entry points.
+//! * [`server`] — an **event-driven reactor** TCP server hosting K
+//!   key-range shards of any backend from the ten-backend registry
+//!   (default SmartPQ): one readiness loop ([`crate::util::poll`])
+//!   owns thousands of nonblocking connections as explicit state
+//!   machines while a small `--workers` pool executes their request
+//!   runs, behind an **elastic, epoch-versioned shard map** — a
+//!   tournament tree routes deleteMin to the lowest-minimum shard in
+//!   ~O(1), and a load-triggered rebalancer re-cuts the key ranges at
+//!   resident-count quantiles under a brief epoch quiesce when traffic
+//!   skews (Zipf-shaped key streams no longer collapse onto one
+//!   shard). Requests are fused per connection into the PR-3 batch
+//!   entry points.
 //! * [`client`] — a blocking, pipelining client used by the open-loop
 //!   load generator (`smartpq loadgen`,
 //!   [`crate::harness::service_bench`]) and the differential tests,

@@ -1,6 +1,7 @@
 //! The TCP priority-queue service: K key-range shards of any backend
-//! from the ten-backend registry, served by a fixed pool of handler
-//! threads.
+//! from the ten-backend registry, served by an event-driven reactor —
+//! one readiness loop owning every connection, a small worker pool
+//! actually touching the queue.
 //!
 //! ## Sharding semantics: an epoch-versioned elastic map
 //!
@@ -29,7 +30,7 @@
 //! Because the partition is *monotone in the key*, the global minimum
 //! always lives in the lowest-indexed non-empty shard. deleteMin routes
 //! through a cached tournament tree over per-shard minimum hints
-//! ([`MinTree`], ~O(1) instead of an O(K) scan) and the guarantee is
+//! (`MinTree`, ~O(1) instead of an O(K) scan) and the guarantee is
 //! deliberately **relaxed min-of-shards**: a pop races concurrent
 //! inserts into lower shards exactly the way a SprayList pop races
 //! concurrent inserts below the spray window, and every returned
@@ -42,55 +43,74 @@
 //! key order (shard order ∘ per-shard order), which `tests/service.rs`
 //! pins for an exact backend.
 //!
-//! ## Connection handling = network combining
+//! ## The reactor: connections are state machines, not threads
 //!
-//! Each handler reads whatever bytes are available, decodes *all*
-//! complete frames, and processes maximal runs of same-kind requests
-//! through the PR-3 batch entry points: pipelined inserts become one
-//! `insert_batch_each` per touched shard, pipelined deleteMins become
-//! one shard-ordered `delete_min_batch`. Responses are written back in
-//! request order as one vectored write. This is the Nuddle combining
-//! server's collect → combine → publish cycle with the request lines
-//! replaced by a socket buffer — and when the backend *is* Nuddle or
-//! SmartPQ-aware, the two combining layers stack.
+//! One **reactor thread** owns every socket: the listener, a self-pipe
+//! waker, and all accepted connections sit nonblocking in a readiness
+//! poller (epoll on Linux, `poll(2)` anywhere —
+//! [`crate::util::poll`]). Each connection is an explicit state
+//! machine cycling *reading → executing → draining its write buffer*:
 //!
-//! Connections are served by a **fixed pool** of `max_conns` handler
-//! threads (accepted sockets queue until a handler frees up), not a
-//! thread per connection. The pool is what makes delegation backends
-//! safe to serve: a Nuddle/SmartPQ client slot is consumed *per thread*
-//! for the life of the process (`ClientSlot::register` never recycles
-//! slots), so an unbounded handler-thread population would exhaust
-//! `max_clients` after enough connection churn — the pool caps slot
-//! usage at `max_conns` per shard, forever.
+//! 1. **Reading.** On readiness the reactor reads a chunk, appends to
+//!    the connection's receive buffer, and decodes *all* complete
+//!    frames. No complete frame yet → keep waiting (a byte-dribbling
+//!    client costs one buffer, never a thread).
+//! 2. **Executing.** Decoded frames are handed to a **worker pool** of
+//!    `workers` threads as one job; the connection's read interest is
+//!    parked while its job is in flight (TCP backpressure bounds the
+//!    backlog, and at most one job per connection keeps responses in
+//!    request order). Workers fuse each run through the PR-3 batch
+//!    entry points: pipelined inserts become one `insert_batch_each`
+//!    per touched shard, pipelined deleteMins one shard-ordered
+//!    `delete_min_batch` — the Nuddle combining server's collect →
+//!    combine → publish cycle with the request lines replaced by a
+//!    socket buffer. When the backend *is* Nuddle or SmartPQ, the two
+//!    combining layers stack.
+//! 3. **Draining.** Completed responses append to the connection's
+//!    write buffer and flush nonblocking; whatever does not fit arms
+//!    write interest and drains on later readiness.
+//!
+//! Handler threads stop being the scarce resource: `--max-conns` is a
+//! pure **fd budget** (thousands), `--workers` sizes the threads that
+//! touch the queue. The split is what makes delegation backends cheap
+//! to serve: a Nuddle/SmartPQ client slot is consumed *per thread* for
+//! the life of the process (`ClientSlot::register` never recycles
+//! slots), so slot consumption now tracks the worker count, not the
+//! connection count.
 //!
 //! ## Resilience
 //!
-//! One bad connection must never take the service with it. Each
-//! handler's receive buffer is hard-capped ([`proto::MAX_FRAME_LEN`]
-//! plus one read chunk — a corrupt length prefix is answered with a
-//! `FRAME_TOO_LARGE` error frame before it can drive allocation), each
-//! response write carries a deadline (`write_timeout_ms`; a reader that
-//! stops draining its socket gets severed instead of pinning a pool
-//! thread), and each handler runs under `catch_unwind`: a panic poisons
-//! only its own connection — counted in the `Stats` `poisoned` field
-//! and traced as a `Fault` event — while the worker thread survives.
-//! The `inserted`/`popped` ledger on [`ShardedPq`] makes element
-//! conservation checkable end-to-end (`inserted − popped − resident ==
-//! 0` at quiesce, whatever faults the connections suffered). Alongside
-//! the abrupt `Shutdown` frame there is a graceful **drain**
-//! ([`Request::Drain`]): stop accepting, answer every fully received
-//! pipelined run on every live connection, then exit — connections
-//! retired this way are counted in `drained`.
+//! One bad connection must never take the service with it. Every PR-8
+//! invariant carries over to the reactor: receive buffers stay
+//! hard-capped ([`proto::MAX_FRAME_LEN`] plus one read chunk — a
+//! corrupt length prefix is answered with a `FRAME_TOO_LARGE` error
+//! frame before it can drive allocation); response writes carry a
+//! deadline (`write_timeout_ms`, enforced by the readiness loop's tick
+//! instead of a socket timeout — a reader that stops draining its
+//! socket is severed, never pinning anything); each job runs under
+//! `catch_unwind`, so a panic poisons only its own connection —
+//! counted in the `Stats` `poisoned` field and traced as a `Fault`
+//! event — while the worker thread survives. The `inserted`/`popped`
+//! ledger on [`ShardedPq`] makes element conservation checkable
+//! end-to-end (`inserted − popped − resident == 0` at quiesce,
+//! whatever faults the connections suffered). Alongside the abrupt
+//! `Shutdown` frame there is a graceful **drain** ([`Request::Drain`]):
+//! stop accepting, answer every fully received pipelined run on every
+//! live connection, retire each as it goes quiet (counted in
+//! `drained`), then exit.
 
+use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex, RwLock};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::pq::traits::{ConcurrentPQ, KEY_MAX_SENTINEL};
 use crate::service::proto::{self, Request, Response, ServiceStats};
 use crate::util::error::{Error, Result};
+use crate::util::poll::{Interest, PollEvent, Poller, Waker};
 use crate::util::sync::CacheLine;
 use crate::workloads::driver::{build_queue, AdaptiveProbe, BuiltQueue};
 
@@ -107,13 +127,18 @@ pub struct ServiceConfig {
     pub shards: usize,
     /// Expected user-key upper bound (shard-boundary scale).
     pub key_span: u64,
-    /// Handler-pool size: at most this many connections are served
-    /// concurrently (accepted sockets beyond it wait for a free
-    /// handler). Also sizes delegation backends' client capacity — the
-    /// pool guarantees at most `max_conns` threads ever touch a shard,
-    /// so Nuddle/SmartPQ slot consumption stays bounded for the life of
-    /// the service (see the module docs).
+    /// Connection fd budget: at most this many connections are
+    /// resident in the reactor at once (accepts pause at the cap and
+    /// resume as connections retire). Purely an fd/memory bound —
+    /// thousands are fine; it no longer sizes any thread pool or
+    /// delegation client capacity (that is [`ServiceConfig::workers`]).
     pub max_conns: usize,
+    /// Worker-pool size: the threads that actually execute request
+    /// runs against the shards. Also sizes delegation backends' client
+    /// capacity — a Nuddle/SmartPQ client slot is consumed per thread
+    /// for the life of the process, so slot consumption tracks this,
+    /// not the connection count (see the module docs).
+    pub workers: usize,
     /// Bind address (`127.0.0.1:0` picks a free port).
     pub addr: String,
     /// Seed for backend construction.
@@ -148,7 +173,8 @@ impl Default for ServiceConfig {
             backend: "smartpq".to_string(),
             shards: 2,
             key_span: DEFAULT_KEY_SPAN,
-            max_conns: 64,
+            max_conns: 1024,
+            workers: 4,
             addr: "127.0.0.1:0".to_string(),
             seed: 42,
             decision_interval_ms: 50,
@@ -348,9 +374,14 @@ impl ShardedPq {
                 cfg.rebalance_imbalance
             )));
         }
+        // Delegation client capacity is sized by the worker pool (the
+        // only threads that execute request runs), plus a margin for
+        // the monitor's rebalance migrations and direct in-process
+        // callers (tests, prefill) — NOT by the connection budget,
+        // which may be thousands.
         let mut shards = Vec::with_capacity(cfg.shards);
         for i in 0..cfg.shards {
-            shards.push(build_queue(&cfg.backend, cfg.max_conns, cfg.seed + i as u64)?);
+            shards.push(build_queue(&cfg.backend, cfg.workers.max(1) + 8, cfg.seed + i as u64)?);
         }
         let span = cfg.key_span / cfg.shards as u64;
         let bounds: Vec<u64> = (0..cfg.shards)
@@ -803,59 +834,174 @@ impl ShardedPq {
 
 struct ServiceShared {
     stop: AtomicBool,
-    /// Graceful-drain flag: accept stops, live handlers answer every
-    /// fully received request, then retire as their clients go quiet.
+    /// Graceful-drain flag: accept stops, live connections answer
+    /// every fully received request, then retire as their clients go
+    /// quiet.
     draining: AtomicBool,
-    addr: SocketAddr,
     /// `Some(key_span)` when the service rejects out-of-span inserts
     /// with an error frame (`ServiceConfig::strict_span`).
     strict_span: Option<u64>,
-    /// Per-connection response-write deadline (`None` = unbounded).
+    /// Per-connection response-write deadline (`None` = unbounded),
+    /// enforced by the reactor's tick.
     write_timeout: Option<Duration>,
+    /// Pokes the reactor's readiness loop awake (lifecycle changes and
+    /// worker completions).
+    waker: Waker,
 }
 
 impl ServiceShared {
-    /// Flag the service stopped and poke the accept loop awake.
+    /// Flag the service stopped and poke the reactor awake.
     fn request_stop(&self) {
         self.stop.store(true, Ordering::Release);
-        let _ = TcpStream::connect(self.addr);
+        self.waker.wake();
     }
 
-    /// Flag the graceful drain and poke the accept loop awake. Unlike
+    /// Flag the graceful drain and poke the reactor awake. Unlike
     /// `request_stop` this never abandons in-flight work: every fully
     /// received pipelined run is still answered before its connection
     /// retires.
     fn request_drain(&self) {
         self.draining.store(true, Ordering::Release);
-        let _ = TcpStream::connect(self.addr);
+        self.waker.wake();
     }
 }
 
-/// A running service: owns the shards, the accept loop, the fixed
-/// handler pool, and (for adaptive backends) the decision monitor.
+/// Readiness token of the listening socket.
+const TOKEN_LISTENER: u64 = 0;
+/// Readiness token of the reactor's self-pipe waker.
+const TOKEN_WAKER: u64 = 1;
+/// First connection token; tokens are monotone and never reused, so a
+/// late worker completion can never be delivered to the wrong
+/// connection.
+const TOKEN_CONN0: u64 = 2;
+
+/// Reactor tick: the upper bound on how stale lifecycle flags, write
+/// deadlines, and drain-quiesce checks may go between wakeups.
+const TICK: Duration = Duration::from_millis(50);
+
+/// How long a draining connection must stay quiet (no bytes, no job in
+/// flight, an empty write buffer) before the reactor retires it — the
+/// readiness-loop analogue of the threaded server's
+/// timeout-with-empty-buffer retirement.
+const DRAIN_QUIET: Duration = Duration::from_millis(50);
+
+/// One decoded request run travelling reactor → worker.
+struct Job {
+    token: u64,
+    /// Peer label (port) for trace events.
+    label: u64,
+    reqs: Vec<Request>,
+}
+
+/// One executed run travelling worker → reactor.
+struct Done {
+    token: u64,
+    /// Encoded responses, in request order.
+    wire: Vec<u8>,
+    signal: SweepSignal,
+    /// The run panicked: the connection is poisoned (already counted)
+    /// and must close without a response.
+    panicked: bool,
+}
+
+/// Run `f` with panic isolation: a panic poisons only the connection
+/// it was serving (the `poisoned` counter bumps, a `Fault` event is
+/// traced) while the calling worker thread survives. `None` marks the
+/// poisoned outcome.
+fn run_isolated<T>(sharded: &ShardedPq, conn: u64, f: impl FnOnce() -> T) -> Option<T> {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)) {
+        Ok(v) => Some(v),
+        Err(_) => {
+            sharded.note_poisoned();
+            crate::trace::instant(crate::trace::EventKind::Fault, fault_class::PANIC, 0, conn);
+            None
+        }
+    }
+}
+
+/// Worker-pool loop: execute jobs under panic isolation until the job
+/// channel closes (the reactor exited). Each completion is followed by
+/// a waker poke so the reactor flushes the responses promptly.
+fn worker_loop(
+    jobs: &Mutex<mpsc::Receiver<Job>>,
+    done_tx: &mpsc::Sender<Done>,
+    sharded: &ShardedPq,
+    shared: &ServiceShared,
+) {
+    loop {
+        let job = {
+            let rx = jobs.lock().expect("worker rx lock");
+            rx.recv()
+        };
+        let job = match job {
+            Ok(j) => j,
+            Err(_) => return, // reactor gone: stopping
+        };
+        let t_us = crate::trace::now_us();
+        let nreqs = job.reqs.len() as u64;
+        let done = match run_isolated(sharded, job.label, || {
+            let mut wire = Vec::new();
+            let signal = process_requests(sharded, &job.reqs, &mut wire);
+            (wire, signal)
+        }) {
+            Some((wire, signal)) => Done {
+                token: job.token,
+                wire,
+                signal,
+                panicked: false,
+            },
+            None => Done {
+                token: job.token,
+                wire: Vec::new(),
+                signal: SweepSignal::None,
+                panicked: true,
+            },
+        };
+        crate::trace::complete(
+            crate::trace::EventKind::RunExec,
+            t_us,
+            job.label,
+            nreqs,
+            done.wire.len() as u64,
+        );
+        if done_tx.send(done).is_err() {
+            return; // reactor gone mid-run
+        }
+        shared.waker.wake();
+    }
+}
+
+/// A running service: owns the shards, the reactor (every socket), the
+/// worker pool (every thread that touches the queue), and (for
+/// adaptive backends) the decision monitor.
 pub struct PqService {
     addr: SocketAddr,
     shared: Arc<ServiceShared>,
     sharded: Arc<ShardedPq>,
     probes: Vec<Arc<dyn AdaptiveProbe>>,
-    accept: Option<std::thread::JoinHandle<()>>,
+    reactor: Option<std::thread::JoinHandle<()>>,
     monitor: Option<std::thread::JoinHandle<()>>,
     workers: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl PqService {
-    /// Bind, spawn the accept loop, and return the running service.
+    /// Bind, spawn the reactor and the worker pool, and return the
+    /// running service.
     pub fn start(cfg: ServiceConfig) -> Result<PqService> {
         let sharded = Arc::new(ShardedPq::new(&cfg)?);
         let listener = TcpListener::bind(&cfg.addr)?;
+        listener.set_nonblocking(true)?;
         let addr = listener.local_addr()?;
+        let mut poller = Poller::new()?;
+        poller.register(listener.as_raw_fd(), TOKEN_LISTENER, Interest::READ)?;
+        let waker = poller.waker(TOKEN_WAKER)?;
         let shared = Arc::new(ServiceShared {
             stop: AtomicBool::new(false),
             draining: AtomicBool::new(false),
-            addr,
             strict_span: cfg.strict_span.then_some(cfg.key_span),
             write_timeout: (cfg.write_timeout_ms > 0)
                 .then(|| Duration::from_millis(cfg.write_timeout_ms)),
+            waker,
         });
         let probes = sharded.adaptive_probes();
         let elastic = cfg.elastic && cfg.shards > 1;
@@ -893,64 +1039,54 @@ impl PqService {
                     .expect("spawn service monitor"),
             )
         };
-        // Fixed handler pool fed by the accept loop over a channel: the
-        // receiving end is shared behind a mutex, so exactly one idle
-        // worker waits on it at a time. When the accept loop exits the
-        // sender drops and every idle worker's recv errors out — the
-        // pool's shutdown signal.
-        let (conn_tx, conn_rx) = mpsc::channel::<TcpStream>();
-        let conn_rx = Arc::new(Mutex::new(conn_rx));
-        let pool = cfg.max_conns.max(1);
+        // The worker pool: the only threads that execute request runs
+        // against the shards. Jobs arrive over a shared channel (one
+        // idle worker blocks on it at a time); completions return over
+        // another. When the reactor exits its job sender drops and
+        // every idle worker's recv errors out — the pool's shutdown
+        // signal.
+        let (job_tx, job_rx) = mpsc::channel::<Job>();
+        let (done_tx, done_rx) = mpsc::channel::<Done>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let pool = cfg.workers.max(1);
         let mut workers = Vec::with_capacity(pool);
         for w in 0..pool {
-            let conn_rx = Arc::clone(&conn_rx);
+            let job_rx = Arc::clone(&job_rx);
+            let done_tx = done_tx.clone();
             let shared = Arc::clone(&shared);
             let sharded = Arc::clone(&sharded);
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("pq-service-worker-{w}"))
-                    .spawn(move || loop {
-                        let stream = {
-                            let rx = conn_rx.lock().expect("worker rx lock");
-                            rx.recv()
-                        };
-                        match stream {
-                            Ok(s) => {
-                                let conn = s.peer_addr().map(|a| a.port() as u64).unwrap_or(0);
-                                isolate_conn_panic(&sharded, conn, || {
-                                    handle_conn(s, &sharded, &shared)
-                                });
-                            }
-                            Err(_) => return, // accept loop gone: stopping
-                        }
-                    })
+                    .spawn(move || worker_loop(&job_rx, &done_tx, &sharded, &shared))
                     .expect("spawn service worker"),
             );
         }
-        let accept = {
-            let shared = Arc::clone(&shared);
+        drop(done_tx); // completions close when the last worker exits
+        let reactor = {
+            let reactor = Reactor {
+                poller,
+                listener,
+                listener_paused: false,
+                conns: HashMap::new(),
+                next_token: TOKEN_CONN0,
+                max_conns: cfg.max_conns.max(1),
+                job_tx,
+                done_rx,
+                shared: Arc::clone(&shared),
+                sharded: Arc::clone(&sharded),
+            };
             std::thread::Builder::new()
-                .name("pq-service-accept".into())
-                .spawn(move || {
-                    for stream in listener.incoming() {
-                        if shared.stop.load(Ordering::Acquire)
-                            || shared.draining.load(Ordering::Acquire)
-                        {
-                            break;
-                        }
-                        if let Ok(s) = stream {
-                            let _ = conn_tx.send(s);
-                        }
-                    }
-                })
-                .expect("spawn accept loop")
+                .name("pq-service-reactor".into())
+                .spawn(move || reactor.run())
+                .expect("spawn service reactor")
         };
         Ok(PqService {
             addr,
             shared,
             sharded,
             probes,
-            accept: Some(accept),
+            reactor: Some(reactor),
             monitor,
             workers,
         })
@@ -975,6 +1111,13 @@ impl PqService {
     /// Completed shard-map rebalances.
     pub fn rebalances(&self) -> u64 {
         self.sharded.rebalances()
+    }
+
+    /// Worker-pool size: the threads that execute request runs. Under
+    /// the reactor this — not the connection count — is the service's
+    /// thread population, which the idle-horde test pins.
+    pub fn worker_count(&self) -> usize {
+        self.workers.len()
     }
 
     /// The composed queue itself (tests force rebalances and inspect
@@ -1010,14 +1153,13 @@ impl PqService {
     }
 
     fn join_all(&mut self) {
-        // Join order matters for the graceful drain: the accept loop
-        // exits first (poked by request_stop/request_drain, dropping
-        // the pool's sender), then the workers finish their live
-        // connections (under drain they keep serving until the clients
-        // go quiet). Only then is `stop` forced — joining the monitor
-        // before the workers would hang a drain forever, since draining
-        // alone never sets `stop`.
-        if let Some(h) = self.accept.take() {
+        // Join order matters for the graceful drain: the reactor exits
+        // first (stop, or drain completed with every connection
+        // retired), dropping the job sender so the worker pool finishes
+        // its queued runs and exits. Only then is `stop` forced —
+        // joining the monitor before the workers would hang a drain
+        // forever, since draining alone never sets `stop`.
+        if let Some(h) = self.reactor.take() {
             let _ = h.join();
         }
         for h in self.workers.drain(..) {
@@ -1037,7 +1179,8 @@ impl Drop for PqService {
     }
 }
 
-/// Handler read granularity; also bounds the per-read request batch.
+/// Reactor read granularity; also bounds how much one decode sweep can
+/// add to a request batch.
 const READ_CHUNK: usize = 16 * 1024;
 
 /// Hard cap on a connection's receive buffer. A protocol-conforming
@@ -1048,138 +1191,358 @@ const READ_CHUNK: usize = 16 * 1024;
 /// connection is answered with `FRAME_TOO_LARGE` and dropped.
 const MAX_CONN_BUF: usize = proto::MAX_FRAME_LEN + 4 + READ_CHUNK;
 
-/// Run one connection's handler with panic isolation: a panicking
-/// handler poisons only its own connection (the socket drops, the
-/// `poisoned` counter bumps, a `Fault` event is traced) while the
-/// worker thread survives to serve the next connection.
-fn isolate_conn_panic<F: FnOnce()>(sharded: &ShardedPq, conn: u64, f: F) {
-    if std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)).is_err() {
-        sharded.note_poisoned();
-        crate::trace::instant(crate::trace::EventKind::Fault, fault_class::PANIC, 0, conn);
-    }
+/// Per-connection state machine (module docs): *reading* a
+/// length-prefixed run → *executing* it on a worker → *draining* the
+/// write buffer.
+struct Conn {
+    stream: TcpStream,
+    /// Peer label (port) for trace events.
+    label: u64,
+    /// Received-but-undecoded bytes; once a run dispatches this holds
+    /// at most an incomplete frame tail.
+    rbuf: Vec<u8>,
+    /// Encoded responses awaiting the socket.
+    wbuf: Vec<u8>,
+    /// Drained prefix of `wbuf`.
+    woff: usize,
+    /// A job is in flight on the worker pool; reads are parked (TCP
+    /// backpressure bounds the client, one job at a time keeps
+    /// responses in request order).
+    busy: bool,
+    /// Flush `wbuf`, then close (error frames, strict-span rejects).
+    closing: bool,
+    /// Interest currently registered with the poller.
+    interest: Interest,
+    /// When the last byte arrived (drain-quiesce detection).
+    last_activity: Instant,
+    /// The write buffer has made no progress since this instant
+    /// (deadline enforcement).
+    write_since: Option<Instant>,
 }
 
-fn handle_conn(mut stream: TcpStream, sharded: &ShardedPq, shared: &ServiceShared) {
-    let conn = stream.peer_addr().map(|a| a.port() as u64).unwrap_or(0);
-    let _ = stream.set_nodelay(true);
-    // A finite read timeout keeps handlers responsive to shutdown (and
-    // drain) even when their client holds the connection open silently.
-    let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
-    // A slow or dead reader cannot pin this handler forever: writes
-    // past the deadline fail and sever the connection instead.
-    let _ = stream.set_write_timeout(shared.write_timeout);
-    let mut rbuf: Vec<u8> = Vec::with_capacity(READ_CHUNK);
-    let mut wbuf: Vec<u8> = Vec::with_capacity(READ_CHUNK);
-    let mut chunk = [0u8; READ_CHUNK];
-    let mut reqs: Vec<Request> = Vec::new();
-    loop {
-        if shared.stop.load(Ordering::Acquire) {
-            return;
-        }
-        let n = match stream.read(&mut chunk) {
-            Ok(0) => {
-                // EOF with every complete frame already answered: under
-                // drain this is the connection retiring cleanly.
-                if shared.draining.load(Ordering::Acquire) {
-                    sharded.note_drained();
-                    crate::trace::instant(
-                        crate::trace::EventKind::Fault,
-                        fault_class::DRAIN,
-                        0,
-                        conn,
-                    );
-                }
-                return;
+/// What one decode sweep over a connection's receive buffer did.
+enum Sweep {
+    /// A run was dispatched to the worker pool.
+    Dispatched,
+    /// No complete frame yet; keep reading.
+    Idle,
+    /// The connection closed (protocol error, strict-span reject, or a
+    /// dead worker channel).
+    Closed,
+}
+
+/// What a decode pass found, extracted before any lifecycle action so
+/// the connection borrow is released first.
+enum Decoded {
+    /// Wire garbage: answer with this typed error frame and close.
+    Bad(u16, String),
+    /// No complete frame yet.
+    Incomplete,
+    /// At least one complete frame (plus the connection's trace label).
+    Run(Vec<Request>, u64),
+}
+
+/// The event loop: owns the listener, the waker pipe, and every
+/// connection. Single-threaded by construction — workers communicate
+/// only through the job/done channels and the waker.
+struct Reactor {
+    poller: Poller,
+    listener: TcpListener,
+    listener_paused: bool,
+    conns: HashMap<u64, Conn>,
+    next_token: u64,
+    max_conns: usize,
+    job_tx: mpsc::Sender<Job>,
+    done_rx: mpsc::Receiver<Done>,
+    shared: Arc<ServiceShared>,
+    sharded: Arc<ShardedPq>,
+}
+
+impl Reactor {
+    fn run(mut self) {
+        let mut events: Vec<PollEvent> = Vec::new();
+        loop {
+            if self.shared.stop.load(Ordering::Acquire) {
+                break;
             }
-            Ok(n) => n,
-            Err(e)
-                if matches!(
-                    e.kind(),
-                    std::io::ErrorKind::WouldBlock
-                        | std::io::ErrorKind::TimedOut
-                        | std::io::ErrorKind::Interrupted
-                ) =>
-            {
-                // Draining and the client has gone quiet with no
-                // partial frame pending: every fully received request
-                // has been answered — retire the connection.
-                if shared.draining.load(Ordering::Acquire) && rbuf.is_empty() {
-                    sharded.note_drained();
-                    crate::trace::instant(
-                        crate::trace::EventKind::Fault,
-                        fault_class::DRAIN,
-                        0,
-                        conn,
-                    );
-                    return;
+            if self.shared.draining.load(Ordering::Acquire) {
+                self.pause_listener();
+                self.retire_quiet_conns();
+                if self.conns.is_empty() {
+                    break; // drain complete
                 }
+            }
+            if self.poller.wait(&mut events, Some(TICK)).is_err() {
+                break; // a dead poller cannot make progress
+            }
+            let nevents = events.len() as u64;
+            let completions = self.drain_completions();
+            if self.shared.stop.load(Ordering::Acquire) {
+                break;
+            }
+            let mut dispatched = 0u64;
+            let mut i = 0;
+            while i < events.len() {
+                let ev = events[i];
+                i += 1;
+                match ev.token {
+                    TOKEN_LISTENER => self.accept_ready(),
+                    TOKEN_WAKER => self.poller.drain_waker(),
+                    token => dispatched += self.conn_ready(token, ev),
+                }
+            }
+            self.check_write_deadlines();
+            if nevents + completions + dispatched > 0 {
+                crate::trace::instant(
+                    crate::trace::EventKind::ReactorWake,
+                    nevents,
+                    dispatched,
+                    completions,
+                );
+            }
+        }
+        // Best-effort nonblocking flush of tiny pending responses (the
+        // Shutdown ack): one pass, no new deadlines.
+        let tokens: Vec<u64> = self.conns.keys().copied().collect();
+        for token in tokens {
+            self.flush_conn(token);
+        }
+    }
+
+    /// Apply every finished job: append its responses, flush, release
+    /// the connection back to reading, and honor lifecycle signals.
+    /// Returns the number of completions handled.
+    fn drain_completions(&mut self) -> u64 {
+        let mut n = 0;
+        while let Ok(done) = self.done_rx.try_recv() {
+            n += 1;
+            let Some(conn) = self.conns.get_mut(&done.token) else {
+                continue; // severed while its run executed
+            };
+            conn.busy = false;
+            if done.panicked {
+                self.close_conn(done.token, false);
                 continue;
             }
-            Err(_) => return,
-        };
-        rbuf.extend_from_slice(&chunk[..n]);
-        if rbuf.len() > MAX_CONN_BUF {
-            // Unreachable for conforming streams (see MAX_CONN_BUF):
-            // answer with the oversize error class and drop.
-            wbuf.clear();
-            proto::encode_response(
-                &Response::Error {
-                    code: proto::err::FRAME_TOO_LARGE,
-                    message: format!(
-                        "connection buffer exceeded {MAX_CONN_BUF} bytes without a decodable frame"
-                    ),
-                },
-                &mut wbuf,
-            );
-            crate::trace::instant(
-                crate::trace::EventKind::Fault,
-                fault_class::PROTO,
-                proto::err::FRAME_TOO_LARGE as u64,
-                conn,
-            );
-            let _ = stream.write_all(&wbuf);
-            return;
-        }
-        reqs.clear();
-        let mut off = 0;
-        loop {
-            match proto::decode_request(&rbuf[off..]) {
-                Ok(Some((req, used))) => {
-                    reqs.push(req);
-                    off += used;
+            if !done.wire.is_empty() {
+                if conn.woff >= conn.wbuf.len() {
+                    conn.wbuf.clear();
+                    conn.woff = 0;
                 }
-                Ok(None) => break,
-                Err(e) => {
-                    // Garbage on the wire: answer with one typed error
-                    // frame and drop the connection.
-                    let code = proto::wire_error_code(&e);
-                    wbuf.clear();
-                    proto::encode_response(
-                        &Response::Error {
-                            code,
-                            message: e.to_string(),
-                        },
-                        &mut wbuf,
-                    );
-                    crate::trace::instant(
-                        crate::trace::EventKind::Fault,
-                        fault_class::PROTO,
-                        code as u64,
-                        conn,
-                    );
-                    let _ = stream.write_all(&wbuf);
-                    return;
+                conn.wbuf.extend_from_slice(&done.wire);
+                if conn.write_since.is_none() {
+                    conn.write_since = Some(Instant::now());
+                }
+            }
+            match done.signal {
+                SweepSignal::Shutdown => {
+                    // Ack first, then stop the world: the loop breaks
+                    // right after completions drain.
+                    self.flush_conn(done.token);
+                    self.shared.stop.store(true, Ordering::Release);
+                }
+                SweepSignal::Drain => {
+                    self.shared.draining.store(true, Ordering::Release);
+                    self.flush_conn(done.token);
+                }
+                SweepSignal::None => {
+                    self.flush_conn(done.token);
                 }
             }
         }
-        rbuf.drain(..off);
-        if reqs.is_empty() {
-            continue;
+        n
+    }
+
+    /// Accept until the listener would block or the fd budget is hit
+    /// (accepts pause at the cap and resume as connections retire).
+    fn accept_ready(&mut self) {
+        loop {
+            if self.conns.len() >= self.max_conns {
+                self.pause_listener();
+                return;
+            }
+            match self.listener.accept() {
+                Ok((stream, peer)) => {
+                    let _ = stream.set_nonblocking(true);
+                    let _ = stream.set_nodelay(true);
+                    let token = self.next_token;
+                    self.next_token += 1;
+                    if self
+                        .poller
+                        .register(stream.as_raw_fd(), token, Interest::READ)
+                        .is_err()
+                    {
+                        continue; // registration rejected: drop it
+                    }
+                    self.conns.insert(
+                        token,
+                        Conn {
+                            stream,
+                            label: peer.port() as u64,
+                            rbuf: Vec::new(),
+                            wbuf: Vec::new(),
+                            woff: 0,
+                            busy: false,
+                            closing: false,
+                            interest: Interest::READ,
+                            last_activity: Instant::now(),
+                            write_since: None,
+                        },
+                    );
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => return,
+            }
         }
+    }
+
+    fn pause_listener(&mut self) {
+        if !self.listener_paused {
+            self.listener_paused = true;
+            let _ = self
+                .poller
+                .modify(self.listener.as_raw_fd(), TOKEN_LISTENER, Interest::NONE);
+        }
+    }
+
+    fn resume_listener(&mut self) {
+        if self.listener_paused
+            && self.conns.len() < self.max_conns
+            && !self.shared.draining.load(Ordering::Acquire)
+        {
+            self.listener_paused = false;
+            let _ = self
+                .poller
+                .modify(self.listener.as_raw_fd(), TOKEN_LISTENER, Interest::READ);
+        }
+    }
+
+    /// Service one readiness report for a connection; returns 1 when a
+    /// job was dispatched to the worker pool.
+    fn conn_ready(&mut self, token: u64, ev: PollEvent) -> u64 {
+        let (busy, closing, pending) = match self.conns.get(&token) {
+            Some(c) => (c.busy, c.closing, c.woff < c.wbuf.len()),
+            None => return 0, // closed earlier this sweep
+        };
+        if (ev.writable || (ev.error && pending)) && !self.flush_conn(token) {
+            return 0; // the flush closed it
+        }
+        if (ev.readable || ev.error) && !busy && !closing {
+            return self.read_conn(token);
+        }
+        0
+    }
+
+    /// Read and decode until a run dispatches, the socket drains, or
+    /// the connection dies. One chunk per decode sweep — exactly the
+    /// threaded server's cadence, so the buffer-cap semantics carry
+    /// over unchanged.
+    fn read_conn(&mut self, token: u64) -> u64 {
+        let mut chunk = [0u8; READ_CHUNK];
+        loop {
+            let n = {
+                let Some(conn) = self.conns.get_mut(&token) else {
+                    return 0;
+                };
+                match conn.stream.read(&mut chunk) {
+                    Ok(0) => {
+                        // EOF with every complete frame already
+                        // answered: under drain this is the connection
+                        // retiring cleanly.
+                        let draining = self.shared.draining.load(Ordering::Acquire);
+                        self.close_conn(token, draining);
+                        return 0;
+                    }
+                    Ok(n) => n,
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return 0,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        self.close_conn(token, false);
+                        return 0;
+                    }
+                }
+            };
+            let over_cap = {
+                let Some(conn) = self.conns.get_mut(&token) else {
+                    return 0;
+                };
+                conn.last_activity = Instant::now();
+                conn.rbuf.extend_from_slice(&chunk[..n]);
+                conn.rbuf.len() > MAX_CONN_BUF
+            };
+            match self.decode_and_dispatch(token) {
+                Sweep::Dispatched => return 1,
+                Sweep::Closed => return 0,
+                Sweep::Idle => {
+                    if over_cap {
+                        // Unreachable for conforming streams (see
+                        // MAX_CONN_BUF): answer with the oversize error
+                        // class and drop.
+                        self.proto_error(
+                            token,
+                            proto::err::FRAME_TOO_LARGE,
+                            format!(
+                                "connection buffer exceeded {MAX_CONN_BUF} bytes without a \
+                                 decodable frame"
+                            ),
+                        );
+                        return 0;
+                    }
+                    if n < READ_CHUNK {
+                        return 0; // socket drained; wait for readiness
+                    }
+                }
+            }
+        }
+    }
+
+    /// Decode every complete frame in the receive buffer and dispatch
+    /// them as one job; strict-span rejection happens here, before the
+    /// run can touch a shard.
+    fn decode_and_dispatch(&mut self, token: u64) -> Sweep {
+        let decoded = {
+            let Some(conn) = self.conns.get_mut(&token) else {
+                return Sweep::Closed;
+            };
+            let mut reqs: Vec<Request> = Vec::new();
+            let mut off = 0;
+            let mut bad: Option<Error> = None;
+            loop {
+                match proto::decode_request(&conn.rbuf[off..]) {
+                    Ok(Some((req, used))) => {
+                        reqs.push(req);
+                        off += used;
+                    }
+                    Ok(None) => break,
+                    Err(e) => {
+                        bad = Some(e);
+                        break;
+                    }
+                }
+            }
+            conn.rbuf.drain(..off);
+            match bad {
+                // Garbage on the wire: requests decoded earlier in the
+                // same sweep are dropped unanswered, exactly like the
+                // threaded server.
+                Some(e) => Decoded::Bad(proto::wire_error_code(&e), e.to_string()),
+                None if reqs.is_empty() => Decoded::Incomplete,
+                None => Decoded::Run(reqs, conn.label),
+            }
+        };
+        let (reqs, label) = match decoded {
+            Decoded::Bad(code, message) => {
+                self.proto_error(token, code, message);
+                return Sweep::Closed;
+            }
+            Decoded::Incomplete => return Sweep::Idle,
+            Decoded::Run(reqs, label) => (reqs, label),
+        };
         // Strict-span services reject out-of-range inserts at decode
         // time: one error frame, then the connection closes (same
         // lifecycle as a malformed frame).
-        if let Some(limit) = shared.strict_span {
+        if let Some(limit) = self.shared.strict_span {
             let bad = reqs.iter().find_map(|r| match r {
                 Request::Insert { key, .. } if *key >= limit => Some(*key),
                 Request::InsertBatch(items) => {
@@ -1188,42 +1551,178 @@ fn handle_conn(mut stream: TcpStream, sharded: &ShardedPq, shared: &ServiceShare
                 _ => None,
             });
             if let Some(key) = bad {
-                wbuf.clear();
-                proto::encode_response(
-                    &Response::Error {
-                        code: proto::err::KEY_RANGE,
-                        message: format!("insert key {key} outside strict key span {limit}"),
-                    },
-                    &mut wbuf,
+                self.proto_error(
+                    token,
+                    proto::err::KEY_RANGE,
+                    format!("insert key {key} outside strict key span {limit}"),
                 );
+                return Sweep::Closed;
+            }
+        }
+        if self.job_tx.send(Job { token, label, reqs }).is_err() {
+            // Worker pool gone: the service is stopping.
+            self.close_conn(token, false);
+            return Sweep::Closed;
+        }
+        if let Some(conn) = self.conns.get_mut(&token) {
+            conn.busy = true;
+        }
+        self.update_interest(token);
+        Sweep::Dispatched
+    }
+
+    /// Queue one typed error frame, trace the fault, and put the
+    /// connection into flush-then-close.
+    fn proto_error(&mut self, token: u64, code: u16, message: String) {
+        let label = {
+            let Some(conn) = self.conns.get_mut(&token) else {
+                return;
+            };
+            proto::encode_response(&Response::Error { code, message }, &mut conn.wbuf);
+            conn.closing = true;
+            if conn.write_since.is_none() {
+                conn.write_since = Some(Instant::now());
+            }
+            conn.label
+        };
+        crate::trace::instant(
+            crate::trace::EventKind::Fault,
+            fault_class::PROTO,
+            code as u64,
+            label,
+        );
+        self.flush_conn(token);
+    }
+
+    /// Drain the write buffer as far as the socket allows. Returns
+    /// false when the connection closed (the flush finished a closing
+    /// connection, or the write failed); otherwise leaves the poller
+    /// interest consistent with the remaining state.
+    fn flush_conn(&mut self, token: u64) -> bool {
+        loop {
+            let Some(conn) = self.conns.get_mut(&token) else {
+                return false;
+            };
+            if conn.woff >= conn.wbuf.len() {
+                conn.wbuf.clear();
+                conn.woff = 0;
+                conn.write_since = None;
+                if conn.closing {
+                    self.close_conn(token, false);
+                    return false;
+                }
+                self.update_interest(token);
+                return true;
+            }
+            match conn.stream.write(&conn.wbuf[conn.woff..]) {
+                Ok(0) => {
+                    self.close_conn(token, false);
+                    return false;
+                }
+                Ok(n) => {
+                    conn.woff += n;
+                    conn.write_since = None; // progress resets the deadline
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if conn.write_since.is_none() {
+                        conn.write_since = Some(Instant::now());
+                    }
+                    self.update_interest(token);
+                    return true;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(_) => {
+                    let label = conn.label;
+                    crate::trace::instant(
+                        crate::trace::EventKind::Fault,
+                        fault_class::WRITE,
+                        0,
+                        label,
+                    );
+                    self.close_conn(token, false);
+                    return false;
+                }
+            }
+        }
+    }
+
+    /// Retire a connection: deregister, drop the socket, count a drain
+    /// retirement when asked, and let accepts resume if the fd budget
+    /// had paused them.
+    fn close_conn(&mut self, token: u64, drained: bool) {
+        if let Some(conn) = self.conns.remove(&token) {
+            let _ = self.poller.deregister(conn.stream.as_raw_fd());
+            if drained {
+                self.sharded.note_drained();
                 crate::trace::instant(
                     crate::trace::EventKind::Fault,
-                    fault_class::PROTO,
-                    proto::err::KEY_RANGE as u64,
-                    conn,
+                    fault_class::DRAIN,
+                    0,
+                    conn.label,
                 );
-                let _ = stream.write_all(&wbuf);
-                return;
             }
         }
-        wbuf.clear();
-        let signal = process_requests(sharded, &reqs, &mut wbuf);
-        if stream.write_all(&wbuf).is_err() {
-            crate::trace::instant(crate::trace::EventKind::Fault, fault_class::WRITE, 0, conn);
+        self.resume_listener();
+    }
+
+    /// Reconcile the poller registration with the connection's state:
+    /// read while idle (no job in flight, not closing), write while
+    /// the write buffer has a backlog.
+    fn update_interest(&mut self, token: u64) {
+        let Some(conn) = self.conns.get_mut(&token) else {
             return;
+        };
+        let want = Interest {
+            read: !conn.busy && !conn.closing,
+            write: conn.woff < conn.wbuf.len(),
+        };
+        if want != conn.interest {
+            let fd = conn.stream.as_raw_fd();
+            if self.poller.modify(fd, token, want).is_ok() {
+                conn.interest = want;
+            }
         }
-        match signal {
-            SweepSignal::Shutdown => {
-                shared.request_stop();
-                return;
-            }
-            SweepSignal::Drain => {
-                // The drain ack is already written; flip the flag and
-                // keep serving this connection until it goes quiet —
-                // the read path above retires it (counted drained).
-                shared.request_drain();
-            }
-            SweepSignal::None => {}
+    }
+
+    /// Under drain: retire every connection that has gone quiet — no
+    /// job in flight, nothing undecoded, write buffer drained, and no
+    /// bytes for [`DRAIN_QUIET`].
+    fn retire_quiet_conns(&mut self) {
+        let now = Instant::now();
+        let quiet: Vec<u64> = self
+            .conns
+            .iter()
+            .filter(|(_, c)| {
+                !c.busy
+                    && !c.closing
+                    && c.rbuf.is_empty()
+                    && c.woff >= c.wbuf.len()
+                    && now.duration_since(c.last_activity) >= DRAIN_QUIET
+            })
+            .map(|(&t, _)| t)
+            .collect();
+        for token in quiet {
+            self.close_conn(token, true);
+        }
+    }
+
+    /// Sever connections whose response writes have made no progress
+    /// for the configured deadline — the readiness-loop replacement
+    /// for the old per-socket write timeout.
+    fn check_write_deadlines(&mut self) {
+        let Some(limit) = self.shared.write_timeout else {
+            return;
+        };
+        let now = Instant::now();
+        let stuck: Vec<(u64, u64)> = self
+            .conns
+            .iter()
+            .filter(|(_, c)| c.write_since.is_some_and(|t| now.duration_since(t) >= limit))
+            .map(|(&t, c)| (t, c.label))
+            .collect();
+        for (token, label) in stuck {
+            crate::trace::instant(crate::trace::EventKind::Fault, fault_class::WRITE, 0, label);
+            self.close_conn(token, false);
         }
     }
 }
@@ -1640,10 +2139,10 @@ mod tests {
     #[test]
     fn handler_panics_are_isolated_and_counted() {
         let s = ShardedPq::new(&cfg("multiqueue", 1)).unwrap();
-        isolate_conn_panic(&s, 7, || panic!("boom"));
+        assert!(run_isolated(&s, 7, || -> u64 { panic!("boom") }).is_none());
         assert_eq!(s.poisoned(), 1);
-        // A clean handler leaves the counter alone.
-        isolate_conn_panic(&s, 8, || {});
+        // A clean run leaves the counter alone and yields its value.
+        assert_eq!(run_isolated(&s, 8, || 42u64), Some(42));
         assert_eq!(s.poisoned(), 1);
         s.note_drained();
         assert_eq!(s.drained(), 1);

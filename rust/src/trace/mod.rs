@@ -69,6 +69,14 @@ pub enum EventKind {
     /// `server::fault_class::*`: panic isolated, protocol error frame
     /// sent, write failure, drained connection).
     Fault = 6,
+    /// One productive reactor readiness wakeup — skipped when a poll
+    /// tick saw nothing (`args: {events, jobs, done}` — readiness
+    /// reports handled, runs dispatched to the worker pool, worker
+    /// completions applied).
+    ReactorWake = 7,
+    /// Worker-side span over one run execution, from dequeue to the
+    /// encoded responses (`args: {conn, reqs, bytes}`).
+    RunExec = 8,
 }
 
 impl EventKind {
@@ -80,6 +88,8 @@ impl EventKind {
             3 => EventKind::ModeSwitch,
             4 => EventKind::Rebalance,
             6 => EventKind::Fault,
+            7 => EventKind::ReactorWake,
+            8 => EventKind::RunExec,
             _ => EventKind::Combine,
         }
     }
@@ -94,6 +104,8 @@ impl EventKind {
             EventKind::Rebalance => "shard rebalance",
             EventKind::Combine => "nuddle combine",
             EventKind::Fault => "service fault",
+            EventKind::ReactorWake => "reactor wake",
+            EventKind::RunExec => "reactor run",
         }
     }
 
@@ -107,6 +119,8 @@ impl EventKind {
             EventKind::Rebalance => ["epoch", "resident", "shards"],
             EventKind::Combine => ["batch", "eliminated", "rejected"],
             EventKind::Fault => ["class", "code", "conn"],
+            EventKind::ReactorWake => ["events", "jobs", "done"],
+            EventKind::RunExec => ["conn", "reqs", "bytes"],
         }
     }
 }

@@ -6,6 +6,7 @@ pub mod error;
 pub mod hist;
 pub mod json;
 pub mod logging;
+pub mod poll;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,689 @@
+//! Readiness polling for the reactor server core: a thin, zero-dependency
+//! syscall shim over `epoll(7)` with a portable `poll(2)` fallback.
+//!
+//! The crate builds offline with no external crates, so this module
+//! declares the handful of libc entry points it needs (`epoll_create1`,
+//! `epoll_ctl`, `epoll_wait`, `poll`, `pipe`, `fcntl`, `read`, `write`,
+//! `close`) directly via `extern "C"` and keeps every `unsafe` block a
+//! one-liner around a single syscall. Two backends sit behind one
+//! [`Poller`] API:
+//!
+//! * **epoll** (Linux): one `epoll` instance, O(1) readiness delivery,
+//!   the production path for thousands of connections.
+//! * **poll(2)** (any Unix): a registry of `(fd, token, interest)`
+//!   entries rebuilt into a `pollfd` array per wait — O(n) per call but
+//!   portable, so the test suite runs anywhere. Force it on Linux with
+//!   `SMARTPQ_FORCE_POLL=1` (CI runs the service suite under both).
+//!
+//! Both backends are **level-triggered**: a registered fd with pending
+//! readable data (or writable buffer space) reports on every wait until
+//! the condition clears, so a consumer that reads less than everything
+//! is re-notified instead of hanging.
+//!
+//! Registration is keyed by a caller-chosen `u64` token (delivered back
+//! in every [`PollEvent`]); interest is a read/write pair ([`Interest`])
+//! that may be [`Interest::NONE`] to park an fd — it stays registered
+//! and still reports errors/hangups, which is how the reactor pauses a
+//! connection whose request run is executing on a worker. Cross-thread
+//! wakeup uses the classic self-pipe pattern: [`Poller::waker`] returns
+//! a cloneable [`Waker`] whose `wake()` is one nonblocking byte write,
+//! safe from any thread or panic context.
+
+use std::io;
+use std::os::raw::{c_int, c_short, c_void};
+use std::os::unix::io::RawFd;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::util::error::Result;
+
+/// Raw syscall declarations and ABI constants. Everything here matches
+/// the stable kernel/libc ABI on the supported Unix targets; the struct
+/// layouts are the ones libc headers pin (`epoll_event` is packed on
+/// x86-64 only, exactly as in `<sys/epoll.h>`).
+mod sys {
+    use super::{c_int, c_short, c_void};
+
+    #[cfg(target_os = "linux")]
+    pub type NfdsT = std::os::raw::c_ulong;
+    #[cfg(not(target_os = "linux"))]
+    pub type NfdsT = std::os::raw::c_uint;
+
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct PollFd {
+        pub fd: c_int,
+        pub events: c_short,
+        pub revents: c_short,
+    }
+
+    pub const EPOLL_CLOEXEC: c_int = 0o2000000;
+    pub const EPOLL_CTL_ADD: c_int = 1;
+    pub const EPOLL_CTL_DEL: c_int = 2;
+    pub const EPOLL_CTL_MOD: c_int = 3;
+    pub const EPOLLIN: u32 = 0x001;
+    pub const EPOLLOUT: u32 = 0x004;
+    pub const EPOLLERR: u32 = 0x008;
+    pub const EPOLLHUP: u32 = 0x010;
+
+    pub const POLLIN: c_short = 0x001;
+    pub const POLLOUT: c_short = 0x004;
+    pub const POLLERR: c_short = 0x008;
+    pub const POLLHUP: c_short = 0x010;
+    pub const POLLNVAL: c_short = 0x020;
+
+    pub const F_GETFL: c_int = 3;
+    pub const F_SETFL: c_int = 4;
+    #[cfg(target_os = "linux")]
+    pub const O_NONBLOCK: c_int = 0o4000;
+    #[cfg(not(target_os = "linux"))]
+    pub const O_NONBLOCK: c_int = 0x0004;
+
+    extern "C" {
+        #[cfg(target_os = "linux")]
+        pub fn epoll_create1(flags: c_int) -> c_int;
+        #[cfg(target_os = "linux")]
+        pub fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+        #[cfg(target_os = "linux")]
+        pub fn epoll_wait(
+            epfd: c_int,
+            events: *mut EpollEvent,
+            maxevents: c_int,
+            timeout: c_int,
+        ) -> c_int;
+        pub fn poll(fds: *mut PollFd, nfds: NfdsT, timeout: c_int) -> c_int;
+        pub fn pipe(fds: *mut c_int) -> c_int;
+        pub fn fcntl(fd: c_int, cmd: c_int, arg: c_int) -> c_int;
+        pub fn close(fd: c_int) -> c_int;
+        pub fn read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
+        pub fn write(fd: c_int, buf: *const c_void, count: usize) -> isize;
+    }
+}
+
+/// What a registration wants to hear about. [`Interest::NONE`] parks an
+/// fd without deregistering it (errors and hangups still report).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Interest {
+    /// Report when the fd is readable (or at EOF).
+    pub read: bool,
+    /// Report when the fd accepts writes without blocking.
+    pub write: bool,
+}
+
+impl Interest {
+    /// Neither direction: registered but dormant.
+    pub const NONE: Interest = Interest { read: false, write: false };
+    /// Readable only.
+    pub const READ: Interest = Interest { read: true, write: false };
+    /// Writable only.
+    pub const WRITE: Interest = Interest { read: false, write: true };
+    /// Both directions.
+    pub const BOTH: Interest = Interest { read: true, write: true };
+
+    fn epoll_bits(self) -> u32 {
+        let mut bits = 0;
+        if self.read {
+            bits |= sys::EPOLLIN;
+        }
+        if self.write {
+            bits |= sys::EPOLLOUT;
+        }
+        bits
+    }
+
+    fn poll_bits(self) -> c_short {
+        let mut bits = 0;
+        if self.read {
+            bits |= sys::POLLIN;
+        }
+        if self.write {
+            bits |= sys::POLLOUT;
+        }
+        bits
+    }
+}
+
+/// One readiness report: the registration token plus which conditions
+/// fired. `error` covers error/hangup/invalid-fd classes; consumers
+/// should attempt a read (which surfaces the precise `io::Error` or a
+/// clean EOF) rather than interpret it further.
+#[derive(Debug, Clone, Copy)]
+pub struct PollEvent {
+    /// The token the fd was registered under.
+    pub token: u64,
+    /// Readable (includes EOF and, for listeners, pending accepts).
+    pub readable: bool,
+    /// Writable without blocking.
+    pub writable: bool,
+    /// Error or hangup reported by the kernel.
+    pub error: bool,
+}
+
+struct Entry {
+    fd: RawFd,
+    token: u64,
+    interest: Interest,
+}
+
+enum Backend {
+    #[cfg(target_os = "linux")]
+    Epoll {
+        epfd: RawFd,
+        scratch: Vec<sys::EpollEvent>,
+    },
+    Poll { entries: Vec<Entry> },
+}
+
+/// A readiness poller over one of the two backends (see the module
+/// docs). Owned by a single thread — the reactor; other threads reach
+/// it only through a [`Waker`].
+pub struct Poller {
+    backend: Backend,
+    waker_rfd: Option<RawFd>,
+}
+
+fn os_err(what: &str) -> crate::util::error::Error {
+    let e = io::Error::last_os_error();
+    crate::util::error::Error::Io(io::Error::new(e.kind(), format!("{what}: {e}")))
+}
+
+/// Set `O_NONBLOCK` on a raw fd (used for the self-pipe; sockets go
+/// through std's `set_nonblocking`).
+fn set_nonblocking_fd(fd: RawFd) -> Result<()> {
+    // Safety: fcntl on an owned, open fd with stable cmd constants.
+    let flags = unsafe { sys::fcntl(fd, sys::F_GETFL, 0) };
+    if flags < 0 {
+        return Err(os_err("fcntl(F_GETFL)"));
+    }
+    let rc = unsafe { sys::fcntl(fd, sys::F_SETFL, flags | sys::O_NONBLOCK) };
+    if rc < 0 {
+        return Err(os_err("fcntl(F_SETFL)"));
+    }
+    Ok(())
+}
+
+impl Poller {
+    /// The platform default backend: epoll on Linux, `poll(2)`
+    /// elsewhere. `SMARTPQ_FORCE_POLL=1` forces the fallback anywhere
+    /// (CI uses this to keep the portable path tested on Linux).
+    pub fn new() -> Result<Poller> {
+        if std::env::var("SMARTPQ_FORCE_POLL").as_deref() == Ok("1") {
+            return Ok(Poller::with_poll_backend());
+        }
+        Poller::platform_default()
+    }
+
+    #[cfg(target_os = "linux")]
+    fn platform_default() -> Result<Poller> {
+        // Safety: epoll_create1 takes a flags word and returns an fd.
+        let epfd = unsafe { sys::epoll_create1(sys::EPOLL_CLOEXEC) };
+        if epfd < 0 {
+            return Err(os_err("epoll_create1"));
+        }
+        Ok(Poller {
+            backend: Backend::Epoll {
+                epfd,
+                scratch: vec![sys::EpollEvent { events: 0, data: 0 }; 1024],
+            },
+            waker_rfd: None,
+        })
+    }
+
+    #[cfg(not(target_os = "linux"))]
+    fn platform_default() -> Result<Poller> {
+        Ok(Poller::with_poll_backend())
+    }
+
+    /// The portable `poll(2)` backend, explicitly.
+    pub fn with_poll_backend() -> Poller {
+        Poller {
+            backend: Backend::Poll { entries: Vec::new() },
+            waker_rfd: None,
+        }
+    }
+
+    /// True when this poller runs on the `poll(2)` fallback.
+    pub fn is_poll_fallback(&self) -> bool {
+        matches!(self.backend, Backend::Poll { .. })
+    }
+
+    #[cfg(target_os = "linux")]
+    fn ep_ctl(epfd: RawFd, op: c_int, fd: RawFd, token: u64, interest: Interest) -> Result<()> {
+        let mut ev = sys::EpollEvent {
+            events: interest.epoll_bits(),
+            data: token,
+        };
+        // Safety: epfd/fd are open fds; `ev` outlives the call (the
+        // kernel copies it). DEL ignores the event but a non-null
+        // pointer keeps pre-2.6.9 kernels happy.
+        let rc = unsafe { sys::epoll_ctl(epfd, op, fd, &mut ev) };
+        if rc < 0 {
+            return Err(os_err("epoll_ctl"));
+        }
+        Ok(())
+    }
+
+    /// Register `fd` under `token` with the given interest. The fd must
+    /// stay open until [`Poller::deregister`] (or, for epoll, until the
+    /// fd itself closes).
+    pub fn register(&mut self, fd: RawFd, token: u64, interest: Interest) -> Result<()> {
+        match &mut self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Epoll { epfd, .. } => {
+                Poller::ep_ctl(*epfd, sys::EPOLL_CTL_ADD, fd, token, interest)
+            }
+            Backend::Poll { entries } => {
+                if entries.iter().any(|e| e.fd == fd) {
+                    return Err(crate::util::error::Error::Invariant(format!(
+                        "fd {fd} registered twice with the poll backend"
+                    )));
+                }
+                entries.push(Entry { fd, token, interest });
+                Ok(())
+            }
+        }
+    }
+
+    /// Change the interest (and token) of a registered fd.
+    pub fn modify(&mut self, fd: RawFd, token: u64, interest: Interest) -> Result<()> {
+        match &mut self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Epoll { epfd, .. } => {
+                Poller::ep_ctl(*epfd, sys::EPOLL_CTL_MOD, fd, token, interest)
+            }
+            Backend::Poll { entries } => match entries.iter_mut().find(|e| e.fd == fd) {
+                Some(e) => {
+                    e.token = token;
+                    e.interest = interest;
+                    Ok(())
+                }
+                None => Err(crate::util::error::Error::Invariant(format!(
+                    "fd {fd} not registered with the poll backend"
+                ))),
+            },
+        }
+    }
+
+    /// Remove a registration. Required for the `poll(2)` backend before
+    /// the fd closes (a closed fd in the set reports `POLLNVAL`); for
+    /// epoll it is optional but harmless.
+    pub fn deregister(&mut self, fd: RawFd) -> Result<()> {
+        match &mut self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Epoll { epfd, .. } => {
+                Poller::ep_ctl(*epfd, sys::EPOLL_CTL_DEL, fd, 0, Interest::NONE)
+            }
+            Backend::Poll { entries } => {
+                entries.retain(|e| e.fd != fd);
+                Ok(())
+            }
+        }
+    }
+
+    /// Block until at least one registered fd is ready or the timeout
+    /// elapses (`None` = wait forever), filling `out` with the ready
+    /// set. A signal interruption returns an empty set, not an error —
+    /// callers loop anyway.
+    pub fn wait(&mut self, out: &mut Vec<PollEvent>, timeout: Option<Duration>) -> Result<()> {
+        out.clear();
+        let ms: c_int = match timeout {
+            Some(d) => d.as_millis().min(i32::MAX as u128) as c_int,
+            None => -1,
+        };
+        match &mut self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Epoll { epfd, scratch } => {
+                // Safety: scratch is a live, writable EpollEvent buffer
+                // of the declared length.
+                let rc = unsafe {
+                    sys::epoll_wait(*epfd, scratch.as_mut_ptr(), scratch.len() as c_int, ms)
+                };
+                if rc < 0 {
+                    let e = io::Error::last_os_error();
+                    if e.kind() == io::ErrorKind::Interrupted {
+                        return Ok(());
+                    }
+                    return Err(os_err("epoll_wait"));
+                }
+                for ev in scratch.iter().take(rc as usize) {
+                    let bits = ev.events;
+                    let token = ev.data;
+                    out.push(PollEvent {
+                        token,
+                        readable: bits & (sys::EPOLLIN | sys::EPOLLHUP) != 0,
+                        writable: bits & sys::EPOLLOUT != 0,
+                        error: bits & (sys::EPOLLERR | sys::EPOLLHUP) != 0,
+                    });
+                }
+                Ok(())
+            }
+            Backend::Poll { entries } => {
+                let mut fds: Vec<sys::PollFd> = entries
+                    .iter()
+                    .map(|e| sys::PollFd {
+                        fd: e.fd,
+                        events: e.interest.poll_bits(),
+                        revents: 0,
+                    })
+                    .collect();
+                // Safety: fds is a live, writable pollfd array of the
+                // declared length (poll with 0 fds just sleeps).
+                let rc = unsafe { sys::poll(fds.as_mut_ptr(), fds.len() as sys::NfdsT, ms) };
+                if rc < 0 {
+                    let e = io::Error::last_os_error();
+                    if e.kind() == io::ErrorKind::Interrupted {
+                        return Ok(());
+                    }
+                    return Err(os_err("poll"));
+                }
+                for (f, e) in fds.iter().zip(entries.iter()) {
+                    if f.revents == 0 {
+                        continue;
+                    }
+                    out.push(PollEvent {
+                        token: e.token,
+                        readable: f.revents & (sys::POLLIN | sys::POLLHUP) != 0,
+                        writable: f.revents & sys::POLLOUT != 0,
+                        error: f.revents & (sys::POLLERR | sys::POLLHUP | sys::POLLNVAL) != 0,
+                    });
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Install a self-pipe waker: the read end registers under `token`
+    /// (drain it with [`Poller::drain_waker`] when that token reports);
+    /// the returned [`Waker`] owns the write end and may be cloned into
+    /// any thread. One waker per poller.
+    pub fn waker(&mut self, token: u64) -> Result<Waker> {
+        let mut fds: [c_int; 2] = [0; 2];
+        // Safety: pipe fills the two-element fd array on success.
+        if unsafe { sys::pipe(fds.as_mut_ptr()) } != 0 {
+            return Err(os_err("pipe"));
+        }
+        let (rfd, wfd) = (fds[0], fds[1]);
+        let cleanup = |e| {
+            // Safety: closing the fds this function just created.
+            unsafe {
+                sys::close(rfd);
+                sys::close(wfd);
+            }
+            e
+        };
+        set_nonblocking_fd(rfd).map_err(cleanup)?;
+        set_nonblocking_fd(wfd).map_err(cleanup)?;
+        self.register(rfd, token, Interest::READ).map_err(cleanup)?;
+        self.waker_rfd = Some(rfd);
+        Ok(Waker {
+            inner: Arc::new(WakerFd(wfd)),
+        })
+    }
+
+    /// Consume pending waker bytes so a level-triggered poller stops
+    /// reporting the waker token.
+    pub fn drain_waker(&mut self) {
+        if let Some(fd) = self.waker_rfd {
+            let mut buf = [0u8; 64];
+            loop {
+                // Safety: reading into a live local buffer.
+                let n = unsafe { sys::read(fd, buf.as_mut_ptr() as *mut c_void, buf.len()) };
+                if n < buf.len() as isize {
+                    break; // drained (short read) or EAGAIN/EOF
+                }
+            }
+        }
+    }
+}
+
+impl Drop for Poller {
+    fn drop(&mut self) {
+        #[cfg(target_os = "linux")]
+        if let Backend::Epoll { epfd, .. } = &self.backend {
+            // Safety: closing the epoll fd this poller created.
+            unsafe { sys::close(*epfd) };
+        }
+        if let Some(fd) = self.waker_rfd {
+            // Safety: closing the pipe read end this poller created.
+            unsafe { sys::close(fd) };
+        }
+    }
+}
+
+struct WakerFd(RawFd);
+
+impl Drop for WakerFd {
+    fn drop(&mut self) {
+        // Safety: closing the pipe write end this waker owns.
+        unsafe { sys::close(self.0) };
+    }
+}
+
+/// Cross-thread wakeup handle for a [`Poller`] (self-pipe write end).
+/// Clones share the pipe; `wake()` never blocks — a full pipe means a
+/// wakeup is already pending, which is all a waker promises.
+#[derive(Clone)]
+pub struct Waker {
+    inner: Arc<WakerFd>,
+}
+
+impl Waker {
+    /// Make the poller's next (or current) wait return promptly.
+    pub fn wake(&self) {
+        let b = [1u8];
+        // Safety: one nonblocking byte write to an owned pipe fd;
+        // EAGAIN (pipe full) is exactly the "already woken" case.
+        let _ = unsafe { sys::write(self.inner.0, b.as_ptr() as *const c_void, 1) };
+    }
+}
+
+/// Best-effort raise of the process `RLIMIT_NOFILE` soft limit toward
+/// `want` (never past the hard limit). Returns the soft limit after the
+/// attempt, or 0 when it cannot be read. The reactor serves thousands
+/// of connections on hosts whose default soft limit is 1024; callers
+/// holding large fd populations (the serve CLI, the idle-horde test)
+/// bump it first.
+#[cfg(target_os = "linux")]
+pub fn raise_nofile_limit(want: u64) -> u64 {
+    #[repr(C)]
+    struct RLimit {
+        cur: u64,
+        max: u64,
+    }
+    extern "C" {
+        fn getrlimit(resource: c_int, rlim: *mut RLimit) -> c_int;
+        fn setrlimit(resource: c_int, rlim: *const RLimit) -> c_int;
+    }
+    const RLIMIT_NOFILE: c_int = 7;
+    let mut cur = RLimit { cur: 0, max: 0 };
+    // Safety: getrlimit fills the struct on success.
+    if unsafe { getrlimit(RLIMIT_NOFILE, &mut cur) } != 0 {
+        return 0;
+    }
+    if cur.cur >= want {
+        return cur.cur;
+    }
+    let wanted = RLimit {
+        cur: want.min(cur.max),
+        max: cur.max,
+    };
+    // Safety: setrlimit reads the struct; lowering below the hard limit
+    // is always permitted.
+    if unsafe { setrlimit(RLIMIT_NOFILE, &wanted) } == 0 {
+        wanted.cur
+    } else {
+        cur.cur
+    }
+}
+
+/// Non-Linux stub: reports 0 ("unknown"), callers treat it as advisory.
+#[cfg(not(target_os = "linux"))]
+pub fn raise_nofile_limit(_want: u64) -> u64 {
+    0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::os::unix::io::AsRawFd;
+    use std::time::Instant;
+
+    /// A connected loopback socket pair.
+    fn pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let a = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (b, _) = listener.accept().unwrap();
+        (a, b)
+    }
+
+    fn both_backends() -> Vec<Poller> {
+        vec![Poller::new().unwrap(), Poller::with_poll_backend()]
+    }
+
+    /// Wait until `token` reports (readable or writable), with a bound.
+    fn wait_for(p: &mut Poller, token: u64) -> PollEvent {
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let mut events = Vec::new();
+        while Instant::now() < deadline {
+            p.wait(&mut events, Some(Duration::from_millis(100))).unwrap();
+            if let Some(ev) = events.iter().find(|e| e.token == token) {
+                return *ev;
+            }
+        }
+        panic!("token {token} never reported");
+    }
+
+    #[test]
+    fn readable_events_carry_the_registration_token() {
+        for mut p in both_backends() {
+            let (mut a, b) = pair();
+            p.register(b.as_raw_fd(), 7, Interest::READ).unwrap();
+            a.write_all(b"hi").unwrap();
+            let ev = wait_for(&mut p, 7);
+            assert!(ev.readable);
+            p.deregister(b.as_raw_fd()).unwrap();
+        }
+    }
+
+    #[test]
+    fn writable_interest_reports_on_an_open_socket() {
+        for mut p in both_backends() {
+            let (a, _b) = pair();
+            p.register(a.as_raw_fd(), 9, Interest::WRITE).unwrap();
+            let ev = wait_for(&mut p, 9);
+            assert!(ev.writable);
+            p.deregister(a.as_raw_fd()).unwrap();
+        }
+    }
+
+    #[test]
+    fn parked_interest_reports_nothing_for_plain_data() {
+        for mut p in both_backends() {
+            let (mut a, b) = pair();
+            p.register(b.as_raw_fd(), 3, Interest::NONE).unwrap();
+            a.write_all(b"quiet").unwrap();
+            let mut events = Vec::new();
+            p.wait(&mut events, Some(Duration::from_millis(150))).unwrap();
+            assert!(
+                events.iter().all(|e| e.token != 3),
+                "parked fd reported: {events:?}"
+            );
+            // Re-arming the interest surfaces the buffered bytes
+            // (level-triggered semantics).
+            p.modify(b.as_raw_fd(), 3, Interest::READ).unwrap();
+            let ev = wait_for(&mut p, 3);
+            assert!(ev.readable);
+            p.deregister(b.as_raw_fd()).unwrap();
+        }
+    }
+
+    #[test]
+    fn eof_reports_as_readable() {
+        for mut p in both_backends() {
+            let (a, mut b) = pair();
+            p.register(b.as_raw_fd(), 11, Interest::READ).unwrap();
+            drop(a);
+            let ev = wait_for(&mut p, 11);
+            assert!(ev.readable);
+            let mut buf = [0u8; 8];
+            assert_eq!(b.read(&mut buf).unwrap(), 0, "EOF expected");
+            p.deregister(b.as_raw_fd()).unwrap();
+        }
+    }
+
+    #[test]
+    fn waker_wakes_a_blocked_wait_from_another_thread() {
+        for mut p in both_backends() {
+            let waker = p.waker(1).unwrap();
+            let t = std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(50));
+                waker.wake();
+                waker.wake(); // double-wake coalesces harmlessly
+            });
+            let ev = wait_for(&mut p, 1);
+            assert!(ev.readable);
+            p.drain_waker();
+            t.join().unwrap();
+            // Drained: the waker token goes quiet again.
+            let mut events = Vec::new();
+            p.wait(&mut events, Some(Duration::from_millis(100))).unwrap();
+            assert!(events.iter().all(|e| e.token != 1), "{events:?}");
+        }
+    }
+
+    #[test]
+    fn deregistered_fds_stop_reporting() {
+        for mut p in both_backends() {
+            let (mut a, b) = pair();
+            p.register(b.as_raw_fd(), 5, Interest::READ).unwrap();
+            a.write_all(b"x").unwrap();
+            wait_for(&mut p, 5);
+            p.deregister(b.as_raw_fd()).unwrap();
+            a.write_all(b"y").unwrap();
+            let mut events = Vec::new();
+            p.wait(&mut events, Some(Duration::from_millis(100))).unwrap();
+            assert!(events.iter().all(|e| e.token != 5), "{events:?}");
+        }
+    }
+
+    #[test]
+    fn poll_fallback_rejects_double_registration() {
+        let mut p = Poller::with_poll_backend();
+        assert!(p.is_poll_fallback());
+        let (_a, b) = pair();
+        p.register(b.as_raw_fd(), 1, Interest::READ).unwrap();
+        assert!(p.register(b.as_raw_fd(), 2, Interest::READ).is_err());
+        assert!(p.modify(b.as_raw_fd(), 2, Interest::BOTH).is_ok());
+        assert!(p.modify(12345, 0, Interest::READ).is_err());
+    }
+
+    #[test]
+    fn env_force_is_honored_by_new() {
+        // Only observable on Linux (elsewhere new() is poll anyway);
+        // the env var is process-global, so set and restore carefully.
+        std::env::set_var("SMARTPQ_FORCE_POLL", "1");
+        let p = Poller::new().unwrap();
+        std::env::remove_var("SMARTPQ_FORCE_POLL");
+        assert!(p.is_poll_fallback());
+    }
+
+    #[test]
+    fn nofile_limit_raise_is_best_effort_monotone() {
+        let now = raise_nofile_limit(1);
+        if cfg!(target_os = "linux") {
+            assert!(now >= 1);
+            // Asking again for no more than we have changes nothing.
+            assert_eq!(raise_nofile_limit(now), now);
+        }
+    }
+}

@@ -150,7 +150,7 @@ pub struct Zipf {
 
 impl Zipf {
     /// Build a sampler over ranks `1..=n` with exponent `s > 0`.
-    /// `n` is clamped to [`ZIPF_MAX_TABLE`] (see the constant's docs).
+    /// `n` is clamped to `ZIPF_MAX_TABLE` (see the constant's docs).
     pub fn new(n: u64, s: f64) -> Self {
         assert!(n > 0, "Zipf domain must be non-empty");
         assert!(s > 0.0 && s.is_finite(), "Zipf exponent must be positive");

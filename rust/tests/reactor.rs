@@ -1,0 +1,182 @@
+//! Reactor-specific integration tests: a byte-dribbling (slow-loris)
+//! client must not pin a worker, and hundreds of idle connections must
+//! coexist with active clients on a fixed thread budget — the two
+//! properties the thread-per-connection server could not offer.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use smartpq::service::proto::{self, Request, Response};
+use smartpq::service::{ClientConfig, PqService, ServiceClient, ServiceConfig};
+use smartpq::util::poll::raise_nofile_limit;
+
+fn start(max_conns: usize, workers: usize) -> PqService {
+    PqService::start(ServiceConfig {
+        backend: "lotan_shavit".to_string(),
+        shards: 2,
+        key_span: 100_000,
+        max_conns,
+        workers,
+        ..Default::default()
+    })
+    .expect("service starts")
+}
+
+/// A client with bounded round trips, so a pinned worker fails the test
+/// instead of hanging it.
+fn impatient(addr: &str) -> ServiceClient {
+    ServiceClient::connect_with(
+        addr,
+        ClientConfig {
+            connect_timeout: Some(Duration::from_secs(5)),
+            io_timeout: Some(Duration::from_secs(5)),
+            ..Default::default()
+        },
+    )
+    .expect("client connects")
+}
+
+/// A slow-loris client dribbles half a frame one byte at a time and
+/// then stalls with the connection open. Under the reactor an
+/// incomplete frame costs a buffer, never a thread — so a well-behaved
+/// client sharing a *single-worker* service must still complete a full
+/// round-trip workload, and the dribbler must still be answered once
+/// it finally finishes its frame.
+#[test]
+fn slow_loris_does_not_pin_the_only_worker() {
+    let svc = start(16, 1); // one worker: any pinning starves the other client
+    let addr = svc.addr().to_string();
+
+    let mut frame = Vec::new();
+    proto::encode_request(&Request::Insert { key: 7, value: 70 }, &mut frame);
+    let mut loris = TcpStream::connect(addr.as_str()).unwrap();
+    loris.set_nodelay(true).unwrap();
+    for &b in &frame[..frame.len() / 2] {
+        loris.write_all(&[b]).unwrap();
+    }
+    // Let the server ingest the dribble before the real client starts.
+    std::thread::sleep(Duration::from_millis(50));
+
+    let mut c = impatient(addr.as_str());
+    for i in 0..50u64 {
+        let key = 1_000 + i;
+        assert!(c.insert(key, i).unwrap(), "round {i} blocked by the loris");
+        assert_eq!(c.delete_min().unwrap(), Some((key, i)), "round {i}");
+    }
+
+    // The loris completes its frame and is still served.
+    for &b in &frame[frame.len() / 2..] {
+        loris.write_all(&[b]).unwrap();
+    }
+    loris
+        .set_read_timeout(Some(Duration::from_secs(5)))
+        .unwrap();
+    let mut buf = Vec::new();
+    let mut chunk = [0u8; 64];
+    let resp = loop {
+        let n = loris.read(&mut chunk).unwrap();
+        assert!(n > 0, "server closed on the completed frame");
+        buf.extend_from_slice(&chunk[..n]);
+        if let Some((resp, _)) = proto::decode_response(&buf).unwrap() {
+            break resp;
+        }
+    };
+    assert_eq!(resp, Response::Insert(true));
+    assert_eq!(c.delete_min().unwrap(), Some((7, 70)));
+    c.shutdown().unwrap();
+    svc.wait();
+}
+
+/// `Threads:` from /proc/self/status — the whole test process's thread
+/// population (Linux only; `None` elsewhere).
+fn process_threads() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    status
+        .lines()
+        .find_map(|l| l.strip_prefix("Threads:"))
+        .and_then(|v| v.trim().parse().ok())
+}
+
+/// Hundreds of idle connections park on the reactor while four active
+/// clients sustain a differential workload. The service must serve
+/// everyone from its fixed `--workers` pool: conservation holds via
+/// Stats, and the process thread count never scales with connections.
+#[test]
+fn idle_horde_coexists_with_active_clients_on_four_workers() {
+    // ~2x fds per idle conn (client + server end); make room first.
+    let limit = raise_nofile_limit(4_096);
+    let horde_n: usize = if limit == 0 || limit >= 1_500 { 500 } else { 120 };
+
+    let threads_before = process_threads();
+    let svc = start(2_048, 4);
+    assert_eq!(svc.worker_count(), 4);
+    let addr = svc.addr().to_string();
+
+    let horde: Vec<TcpStream> = (0..horde_n)
+        .map(|i| {
+            TcpStream::connect(addr.as_str())
+                .unwrap_or_else(|e| panic!("idle connection {i} refused: {e}"))
+        })
+        .collect();
+
+    // Active clients do real work through the same reactor.
+    let n_clients = 4u64;
+    let ops = 200u64;
+    let results: Vec<(u64, u64)> = std::thread::scope(|s| {
+        let workers: Vec<_> = (0..n_clients)
+            .map(|t| {
+                let addr = addr.clone();
+                s.spawn(move || {
+                    let mut c = impatient(addr.as_str());
+                    let mut inserted = 0u64;
+                    let mut popped = 0u64;
+                    for i in 0..ops {
+                        let key = 1 + t + n_clients * i;
+                        if c.insert(key, key ^ 0xF00D).unwrap() {
+                            inserted += 1;
+                        }
+                        if i % 2 == 1 && c.delete_min().unwrap().is_some() {
+                            popped += 1;
+                        }
+                    }
+                    (inserted, popped)
+                })
+            })
+            .collect();
+        workers.into_iter().map(|w| w.join().unwrap()).collect()
+    });
+    let inserted: u64 = results.iter().map(|&(i, _)| i).sum();
+    let popped: u64 = results.iter().map(|&(_, p)| p).sum();
+    assert_eq!(inserted, n_clients * ops, "unique keys must all insert");
+
+    // Conservation via the Stats frame, horde still connected.
+    let mut c = impatient(addr.as_str());
+    let stats = c.stats().unwrap();
+    let resident: u64 = stats.shard_lens.iter().sum();
+    assert_eq!(stats.inserted, inserted, "{stats:?}");
+    assert_eq!(stats.popped, popped, "{stats:?}");
+    assert_eq!(
+        stats.inserted as i64 - stats.popped as i64 - resident as i64,
+        0,
+        "conservation violated with the horde attached: {stats:?}"
+    );
+    assert_eq!(stats.poisoned, 0, "{stats:?}");
+
+    // The thread population must not scale with connections: reactor +
+    // monitor + 4 workers + 1 transient client thread ≈ 7; the margin
+    // below is far under `horde_n` yet generous against test-harness
+    // noise.
+    if let (Some(before), Some(now)) = (threads_before, process_threads()) {
+        let grown = now.saturating_sub(before);
+        assert!(
+            grown <= 16,
+            "thread count grew by {grown} with {horde_n} idle connections \
+             (before={before}, now={now}) — connections are spawning threads"
+        );
+    }
+
+    drop(horde);
+    c.shutdown().unwrap();
+    svc.wait();
+}
