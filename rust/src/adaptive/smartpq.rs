@@ -128,10 +128,12 @@ impl<B: ConcurrentPQ + HasStats + 'static> SmartPQ<B> {
     ) -> ModeClass {
         let n_decisions = decisions.fetch_add(1, Ordering::Relaxed) + 1;
         let class = oracle.predict(features);
+        crate::metrics::classifier_decisions().inc();
         // Paper Fig. 8 decisionTree(): neutral leaves `algo` untouched.
         if class != ModeClass::Neutral {
             let new = class as u8;
             let old = algo.swap(new, Ordering::AcqRel);
+            crate::metrics::classifier_mode().set(i64::from(new));
             crate::trace::instant(
                 crate::trace::EventKind::ModeDecision,
                 old as u64,
@@ -140,6 +142,7 @@ impl<B: ConcurrentPQ + HasStats + 'static> SmartPQ<B> {
             );
             if old != new {
                 switches.fetch_add(1, Ordering::Relaxed);
+                crate::metrics::classifier_switches().inc();
                 crate::trace::instant(
                     crate::trace::EventKind::ModeSwitch,
                     old as u64,
@@ -155,6 +158,7 @@ impl<B: ConcurrentPQ + HasStats + 'static> SmartPQ<B> {
             }
         } else {
             let cur = algo.load(Ordering::Relaxed) as u64;
+            crate::metrics::classifier_mode().set(cur as i64);
             crate::trace::instant(crate::trace::EventKind::ModeDecision, cur, cur, 0);
         }
         class

@@ -551,6 +551,11 @@ impl<B: ConcurrentPQ> NuddleServer<B> {
             n_elim, // insert→deleteMin pairs matched without touching the base
             n_rejected,
         );
+        if crate::metrics::enabled() {
+            crate::metrics::combine_sweeps().inc();
+            crate::metrics::combine_batch().record(n_pend as u64);
+            crate::metrics::combine_eliminated().add(n_elim);
+        }
         n_pend + n_rejected as usize
     }
 

@@ -47,7 +47,15 @@
 //!   (`inserted - popped - resident == 0`, recomputed, not trusted),
 //!   kept every handler thread alive (`poisoned == 0`) and drained
 //!   cleanly; the error-rate and recovery-time ceilings gate only on
-//!   >= 8-way hosts (small runners starve the backoff timers).
+//!   >= 8-way hosts (small runners starve the backoff timers). The v5
+//!   schema adds the **metrics** object (throughput with the metrics
+//!   plane inactive vs active plus the flight recorder sampling over
+//!   the identical mix), gating the PR-10 claim the same way as the
+//!   trace object: samples were taken, `dropped == 0` (hard on every
+//!   host — an overwritten sample means the ring is undersized for the
+//!   smoke window), the recorded `overhead_pct` matches the
+//!   throughputs, and on >= 8-way hosts the overhead is < 2%
+//!   (advisory below).
 //!
 //! Placeholder artifacts (the committed schema stubs) fail loudly: the
 //! point of the gate is that only measured output passes.
@@ -77,6 +85,15 @@ pub const MAX_TRACE_OVERHEAD_PCT: f64 = 2.0;
 /// (on tiny hosts the loadgen and service threads serialize, so the
 /// traced/untraced difference is scheduling noise).
 pub const TRACE_GATE_MIN_PARALLELISM: u64 = 8;
+
+/// Maximum metrics-plane throughput overhead (percent) — the PR-10
+/// acceptance target, enforced at [`METRICS_GATE_MIN_PARALLELISM`].
+pub const MAX_METRICS_OVERHEAD_PCT: f64 = 2.0;
+
+/// Host parallelism below which the metrics overhead gate is advisory
+/// (same rationale as the trace gate: the metered/bare difference on a
+/// tiny host is scheduling noise, not instrument cost).
+pub const METRICS_GATE_MIN_PARALLELISM: u64 = 8;
 
 /// Host parallelism below which the chaos error-rate and recovery-time
 /// ceilings are advisory. The *conservation* and *liveness* checks of
@@ -651,7 +668,72 @@ fn check_service(v: &Json, path: &str, out: &mut CheckOutcome) -> Result<()> {
              captured, 0 dropped (small {host}-way host)"
         ));
     }
+    check_metrics(v, path, host, out)?;
     check_chaos(v, path, host, out)
+}
+
+/// The metrics-plane overhead measurement: the registry must be
+/// effectively free while active, and the flight recorder lossless in
+/// the smoke configuration.
+fn check_metrics(v: &Json, path: &str, host: u64, out: &mut CheckOutcome) -> Result<()> {
+    let metrics = req(v, "metrics", path)?;
+    let bare = req_f64(metrics, "bare_mops", path)?;
+    let metered = req_f64(metrics, "metered_mops", path)?;
+    if bare <= 0.0 || metered <= 0.0 {
+        return Err(schema_err(path, "metrics: throughputs must be > 0"));
+    }
+    let samples = req_u64(metrics, "samples", path)?;
+    if samples == 0 {
+        return Err(schema_err(
+            path,
+            "metrics: the flight recorder took no samples — the sampler never ran",
+        ));
+    }
+    // Lossless capture is a correctness claim, hard on every host: the
+    // bounded ring must cover the metered window without overwrites.
+    let dropped = req_u64(metrics, "dropped", path)?;
+    if dropped > 0 {
+        return Err(Error::Invariant(format!(
+            "{path}: metrics: the flight recorder overwrote {dropped} sample(s) in the smoke \
+             configuration — the ring capacity must cover the metered run"
+        )));
+    }
+    let overhead = req_f64(metrics, "overhead_pct", path)?;
+    let expect = (bare - metered) / bare * 100.0;
+    // Absolute tolerance (percentage points), same reasoning as the
+    // trace gate: a relative check blows up near zero.
+    if (overhead - expect).abs() > 0.05 {
+        return Err(schema_err(
+            path,
+            &format!(
+                "metrics: recorded overhead_pct {overhead:.4} != \
+                 (bare-metered)/bare {expect:.4}"
+            ),
+        ));
+    }
+    if host >= METRICS_GATE_MIN_PARALLELISM {
+        if overhead >= MAX_METRICS_OVERHEAD_PCT {
+            return Err(Error::Invariant(format!(
+                "{path}: metrics overhead {overhead:.2}% >= {MAX_METRICS_OVERHEAD_PCT}% \
+                 on a {host}-way host"
+            )));
+        }
+        out.facts.push(format!(
+            "metrics: overhead {overhead:.2}% < {MAX_METRICS_OVERHEAD_PCT}%, {samples} \
+             flight-recorder sample(s), 0 dropped ({host}-way host)"
+        ));
+    } else if overhead >= MAX_METRICS_OVERHEAD_PCT {
+        out.warnings.push(format!(
+            "metrics: overhead {overhead:.2}% >= {MAX_METRICS_OVERHEAD_PCT}%, but the \
+             {host}-way host serializes the loadgen and service threads — advisory only"
+        ));
+    } else {
+        out.facts.push(format!(
+            "metrics: overhead {overhead:.2}% < {MAX_METRICS_OVERHEAD_PCT}%, {samples} \
+             flight-recorder sample(s), 0 dropped (small {host}-way host)"
+        ));
+    }
+    Ok(())
 }
 
 fn check_chaos(v: &Json, path: &str, host: u64, out: &mut CheckOutcome) -> Result<()> {
@@ -976,6 +1058,35 @@ mod tests {
         service_chaos_with(true, 40, 400, 0, true)
     }
 
+    fn service_metrics(bare: f64, metered: f64, samples: u64, dropped: u64) -> String {
+        format!(
+            "{{\"bare_mops\": {bare:.6}, \"metered_mops\": {metered:.6}, \
+             \"overhead_pct\": {:.6}, \"samples\": {samples}, \"dropped\": {dropped}}}",
+            (bare - metered) / bare * 100.0
+        )
+    }
+
+    fn service_metrics_ok() -> String {
+        service_metrics(0.05, 0.0499, 12, 0)
+    }
+
+    fn service_json_v5(
+        sweeps: &[String],
+        skew: &str,
+        trace: &str,
+        metrics: &str,
+        chaos: &str,
+        host: u64,
+    ) -> String {
+        format!(
+            "{{\"generated_by\": \"smartpq bench --figure service\", \"placeholder\": false, \
+             \"quick\": true, \"host_parallelism\": {host}, \"key_span\": 1048576, \
+             \"skew\": {skew}, \"trace\": {trace}, \"metrics\": {metrics}, \
+             \"chaos\": {chaos}, \"sweeps\": [{}]}}",
+            sweeps.join(", ")
+        )
+    }
+
     fn service_json_v4(
         sweeps: &[String],
         skew: &str,
@@ -983,12 +1094,7 @@ mod tests {
         chaos: &str,
         host: u64,
     ) -> String {
-        format!(
-            "{{\"generated_by\": \"smartpq bench --figure service\", \"placeholder\": false, \
-             \"quick\": true, \"host_parallelism\": {host}, \"key_span\": 1048576, \
-             \"skew\": {skew}, \"trace\": {trace}, \"chaos\": {chaos}, \"sweeps\": [{}]}}",
-            sweeps.join(", ")
-        )
+        service_json_v5(sweeps, skew, trace, &service_metrics_ok(), chaos, host)
     }
 
     fn service_json_full(sweeps: &[String], skew: &str, trace: &str, host: u64) -> String {
@@ -1181,11 +1287,106 @@ mod tests {
         let legacy = format!(
             "{{\"generated_by\": \"x\", \"placeholder\": false, \"quick\": true, \
              \"host_parallelism\": 8, \"key_span\": 1048576, \"skew\": {skew}, \
-             \"trace\": {trace}, \"sweeps\": [{}]}}",
+             \"trace\": {trace}, \"metrics\": {}, \"sweeps\": [{}]}}",
+            service_metrics_ok(),
             sweeps.join(", ")
         );
         let err = check_str("s.json", &legacy, 1.3).unwrap_err();
         assert!(err.to_string().contains("chaos"), "{err}");
+    }
+
+    #[test]
+    fn metrics_overhead_gates_on_big_hosts_only() {
+        let sweeps = vec![service_sweep("smartpq", 1, "balanced", 0.05, 120.0)];
+        let skew = service_skew(400.0, 200.0, 2);
+        let trace = service_trace(0.05, 0.0499, 5000, 0);
+        // 4% overhead on an 8-way host: hard failure.
+        let bad = service_json_v5(
+            &sweeps,
+            &skew,
+            &trace,
+            &service_metrics(0.05, 0.048, 12, 0),
+            &service_chaos_ok(),
+            8,
+        );
+        let err = check_str("s.json", &bad, 1.3).unwrap_err();
+        assert!(err.to_string().contains("metrics overhead"), "{err}");
+        // Same overhead on a 4-way host: advisory.
+        let small = service_json_v5(
+            &sweeps,
+            &skew,
+            &trace,
+            &service_metrics(0.05, 0.048, 12, 0),
+            &service_chaos_ok(),
+            4,
+        );
+        let ok = check_str("s.json", &small, 1.3).unwrap();
+        assert!(ok.warnings.iter().any(|w| w.contains("metrics")), "{ok:?}");
+        // Under the target (even negative) passes as a fact.
+        let neg = service_json_v5(
+            &sweeps,
+            &skew,
+            &trace,
+            &service_metrics(0.05, 0.051, 12, 0),
+            &service_chaos_ok(),
+            8,
+        );
+        let ok = check_str("s.json", &neg, 1.3).unwrap();
+        assert!(ok.facts.iter().any(|f| f.contains("metrics: overhead")), "{ok:?}");
+    }
+
+    #[test]
+    fn metrics_drops_and_empty_fail_on_any_host() {
+        let sweeps = vec![service_sweep("smartpq", 1, "balanced", 0.05, 120.0)];
+        let skew = service_skew(400.0, 200.0, 2);
+        let trace = service_trace(0.05, 0.0499, 5000, 0);
+        for host in [4, 8] {
+            // An overwritten flight-recorder sample: hard failure.
+            let lossy = service_json_v5(
+                &sweeps,
+                &skew,
+                &trace,
+                &service_metrics(0.05, 0.0499, 12, 3),
+                &service_chaos_ok(),
+                host,
+            );
+            let err = check_str("s.json", &lossy, 1.3).unwrap_err();
+            assert!(err.to_string().contains("overwrote"), "{err}");
+            // Zero samples: the sampler never ran.
+            let idle = service_json_v5(
+                &sweeps,
+                &skew,
+                &trace,
+                &service_metrics(0.05, 0.0499, 0, 0),
+                &service_chaos_ok(),
+                host,
+            );
+            let err = check_str("s.json", &idle, 1.3).unwrap_err();
+            assert!(err.to_string().contains("no samples"), "{err}");
+        }
+    }
+
+    #[test]
+    fn metrics_missing_or_mismatched_fails() {
+        let sweeps = vec![service_sweep("smartpq", 1, "balanced", 0.05, 120.0)];
+        let skew = service_skew(400.0, 200.0, 2);
+        let trace = service_trace(0.05, 0.0499, 5000, 0);
+        // No metrics object at all: the v5 schema requires it.
+        let legacy = format!(
+            "{{\"generated_by\": \"x\", \"placeholder\": false, \"quick\": true, \
+             \"host_parallelism\": 8, \"key_span\": 1048576, \"skew\": {skew}, \
+             \"trace\": {trace}, \"chaos\": {}, \"sweeps\": [{}]}}",
+            service_chaos_ok(),
+            sweeps.join(", ")
+        );
+        let err = check_str("s.json", &legacy, 1.3).unwrap_err();
+        assert!(err.to_string().contains("metrics"), "{err}");
+        // Recorded overhead_pct disagrees with the throughputs.
+        let mut me = service_metrics_ok();
+        me = me.replace("\"overhead_pct\": 0.200000", "\"overhead_pct\": 1.900000");
+        let doc = service_json_v5(&sweeps, &skew, &trace, &me, &service_chaos_ok(), 8);
+        let err = check_str("s.json", &doc, 1.3).unwrap_err();
+        assert!(err.to_string().contains("overhead_pct"), "{err}");
     }
 
     #[test]

@@ -919,6 +919,96 @@ pub fn trace_table(tr: &TraceOverhead) -> Table {
     t
 }
 
+// -------------------------------------------------- metrics overhead
+
+/// Throughput with the metrics plane idle vs fully live (instruments
+/// active + flight recorder sampling) over the identical workload —
+/// the `check-bench` evidence for the metrics plane's "<2% overhead"
+/// claim, plus the recorder's loss accounting (`dropped` must be 0 in
+/// the benchmark configuration, exactly like the trace gate).
+#[derive(Debug, Clone)]
+pub struct MetricsOverhead {
+    /// Mops/s with hot-path instrument updates off and no recorder.
+    pub bare_mops: f64,
+    /// Mops/s with instruments active and the flight recorder sampling.
+    pub metered_mops: f64,
+    /// Flight-recorder snapshots taken during the metered run.
+    pub samples: u64,
+    /// Snapshots lost to ring overwrite during the metered run.
+    pub dropped: u64,
+}
+
+impl MetricsOverhead {
+    /// Throughput overhead of the metrics plane, in percent (negative =
+    /// noise in its favour; never clamped so the artifact stays honest).
+    pub fn overhead_pct(&self) -> f64 {
+        (self.bare_mops - self.metered_mops) / self.bare_mops.max(1e-9) * 100.0
+    }
+}
+
+/// Flight-recorder cadence during the metered run: fast enough to
+/// exercise the sampler as real overhead, slow enough that the default
+/// ring never wraps within a bench run.
+const METRICS_BENCH_SAMPLE: Duration = Duration::from_millis(25);
+
+/// Measure metrics-plane overhead on a loopback service: run one
+/// balanced mix with instrument updates off, then the identical mix
+/// with updates on *and* the flight recorder sampling every registered
+/// metric, and compare throughput. Updates are left off afterwards so
+/// the measurement doesn't leak into a later metered run.
+pub fn run_metrics_overhead(quick: bool) -> Result<MetricsOverhead> {
+    let lg = LoadgenConfig::new(quick);
+    let svc = PqService::start(ServiceConfig {
+        backend: "smartpq".to_string(),
+        shards: 2,
+        key_span: lg.key_range,
+        max_conns: lg.conns + 8,
+        ..Default::default()
+    })?;
+    let addr = svc.addr().to_string();
+    crate::metrics::set_active(false);
+    let bare = run_mix(&addr, OpMix::Balanced, &lg)?;
+    crate::metrics::set_active(true);
+    crate::metrics::start_flight_recorder(
+        METRICS_BENCH_SAMPLE,
+        crate::metrics::recorder::DEFAULT_RING_SAMPLES,
+    );
+    let metered = run_mix(&addr, OpMix::Balanced, &lg)?;
+    let report = crate::metrics::stop_flight_recorder();
+    crate::metrics::set_active(false);
+    ServiceClient::connect(&addr)?.shutdown()?;
+    svc.wait();
+    let (samples, dropped) = report.map_or((0, 0), |r| (r.samples, r.dropped));
+    Ok(MetricsOverhead {
+        bare_mops: bare.mops,
+        metered_mops: metered.mops,
+        samples,
+        dropped,
+    })
+}
+
+/// Render the metrics-overhead table.
+pub fn metrics_table(m: &MetricsOverhead) -> Table {
+    let mut t = Table::new(
+        "Metrics overhead (identical balanced mix, instruments off vs on + flight recorder)",
+        &["metrics", "mops", "samples", "dropped"],
+    );
+    t.row(vec!["off".to_string(), fmt(m.bare_mops), "0".to_string(), "0".to_string()]);
+    t.row(vec![
+        "on".to_string(),
+        fmt(m.metered_mops),
+        m.samples.to_string(),
+        m.dropped.to_string(),
+    ]);
+    t.row(vec![
+        "overhead_pct".to_string(),
+        fmt(m.overhead_pct()),
+        String::new(),
+        String::new(),
+    ]);
+    t
+}
+
 // ---------------------------------------------------------- chaos run
 
 /// Backend of the chaos run (the headline adaptive backend).
@@ -1143,17 +1233,18 @@ pub fn service_json_path() -> std::path::PathBuf {
     crate::harness::repo_root_file("BENCH_service.json")
 }
 
-/// Serialize the sweep as the `BENCH_service` JSON schema (v4: v3's
-/// static-vs-elastic `skew` and trace-overhead `trace` objects, plus
-/// the fault-injection `chaos` object — error-class counts, injected
-/// faults, recovery quantiles, the conservation ledger, and the
-/// graceful-drain verdict — gated by `smartpq check-bench`).
+/// Serialize the sweep as the `BENCH_service` JSON schema (v5: v4's
+/// static-vs-elastic `skew`, trace-overhead `trace`, and
+/// fault-injection `chaos` objects, plus the metrics-plane `metrics`
+/// object — bare vs metered throughput with the flight recorder
+/// sampling, and its loss accounting — gated by `smartpq check-bench`).
 pub fn results_to_json(
     quick: bool,
     key_span: u64,
     points: &[ServicePoint],
     skew: &SkewComparison,
     trace: &TraceOverhead,
+    metrics: &MetricsOverhead,
     chaos: &ChaosOutcome,
 ) -> String {
     let mut s = String::new();
@@ -1183,6 +1274,13 @@ pub fn results_to_json(
     s.push_str(&format!("    \"overhead_pct\": {:.6},\n", trace.overhead_pct()));
     s.push_str(&format!("    \"emitted\": {},\n", trace.emitted));
     s.push_str(&format!("    \"dropped\": {}\n", trace.dropped));
+    s.push_str("  },\n");
+    s.push_str("  \"metrics\": {\n");
+    s.push_str(&format!("    \"bare_mops\": {:.6},\n", metrics.bare_mops));
+    s.push_str(&format!("    \"metered_mops\": {:.6},\n", metrics.metered_mops));
+    s.push_str(&format!("    \"overhead_pct\": {:.6},\n", metrics.overhead_pct()));
+    s.push_str(&format!("    \"samples\": {},\n", metrics.samples));
+    s.push_str(&format!("    \"dropped\": {}\n", metrics.dropped));
     s.push_str("  },\n");
     s.push_str("  \"chaos\": {\n");
     s.push_str(&format!("    \"seed\": {},\n", chaos.seed));
@@ -1327,6 +1425,12 @@ pub fn run_service_figure_to(
     let trace = run_trace_overhead(cfg.quick)?;
     let tt = trace_table(&trace);
     tt.print();
+    // The metrics-plane acceptance point: the identical mix bare vs
+    // metered (instruments + flight recorder), gated <2% by
+    // check-bench on >=8-way hosts (and dropped == 0 always).
+    let metrics = run_metrics_overhead(cfg.quick)?;
+    let mt = metrics_table(&metrics);
+    mt.print();
     // The chaos acceptance point: loadgen through the fault-injection
     // proxy (fixed seed), then the conservation check and a graceful
     // drain — gated by check-bench (conservation and drain exact
@@ -1336,10 +1440,10 @@ pub fn run_service_figure_to(
     ct.print();
     std::fs::write(
         json_path,
-        results_to_json(cfg.quick, lg.key_range, &points, &skew, &trace, &chaos),
+        results_to_json(cfg.quick, lg.key_range, &points, &skew, &trace, &metrics, &chaos),
     )?;
     println!("service results written to {}", json_path.display());
-    Ok(vec![t, st, tt, ct])
+    Ok(vec![t, st, tt, mt, ct])
 }
 
 /// The full figure with the default JSON location (repo root).
@@ -1493,8 +1597,14 @@ mod tests {
             emitted: 4321,
             dropped: 0,
         };
+        let metrics = MetricsOverhead {
+            bare_mops: 0.020,
+            metered_mops: 0.0198,
+            samples: 12,
+            dropped: 0,
+        };
         let chaos = sample_chaos_outcome();
-        let s = results_to_json(true, 1 << 20, &points, &skew, &trace, &chaos);
+        let s = results_to_json(true, 1 << 20, &points, &skew, &trace, &metrics, &chaos);
         let v = crate::util::json::Json::parse(&s).expect("service JSON parses");
         assert_eq!(v.get("placeholder").unwrap().as_bool(), Some(false));
         let sweeps = v.get("sweeps").unwrap().as_array().unwrap();
@@ -1510,6 +1620,11 @@ mod tests {
         assert_eq!(tr.get("dropped").unwrap().as_u64(), Some(0));
         let oh = tr.get("overhead_pct").unwrap().as_f64().unwrap();
         assert!((oh - 0.5).abs() < 1e-6, "overhead {oh}");
+        let me = v.get("metrics").expect("metrics object present");
+        assert_eq!(me.get("samples").unwrap().as_u64(), Some(12));
+        assert_eq!(me.get("dropped").unwrap().as_u64(), Some(0));
+        let moh = me.get("overhead_pct").unwrap().as_f64().unwrap();
+        assert!((moh - 1.0).abs() < 1e-6, "metrics overhead {moh}");
         let ch = v.get("chaos").expect("chaos object present");
         assert_eq!(ch.get("seed").unwrap().as_u64(), Some(42));
         assert_eq!(ch.get("injected_total").unwrap().as_u64(), Some(chaos.injected_total()));

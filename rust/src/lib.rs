@@ -29,7 +29,13 @@
 //! 6. **Tracing plane** ([`trace`]) — lock-free ring-buffered per-op
 //!    event capture (mode switches, rebalances, combining sweeps,
 //!    op/request spans) flushed as Chrome/Perfetto trace-event JSON
-//!    behind `--trace` on `serve` / `loadgen` / `app`.
+//!    (or binary Perfetto protobuf with `--trace-format proto`) behind
+//!    `--trace` on `serve` / `loadgen` / `app`.
+//! 7. **Metrics plane** ([`metrics`]) — a zero-dependency live metrics
+//!    registry (counters, gauges, log-bucketed histograms) served as
+//!    Prometheus text exposition by the reactor on `--metrics-addr`
+//!    and continuously sampled into a bounded flight-recorder ring
+//!    dumped as CSV via `--metrics-log`.
 //!
 //! See `DESIGN.md` for the full system inventory and experiment index.
 
@@ -38,6 +44,7 @@ pub mod classifier;
 pub mod delegation;
 pub mod harness;
 pub mod mem;
+pub mod metrics;
 pub mod pq;
 pub mod runtime;
 pub mod service;

@@ -10,6 +10,7 @@
 //!                  1/2/4/8-node topologies (trace-driven projection)
 //!   serve        — host sharded queues behind the TCP service
 //!   loadgen      — open-loop load generator with latency histograms
+//!   stat         — one-line live delta summary of a running service
 //!   check-bench  — validate BENCH_*.json artifacts (CI gate)
 //!   demo         — 30-second guided tour (SmartPQ adapting live)
 //!   classifier   — inspect / query the decision infrastructure
@@ -88,7 +89,8 @@ COMMANDS
   serve [--backend B] [--shards K] [--addr H:P] [--key-span N] [--max-conns N]
         [--workers W] [--static-shards] [--strict-span] [--rebalance-ms D]
         [--imbalance X] [--rebalance-min-ops N] [--write-timeout-ms D]
-        [--trace FILE] [--trace-buf N]
+        [--trace FILE] [--trace-buf N] [--metrics-addr H:P]
+        [--metrics-log FILE] [--metrics-sample-ms D] [--metrics-ring N]
                           host K key-range shards of any registered
                           backend (default smartpq x2) behind the TCP
                           service; runs until a client sends a Shutdown
@@ -106,7 +108,14 @@ COMMANDS
                           --workers (default 4) caps the threads that
                           actually execute requests against the queue.
                           --write-timeout-ms bounds how long one slow
-                          reader may pin a connection's response writes
+                          reader may pin a connection's response writes.
+                          --metrics-addr adds a second listener to the
+                          same reactor poll loop (no extra thread)
+                          answering plain-HTTP GET /metrics with
+                          Prometheus text exposition — reactor, worker,
+                          shard, classifier and combining families
+                          (127.0.0.1:0 picks a free port; the banner
+                          prints it)
   loadgen [--addr H:P] [--mix insert|balanced|delete|phases|all] [--conns C]
           [--rate R] [--secs S] [--key-range N] [--batch B] [--shutdown]
           [--drain] [--resilient] [--dist uniform|zipf] [--zipf-s S]
@@ -137,7 +146,20 @@ COMMANDS
                           a drain exit), verifies element conservation
                           and zero handler panics afterwards, and fails
                           if no fault was injected; the --chaos-* knobs
-                          override the default FaultPlan probabilities
+                          override the default FaultPlan probabilities.
+                          The embedded service honours the serve metrics
+                          knobs (--metrics-addr/--metrics-log)
+  stat [--addr H:P] [--watch SECS] [--metrics-addr H:P]
+                          poll a running service's Stats frame and print
+                          a one-line delta summary: ops/s recomputed
+                          from the conservation ledger, resident
+                          elements, shard-map epoch, rebalances in the
+                          window, poisoned handlers and trace drops.
+                          --watch repeats every SECS until interrupted
+                          (default: one sample after 1 s); with
+                          --metrics-addr the line also carries the
+                          classifier mode and in-flight jobs scraped
+                          from the /metrics endpoint
   check-bench <BENCH_*.json ...> [--min-combining-speedup X]
                           validate bench artifacts: JSON schema, the
                           combining speedup target (>= 1.3x on hosts with
@@ -164,29 +186,96 @@ OPTIONS
   --trace-buf <N>         per-thread trace ring capacity in events
                           (default 65536; full rings drop new events
                           and count them instead of blocking)
+  --trace-format <json|proto>
+                          trace flush encoding: Chrome trace-event JSON
+                          (default) or binary Perfetto protobuf (~5x
+                          smaller for long captures; both load in
+                          https://ui.perfetto.dev)
+  --metrics-addr <H:P>    (serve/loadgen) expose the live metrics
+                          registry as Prometheus text exposition on
+                          plain-HTTP GET /metrics, served by the
+                          service reactor's own poll loop
+  --metrics-log <FILE>    (serve/loadgen) run the flight recorder: a
+                          background thread samples every registered
+                          metric into a bounded in-memory ring and FILE
+                          gets the CSV dump at exit
+  --metrics-sample-ms <D> flight-recorder sampling period (default 100)
+  --metrics-ring <N>      flight-recorder ring capacity in samples
+                          (default 4096, ~7 min at the default period;
+                          a full ring overwrites the oldest sample and
+                          counts the loss)
 ";
 
-/// `--trace <path>` / `--trace-buf <events>`: install the global ring
-/// tracer before the run; returns the path to flush after it.
-fn trace_setup(args: &Args) -> Result<Option<std::path::PathBuf>> {
+/// `--trace <path>` / `--trace-buf <events>` / `--trace-format`:
+/// install the global ring tracer before the run; returns the path and
+/// encoding to flush after it.
+fn trace_setup(args: &Args) -> Result<Option<(std::path::PathBuf, smartpq::trace::TraceFormat)>> {
+    // Parse the format eagerly so a typo fails loudly even without
+    // --trace.
+    let format = smartpq::trace::TraceFormat::parse(&args.str_or("trace-format", "json"))?;
     let Some(path) = args.get("trace") else {
         return Ok(None);
     };
     let buf: usize = args.num_or("trace-buf", smartpq::trace::DEFAULT_BUF_EVENTS)?;
     smartpq::trace::install(buf);
-    Ok(Some(std::path::PathBuf::from(path)))
+    Ok(Some((std::path::PathBuf::from(path), format)))
 }
 
 /// Flush the captured trace (if `--trace` was given) and report the
 /// capture counters.
-fn trace_finish(path: &Option<std::path::PathBuf>) -> Result<()> {
-    if let Some(p) = path {
-        let (emitted, dropped) = smartpq::trace::flush_to(p)?;
+fn trace_finish(capture: &Option<(std::path::PathBuf, smartpq::trace::TraceFormat)>) -> Result<()> {
+    if let Some((p, format)) = capture {
+        let (emitted, dropped) = smartpq::trace::flush_to_with(p, *format)?;
         println!(
             "trace: {emitted} events captured ({dropped} dropped) -> {} \
-             (load in https://ui.perfetto.dev or chrome://tracing)",
-            p.display()
+             (load in https://ui.perfetto.dev{})",
+            p.display(),
+            if *format == smartpq::trace::TraceFormat::Json {
+                " or chrome://tracing"
+            } else {
+                ""
+            }
         );
+    }
+    Ok(())
+}
+
+/// `--metrics-addr` / `--metrics-log`: activate the global metrics
+/// registry before the run (and the flight recorder when a log path is
+/// given); returns the CSV path to dump after it.
+fn metrics_setup(args: &Args) -> Result<Option<std::path::PathBuf>> {
+    let log = args.get("metrics-log").map(std::path::PathBuf::from);
+    if log.is_none() && args.get("metrics-addr").is_none() {
+        return Ok(None);
+    }
+    use smartpq::metrics::recorder::{DEFAULT_RING_SAMPLES, DEFAULT_SAMPLE_MS};
+    smartpq::metrics::set_active(true);
+    if log.is_some() {
+        let ms: u64 = args.num_or("metrics-sample-ms", DEFAULT_SAMPLE_MS)?;
+        let ring: usize = args.num_or("metrics-ring", DEFAULT_RING_SAMPLES)?;
+        smartpq::metrics::start_flight_recorder(
+            std::time::Duration::from_millis(ms.max(1)),
+            ring.max(2),
+        );
+    }
+    Ok(log)
+}
+
+/// Stop the flight recorder (if `--metrics-log` was given), dump its
+/// CSV, and report the sample counters.
+fn metrics_finish(log: &Option<std::path::PathBuf>) -> Result<()> {
+    let Some(p) = log else { return Ok(()) };
+    match smartpq::metrics::stop_flight_recorder() {
+        Some(report) => {
+            report.write_csv_to(p)?;
+            println!(
+                "metrics: {} flight-recorder sample(s) ({} overwritten) -> {}",
+                report.samples,
+                report.dropped,
+                p.display()
+            );
+        }
+        None => println!("metrics: the flight recorder was not running; nothing to dump"),
     }
     Ok(())
 }
@@ -635,10 +724,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         rebalance_min_ops: args.num_or("rebalance-min-ops", 1_000)?,
         strict_span: args.flag("strict-span"),
         write_timeout_ms: args.num_or("write-timeout-ms", 2_000)?,
+        metrics_addr: args.get("metrics-addr").map(str::to_string),
     };
     let backend = cfg.backend.clone();
     let shards = cfg.shards;
     let trace_path = trace_setup(args)?;
+    let metrics_log = metrics_setup(args)?;
     let svc = PqService::start(cfg)?;
     println!(
         "serving {backend} across {shards} key-range shard(s) on {} \
@@ -646,8 +737,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         svc.addr(),
         svc.addr()
     );
+    if let Some(m) = svc.metrics_addr() {
+        println!(
+            "metrics: scrape http://{m}/metrics (or `smartpq stat --addr {} \
+             --metrics-addr {m}`)",
+            svc.addr()
+        );
+    }
     svc.wait();
     trace_finish(&trace_path)?;
+    metrics_finish(&metrics_log)?;
     println!("service stopped");
     Ok(())
 }
@@ -702,6 +801,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         vec![OpMix::parse(&mix_name)?]
     };
     let trace_path = trace_setup(args)?;
+    let metrics_log = metrics_setup(args)?;
     let (addr, embedded) = match args.get("addr") {
         Some(a) => (a.to_string(), None),
         None => {
@@ -716,10 +816,14 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
                 rebalance_imbalance: args.num_or("imbalance", 3.0)?,
                 rebalance_min_ops: args.num_or("rebalance-min-ops", 1_000)?,
                 strict_span: args.flag("strict-span"),
+                metrics_addr: args.get("metrics-addr").map(str::to_string),
                 ..Default::default()
             })?;
             let addr = svc.addr().to_string();
             eprintln!("loadgen: spawned embedded loopback service on {addr}");
+            if let Some(m) = svc.metrics_addr() {
+                eprintln!("loadgen: metrics at http://{m}/metrics");
+            }
             (addr, Some(svc))
         }
     };
@@ -808,6 +912,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         svc.wait();
     }
     trace_finish(&trace_path)?;
+    metrics_finish(&metrics_log)?;
     let total: u64 = outcomes.iter().map(|o| o.ops).sum();
     let failed: u64 = outcomes.iter().map(|o| o.ops_failed).sum();
     println!(
@@ -815,6 +920,74 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         outcomes.len()
     );
     Ok(())
+}
+
+/// Extract an unlabelled sample value from a Prometheus text-exposition
+/// body (comment and labelled lines never match `"<name> "`).
+fn expo_value(body: &str, name: &str) -> Option<f64> {
+    body.lines().find_map(|l| {
+        let rest = l.strip_prefix(name)?.strip_prefix(' ')?;
+        rest.trim().parse().ok()
+    })
+}
+
+/// Poll a running service's Stats frame (and optionally its /metrics
+/// endpoint) and print a one-line delta summary per interval.
+fn cmd_stat(args: &Args) -> Result<()> {
+    use smartpq::service::ServiceClient;
+    use std::time::{Duration, Instant};
+
+    let addr = args.str_or("addr", "127.0.0.1:7171");
+    let watch: f64 = args.num_or("watch", 0.0)?;
+    let interval = Duration::from_secs_f64(if watch > 0.0 { watch } else { 1.0 });
+    let metrics_addr = args.get("metrics-addr").map(str::to_string);
+    let mut client = ServiceClient::connect(addr.as_str())?;
+    let mut prev = client.stats()?;
+    let mut prev_t = Instant::now();
+    loop {
+        std::thread::sleep(interval);
+        let cur = client.stats()?;
+        let dt = prev_t.elapsed().as_secs_f64().max(1e-9);
+        prev_t = Instant::now();
+        // Ops/s from the conservation ledger: both counters are
+        // monotone, so the window delta is exact however the shard map
+        // moved in between.
+        let ops = (cur.inserted + cur.popped).saturating_sub(prev.inserted + prev.popped);
+        let resident: u64 = cur.shard_lens.iter().sum();
+        let mut line = format!(
+            "{addr}: {:.0} ops/s | resident {resident} across {} shard(s) | epoch {} \
+             (+{} rebalance(s)) | poisoned {} | trace drops {}",
+            ops as f64 / dt,
+            cur.shard_lens.len(),
+            cur.epoch,
+            cur.rebalances.saturating_sub(prev.rebalances),
+            cur.poisoned,
+            cur.trace_dropped,
+        );
+        if let Some(m) = &metrics_addr {
+            match smartpq::metrics::scrape(m) {
+                Ok(body) => {
+                    if let Some(mode) = expo_value(&body, "smartpq_classifier_mode") {
+                        let name: String = match mode as i64 {
+                            1 => "oblivious".to_string(),
+                            2 => "aware".to_string(),
+                            other => other.to_string(),
+                        };
+                        line.push_str(&format!(" | mode {name}"));
+                    }
+                    if let Some(inflight) = expo_value(&body, "smartpq_jobs_inflight") {
+                        line.push_str(&format!(" | {inflight:.0} job(s) in flight"));
+                    }
+                }
+                Err(e) => line.push_str(&format!(" | metrics scrape failed: {e}")),
+            }
+        }
+        println!("{line}");
+        prev = cur;
+        if watch <= 0.0 {
+            return Ok(());
+        }
+    }
 }
 
 /// Validate BENCH_*.json artifacts (schema + perf gates); nonzero exit on
@@ -954,6 +1127,7 @@ fn main() {
         Some("project") => cmd_project(&args),
         Some("serve") => cmd_serve(&args),
         Some("loadgen") => cmd_loadgen(&args),
+        Some("stat") => cmd_stat(&args),
         Some("check-bench") => cmd_check_bench(&args),
         Some("demo") => cmd_demo(&args),
         Some("classifier") => cmd_classifier(&args),

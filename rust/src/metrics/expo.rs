@@ -1,0 +1,282 @@
+//! Prometheus text-format exposition encoder (version 0.0.4).
+//!
+//! Renders a [`Registry`](super::Registry) as the plain-text format
+//! every Prometheus-compatible scraper understands: per family a
+//! `# HELP` line, a `# TYPE` line, then one sample line per series.
+//! Histograms follow the cumulative-bucket contract — `_bucket` lines
+//! with inclusive `le` upper bounds (from
+//! [`HistSnapshot::cumulative`](crate::util::hist::HistSnapshot::cumulative)),
+//! a `+Inf` bucket, and `_sum`/`_count` — so `histogram_quantile()`
+//! works out of the box. Only non-empty buckets are emitted (the
+//! log-bucketed histogram has ~1900 buckets; sparse cumulative output
+//! is valid exposition and keeps scrapes small).
+
+use super::{Family, Kind, Registry, Value};
+
+/// The Content-Type a `/metrics` response declares.
+pub const CONTENT_TYPE: &str = "text/plain; version=0.0.4; charset=utf-8";
+
+fn push_label_set(out: &mut String, labels: &[(String, String)], extra: Option<(&str, &str)>) {
+    if labels.is_empty() && extra.is_none() {
+        return;
+    }
+    out.push('{');
+    let mut first = true;
+    for (k, v) in labels.iter().map(|(k, v)| (k.as_str(), v.as_str())).chain(extra) {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        out.push_str(k);
+        out.push_str("=\"");
+        for c in v.chars() {
+            match c {
+                '\\' => out.push_str("\\\\"),
+                '"' => out.push_str("\\\""),
+                '\n' => out.push_str("\\n"),
+                c => out.push(c),
+            }
+        }
+        out.push('"');
+    }
+    out.push('}');
+}
+
+fn push_help(out: &mut String, name: &str, help: &str) {
+    out.push_str("# HELP ");
+    out.push_str(name);
+    out.push(' ');
+    for c in help.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out.push('\n');
+}
+
+fn render_family(out: &mut String, fam: &Family) {
+    push_help(out, &fam.name, fam.help);
+    out.push_str("# TYPE ");
+    out.push_str(&fam.name);
+    out.push(' ');
+    out.push_str(fam.kind.type_name());
+    out.push('\n');
+    for s in &fam.series {
+        match &s.value {
+            Value::Counter(c) => {
+                out.push_str(&fam.name);
+                push_label_set(out, &s.labels, None);
+                out.push(' ');
+                out.push_str(&c.get().to_string());
+                out.push('\n');
+            }
+            Value::Gauge(g) => {
+                out.push_str(&fam.name);
+                push_label_set(out, &s.labels, None);
+                out.push(' ');
+                out.push_str(&g.get().to_string());
+                out.push('\n');
+            }
+            Value::Hist(h) => {
+                let snap = h.snapshot();
+                for (le, cum) in snap.cumulative() {
+                    out.push_str(&fam.name);
+                    out.push_str("_bucket");
+                    push_label_set(out, &s.labels, Some(("le", &le.to_string())));
+                    out.push(' ');
+                    out.push_str(&cum.to_string());
+                    out.push('\n');
+                }
+                out.push_str(&fam.name);
+                out.push_str("_bucket");
+                push_label_set(out, &s.labels, Some(("le", "+Inf")));
+                out.push(' ');
+                out.push_str(&snap.total().to_string());
+                out.push('\n');
+                out.push_str(&fam.name);
+                out.push_str("_sum");
+                push_label_set(out, &s.labels, None);
+                out.push(' ');
+                out.push_str(&snap.value_sum().to_string());
+                out.push('\n');
+                out.push_str(&fam.name);
+                out.push_str("_count");
+                push_label_set(out, &s.labels, None);
+                out.push(' ');
+                out.push_str(&snap.total().to_string());
+                out.push('\n');
+            }
+        }
+    }
+}
+
+/// Render `reg` as Prometheus text exposition. Runs the registered
+/// collectors first so scrape-time gauges are fresh.
+pub fn render(reg: &Registry) -> String {
+    reg.run_collectors();
+    let mut out = String::new();
+    for fam in reg.families() {
+        render_family(&mut out, &fam);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{valid_label_name, valid_metric_name, Registry};
+    use super::*;
+
+    /// Minimal exposition-format checker used by the conformance
+    /// tests: validates comment lines, name charsets, and returns the
+    /// sample lines as `(name, labels, value)` triples.
+    fn parse(text: &str) -> Vec<(String, Vec<(String, String)>, f64)> {
+        let mut typed: std::collections::HashMap<String, String> = Default::default();
+        let mut helped: std::collections::HashSet<String> = Default::default();
+        let mut samples = Vec::new();
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("# HELP ") {
+                let name = rest.split(' ').next().expect("help name");
+                assert!(valid_metric_name(name), "HELP name {name:?}");
+                assert!(helped.insert(name.to_owned()), "duplicate HELP for {name}");
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let mut it = rest.split(' ');
+                let name = it.next().expect("type name");
+                let kind = it.next().expect("type kind");
+                assert!(valid_metric_name(name), "TYPE name {name:?}");
+                assert!(
+                    ["counter", "gauge", "histogram"].contains(&kind),
+                    "unknown TYPE {kind}"
+                );
+                assert!(
+                    typed.insert(name.to_owned(), kind.to_owned()).is_none(),
+                    "duplicate TYPE for {name}"
+                );
+                continue;
+            }
+            assert!(!line.starts_with('#'), "unknown comment line {line:?}");
+            let (name_labels, value) = line.rsplit_once(' ').expect("sample line");
+            let (name, labels) = match name_labels.split_once('{') {
+                Some((n, l)) => {
+                    let body = l.strip_suffix('}').expect("closing brace");
+                    let labels = body
+                        .split(',')
+                        .map(|kv| {
+                            let (k, v) = kv.split_once('=').expect("label k=v");
+                            assert!(valid_label_name(k), "label name {k:?}");
+                            let v = v
+                                .strip_prefix('"')
+                                .and_then(|v| v.strip_suffix('"'))
+                                .expect("quoted label value");
+                            (k.to_owned(), v.to_owned())
+                        })
+                        .collect();
+                    (n, labels)
+                }
+                None => (name_labels, Vec::new()),
+            };
+            assert!(valid_metric_name(name), "sample name {name:?}");
+            // Every sample belongs to a family declared above it (for
+            // histograms, via the _bucket/_sum/_count suffixes).
+            let family = ["_bucket", "_sum", "_count"]
+                .iter()
+                .find_map(|suf| {
+                    name.strip_suffix(suf).filter(|f| typed.get(*f).map(String::as_str) == Some("histogram"))
+                })
+                .unwrap_or(name);
+            assert!(typed.contains_key(family), "sample {name} lacks # TYPE");
+            assert!(helped.contains(family), "sample {name} lacks # HELP");
+            samples.push((name.to_owned(), labels, value.parse::<f64>().expect("numeric value")));
+        }
+        samples
+    }
+
+    fn get<'a>(
+        samples: &'a [(String, Vec<(String, String)>, f64)],
+        name: &str,
+    ) -> Vec<&'a (String, Vec<(String, String)>, f64)> {
+        samples.iter().filter(|(n, _, _)| n == name).collect()
+    }
+
+    #[test]
+    fn exposition_is_conformant() {
+        let reg = Registry::new();
+        reg.counter("expo_ops_total", "Ops served.").add(41);
+        reg.gauge_with("expo_depth", "Depth per shard.", &[("shard", "0")]).set(3);
+        reg.gauge_with("expo_depth", "Depth per shard.", &[("shard", "1")]).set(-2);
+        let h = reg.histogram("expo_latency_us", "Latency in microseconds.");
+        for v in [1u64, 1, 50, 50, 50, 4000] {
+            h.record(v);
+        }
+        let text = render(&reg);
+        let samples = parse(&text);
+        assert_eq!(get(&samples, "expo_ops_total")[0].2, 41.0);
+        let depth = get(&samples, "expo_depth");
+        assert_eq!(depth.len(), 2);
+        assert_eq!(depth[0].1, vec![("shard".to_owned(), "0".to_owned())]);
+        assert_eq!(depth[1].2, -2.0);
+        // Histogram contract: cumulative buckets ending in +Inf,
+        // _count == +Inf bucket == sample count, _sum == value sum.
+        let buckets = get(&samples, "expo_latency_us_bucket");
+        let mut prev = 0.0f64;
+        let mut prev_le = f64::NEG_INFINITY;
+        for (_, labels, v) in &buckets {
+            let le = &labels.iter().find(|(k, _)| k == "le").expect("le label").1;
+            let le_v = if le == "+Inf" { f64::INFINITY } else { le.parse().expect("numeric le") };
+            assert!(le_v > prev_le, "le strictly increasing");
+            assert!(*v >= prev, "bucket counts cumulative");
+            prev = *v;
+            prev_le = le_v;
+        }
+        assert_eq!(prev_le, f64::INFINITY, "last bucket is +Inf");
+        assert_eq!(prev, 6.0, "+Inf bucket counts everything");
+        assert_eq!(get(&samples, "expo_latency_us_count")[0].2, 6.0);
+        assert_eq!(get(&samples, "expo_latency_us_sum")[0].2, (1 + 1 + 50 * 3 + 4000) as f64);
+        // Values <= a bucket's le are counted by it: the le covering 50
+        // must have cumulative >= 5 (two 1s + three 50s).
+        let covering = buckets
+            .iter()
+            .find(|(_, labels, _)| {
+                labels.iter().any(|(k, v)| k == "le" && v.parse::<f64>().is_ok_and(|b| b >= 50.0))
+            })
+            .expect("bucket covering 50");
+        assert!(covering.2 >= 5.0);
+    }
+
+    #[test]
+    fn label_values_and_help_are_escaped() {
+        let reg = Registry::new();
+        reg.counter_with("expo_esc_total", "line1\nline2 \\ backslash", &[("path", "a\"b\\c\nd")])
+            .inc();
+        let text = render(&reg);
+        assert!(text.contains("# HELP expo_esc_total line1\\nline2 \\\\ backslash\n"));
+        assert!(text.contains("expo_esc_total{path=\"a\\\"b\\\\c\\nd\"} 1\n"));
+    }
+
+    #[test]
+    fn empty_histogram_still_exposes_inf_sum_count() {
+        let reg = Registry::new();
+        let _ = reg.histogram("expo_idle_us", "Never recorded.");
+        let samples = parse(&render(&reg));
+        assert_eq!(get(&samples, "expo_idle_us_bucket").len(), 1, "just +Inf");
+        assert_eq!(get(&samples, "expo_idle_us_count")[0].2, 0.0);
+        assert_eq!(get(&samples, "expo_idle_us_sum")[0].2, 0.0);
+    }
+
+    #[test]
+    fn collectors_refresh_before_render() {
+        let reg = Registry::new();
+        let g = reg.gauge("expo_live", "Set by collector.");
+        let g2 = g.clone();
+        let n = std::sync::Arc::new(std::sync::atomic::AtomicI64::new(0));
+        let n2 = n.clone();
+        reg.set_collector("t", move || {
+            g2.set(n2.fetch_add(1, std::sync::atomic::Ordering::Relaxed) + 1)
+        });
+        assert!(render(&reg).contains("expo_live 1\n"));
+        assert!(render(&reg).contains("expo_live 2\n"));
+    }
+}

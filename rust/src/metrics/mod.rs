@@ -1,0 +1,514 @@
+//! Live metrics plane: a zero-dependency registry of atomic counters,
+//! gauges, and log-bucketed histograms, served as Prometheus text
+//! exposition and continuously sampled by a flight recorder.
+//!
+//! Where the tracing plane ([`crate::trace`]) answers "why was *that*
+//! op slow" after the fact, this module answers "what is the service
+//! doing *right now*": queue depth per shard, reactor loop latency,
+//! worker utilization, classifier mode — all readable by any standard
+//! scraper hitting `GET /metrics` on `--metrics-addr`, and continuously
+//! recorded into a bounded in-memory ring dumped as CSV at exit
+//! (`--metrics-log`).
+//!
+//! Design mirrors `trace/`:
+//!
+//! - **Handles are the hot path.** [`Registry::counter`] & friends are
+//!   get-or-create under one mutex, taken at setup time only; the
+//!   returned [`Counter`]/[`Gauge`]/[`LatencyHist`] handles update with
+//!   single relaxed atomics and never touch the registry again.
+//! - **A process-global activity flag.** Instrumented hot paths guard
+//!   their updates with [`enabled`] (one relaxed load), so `bench
+//!   --figure service` can measure the identical workload metered vs
+//!   bare, and `check-bench` gates the overhead like the trace gate.
+//! - **Collectors for scrape-time state.** Values that already live in
+//!   the served structures (per-shard residency, the conservation
+//!   ledger, the shard-map epoch) are not double-counted on the hot
+//!   path: the service registers a collector closure that copies them
+//!   into gauges/counters right before each exposition or flight-
+//!   recorder sample.
+//!
+//! Submodules: [`expo`] (Prometheus text-format encoder), [`recorder`]
+//! (the interval sampler + CSV dump + a tiny `/metrics` scrape client).
+
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::util::hist::LatencyHist;
+
+pub mod expo;
+pub mod recorder;
+
+pub use recorder::{scrape, start_flight_recorder, stop_flight_recorder, RecorderReport};
+
+/// A monotonically increasing counter (relaxed atomics; updates from
+/// any thread).
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// Add one.
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Add `n`.
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Collector-side absolute store. Only meaningful when the source
+    /// is itself monotone (e.g. copying the conservation ledger).
+    #[inline]
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// An instantaneous value that can go up and down.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    /// Store an absolute value.
+    #[inline]
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Add a (possibly negative) delta.
+    #[inline]
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    #[inline]
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Metric family kind — fixed at first registration; re-registering a
+/// name under a different kind panics (a programming error, like a
+/// type confusion).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    /// Monotone counter (`_total` by convention).
+    Counter,
+    /// Instantaneous value.
+    Gauge,
+    /// Log-bucketed distribution ([`LatencyHist`]).
+    Histogram,
+}
+
+impl Kind {
+    /// The `# TYPE` keyword.
+    pub fn type_name(self) -> &'static str {
+        match self {
+            Kind::Counter => "counter",
+            Kind::Gauge => "gauge",
+            Kind::Histogram => "histogram",
+        }
+    }
+}
+
+/// One series' instrument.
+#[derive(Debug, Clone)]
+pub(crate) enum Value {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Hist(Arc<LatencyHist>),
+}
+
+/// One labelled series inside a family.
+#[derive(Debug, Clone)]
+pub(crate) struct Series {
+    pub(crate) labels: Vec<(String, String)>,
+    pub(crate) value: Value,
+}
+
+/// One metric family: a name, help text, a kind, and its series.
+#[derive(Debug, Clone)]
+pub(crate) struct Family {
+    pub(crate) name: String,
+    pub(crate) help: &'static str,
+    pub(crate) kind: Kind,
+    pub(crate) series: Vec<Series>,
+}
+
+type Collector = Box<dyn Fn() + Send + Sync>;
+
+/// The metric registry: families in registration order plus keyed
+/// collector closures run before every exposition / sample.
+pub struct Registry {
+    families: Mutex<Vec<Family>>,
+    collectors: Mutex<Vec<(String, Collector)>>,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Registry::new()
+    }
+}
+
+/// Is `name` a legal Prometheus metric name
+/// (`[a-zA-Z_:][a-zA-Z0-9_:]*`)?
+pub fn valid_metric_name(name: &str) -> bool {
+    let mut chars = name.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+/// Is `name` a legal Prometheus label name (`[a-zA-Z_][a-zA-Z0-9_]*`)?
+pub fn valid_label_name(name: &str) -> bool {
+    let mut chars = name.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+impl Registry {
+    /// Fresh empty registry (the process-global one comes from
+    /// [`registry`]).
+    pub fn new() -> Registry {
+        Registry {
+            families: Mutex::new(Vec::new()),
+            collectors: Mutex::new(Vec::new()),
+        }
+    }
+
+    fn get_or_create(
+        &self,
+        name: &str,
+        help: &'static str,
+        kind: Kind,
+        labels: &[(&str, &str)],
+        make: impl FnOnce() -> Value,
+    ) -> Value {
+        assert!(valid_metric_name(name), "invalid metric name {name:?}");
+        for (k, _) in labels {
+            assert!(valid_label_name(k), "invalid label name {k:?} on {name}");
+        }
+        let mut fams = self.families.lock().expect("metrics registry poisoned");
+        let fam = match fams.iter_mut().find(|f| f.name == name) {
+            Some(f) => {
+                assert!(
+                    f.kind == kind,
+                    "metric {name} registered as {:?} and {kind:?}",
+                    f.kind
+                );
+                f
+            }
+            None => {
+                fams.push(Family {
+                    name: name.to_owned(),
+                    help,
+                    kind,
+                    series: Vec::new(),
+                });
+                fams.last_mut().expect("pushed above")
+            }
+        };
+        let wanted: Vec<(String, String)> =
+            labels.iter().map(|(k, v)| ((*k).to_owned(), (*v).to_owned())).collect();
+        if let Some(s) = fam.series.iter().find(|s| s.labels == wanted) {
+            return s.value.clone();
+        }
+        let value = make();
+        fam.series.push(Series {
+            labels: wanted,
+            value: value.clone(),
+        });
+        value
+    }
+
+    /// Get-or-create an unlabelled counter.
+    pub fn counter(&self, name: &str, help: &'static str) -> Arc<Counter> {
+        self.counter_with(name, help, &[])
+    }
+
+    /// Get-or-create a counter series with the given labels.
+    pub fn counter_with(
+        &self,
+        name: &str,
+        help: &'static str,
+        labels: &[(&str, &str)],
+    ) -> Arc<Counter> {
+        match self.get_or_create(name, help, Kind::Counter, labels, || {
+            Value::Counter(Arc::new(Counter::default()))
+        }) {
+            Value::Counter(c) => c,
+            _ => unreachable!("kind checked in get_or_create"),
+        }
+    }
+
+    /// Get-or-create an unlabelled gauge.
+    pub fn gauge(&self, name: &str, help: &'static str) -> Arc<Gauge> {
+        self.gauge_with(name, help, &[])
+    }
+
+    /// Get-or-create a gauge series with the given labels.
+    pub fn gauge_with(
+        &self,
+        name: &str,
+        help: &'static str,
+        labels: &[(&str, &str)],
+    ) -> Arc<Gauge> {
+        match self.get_or_create(name, help, Kind::Gauge, labels, || {
+            Value::Gauge(Arc::new(Gauge::default()))
+        }) {
+            Value::Gauge(g) => g,
+            _ => unreachable!("kind checked in get_or_create"),
+        }
+    }
+
+    /// Get-or-create an unlabelled histogram.
+    pub fn histogram(&self, name: &str, help: &'static str) -> Arc<LatencyHist> {
+        self.histogram_with(name, help, &[])
+    }
+
+    /// Get-or-create a histogram series with the given labels.
+    pub fn histogram_with(
+        &self,
+        name: &str,
+        help: &'static str,
+        labels: &[(&str, &str)],
+    ) -> Arc<LatencyHist> {
+        match self.get_or_create(name, help, Kind::Histogram, labels, || {
+            Value::Hist(Arc::new(LatencyHist::new()))
+        }) {
+            Value::Hist(h) => h,
+            _ => unreachable!("kind checked in get_or_create"),
+        }
+    }
+
+    /// Install (or replace) the collector registered under `key`.
+    /// Collectors run, in registration order, right before every
+    /// exposition render and every flight-recorder sample; they copy
+    /// scrape-time state (shard residency, ledgers) into instruments.
+    pub fn set_collector(&self, key: &str, f: impl Fn() + Send + Sync + 'static) {
+        let mut cs = self.collectors.lock().expect("metrics collectors poisoned");
+        match cs.iter_mut().find(|(k, _)| k == key) {
+            Some((_, slot)) => *slot = Box::new(f),
+            None => cs.push((key.to_owned(), Box::new(f))),
+        }
+    }
+
+    /// Drop the collector registered under `key` (no-op if absent).
+    pub fn remove_collector(&self, key: &str) {
+        let mut cs = self.collectors.lock().expect("metrics collectors poisoned");
+        cs.retain(|(k, _)| k != key);
+    }
+
+    /// Run every registered collector (exposition and the flight
+    /// recorder call this before reading instruments).
+    pub fn run_collectors(&self) {
+        let cs = self.collectors.lock().expect("metrics collectors poisoned");
+        for (_, f) in cs.iter() {
+            f();
+        }
+    }
+
+    /// Clone of the family list (exposition / sampling iterate a copy
+    /// so instrument reads never hold the registration lock).
+    pub(crate) fn families(&self) -> Vec<Family> {
+        self.families.lock().expect("metrics registry poisoned").clone()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Process-global surface (mirrors `trace/`).
+
+static REGISTRY: OnceLock<Registry> = OnceLock::new();
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+
+/// The process-global registry. Unlike the tracer there is no capacity
+/// to configure, so it is created on first touch; activity is a
+/// separate switch ([`set_active`]).
+pub fn registry() -> &'static Registry {
+    REGISTRY.get_or_init(Registry::new)
+}
+
+/// Turn hot-path instrument updates on or off. Scrape-time collectors
+/// and cold-path gauges (classifier mode) keep working either way;
+/// the flag only gates the per-op update sites, so the overhead
+/// benchmark can run the identical workload metered vs bare.
+pub fn set_active(on: bool) {
+    ACTIVE.store(on, Ordering::Relaxed);
+}
+
+/// Cheap hot-path guard: are metered update sites live? One relaxed
+/// load, exactly like [`crate::trace::enabled`].
+#[inline]
+pub fn enabled() -> bool {
+    ACTIVE.load(Ordering::Relaxed)
+}
+
+/// Render the process-global registry as Prometheus text exposition
+/// (runs collectors first). What the reactor serves for `GET /metrics`.
+pub fn render() -> String {
+    expo::render(registry())
+}
+
+// ---------------------------------------------------------------------
+// Well-known cross-layer instruments. The classifier and the Nuddle
+// combining loop have no configuration plumbing (exactly like the
+// trace probes), so their instruments are process-global statics
+// registered on first touch.
+
+macro_rules! well_known {
+    ($fn_name:ident, $reg:ident, $arc:ty, $name:literal, $help:literal) => {
+        #[doc = concat!("The `", $name, "` instrument (registered on first touch).")]
+        pub fn $fn_name() -> &'static Arc<$arc> {
+            static H: OnceLock<Arc<$arc>> = OnceLock::new();
+            H.get_or_init(|| registry().$reg($name, $help))
+        }
+    };
+}
+
+well_known!(
+    classifier_mode,
+    gauge,
+    Gauge,
+    "smartpq_classifier_mode",
+    "Current SmartPQ algorithm mode (1 = NUMA-oblivious, 2 = NUMA-aware)."
+);
+well_known!(
+    classifier_decisions,
+    counter,
+    Counter,
+    "smartpq_classifier_decisions_total",
+    "SmartPQ classifier decisions taken (one per decision interval)."
+);
+well_known!(
+    classifier_switches,
+    counter,
+    Counter,
+    "smartpq_classifier_switches_total",
+    "SmartPQ mode switches (decisions whose outcome differed from the current mode)."
+);
+well_known!(
+    combine_sweeps,
+    counter,
+    Counter,
+    "smartpq_combine_sweeps_total",
+    "Nuddle server combining sweeps executed."
+);
+well_known!(
+    combine_batch,
+    histogram,
+    LatencyHist,
+    "smartpq_combine_batch",
+    "Pending requests gathered per Nuddle combining sweep."
+);
+well_known!(
+    combine_eliminated,
+    counter,
+    Counter,
+    "smartpq_combine_eliminated_total",
+    "Insert/deleteMin pairs eliminated by Nuddle combining sweeps."
+);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handles_are_get_or_create_and_shared() {
+        let reg = Registry::new();
+        let a = reg.counter("test_ops_total", "ops");
+        let b = reg.counter("test_ops_total", "ops");
+        a.inc();
+        b.add(2);
+        assert_eq!(a.get(), 3, "same series behind both handles");
+        let g0 = reg.gauge_with("test_depth", "depth", &[("shard", "0")]);
+        let g1 = reg.gauge_with("test_depth", "depth", &[("shard", "1")]);
+        g0.set(5);
+        g1.set(-7);
+        assert_eq!(g0.get(), 5);
+        assert_eq!(g1.get(), -7);
+        let fams = reg.families();
+        assert_eq!(fams.len(), 2);
+        assert_eq!(fams[1].series.len(), 2, "two labelled series in one family");
+    }
+
+    #[test]
+    #[should_panic(expected = "registered as")]
+    fn kind_confusion_panics() {
+        let reg = Registry::new();
+        let _ = reg.counter("test_confused", "");
+        let _ = reg.gauge("test_confused", "");
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid metric name")]
+    fn invalid_names_panic() {
+        let _ = Registry::new().counter("0bad-name", "");
+    }
+
+    #[test]
+    fn name_charset_validation() {
+        for ok in ["a", "_x", ":q", "smartpq_shard_ops_total", "A9_:z"] {
+            assert!(valid_metric_name(ok), "{ok}");
+        }
+        for bad in ["", "9a", "a-b", "a b", "ä", "a\n"] {
+            assert!(!valid_metric_name(bad), "{bad:?}");
+        }
+        assert!(valid_label_name("shard"));
+        assert!(!valid_label_name("le:"), "colons are metric-name only");
+        assert!(!valid_label_name("0s"));
+    }
+
+    #[test]
+    fn collectors_run_in_order_and_replace_by_key() {
+        let reg = Registry::new();
+        let g = reg.gauge("test_collected", "");
+        let g2 = g.clone();
+        reg.set_collector("a", move || g2.set(1));
+        reg.run_collectors();
+        assert_eq!(g.get(), 1);
+        let g3 = g.clone();
+        reg.set_collector("a", move || g3.set(2));
+        reg.run_collectors();
+        assert_eq!(g.get(), 2, "same key replaces");
+        reg.remove_collector("a");
+        g.set(0);
+        reg.run_collectors();
+        assert_eq!(g.get(), 0, "removed collector no longer runs");
+    }
+
+    #[test]
+    fn global_active_flag_gates() {
+        // Shared global state: only flips the flag around assertions.
+        set_active(false);
+        assert!(!enabled());
+        set_active(true);
+        assert!(enabled());
+        set_active(false);
+    }
+
+    #[test]
+    fn well_known_instruments_register_once() {
+        let c = classifier_decisions();
+        let before = c.get();
+        classifier_decisions().inc();
+        assert_eq!(c.get(), before + 1);
+        assert!(registry()
+            .families()
+            .iter()
+            .any(|f| f.name == "smartpq_classifier_decisions_total"));
+    }
+}

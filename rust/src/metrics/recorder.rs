@@ -1,0 +1,392 @@
+//! Continuous flight recorder: a background sampler that snapshots
+//! every registered metric on a fixed interval into a bounded
+//! in-memory ring, dumped as CSV at exit (`--metrics-log`), plus the
+//! tiny HTTP client ([`scrape`]) used by `smartpq stat` and the
+//! integration tests.
+//!
+//! The ring holds the most recent `cap` samples; when full, the oldest
+//! sample is overwritten (classic flight-recorder semantics) and the
+//! `dropped` counter records the loss so `check-bench` can require a
+//! lossless run (`dropped == 0`) in the benchmark configuration —
+//! exactly like the trace-plane drop gate.
+
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::{Registry, Value};
+use crate::util::error::{Error, Result};
+
+/// Default sampling interval (`--metrics-sample-ms`).
+pub const DEFAULT_SAMPLE_MS: u64 = 100;
+/// Default ring capacity in samples (`--metrics-ring`): ~7 minutes of
+/// history at the default interval.
+pub const DEFAULT_RING_SAMPLES: usize = 4096;
+
+/// One interval snapshot: a timestamp plus every instrument's value in
+/// registry enumeration order (registration is append-only, so a
+/// column index is stable; samples taken before a late registration
+/// are simply shorter and pad as empty cells in the CSV).
+#[derive(Debug, Clone)]
+struct Sample {
+    ts_us: u64,
+    values: Vec<f64>,
+}
+
+struct RecorderInner {
+    cap: usize,
+    epoch: Instant,
+    ring: Mutex<VecDeque<Sample>>,
+    taken: AtomicU64,
+    dropped: AtomicU64,
+}
+
+impl RecorderInner {
+    fn sample(&self, reg: &Registry) {
+        reg.run_collectors();
+        let mut values = Vec::new();
+        for fam in reg.families() {
+            for s in &fam.series {
+                match &s.value {
+                    Value::Counter(c) => values.push(c.get() as f64),
+                    Value::Gauge(g) => values.push(g.get() as f64),
+                    Value::Hist(h) => {
+                        let snap = h.snapshot();
+                        values.push(snap.total() as f64);
+                        values.push(snap.value_sum() as f64);
+                        values.push(snap.p99() as f64);
+                    }
+                }
+            }
+        }
+        let sample = Sample {
+            ts_us: self.epoch.elapsed().as_micros() as u64,
+            values,
+        };
+        let mut ring = self.ring.lock().expect("flight ring poisoned");
+        if ring.len() >= self.cap {
+            ring.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        ring.push_back(sample);
+        self.taken.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// The background sampler. Create with [`FlightRecorder::start`],
+/// retire with [`FlightRecorder::stop`] (which returns the recorded
+/// history as a [`RecorderReport`]).
+pub struct FlightRecorder {
+    reg: &'static Registry,
+    inner: Arc<RecorderInner>,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl FlightRecorder {
+    /// Spawn the sampler thread (`pq-metrics-recorder`): one snapshot
+    /// of every registered metric each `interval` into a ring of `cap`
+    /// samples.
+    pub fn start(reg: &'static Registry, interval: Duration, cap: usize) -> FlightRecorder {
+        let interval = interval.max(Duration::from_millis(1));
+        let inner = Arc::new(RecorderInner {
+            cap: cap.max(1),
+            epoch: Instant::now(),
+            ring: Mutex::new(VecDeque::new()),
+            taken: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        });
+        let stop = Arc::new(AtomicBool::new(false));
+        let handle = {
+            let inner = inner.clone();
+            let stop = stop.clone();
+            std::thread::Builder::new()
+                .name("pq-metrics-recorder".into())
+                .spawn(move || {
+                    while !stop.load(Ordering::Relaxed) {
+                        std::thread::sleep(interval);
+                        if stop.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        inner.sample(reg);
+                    }
+                })
+                .expect("spawn flight recorder")
+        };
+        FlightRecorder {
+            reg,
+            inner,
+            stop,
+            handle: Some(handle),
+        }
+    }
+
+    /// Stop the sampler, take one final snapshot (so even sub-interval
+    /// runs record something), and return the history.
+    pub fn stop(mut self) -> RecorderReport {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        self.inner.sample(self.reg);
+        let columns = column_names(self.reg);
+        let rows = self.inner.ring.lock().expect("flight ring poisoned").iter().cloned().collect();
+        RecorderReport {
+            columns,
+            rows,
+            samples: self.inner.taken.load(Ordering::Relaxed),
+            dropped: self.inner.dropped.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Drop for FlightRecorder {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Column names in sampling order: one per counter/gauge series
+/// (`name{labels}`), three per histogram series (`_count`, `_sum`,
+/// `_p99`).
+fn column_names(reg: &Registry) -> Vec<String> {
+    let mut cols = Vec::new();
+    for fam in reg.families() {
+        for s in &fam.series {
+            let labels = if s.labels.is_empty() {
+                String::new()
+            } else {
+                let body: Vec<String> =
+                    s.labels.iter().map(|(k, v)| format!("{k}={v}")).collect();
+                format!("{{{}}}", body.join(","))
+            };
+            match &s.value {
+                Value::Counter(_) | Value::Gauge(_) => cols.push(format!("{}{labels}", fam.name)),
+                Value::Hist(_) => {
+                    cols.push(format!("{}_count{labels}", fam.name));
+                    cols.push(format!("{}_sum{labels}", fam.name));
+                    cols.push(format!("{}_p99{labels}", fam.name));
+                }
+            }
+        }
+    }
+    cols
+}
+
+/// The flight recorder's recorded history plus its loss accounting
+/// (`samples`/`dropped` feed the `metrics` object of
+/// `BENCH_service.json`).
+pub struct RecorderReport {
+    columns: Vec<String>,
+    rows: Vec<Sample>,
+    /// Snapshots taken over the recorder's lifetime.
+    pub samples: u64,
+    /// Snapshots lost to ring overwrite (0 in any healthy run).
+    pub dropped: u64,
+}
+
+impl RecorderReport {
+    /// Rows currently held in the ring (≤ `samples`, bounded by the
+    /// ring capacity).
+    pub fn retained(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Write the history as CSV: `ts_us` plus one quoted column per
+    /// instrument; rows sampled before an instrument registered pad as
+    /// empty cells.
+    pub fn write_csv(&self, w: &mut dyn Write) -> std::io::Result<()> {
+        let mut out = String::from("ts_us");
+        for c in &self.columns {
+            out.push_str(",\"");
+            out.push_str(&c.replace('"', "\"\""));
+            out.push('"');
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.ts_us.to_string());
+            for i in 0..self.columns.len() {
+                out.push(',');
+                if let Some(v) = row.values.get(i) {
+                    out.push_str(&format_cell(*v));
+                }
+            }
+            out.push('\n');
+        }
+        w.write_all(out.as_bytes())
+    }
+
+    /// Write the CSV to `path` (creating parent directories).
+    pub fn write_csv_to(&self, path: &std::path::Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        self.write_csv(&mut f)?;
+        f.flush()?;
+        Ok(())
+    }
+}
+
+fn format_cell(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 9e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+// ---------------------------------------------------------------------
+// Process-global recorder (mirrors the trace install/flush pairing).
+
+static RECORDER: Mutex<Option<FlightRecorder>> = Mutex::new(None);
+
+/// Start (or restart) the process-global flight recorder over the
+/// global registry.
+pub fn start_flight_recorder(interval: Duration, cap: usize) {
+    let rec = FlightRecorder::start(super::registry(), interval, cap);
+    *RECORDER.lock().expect("recorder slot poisoned") = Some(rec);
+}
+
+/// Stop the process-global flight recorder and return its history
+/// (`None` if it was never started).
+pub fn stop_flight_recorder() -> Option<RecorderReport> {
+    RECORDER.lock().expect("recorder slot poisoned").take().map(FlightRecorder::stop)
+}
+
+// ---------------------------------------------------------------------
+// Scrape client.
+
+/// Fetch `http://{addr}/metrics` with a plain std TCP socket (5s
+/// timeouts) and return the exposition body. Errors on any non-200
+/// status line.
+pub fn scrape(addr: &str) -> Result<String> {
+    let timeout = Duration::from_secs(5);
+    let sock_addr: std::net::SocketAddr = addr
+        .parse()
+        .map_err(|e| Error::Config(format!("bad metrics addr {addr:?}: {e}")))?;
+    let mut s = std::net::TcpStream::connect_timeout(&sock_addr, timeout)?;
+    s.set_read_timeout(Some(timeout))?;
+    s.set_write_timeout(Some(timeout))?;
+    s.write_all(format!("GET /metrics HTTP/1.0\r\nHost: {addr}\r\n\r\n").as_bytes())?;
+    let mut raw = String::new();
+    s.read_to_string(&mut raw)?;
+    let (head, body) = raw
+        .split_once("\r\n\r\n")
+        .ok_or_else(|| Error::Invariant("metrics response missing header terminator".into()))?;
+    let status = head.lines().next().unwrap_or("");
+    if !status.contains(" 200 ") {
+        return Err(Error::Invariant(format!("metrics scrape failed: {status}")));
+    }
+    Ok(body.to_owned())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recorder_samples_and_dumps_csv() {
+        // A private registry keeps this test independent of the
+        // process-global instruments.
+        let reg: &'static Registry = Box::leak(Box::new(Registry::new()));
+        let c = reg.counter("rec_ops_total", "ops");
+        let h = reg.histogram("rec_lat_us", "lat");
+        let rec = FlightRecorder::start(reg, Duration::from_millis(5), 64);
+        for i in 0..50u64 {
+            c.inc();
+            h.record(i * 10);
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let report = rec.stop();
+        assert!(report.samples >= 2, "several interval samples plus the final one");
+        assert_eq!(report.dropped, 0);
+        assert_eq!(report.retained() as u64, report.samples);
+        let mut csv = Vec::new();
+        report.write_csv(&mut csv).expect("csv");
+        let text = String::from_utf8(csv).expect("utf8");
+        let mut lines = text.lines();
+        let header = lines.next().expect("header");
+        assert!(header.starts_with("ts_us,"));
+        assert!(header.contains("\"rec_ops_total\""));
+        assert!(header.contains("\"rec_lat_us_count\""));
+        assert!(header.contains("\"rec_lat_us_p99\""));
+        let cols = header.split(',').count();
+        let mut last_ts = 0u64;
+        let mut last_ops = 0f64;
+        let mut rows = 0;
+        for line in lines {
+            let cells: Vec<&str> = line.split(',').collect();
+            assert_eq!(cells.len(), cols, "rectangular rows");
+            let ts: u64 = cells[0].parse().expect("ts");
+            assert!(ts >= last_ts, "timestamps monotone");
+            last_ts = ts;
+            let ops: f64 = cells[1].parse().expect("ops cell");
+            assert!(ops >= last_ops, "counter column monotone");
+            last_ops = ops;
+            rows += 1;
+        }
+        assert_eq!(rows as u64, report.samples);
+        assert_eq!(last_ops, 50.0, "final snapshot sees every increment");
+    }
+
+    #[test]
+    fn full_ring_overwrites_oldest_and_counts_drops() {
+        let reg: &'static Registry = Box::leak(Box::new(Registry::new()));
+        let g = reg.gauge("rec_tick", "tick");
+        let inner = RecorderInner {
+            cap: 4,
+            epoch: Instant::now(),
+            ring: Mutex::new(VecDeque::new()),
+            taken: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        };
+        for i in 0..10 {
+            g.set(i);
+            inner.sample(reg);
+        }
+        assert_eq!(inner.taken.load(Ordering::Relaxed), 10);
+        assert_eq!(inner.dropped.load(Ordering::Relaxed), 6);
+        let ring = inner.ring.lock().unwrap();
+        assert_eq!(ring.len(), 4);
+        // Flight-recorder semantics: the *most recent* history survives.
+        assert_eq!(ring.back().unwrap().values[0], 9.0);
+        assert_eq!(ring.front().unwrap().values[0], 6.0);
+    }
+
+    #[test]
+    fn late_registrations_pad_as_empty_cells() {
+        let reg: &'static Registry = Box::leak(Box::new(Registry::new()));
+        let _a = reg.counter("rec_first_total", "first");
+        let inner = RecorderInner {
+            cap: 8,
+            epoch: Instant::now(),
+            ring: Mutex::new(VecDeque::new()),
+            taken: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        };
+        inner.sample(reg);
+        let _b = reg.counter("rec_second_total", "second");
+        inner.sample(reg);
+        let report = RecorderReport {
+            columns: column_names(reg),
+            rows: inner.ring.lock().unwrap().iter().cloned().collect(),
+            samples: 2,
+            dropped: 0,
+        };
+        let mut csv = Vec::new();
+        report.write_csv(&mut csv).unwrap();
+        let text = String::from_utf8(csv).unwrap();
+        let rows: Vec<&str> = text.lines().collect();
+        assert_eq!(rows.len(), 3);
+        assert!(rows[1].ends_with(','), "missing late column pads empty");
+        assert!(!rows[2].ends_with(','));
+    }
+}

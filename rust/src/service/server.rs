@@ -104,12 +104,14 @@ use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::os::unix::io::AsRawFd;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex, RwLock};
+use std::sync::{mpsc, Arc, Mutex, OnceLock, RwLock};
 use std::time::{Duration, Instant};
 
+use crate::metrics::{Counter as MCounter, Gauge as MGauge};
 use crate::pq::traits::{ConcurrentPQ, KEY_MAX_SENTINEL};
 use crate::service::proto::{self, Request, Response, ServiceStats};
 use crate::util::error::{Error, Result};
+use crate::util::hist::LatencyHist;
 use crate::util::poll::{Interest, PollEvent, Poller, Waker};
 use crate::util::sync::CacheLine;
 use crate::workloads::driver::{build_queue, AdaptiveProbe, BuiltQueue};
@@ -165,6 +167,12 @@ pub struct ServiceConfig {
     /// disables it): a client that stops reading for this long is
     /// severed instead of pinning its handler thread.
     pub write_timeout_ms: u64,
+    /// Optional bind address for the plain-text HTTP `/metrics`
+    /// endpoint (`--metrics-addr`; `127.0.0.1:0` picks a free port).
+    /// The listener joins the reactor's poll loop — no extra thread —
+    /// and serves the process-global [`crate::metrics`] registry as
+    /// Prometheus text exposition to any standard scraper.
+    pub metrics_addr: Option<String>,
 }
 
 impl Default for ServiceConfig {
@@ -184,6 +192,7 @@ impl Default for ServiceConfig {
             rebalance_min_ops: 1_000,
             strict_span: false,
             write_timeout_ms: 2_000,
+            metrics_addr: None,
         }
     }
 }
@@ -338,6 +347,10 @@ pub struct ShardedPq {
     /// Per-shard window op counters feeding the imbalance trigger (one
     /// cache line each — they are touched on every request sweep).
     loads: Vec<CacheLine<AtomicU64>>,
+    /// Per-shard *lifetime* op counters — unlike `loads` these are
+    /// never reset by the rebalancer, so they are a legal Prometheus
+    /// counter source (the `smartpq_shard_ops_total` family).
+    ops_lifetime: Vec<CacheLine<AtomicU64>>,
     /// Completed epoch migrations.
     rebalances: AtomicU64,
     rebalance_imbalance: f64,
@@ -395,11 +408,13 @@ impl ShardedPq {
             .collect();
         let tree = MinTree::new(cfg.shards);
         let loads = (0..cfg.shards).map(|_| CacheLine::new(AtomicU64::new(0))).collect();
+        let ops_lifetime = (0..cfg.shards).map(|_| CacheLine::new(AtomicU64::new(0))).collect();
         Ok(ShardedPq {
             shards,
             map: RwLock::new(ShardMap { bounds, epoch: 0 }),
             tree,
             loads,
+            ops_lifetime,
             rebalances: AtomicU64::new(0),
             rebalance_imbalance: cfg.rebalance_imbalance,
             rebalance_min_ops: cfg.rebalance_min_ops,
@@ -440,6 +455,21 @@ impl ShardedPq {
     /// Per-shard window op counters (reset by each rebalance check).
     pub fn shard_ops(&self) -> Vec<u64> {
         self.loads.iter().map(|l| l.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Per-shard lifetime op counters: monotone, never reset, so the
+    /// metrics collector can expose them as Prometheus counters.
+    pub fn shard_ops_lifetime(&self) -> Vec<u64> {
+        self.ops_lifetime.iter().map(|l| l.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Count `n` executed ops against shard `s`: once in the rebalance
+    /// observation window (`loads`) and once in the monotone lifetime
+    /// ledger behind `smartpq_shard_ops_total`.
+    #[inline]
+    fn note_ops(&self, s: usize, n: u64) {
+        self.loads[s].fetch_add(n, Ordering::Relaxed);
+        self.ops_lifetime[s].fetch_add(n, Ordering::Relaxed);
     }
 
     /// One coherent stats snapshot for the `Stats` frame.
@@ -512,7 +542,7 @@ impl ShardedPq {
     /// (duplicates are already covered by an earlier lower bound;
     /// sentinel rejects are not live at all).
     fn note_insert_outcomes(&self, s: usize, items: &[(u64, u64)], ok: &[bool]) {
-        self.loads[s].fetch_add(items.len() as u64, Ordering::Relaxed);
+        self.note_ops(s, items.len() as u64);
         let accepted = ok.iter().filter(|&&o| o).count() as u64;
         if accepted > 0 {
             self.inserted.fetch_add(accepted, Ordering::Relaxed);
@@ -588,7 +618,7 @@ impl ShardedPq {
                 continue;
             }
             if let Some(kv) = self.shards[s].queue.delete_min() {
-                self.loads[s].fetch_add(1, Ordering::Relaxed);
+                self.note_ops(s, 1);
                 self.popped.fetch_add(1, Ordering::Relaxed);
                 self.tree.refresh(s, observed, self.fresh_hint(s, false));
                 return Some(kv);
@@ -600,7 +630,7 @@ impl ShardedPq {
         for (s, shard) in self.shards.iter().enumerate() {
             let observed = self.tree.leaf_value(s);
             if let Some(kv) = shard.queue.delete_min() {
-                self.loads[s].fetch_add(1, Ordering::Relaxed);
+                self.note_ops(s, 1);
                 self.popped.fetch_add(1, Ordering::Relaxed);
                 self.tree.refresh(s, observed, self.fresh_hint(s, false));
                 return Some(kv);
@@ -638,7 +668,7 @@ impl ShardedPq {
             if took > 0 {
                 got += took;
                 spins = 0; // progress resets the probe budget
-                self.loads[s].fetch_add(took as u64, Ordering::Relaxed);
+                self.note_ops(s, took as u64);
                 self.popped.fetch_add(took as u64, Ordering::Relaxed);
                 self.tree.refresh(s, observed, self.fresh_hint(s, false));
             } else {
@@ -653,7 +683,7 @@ impl ShardedPq {
             let took = shard.queue.delete_min_batch(n - got, out);
             if took > 0 {
                 got += took;
-                self.loads[s].fetch_add(took as u64, Ordering::Relaxed);
+                self.note_ops(s, took as u64);
                 self.popped.fetch_add(took as u64, Ordering::Relaxed);
                 self.tree.refresh(s, observed, self.fresh_hint(s, false));
             } else {
@@ -870,14 +900,187 @@ impl ServiceShared {
 const TOKEN_LISTENER: u64 = 0;
 /// Readiness token of the reactor's self-pipe waker.
 const TOKEN_WAKER: u64 = 1;
+/// Readiness token of the optional `/metrics` HTTP listener.
+const TOKEN_METRICS: u64 = 2;
 /// First connection token; tokens are monotone and never reused, so a
 /// late worker completion can never be delivered to the wrong
 /// connection.
-const TOKEN_CONN0: u64 = 2;
+const TOKEN_CONN0: u64 = 3;
 
 /// Reactor tick: the upper bound on how stale lifecycle flags, write
 /// deadlines, and drain-quiesce checks may go between wakeups.
 const TICK: Duration = Duration::from_millis(50);
+
+/// Cap on a metrics connection's request head: scrapers send a few
+/// hundred bytes of headers; anything past this is not a scrape.
+const MAX_HTTP_REQ: usize = 4096;
+
+/// Reactor-loop instruments (process-global, registered on first
+/// touch). Hot-path updates are gated on [`crate::metrics::enabled`]
+/// so `bench --figure service` can measure metered vs bare.
+struct ReactorMetrics {
+    wakeups: Arc<MCounter>,
+    ready_events: Arc<LatencyHist>,
+    loop_us: Arc<LatencyHist>,
+    jobs_inflight: Arc<MGauge>,
+    conns: Arc<MGauge>,
+}
+
+fn reactor_metrics() -> &'static ReactorMetrics {
+    static M: OnceLock<ReactorMetrics> = OnceLock::new();
+    M.get_or_init(|| {
+        let r = crate::metrics::registry();
+        ReactorMetrics {
+            wakeups: r.counter(
+                "smartpq_reactor_wakeups_total",
+                "Reactor readiness-loop wakeups (poll returns, including empty ticks).",
+            ),
+            ready_events: r.histogram(
+                "smartpq_reactor_ready_events",
+                "Readiness events delivered per non-empty reactor wakeup.",
+            ),
+            loop_us: r.histogram(
+                "smartpq_reactor_loop_us",
+                "Reactor loop-iteration service time in microseconds (productive iterations).",
+            ),
+            jobs_inflight: r.gauge(
+                "smartpq_jobs_inflight",
+                "Request runs currently executing on the worker pool.",
+            ),
+            conns: r.gauge(
+                "smartpq_conns",
+                "Connections resident in the reactor (including metrics scrapes).",
+            ),
+        }
+    })
+}
+
+/// Worker-pool instruments (process-global, gated like
+/// [`ReactorMetrics`]).
+struct WorkerMetrics {
+    busy_us: Arc<MCounter>,
+    idle_us: Arc<MCounter>,
+    runs: Arc<MCounter>,
+    batch: Arc<LatencyHist>,
+}
+
+fn worker_metrics() -> &'static WorkerMetrics {
+    static M: OnceLock<WorkerMetrics> = OnceLock::new();
+    M.get_or_init(|| {
+        let r = crate::metrics::registry();
+        WorkerMetrics {
+            busy_us: r.counter(
+                "smartpq_worker_busy_us_total",
+                "Cumulative worker time spent executing request runs, microseconds.",
+            ),
+            idle_us: r.counter(
+                "smartpq_worker_idle_us_total",
+                "Cumulative worker time spent waiting for jobs, microseconds.",
+            ),
+            runs: r.counter(
+                "smartpq_worker_runs_total",
+                "Request runs executed by the worker pool.",
+            ),
+            batch: r.histogram(
+                "smartpq_worker_batch",
+                "Requests fused into one worker run.",
+            ),
+        }
+    })
+}
+
+/// Register (or replace) the process-global `service` collector: a
+/// closure that copies scrape-time service state — per-shard residency
+/// and lifetime ops, the conservation ledger, fault counters, the
+/// shard-map epoch — into gauges and counters right before every
+/// exposition render and flight-recorder sample. Collectors run
+/// whether or not [`crate::metrics::enabled`] is set, so a scrape is
+/// always coherent; the closure holds only a [`Weak`] to the shards,
+/// so a stopped service goes quiet instead of staying alive.
+fn register_service_metrics(sharded: &Arc<ShardedPq>) {
+    let reg = crate::metrics::registry();
+    // A fresh service may have fewer shards than its predecessor in
+    // this process: zero every existing per-shard series so stale
+    // shards stop contributing to sums over the family.
+    for fam in reg.families() {
+        if fam.name == "smartpq_shard_resident" || fam.name == "smartpq_shard_ops_total" {
+            for s in fam.series {
+                match s.value {
+                    crate::metrics::Value::Gauge(g) => g.set(0),
+                    crate::metrics::Value::Counter(c) => c.set(0),
+                    crate::metrics::Value::Hist(_) => {}
+                }
+            }
+        }
+    }
+    let shard_resident: Vec<Arc<MGauge>> = (0..sharded.shard_count())
+        .map(|s| {
+            let lbl = s.to_string();
+            reg.gauge_with(
+                "smartpq_shard_resident",
+                "Resident elements per shard at scrape time.",
+                &[("shard", &lbl)],
+            )
+        })
+        .collect();
+    let shard_ops: Vec<Arc<MCounter>> = (0..sharded.shard_count())
+        .map(|s| {
+            let lbl = s.to_string();
+            reg.counter_with(
+                "smartpq_shard_ops_total",
+                "Lifetime operations executed against each shard.",
+                &[("shard", &lbl)],
+            )
+        })
+        .collect();
+    let inserted = reg.counter(
+        "smartpq_inserted_total",
+        "Lifetime accepted inserts (one side of the conservation ledger).",
+    );
+    let popped = reg.counter(
+        "smartpq_popped_total",
+        "Lifetime successful pops (the other side of the conservation ledger).",
+    );
+    let poisoned = reg.counter(
+        "smartpq_poisoned_total",
+        "Connections whose handler panicked (isolated; the worker survived).",
+    );
+    let drained = reg.counter(
+        "smartpq_drained_total",
+        "Connections retired by a graceful drain.",
+    );
+    let rebalances = reg.counter(
+        "smartpq_rebalances_total",
+        "Completed shard-map rebalances (epoch migrations).",
+    );
+    let epoch = reg.gauge("smartpq_epoch", "Current shard-map epoch.");
+    let resident = reg.gauge(
+        "smartpq_resident",
+        "Total resident elements across all shards at scrape time.",
+    );
+    let weak = Arc::downgrade(sharded);
+    reg.set_collector("service", move || {
+        let Some(pq) = weak.upgrade() else { return };
+        let (ins, pop, res) = pq.conservation();
+        inserted.set(ins);
+        popped.set(pop);
+        resident.set(res as i64);
+        poisoned.set(pq.poisoned());
+        drained.set(pq.drained());
+        rebalances.set(pq.rebalances());
+        epoch.set(pq.epoch() as i64);
+        for (s, len) in pq.shard_lens().into_iter().enumerate() {
+            if let Some(g) = shard_resident.get(s) {
+                g.set(len as i64);
+            }
+        }
+        for (s, ops) in pq.shard_ops_lifetime().into_iter().enumerate() {
+            if let Some(c) = shard_ops.get(s) {
+                c.set(ops);
+            }
+        }
+    });
+}
 
 /// How long a draining connection must stay quiet (no bytes, no job in
 /// flight, an empty write buffer) before the reactor retires it — the
@@ -929,6 +1132,7 @@ fn worker_loop(
     shared: &ServiceShared,
 ) {
     loop {
+        let t_idle = Instant::now();
         let job = {
             let rx = jobs.lock().expect("worker rx lock");
             rx.recv()
@@ -937,7 +1141,11 @@ fn worker_loop(
             Ok(j) => j,
             Err(_) => return, // reactor gone: stopping
         };
+        if crate::metrics::enabled() {
+            worker_metrics().idle_us.add(t_idle.elapsed().as_micros() as u64);
+        }
         let t_us = crate::trace::now_us();
+        let t_busy = Instant::now();
         let nreqs = job.reqs.len() as u64;
         let done = match run_isolated(sharded, job.label, || {
             let mut wire = Vec::new();
@@ -964,6 +1172,12 @@ fn worker_loop(
             nreqs,
             done.wire.len() as u64,
         );
+        if crate::metrics::enabled() {
+            let m = worker_metrics();
+            m.busy_us.add(t_busy.elapsed().as_micros() as u64);
+            m.runs.inc();
+            m.batch.record(nreqs);
+        }
         if done_tx.send(done).is_err() {
             return; // reactor gone mid-run
         }
@@ -976,6 +1190,7 @@ fn worker_loop(
 /// adaptive backends) the decision monitor.
 pub struct PqService {
     addr: SocketAddr,
+    metrics_addr: Option<SocketAddr>,
     shared: Arc<ServiceShared>,
     sharded: Arc<ShardedPq>,
     probes: Vec<Arc<dyn AdaptiveProbe>>,
@@ -989,11 +1204,27 @@ impl PqService {
     /// running service.
     pub fn start(cfg: ServiceConfig) -> Result<PqService> {
         let sharded = Arc::new(ShardedPq::new(&cfg)?);
+        register_service_metrics(&sharded);
         let listener = TcpListener::bind(&cfg.addr)?;
         listener.set_nonblocking(true)?;
         let addr = listener.local_addr()?;
+        let metrics_listener = match &cfg.metrics_addr {
+            Some(a) => {
+                let l = TcpListener::bind(a)?;
+                l.set_nonblocking(true)?;
+                Some(l)
+            }
+            None => None,
+        };
+        let metrics_addr = match &metrics_listener {
+            Some(l) => Some(l.local_addr()?),
+            None => None,
+        };
         let mut poller = Poller::new()?;
         poller.register(listener.as_raw_fd(), TOKEN_LISTENER, Interest::READ)?;
+        if let Some(l) = &metrics_listener {
+            poller.register(l.as_raw_fd(), TOKEN_METRICS, Interest::READ)?;
+        }
         let waker = poller.waker(TOKEN_WAKER)?;
         let shared = Arc::new(ServiceShared {
             stop: AtomicBool::new(false),
@@ -1067,10 +1298,12 @@ impl PqService {
             let reactor = Reactor {
                 poller,
                 listener,
+                metrics_listener,
                 listener_paused: false,
                 conns: HashMap::new(),
                 next_token: TOKEN_CONN0,
                 max_conns: cfg.max_conns.max(1),
+                inflight: 0,
                 job_tx,
                 done_rx,
                 shared: Arc::clone(&shared),
@@ -1083,6 +1316,7 @@ impl PqService {
         };
         Ok(PqService {
             addr,
+            metrics_addr,
             shared,
             sharded,
             probes,
@@ -1095,6 +1329,13 @@ impl PqService {
     /// The bound address (useful with port 0).
     pub fn addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// The bound `/metrics` address, when
+    /// [`ServiceConfig::metrics_addr`] was configured (useful with
+    /// port 0).
+    pub fn metrics_addr(&self) -> Option<SocketAddr> {
+        self.metrics_addr
     }
 
     /// Approximate elements across all shards.
@@ -1198,6 +1439,10 @@ struct Conn {
     stream: TcpStream,
     /// Peer label (port) for trace events.
     label: u64,
+    /// Accepted on the metrics listener: the connection speaks HTTP
+    /// (`GET /metrics`) instead of the binary protocol, never
+    /// dispatches to the worker pool, and closes after one response.
+    http: bool,
     /// Received-but-undecoded bytes; once a run dispatches this holds
     /// at most an incomplete frame tail.
     rbuf: Vec<u8>,
@@ -1231,6 +1476,18 @@ enum Sweep {
     Closed,
 }
 
+/// What one read pass over a metrics (HTTP) connection decided,
+/// extracted before any lifecycle action so the connection borrow is
+/// released first.
+enum HttpStep {
+    /// Connection is done (EOF, error, or an oversized request head).
+    Close,
+    /// The request head is complete: answer it.
+    Answer(String),
+    /// Head still incomplete; keep reading until the socket drains.
+    More,
+}
+
 /// What a decode pass found, extracted before any lifecycle action so
 /// the connection borrow is released first.
 enum Decoded {
@@ -1248,10 +1505,15 @@ enum Decoded {
 struct Reactor {
     poller: Poller,
     listener: TcpListener,
+    /// Optional `/metrics` HTTP listener, polled in the same loop.
+    metrics_listener: Option<TcpListener>,
     listener_paused: bool,
     conns: HashMap<u64, Conn>,
     next_token: u64,
     max_conns: usize,
+    /// Jobs currently on the worker pool (dispatches minus
+    /// completions), mirrored into the `smartpq_jobs_inflight` gauge.
+    inflight: i64,
     job_tx: mpsc::Sender<Job>,
     done_rx: mpsc::Receiver<Done>,
     shared: Arc<ServiceShared>,
@@ -1275,6 +1537,7 @@ impl Reactor {
             if self.poller.wait(&mut events, Some(TICK)).is_err() {
                 break; // a dead poller cannot make progress
             }
+            let t_loop = Instant::now();
             let nevents = events.len() as u64;
             let completions = self.drain_completions();
             if self.shared.stop.load(Ordering::Acquire) {
@@ -1288,10 +1551,13 @@ impl Reactor {
                 match ev.token {
                     TOKEN_LISTENER => self.accept_ready(),
                     TOKEN_WAKER => self.poller.drain_waker(),
+                    TOKEN_METRICS => self.accept_metrics_ready(),
                     token => dispatched += self.conn_ready(token, ev),
                 }
             }
             self.check_write_deadlines();
+            self.inflight += dispatched as i64;
+            self.inflight -= completions as i64;
             if nevents + completions + dispatched > 0 {
                 crate::trace::instant(
                     crate::trace::EventKind::ReactorWake,
@@ -1299,6 +1565,18 @@ impl Reactor {
                     dispatched,
                     completions,
                 );
+            }
+            if crate::metrics::enabled() {
+                let m = reactor_metrics();
+                m.wakeups.inc();
+                if nevents > 0 {
+                    m.ready_events.record(nevents);
+                }
+                if nevents + completions + dispatched > 0 {
+                    m.loop_us.record(t_loop.elapsed().as_micros() as u64);
+                }
+                m.jobs_inflight.set(self.inflight);
+                m.conns.set(self.conns.len() as i64);
             }
         }
         // Best-effort nonblocking flush of tiny pending responses (the
@@ -1379,6 +1657,57 @@ impl Reactor {
                         Conn {
                             stream,
                             label: peer.port() as u64,
+                            http: false,
+                            rbuf: Vec::new(),
+                            wbuf: Vec::new(),
+                            woff: 0,
+                            busy: false,
+                            closing: false,
+                            interest: Interest::READ,
+                            last_activity: Instant::now(),
+                            write_since: None,
+                        },
+                    );
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => return,
+            }
+        }
+    }
+
+    /// Accept scrape connections on the `/metrics` listener. Over the
+    /// fd budget they are accepted and immediately dropped (a scraper
+    /// retries; parking a level-triggered listener here would re-fire
+    /// every tick instead).
+    fn accept_metrics_ready(&mut self) {
+        loop {
+            let accepted = match self.metrics_listener.as_ref() {
+                Some(l) => l.accept(),
+                None => return,
+            };
+            match accepted {
+                Ok((stream, peer)) => {
+                    if self.conns.len() >= self.max_conns {
+                        continue; // dropped: the scraper retries
+                    }
+                    let _ = stream.set_nonblocking(true);
+                    let _ = stream.set_nodelay(true);
+                    let token = self.next_token;
+                    self.next_token += 1;
+                    if self
+                        .poller
+                        .register(stream.as_raw_fd(), token, Interest::READ)
+                        .is_err()
+                    {
+                        continue;
+                    }
+                    self.conns.insert(
+                        token,
+                        Conn {
+                            stream,
+                            label: peer.port() as u64,
+                            http: true,
                             rbuf: Vec::new(),
                             wbuf: Vec::new(),
                             woff: 0,
@@ -1403,6 +1732,9 @@ impl Reactor {
             let _ = self
                 .poller
                 .modify(self.listener.as_raw_fd(), TOKEN_LISTENER, Interest::NONE);
+            if let Some(l) = &self.metrics_listener {
+                let _ = self.poller.modify(l.as_raw_fd(), TOKEN_METRICS, Interest::NONE);
+            }
         }
     }
 
@@ -1415,20 +1747,27 @@ impl Reactor {
             let _ = self
                 .poller
                 .modify(self.listener.as_raw_fd(), TOKEN_LISTENER, Interest::READ);
+            if let Some(l) = &self.metrics_listener {
+                let _ = self.poller.modify(l.as_raw_fd(), TOKEN_METRICS, Interest::READ);
+            }
         }
     }
 
     /// Service one readiness report for a connection; returns 1 when a
     /// job was dispatched to the worker pool.
     fn conn_ready(&mut self, token: u64, ev: PollEvent) -> u64 {
-        let (busy, closing, pending) = match self.conns.get(&token) {
-            Some(c) => (c.busy, c.closing, c.woff < c.wbuf.len()),
+        let (busy, closing, pending, http) = match self.conns.get(&token) {
+            Some(c) => (c.busy, c.closing, c.woff < c.wbuf.len(), c.http),
             None => return 0, // closed earlier this sweep
         };
         if (ev.writable || (ev.error && pending)) && !self.flush_conn(token) {
             return 0; // the flush closed it
         }
         if (ev.readable || ev.error) && !busy && !closing {
+            if http {
+                self.read_http(token);
+                return 0;
+            }
             return self.read_conn(token);
         }
         0
@@ -1495,6 +1834,98 @@ impl Reactor {
                 }
             }
         }
+    }
+
+    /// Read a metrics connection until its HTTP request head is
+    /// complete, then answer it (flush-then-close). No HTTP library:
+    /// the endpoint speaks just enough HTTP/1.0 for any standard
+    /// scraper — request head up to [`MAX_HTTP_REQ`] bytes, one
+    /// response, `Connection: close`.
+    fn read_http(&mut self, token: u64) {
+        let mut chunk = [0u8; 1024];
+        loop {
+            let step = {
+                let Some(conn) = self.conns.get_mut(&token) else {
+                    return;
+                };
+                match conn.stream.read(&mut chunk) {
+                    Ok(0) => HttpStep::Close,
+                    Ok(n) => {
+                        conn.last_activity = Instant::now();
+                        conn.rbuf.extend_from_slice(&chunk[..n]);
+                        if let Some(end) = conn.rbuf.windows(4).position(|w| w == b"\r\n\r\n") {
+                            let head = String::from_utf8_lossy(&conn.rbuf[..end]).into_owned();
+                            conn.rbuf.clear();
+                            HttpStep::Answer(head)
+                        } else if conn.rbuf.len() > MAX_HTTP_REQ {
+                            HttpStep::Close // not a scrape
+                        } else {
+                            HttpStep::More
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => HttpStep::Close,
+                }
+            };
+            match step {
+                HttpStep::Close => {
+                    self.close_conn(token, false);
+                    return;
+                }
+                HttpStep::Answer(head) => {
+                    self.answer_http(token, &head);
+                    return;
+                }
+                HttpStep::More => {} // keep reading until WouldBlock
+            }
+        }
+    }
+
+    /// Queue the HTTP response for a parsed request head and put the
+    /// connection into flush-then-close. `GET /metrics` renders the
+    /// process-global registry (collectors run inside
+    /// [`crate::metrics::render`], on the reactor thread — a scrape
+    /// costs one registry walk, never a queue operation).
+    fn answer_http(&mut self, token: u64, head: &str) {
+        let line = head.lines().next().unwrap_or("");
+        let mut parts = line.split_whitespace();
+        let method = parts.next().unwrap_or("");
+        let path = parts.next().unwrap_or("");
+        let (status, ctype, body) = if method != "GET" {
+            (
+                "405 Method Not Allowed",
+                "text/plain; charset=utf-8",
+                "method not allowed\n".to_string(),
+            )
+        } else if path == "/metrics" || path.starts_with("/metrics?") {
+            (
+                "200 OK",
+                crate::metrics::expo::CONTENT_TYPE,
+                crate::metrics::render(),
+            )
+        } else {
+            (
+                "404 Not Found",
+                "text/plain; charset=utf-8",
+                "try /metrics\n".to_string(),
+            )
+        };
+        let Some(conn) = self.conns.get_mut(&token) else {
+            return;
+        };
+        let header = format!(
+            "HTTP/1.0 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\n\
+             Connection: close\r\n\r\n",
+            body.len()
+        );
+        conn.wbuf.extend_from_slice(header.as_bytes());
+        conn.wbuf.extend_from_slice(body.as_bytes());
+        conn.closing = true;
+        if conn.write_since.is_none() {
+            conn.write_since = Some(Instant::now());
+        }
+        self.flush_conn(token);
     }
 
     /// Decode every complete frame in the receive buffer and dispatch
@@ -1686,23 +2117,25 @@ impl Reactor {
 
     /// Under drain: retire every connection that has gone quiet — no
     /// job in flight, nothing undecoded, write buffer drained, and no
-    /// bytes for [`DRAIN_QUIET`].
+    /// bytes for [`DRAIN_QUIET`]. Metrics (HTTP) connections retire
+    /// even mid-request (they owe the service nothing) and are not
+    /// counted as drained clients.
     fn retire_quiet_conns(&mut self) {
         let now = Instant::now();
-        let quiet: Vec<u64> = self
+        let quiet: Vec<(u64, bool)> = self
             .conns
             .iter()
             .filter(|(_, c)| {
                 !c.busy
                     && !c.closing
-                    && c.rbuf.is_empty()
+                    && (c.http || c.rbuf.is_empty())
                     && c.woff >= c.wbuf.len()
                     && now.duration_since(c.last_activity) >= DRAIN_QUIET
             })
-            .map(|(&t, _)| t)
+            .map(|(&t, c)| (t, c.http))
             .collect();
-        for token in quiet {
-            self.close_conn(token, true);
+        for (token, http) in quiet {
+            self.close_conn(token, !http);
         }
     }
 

@@ -48,11 +48,23 @@ fn bucket_floor(idx: usize) -> u64 {
     (SUB_BUCKETS as u64 + sub) << octave
 }
 
+/// Largest value mapping to bucket `idx` — the inclusive `le` upper
+/// bound the Prometheus exposition encoder labels the bucket with.
+#[inline]
+fn bucket_ceil(idx: usize) -> u64 {
+    if idx + 1 < N_BUCKETS {
+        bucket_floor(idx + 1) - 1
+    } else {
+        u64::MAX
+    }
+}
+
 /// A concurrent log-bucketed histogram (see module docs).
 #[derive(Debug)]
 pub struct LatencyHist {
     counts: Box<[AtomicU64]>,
     total: AtomicU64,
+    sum: AtomicU64,
     max: AtomicU64,
 }
 
@@ -68,6 +80,7 @@ impl LatencyHist {
         LatencyHist {
             counts: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
             total: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
             max: AtomicU64::new(0),
         }
     }
@@ -78,6 +91,7 @@ impl LatencyHist {
     pub fn record(&self, v: u64) {
         self.counts[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
         self.total.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
         self.max.fetch_max(v, Ordering::Relaxed);
     }
 
@@ -86,9 +100,31 @@ impl LatencyHist {
         self.total.load(Ordering::Relaxed)
     }
 
+    /// Sum of every recorded value (the Prometheus `_sum` series).
+    pub fn value_sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
     /// Largest recorded value.
     pub fn max(&self) -> u64 {
         self.max.load(Ordering::Relaxed)
+    }
+
+    /// Fold every sample of `other` into `self` (per-bucket adds; both
+    /// histograms stay usable). Meant for combining quiesced per-worker
+    /// histograms into one distribution; merging a histogram that is
+    /// still being written is safe but may catch a sample's bucket
+    /// increment without its sum increment (and vice versa).
+    pub fn merge(&self, other: &LatencyHist) {
+        let snap = other.snapshot();
+        for (i, &c) in snap.counts.iter().enumerate() {
+            if c > 0 {
+                self.counts[i].fetch_add(c, Ordering::Relaxed);
+            }
+        }
+        self.total.fetch_add(snap.total, Ordering::Relaxed);
+        self.sum.fetch_add(snap.sum, Ordering::Relaxed);
+        self.max.fetch_max(other.max(), Ordering::Relaxed);
     }
 
     /// Immutable copy of the current counts (quantile queries and
@@ -96,7 +132,8 @@ impl LatencyHist {
     pub fn snapshot(&self) -> HistSnapshot {
         let counts: Vec<u64> = self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect();
         let total = counts.iter().sum();
-        HistSnapshot { counts, total }
+        let sum = self.sum.load(Ordering::Relaxed);
+        HistSnapshot { counts, total, sum }
     }
 
     /// Convenience: quantile over the current contents.
@@ -110,12 +147,18 @@ impl LatencyHist {
 pub struct HistSnapshot {
     counts: Vec<u64>,
     total: u64,
+    sum: u64,
 }
 
 impl HistSnapshot {
     /// Samples in the snapshot.
     pub fn total(&self) -> u64 {
         self.total
+    }
+
+    /// Sum of every recorded value (the Prometheus `_sum` series).
+    pub fn value_sum(&self) -> u64 {
+        self.sum
     }
 
     /// Per-bucket difference `self - earlier` (saturating): the
@@ -128,7 +171,38 @@ impl HistSnapshot {
             .map(|(i, &c)| c.saturating_sub(earlier.counts.get(i).copied().unwrap_or(0)))
             .collect();
         let total = counts.iter().sum();
-        HistSnapshot { counts, total }
+        let sum = self.sum.saturating_sub(earlier.sum);
+        HistSnapshot { counts, total, sum }
+    }
+
+    /// Merge `other` into `self` (per-bucket saturating adds): the
+    /// snapshot a single histogram fed both streams would have taken.
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        if self.counts.len() < other.counts.len() {
+            self.counts.resize(other.counts.len(), 0);
+        }
+        for (i, &c) in other.counts.iter().enumerate() {
+            self.counts[i] = self.counts[i].saturating_add(c);
+        }
+        self.total = self.counts.iter().sum();
+        self.sum = self.sum.saturating_add(other.sum);
+    }
+
+    /// Cumulative view over the non-empty buckets, in bucket order:
+    /// yields `(upper_bound, cumulative_count)` pairs where
+    /// `upper_bound` is the largest value mapping to the bucket
+    /// (inclusive, so it is a valid Prometheus `le` label) and
+    /// `cumulative_count` counts every sample `<= upper_bound`. The
+    /// final pair's cumulative count equals [`HistSnapshot::total`].
+    pub fn cumulative(&self) -> impl Iterator<Item = (u64, u64)> + '_ {
+        let mut cum = 0u64;
+        self.counts.iter().enumerate().filter_map(move |(i, &c)| {
+            if c == 0 {
+                return None;
+            }
+            cum += c;
+            Some((bucket_ceil(i), cum))
+        })
     }
 
     /// Value at quantile `q` in `[0, 1]` (lower bucket bound, i.e. a
@@ -262,6 +336,87 @@ mod tests {
     #[test]
     fn ns_to_us_scales() {
         assert!((ns_to_us(1_500) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merging_worker_histograms_equals_one_combined_stream() {
+        // Property: splitting a stream across per-worker histograms and
+        // merging them afterwards is indistinguishable from feeding one
+        // histogram the combined stream — counts, sum, max, quantiles.
+        let mut state = 0x9E37_79B9_7F4A_7C15u64;
+        let mut next = move || {
+            // xorshift*: deterministic, spans many octaves via masking.
+            state ^= state >> 12;
+            state ^= state << 25;
+            state ^= state >> 27;
+            let v = state.wrapping_mul(0x2545_F491_4F6C_DD1D);
+            v & ((1 << (v % 48)) - 1).max(1)
+        };
+        let workers: Vec<LatencyHist> = (0..4).map(|_| LatencyHist::new()).collect();
+        let combined = LatencyHist::new();
+        for i in 0..40_000usize {
+            let v = next();
+            workers[i % workers.len()].record(v);
+            combined.record(v);
+        }
+        let merged = LatencyHist::new();
+        for w in &workers {
+            merged.merge(w);
+        }
+        assert_eq!(merged.snapshot(), combined.snapshot());
+        assert_eq!(merged.count(), combined.count());
+        assert_eq!(merged.value_sum(), combined.value_sum());
+        assert_eq!(merged.max(), combined.max());
+        for q in [0.0, 0.5, 0.9, 0.99, 0.999, 1.0] {
+            assert_eq!(merged.quantile(q), combined.quantile(q), "quantile {q}");
+        }
+        // Snapshot-level merge agrees with histogram-level merge.
+        let mut snap = HistSnapshot::default();
+        for w in &workers {
+            snap.merge(&w.snapshot());
+        }
+        assert_eq!(snap, combined.snapshot());
+    }
+
+    #[test]
+    fn cumulative_iterator_is_monotone_and_ends_at_total() {
+        let h = LatencyHist::new();
+        for v in [0u64, 5, 5, 700, 700, 700, 1 << 30] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        let pairs: Vec<(u64, u64)> = s.cumulative().collect();
+        assert_eq!(pairs.len(), 4, "one pair per non-empty bucket");
+        let mut prev_le = None;
+        let mut prev_cum = 0;
+        for &(le, cum) in &pairs {
+            if let Some(p) = prev_le {
+                assert!(le > p, "le strictly increasing");
+            }
+            assert!(cum > prev_cum, "cumulative counts strictly increasing");
+            prev_le = Some(le);
+            prev_cum = cum;
+        }
+        assert_eq!(pairs.last().unwrap().1, s.total());
+        // Every recorded value is <= its bucket's upper bound: the
+        // cumulative count at the bucket holding `v` includes `v`.
+        assert_eq!(pairs[0], (0, 1), "value 0 lands in the exact bucket [0,0]");
+        assert!(pairs[1].0 >= 5 && pairs[1].1 == 3);
+        // An empty snapshot yields nothing.
+        assert_eq!(HistSnapshot::default().cumulative().count(), 0);
+    }
+
+    #[test]
+    fn value_sum_tracks_recorded_values_through_diff() {
+        let h = LatencyHist::new();
+        h.record(10);
+        h.record(20);
+        let a = h.snapshot();
+        h.record(5);
+        let b = h.snapshot();
+        assert_eq!(h.value_sum(), 35);
+        assert_eq!(a.value_sum(), 30);
+        assert_eq!(b.diff(&a).value_sum(), 5);
     }
 
     #[test]
